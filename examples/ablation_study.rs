@@ -1,0 +1,56 @@
+//! Interactive ablation study: runs SamKV with each Table-4 switch
+//! combination on one dataset and prints the accuracy/cost trade-off.
+//!
+//! ```sh
+//! cargo run --release --example ablation_study -- --profile s4 --samples 12
+//! ```
+use samkv::bench::{ms, Table};
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+use samkv::config::{SamKvConfig, UpdateStrategy};
+use samkv::eval::evaluate;
+use samkv::policies::SamKvPolicy;
+
+fn main() -> samkv::Result<()> {
+    let args = Args::parse_env();
+    let profile = args.get_str(
+        "profile",
+        if exp::load_model("s4").is_ok() { "s4" } else { "tiny" });
+    let n = args.get::<usize>("samples", 12);
+    let model = exp::load_model(&profile)?;
+    let ds = exp::load_dataset(&model,
+                               &args.get_str("dataset", "hotpot-sim"))?;
+    println!("SamKV ablations on {} / {} (n={n})\n", profile, ds.dataset);
+
+    let mut tbl = Table::new(&["selection", "pers-bias", "recompute",
+                               "update", "F1", "TTFT", "seq%", "rec%"]);
+    for (sel, pb, rec, update) in [
+        (false, false, false, UpdateStrategy::Fusion),
+        (false, false, true, UpdateStrategy::Fusion),
+        (true, false, false, UpdateStrategy::Fusion),
+        (true, true, false, UpdateStrategy::Fusion),
+        (true, false, true, UpdateStrategy::Fusion),
+        (true, true, true, UpdateStrategy::Overwrite),
+        (true, true, true, UpdateStrategy::Fusion),
+    ] {
+        let p = SamKvPolicy::new(SamKvConfig {
+            selection: sel,
+            pers_bias: pb,
+            recompute: rec,
+            update,
+            ..SamKvConfig::default()
+        });
+        let r = evaluate(&model, &p, &ds, n)?;
+        let b = |x: bool| if x { "yes" } else { "no" }.to_string();
+        tbl.row(vec![
+            b(sel), b(pb), b(rec),
+            format!("{update:?}"),
+            format!("{:.2}", r.f1),
+            ms(r.mean_ttft_ms),
+            format!("{:.1}", 100.0 * r.mean_seq_ratio),
+            format!("{:.1}", 100.0 * r.mean_recompute_ratio),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Appendix-A attention analytics walkthrough: per-block power-law fits
+//! (Fig. 7) and layer-stability scores (Fig. 8) on real prefill
+//! attention maps, plus the dynamic Top-P values they induce (Eq. 2/3).
+//!
+//! ```sh
+//! cargo run --release --example attention_analysis -- --profile s4
+//! ```
+use samkv::attention::{analyze_doc, layer_stability_scores,
+                       select_stable_layers};
+use samkv::bench::experiments as exp;
+use samkv::bench::Table;
+use samkv::cli::Args;
+use samkv::kvcache::CacheStore;
+use samkv::sparse::{block_scores_host, topp_select};
+
+fn main() -> samkv::Result<()> {
+    let args = Args::parse_env();
+    let profile = args.get_str(
+        "profile",
+        if exp::load_model("s4").is_ok() { "s4" } else { "tiny" });
+    let model = exp::load_model(&profile)?;
+    let cfg = model.cfg.clone();
+    let ds = exp::load_dataset(&model,
+                               &args.get_str("dataset", "hotpot-sim"))?;
+    let mut store = CacheStore::unbounded();
+
+    // one document in depth
+    let sample = &ds.samples[0];
+    let (entry, _) = store.get_or_prefill(&model, &sample.docs[0])?;
+    let ba = analyze_doc(&entry.attn, &cfg, 3.0);
+    let l = cfg.n_layers - 1;
+    println!("doc 0, layer {l}: per-block dual scores (A.1)\n");
+    let mut tbl = Table::new(&["block", "rep token", "alpha",
+                               "mean recv", "rank"]);
+    for b in 0..cfg.blocks_per_doc {
+        tbl.row(vec![
+            format!("{b}"),
+            format!("{}", ba.rep_token[l][b]),
+            format!("{:.3}", ba.alpha[l][b]),
+            format!("{:.4}", ba.mean_received[l][b]),
+            format!("{}", ba.importance_rank[l][b]),
+        ]);
+    }
+    tbl.print();
+    println!("max-importance middle block: {:?}; max-unimportance: {:?}",
+             ba.max_middle_block(&cfg, l), ba.min_middle_block(&cfg, l));
+
+    // Eq. 2/3 Top-P with a neutral query direction
+    let stable: Vec<usize> =
+        (cfg.stable_layer_start()..cfg.n_layers).collect();
+    let q = entry.q_local.clone();
+    let per_layer: Vec<Vec<f32>> = stable
+        .iter()
+        .map(|&sl| block_scores_host(&q, &entry.kv, &cfg, sl))
+        .collect();
+    let sel = topp_select(&cfg, &per_layer, &stable, &ba);
+    println!("\nEq.2 per-layer P: {:?}", sel.p_per_layer);
+    println!("Eq.3 consolidated P = {:.3} -> picked middle blocks {:?}",
+             sel.p, sel.picked);
+
+    // Fig. 8 stability across many documents
+    let mut analyses = Vec::new();
+    for s in ds.samples.iter().take(8) {
+        for d in &s.docs {
+            let (e, _) = store.get_or_prefill(&model, d)?;
+            analyses.push(analyze_doc(&e.attn, &cfg, 3.0));
+        }
+    }
+    let refs: Vec<_> = analyses.iter().collect();
+    let scores = layer_stability_scores(&refs, 1.5);
+    println!("\nlayer stability scores (Fig. 8): {:?}", scores);
+    println!("selected N* (k={}): {:?}", cfg.stable_layers,
+             select_stable_layers(&scores, cfg.stable_layers));
+    Ok(())
+}

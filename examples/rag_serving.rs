@@ -1,0 +1,77 @@
+//! End-to-end RAG serving driver (the DESIGN.md §3 system experiment):
+//! spawns the full coordinator stack (engine thread + router + TCP
+//! server), drives batched requests with recurring document sets over a
+//! real client connection, and reports latency/throughput — proving all
+//! three layers compose (rust coordinator -> PJRT artifacts -> Pallas
+//! kernel decode path).
+//!
+//! ```sh
+//! cargo run --release --example rag_serving -- --profile s4 --requests 24
+//! ```
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+use samkv::config::ServingConfig;
+use samkv::coordinator::Engine;
+use samkv::metrics::Metrics;
+use samkv::rng::Rng;
+use samkv::runtime::artifacts_dir;
+use samkv::server::{Client, Server};
+use samkv::workload::synthetic_sample;
+
+fn main() -> samkv::Result<()> {
+    let args = Args::parse_env();
+    let profile = args.get_str(
+        "profile",
+        if exp::load_model("s4").is_ok() { "s4" } else { "tiny" });
+    let n_requests = args.get::<usize>("requests", 24);
+    let n_unique = args.get::<usize>("unique", 6);
+    let policy = args.get_str("policy", "SamKV-fusion");
+
+    let metrics = Arc::new(Metrics::new());
+    let cfg = ServingConfig { profile: profile.clone(),
+                              ..ServingConfig::default() };
+    let engine = Engine::spawn(0, artifacts_dir(), cfg, policy.clone(),
+                               Arc::clone(&metrics))?;
+    let server = Server::new(vec![engine.handle()], Arc::clone(&metrics));
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = thread::spawn(move || {
+        server.run("127.0.0.1:0", move |p| {
+            let _ = port_tx.send(p);
+        })
+    });
+    let port = port_rx.recv().expect("server bound");
+    println!("serving profile `{profile}` on 127.0.0.1:{port} \
+              (policy {policy})");
+
+    let model = exp::load_model(&profile)?;
+    let mut rng = Rng::new(7);
+    let pool: Vec<_> = (0..n_unique)
+        .map(|_| synthetic_sample(&model.cfg, &mut rng))
+        .collect();
+
+    let mut client = Client::connect(&format!("127.0.0.1:{port}"))?;
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let s = &pool[i % n_unique];
+        let resp = client.request(&s.docs, &s.query, &policy)?;
+        if i < 3 || i + 1 == n_requests {
+            println!(
+                "req {i:>3}: ttft {:.1}ms seq {:.1}% warm {}",
+                resp.get("ttft_ms").unwrap().as_f64().unwrap(),
+                100.0 * resp.get("seq_ratio").unwrap().as_f64().unwrap(),
+                resp.get("cache_warm").unwrap().as_bool().unwrap(),
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", metrics.report());
+    println!("{} requests in {:.1}s -> {:.2} req/s", n_requests, wall,
+             n_requests as f64 / wall);
+
+    client.shutdown()?;
+    srv.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT build: train (cached), emit datasets, lower entry points to HLO text.
+
+HLO *text* is the interchange format (NOT ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from ``python/``:  ``python -m compile.aot --out ../artifacts``
+The Makefile invokes this once; nothing here runs on the request path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import taskspec as T
+from . import train as TR
+
+# training budget per profile (tiny is never trained — CI shapes only)
+TRAIN_STEPS = {"s4": 2000, "m6": 800}
+TRAIN_BATCH = {"s4": 32, "m6": 24}
+TRAIN_LR = {"s4": 2e-3, "m6": 1.5e-3}
+EVAL_SAMPLES = {"tiny": 16, "s4": 200, "m6": 200, "x16": 24}
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    # keep_unused=True: the rust runtime feeds every weight array
+    # positionally, so the lowered module must keep all parameters even
+    # when an entry point doesn't touch some of them.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_dict(s):
+    dt = {np.dtype("int32"): "i32", np.dtype("float32"): "f32"}[
+        np.dtype(s.dtype)]
+    return {"shape": list(s.shape), "dtype": dt}
+
+
+def _param_specs(cfg):
+    return [jax.ShapeDtypeStruct(shape, np.float32)
+            for _, shape in M.param_specs(cfg)]
+
+
+def build_profile(cfg: T.Profile, out_dir: str, force_train: bool,
+                  steps_override: int | None):
+    entry_meta = {}
+    pspecs = _param_specs(cfg)
+
+    # ---- weights ---------------------------------------------------------
+    wfile = f"{cfg.name}_weights.bin"
+    wpath = os.path.join(out_dir, wfile)
+    report = {}
+    if cfg.name in TRAIN_STEPS:
+        if force_train or not os.path.exists(wpath):
+            steps = steps_override or TRAIN_STEPS[cfg.name]
+            print(f"[aot] training {cfg.name} for {steps} steps", flush=True)
+            params = TR.train(cfg, steps=steps, batch=TRAIN_BATCH[cfg.name],
+                              lr=TRAIN_LR[cfg.name])
+            TR.save_weights(wpath, cfg, params)
+        else:
+            print(f"[aot] reusing cached weights {wpath}", flush=True)
+            params = TR.load_weights(wpath, cfg)
+        import jax.numpy as jnp
+        em, per = TR.evaluate(cfg, [jnp.asarray(p) for p in params],
+                              D.SampleGen(cfg, "hotpot-sim", seed=999), 24)
+        report["exact_match_oracle"] = em
+        report["per_type"] = {k: a for k, (a, _) in per.items()}
+        print(f"[aot] {cfg.name} oracle EM={em:.3f} {report['per_type']}",
+              flush=True)
+    else:
+        if force_train or not os.path.exists(wpath):
+            TR.save_weights(wpath, cfg, M.init_params(cfg, seed=7))
+
+    # ---- lower entry points ---------------------------------------------
+    for name, (fn, arg_specs, needs_w) in M.entrypoints(cfg).items():
+        t0 = time.time()
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        if needs_w:
+            out_specs = jax.eval_shape(fn, pspecs, *arg_specs)
+        else:
+            out_specs = jax.eval_shape(fn, *arg_specs)
+        if not os.path.exists(fpath) or force_train:
+            if needs_w:
+                text = to_hlo_text(lambda p, *a: fn(p, *a),
+                                   [pspecs] + arg_specs)
+            else:
+                text = to_hlo_text(fn, arg_specs)
+            with open(fpath, "w") as f:
+                f.write(text)
+            print(f"[aot] lowered {fname} ({len(text) / 1e6:.2f} MB, "
+                  f"{time.time() - t0:.1f}s)", flush=True)
+        entry_meta[name] = {
+            "file": fname,
+            "needs_weights": needs_w,
+            "args": [_spec_dict(s) for s in arg_specs],
+            "outputs": [_spec_dict(s) for s in jax.tree.leaves(out_specs)],
+        }
+
+    return {
+        "config": cfg.as_dict(),
+        "weights": wfile,
+        "n_weight_arrays": M.n_params_arrays(cfg),
+        "entrypoints": entry_meta,
+        "train_report": report,
+    }
+
+
+def build_datasets(cfg: T.Profile, out_dir: str, n: int):
+    """Eval datasets are keyed by the document geometry so model variants
+    with identical task shapes (s4 / m6) share files."""
+    shape_key = f"d{cfg.n_docs}x{cfg.doc_len}"
+    ds_dir = os.path.join(out_dir, "datasets")
+    os.makedirs(ds_dir, exist_ok=True)
+    out = {}
+    for ds in T.DATASETS:
+        fname = f"{shape_key}_{ds}.json"
+        fpath = os.path.join(ds_dir, fname)
+        if not os.path.exists(fpath):
+            cnt = D.write_eval_dataset(fpath, cfg, ds, n, seed=4242)
+            print(f"[aot] dataset {fname}: {cnt} samples", flush=True)
+        out[ds] = os.path.join("datasets", fname)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,s4,m6,x16")
+    ap.add_argument("--force-train", action="store_true")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override training steps (all trained profiles)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"version": 1, "profiles": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for pname in args.profiles.split(","):
+        pname = pname.strip()
+        cfg = T.PROFILES[pname]
+        meta = build_profile(cfg, args.out, args.force_train, args.steps)
+        meta["datasets"] = build_datasets(cfg, args.out,
+                                          EVAL_SAMPLES[pname])
+        manifest["profiles"][pname] = meta
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"[aot] profile {pname} done", flush=True)
+
+    print(f"[aot] manifest -> {manifest_path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Synthetic multi-document QA data generator (LongBench stand-in).
+
+Generates documents with embedded (key, value) facts and five query
+families (single / double / ordinal / 2-hop / consensus) per the spec in
+``taskspec.py``. Used for (a) training the tiny models, (b) emitting the
+evaluation datasets consumed by the rust harness, (c) python-side tests.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from . import taskspec as T
+
+
+class Sample:
+    __slots__ = ("docs", "query", "answer", "qtype")
+
+    def __init__(self, docs, query, answer, qtype):
+        self.docs = docs      # list[list[int]] each taskspec doc_len long
+        self.query = query    # list[int] length QUERY_LEN
+        self.answer = answer  # list[int] value tokens, no EOS
+        self.qtype = qtype    # str
+
+    def to_dict(self):
+        return {"docs": self.docs, "query": self.query,
+                "answer": self.answer, "qtype": self.qtype}
+
+
+def _place_facts(rng: np.random.Generator, content_len: int, facts):
+    """Place 2-token facts at non-overlapping positions in filler noise."""
+    doc = [T.filler_tok(int(rng.integers(T.N_FILLERS)))
+           for _ in range(content_len)]
+    # choose fact slots on an even grid so facts never straddle each other
+    n_slots = content_len // 2
+    slots = rng.choice(n_slots, size=len(facts), replace=False)
+    positions = []
+    for (k, v), s in zip(facts, slots):
+        p = int(s) * 2
+        doc[p] = k
+        doc[p + 1] = v
+        positions.append(p)
+    return doc, positions
+
+
+class SampleGen:
+    """Draws complete samples for one dataset profile."""
+
+    def __init__(self, profile: T.Profile, dataset: str, seed: int):
+        self.p = profile
+        self.cfg = dict(T.DATASETS[dataset])
+        self.dataset = dataset
+        self.rng = np.random.default_rng(seed)
+        # decoy facts per doc, bounded so the per-sample key permutation
+        # (N_KEYS unique keys) never exhausts across all documents
+        budget = (T.N_KEYS - 8) // profile.n_docs
+        self.facts_per_doc = min(max(4, (profile.doc_len - 1) // 12),
+                                 budget)
+
+    # -- fact table construction ------------------------------------------
+    def _draw_sample(self) -> Sample:
+        rng = self.rng
+        D = self.p.n_docs
+        c = self.cfg
+        r = rng.random()
+        if r < c["single"]:
+            qtype = "single"
+        elif r < c["single"] + c["double"]:
+            qtype = "double"
+        elif r < c["single"] + c["double"] + c["ordinal"]:
+            qtype = "ordinal"
+        else:
+            qtype = "twohop" if c["twohop"] > 0 else "single"
+
+        # keys are globally partitioned per sample to control uniqueness
+        keys = rng.permutation(T.N_KEYS)
+        vals = rng.permutation(T.N_VALS)
+        ki = iter(int(x) for x in keys)
+        vi = iter(int(x) for x in vals)
+
+        facts = [[] for _ in range(D)]  # per-doc list of (tok_k, tok_v)
+
+        query = None
+        answer = None
+
+        if qtype == "single":
+            k = next(ki)
+            v = next(vi)
+            consensus = rng.random() < c["consensus_rate"] and D >= 2
+            docs_with = (sorted(rng.choice(D, size=2, replace=False).tolist())
+                         if consensus else [int(rng.integers(D))])
+            for d in docs_with:
+                facts[d].append((T.key_tok(k), T.val_tok(v)))
+            query = [T.QUERY, T.NOORD, T.key_tok(k), T.PAD, T.ANS]
+            answer = [T.val_tok(v)]
+            if consensus:
+                qtype = "consensus"
+        elif qtype == "double":
+            k1, k2 = next(ki), next(ki)
+            v1, v2 = next(vi), next(vi)
+            facts[int(rng.integers(D))].append((T.key_tok(k1), T.val_tok(v1)))
+            facts[int(rng.integers(D))].append((T.key_tok(k2), T.val_tok(v2)))
+            query = [T.QUERY, T.NOORD, T.key_tok(k1), T.key_tok(k2), T.ANS]
+            answer = [T.val_tok(v1), T.val_tok(v2)]
+        elif qtype == "ordinal":
+            # same key in every doc, different value per doc; ordinal picks one
+            k = next(ki)
+            per_doc_vals = [next(vi) for _ in range(D)]
+            for d in range(D):
+                facts[d].append((T.key_tok(k), T.val_tok(per_doc_vals[d])))
+            target = int(rng.integers(D))
+            query = [T.QUERY, T.ord_tok(target + 1), T.key_tok(k), T.PAD, T.ANS]
+            answer = [T.val_tok(per_doc_vals[target])]
+        else:  # twohop: (k1 -> Km) in doc a, (Km -> v) in doc b != a
+            k1, km = next(ki), next(ki)
+            v = next(vi)
+            a, b = rng.choice(D, size=2, replace=False)
+            facts[int(a)].append((T.key_tok(k1), T.key_tok(km)))
+            facts[int(b)].append((T.key_tok(km), T.val_tok(v)))
+            query = [T.QUERY, T.NOORD, T.key_tok(k1), T.PAD, T.ANS]
+            answer = [T.val_tok(v)]
+
+        # pad every doc with unique-key decoy facts so fact density is even
+        for d in range(D):
+            while len(facts[d]) < self.facts_per_doc:
+                facts[d].append((T.key_tok(next(ki)), T.val_tok(next(vi))))
+
+        docs = []
+        for d in range(D):
+            content, _ = _place_facts(self.rng, self.p.doc_len - 1, facts[d])
+            docs.append([T.BOS] + content)
+        return Sample(docs, query, answer, qtype)
+
+    def sample(self) -> Sample:
+        return self._draw_sample()
+
+    def batch(self, n: int):
+        return [self._draw_sample() for _ in range(n)]
+
+
+# --- flat sequence assembly (training + full-recompute layout) -------------
+
+def assemble_full(sample: Sample, profile: T.Profile, with_answer: bool):
+    """[docs || query (|| answer EOS)] padded to profile.full_len.
+
+    Returns (tokens, valid, loss_mask) as int32/float32 numpy arrays.
+    loss_mask marks positions whose *target* (next token) is supervised:
+    the answer tokens and the closing EOS.
+    """
+    seq = []
+    for d in sample.docs:
+        seq.extend(d)
+    seq.extend(sample.query)
+    ans_start = len(seq)  # first answer token goes here
+    if with_answer:
+        seq.extend(sample.answer)
+        seq.append(T.EOS)
+    L = profile.full_len
+    assert len(seq) <= L, (len(seq), L)
+    tokens = np.zeros(L, dtype=np.int32)
+    tokens[: len(seq)] = seq
+    valid = np.zeros(L, dtype=np.float32)
+    valid[: len(seq)] = 1.0
+    loss_mask = np.zeros(L, dtype=np.float32)
+    if with_answer:
+        # predicting token at position p uses logits at p-1
+        for p in range(ans_start, ans_start + len(sample.answer) + 1):
+            loss_mask[p - 1] = 1.0
+    return tokens, valid, loss_mask, ans_start
+
+
+def training_batch(gen: SampleGen, profile: T.Profile, batch: int):
+    toks, valids, masks = [], [], []
+    for s in gen.batch(batch):
+        t, v, m, _ = assemble_full(s, profile, with_answer=True)
+        toks.append(t)
+        valids.append(v)
+        masks.append(m)
+    return (np.stack(toks), np.stack(valids), np.stack(masks))
+
+
+# --- eval dataset emission ---------------------------------------------------
+
+def write_eval_dataset(path: str, profile: T.Profile, dataset: str,
+                       n_samples: int, seed: int):
+    gen = SampleGen(profile, dataset, seed)
+    samples = [s.to_dict() for s in gen.batch(n_samples)]
+    payload = {
+        "profile": profile.name,
+        "dataset": dataset,
+        "seed": seed,
+        "samples": samples,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return len(samples)

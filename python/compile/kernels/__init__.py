@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (interpret=True; see DESIGN.md §4).
+
+``attention.masked_flash_attention`` — decode hot-path attention over the
+assembled sparse KV buffer.
+``block_score.block_score`` — block-mean-K scoring for the KV selection
+module.
+``ref`` — pure-jnp oracles used by the hypothesis test sweeps.
+"""
+from .attention import masked_flash_attention  # noqa: F401
+from .block_score import block_score  # noqa: F401

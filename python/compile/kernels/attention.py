@@ -1,0 +1,83 @@
+"""Masked flash attention over a padded sparse KV buffer (Pallas, L1).
+
+This is the serving hot-spot: every decode step attends from one query
+token to the assembled multi-context sparse KV cache. The kernel streams
+K/V through VMEM in ``tile``-sized chunks with an online-softmax
+(running max / running denominator) so the working set per grid step is
+
+    q:      [Dh]                     (resident)
+    k, v:   2 x [tile, Dh]           (streamed HBM -> VMEM)
+    valid:  [tile]                   (streamed)
+    carry:  m, l scalars + acc[Dh]   (registers)
+
+which is the TPU re-think of the paper's GPU gather+attend: the sparse
+buffer is already block-assembled by the rust coordinator, so the
+HBM->VMEM schedule is a dense sequential stream (no gather on the hot
+path). On real TPU hardware the natural tile is (128, Dh); on the CPU
+interpret path the tile only shapes the loop structure.
+
+Invalid (padding) slots carry ``valid == 0`` and are masked to -1e30
+*before* the online max, so they contribute exp(-inf) = 0 regardless of
+buffer contents.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 16
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, *, tile: int):
+    _, seq, head_dim = k_ref.shape
+    q = q_ref[0]
+    scale = 1.0 / np.sqrt(head_dim)
+
+    def body(i, carry):
+        m, l, acc = carry
+        ks = k_ref[0, pl.dslice(i * tile, tile), :]
+        vs = v_ref[0, pl.dslice(i * tile, tile), :]
+        va = valid_ref[pl.dslice(i * tile, tile)]
+        s = (ks @ q) * scale + (va - 1.0) * 1e30
+        m2 = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m2)
+        corr = jnp.exp(m - m2)
+        return m2, l * corr + jnp.sum(p), acc * corr + p @ vs
+
+    init = (jnp.float32(-1e30), jnp.float32(0.0),
+            jnp.zeros((head_dim,), jnp.float32))
+    _, l, acc = jax.lax.fori_loop(0, seq // tile, body, init)
+    o_ref[0, :] = acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def masked_flash_attention(q, k, v, valid, tile: int = DEFAULT_TILE):
+    """Single-token attention: q [H, Dh], k/v [H, S, Dh], valid [S] -> [H, Dh].
+
+    S is padded to a multiple of ``tile`` internally; padded slots are
+    masked out.
+    """
+    heads, head_dim = q.shape
+    seq = k.shape[1]
+    pad = (-seq) % tile
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    seq_p = seq + pad
+    kernel = functools.partial(_decode_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(heads,),
+        in_specs=[
+            pl.BlockSpec((1, head_dim), lambda h: (h, 0)),
+            pl.BlockSpec((1, seq_p, head_dim), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, seq_p, head_dim), lambda h: (h, 0, 0)),
+            pl.BlockSpec((seq_p,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, head_dim), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, head_dim), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(q, k, v, valid)

@@ -1,0 +1,53 @@
+"""Block scoring kernel (Pallas, L1): <Q-hat, mean-K per block>.
+
+The paper's KV Selection Module manages the cache at block granularity
+and represents "each block ... by the mean vector of its constituent
+token caches" (§3.2). This kernel fuses the per-block mean-K reduction
+with the personalized-query dot product so the coordinator can offload
+scoring ("the sparsification process is accelerated by vector databases
+and GPUs", §4.3).
+
+One grid step scores one block: load K tile [H, B, Dh] + valid [B],
+reduce to the valid-token mean [H, Dh], dot with q-hat [H, Dh], average
+over heads — an MXU-shaped [B, Dh] x [Dh] contraction per head on real
+hardware.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(q_ref, k_ref, valid_ref, o_ref):
+    heads, block, _ = k_ref.shape
+    va = valid_ref[...]
+    denom = jnp.maximum(jnp.sum(va), 1.0)
+    q = q_ref[...]
+    k = k_ref[...]
+    kbar = jnp.sum(k * va[None, :, None], axis=1) / denom  # [H, Dh]
+    o_ref[0] = jnp.sum(q * kbar) / heads
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def block_score(q, k, valid, block_size: int):
+    """q [H, Dh], k [H, S, Dh], valid [S] -> scores [S // block_size].
+
+    Blocks with no valid token score the mean over zeros = 0 direction;
+    callers mask those out via the block-validity they already track.
+    """
+    heads, seq, head_dim = k.shape
+    assert seq % block_size == 0, (seq, block_size)
+    n_blocks = seq // block_size
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((heads, head_dim), lambda b: (0, 0)),
+            pl.BlockSpec((heads, block_size, head_dim), lambda b: (0, b, 0)),
+            pl.BlockSpec((block_size,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        interpret=True,
+    )(q, k, valid)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the shape/dtype sweeps in ``python/tests/test_kernels.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_attention_ref(q, k, v, valid):
+    """q [H, Dh], k/v [H, S, Dh], valid [S] -> [H, Dh]."""
+    head_dim = q.shape[-1]
+    s = jnp.einsum("hd,hsd->hs", q, k) / np.sqrt(head_dim)
+    s = jnp.where(valid[None, :] > 0, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", p, v)
+
+
+def block_score_ref(q, k, valid, block_size: int):
+    """q [H, Dh], k [H, S, Dh], valid [S] -> [S // block_size]."""
+    heads, seq, head_dim = k.shape
+    n_blocks = seq // block_size
+    kb = k.reshape(heads, n_blocks, block_size, head_dim)
+    vb = valid.reshape(n_blocks, block_size)
+    denom = jnp.maximum(vb.sum(axis=-1), 1.0)  # [NB]
+    kbar = (kb * vb[None, :, :, None]).sum(axis=2) / denom[None, :, None]
+    return jnp.einsum("hd,hbd->b", q, kbar) / heads

@@ -1,0 +1,368 @@
+"""Layer-2 JAX model: decoder-only transformer + SamKV serving entry points.
+
+The model (RMSNorm / RoPE / MHA / GELU MLP, logits tied to the embedding)
+is expressed over a *flat list* of parameter arrays so the rust runtime
+can feed weights positionally without a pytree codec:
+
+    params[0]                 embed      [V, D]
+    params[1 + 8*l + 0]       ln1_g      [D]
+    params[1 + 8*l + 1]       wq         [D, H*Dh]
+    params[1 + 8*l + 2]       wk         [D, H*Dh]
+    params[1 + 8*l + 3]       wv         [D, H*Dh]
+    params[1 + 8*l + 4]       wo         [H*Dh, D]
+    params[1 + 8*l + 5]       ln2_g      [D]
+    params[1 + 8*l + 6]       w1         [D, F]
+    params[1 + 8*l + 7]       w2         [F, D]
+    params[1 + 8*L]           lnf_g      [D]
+
+Six AOT entry points (static shapes fixed by a ``taskspec.Profile``):
+``prefill_doc``, ``prefill_full``, ``query_embed``, ``recompute`` (sparse
+buffer), ``recompute_full`` (CacheBlend/EPIC path), ``decode_step``
+(Pallas hot path), plus ``score_blocks`` wrapping the L1 block-score
+kernel. KV caches travel as ``[L, 2, H, S, Dh]`` tensors (axis 1 = K/V).
+
+All attention masking is *position-based*: a query at global position p
+attends keys with position <= p and valid == 1. Keys are stored
+post-RoPE, so KV computed at colliding local positions (independent
+per-document prefill) reproduces exactly the cross-context deficiency
+the paper addresses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import masked_flash_attention
+from .kernels.block_score import block_score
+from . import taskspec as T
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def n_params_arrays(cfg: T.Profile) -> int:
+    return 2 + 8 * cfg.n_layers
+
+
+def param_specs(cfg: T.Profile):
+    """Ordered (name, shape) list — mirrored by rust/src/model/weights.rs."""
+    d, hd, f = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.d_ff
+    specs = [("embed", (cfg.vocab, d))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1_g", (d,)),
+            (f"l{l}.wq", (d, hd)),
+            (f"l{l}.wk", (d, hd)),
+            (f"l{l}.wv", (d, hd)),
+            (f"l{l}.wo", (hd, d)),
+            (f"l{l}.ln2_g", (d,)),
+            (f"l{l}.w1", (d, f)),
+            (f"l{l}.w2", (f, d)),
+        ]
+    specs.append(("lnf_g", (d,)))
+    return specs
+
+
+def init_params(cfg: T.Profile, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        if name.endswith("_g"):
+            out.append(np.ones(shape, np.float32))
+        elif name == "embed":
+            out.append((rng.standard_normal(shape) * 0.02).astype(np.float32))
+        else:
+            fan_in = shape[0]
+            out.append((rng.standard_normal(shape) / np.sqrt(fan_in))
+                       .astype(np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# primitive blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def rope(x, positions, theta):
+    """x [..., S, H, Dh] rotated by positions [S]."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(ang)[:, None, :]  # [S, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _qkv(cfg, params, l, xn, positions):
+    """Project + rotate. xn [S, D] -> q, k, v each [H, S, Dh]."""
+    base = 1 + 8 * l
+    s = xn.shape[0]
+    shp = (s, cfg.n_heads, cfg.head_dim)
+    q = rope((xn @ params[base + 1]).reshape(shp), positions, cfg.rope_theta)
+    k = rope((xn @ params[base + 2]).reshape(shp), positions, cfg.rope_theta)
+    v = (xn @ params[base + 3]).reshape(shp)
+    return (q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2))
+
+
+def _mlp(cfg, params, l, h):
+    base = 1 + 8 * l
+    xn = rmsnorm(h, params[base + 5])
+    return h + jax.nn.gelu(xn @ params[base + 6]) @ params[base + 7]
+
+
+def _attn_full(cfg, q, k, v, mask):
+    """q,k,v [H, S, Dh]; mask [Sq, Sk] (1 = attend) -> out [Sq, H*Dh], probs."""
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale + (mask[None] - 1.0) * 1e30
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, v)
+    return o.transpose(1, 0, 2).reshape(q.shape[1], -1), p
+
+
+def _wo(params, l, o):
+    return o @ params[1 + 8 * l + 4]
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def prefill_doc(cfg: T.Profile, params, tokens, pos_offset):
+    """Independent per-document prefill.
+
+    tokens [Ld] i32, pos_offset scalar i32 ->
+      kv      [L, 2, H, Ld, Dh]
+      attn    [L, H, Ld, Ld]   (softmax probs; Appendix-A analytics input)
+      q_local [L, H, Dh]       (mean post-RoPE Q over the local window; the
+                                per-document "local Q cache" of Eq. 1)
+    """
+    ld = cfg.doc_len
+    positions = pos_offset + jnp.arange(ld, dtype=jnp.int32)
+    causal = jnp.tril(jnp.ones((ld, ld), jnp.float32))
+    h = params[0][tokens]
+    kvs, attns, qloc = [], [], []
+    local = cfg.local_blocks * cfg.block_size
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, positions)
+        o, p = _attn_full(cfg, q, k, v, causal)
+        h = h + _wo(params, l, o)
+        h = _mlp(cfg, params, l, h)
+        kvs.append(jnp.stack([k, v]))
+        attns.append(p)
+        qloc.append(jnp.mean(q[:, ld - local:, :], axis=1))
+    return (jnp.stack(kvs), jnp.stack(attns), jnp.stack(qloc))
+
+
+def prefill_full(cfg: T.Profile, params, tokens, valid):
+    """Joint causal prefill over the whole padded sequence (Recompute).
+
+    tokens [Lt] i32, valid [Lt] f32 -> kv [L, 2, H, Lt, Dh]
+    """
+    lt = cfg.full_len
+    positions = jnp.arange(lt, dtype=jnp.int32)
+    mask = jnp.tril(jnp.ones((lt, lt), jnp.float32)) * valid[None, :]
+    h = params[0][tokens]
+    kvs = []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, positions)
+        o, _ = _attn_full(cfg, q, k, v, mask)
+        h = h + _wo(params, l, o)
+        h = _mlp(cfg, params, l, h)
+        kvs.append(jnp.stack([k, v]))
+    return (jnp.stack(kvs),)
+
+
+def forward_logits(cfg: T.Profile, params, tokens, valid):
+    """Training forward: logits [Lt, V] over the padded joint sequence."""
+    lt = tokens.shape[0]
+    positions = jnp.arange(lt, dtype=jnp.int32)
+    mask = jnp.tril(jnp.ones((lt, lt), jnp.float32)) * valid[None, :]
+    h = params[0][tokens]
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, positions)
+        o, _ = _attn_full(cfg, q, k, v, mask)
+        h = h + _wo(params, l, o)
+        h = _mlp(cfg, params, l, h)
+    return rmsnorm(h, params[-1]) @ params[0].T
+
+
+def query_embed(cfg: T.Profile, params, q_tokens, comp_kv, comp_valid, q_pos):
+    """Incremental prefill of the user query over the compressed cache.
+
+    The compressed cache is the concatenated init+local KV of all docs
+    (§3.1 "composite Cache unit"). Returns the generic query vector
+    Q_que (per-layer mean-pooled post-RoPE Q) plus the query's own KV.
+
+    q_tokens [Lq] i32, comp_kv [L, 2, H, Lc, Dh], comp_valid [Lc] f32,
+    q_pos [Lq] i32 ->
+      q_que [L, H, Dh], q_kv [L, 2, H, Lq, Dh]
+    """
+    lq = T.QUERY_LEN
+    h = params[0][q_tokens]
+    causal = jnp.tril(jnp.ones((lq, lq), jnp.float32))
+    q_ques, q_kvs = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, q_pos)
+        k_cat = jnp.concatenate([comp_kv[l, 0], k], axis=1)
+        v_cat = jnp.concatenate([comp_kv[l, 1], v], axis=1)
+        mask = jnp.concatenate(
+            [jnp.broadcast_to(comp_valid[None, :], (lq, comp_valid.shape[0])),
+             causal], axis=1)
+        o, _ = _attn_full(cfg, q, k_cat, v_cat, mask)
+        h = h + _wo(params, l, o)
+        h = _mlp(cfg, params, l, h)
+        q_ques.append(jnp.mean(q, axis=1))
+        q_kvs.append(jnp.stack([k, v]))
+    return (jnp.stack(q_ques), jnp.stack(q_kvs))
+
+
+def recompute(cfg: T.Profile, params, tokens, positions, kv_in, rec_mask,
+              valid, length=None):
+    """Fig.-5 layer-wise partial recomputation over a (sparse) buffer.
+
+    tokens [S] i32      token ids occupying the buffer slots
+    positions [S] i32   *global* (training-layout) positions, ascending
+    kv_in [L,2,H,S,Dh]  reused per-document KV (local-position RoPE)
+    rec_mask [L,S] f32  1 = recompute this slot's KV at this layer
+    valid [S] f32       1 = slot occupied
+
+    Per the paper's two rules: outputs are computed from layer 1 upward
+    for every slot (rule 1 — a superset of "all slots needed later"),
+    and at layer n the merged cache ``where(rec_mask, fresh, cached)``
+    is used both for attention and as the layer's output KV (rule 2).
+    Returns kv_out [L,2,H,S,Dh].
+    """
+    s = tokens.shape[0]
+    allow = (positions[None, :] <= positions[:, None]).astype(jnp.float32)
+    mask = allow * valid[None, :]
+    h = params[0][tokens]
+    kv_out = []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, positions)
+        m = rec_mask[l][None, :, None]
+        k_m = k * m + kv_in[l, 0] * (1.0 - m)
+        v_m = v * m + kv_in[l, 1] * (1.0 - m)
+        o, _ = _attn_full(cfg, q, k_m, v_m, mask)
+        h = h + _wo(params, l, o)
+        h = _mlp(cfg, params, l, h)
+        kv_out.append(jnp.stack([k_m, v_m]))
+    return (jnp.stack(kv_out),)
+
+
+def decode_step(cfg: T.Profile, params, token, pos, slot, kv, kv_valid):
+    """One autoregressive step over the assembled cache (Pallas hot path).
+
+    token/pos/slot scalars i32, kv [L,2,H,S,Dh], kv_valid [S] f32 ->
+      logits [V], k_new [L,H,Dh], v_new [L,H,Dh]
+
+    The token's own K/V is placed into ``slot`` before attending (the
+    rust coordinator mirrors the write into its host buffer afterwards).
+    """
+    s = kv.shape[3]
+    h = params[0][token][None, :]  # [1, D]
+    pos_v = pos[None] if pos.ndim == 0 else pos
+    valid2 = jnp.maximum(kv_valid,
+                         (jnp.arange(s) == slot).astype(jnp.float32))
+    k_news, v_news = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[1 + 8 * l])
+        q, k, v = _qkv(cfg, params, l, xn, pos_v)  # [H, 1, Dh]
+        k_buf = jax.lax.dynamic_update_slice(kv[l, 0], k, (0, slot, 0))
+        v_buf = jax.lax.dynamic_update_slice(kv[l, 1], v, (0, slot, 0))
+        o = masked_flash_attention(q[:, 0, :], k_buf, v_buf, valid2)
+        h = h + _wo(params, l, o.reshape(1, -1))
+        h = _mlp(cfg, params, l, h)
+        k_news.append(k[:, 0, :])
+        v_news.append(v[:, 0, :])
+    logits = (rmsnorm(h, params[-1]) @ params[0].T)[0]
+    return (logits, jnp.stack(k_news), jnp.stack(v_news))
+
+
+def score_blocks(cfg: T.Profile, q_hat, k_cache, valid):  # weight-free
+    """Offloaded selection scoring (L1 block_score kernel).
+
+    q_hat [L, H, Dh] (personalized query), k_cache [L, H, S, Dh],
+    valid [S] -> scores [L, S/block]. The coordinator consumes the
+    per-layer scores for Eq. 2/3.
+    """
+    outs = [block_score(q_hat[l], k_cache[l], valid, cfg.block_size)
+            for l in range(cfg.n_layers)]
+    return (jnp.stack(outs),)
+
+
+# --------------------------------------------------------------------------
+# entry-point registry for AOT lowering
+# --------------------------------------------------------------------------
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entrypoints(cfg: T.Profile):
+    """name -> (fn(params, *args), example_arg_specs, needs_weights).
+
+    ``score_blocks`` is weight-free (it only touches cached K and the
+    personalized query), so the coordinator can invoke it without
+    shipping the model weights.
+    """
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    ld, lt, lq, lc = cfg.doc_len, cfg.full_len, T.QUERY_LEN, cfg.comp_len
+    ssp = cfg.sparse_len
+    return {
+        "prefill_doc": (
+            functools.partial(prefill_doc, cfg),
+            [_i32(ld), _i32()], True,
+        ),
+        "prefill_full": (
+            functools.partial(prefill_full, cfg),
+            [_i32(lt), _f32(lt)], True,
+        ),
+        "query_embed": (
+            functools.partial(query_embed, cfg),
+            [_i32(lq), _f32(L, 2, H, lc, Dh), _f32(lc), _i32(lq)], True,
+        ),
+        "recompute": (
+            functools.partial(recompute, cfg),
+            [_i32(ssp), _i32(ssp), _f32(L, 2, H, ssp, Dh), _f32(L, ssp),
+             _f32(ssp)], True,
+        ),
+        "recompute_full": (
+            functools.partial(recompute, cfg),
+            [_i32(lt), _i32(lt), _f32(L, 2, H, lt, Dh), _f32(L, lt),
+             _f32(lt)], True,
+        ),
+        "decode_sparse": (
+            functools.partial(decode_step, cfg),
+            [_i32(), _i32(), _i32(), _f32(L, 2, H, ssp, Dh), _f32(ssp)],
+            True,
+        ),
+        "decode_full": (
+            functools.partial(decode_step, cfg),
+            [_i32(), _i32(), _i32(), _f32(L, 2, H, lt, Dh), _f32(lt)],
+            True,
+        ),
+        "score_blocks": (
+            functools.partial(score_blocks, cfg),
+            [_f32(L, H, Dh), _f32(L, H, ld, Dh), _f32(ld)], False,
+        ),
+    }

@@ -1,0 +1,224 @@
+"""Canonical task / vocabulary / layout specification.
+
+This file is the single source of truth for the synthetic multi-document
+QA task that substitutes for LongBench (see DESIGN.md §2). The constants
+here are mirrored by ``rust/src/tokenizer.rs`` — change both together.
+
+Vocabulary layout (size 256):
+
+    0            PAD
+    1            BOS     (every document starts with BOS)
+    2            QUERY   (start of the user query)
+    3            ANS     (answer delimiter; decoding starts after it)
+    4            EOS     (end of answer)
+    5            NOORD   (query has no ordinal constraint)
+    6..13        ORD1..ORD8  (ordinal constraint: "the value in doc #i")
+    14..15       reserved
+    16..79       K0..K63   key tokens
+    80..143      V0..V63   value tokens
+    144..255     F0..F111  filler tokens
+
+Task. Each sample has D documents of ``doc_len`` tokens. A document is
+``[BOS, content...]`` where the content embeds (key, value) fact pairs in
+filler noise. The query is a fixed 5-token frame
+
+    [QUERY, ord, k1, k2_or_PAD, ANS]
+
+and the gold answer is 1..2 value tokens followed by EOS:
+
+  * single lookup      — ``ord = NOORD``, k2 = PAD, answer = value of k1
+  * double lookup      — ``ord = NOORD``, answer = value(k1), value(k2)
+  * ordinal lookup     — ``ord = ORDi``; k1 appears in *several* documents
+    with different values and the answer is the one in document i. This is
+    the position-critical case: with independently-prefilled (RoPE-local)
+    KV caches the ordinal is unrecoverable, which reproduces the paper's
+    "Reuse" collapse.
+  * 2-hop lookup       — doc A holds (k1 -> Km) where Km is a *key* token,
+    doc B holds (Km -> v); answer = v.
+  * consensus lookup   — the (k1 -> v) fact appears verbatim in >=2
+    documents ("inter-document consensus", §3.1 of the paper).
+"""
+
+# --- special tokens ---------------------------------------------------------
+PAD = 0
+BOS = 1
+QUERY = 2
+ANS = 3
+EOS = 4
+NOORD = 5
+ORD_BASE = 6  # ORD1 = 6 ... ORD8 = 13
+MAX_ORD = 8
+
+KEY_BASE = 16
+N_KEYS = 64
+VAL_BASE = 80
+N_VALS = 64
+FILLER_BASE = 144
+N_FILLERS = 112
+VOCAB = 256
+
+QUERY_LEN = 5  # [QUERY, ord, k1, k2, ANS]
+ANSWER_MAX = 4  # up to 2 values + EOS (+ pad slack)
+
+
+def key_tok(i: int) -> int:
+    assert 0 <= i < N_KEYS
+    return KEY_BASE + i
+
+
+def val_tok(i: int) -> int:
+    assert 0 <= i < N_VALS
+    return VAL_BASE + i
+
+
+def filler_tok(i: int) -> int:
+    assert 0 <= i < N_FILLERS
+    return FILLER_BASE + i
+
+
+def ord_tok(i: int) -> int:
+    """1-based document ordinal token."""
+    assert 1 <= i <= MAX_ORD
+    return ORD_BASE + i - 1
+
+
+def is_value(tok: int) -> bool:
+    return VAL_BASE <= tok < VAL_BASE + N_VALS
+
+
+# --- model / serving profiles ----------------------------------------------
+# A profile pins every static shape the AOT artifacts need. ``tiny`` exists
+# for fast CI (untrained weights, shape-level tests); ``s4`` is the main
+# trained model; ``m6`` is the second, larger model for Table 3/4's
+# two-model comparison.
+
+class Profile:
+    def __init__(self, name, n_layers, d_model, n_heads, head_dim, d_ff,
+                 n_docs, doc_len, block_size, init_blocks, local_blocks,
+                 sel_cap_blocks, stable_layers, rope_theta=10000.0):
+        self.name = name
+        self.n_layers = n_layers
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.head_dim = head_dim
+        self.d_ff = d_ff
+        self.vocab = VOCAB
+        self.n_docs = n_docs
+        self.doc_len = doc_len            # includes the leading BOS
+        self.block_size = block_size
+        self.init_blocks = init_blocks    # blocks kept at full resolution (head)
+        self.local_blocks = local_blocks  # blocks kept at full resolution (tail)
+        self.sel_cap_blocks = sel_cap_blocks  # max selected middle blocks, total
+        self.stable_layers = stable_layers    # N*: trailing layers used in Eq. 3
+        self.rope_theta = rope_theta
+
+    # ---- derived shapes -----------------------------------------------
+    @property
+    def blocks_per_doc(self):
+        assert self.doc_len % self.block_size == 0
+        return self.doc_len // self.block_size
+
+    @property
+    def ctx_len(self):
+        return self.n_docs * self.doc_len
+
+    @property
+    def full_len(self):
+        """prefill_full / decode_full static length (docs + query + answers)."""
+        return self.ctx_len + QUERY_LEN + ANSWER_MAX
+
+    @property
+    def fixed_blocks_per_doc(self):
+        return self.init_blocks + self.local_blocks
+
+    @property
+    def sparse_kv_len(self):
+        """Static sparse-buffer KV capacity (init/local + selected blocks)."""
+        fixed = self.n_docs * self.fixed_blocks_per_doc * self.block_size
+        return fixed + self.sel_cap_blocks * self.block_size
+
+    @property
+    def sparse_len(self):
+        """decode_sparse / recompute buffer length (kv + query + answers)."""
+        return self.sparse_kv_len + QUERY_LEN + ANSWER_MAX
+
+    @property
+    def comp_len(self):
+        """query_embed compressed-cache length: init+local blocks of every doc."""
+        return self.n_docs * self.fixed_blocks_per_doc * self.block_size
+
+    @property
+    def total_blocks(self):
+        return self.n_docs * self.blocks_per_doc
+
+    def as_dict(self):
+        return {
+            "name": self.name,
+            "n_layers": self.n_layers,
+            "d_model": self.d_model,
+            "n_heads": self.n_heads,
+            "head_dim": self.head_dim,
+            "d_ff": self.d_ff,
+            "vocab": self.vocab,
+            "n_docs": self.n_docs,
+            "doc_len": self.doc_len,
+            "block_size": self.block_size,
+            "init_blocks": self.init_blocks,
+            "local_blocks": self.local_blocks,
+            "sel_cap_blocks": self.sel_cap_blocks,
+            "stable_layers": self.stable_layers,
+            "rope_theta": self.rope_theta,
+            "query_len": QUERY_LEN,
+            "answer_max": ANSWER_MAX,
+            "ctx_len": self.ctx_len,
+            "full_len": self.full_len,
+            "sparse_kv_len": self.sparse_kv_len,
+            "sparse_len": self.sparse_len,
+            "comp_len": self.comp_len,
+            "blocks_per_doc": self.blocks_per_doc,
+        }
+
+
+PROFILES = {
+    # CI profile: 2 layers, untrained, small shapes. Integration tests only.
+    "tiny": Profile("tiny", n_layers=2, d_model=48, n_heads=2, head_dim=24,
+                    d_ff=96, n_docs=2, doc_len=32, block_size=8,
+                    init_blocks=1, local_blocks=1, sel_cap_blocks=2,
+                    stable_layers=1),
+    # Main trained model ("Qwen2.5-3B stand-in"): 4 layers, d=96.
+    # Geometry: 4 docs x 64 tokens, blocks of 4 (16 blocks/doc) keeps the
+    # paper's block ratios (1 init + 1 local = 12.5% fixed) at a context
+    # length a CPU-trained model can master.
+    "s4": Profile("s4", n_layers=4, d_model=96, n_heads=4, head_dim=24,
+                  d_ff=256, n_docs=4, doc_len=32, block_size=4,
+                  init_blocks=1, local_blocks=1, sel_cap_blocks=4,
+                  stable_layers=2),
+    # Second trained model ("Llama-3.1-8B stand-in"): 6 layers, d=128.
+    "m6": Profile("m6", n_layers=6, d_model=128, n_heads=4, head_dim=32,
+                  d_ff=320, n_docs=4, doc_len=32, block_size=4,
+                  init_blocks=1, local_blocks=1, sel_cap_blocks=4,
+                  stable_layers=2),
+    # Ratio profile: longer documents at the paper's block:doc ratio for
+    # the *structural* Table-1 sequence/recompute ratio measurement
+    # (quality-free; weights untrained). 16 blocks/doc -> 12.5% fixed
+    # floor + dynamic selection lands near the paper's ~15%.
+    "x16": Profile("x16", n_layers=2, d_model=48, n_heads=2, head_dim=24,
+                   d_ff=96, n_docs=4, doc_len=256, block_size=16,
+                   init_blocks=1, local_blocks=1, sel_cap_blocks=8,
+                   stable_layers=1),
+}
+
+# Dataset profiles substituting LongBench (see module docstring + DESIGN.md).
+# Fractions: (single, double, ordinal, twohop); consensus_rate applies to
+# single lookups; distractor_keys adds same-key-different-value conflicts
+# (only for ordinal queries, where the ordinal disambiguates).
+DATASETS = {
+    "wiki2-sim": dict(single=0.2, double=0.1, ordinal=0.4, twohop=0.3,
+                      consensus_rate=0.3, filler_entropy=1.0),
+    "musique-sim": dict(single=0.1, double=0.1, ordinal=0.4, twohop=0.4,
+                        consensus_rate=0.1, filler_entropy=1.0),
+    "hotpot-sim": dict(single=0.3, double=0.2, ordinal=0.35, twohop=0.15,
+                       consensus_rate=0.4, filler_entropy=1.0),
+    "dureader-sim": dict(single=0.45, double=0.25, ordinal=0.3, twohop=0.0,
+                         consensus_rate=0.3, filler_entropy=1.0),
+}

@@ -1,0 +1,193 @@
+"""Build-time training of the stand-in models (see DESIGN.md §2).
+
+Pure-JAX Adam (no optax in the image). Trains a ``taskspec.Profile``
+model on the synthetic multi-document QA task with the *joint causal*
+layout — exactly the layout the full-recompute baseline serves — and
+reports exact-match accuracy per query family. Minutes on one CPU core;
+``aot.py`` caches the resulting weights so this runs once.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import taskspec as T
+
+WEIGHTS_MAGIC = b"SAMKVW01"
+
+
+# --------------------------------------------------------------------------
+# weights (de)serialization — mirrored by rust/src/model/weights.rs
+# --------------------------------------------------------------------------
+
+def save_weights(path: str, cfg: T.Profile, params):
+    header = {
+        "profile": cfg.name,
+        "arrays": [{"name": n, "shape": list(s)}
+                   for (n, s) in M.param_specs(cfg)],
+    }
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+
+def load_weights(path: str, cfg: T.Profile):
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == WEIGHTS_MAGIC, magic
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        assert header["profile"] == cfg.name, (header["profile"], cfg.name)
+        params = []
+        for spec in header["arrays"]:
+            n = int(np.prod(spec["shape"]))
+            buf = f.read(4 * n)
+            params.append(np.frombuffer(buf, "<f4").reshape(spec["shape"])
+                          .copy())
+    return params
+
+
+# --------------------------------------------------------------------------
+# loss / optimizer
+# --------------------------------------------------------------------------
+
+AUX_LM_WEIGHT = 0.25
+
+
+def _loss(cfg, params, tokens, valid, loss_mask):
+    """Answer-token loss plus a dense auxiliary LM loss.
+
+    The answer loss alone (~2 supervised tokens/sample) is too sparse for
+    the induction circuits the lookup task needs; the dense next-token
+    loss over the context (where repeated facts across documents *are*
+    predictable) provides the copying-head pressure.
+    """
+    logits = jax.vmap(lambda t, v: M.forward_logits(cfg, params, t, v))(
+        tokens, valid)
+    targets = jnp.roll(tokens, -1, axis=1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ans = jnp.sum(nll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+    # dense mask: positions whose *target* is a real (valid) token
+    dense = valid * jnp.roll(valid, -1, axis=1)
+    dense = dense.at[:, -1].set(0.0)
+    lm = jnp.sum(nll * dense) / jnp.maximum(jnp.sum(dense), 1.0)
+    return ans + AUX_LM_WEIGHT * lm
+
+
+def make_train_step(cfg: T.Profile, lr: float, total_steps: int = 0,
+                    warmup: int = 100):
+    """Adam with linear warmup and cosine decay to 20% of peak."""
+    @jax.jit
+    def step(params, m, v, t, tokens, valid, loss_mask):
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss(cfg, p, tokens, valid, loss_mask))(params)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads)]
+        v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v, grads)]
+        tt = t + 1
+        sched = jnp.minimum(1.0, tt / max(warmup, 1))
+        if total_steps:
+            frac = jnp.clip((tt - warmup) / max(total_steps - warmup, 1),
+                            0.0, 1.0)
+            sched = sched * (0.2 + 0.8 * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        lr_t = lr * sched * jnp.sqrt(1 - b2 ** tt) / (1 - b1 ** tt)
+        params = [p - lr_t * mi / (jnp.sqrt(vi) + eps)
+                  for p, mi, vi in zip(params, m, v)]
+        return params, m, v, tt, loss
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# greedy eval (full-recompute oracle path)
+# --------------------------------------------------------------------------
+
+def greedy_answer(cfg: T.Profile, params, sample: D.Sample, fwd=None):
+    """Teacher-free greedy decode of up to ANSWER_MAX tokens."""
+    tokens, valid, _, ans_start = D.assemble_full(sample, cfg,
+                                                  with_answer=False)
+    tokens = tokens.copy()
+    valid = valid.copy()
+    fwd = fwd or (lambda t, v: M.forward_logits(cfg, params, t, v))
+    out = []
+    cur = ans_start
+    for _ in range(T.ANSWER_MAX):
+        logits = fwd(jnp.asarray(tokens), jnp.asarray(valid))
+        nxt = int(jnp.argmax(logits[cur - 1]))
+        if nxt == T.EOS:
+            break
+        out.append(nxt)
+        tokens[cur] = nxt
+        valid[cur] = 1.0
+        cur += 1
+    return out
+
+
+def evaluate(cfg: T.Profile, params, gen: D.SampleGen, n: int, fwd=None):
+    """Exact-match rate overall and per query family."""
+    hits, per = 0, {}
+    fwd = fwd or jax.jit(
+        lambda t, v: M.forward_logits(cfg, params, t, v))
+    for s in gen.batch(n):
+        got = greedy_answer(cfg, params, s, fwd)
+        ok = got == s.answer
+        hits += ok
+        tot, h = per.get(s.qtype, (0, 0))
+        per[s.qtype] = (tot + 1, h + ok)
+    return hits / n, {k: (h / t if t else 0.0, t) for k, (t, h) in per.items()}
+
+
+# --------------------------------------------------------------------------
+# training driver
+# --------------------------------------------------------------------------
+
+# curriculum phase 1: mostly single lookups to bootstrap the induction
+# circuit before the harder families join
+CURRICULUM = dict(single=0.7, double=0.0, ordinal=0.3, twohop=0.0,
+                  consensus_rate=0.2, filler_entropy=1.0)
+CURRICULUM_FRAC = 0.3
+
+
+def train(cfg: T.Profile, steps: int, batch: int = 8, lr: float = 1e-3,
+          seed: int = 0, dataset: str = "hotpot-sim", log_every: int = 25,
+          eval_every: int = 200, eval_n: int = 32):
+    params = [jnp.asarray(p) for p in M.init_params(cfg, seed)]
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.int32(0)
+    gen = D.SampleGen(cfg, dataset, seed=seed + 1)
+    easy_gen = D.SampleGen(cfg, dataset, seed=seed + 3)
+    easy_gen.cfg = dict(CURRICULUM)
+    eval_gen = D.SampleGen(cfg, dataset, seed=seed + 2)
+    step = make_train_step(cfg, lr, total_steps=steps)
+    t0 = time.time()
+    for i in range(1, steps + 1):
+        src = easy_gen if i < CURRICULUM_FRAC * steps else gen
+        tokens, valid, mask = D.training_batch(src, cfg, batch)
+        params, m, v, t, loss = step(params, m, v, t,
+                                     jnp.asarray(tokens), jnp.asarray(valid),
+                                     jnp.asarray(mask))
+        if i % log_every == 0 or i == 1:
+            print(f"[train:{cfg.name}] step {i}/{steps} "
+                  f"loss {float(loss):.4f} ({time.time() - t0:.0f}s)",
+                  flush=True)
+        if eval_every and (i % eval_every == 0 or i == steps):
+            em, per = evaluate(cfg, params, eval_gen, eval_n)
+            per_s = " ".join(f"{k}={a:.2f}({n})" for k, (a, n) in
+                             sorted(per.items()))
+            print(f"[eval:{cfg.name}] step {i} EM {em:.3f} | {per_s}",
+                  flush=True)
+    return [np.asarray(p) for p in params]

@@ -1,0 +1,124 @@
+"""Task generator invariants (the LongBench stand-in must be well-formed)."""
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import taskspec as T
+
+P = T.PROFILES["tiny"]
+
+
+def _gen(ds="hotpot-sim", seed=0):
+    return D.SampleGen(P, ds, seed)
+
+
+def test_doc_shape_and_bos():
+    for s in _gen().batch(20):
+        assert len(s.docs) == P.n_docs
+        for d in s.docs:
+            assert len(d) == P.doc_len
+            assert d[0] == T.BOS
+
+
+def test_query_frame():
+    for s in _gen().batch(30):
+        assert len(s.query) == T.QUERY_LEN
+        assert s.query[0] == T.QUERY
+        assert s.query[4] == T.ANS
+        assert 1 <= len(s.answer) <= 2
+
+
+def test_single_answer_is_in_some_doc():
+    for s in _gen("dureader-sim", 1).batch(40):
+        if s.qtype not in ("single", "consensus"):
+            continue
+        k, v = s.query[2], s.answer[0]
+        found = any(
+            d[i] == k and d[i + 1] == v
+            for d in s.docs for i in range(len(d) - 1))
+        assert found, (s.qtype, k, v)
+
+
+def test_ordinal_is_position_critical():
+    """Ordinal samples must have the key in *every* doc with distinct values
+    — content alone cannot resolve the answer."""
+    seen = 0
+    for s in _gen("wiki2-sim", 2).batch(60):
+        if s.qtype != "ordinal":
+            continue
+        seen += 1
+        k = s.query[2]
+        ordv = s.query[1] - T.ORD_BASE  # 0-based doc index
+        vals = []
+        for d in s.docs:
+            hit = [d[i + 1] for i in range(len(d) - 1) if d[i] == k]
+            assert len(hit) == 1
+            vals.append(hit[0])
+        assert len(set(vals)) == len(vals), "values must differ per doc"
+        assert s.answer == [vals[ordv]]
+    assert seen >= 5
+
+
+def test_twohop_chain_exists():
+    gen = D.SampleGen(T.PROFILES["s4"], "musique-sim", 3)
+    seen = 0
+    for s in gen.batch(60):
+        if s.qtype != "twohop":
+            continue
+        seen += 1
+        k1 = s.query[2]
+        # hop 1: k1 -> km somewhere
+        kms = [d[i + 1] for d in s.docs for i in range(len(d) - 1)
+               if d[i] == k1]
+        assert len(kms) == 1
+        km = kms[0]
+        assert T.KEY_BASE <= km < T.KEY_BASE + T.N_KEYS
+        # hop 2: km -> answer value
+        vs = [d[i + 1] for d in s.docs for i in range(len(d) - 1)
+              if d[i] == km]
+        assert s.answer[0] in vs
+    assert seen >= 5
+
+
+def test_consensus_duplicated():
+    seen = 0
+    for s in _gen("hotpot-sim", 4).batch(80):
+        if s.qtype != "consensus":
+            continue
+        seen += 1
+        k, v = s.query[2], s.answer[0]
+        n_docs_with = sum(
+            any(d[i] == k and d[i + 1] == v for i in range(len(d) - 1))
+            for d in s.docs)
+        assert n_docs_with >= 2
+    assert seen >= 3
+
+
+def test_assemble_full_layout():
+    s = _gen().sample()
+    tokens, valid, mask, ans_start = D.assemble_full(s, P, with_answer=True)
+    assert tokens.shape == (P.full_len,)
+    assert ans_start == P.ctx_len + T.QUERY_LEN
+    assert tokens[ans_start - 1] == T.ANS
+    n = len(s.answer)
+    assert list(tokens[ans_start:ans_start + n]) == s.answer
+    assert tokens[ans_start + n] == T.EOS
+    # loss mask supervises exactly answer+EOS predictions
+    assert mask.sum() == n + 1
+    assert mask[ans_start - 1] == 1.0
+    assert valid[:ans_start + n + 1].all()
+    assert not valid[ans_start + n + 1:].any()
+
+
+def test_determinism():
+    a = [s.to_dict() for s in _gen(seed=9).batch(5)]
+    b = [s.to_dict() for s in _gen(seed=9).batch(5)]
+    assert a == b
+
+
+def test_dataset_mixture_fractions():
+    gen = _gen("musique-sim", 7)
+    types = [s.qtype for s in gen.batch(300)]
+    frac_2hop = types.count("twohop") / len(types)
+    assert 0.25 < frac_2hop < 0.55
+    assert types.count("ordinal") / len(types) > 0.25

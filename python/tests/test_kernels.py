@@ -1,0 +1,116 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_flash_attention, block_score
+from compile.kernels.ref import masked_attention_ref, block_score_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# masked_flash_attention
+# ---------------------------------------------------------------------------
+
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([8, 16, 48, 57, 137, 160]),
+    head_dim=st.sampled_from([8, 16, 24, 32]),
+    n_valid=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_attention_matches_ref(heads, seq, head_dim, n_valid, seed):
+    rng = np.random.default_rng(seed)
+    n_valid = min(n_valid, seq)
+    q = _rand(rng, heads, head_dim)
+    k = _rand(rng, heads, seq, head_dim)
+    v = _rand(rng, heads, seq, head_dim)
+    valid = np.zeros(seq, np.float32)
+    idx = rng.choice(seq, size=n_valid, replace=False)
+    valid[idx] = 1.0
+    got = np.asarray(masked_flash_attention(q, k, v, valid))
+    ref = np.asarray(masked_attention_ref(q, k, v, valid))
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+@given(
+    tile=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_attention_tile_invariance(tile, seed):
+    """The tile size is a schedule choice — results must not depend on it."""
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand(rng, 2, 16), _rand(rng, 2, 40, 16), _rand(rng, 2, 40, 16)
+    valid = (rng.random(40) < 0.7).astype(np.float32)
+    valid[0] = 1.0
+    a = np.asarray(masked_flash_attention(q, k, v, valid, tile=tile))
+    b = np.asarray(masked_attention_ref(q, k, v, valid))
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_ignores_invalid_garbage():
+    """Padding slots may contain arbitrary data (even huge values)."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, 2, 8)
+    k = _rand(rng, 2, 32, 8)
+    v = _rand(rng, 2, 32, 8)
+    valid = np.concatenate([np.ones(10), np.zeros(22)]).astype(np.float32)
+    base = np.asarray(masked_flash_attention(q, k, v, valid))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, 10:] = 1e6
+    v2[:, 10:] = -1e6
+    poisoned = np.asarray(masked_flash_attention(q, k2, v2, valid))
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_flash_attention_single_valid_slot_returns_value():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, 1, 8)
+    k = _rand(rng, 1, 16, 8)
+    v = _rand(rng, 1, 16, 8)
+    valid = np.zeros(16, np.float32)
+    valid[5] = 1.0
+    out = np.asarray(masked_flash_attention(q, k, v, valid))
+    np.testing.assert_allclose(out[0], v[0, 5], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# block_score
+# ---------------------------------------------------------------------------
+
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    n_blocks=st.sampled_from([2, 4, 16]),
+    block_size=st.sampled_from([4, 8, 16]),
+    head_dim=st.sampled_from([8, 24]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_score_matches_ref(heads, n_blocks, block_size, head_dim, seed):
+    rng = np.random.default_rng(seed)
+    seq = n_blocks * block_size
+    q = _rand(rng, heads, head_dim)
+    k = _rand(rng, heads, seq, head_dim)
+    valid = (rng.random(seq) < 0.8).astype(np.float32)
+    got = np.asarray(block_score(q, k, valid, block_size))
+    ref = np.asarray(block_score_ref(q, k, valid, block_size))
+    assert got.shape == (n_blocks,)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_block_score_scales_with_alignment():
+    """A block whose keys align with q must outscore an orthogonal block."""
+    heads, block, head_dim = 2, 8, 16
+    q = np.zeros((heads, head_dim), np.float32)
+    q[:, 0] = 1.0
+    k = np.zeros((heads, 2 * block, head_dim), np.float32)
+    k[:, :block, 0] = 3.0   # aligned block
+    k[:, block:, 1] = 3.0   # orthogonal block
+    valid = np.ones(2 * block, np.float32)
+    s = np.asarray(block_score(q, k, valid, block))
+    assert s[0] > s[1] + 1.0

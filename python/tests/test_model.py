@@ -1,0 +1,160 @@
+"""L2 model semantics: the serving entry points must agree with the joint
+causal oracle wherever the paper's method guarantees equality."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import taskspec as T
+
+P = T.PROFILES["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return [jnp.asarray(p) for p in M.init_params(P, seed=3)]
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return D.SampleGen(P, "hotpot-sim", seed=11).sample()
+
+
+def _full_tokens(sample):
+    tokens, valid, _, ans_start = D.assemble_full(sample, P,
+                                                  with_answer=False)
+    return tokens, valid, ans_start
+
+
+def test_param_specs_count(params):
+    assert len(params) == M.n_params_arrays(P)
+    for p, (_, shape) in zip(params, M.param_specs(P)):
+        assert p.shape == shape
+
+
+def test_prefill_doc_shapes(params, sample):
+    kv, attn, qloc = M.prefill_doc(P, params, jnp.asarray(sample.docs[0]),
+                                   jnp.int32(0))
+    L, H, Dh, Ld = P.n_layers, P.n_heads, P.head_dim, P.doc_len
+    assert kv.shape == (L, 2, H, Ld, Dh)
+    assert attn.shape == (L, H, Ld, Ld)
+    assert qloc.shape == (L, H, Dh)
+    # attention rows are probability distributions over the causal prefix
+    rows = np.asarray(attn).sum(-1)
+    np.testing.assert_allclose(rows, np.ones_like(rows), rtol=1e-4)
+    # strict causality: upper triangle is zero
+    a = np.asarray(attn)
+    for i in range(Ld - 1):
+        assert np.abs(a[..., i, i + 1:]).max() < 1e-6
+
+
+def test_first_doc_prefill_equals_joint_prefill(params, sample):
+    """Doc 1 sits at positions 0..Ld-1 in the joint layout and attends only
+    to itself, so independent prefill must reproduce the joint KV exactly."""
+    tokens, valid, _ = _full_tokens(sample)
+    (kv_full,) = M.prefill_full(P, params, jnp.asarray(tokens),
+                                jnp.asarray(valid))
+    kv_doc, _, _ = M.prefill_doc(P, params, jnp.asarray(sample.docs[0]),
+                                 jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(kv_full)[:, :, :, :P.doc_len],
+                               np.asarray(kv_doc), rtol=2e-4, atol=2e-4)
+
+
+def test_second_doc_prefill_differs_from_joint(params, sample):
+    """Doc 2's joint KV sees doc 1 (cross-attention) and different RoPE
+    positions — the deficiency SamKV exists to repair."""
+    tokens, valid, _ = _full_tokens(sample)
+    (kv_full,) = M.prefill_full(P, params, jnp.asarray(tokens),
+                                jnp.asarray(valid))
+    kv_doc, _, _ = M.prefill_doc(P, params, jnp.asarray(sample.docs[1]),
+                                 jnp.int32(0))
+    joint = np.asarray(kv_full)[:, :, :, P.doc_len:2 * P.doc_len]
+    indep = np.asarray(kv_doc)
+    assert np.abs(joint - indep).max() > 1e-3
+
+
+def test_recompute_all_equals_joint_prefill(params, sample):
+    """Recomputing every slot at every layer from reused junk must yield
+    exactly the joint prefill KV (rule-1/rule-2 degenerate case)."""
+    tokens, valid, _ = _full_tokens(sample)
+    lt = P.full_len
+    (kv_full,) = M.prefill_full(P, params, jnp.asarray(tokens),
+                                jnp.asarray(valid))
+    kv_junk = jnp.zeros_like(kv_full)
+    positions = jnp.arange(lt, dtype=jnp.int32)
+    rec = jnp.ones((P.n_layers, lt), jnp.float32)
+    (kv_out,) = M.recompute(P, params, jnp.asarray(tokens), positions,
+                            kv_junk, rec, jnp.asarray(valid))
+    got = np.asarray(kv_out) * np.asarray(valid)[None, None, None, :, None]
+    want = np.asarray(kv_full) * np.asarray(valid)[None, None, None, :, None]
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_recompute_mask_zero_is_identity(params, sample):
+    tokens, valid, _ = _full_tokens(sample)
+    lt = P.full_len
+    rng = np.random.default_rng(0)
+    kv_in = jnp.asarray(rng.standard_normal(
+        (P.n_layers, 2, P.n_heads, lt, P.head_dim)).astype(np.float32))
+    rec = jnp.zeros((P.n_layers, lt), jnp.float32)
+    (kv_out,) = M.recompute(P, params, jnp.asarray(tokens),
+                            jnp.arange(lt, dtype=jnp.int32), kv_in, rec,
+                            jnp.asarray(valid))
+    np.testing.assert_allclose(np.asarray(kv_out), np.asarray(kv_in))
+
+
+def test_decode_step_matches_forward_logits(params, sample):
+    """Greedy next-token via decode_step over prefill_full KV must equal
+    the training-forward argmax (teacher-forcing parity)."""
+    tokens, valid, ans_start = _full_tokens(sample)
+    (kv_full,) = M.prefill_full(P, params, jnp.asarray(tokens),
+                                jnp.asarray(valid))
+    logits_all = M.forward_logits(P, params, jnp.asarray(tokens),
+                                  jnp.asarray(valid))
+    # decode the token at ans_start given everything before it
+    last = ans_start - 1  # ANS token position; kv buffer holds prefix
+    kv_valid = (np.arange(P.full_len) < last).astype(np.float32)
+    logits, k_new, v_new = M.decode_step(
+        P, params, jnp.asarray(tokens[last]), jnp.int32(last),
+        jnp.int32(last), kv_full, jnp.asarray(kv_valid))
+    assert int(jnp.argmax(logits)) == int(jnp.argmax(logits_all[last]))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_all[last]),
+                               rtol=5e-4, atol=5e-4)
+    # the returned k/v must equal the prefill cache at that slot
+    np.testing.assert_allclose(np.asarray(k_new),
+                               np.asarray(kv_full)[:, 0, :, last], rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(v_new),
+                               np.asarray(kv_full)[:, 1, :, last], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_query_embed_shapes_and_pooling(params, sample):
+    L, H, Dh, Lc = P.n_layers, P.n_heads, P.head_dim, P.comp_len
+    rng = np.random.default_rng(5)
+    comp_kv = jnp.asarray(rng.standard_normal(
+        (L, 2, H, Lc, Dh)).astype(np.float32) * 0.1)
+    comp_valid = jnp.ones(Lc, jnp.float32)
+    q_pos = jnp.arange(P.ctx_len, P.ctx_len + T.QUERY_LEN, dtype=jnp.int32)
+    q_que, q_kv = M.query_embed(P, params, jnp.asarray(sample.query),
+                                comp_kv, comp_valid, q_pos)
+    assert q_que.shape == (L, H, Dh)
+    assert q_kv.shape == (L, 2, H, T.QUERY_LEN, Dh)
+    # Q_que responds to the compressed cache (cross-attention is live)
+    q_que2, _ = M.query_embed(P, params, jnp.asarray(sample.query),
+                              comp_kv * 10.0, comp_valid, q_pos)
+    assert np.abs(np.asarray(q_que) - np.asarray(q_que2)).max() > 1e-5
+
+
+def test_score_blocks_prefers_matching_block(params):
+    L, H, Dh, Ld = P.n_layers, P.n_heads, P.head_dim, P.doc_len
+    q_hat = np.zeros((L, H, Dh), np.float32)
+    q_hat[..., 0] = 1.0
+    k = np.zeros((L, H, Ld, Dh), np.float32)
+    k[:, :, :P.block_size, 0] = 2.0  # block 0 aligned with q_hat
+    (scores,) = M.score_blocks(P, jnp.asarray(q_hat), jnp.asarray(k),
+                               jnp.ones(Ld, jnp.float32))
+    s = np.asarray(scores)
+    assert s.shape == (L, Ld // P.block_size)
+    assert (s[:, 0] > s[:, 1:].max(axis=1) + 0.5).all()

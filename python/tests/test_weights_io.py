@@ -1,0 +1,53 @@
+"""Weights serialization roundtrip (format shared with rust)."""
+import numpy as np
+
+from compile import model as M
+from compile import taskspec as T
+from compile import train as TR
+
+P = T.PROFILES["tiny"]
+
+
+def test_roundtrip(tmp_path):
+    params = M.init_params(P, seed=42)
+    path = str(tmp_path / "w.bin")
+    TR.save_weights(path, P, params)
+    loaded = TR.load_weights(path, P)
+    assert len(loaded) == len(params)
+    for a, b in zip(params, loaded):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_header_is_json_prefixed(tmp_path):
+    import json
+    import struct
+    params = M.init_params(P, seed=0)
+    path = str(tmp_path / "w.bin")
+    TR.save_weights(path, P, params)
+    with open(path, "rb") as f:
+        assert f.read(8) == TR.WEIGHTS_MAGIC
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+    assert header["profile"] == "tiny"
+    assert [tuple(a["shape"]) for a in header["arrays"]] == \
+        [s for _, s in M.param_specs(P)]
+
+
+def test_train_step_decreases_loss():
+    """Two gradient steps on a fixed batch must reduce the loss."""
+    import jax.numpy as jnp
+    from compile import data as D
+    cfg = P
+    params = [jnp.asarray(p) for p in M.init_params(cfg, 1)]
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.int32(0)
+    gen = D.SampleGen(cfg, "hotpot-sim", seed=5)
+    tokens, valid, mask = D.training_batch(gen, cfg, 4)
+    step = TR.make_train_step(cfg, lr=1e-3)
+    losses = []
+    for _ in range(3):
+        params, m, v, t, loss = step(params, m, v, t, jnp.asarray(tokens),
+                                     jnp.asarray(valid), jnp.asarray(mask))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,16 @@
+//! Regenerates Fig. 1: TTFT (% of full recompute) vs F1, KV memory as
+//! the circle size, for all seven methods.
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let profile = args.get_str("profile", "s4");
+    let n = args.get::<usize>("samples", 12);
+    let model = exp::load_model(&profile).expect("artifacts built?");
+    let ds = exp::load_dataset(&model, &args.get_str("dataset",
+                                                     "hotpot-sim"))
+        .unwrap();
+    exp::fig1(&model, &ds, n).unwrap();
+}

@@ -1,0 +1,15 @@
+//! Regenerates Fig. 7: per-block representative-token attention curves
+//! fitted with power laws; α ordering defines block importance.
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let profile = args.get_str("profile", "s4");
+    let model = exp::load_model(&profile).expect("artifacts built?");
+    let ds = exp::load_dataset(&model, &args.get_str("dataset",
+                                                     "hotpot-sim"))
+        .unwrap();
+    exp::fig7(&model, &ds, args.get::<usize>("docs", 16)).unwrap();
+}

@@ -1,0 +1,12 @@
+//! Regenerates Fig. 8: per-layer attention-stability scores for every
+//! dataset (the N* selection evidence).
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let profile = args.get_str("profile", "s4");
+    let model = exp::load_model(&profile).expect("artifacts built?");
+    exp::fig8(&model, args.get::<usize>("docs", 16)).unwrap();
+}

@@ -1,0 +1,18 @@
+//! End-to-end serving throughput/latency under synthetic load through
+//! the full coordinator stack (engine thread, batcher, metrics), with
+//! recurring document sets exercising the context cache.
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let profile = args.get_str("profile", "s4");
+    for policy in args.get_str("policies",
+                               "SamKV-fusion,CacheBlend,Reuse").split(',') {
+        exp::throughput(&profile, policy,
+                        args.get::<usize>("requests", 24),
+                        args.get::<usize>("unique", 8))
+            .unwrap();
+    }
+}

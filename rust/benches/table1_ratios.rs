@@ -1,0 +1,17 @@
+//! Regenerates Table 1: sequence ratio / recomputation ratio for the
+//! multi-context methods (CacheBlend, EPIC, SamKV).
+//! Run: `cargo bench --bench table1_ratios [-- --profile s4 --samples N]`
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let profile = args.get_str("profile", "x16");
+    let n = args.get::<usize>("samples", 10);
+    let model = exp::load_model(&profile).expect("artifacts built?");
+    let ds = exp::load_dataset(&model, &args.get_str("dataset",
+                                                     "hotpot-sim"))
+        .unwrap();
+    exp::table1(&model, &ds, n).unwrap();
+}

@@ -1,0 +1,18 @@
+//! Regenerates Table 3: F1 of all methods across the three QA datasets
+//! for each trained model profile.
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let n = args.get::<usize>("samples", 12);
+    for profile in args.get_str("profiles", "s4,m6").split(',') {
+        match exp::load_model(profile) {
+            Ok(model) => {
+                exp::table3(&model, n).unwrap();
+            }
+            Err(e) => eprintln!("skipping {profile}: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Regenerates Table 4: SamKV ablations (selection / personalized bias /
+//! recomputation) across the four datasets, fusion update.
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)
+        .filter(|a| a != "--bench"));
+    let n = args.get::<usize>("samples", 10);
+    for profile in args.get_str("profiles", "s4,m6").split(',') {
+        match exp::load_model(profile) {
+            Ok(model) => {
+                exp::table4(&model, n).unwrap();
+            }
+            Err(e) => eprintln!("skipping {profile}: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! A.1 — dual-score block characterization from prefill attention maps.
+//!
+//! For every (layer, block) we compute:
+//! * the **representative token** — the token receiving the highest mean
+//!   attention from subsequent queries (the "bright line" in Fig. 7);
+//! * the **importance attribute** — the power-law exponent α of the
+//!   representative token's received-attention curve (smaller α = the
+//!   attention is sustained over distance = more important);
+//! * the **unimportance attribute** — the representative token's mean
+//!   received attention (when even the best token in a block draws
+//!   little attention, the block is unimportant).
+//!
+//! PauTa low-outliers over the per-block αs mark the tokens that the
+//! recomputation module must refresh (§3.3).
+
+use crate::config::ProfileConfig;
+use crate::tensor::{mean, powerlaw_fit, Tensor};
+
+use super::pauta::pauta_low_outliers;
+
+/// Per-document attention analytics.
+#[derive(Debug, Clone)]
+pub struct BlockAttention {
+    pub n_layers: usize,
+    pub n_blocks: usize,
+    /// `[L][B]` doc-local index of the representative token.
+    pub rep_token: Vec<Vec<usize>>,
+    /// `[L][B]` power-law exponent (importance; lower = more important).
+    pub alpha: Vec<Vec<f32>>,
+    /// `[L][B]` mean received attention of the representative token
+    /// (unimportance; lower = more unimportant).
+    pub mean_received: Vec<Vec<f32>>,
+    /// `[L][B]` importance rank (0 = most important, i.e. lowest α).
+    pub importance_rank: Vec<Vec<usize>>,
+    /// `[L]` doc-local token indices flagged for recomputation
+    /// (representative tokens of PauTa-low-α middle blocks).
+    pub outlier_tokens: Vec<Vec<usize>>,
+}
+
+impl BlockAttention {
+    /// Middle block (exclusive of init/local) with max importance at
+    /// layer `l` — the paper's `K_doc-i_max`.
+    pub fn max_middle_block(&self, cfg: &ProfileConfig, l: usize)
+                            -> Option<usize> {
+        middle_range(cfg).min_by(|&a, &b| {
+            self.alpha[l][a].partial_cmp(&self.alpha[l][b]).unwrap()
+        })
+    }
+
+    /// Middle block with max *unimportance* at layer `l` (`K_doc-i_min`).
+    pub fn min_middle_block(&self, cfg: &ProfileConfig, l: usize)
+                            -> Option<usize> {
+        middle_range(cfg).min_by(|&a, &b| {
+            self.mean_received[l][a]
+                .partial_cmp(&self.mean_received[l][b])
+                .unwrap()
+        })
+    }
+}
+
+fn middle_range(cfg: &ProfileConfig)
+                -> impl Iterator<Item = usize> + Clone {
+    cfg.init_blocks..(cfg.blocks_per_doc - cfg.local_blocks)
+}
+
+/// Analyze one document's prefill attention `[L, H, Ld, Ld]`.
+pub fn analyze_doc(attn: &Tensor, cfg: &ProfileConfig,
+                   pauta_sigma: f32) -> BlockAttention {
+    let (nl, nh, ld) = (cfg.n_layers, cfg.n_heads, cfg.doc_len);
+    let bs = cfg.block_size;
+    let nb = cfg.blocks_per_doc;
+    debug_assert_eq!(attn.shape(), &[nl, nh, ld, ld]);
+
+    let mut rep_token = vec![vec![0usize; nb]; nl];
+    let mut alpha = vec![vec![0f32; nb]; nl];
+    let mut mean_received = vec![vec![0f32; nb]; nl];
+    let mut importance_rank = vec![vec![0usize; nb]; nl];
+    let mut outlier_tokens = vec![Vec::new(); nl];
+
+    for l in 0..nl {
+        // received[t] = mean over heads and subsequent queries of attn[q,t]
+        let mut received = vec![0f32; ld];
+        for t in 0..ld {
+            let n_q = ld - t - 1;
+            if n_q == 0 {
+                continue;
+            }
+            let mut acc = 0f32;
+            for h in 0..nh {
+                for q in (t + 1)..ld {
+                    acc += attn.at(&[l, h, q, t]);
+                }
+            }
+            received[t] = acc / (nh * n_q) as f32;
+        }
+        for b in 0..nb {
+            let t0 = b * bs;
+            let rep = (t0..t0 + bs)
+                .max_by(|&a, &c| {
+                    received[a].partial_cmp(&received[c]).unwrap()
+                })
+                .unwrap();
+            rep_token[l][b] = rep;
+            // received-attention curve of the representative token over
+            // distance (the dashed curve of Fig. 7), head-averaged
+            let mut curve = Vec::with_capacity(ld - rep);
+            for q in (rep + 1)..ld {
+                let mut acc = 0f32;
+                for h in 0..nh {
+                    acc += attn.at(&[l, h, q, rep]);
+                }
+                curve.push(acc / nh as f32);
+            }
+            if curve.is_empty() {
+                // last token of the doc: nothing attends to it yet
+                alpha[l][b] = f32::MAX;
+                mean_received[l][b] = 0.0;
+            } else {
+                let (a, _) = powerlaw_fit(&curve);
+                alpha[l][b] = a;
+                mean_received[l][b] = mean(&curve);
+            }
+        }
+        // importance rank: sort by alpha ascending
+        let mut order: Vec<usize> = (0..nb).collect();
+        order.sort_by(|&a, &c| {
+            alpha[l][a].partial_cmp(&alpha[l][c]).unwrap()
+        });
+        for (rank, &b) in order.iter().enumerate() {
+            importance_rank[l][b] = rank;
+        }
+        // PauTa low-α outliers among middle blocks -> recompute their
+        // representative tokens at this layer
+        let middle: Vec<usize> = middle_range(cfg).collect();
+        let mid_alphas: Vec<f32> =
+            middle.iter().map(|&b| alpha[l][b]).collect();
+        for oi in pauta_low_outliers(&mid_alphas, pauta_sigma) {
+            outlier_tokens[l].push(rep_token[l][middle[oi]]);
+        }
+    }
+
+    BlockAttention {
+        n_layers: nl,
+        n_blocks: nb,
+        rep_token,
+        alpha,
+        mean_received,
+        importance_rank,
+        outlier_tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn tiny_cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"tiny","n_layers":1,"d_model":48,"n_heads":1,
+                "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+                "block_size":8,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":4}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    /// Synthetic causal attention with a realistic shape: every token
+    /// gets fast-decaying local attention (exp kernel), while `star`
+    /// additionally receives strong slowly-decaying (power-law,
+    /// exponent `alpha_star`) attention — the Fig.-7 "bright line".
+    fn synthetic_attn(cfg: &ProfileConfig, star: usize, alpha_star: f32)
+                      -> Tensor {
+        let ld = cfg.doc_len;
+        let mut a = Tensor::zeros(&[1, 1, ld, ld]);
+        for q in 0..ld {
+            let mut row = vec![0f32; ld];
+            for (t, r) in row.iter_mut().enumerate().take(q + 1) {
+                *r = (-((q - t) as f32) / 2.0).exp();
+            }
+            if q > star {
+                row[star] += 2.0 * ((q - star) as f32).powf(-alpha_star);
+            }
+            let sum: f32 = row.iter().sum();
+            for (t, &v) in row.iter().enumerate() {
+                a.set(&[0, 0, q, t], v / sum);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn finds_representative_token_and_orders_alpha() {
+        let cfg = tiny_cfg();
+        // star token 12 lives in middle block 1 (tokens 8..16)
+        let attn = synthetic_attn(&cfg, 12, 0.4);
+        let ba = analyze_doc(&attn, &cfg, 3.0);
+        assert_eq!(ba.rep_token[0][1], 12);
+        // block 1 must be the most important middle block
+        assert_eq!(ba.max_middle_block(&cfg, 0), Some(1));
+        // slow power-law decay beats the exp-local kernel's fast decay
+        assert!(ba.alpha[0][1] < ba.alpha[0][2],
+                "alphas {:?}", ba.alpha[0]);
+        // and it must out-rank the other middle block
+        assert!(ba.importance_rank[0][1] < ba.importance_rank[0][2]);
+    }
+
+    #[test]
+    fn unimportance_picks_weakest_block() {
+        let cfg = tiny_cfg();
+        let attn = synthetic_attn(&cfg, 12, 0.4);
+        let ba = analyze_doc(&attn, &cfg, 3.0);
+        // the starred block cannot be the most unimportant one
+        let min = ba.min_middle_block(&cfg, 0).unwrap();
+        assert_ne!(min, 1);
+        assert!(ba.mean_received[0][min] < ba.mean_received[0][1]);
+    }
+
+    #[test]
+    fn outliers_flag_the_star_token() {
+        let cfg = tiny_cfg();
+        let attn = synthetic_attn(&cfg, 12, 0.2);
+        // low sigma so 2 middle blocks can yield an outlier
+        let ba = analyze_doc(&attn, &cfg, 0.5);
+        assert!(ba.outlier_tokens[0].contains(&12),
+                "outliers {:?}", ba.outlier_tokens[0]);
+    }
+
+    #[test]
+    fn rank_is_a_permutation() {
+        let cfg = tiny_cfg();
+        let attn = synthetic_attn(&cfg, 20, 1.0);
+        let ba = analyze_doc(&attn, &cfg, 3.0);
+        let mut ranks = ba.importance_rank[0].clone();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (0..cfg.blocks_per_doc).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,11 @@
+//! Appendix-A attention analytics: dual-score block characterization
+//! (power-law importance + sustained-attention unimportance), PauTa
+//! outlier detection, and cross-layer stability scoring (N* selection).
+
+pub mod analysis;
+pub mod pauta;
+pub mod stability;
+
+pub use analysis::{analyze_doc, BlockAttention};
+pub use pauta::{pauta_low_outliers, pauta_outliers};
+pub use stability::{layer_stability_scores, select_stable_layers};

@@ -1,0 +1,69 @@
+//! PauTa (3σ) criterion — the paper's outlier test for both
+//! recomputation-token detection (A.1) and layer-stability scoring (A.2).
+
+use crate::tensor::{mean, std_dev};
+
+/// Indices whose value deviates from the mean by more than `sigma`
+/// standard deviations (either direction).
+pub fn pauta_outliers(xs: &[f32], sigma: f32) -> Vec<usize> {
+    let m = mean(xs);
+    let s = std_dev(xs);
+    if s < 1e-12 {
+        return Vec::new();
+    }
+    xs.iter()
+        .enumerate()
+        .filter(|(_, &x)| (x - m).abs() > sigma * s)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Low-side outliers only — for power-law exponents a *low* alpha means
+/// unusually strong sustained attention (the tokens worth recomputing).
+pub fn pauta_low_outliers(xs: &[f32], sigma: f32) -> Vec<usize> {
+    let m = mean(xs);
+    let s = std_dev(xs);
+    if s < 1e-12 {
+        return Vec::new();
+    }
+    xs.iter()
+        .enumerate()
+        .filter(|(_, &x)| m - x > sigma * s)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_obvious_outlier() {
+        let mut xs = vec![1.0f32; 20];
+        xs[7] = 30.0;
+        assert_eq!(pauta_outliers(&xs, 3.0), vec![7]);
+    }
+
+    #[test]
+    fn constant_series_has_none() {
+        assert!(pauta_outliers(&[2.0; 10], 3.0).is_empty());
+        assert!(pauta_low_outliers(&[2.0; 10], 3.0).is_empty());
+    }
+
+    #[test]
+    fn low_outliers_are_one_sided() {
+        let mut xs = vec![5.0f32; 30];
+        xs[3] = -20.0; // low outlier
+        xs[9] = 30.0; // high outlier
+        assert_eq!(pauta_low_outliers(&xs, 2.0), vec![3]);
+        let both = pauta_outliers(&xs, 2.0);
+        assert!(both.contains(&3) && both.contains(&9));
+    }
+
+    #[test]
+    fn sigma_controls_sensitivity() {
+        let xs: Vec<f32> = (0..40).map(|i| (i % 5) as f32).collect();
+        assert!(pauta_outliers(&xs, 0.1).len()
+                    > pauta_outliers(&xs, 3.0).len());
+    }
+}

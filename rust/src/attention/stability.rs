@@ -1,0 +1,144 @@
+//! A.2 — cross-layer block-importance stability and N* selection.
+//!
+//! For each analyzed document: average every block's importance rank
+//! across layers, take the globally best block β, and credit a layer
+//! whenever β's rank within that layer is a PauTa low-outlier (i.e. the
+//! layer decisively agrees that β dominates). Layers with high scores
+//! have *stable* attention; the paper takes the trailing high-score
+//! layers as N* (Fig. 8 plots these scores per dataset).
+
+use super::analysis::BlockAttention;
+use super::pauta::pauta_low_outliers;
+
+/// Per-layer stability scores in [0, 1] (fraction of documents whose
+/// best block is a decisive outlier in that layer).
+pub fn layer_stability_scores(docs: &[&BlockAttention], pauta_sigma: f32)
+                              -> Vec<f32> {
+    assert!(!docs.is_empty());
+    let nl = docs[0].n_layers;
+    let mut scores = vec![0f32; nl];
+    for ba in docs {
+        debug_assert_eq!(ba.n_layers, nl);
+        let nb = ba.n_blocks;
+        // global best block: lowest mean rank across layers
+        let beta = (0..nb)
+            .min_by(|&a, &b| {
+                let ra: f32 = (0..nl)
+                    .map(|l| ba.importance_rank[l][a] as f32)
+                    .sum();
+                let rb: f32 = (0..nl)
+                    .map(|l| ba.importance_rank[l][b] as f32)
+                    .sum();
+                ra.partial_cmp(&rb).unwrap()
+            })
+            .unwrap();
+        for l in 0..nl {
+            // a layer is stable w.r.t. β when it (a) ranks β first and
+            // (b) β's α is a decisive PauTa low-outlier among the
+            // layer's αs (ranks alone are permutation-invariant and
+            // carry no significance signal)
+            if ba.importance_rank[l][beta] != 0 {
+                continue;
+            }
+            let alphas = &ba.alpha[l];
+            if pauta_low_outliers(alphas, pauta_sigma).contains(&beta) {
+                scores[l] += 1.0;
+            }
+        }
+    }
+    for s in scores.iter_mut() {
+        *s /= docs.len() as f32;
+    }
+    scores
+}
+
+/// Choose the N* layer set: the `k` highest-scoring layers, breaking
+/// ties toward the *latest* layers (the paper observes stability
+/// concentrates in the final layers).
+pub fn select_stable_layers(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap()
+            .then(b.cmp(&a)) // later layer wins ties
+    });
+    let mut out: Vec<usize> = order.into_iter().take(k).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a BlockAttention from per-layer α vectors (ranks derived).
+    fn fake_ba(alphas: Vec<Vec<f32>>) -> BlockAttention {
+        let nl = alphas.len();
+        let nb = alphas[0].len();
+        let ranks: Vec<Vec<usize>> = alphas
+            .iter()
+            .map(|layer| {
+                let mut order: Vec<usize> = (0..nb).collect();
+                order.sort_by(|&a, &b| {
+                    layer[a].partial_cmp(&layer[b]).unwrap()
+                });
+                let mut rank = vec![0usize; nb];
+                for (r, &b) in order.iter().enumerate() {
+                    rank[b] = r;
+                }
+                rank
+            })
+            .collect();
+        BlockAttention {
+            n_layers: nl,
+            n_blocks: nb,
+            rep_token: vec![vec![0; nb]; nl],
+            alpha: alphas,
+            mean_received: vec![vec![0.0; nb]; nl],
+            importance_rank: ranks,
+            outlier_tokens: vec![Vec::new(); nl],
+        }
+    }
+
+    // clustered αs + two high stragglers: the narrow best (block 5) is
+    // well inside 1.2σ, so no layer can call it significant
+    const FLAT: [f32; 8] = [1.0, 0.995, 1.005, 1.0, 1.01, 0.99, 1.2, 1.2];
+    // block 0 decisively dominant
+    const SPIKY: [f32; 8] = [0.05, 1.2, 1.3, 1.1, 1.25, 1.15, 1.2, 1.3];
+
+    #[test]
+    fn stable_layer_scores_higher() {
+        // 8 blocks; block 0 is globally best (avg rank). Layer 1 makes it
+        // a decisive α outlier; layer 0 doesn't even rank it first.
+        let ba = fake_ba(vec![FLAT.to_vec(), SPIKY.to_vec()]);
+        let scores = layer_stability_scores(&[&ba], 1.2);
+        assert!(scores[1] > scores[0], "scores {scores:?}");
+        assert_eq!(scores[1], 1.0);
+        assert_eq!(scores[0], 0.0);
+    }
+
+    #[test]
+    fn scores_are_fractions_over_docs() {
+        // doc A: decisive outlier at block 0 -> layer counted.
+        let stable = fake_ba(vec![SPIKY.to_vec()]);
+        // doc B: flat αs -> best block not significant -> not counted.
+        let unstable = fake_ba(vec![FLAT.to_vec()]);
+        let scores = layer_stability_scores(&[&stable, &unstable], 1.2);
+        assert_eq!(scores.len(), 1);
+        assert!((scores[0] - 0.5).abs() < 1e-6, "scores {scores:?}");
+    }
+
+    #[test]
+    fn select_prefers_late_layers_on_ties() {
+        let scores = vec![0.2, 0.8, 0.8, 0.2];
+        assert_eq!(select_stable_layers(&scores, 2), vec![1, 2]);
+        let flat = vec![0.5, 0.5, 0.5, 0.5];
+        assert_eq!(select_stable_layers(&flat, 2), vec![2, 3]);
+    }
+
+    #[test]
+    fn select_handles_k_larger_than_layers() {
+        assert_eq!(select_stable_layers(&[0.1, 0.9], 5), vec![0, 1]);
+    }
+}

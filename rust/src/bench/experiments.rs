@@ -1,0 +1,444 @@
+//! Experiment generators — one per table/figure of the paper's
+//! evaluation (see DESIGN.md §3). Each prints the paper-shaped table
+//! and returns a JSON object that the bench binaries persist under
+//! `artifacts/results/` for EXPERIMENTS.md.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::attention::{analyze_doc, layer_stability_scores};
+use crate::bench::Table;
+use crate::config::{SamKvConfig, UpdateStrategy};
+use crate::eval::{evaluate, EvalResult};
+use crate::json::Value;
+use crate::kvcache::CacheStore;
+use crate::model::Model;
+use crate::policies::{
+    all_policies, CacheBlendPolicy, ContextPolicy, EpicPolicy,
+    RecomputePolicy, SamKvPolicy,
+};
+use crate::runtime::{artifacts_dir, Runtime};
+use crate::workload::Dataset;
+
+/// Load a profile's model on a fresh runtime.
+pub fn load_model(profile: &str) -> Result<Model> {
+    let rt = Rc::new(Runtime::new(artifacts_dir())?);
+    Model::load(rt, profile)
+}
+
+/// Load one of the profile's eval datasets by name.
+pub fn load_dataset(model: &Model, name: &str) -> Result<Dataset> {
+    let meta = model.runtime().manifest().profile(&model.name)?;
+    let rel = meta
+        .datasets
+        .get(name)
+        .with_context(|| format!("dataset `{name}` not in manifest"))?;
+    Dataset::load(model.runtime().manifest().path(rel))
+}
+
+pub fn dataset_names(model: &Model) -> Vec<String> {
+    model
+        .runtime()
+        .manifest()
+        .profile(&model.name)
+        .map(|m| m.datasets.keys().cloned().collect())
+        .unwrap_or_default()
+}
+
+/// Persist an experiment result under `artifacts/results/<name>.json`.
+pub fn save_result(name: &str, v: &Value) -> Result<()> {
+    let dir = artifacts_dir().join("results");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), v.to_string())?;
+    Ok(())
+}
+
+fn eval_to_json(r: &EvalResult) -> Value {
+    Value::obj()
+        .set("policy", r.policy.as_str())
+        .set("dataset", r.dataset.as_str())
+        .set("n", r.n)
+        .set("f1", r.f1)
+        .set("em", r.em)
+        .set("ttft_ms", r.mean_ttft_ms)
+        .set("decode_ms", r.mean_decode_ms)
+        .set("seq_ratio", r.mean_seq_ratio)
+        .set("recompute_ratio", r.mean_recompute_ratio)
+        .set("kv_bytes", r.mean_kv_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — sequence ratio & recomputation ratio per multi-context method
+// ---------------------------------------------------------------------------
+
+pub fn table1(model: &Model, dataset: &Dataset, n: usize) -> Result<Value> {
+    println!("== Table 1: sequence / recomputation ratios \
+              (model {}, {} x{})\n", model.name, dataset.dataset, n);
+    let policies: Vec<Box<dyn ContextPolicy>> = vec![
+        Box::new(CacheBlendPolicy::default()),
+        Box::new(EpicPolicy::default()),
+        Box::new(SamKvPolicy::new(SamKvConfig::default())),
+    ];
+    let mut tbl = Table::new(&["Multi-context method", "Sequence ratio",
+                               "Recomputation ratio"]);
+    let mut rows = Vec::new();
+    for p in &policies {
+        let r = evaluate(model, p.as_ref(), dataset, n)?;
+        tbl.row(vec![
+            r.policy.clone(),
+            format!("{:.1}%", 100.0 * r.mean_seq_ratio),
+            format!("{:.1}%", 100.0 * r.mean_recompute_ratio),
+        ]);
+        rows.push(eval_to_json(&r));
+    }
+    tbl.print();
+    let v = Value::obj()
+        .set("experiment", "table1")
+        .set("model", model.name.as_str())
+        .set("dataset", dataset.dataset.as_str())
+        .set("rows", Value::Arr(rows));
+    save_result(&format!("table1_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — TTFT (% of full recompute) vs F1, with KV memory
+// ---------------------------------------------------------------------------
+
+pub fn fig1(model: &Model, dataset: &Dataset, n: usize) -> Result<Value> {
+    println!("== Fig. 1: TTFT%% vs F1 vs KV memory \
+              (model {}, {} x{})\n", model.name, dataset.dataset, n);
+    let recompute = evaluate(model, &RecomputePolicy, dataset, n)?;
+    let base_ttft = recompute.mean_ttft_ms.max(1e-9);
+    let mut tbl = Table::new(&["method", "TTFT (% of recompute)", "F1",
+                               "KV memory (KiB)"]);
+    let mut rows = Vec::new();
+    for p in all_policies() {
+        let r = if p.name() == "Recompute" {
+            recompute.clone()
+        } else {
+            evaluate(model, p.as_ref(), dataset, n)?
+        };
+        tbl.row(vec![
+            r.policy.clone(),
+            format!("{:.0}%", 100.0 * r.mean_ttft_ms / base_ttft),
+            format!("{:.2}", r.f1),
+            format!("{:.0}", r.mean_kv_bytes / 1024.0),
+        ]);
+        rows.push(eval_to_json(&r)
+            .set("ttft_pct", 100.0 * r.mean_ttft_ms / base_ttft));
+    }
+    tbl.print();
+    let v = Value::obj()
+        .set("experiment", "fig1")
+        .set("model", model.name.as_str())
+        .set("dataset", dataset.dataset.as_str())
+        .set("rows", Value::Arr(rows));
+    save_result(&format!("fig1_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — F1 of every method across the QA datasets
+// ---------------------------------------------------------------------------
+
+const TABLE3_DATASETS: [&str; 3] =
+    ["wiki2-sim", "musique-sim", "hotpot-sim"];
+
+pub fn table3(model: &Model, n: usize) -> Result<Value> {
+    println!("== Table 3: F1 across methods (model {}, n={})\n",
+             model.name, n);
+    let datasets: Vec<Dataset> = TABLE3_DATASETS
+        .iter()
+        .map(|d| load_dataset(model, d))
+        .collect::<Result<_>>()?;
+    let mut headers = vec!["Method".to_string()];
+    headers.extend(TABLE3_DATASETS.iter().map(|s| s.to_string()));
+    let mut tbl =
+        Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    let mut baseline: Vec<f64> = Vec::new();
+    for p in all_policies() {
+        let mut cells = vec![p.name()];
+        let mut row = Value::obj().set("policy", p.name());
+        let mut f1s = Vec::new();
+        for ds in &datasets {
+            let r = evaluate(model, p.as_ref(), ds, n)?;
+            let delta = if baseline.len() < TABLE3_DATASETS.len() {
+                String::new()
+            } else {
+                format!(" ({:+.2})", r.f1 - baseline[f1s.len()])
+            };
+            cells.push(format!("{:.2}{}", r.f1, delta));
+            row = row.set(ds.dataset.as_str(), eval_to_json(&r));
+            f1s.push(r.f1);
+        }
+        if baseline.is_empty() {
+            baseline = f1s.clone();
+        }
+        tbl.row(cells);
+        rows.push(row);
+    }
+    tbl.print();
+    let v = Value::obj()
+        .set("experiment", "table3")
+        .set("model", model.name.as_str())
+        .set("n", n)
+        .set("rows", Value::Arr(rows));
+    save_result(&format!("table3_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — ablations: selection x personalized bias x recomputation
+// ---------------------------------------------------------------------------
+
+const TABLE4_DATASETS: [&str; 4] =
+    ["wiki2-sim", "musique-sim", "hotpot-sim", "dureader-sim"];
+
+pub fn table4(model: &Model, n: usize) -> Result<Value> {
+    println!("== Table 4: SamKV ablations (model {}, n={}, fusion)\n",
+             model.name, n);
+    let datasets: Vec<Dataset> = TABLE4_DATASETS
+        .iter()
+        .map(|d| load_dataset(model, d))
+        .collect::<Result<_>>()?;
+    // (label, selection, pers_bias, recompute); None = Recompute baseline
+    let variants: [(&str, Option<(bool, bool, bool)>); 7] = [
+        ("Recompute", None),
+        ("sel=x rec=x", Some((false, false, false))),
+        ("sel=x rec=ok", Some((false, false, true))),
+        ("sel=ok pb=x rec=x", Some((true, false, false))),
+        ("sel=ok pb=ok rec=x", Some((true, true, false))),
+        ("sel=ok pb=x rec=ok", Some((true, false, true))),
+        ("sel=ok pb=ok rec=ok", Some((true, true, true))),
+    ];
+    let mut headers = vec!["Variant".to_string()];
+    headers.extend(TABLE4_DATASETS.iter().map(|s| s.to_string()));
+    headers.push("Avg.".to_string());
+    let mut tbl =
+        Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for (label, flags) in variants {
+        let policy: Box<dyn ContextPolicy> = match flags {
+            None => Box::new(RecomputePolicy),
+            Some((sel, pb, rec)) => Box::new(SamKvPolicy::new(SamKvConfig {
+                selection: sel,
+                pers_bias: pb,
+                recompute: rec,
+                update: UpdateStrategy::Fusion,
+                ..SamKvConfig::default()
+            })),
+        };
+        let mut cells = vec![label.to_string()];
+        let mut row = Value::obj().set("variant", label);
+        let mut sum = 0.0;
+        for ds in &datasets {
+            let r = evaluate(model, policy.as_ref(), ds, n)?;
+            cells.push(format!("{:.2}", r.f1));
+            sum += r.f1;
+            row = row.set(ds.dataset.as_str(), eval_to_json(&r));
+        }
+        let avg = sum / datasets.len() as f64;
+        cells.push(format!("{avg:.2}"));
+        row = row.set("avg", avg);
+        tbl.row(cells);
+        rows.push(row);
+    }
+    tbl.print();
+    let v = Value::obj()
+        .set("experiment", "table4")
+        .set("model", model.name.as_str())
+        .set("n", n)
+        .set("rows", Value::Arr(rows));
+    save_result(&format!("table4_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — power-law block attention analysis
+// ---------------------------------------------------------------------------
+
+pub fn fig7(model: &Model, dataset: &Dataset, n_docs: usize)
+            -> Result<Value> {
+    println!("== Fig. 7: block power-law fits (model {}, {} docs)\n",
+             model.name, n_docs);
+    let cfg = model.cfg.clone();
+    let mut store = CacheStore::unbounded();
+    let mut alphas_all = Vec::new();
+    let mut tbl = Table::new(&["doc", "block", "rep tok", "alpha",
+                               "mean recv", "imp rank"]);
+    let mut count = 0usize;
+    'outer: for sample in &dataset.samples {
+        for doc in &sample.docs {
+            let (e, _) = store.get_or_prefill(model, doc)?;
+            let ba = analyze_doc(&e.attn, &cfg, 3.0);
+            let l = cfg.n_layers - 1;
+            for b in 0..cfg.blocks_per_doc {
+                if count == 0 {
+                    tbl.row(vec![
+                        format!("{count}"),
+                        format!("{b}"),
+                        format!("{}", ba.rep_token[l][b]),
+                        format!("{:.3}", ba.alpha[l][b]),
+                        format!("{:.4}", ba.mean_received[l][b]),
+                        format!("{}", ba.importance_rank[l][b]),
+                    ]);
+                }
+                if ba.alpha[l][b].is_finite() {
+                    alphas_all.push(ba.alpha[l][b] as f64);
+                }
+            }
+            count += 1;
+            if count >= n_docs {
+                break 'outer;
+            }
+        }
+    }
+    tbl.print();
+    alphas_all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = alphas_all.iter().sum::<f64>() / alphas_all.len() as f64;
+    let med = alphas_all[alphas_all.len() / 2];
+    println!("alpha over {} blocks: mean {:.3}, median {:.3}, min {:.3}, \
+              max {:.3}", alphas_all.len(), mean, med,
+             alphas_all[0], alphas_all[alphas_all.len() - 1]);
+    println!("(paper Fig. 7: smaller alpha = stronger sustained attention; \
+              ordering of fits defines block importance)");
+    let v = Value::obj()
+        .set("experiment", "fig7")
+        .set("model", model.name.as_str())
+        .set("n_blocks", alphas_all.len())
+        .set("alpha_mean", mean)
+        .set("alpha_median", med)
+        .set("alpha_min", alphas_all[0])
+        .set("alpha_max", alphas_all[alphas_all.len() - 1]);
+    save_result(&format!("fig7_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — per-layer attention-stability scores per dataset
+// ---------------------------------------------------------------------------
+
+pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
+    println!("== Fig. 8: layer stability scores (model {}, {} docs per \
+              dataset)\n", model.name, n_docs);
+    let cfg = model.cfg.clone();
+    let mut headers = vec!["dataset".to_string()];
+    headers.extend((0..cfg.n_layers).map(|l| format!("L{l}")));
+    let mut tbl =
+        Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut out_rows = Vec::new();
+    for ds_name in dataset_names(model) {
+        let ds = load_dataset(model, &ds_name)?;
+        let mut store = CacheStore::unbounded();
+        let mut analyses = Vec::new();
+        let mut count = 0;
+        'outer: for sample in &ds.samples {
+            for doc in &sample.docs {
+                let (e, _) = store.get_or_prefill(model, doc)?;
+                analyses.push(analyze_doc(&e.attn, &cfg, 3.0));
+                count += 1;
+                if count >= n_docs {
+                    break 'outer;
+                }
+            }
+        }
+        let refs: Vec<_> = analyses.iter().collect();
+        let scores = layer_stability_scores(&refs, 1.5);
+        let mut cells = vec![ds_name.clone()];
+        cells.extend(scores.iter().map(|s| format!("{s:.2}")));
+        tbl.row(cells);
+        out_rows.push(Value::obj().set("dataset", ds_name.as_str()).set(
+            "scores",
+            Value::Arr(scores.iter().map(|&s| (s as f64).into()).collect()),
+        ));
+    }
+    tbl.print();
+    println!("(N* = trailing high-stability layers; serving uses the last \
+              {} layers)", cfg.stable_layers);
+    let v = Value::obj()
+        .set("experiment", "fig8")
+        .set("model", model.name.as_str())
+        .set("rows", Value::Arr(out_rows));
+    save_result(&format!("fig8_{}", model.name), &v)?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Serving throughput/latency under load (system experiment)
+// ---------------------------------------------------------------------------
+
+/// Drive the full serving stack (engine thread + router + metrics) with
+/// a synthetic load where document sets recur (`n_unique` distinct sets
+/// across `n_requests`), reporting throughput, latency percentiles, and
+/// cache hit behaviour.
+pub fn throughput(profile: &str, policy: &str, n_requests: usize,
+                  n_unique: usize) -> Result<Value> {
+    use crate::config::ServingConfig;
+    use crate::coordinator::{Engine, ServeRequest};
+    use crate::metrics::Metrics;
+    use crate::rng::Rng;
+    use crate::workload::synthetic_sample;
+    use std::sync::Arc;
+
+    println!("== Serving throughput: profile {profile}, policy {policy}, \
+              {n_requests} requests over {n_unique} doc-sets\n");
+    let metrics = Arc::new(Metrics::new());
+    let cfg = ServingConfig {
+        profile: profile.to_string(),
+        ..ServingConfig::default()
+    };
+    let engine = Engine::spawn(0, artifacts_dir(), cfg,
+                               policy.to_string(), Arc::clone(&metrics))?;
+    let handle = engine.handle();
+
+    // unique doc-sets generated once, then requests cycle over them
+    let model = load_model(profile)?;
+    let mut rng = Rng::new(2026);
+    let pool: Vec<_> = (0..n_unique)
+        .map(|_| synthetic_sample(&model.cfg, &mut rng))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    // pipelined submission: keep a small window in flight
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..n_requests {
+        let sample = pool[i % n_unique].clone();
+        let rx = handle.submit(ServeRequest {
+            id: i as u64,
+            sample,
+            policy: policy.to_string(),
+        })?;
+        pending.push_back(rx);
+        if pending.len() >= 8 {
+            let _ = pending.pop_front().unwrap().recv();
+        }
+    }
+    let mut errors = 0usize;
+    while let Some(rx) = pending.pop_front() {
+        match rx.recv() {
+            Ok(r) if r.error.is_none() => {}
+            _ => errors += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let rps = n_requests as f64 / wall_s;
+    println!("{}", metrics.report());
+    println!("wall {:.1}s -> {:.2} req/s, errors {}", wall_s, rps, errors);
+    let v = Value::obj()
+        .set("experiment", "throughput")
+        .set("model", profile)
+        .set("policy", policy)
+        .set("requests", n_requests)
+        .set("unique_docsets", n_unique)
+        .set("wall_s", wall_s)
+        .set("req_per_s", rps)
+        .set("errors", errors)
+        .set("ttft_mean_ms", metrics.ttft.mean_ms())
+        .set("ttft_p95_ms", metrics.ttft.percentile_ms(0.95))
+        .set("e2e_p95_ms", metrics.e2e.percentile_ms(0.95));
+    save_result(&format!("throughput_{profile}_{policy}"), &v)?;
+    Ok(v)
+}

@@ -1,0 +1,173 @@
+//! Benchmark substrate (no criterion offline): warmup + timed iterations
+//! with percentile stats and markdown table rendering. Every
+//! `rust/benches/*.rs` table/figure harness prints through this module so
+//! outputs are uniform and parseable.
+
+pub mod experiments;
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples_ms: &[f64]) -> Stats {
+        assert!(!samples_ms.is_empty());
+        let mut xs = samples_ms.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ms: mean,
+            std_ms: var.sqrt(),
+            min_ms: xs[0],
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: xs[n - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Stats::from_samples(name, &samples)
+}
+
+/// Markdown-ish table printer used by all bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format milliseconds compactly.
+pub fn ms(v: f64) -> String {
+    if v >= 1000.0 {
+        format!("{:.2}s", v / 1000.0)
+    } else if v >= 1.0 {
+        format!("{v:.1}ms")
+    } else {
+        format!("{:.0}us", v * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Stats::from_samples("t", &xs);
+        assert_eq!(s.iters, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 100.0);
+        assert_eq!(s.p50_ms, 51.0); // (n-1)*0.5 = 49.5 rounds up
+        assert_eq!(s.p95_ms, 95.0);
+        assert_eq!(s.p99_ms, 99.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ms >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "F1"]);
+        t.row(vec!["SamKV-fusion".into(), "27.88".into()]);
+        t.row(vec!["Reuse".into(), "6.33".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.trim().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("method"));
+        assert!(lines[2].contains("SamKV-fusion"));
+        // all lines equal width
+        assert_eq!(lines.iter().map(|l| l.len()).collect::<Vec<_>>(),
+                   vec![lines[0].len(); 4]);
+    }
+
+    #[test]
+    fn ms_formatting() {
+        assert_eq!(ms(0.5), "500us");
+        assert_eq!(ms(12.34), "12.3ms");
+        assert_eq!(ms(1500.0), "1.50s");
+    }
+}

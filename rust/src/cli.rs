@@ -1,0 +1,124 @@
+//! CLI substrate (no clap offline): subcommand + `--key value` /
+//! `--key=value` / boolean `--flag` parsing with typed getters.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let tokens: Vec<String> = items.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    args.flags
+                        .insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean switch (`--verbose`) or explicit `--verbose true/false`.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+            || self
+                .flags
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB `--switch` followed by a non-flag token binds the token as a
+        // value; bare switches go last or use `--switch=true`.
+        let a = parse("eval x y --profile s4 --samples=50 --verbose");
+        assert_eq!(a.command.as_deref(), Some("eval"));
+        assert_eq!(a.get_str("profile", "tiny"), "s4");
+        assert_eq!(a.get::<usize>("samples", 0), 50);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.get::<u16>("port", 7070), 7070);
+        assert_eq!(a.get_str("profile", "tiny"), "tiny");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn bool_flag_styles() {
+        assert!(parse("x --flag").has("flag"));
+        assert!(parse("x --flag=true").has("flag"));
+        assert!(parse("x --flag 1").has("flag"));
+        assert!(!parse("x --flag false").has("flag"));
+        // trailing switch before another switch
+        let a = parse("x --a --b");
+        assert!(a.has("a") && a.has("b"));
+    }
+
+    #[test]
+    fn bad_parse_falls_back() {
+        let a = parse("x --n notanumber");
+        assert_eq!(a.get::<usize>("n", 3), 3);
+    }
+}

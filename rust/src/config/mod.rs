@@ -1,0 +1,223 @@
+//! Configuration: model/serving profiles and policy knobs.
+//!
+//! [`ProfileConfig`] mirrors `python/compile/taskspec.py::Profile` and is
+//! loaded from `artifacts/manifest.json` (the build emits the derived
+//! shapes, so the two sides cannot drift silently). [`SamKvConfig`] and
+//! [`ServingConfig`] are the runtime knobs.
+
+use crate::json::Value;
+use anyhow::Result;
+
+/// Static model/task geometry for one AOT profile (s4 / m6 / tiny).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub n_docs: usize,
+    pub doc_len: usize,
+    pub block_size: usize,
+    pub init_blocks: usize,
+    pub local_blocks: usize,
+    pub sel_cap_blocks: usize,
+    pub stable_layers: usize,
+    pub rope_theta: f64,
+    pub query_len: usize,
+    pub answer_max: usize,
+    pub ctx_len: usize,
+    pub full_len: usize,
+    pub sparse_kv_len: usize,
+    pub sparse_len: usize,
+    pub comp_len: usize,
+    pub blocks_per_doc: usize,
+}
+
+impl ProfileConfig {
+    pub fn from_json(v: &Value) -> Result<ProfileConfig> {
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad usize field `{k}`"))
+        };
+        Ok(ProfileConfig {
+            name: v
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("bad name"))?
+                .to_string(),
+            n_layers: u("n_layers")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            vocab: u("vocab")?,
+            n_docs: u("n_docs")?,
+            doc_len: u("doc_len")?,
+            block_size: u("block_size")?,
+            init_blocks: u("init_blocks")?,
+            local_blocks: u("local_blocks")?,
+            sel_cap_blocks: u("sel_cap_blocks")?,
+            stable_layers: u("stable_layers")?,
+            rope_theta: v.req("rope_theta")?.as_f64().unwrap_or(10_000.0),
+            query_len: u("query_len")?,
+            answer_max: u("answer_max")?,
+            ctx_len: u("ctx_len")?,
+            full_len: u("full_len")?,
+            sparse_kv_len: u("sparse_kv_len")?,
+            sparse_len: u("sparse_len")?,
+            comp_len: u("comp_len")?,
+            blocks_per_doc: u("blocks_per_doc")?,
+        })
+    }
+
+    /// Number of init+local blocks kept at full resolution per document.
+    pub fn fixed_blocks_per_doc(&self) -> usize {
+        self.init_blocks + self.local_blocks
+    }
+
+    /// Middle (sparsifiable) blocks per document.
+    pub fn middle_blocks_per_doc(&self) -> usize {
+        self.blocks_per_doc - self.fixed_blocks_per_doc()
+    }
+
+    /// The first layer index inside the stable window N* (Eq. 3 uses the
+    /// trailing `stable_layers` layers; Appendix A.2).
+    pub fn stable_layer_start(&self) -> usize {
+        self.n_layers - self.stable_layers.min(self.n_layers)
+    }
+
+    /// Global (joint-layout) position of the first token of doc `i`.
+    pub fn doc_offset(&self, doc: usize) -> usize {
+        doc * self.doc_len
+    }
+
+    /// KV bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.head_dim * 4
+    }
+}
+
+/// Which write-back strategy the recomputation module uses (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateStrategy {
+    /// Replace old cache entries with the recomputed values.
+    Overwrite,
+    /// Eq. 4: `new = θ·new + (1-θ)·old`, θ = cos(new, old).
+    Fusion,
+}
+
+impl std::str::FromStr for UpdateStrategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "overwrite" => Ok(UpdateStrategy::Overwrite),
+            "fusion" => Ok(UpdateStrategy::Fusion),
+            _ => anyhow::bail!("unknown update strategy `{s}`"),
+        }
+    }
+}
+
+/// SamKV pipeline knobs (the Table-4 ablation axes are all here).
+#[derive(Debug, Clone)]
+pub struct SamKvConfig {
+    /// Select middle KV blocks (ablation column "Selection").
+    pub selection: bool,
+    /// Personalized bias (Eq. 1) on the query vector ("PersBias.").
+    pub pers_bias: bool,
+    /// Recompute the sparsified tokens ("Recompute").
+    pub recompute: bool,
+    /// Overwrite vs fusion write-back (§3.3, Eq. 4).
+    pub update: UpdateStrategy,
+    /// PauTa criterion multiplier for outlier-token recomputation
+    /// (Appendix A.1; the classical criterion is 3σ).
+    pub pauta_sigma: f32,
+    /// Use the offloaded `score_blocks` artifact instead of host scoring.
+    pub offload_scoring: bool,
+}
+
+impl Default for SamKvConfig {
+    fn default() -> Self {
+        SamKvConfig {
+            selection: true,
+            pers_bias: true,
+            recompute: true,
+            update: UpdateStrategy::Fusion,
+            pauta_sigma: 3.0,
+            offload_scoring: false,
+        }
+    }
+}
+
+/// Serving-stack knobs.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub artifacts_dir: String,
+    pub profile: String,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub queue_capacity: usize,
+    pub port: u16,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".to_string(),
+            profile: "s4".to_string(),
+            workers: 1,
+            max_batch: 4,
+            queue_capacity: 256,
+            port: 7070,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn sample_profile_json() -> Value {
+        json::parse(
+            r#"{"name":"tiny","n_layers":2,"d_model":48,"n_heads":2,
+                "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+                "block_size":8,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":4}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn profile_from_json() {
+        let p = ProfileConfig::from_json(&sample_profile_json()).unwrap();
+        assert_eq!(p.name, "tiny");
+        assert_eq!(p.n_layers, 2);
+        assert_eq!(p.fixed_blocks_per_doc(), 2);
+        assert_eq!(p.middle_blocks_per_doc(), 2);
+        assert_eq!(p.stable_layer_start(), 1);
+        assert_eq!(p.doc_offset(1), 32);
+        assert_eq!(p.kv_bytes_per_token(), 2 * 2 * 2 * 24 * 4);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let v = json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ProfileConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn update_strategy_parse() {
+        assert_eq!("fusion".parse::<UpdateStrategy>().unwrap(),
+                   UpdateStrategy::Fusion);
+        assert_eq!("overwrite".parse::<UpdateStrategy>().unwrap(),
+                   UpdateStrategy::Overwrite);
+        assert!("blend".parse::<UpdateStrategy>().is_err());
+    }
+}

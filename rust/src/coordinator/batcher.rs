@@ -1,0 +1,77 @@
+//! Dynamic batching: drain up to `max_batch` queued requests within a
+//! short gather window so the engine amortizes per-wakeup overhead
+//! while bounding added latency.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Pull one batch from `rx`. Blocks for the first item (or returns None
+/// when the channel is closed), then gathers more items until either
+/// `max_batch` is reached or `window` elapses.
+pub fn next_batch<T>(rx: &Receiver<T>, max_batch: usize,
+                     window: Duration) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + window;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn window_bounds_waiting() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, 16, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn gathers_late_arrivals_within_window() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(1).unwrap();
+        });
+        let b = next_batch(&rx, 4, Duration::from_millis(100)).unwrap();
+        t.join().unwrap();
+        assert_eq!(b.len(), 2);
+    }
+}

@@ -1,0 +1,183 @@
+//! Engine: one thread owning a PJRT runtime + model + document cache,
+//! serving requests from a channel (dynamic batching applied at the
+//! queue). The PJRT client is not `Send`, so everything device-adjacent
+//! lives here.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::kvcache::CacheStore;
+use crate::metrics::Metrics;
+use crate::model::Model;
+use crate::policies::{all_policies, ContextPolicy};
+use crate::runtime::Runtime;
+
+use super::batcher::next_batch;
+use super::request::{ServeRequest, ServeResponse};
+
+enum Msg {
+    Serve(ServeRequest, mpsc::Sender<ServeResponse>),
+}
+
+/// Cloneable handle for submitting work to one engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+    pub index: usize,
+}
+
+impl EngineHandle {
+    /// Fire a request; the response arrives on the returned receiver.
+    pub fn submit(&self, req: ServeRequest)
+                  -> Result<mpsc::Receiver<ServeResponse>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Serve(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine closed"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn serve(&self, req: ServeRequest) -> Result<ServeResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))
+    }
+}
+
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread: loads the runtime + model, compiles the
+    /// serving entry points, then loops on the queue. `ready` resolves
+    /// after warmup (Err when initialization failed).
+    pub fn spawn(index: usize, artifacts: PathBuf, cfg: ServingConfig,
+                 default_policy: String, metrics: Arc<Metrics>)
+                 -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = thread::Builder::new()
+            .name(format!("engine-{index}"))
+            .spawn(move || {
+                engine_main(index, artifacts, cfg, default_policy, metrics,
+                            rx, ready_tx);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine init crashed"))??;
+        Ok(Engine { handle: EngineHandle { tx, index }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // close the queue; the thread drains and exits
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.handle.tx, dead_tx);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
+               default_policy: String, metrics: Arc<Metrics>,
+               rx: mpsc::Receiver<Msg>,
+               ready_tx: mpsc::Sender<Result<()>>) {
+    let init = (|| -> Result<(Model, CacheStore)> {
+        let rt = std::rc::Rc::new(Runtime::new(artifacts)?);
+        let model = Model::load(rt, &cfg.profile)?;
+        model.warmup()?;
+        // budget: documents for ~64 concurrent doc-sets
+        let budget = 64
+            * model.cfg.n_docs
+            * model.cfg.doc_len
+            * model.cfg.kv_bytes_per_token()
+            * 4;
+        Ok((model, CacheStore::new(budget)))
+    })();
+    let (model, mut store) = match init {
+        Ok(x) => {
+            let _ = ready_tx.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let policies: HashMap<String, Box<dyn ContextPolicy>> = all_policies()
+        .into_iter()
+        .map(|p| (p.name(), p))
+        .collect();
+    crate::info!("engine-{index} ready (profile {}, {} params)",
+                 model.name, model.n_params);
+
+    while let Some(batch) =
+        next_batch(&rx, cfg.max_batch, Duration::from_millis(2))
+    {
+        for msg in batch {
+            let Msg::Serve(req, reply) = msg;
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            let pname = if req.policy.is_empty() {
+                default_policy.clone()
+            } else {
+                req.policy.clone()
+            };
+            let resp = match policies.get(&pname) {
+                Some(policy) => {
+                    match policy.run(&model, &mut store, &req.sample) {
+                        Ok(out) => {
+                            metrics.record_completion(
+                                out.stats.ttft_ms,
+                                out.stats.decode_ms,
+                                out.answer.len(),
+                                store.stats().current_bytes,
+                            );
+                            ServeResponse {
+                                id: req.id,
+                                answer: out.answer,
+                                stats: out.stats,
+                                error: None,
+                            }
+                        }
+                        Err(e) => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            ServeResponse {
+                                id: req.id,
+                                answer: vec![],
+                                stats: Default::default(),
+                                error: Some(format!("{e:#}")),
+                            }
+                        }
+                    }
+                }
+                None => {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    ServeResponse {
+                        id: req.id,
+                        answer: vec![],
+                        stats: Default::default(),
+                        error: Some(format!("unknown policy `{pname}`")),
+                    }
+                }
+            };
+            let _ = reply.send(resp);
+        }
+    }
+    crate::info!("engine-{index} shutting down");
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving control plane.
+//!
+//! PJRT clients are not `Send`, so each [`engine::Engine`] owns its
+//! runtime + model + document cache on a dedicated thread (the vLLM
+//! executor-thread pattern); [`router::Router`] spreads requests across
+//! engines with document-cache affinity, and [`batcher`] shapes the
+//! per-engine queue into bounded batches.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod router;
+
+pub use engine::{Engine, EngineHandle};
+pub use request::{ServeRequest, ServeResponse};
+pub use router::Router;

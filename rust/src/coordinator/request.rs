@@ -1,0 +1,121 @@
+//! Request/response types crossing the server <-> engine boundary.
+
+use crate::json::Value;
+use crate::policies::RunStats;
+use crate::workload::Sample;
+
+/// An admitted serving request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub sample: Sample,
+    /// Policy table name (e.g. "SamKV-fusion"); empty = engine default.
+    pub policy: String,
+}
+
+impl ServeRequest {
+    /// Parse the JSON-lines wire format:
+    /// `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion"}`.
+    pub fn from_json(v: &Value) -> crate::Result<ServeRequest> {
+        let docs = v
+            .req("docs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("docs not an array"))?
+            .iter()
+            .map(|d| {
+                d.i32_vec()
+                    .ok_or_else(|| anyhow::anyhow!("bad doc tokens"))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ServeRequest {
+            id: v.get("id").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+            sample: Sample {
+                docs,
+                query: v
+                    .req("query")?
+                    .i32_vec()
+                    .ok_or_else(|| anyhow::anyhow!("bad query"))?,
+                answer: Vec::new(),
+                qtype: "served".to_string(),
+            },
+            policy: v
+                .get("policy")
+                .and_then(|p| p.as_str())
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+}
+
+/// The engine's reply.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub answer: Vec<i32>,
+    pub stats: RunStats,
+    pub error: Option<String>,
+}
+
+impl ServeResponse {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("id", self.id as i64)
+            .set(
+                "answer",
+                Value::Arr(
+                    self.answer.iter().map(|&t| (t as i64).into()).collect(),
+                ),
+            )
+            .set("ttft_ms", self.stats.ttft_ms)
+            .set("decode_ms", self.stats.decode_ms)
+            .set("seq_ratio", self.stats.seq_ratio)
+            .set("recompute_ratio", self.stats.recompute_ratio)
+            .set("kv_bytes", self.stats.kv_bytes)
+            .set("cache_warm", self.stats.cache_warm);
+        if let Some(e) = &self.error {
+            v = v.set("error", e.as_str());
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn parse_wire_request() {
+        let v = json::parse(
+            r#"{"id":7,"docs":[[1,2],[3,4]],"query":[2,5,16,0,3],
+                "policy":"Reuse"}"#,
+        )
+        .unwrap();
+        let r = ServeRequest::from_json(&v).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.sample.docs.len(), 2);
+        assert_eq!(r.policy, "Reuse");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let v = json::parse(r#"{"id":1,"query":[1]}"#).unwrap();
+        assert!(ServeRequest::from_json(&v).is_err());
+        let v = json::parse(r#"{"docs":[["x"]],"query":[1]}"#).unwrap();
+        assert!(ServeRequest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let r = ServeResponse {
+            id: 3,
+            answer: vec![80, 81],
+            stats: Default::default(),
+            error: None,
+        };
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"id\":3"));
+        assert!(s.contains("\"answer\":[80,81]"));
+        assert!(!s.contains("error"));
+    }
+}

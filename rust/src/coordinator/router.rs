@@ -1,0 +1,134 @@
+//! Document-cache-affinity router (the vLLM-router shape): requests
+//! whose document set hashes alike land on the same engine so its LRU
+//! cache keeps serving them; load imbalance beyond a threshold falls
+//! back to least-loaded.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::kvcache::store::doc_hash;
+use crate::workload::Sample;
+
+pub struct Router {
+    in_flight: Vec<AtomicU64>,
+    /// Allowed load gap before affinity is overridden.
+    pub imbalance_limit: u64,
+}
+
+impl Router {
+    pub fn new(n_engines: usize) -> Router {
+        assert!(n_engines > 0);
+        Router {
+            in_flight: (0..n_engines).map(|_| AtomicU64::new(0)).collect(),
+            imbalance_limit: 8,
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Combined hash of the sample's document set (order-insensitive so
+    /// permuted retrievals still hit the same engine cache).
+    pub fn affinity_hash(sample: &Sample) -> u64 {
+        sample
+            .docs
+            .iter()
+            .map(|d| doc_hash(d))
+            .fold(0u64, |acc, h| acc ^ h)
+    }
+
+    /// Pick an engine; callers must pair with [`Router::done`].
+    pub fn pick(&self, sample: &Sample) -> usize {
+        let n = self.in_flight.len();
+        let preferred = (Self::affinity_hash(sample) % n as u64) as usize;
+        let loads: Vec<u64> = self
+            .in_flight
+            .iter()
+            .map(|l| l.load(Ordering::Relaxed))
+            .collect();
+        let min = *loads.iter().min().unwrap();
+        let chosen = if loads[preferred] > min + self.imbalance_limit {
+            loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap()
+        } else {
+            preferred
+        };
+        self.in_flight[chosen].fetch_add(1, Ordering::Relaxed);
+        chosen
+    }
+
+    pub fn done(&self, engine: usize) {
+        self.in_flight[engine].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn loads(&self) -> Vec<u64> {
+        self.in_flight
+            .iter()
+            .map(|l| l.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(doc_seed: i32) -> Sample {
+        Sample {
+            docs: vec![vec![doc_seed, doc_seed + 1], vec![doc_seed + 2]],
+            query: vec![2, 5, 16, 0, 3],
+            answer: vec![],
+            qtype: "t".into(),
+        }
+    }
+
+    #[test]
+    fn affinity_is_deterministic_and_order_insensitive() {
+        let a = sample(10);
+        let mut b = sample(10);
+        b.docs.reverse();
+        assert_eq!(Router::affinity_hash(&a), Router::affinity_hash(&b));
+        assert_ne!(Router::affinity_hash(&a),
+                   Router::affinity_hash(&sample(11)));
+    }
+
+    #[test]
+    fn same_docs_same_engine() {
+        let r = Router::new(4);
+        let s = sample(42);
+        let e1 = r.pick(&s);
+        r.done(e1);
+        let e2 = r.pick(&s);
+        r.done(e2);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn imbalance_falls_back_to_least_loaded() {
+        let mut r = Router::new(2);
+        r.imbalance_limit = 2;
+        let s = sample(7);
+        let preferred = r.pick(&s); // load 1 on preferred
+        // pile more load onto the preferred engine
+        for _ in 0..4 {
+            r.in_flight[preferred].fetch_add(1, Ordering::Relaxed);
+        }
+        let other = r.pick(&s);
+        assert_ne!(other, preferred);
+        assert_eq!(r.loads().len(), 2);
+    }
+
+    #[test]
+    fn loads_track_in_flight() {
+        let r = Router::new(2);
+        let s = sample(1);
+        let e = r.pick(&s);
+        assert_eq!(r.loads().iter().sum::<u64>(), 1);
+        r.done(e);
+        assert_eq!(r.loads().iter().sum::<u64>(), 0);
+    }
+}

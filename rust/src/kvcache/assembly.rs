@@ -1,0 +1,310 @@
+//! Sparse-buffer assembly: packing selected (doc, block) KV into the
+//! fixed-shape buffers the AOT artifacts consume.
+//!
+//! Slots carry three parallel annotations the policies need later:
+//! token ids (for recomputation), *global* joint-layout positions (RoPE
+//! for recomputed/decoded tokens + causal masking), and the originating
+//! block (for write-back and ratio accounting).
+
+use anyhow::{bail, Result};
+
+use crate::config::ProfileConfig;
+use crate::kvcache::store::DocEntry;
+use crate::model::Buffer;
+use crate::tensor::Tensor;
+
+/// Why a block is in the buffer (paper §3.2 taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotKind {
+    /// Initial-position block (kept at full resolution).
+    Init,
+    /// Local-position block (kept at full resolution).
+    Local,
+    /// Dynamically selected middle block (Eq. 2/3 + cross-filter).
+    Selected,
+    /// Whole-document block in a non-sparsified layout (Reuse/CacheBlend).
+    Full,
+}
+
+/// One block's occupancy record.
+#[derive(Debug, Clone)]
+pub struct BlockRef {
+    pub doc: usize,
+    pub block: usize,
+    pub kind: SlotKind,
+    /// First buffer slot of this block.
+    pub slot: usize,
+}
+
+/// A fixed-capacity KV buffer matching one artifact geometry.
+#[derive(Debug, Clone)]
+pub struct AssembledContext {
+    pub buffer: Buffer,
+    pub tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub valid: Vec<f32>,
+    /// `[L, 2, H, S, Dh]`.
+    pub kv: Tensor,
+    /// Slots occupied by document KV (excludes query/decode tail).
+    pub kv_len: usize,
+    /// Next free slot.
+    pub cursor: usize,
+    pub blocks: Vec<BlockRef>,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    capacity: usize,
+}
+
+impl AssembledContext {
+    pub fn new(cfg: &ProfileConfig, buffer: Buffer) -> AssembledContext {
+        let capacity = match buffer {
+            Buffer::Sparse => cfg.sparse_len,
+            Buffer::Full => cfg.full_len,
+        };
+        AssembledContext {
+            buffer,
+            tokens: vec![0; capacity],
+            positions: vec![0; capacity],
+            valid: vec![0.0; capacity],
+            kv: Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, capacity,
+                                cfg.head_dim]),
+            kv_len: 0,
+            cursor: 0,
+            blocks: Vec::new(),
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.head_dim,
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append one document block (KV copied verbatim — local-position
+    /// RoPE, i.e. the paper's reused multiple-context cache).
+    pub fn append_block(&mut self, cfg: &ProfileConfig, entry: &DocEntry,
+                        doc: usize, block: usize, kind: SlotKind)
+                        -> Result<()> {
+        let bs = cfg.block_size;
+        if self.cursor + bs > self.capacity {
+            bail!("buffer overflow: {} + {} > {}", self.cursor, bs,
+                  self.capacity);
+        }
+        let start_tok = block * bs;
+        let slot = self.cursor;
+        for t in 0..bs {
+            self.tokens[slot + t] = entry.tokens[start_tok + t];
+            self.positions[slot + t] =
+                (cfg.doc_offset(doc) + start_tok + t) as i32;
+            self.valid[slot + t] = 1.0;
+        }
+        for l in 0..self.n_layers {
+            for c in 0..2 {
+                for h in 0..self.n_heads {
+                    let src = entry.kv.slice_at(&[l, c, h]);
+                    let dst = self.kv.slice_at_mut(&[l, c, h]);
+                    let d = self.head_dim;
+                    dst[(slot) * d..(slot + bs) * d].copy_from_slice(
+                        &src[start_tok * d..(start_tok + bs) * d],
+                    );
+                }
+            }
+        }
+        self.blocks.push(BlockRef { doc, block, kind, slot });
+        self.cursor += bs;
+        self.kv_len = self.cursor;
+        Ok(())
+    }
+
+    /// Append every block of a document (Reuse / full-load baselines).
+    pub fn append_doc(&mut self, cfg: &ProfileConfig, entry: &DocEntry,
+                      doc: usize) -> Result<()> {
+        for b in 0..cfg.blocks_per_doc {
+            self.append_block(cfg, entry, doc, b, SlotKind::Full)?;
+        }
+        Ok(())
+    }
+
+    /// Reserve the next slot for a decoded/query token; returns the slot.
+    /// The KV itself arrives via [`Self::write_token_kv`] after the
+    /// decode artifact computes it.
+    pub fn push_token(&mut self, token: i32, position: i32) -> Result<usize> {
+        if self.cursor >= self.capacity {
+            bail!("buffer overflow pushing token");
+        }
+        let slot = self.cursor;
+        self.tokens[slot] = token;
+        self.positions[slot] = position;
+        self.cursor += 1;
+        Ok(slot)
+    }
+
+    /// Mirror a decode step's K/V (`[L, H, Dh]` each) into `slot`.
+    pub fn write_token_kv(&mut self, slot: usize, k_new: &Tensor,
+                          v_new: &Tensor) {
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let d = self.head_dim;
+                let k = &k_new.slice_at(&[l, h])[..d];
+                let v = &v_new.slice_at(&[l, h])[..d];
+                self.kv.slice_at_mut(&[l, 0, h])
+                    [slot * d..(slot + 1) * d].copy_from_slice(k);
+                self.kv.slice_at_mut(&[l, 1, h])
+                    [slot * d..(slot + 1) * d].copy_from_slice(v);
+            }
+        }
+        self.valid[slot] = 1.0;
+    }
+
+    /// Replace the whole KV tensor (post-recomputation write-back).
+    pub fn replace_kv(&mut self, kv: Tensor) -> Result<()> {
+        if kv.shape() != self.kv.shape() {
+            bail!("kv shape mismatch: {:?} vs {:?}", kv.shape(),
+                  self.kv.shape());
+        }
+        self.kv = kv;
+        Ok(())
+    }
+
+    /// Fraction of the joint context length held in this buffer
+    /// (the paper's *sequence ratio*, Table 1).
+    pub fn seq_ratio(&self, cfg: &ProfileConfig) -> f64 {
+        self.kv_len as f64 / cfg.ctx_len as f64
+    }
+
+    /// Bytes of KV loaded for inference (Fig.-1 circle size).
+    pub fn kv_bytes(&self, cfg: &ProfileConfig) -> usize {
+        self.kv_len * cfg.kv_bytes_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::kvcache::store::doc_hash;
+    use crate::model::PrefillDocOut;
+
+    fn tiny_cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"tiny","n_layers":2,"d_model":48,"n_heads":2,
+                "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+                "block_size":8,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":4}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    fn fake_doc(cfg: &ProfileConfig, seed: i32) -> DocEntry {
+        let ld = cfg.doc_len;
+        let mut kv = Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, ld,
+                                     cfg.head_dim]);
+        // tag each slot with a recognizable value: doc*1000 + token index
+        for l in 0..cfg.n_layers {
+            for c in 0..2 {
+                for h in 0..cfg.n_heads {
+                    let s = kv.slice_at_mut(&[l, c, h]);
+                    for t in 0..ld {
+                        for d in 0..cfg.head_dim {
+                            s[t * cfg.head_dim + d] =
+                                (seed * 1000 + t as i32) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let tokens: Vec<i32> = (0..ld as i32).map(|t| seed * 100 + t).collect();
+        DocEntry {
+            hash: doc_hash(&tokens),
+            tokens,
+            kv,
+            attn: Tensor::zeros(&[cfg.n_layers, cfg.n_heads, ld, ld]),
+            q_local: Tensor::zeros(&[cfg.n_layers, cfg.n_heads,
+                                     cfg.head_dim]),
+            bytes: 0,
+        }
+    }
+
+    #[test]
+    fn append_block_copies_kv_and_annotations() {
+        let cfg = tiny_cfg();
+        let doc = fake_doc(&cfg, 2);
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        ctx.append_block(&cfg, &doc, 1, 3, SlotKind::Selected).unwrap();
+        assert_eq!(ctx.kv_len, cfg.block_size);
+        // token ids come from block 3 (tokens 24..32)
+        assert_eq!(ctx.tokens[0], 2 * 100 + 24);
+        // global positions: doc 1 offset 32, token 24 -> 56
+        assert_eq!(ctx.positions[0], 56);
+        assert_eq!(ctx.valid[7], 1.0);
+        assert_eq!(ctx.valid[8], 0.0);
+        // kv payload from the tagged source
+        assert_eq!(ctx.kv.at(&[0, 0, 0, 0, 0]), 2024.0);
+        assert_eq!(ctx.kv.at(&[1, 1, 1, 7, 3]), 2031.0);
+        assert_eq!(ctx.blocks[0].slot, 0);
+    }
+
+    #[test]
+    fn append_doc_fills_in_order() {
+        let cfg = tiny_cfg();
+        let doc = fake_doc(&cfg, 1);
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
+        ctx.append_doc(&cfg, &doc, 0).unwrap();
+        assert_eq!(ctx.kv_len, cfg.doc_len);
+        assert_eq!(ctx.blocks.len(), cfg.blocks_per_doc);
+        assert_eq!(ctx.positions[31], 31);
+        assert!((ctx.seq_ratio(&cfg) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let cfg = tiny_cfg();
+        let doc = fake_doc(&cfg, 1);
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        // sparse capacity 57 -> 7 blocks fit, the 8th fails
+        for b in 0..7 {
+            ctx.append_block(&cfg, &doc, 0, b % 4, SlotKind::Full).unwrap();
+        }
+        assert!(ctx
+            .append_block(&cfg, &doc, 0, 0, SlotKind::Full)
+            .is_err());
+    }
+
+    #[test]
+    fn push_and_write_token_kv() {
+        let cfg = tiny_cfg();
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        let slot = ctx.push_token(42, 64).unwrap();
+        assert_eq!(slot, 0);
+        assert_eq!(ctx.valid[0], 0.0); // not valid until kv written
+        let k = Tensor::full(&[cfg.n_layers, cfg.n_heads, cfg.head_dim], 3.0);
+        let v = Tensor::full(&[cfg.n_layers, cfg.n_heads, cfg.head_dim], 4.0);
+        ctx.write_token_kv(slot, &k, &v);
+        assert_eq!(ctx.valid[0], 1.0);
+        assert_eq!(ctx.kv.at(&[1, 0, 1, 0, 5]), 3.0);
+        assert_eq!(ctx.kv.at(&[0, 1, 0, 0, 0]), 4.0);
+        // kv_len tracks doc blocks only, not decode tail
+        assert_eq!(ctx.kv_len, 0);
+    }
+
+    #[test]
+    fn seq_ratio_for_sparse_selection() {
+        let cfg = tiny_cfg();
+        let doc = fake_doc(&cfg, 1);
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        // 2 docs x (init + local) = 4 blocks of 8 = 32 slots over ctx 64
+        for d in 0..2 {
+            ctx.append_block(&cfg, &doc, d, 0, SlotKind::Init).unwrap();
+            ctx.append_block(&cfg, &doc, d, 3, SlotKind::Local).unwrap();
+        }
+        assert!((ctx.seq_ratio(&cfg) - 0.5).abs() < 1e-9);
+        assert_eq!(ctx.kv_bytes(&cfg), 32 * cfg.kv_bytes_per_token());
+    }
+}

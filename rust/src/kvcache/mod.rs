@@ -1,0 +1,15 @@
+//! Multi-context KV cache management.
+//!
+//! [`store`] — the document cache: content-addressed per-document KV
+//! entries (the "multiple-context KV Cache" of the paper: each document
+//! prefilled independently at local positions), with ref-counted LRU
+//! eviction and byte-accurate memory accounting.
+//!
+//! [`assembly`] — building the fixed-shape sparse/full buffers the AOT
+//! artifacts consume from a set of selected (doc, block) slots.
+
+pub mod assembly;
+pub mod store;
+
+pub use assembly::{AssembledContext, BlockRef, SlotKind};
+pub use store::{CacheStats, CacheStore, DocEntry};

@@ -1,0 +1,232 @@
+//! Content-addressed document KV cache with LRU eviction.
+//!
+//! In the paper's RAG setting, retrieved documents recur across requests
+//! and their KV caches are computed once and stored ("context caching").
+//! The store hashes document token content (FNV-1a), keeps the prefill
+//! outputs (`kv`, attention maps, local Q), and evicts least-recently-
+//! used unpinned entries when a byte budget is exceeded.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::model::{Model, PrefillDocOut};
+use crate::tensor::Tensor;
+
+/// FNV-1a over token ids — the document cache key.
+pub fn doc_hash(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// A cached document: prefill outputs + bookkeeping.
+#[derive(Debug)]
+pub struct DocEntry {
+    pub hash: u64,
+    pub tokens: Vec<i32>,
+    /// `[L, 2, H, Ld, Dh]`, local (position 0-based) RoPE.
+    pub kv: Tensor,
+    /// `[L, H, Ld, Ld]` attention probabilities.
+    pub attn: Tensor,
+    /// `[L, H, Dh]` local-window mean Q (Eq. 1 bias source).
+    pub q_local: Tensor,
+    pub bytes: usize,
+}
+
+impl DocEntry {
+    fn new(tokens: Vec<i32>, out: PrefillDocOut) -> DocEntry {
+        let bytes = out.kv.size_bytes() + out.attn.size_bytes()
+            + out.q_local.size_bytes();
+        DocEntry {
+            hash: doc_hash(&tokens),
+            tokens,
+            kv: out.kv,
+            attn: out.attn,
+            q_local: out.q_local,
+            bytes,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub current_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU document cache. Entries are `Rc` so in-flight requests keep
+/// evicted entries alive until they finish.
+pub struct CacheStore {
+    entries: HashMap<u64, (Rc<DocEntry>, u64)>, // value: (entry, last_use)
+    clock: u64,
+    budget_bytes: usize,
+    stats: CacheStats,
+}
+
+impl CacheStore {
+    pub fn new(budget_bytes: usize) -> CacheStore {
+        CacheStore {
+            entries: HashMap::new(),
+            clock: 0,
+            budget_bytes,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Unbounded store (eval harness).
+    pub fn unbounded() -> CacheStore {
+        Self::new(usize::MAX)
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, tokens: &[i32]) -> bool {
+        self.entries.contains_key(&doc_hash(tokens))
+    }
+
+    /// Fetch the document's KV cache, prefilling (at local positions,
+    /// offset 0 — the multiple-context regime) on a miss.
+    pub fn get_or_prefill(&mut self, model: &Model, tokens: &[i32])
+                          -> Result<(Rc<DocEntry>, bool)> {
+        let h = doc_hash(tokens);
+        self.clock += 1;
+        if let Some((e, last)) = self.entries.get_mut(&h) {
+            *last = self.clock;
+            self.stats.hits += 1;
+            return Ok((e.clone(), true));
+        }
+        self.stats.misses += 1;
+        let out = model.prefill_doc(tokens, 0)?;
+        let entry = Rc::new(DocEntry::new(tokens.to_vec(), out));
+        self.stats.current_bytes += entry.bytes;
+        self.stats.peak_bytes =
+            self.stats.peak_bytes.max(self.stats.current_bytes);
+        self.entries.insert(h, (entry.clone(), self.clock));
+        self.evict_to_budget();
+        Ok((entry, false))
+    }
+
+    /// Insert a pre-computed entry (tests / replay).
+    pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
+        self.clock += 1;
+        let entry = Rc::new(DocEntry::new(tokens, out));
+        self.stats.current_bytes += entry.bytes;
+        self.stats.peak_bytes =
+            self.stats.peak_bytes.max(self.stats.current_bytes);
+        self.entries.insert(entry.hash, (entry, self.clock));
+        self.evict_to_budget();
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.stats.current_bytes > self.budget_bytes
+            && self.entries.len() > 1
+        {
+            // evict the least-recently-used entry
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, last))| *last)
+                .map(|(h, _)| *h);
+            let Some(h) = victim else { break };
+            if let Some((e, _)) = self.entries.remove(&h) {
+                self.stats.current_bytes -= e.bytes;
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.stats.current_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PrefillDocOut;
+
+    fn fake_entry(tokens: Vec<i32>, bytes_hint: usize) -> PrefillDocOut {
+        // bytes = (kv + attn + q_local) * 4; use kv only for sizing
+        PrefillDocOut {
+            kv: Tensor::zeros(&[1, 2, 1, bytes_hint / 8, 1]),
+            attn: Tensor::zeros(&[1, 1, 1, 1]),
+            q_local: Tensor::zeros(&[1, 1, 1]),
+        }
+    }
+
+    #[test]
+    fn hash_is_content_based() {
+        assert_eq!(doc_hash(&[1, 2, 3]), doc_hash(&[1, 2, 3]));
+        assert_ne!(doc_hash(&[1, 2, 3]), doc_hash(&[1, 2, 4]));
+        assert_ne!(doc_hash(&[1, 2]), doc_hash(&[2, 1]));
+    }
+
+    #[test]
+    fn insert_and_contains() {
+        let mut s = CacheStore::unbounded();
+        s.insert(vec![1, 2, 3], fake_entry(vec![1, 2, 3], 64));
+        assert!(s.contains(&[1, 2, 3]));
+        assert!(!s.contains(&[9, 9]));
+        assert_eq!(s.len(), 1);
+        assert!(s.stats().current_bytes > 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        // each entry: kv 32 elems (128B) + attn 4B + q_local 4B = 136B
+        let mut s = CacheStore::new(300);
+        s.insert(vec![1], fake_entry(vec![1], 128));
+        s.insert(vec![2], fake_entry(vec![2], 128));
+        assert_eq!(s.len(), 2);
+        s.insert(vec![3], fake_entry(vec![3], 128));
+        assert!(s.stats().evictions >= 1);
+        assert!(s.stats().current_bytes <= 300);
+        // entry 1 was the LRU victim
+        assert!(!s.contains(&[1]));
+        assert!(s.contains(&[3]));
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut s = CacheStore::unbounded();
+        s.insert(vec![1], fake_entry(vec![1], 128));
+        let p1 = s.stats().peak_bytes;
+        s.insert(vec![2], fake_entry(vec![2], 128));
+        assert!(s.stats().peak_bytes > p1);
+        s.clear();
+        assert_eq!(s.stats().current_bytes, 0);
+        assert!(s.stats().peak_bytes > p1);
+    }
+}

@@ -1,0 +1,48 @@
+//! # SamKV — sparse attention across multiple-context KV cache
+//!
+//! Rust implementation of the AAAI 2026 paper's serving system: a
+//! coordinator that manages independently-prefilled per-document KV
+//! caches, sparsifies them with personalized per-document query vectors
+//! (Eq. 1), anchor-based dynamic Top-P selection (Eq. 2/3), and locally
+//! recomputes the sparsified tokens with cross-layer alignment (Fig. 5)
+//! and overwrite/fusion write-back (Eq. 4).
+//!
+//! Compute runs in AOT-compiled XLA artifacts (JAX + Pallas, lowered at
+//! build time to HLO text) executed through the PJRT C API — Python is
+//! never on the request path. See `DESIGN.md` for the architecture and
+//! the per-table/figure experiment index.
+//!
+//! Module groups:
+//! * substrates — [`json`], [`tensor`], [`rng`], [`cli`], [`logging`],
+//!   [`exec`], [`bench`] (the offline image ships no serde/clap/tokio/
+//!   criterion, so these are built from scratch);
+//! * runtime — [`runtime`] (PJRT), [`model`] (entry-point wrappers);
+//! * paper core — [`kvcache`], [`attention`], [`sparse`], [`policies`];
+//! * serving — [`coordinator`], [`server`], [`metrics`], [`eval`],
+//!   [`workload`], [`tokenizer`], [`config`].
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod exec;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod tensor;
+pub mod tokenizer;
+
+pub mod model;
+pub mod runtime;
+pub mod workload;
+
+pub mod attention;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod policies;
+pub mod server;
+pub mod sparse;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,193 @@
+//! `samkv` — leader binary: serving, evaluation, and every paper
+//! experiment behind subcommands.
+//!
+//! ```text
+//! samkv info                               # manifest / profile summary
+//! samkv eval    --profile s4 --dataset hotpot-sim --policy all --samples 50
+//! samkv serve   --profile s4 --port 7070 --engines 1 --policy SamKV-fusion
+//! samkv table1  --profile s4 --samples 30       (also: fig1, table3,
+//!               table4, fig7, fig8, throughput)
+//! samkv analyze --profile s4                    # Fig.7 + Fig.8 dump
+//! ```
+
+use std::sync::Arc;
+
+use samkv::bench::experiments as exp;
+use samkv::cli::Args;
+use samkv::config::ServingConfig;
+use samkv::coordinator::Engine;
+use samkv::eval::evaluate;
+use samkv::metrics::Metrics;
+use samkv::policies::{all_policies, policy_by_name};
+use samkv::runtime::artifacts_dir;
+use samkv::server::Server;
+use samkv::{info, logging};
+
+fn main() {
+    let args = Args::parse_env();
+    logging::set_level(logging::level_from_str(
+        &args.get_str("log", "info")));
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
+    let profile = args.get_str("profile", "s4");
+    let samples = args.get::<usize>("samples", 50);
+    match cmd {
+        "info" => info_cmd(),
+        "eval" => eval_cmd(args, &profile, samples),
+        "serve" => serve_cmd(args, &profile),
+        "table1" => {
+            let m = exp::load_model(&profile)?;
+            let ds = exp::load_dataset(
+                &m, &args.get_str("dataset", "hotpot-sim"))?;
+            exp::table1(&m, &ds, samples)?;
+            Ok(())
+        }
+        "fig1" => {
+            let m = exp::load_model(&profile)?;
+            let ds = exp::load_dataset(
+                &m, &args.get_str("dataset", "hotpot-sim"))?;
+            exp::fig1(&m, &ds, samples)?;
+            Ok(())
+        }
+        "table3" => {
+            let m = exp::load_model(&profile)?;
+            exp::table3(&m, samples)?;
+            Ok(())
+        }
+        "table4" => {
+            let m = exp::load_model(&profile)?;
+            exp::table4(&m, samples)?;
+            Ok(())
+        }
+        "fig7" => {
+            let m = exp::load_model(&profile)?;
+            let ds = exp::load_dataset(
+                &m, &args.get_str("dataset", "hotpot-sim"))?;
+            exp::fig7(&m, &ds, args.get::<usize>("docs", 16))?;
+            Ok(())
+        }
+        "fig8" => {
+            let m = exp::load_model(&profile)?;
+            exp::fig8(&m, args.get::<usize>("docs", 16))?;
+            Ok(())
+        }
+        "analyze" => {
+            let m = exp::load_model(&profile)?;
+            let ds = exp::load_dataset(
+                &m, &args.get_str("dataset", "hotpot-sim"))?;
+            exp::fig7(&m, &ds, args.get::<usize>("docs", 16))?;
+            exp::fig8(&m, args.get::<usize>("docs", 16))?;
+            Ok(())
+        }
+        "throughput" => {
+            exp::throughput(
+                &profile,
+                &args.get_str("policy", "SamKV-fusion"),
+                args.get::<usize>("requests", 64),
+                args.get::<usize>("unique", 8),
+            )?;
+            Ok(())
+        }
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "samkv — sparse attention across multiple-context KV cache\n\n\
+         subcommands:\n  \
+         info                          manifest summary\n  \
+         eval --profile P --dataset D --policy NAME|all --samples N\n  \
+         serve --profile P --port N --engines N --policy NAME\n  \
+         table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
+         throughput --policy NAME --requests N --unique N\n  \
+         analyze --profile P           Fig.7 + Fig.8 analytics"
+    );
+}
+
+fn info_cmd() -> samkv::Result<()> {
+    let dir = artifacts_dir();
+    let manifest = samkv::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for (name, p) in &manifest.profiles {
+        println!(
+            "profile {name}: {} layers, d={}, {} heads x {}, docs {}x{}, \
+             block {}, sparse buffer {}, entrypoints: {}",
+            p.config.n_layers, p.config.d_model, p.config.n_heads,
+            p.config.head_dim, p.config.n_docs, p.config.doc_len,
+            p.config.block_size, p.config.sparse_len,
+            p.entrypoints.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+        for (ds, path) in &p.datasets {
+            println!("  dataset {ds}: {path}");
+        }
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args, profile: &str, samples: usize)
+            -> samkv::Result<()> {
+    let model = exp::load_model(profile)?;
+    let ds = exp::load_dataset(&model,
+                               &args.get_str("dataset", "hotpot-sim"))?;
+    let which = args.get_str("policy", "all");
+    let policies = if which == "all" {
+        all_policies()
+    } else {
+        vec![policy_by_name(&which)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy `{which}`"))?]
+    };
+    let mut tbl = samkv::bench::Table::new(&[
+        "policy", "F1", "EM", "TTFT", "seq%", "rec%", "KV KiB",
+    ]);
+    for p in policies {
+        let r = evaluate(&model, p.as_ref(), &ds, samples)?;
+        tbl.row(vec![
+            r.policy.clone(),
+            format!("{:.2}", r.f1),
+            format!("{:.2}", r.em),
+            samkv::bench::ms(r.mean_ttft_ms),
+            format!("{:.1}", 100.0 * r.mean_seq_ratio),
+            format!("{:.1}", 100.0 * r.mean_recompute_ratio),
+            format!("{:.0}", r.mean_kv_bytes / 1024.0),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
+    let port = args.get::<u16>("port", 7070);
+    let n_engines = args.get::<usize>("engines", 1);
+    let policy = args.get_str("policy", "SamKV-fusion");
+    let metrics = Arc::new(Metrics::new());
+    let cfg = ServingConfig {
+        profile: profile.to_string(),
+        port,
+        ..ServingConfig::default()
+    };
+    info!("spawning {n_engines} engine(s), profile {profile}, default \
+           policy {policy}");
+    let engines: Vec<Engine> = (0..n_engines)
+        .map(|i| {
+            Engine::spawn(i, artifacts_dir(), cfg.clone(), policy.clone(),
+                          Arc::clone(&metrics))
+        })
+        .collect::<samkv::Result<_>>()?;
+    let handles = engines.iter().map(|e| e.handle()).collect();
+    let server = Server::new(handles, metrics);
+    server.run(&format!("127.0.0.1:{port}"), |p| {
+        info!("listening on 127.0.0.1:{p}");
+        println!("READY {p}");
+    })?;
+    Ok(())
+}

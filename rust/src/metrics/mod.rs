@@ -1,0 +1,199 @@
+//! Serving metrics: latency histograms, throughput counters, memory
+//! gauges. Thread-safe; the server and coordinator share one registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log-bucketed latency histogram (microsecond granularity, buckets
+/// doubling from 100us to ~400s).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+const N_BUCKETS: usize = 23;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(us: u64) -> usize {
+        // bucket i covers [100 * 2^i, 100 * 2^(i+1)) microseconds
+        let mut b = 0usize;
+        let mut edge = 100u64;
+        while us >= edge * 2 && b + 1 < N_BUCKETS {
+            edge *= 2;
+            b += 1;
+        }
+        b
+    }
+
+    pub fn observe_ms(&self, ms: f64) {
+        let us = (ms * 1e3).max(0.0) as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e3
+        }
+    }
+
+    /// Approximate percentile from bucket upper edges.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0u64;
+        let mut edge = 100u64;
+        for b in &self.buckets {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return edge as f64 * 2.0 / 1e3; // bucket upper edge, ms
+            }
+            edge *= 2;
+        }
+        edge as f64 / 1e3
+    }
+}
+
+/// Registry shared across the serving stack.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+    pub decode: Histogram,
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub kv_bytes_gauge: AtomicU64,
+    started: Mutex<Option<Instant>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let m = Metrics::default();
+        *m.started.lock().unwrap() = Some(Instant::now());
+        m
+    }
+
+    pub fn record_completion(&self, ttft_ms: f64, decode_ms: f64,
+                             tokens: usize, kv_bytes: usize) {
+        self.ttft.observe_ms(ttft_ms);
+        self.decode.observe_ms(decode_ms);
+        self.e2e.observe_ms(ttft_ms + decode_ms);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated
+            .fetch_add(tokens as u64, Ordering::Relaxed);
+        self.kv_bytes_gauge
+            .store(kv_bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Completed requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        let up = self.uptime_s();
+        if up <= 0.0 {
+            0.0
+        } else {
+            self.completed.load(Ordering::Relaxed) as f64 / up
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} completed={} rejected={} tokens={} \
+             ttft(mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms) \
+             e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.ttft.mean_ms(),
+            self.ttft.percentile_ms(0.50),
+            self.ttft.percentile_ms(0.95),
+            self.ttft.percentile_ms(0.99),
+            self.e2e.mean_ms(),
+            self.e2e.percentile_ms(0.95),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let h = Histogram::default();
+        for ms in [1.0, 2.0, 3.0] {
+            h.observe_ms(ms);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_ms() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let h = Histogram::default();
+        for i in 0..1000 {
+            h.observe_ms(i as f64 / 10.0);
+        }
+        let p50 = h.percentile_ms(0.50);
+        let p95 = h.percentile_ms(0.95);
+        let p99 = h.percentile_ms(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 > 10.0 && p99 <= 400.0);
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record_completion(10.0, 5.0, 3, 1024);
+        m.record_completion(20.0, 5.0, 2, 2048);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 5);
+        assert!((m.ttft.mean_ms() - 15.0).abs() < 0.1);
+        assert!(m.report().contains("completed=2"));
+    }
+
+    #[test]
+    fn bucket_mapping_sane() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(150), 0);
+        assert_eq!(Histogram::bucket_of(200), 1);
+        assert_eq!(Histogram::bucket_of(100_000), 9);
+        assert_eq!(Histogram::bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+}

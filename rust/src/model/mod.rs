@@ -1,0 +1,279 @@
+//! Typed wrappers over the AOT entry points of one model variant.
+//!
+//! A [`Model`] owns the device-ready weight literals and exposes the six
+//! serving calls with host-tensor signatures. All heavy compute happens
+//! inside the artifacts; this layer only validates shapes and converts
+//! buffers.
+
+pub mod weights;
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ProfileConfig;
+use crate::runtime::{literal_to_tensor, Input, Runtime};
+use crate::tensor::{ITensor, Tensor};
+use weights::Weights;
+
+/// Output of the per-document prefill.
+#[derive(Debug, Clone)]
+pub struct PrefillDocOut {
+    /// `[L, 2, H, Ld, Dh]` — the document's KV cache (local positions).
+    pub kv: Tensor,
+    /// `[L, H, Ld, Ld]` — attention probabilities (Appendix-A input).
+    pub attn: Tensor,
+    /// `[L, H, Dh]` — mean post-RoPE Q over the local window (Eq. 1).
+    pub q_local: Tensor,
+}
+
+/// Output of the user-query incremental prefill (§3.1).
+#[derive(Debug, Clone)]
+pub struct QueryEmbedOut {
+    /// `[L, H, Dh]` — the generic query vector `Q_que`.
+    pub q_que: Tensor,
+    /// `[L, 2, H, Lq, Dh]` — the query tokens' own KV.
+    pub q_kv: Tensor,
+}
+
+/// Output of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    /// `[L, H, Dh]` — K/V of the decoded token (host mirrors the write).
+    pub k_new: Tensor,
+    pub v_new: Tensor,
+}
+
+/// Which decode/recompute buffer geometry a call targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Buffer {
+    /// Sparse assembled buffer (`sparse_len` slots) — SamKV/Multi-InfLLM.
+    Sparse,
+    /// Full joint buffer (`full_len` slots) — Recompute/CacheBlend/EPIC.
+    Full,
+}
+
+pub struct Model {
+    pub name: String,
+    pub cfg: ProfileConfig,
+    runtime: Rc<Runtime>,
+    weight_lits: Vec<xla::Literal>,
+    pub n_params: usize,
+}
+
+impl Model {
+    /// Load a profile's weights and bind it to a runtime.
+    pub fn load(runtime: Rc<Runtime>, profile: &str) -> Result<Model> {
+        let meta = runtime.manifest().profile(profile)?.clone();
+        let wpath = runtime.manifest().path(&meta.weights_file);
+        let w = Weights::load(&wpath)?;
+        if w.profile != profile {
+            bail!("weights file is for `{}`, wanted `{profile}`", w.profile);
+        }
+        if w.arrays.len() != meta.n_weight_arrays {
+            bail!("weights count {} != manifest {}", w.arrays.len(),
+                  meta.n_weight_arrays);
+        }
+        let weight_lits = w
+            .arrays
+            .iter()
+            .map(|a| crate::runtime::tensor_to_literal(&a.tensor))
+            .collect::<Result<Vec<_>>>()?;
+        let n_params = w.total_params();
+        Ok(Model {
+            name: profile.to_string(),
+            cfg: meta.config,
+            runtime,
+            weight_lits,
+            n_params,
+        })
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+
+    /// Pre-compile the entry points used on the serving path.
+    pub fn warmup(&self) -> Result<()> {
+        self.runtime.warmup(
+            &self.name,
+            &[
+                "prefill_doc",
+                "query_embed",
+                "recompute",
+                "decode_sparse",
+                "score_blocks",
+            ],
+        )
+    }
+
+    fn exec(&self, entry: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        self.runtime
+            .execute(&self.name, entry, &self.weight_lits, inputs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect()
+    }
+
+    /// Independent per-document prefill (positions `pos_offset..+Ld`).
+    pub fn prefill_doc(&self, tokens: &[i32], pos_offset: i32)
+                       -> Result<PrefillDocOut> {
+        if tokens.len() != self.cfg.doc_len {
+            bail!("prefill_doc wants {} tokens, got {}", self.cfg.doc_len,
+                  tokens.len());
+        }
+        let mut outs = self.exec(
+            "prefill_doc",
+            &[ITensor::from_vec(tokens.to_vec()).into(),
+              Input::from(pos_offset)],
+        )?;
+        let q_local = outs.pop().unwrap();
+        let attn = outs.pop().unwrap();
+        let kv = outs.pop().unwrap();
+        Ok(PrefillDocOut { kv, attn, q_local })
+    }
+
+    /// Joint causal prefill over the padded full sequence.
+    pub fn prefill_full(&self, tokens: &[i32], valid: &[f32])
+                        -> Result<Tensor> {
+        if tokens.len() != self.cfg.full_len {
+            bail!("prefill_full wants {} tokens, got {}", self.cfg.full_len,
+                  tokens.len());
+        }
+        let mut outs = self.exec(
+            "prefill_full",
+            &[ITensor::from_vec(tokens.to_vec()).into(),
+              Tensor::new(vec![valid.len()], valid.to_vec())?.into()],
+        )?;
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Incremental prefill of the user query over the compressed cache.
+    pub fn query_embed(&self, q_tokens: &[i32], comp_kv: Tensor,
+                       comp_valid: &[f32], q_pos: &[i32])
+                       -> Result<QueryEmbedOut> {
+        let mut outs = self.exec(
+            "query_embed",
+            &[ITensor::from_vec(q_tokens.to_vec()).into(),
+              comp_kv.into(),
+              Tensor::new(vec![comp_valid.len()], comp_valid.to_vec())?
+                  .into(),
+              ITensor::from_vec(q_pos.to_vec()).into()],
+        )?;
+        let q_kv = outs.pop().unwrap();
+        let q_que = outs.pop().unwrap();
+        Ok(QueryEmbedOut { q_que, q_kv })
+    }
+
+    /// Fig.-5 partial recomputation over a sparse/full buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recompute(&self, buffer: Buffer, tokens: &[i32],
+                     positions: &[i32], kv_in: &Tensor, rec_mask: Tensor,
+                     valid: &[f32]) -> Result<Tensor> {
+        let entry = match buffer {
+            Buffer::Sparse => "recompute",
+            Buffer::Full => "recompute_full",
+        };
+        let want = match buffer {
+            Buffer::Sparse => self.cfg.sparse_len,
+            Buffer::Full => self.cfg.full_len,
+        };
+        if tokens.len() != want {
+            bail!("{entry} wants {want} slots, got {}", tokens.len());
+        }
+        // hot path: literals built directly, KV borrowed (no host clone)
+        let lits = vec![
+            crate::runtime::itensor_to_literal(
+                &ITensor::from_vec(tokens.to_vec()))?,
+            crate::runtime::itensor_to_literal(
+                &ITensor::from_vec(positions.to_vec()))?,
+            crate::runtime::tensor_to_literal(kv_in)?,
+            crate::runtime::tensor_to_literal(&rec_mask)?,
+            crate::runtime::tensor_to_literal(
+                &Tensor::new(vec![valid.len()], valid.to_vec())?)?,
+        ];
+        let mut refs: Vec<&xla::Literal> =
+            self.weight_lits.iter().collect();
+        refs.extend(lits.iter());
+        let mut outs = self
+            .runtime
+            .execute_literals(&self.name, entry, &refs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(outs.pop().unwrap())
+    }
+
+    /// One decode step over the assembled cache; the token's KV is placed
+    /// in `slot` (the caller mirrors it into its host buffer).
+    pub fn decode(&self, buffer: Buffer, token: i32, pos: i32, slot: i32,
+                  kv: &Tensor, kv_valid: &[f32]) -> Result<DecodeOut> {
+        let entry = match buffer {
+            Buffer::Sparse => "decode_sparse",
+            Buffer::Full => "decode_full",
+        };
+        // hot path: borrow the KV buffer; build literals directly
+        let lits = vec![
+            xla::Literal::scalar(token),
+            xla::Literal::scalar(pos),
+            xla::Literal::scalar(slot),
+            crate::runtime::tensor_to_literal(kv)?,
+            crate::runtime::tensor_to_literal(
+                &Tensor::new(vec![kv_valid.len()], kv_valid.to_vec())?)?,
+        ];
+        let mut refs: Vec<&xla::Literal> =
+            self.weight_lits.iter().collect();
+        refs.extend(lits.iter());
+        let mut outs = self
+            .runtime
+            .execute_literals(&self.name, entry, &refs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().into_data();
+        Ok(DecodeOut { logits, k_new, v_new })
+    }
+
+    /// Offloaded block scoring (L1 Pallas kernel; weight-free artifact).
+    pub fn score_blocks(&self, q_hat: Tensor, k_cache: Tensor,
+                        valid: &[f32]) -> Result<Tensor> {
+        let mut outs = self
+            .runtime
+            .execute(
+                &self.name,
+                "score_blocks",
+                &[],
+                &[q_hat.into(), k_cache.into(),
+                  Tensor::new(vec![valid.len()], valid.to_vec())?.into()],
+            )?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(outs.pop().unwrap())
+    }
+
+    /// Greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(Model::argmax(&[0.1, 3.0, -2.0, 3.0]), 1);
+        assert_eq!(Model::argmax(&[-5.0]), 0);
+    }
+}

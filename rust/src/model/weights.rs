@@ -1,0 +1,133 @@
+//! Weights file loader — format shared with `python/compile/train.py`:
+//! `SAMKVW01` magic, little-endian u32 header length, JSON header
+//! (`{"profile": ..., "arrays": [{"name", "shape"}, ...]}`), then the
+//! concatenated little-endian f32 payloads.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::json;
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 8] = b"SAMKVW01";
+
+#[derive(Debug, Clone)]
+pub struct NamedTensor {
+    pub name: String,
+    pub tensor: Tensor,
+}
+
+/// Parsed weights file.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub profile: String,
+    pub arrays: Vec<NamedTensor>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Weights> {
+        let bytes = std::fs::read(path.as_ref()).with_context(|| {
+            format!("reading weights {}", path.as_ref().display())
+        })?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Weights> {
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            bail!("bad weights magic");
+        }
+        let hlen =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header_end = 12 + hlen;
+        if bytes.len() < header_end {
+            bail!("truncated weights header");
+        }
+        let header = json::parse(
+            std::str::from_utf8(&bytes[12..header_end])
+                .context("weights header utf8")?,
+        )?;
+        let profile = header
+            .req("profile")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("bad profile"))?
+            .to_string();
+        let mut arrays = Vec::new();
+        let mut off = header_end;
+        for spec in header
+            .req("arrays")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("arrays not a list"))?
+        {
+            let name = spec
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("bad array name"))?
+                .to_string();
+            let shape = spec
+                .req("shape")?
+                .usize_vec()
+                .ok_or_else(|| anyhow::anyhow!("bad array shape"))?;
+            let n: usize = shape.iter().product();
+            let end = off + 4 * n;
+            if bytes.len() < end {
+                bail!("truncated weights payload for `{name}`");
+            }
+            let data: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            arrays.push(NamedTensor { name, tensor: Tensor::new(shape, data)? });
+            off = end;
+        }
+        if off != bytes.len() {
+            bail!("trailing bytes in weights file ({} extra)",
+                  bytes.len() - off);
+        }
+        Ok(Weights { profile, arrays })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.arrays.iter().map(|a| a.tensor.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let header = r#"{"profile":"tiny","arrays":[
+            {"name":"a","shape":[2,2]},{"name":"b","shape":[3]}]}"#;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_sample() {
+        let w = Weights::from_bytes(&sample_bytes()).unwrap();
+        assert_eq!(w.profile, "tiny");
+        assert_eq!(w.arrays.len(), 2);
+        assert_eq!(w.arrays[0].name, "a");
+        assert_eq!(w.arrays[0].tensor.shape(), &[2, 2]);
+        assert_eq!(w.arrays[1].tensor.data(), &[5.0, 6.0, 7.0]);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let good = sample_bytes();
+        assert!(Weights::from_bytes(&good[..good.len() - 1]).is_err());
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(Weights::from_bytes(&bad_magic).is_err());
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0u8; 4]);
+        assert!(Weights::from_bytes(&trailing).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Shared serving steps: incremental query prefill (token-by-token
+//! decode at global positions) and greedy answer decoding over an
+//! assembled buffer.
+
+use anyhow::Result;
+
+use crate::config::ProfileConfig;
+use crate::kvcache::AssembledContext;
+use crate::model::{Buffer, Model};
+use crate::tokenizer as tok;
+use crate::workload::Sample;
+
+/// Feed the user query incrementally over the assembled cache, then
+/// greedily decode up to `answer_max` tokens (stopping at EOS).
+///
+/// The query occupies global positions `ctx_len .. ctx_len+Lq` (the
+/// joint-training layout) regardless of how sparse the document KV is —
+/// §3.3: "we re-perform an incremental prefill of the user query based
+/// on KV_docs_new and then infer the answer".
+///
+/// Returns `(answer, first_token_extra_ms)` where the extra time is the
+/// query-prefill part of TTFT that this helper performed.
+pub fn query_and_decode(model: &Model, cfg: &ProfileConfig,
+                        ctx: &mut AssembledContext, buffer: Buffer,
+                        sample: &Sample) -> Result<Vec<i32>> {
+    let q0 = cfg.ctx_len as i32;
+    let mut logits: Option<Vec<f32>> = None;
+    for (i, &t) in sample.query.iter().enumerate() {
+        let out = step(model, cfg, ctx, buffer, t, q0 + i as i32)?;
+        logits = Some(out);
+    }
+    // greedy answer loop
+    let mut answer = Vec::new();
+    let mut pos = q0 + cfg.query_len as i32;
+    let mut cur = Model::argmax(&logits.expect("query fed"));
+    for _ in 0..cfg.answer_max {
+        if cur == tok::EOS {
+            break;
+        }
+        answer.push(cur);
+        if answer.len() >= cfg.answer_max {
+            break;
+        }
+        let out = step(model, cfg, ctx, buffer, cur, pos)?;
+        cur = Model::argmax(&out);
+        pos += 1;
+    }
+    Ok(answer)
+}
+
+/// One decode step: reserve a slot, run the artifact, mirror the KV.
+fn step(model: &Model, _cfg: &ProfileConfig, ctx: &mut AssembledContext,
+        buffer: Buffer, token: i32, position: i32) -> Result<Vec<f32>> {
+    let slot = ctx.push_token(token, position)?;
+    let out = model.decode(buffer, token, position, slot as i32,
+                           &ctx.kv, &ctx.valid)?;
+    ctx.write_token_kv(slot, &out.k_new, &out.v_new);
+    Ok(out.logits)
+}
+
+/// Convenience for tests/benches: run a policy and return just the
+/// answer.
+pub fn answer_of(policy: &dyn super::ContextPolicy, model: &Model,
+                 store: &mut crate::kvcache::CacheStore,
+                 sample: &Sample) -> Result<Vec<i32>> {
+    Ok(policy.run(model, store, sample)?.answer)
+}

@@ -1,0 +1,95 @@
+//! Context-cache policies: the paper's SamKV plus all evaluated
+//! baselines, behind one [`ContextPolicy`] trait so the coordinator,
+//! eval harness, and benches treat them uniformly.
+//!
+//! | policy | sparse? | recompute? | KV loaded | paper row |
+//! |--------|---------|------------|-----------|-----------|
+//! | [`RecomputePolicy`] | n/a | full joint prefill | 100% | "Recompute" |
+//! | [`ReusePolicy`] | no | none | 100% | "Reuse" |
+//! | [`MultiInfLlmPolicy`] | yes (concat view) | none | ~15% | "Multi-InfLLM" |
+//! | [`CacheBlendPolicy`] | no | ~15% of tokens | 100% | "CacheBlend" |
+//! | [`EpicPolicy`] | no | init+local tokens | 100% | "EPIC" |
+//! | [`SamKvPolicy`] | yes (Eq. 1-3) | sparse subset (Fig. 5) | ~15% | "SamKV-overwrite/-fusion" |
+
+pub mod cacheblend;
+pub mod common;
+pub mod epic;
+pub mod multi_infllm;
+pub mod recompute;
+pub mod reuse;
+pub mod samkv;
+
+pub use cacheblend::CacheBlendPolicy;
+pub use epic::EpicPolicy;
+pub use multi_infllm::MultiInfLlmPolicy;
+pub use recompute::RecomputePolicy;
+pub use reuse::ReusePolicy;
+pub use samkv::SamKvPolicy;
+
+use crate::kvcache::CacheStore;
+use crate::model::Model;
+use crate::workload::Sample;
+
+/// Measurements for one request (feeds Table 1, Fig. 1, Table 3/4).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Time to first generated token, excluding cached doc prefill.
+    pub ttft_ms: f64,
+    /// Remaining decode time.
+    pub decode_ms: f64,
+    /// Fraction of the joint context KV held on the "device" during
+    /// inference (Table 1 "sequence ratio").
+    pub seq_ratio: f64,
+    /// Fraction of context tokens recomputed (Table 1 "recomputation
+    /// ratio").
+    pub recompute_ratio: f64,
+    /// Bytes of context KV loaded for this request (Fig. 1 circles).
+    pub kv_bytes: usize,
+    /// Whether every document KV was already cached (warm TTFT).
+    pub cache_warm: bool,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct PolicyOutput {
+    pub answer: Vec<i32>,
+    pub stats: RunStats,
+}
+
+/// A multi-context KV cache serving policy.
+pub trait ContextPolicy {
+    /// Display name (matches the paper's tables).
+    fn name(&self) -> String;
+
+    /// Whether the policy consumes precomputed per-document caches
+    /// (false only for full recomputation).
+    fn uses_doc_cache(&self) -> bool {
+        true
+    }
+
+    /// Serve one request: produce the answer tokens + measurements.
+    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
+           -> crate::Result<PolicyOutput>;
+}
+
+/// Instantiate every paper policy (Table 3 row order).
+pub fn all_policies() -> Vec<Box<dyn ContextPolicy>> {
+    use crate::config::{SamKvConfig, UpdateStrategy};
+    vec![
+        Box::new(RecomputePolicy),
+        Box::new(ReusePolicy),
+        Box::new(MultiInfLlmPolicy),
+        Box::new(CacheBlendPolicy::default()),
+        Box::new(EpicPolicy::default()),
+        Box::new(SamKvPolicy::new(SamKvConfig {
+            update: UpdateStrategy::Overwrite,
+            ..SamKvConfig::default()
+        })),
+        Box::new(SamKvPolicy::new(SamKvConfig::default())), // fusion
+    ]
+}
+
+/// Look a policy up by its table name.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn ContextPolicy>> {
+    all_policies().into_iter().find(|p| p.name() == name)
+}

@@ -1,0 +1,88 @@
+//! "Recompute" baseline: full joint causal prefill of documents + query
+//! (maximum quality, maximum TTFT, 100% KV).
+
+use std::time::Instant;
+
+use crate::kvcache::{AssembledContext, CacheStore};
+use crate::model::{Buffer, Model};
+use crate::workload::{assemble_full, Sample};
+
+use super::{ContextPolicy, PolicyOutput, RunStats};
+
+pub struct RecomputePolicy;
+
+impl ContextPolicy for RecomputePolicy {
+    fn name(&self) -> String {
+        "Recompute".to_string()
+    }
+
+    fn uses_doc_cache(&self) -> bool {
+        false
+    }
+
+    fn run(&self, model: &Model, _store: &mut CacheStore, sample: &Sample)
+           -> crate::Result<PolicyOutput> {
+        let cfg = model.cfg.clone();
+        let t0 = Instant::now();
+        let (tokens, valid, ans_start) = assemble_full(sample, &cfg);
+        let kv = model.prefill_full(&tokens, &valid)?;
+
+        // wrap the joint KV in an assembled context for the decode loop
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
+        ctx.replace_kv(kv)?;
+        ctx.tokens[..ans_start].copy_from_slice(&tokens[..ans_start]);
+        for (i, p) in ctx.positions.iter_mut().enumerate() {
+            *p = i as i32;
+        }
+        // query included in the prefill: only slots < ans_start are live
+        for s in 0..ans_start {
+            ctx.valid[s] = 1.0;
+        }
+        ctx.cursor = ans_start;
+        ctx.kv_len = cfg.ctx_len;
+
+        // first answer token: re-decode the final query token (ANS) to
+        // obtain its logits (its KV is recomputed identically in-place)
+        let last = ans_start - 1;
+        ctx.valid[last] = 0.0; // the decode step re-inserts this slot
+        ctx.cursor = last;
+        let _ = ctx.push_token(tokens[last], last as i32)?;
+        let out = model.decode(Buffer::Full, tokens[last], last as i32,
+                               last as i32, &ctx.kv, &ctx.valid)?;
+        ctx.write_token_kv(last, &out.k_new, &out.v_new);
+        let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // greedy decode from these logits
+        let td = Instant::now();
+        let mut answer = Vec::new();
+        let mut cur = Model::argmax(&out.logits);
+        let mut pos = ans_start as i32;
+        for _ in 0..cfg.answer_max {
+            if cur == crate::tokenizer::EOS {
+                break;
+            }
+            answer.push(cur);
+            if answer.len() >= cfg.answer_max {
+                break;
+            }
+            let slot = ctx.push_token(cur, pos)?;
+            let step = model.decode(Buffer::Full, cur, pos, slot as i32,
+                                    &ctx.kv, &ctx.valid)?;
+            ctx.write_token_kv(slot, &step.k_new, &step.v_new);
+            cur = Model::argmax(&step.logits);
+            pos += 1;
+        }
+
+        Ok(PolicyOutput {
+            answer,
+            stats: RunStats {
+                ttft_ms,
+                decode_ms: td.elapsed().as_secs_f64() * 1e3,
+                seq_ratio: 1.0,
+                recompute_ratio: 1.0,
+                kv_bytes: cfg.ctx_len * cfg.kv_bytes_per_token(),
+                cache_warm: false,
+            },
+        })
+    }
+}

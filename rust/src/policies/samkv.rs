@@ -1,0 +1,222 @@
+//! SamKV (§3): sparse attention across the multiple-context KV cache.
+//!
+//! Pipeline per request (documents assumed cached — the RAG premise):
+//! 1. build the compressed cache (init+local blocks of every doc) and
+//!    run the query's incremental prefill over it → `Q_que` (§3.1);
+//! 2. personalize per document with the other docs' local Q caches
+//!    (Eq. 1);
+//! 3. analyze each doc's attention map (A.1) and score its blocks with
+//!    Q̂ (host-side or the offloaded L1 `score_blocks` artifact);
+//! 4. dynamic Top-P per stable layer (Eq. 2), averaged (Eq. 3), then
+//!    cross-context filter (§3.2 last step);
+//! 5. assemble the sparse buffer (init + selected + local per doc, in
+//!    document order at *global* positions);
+//! 6. recompute init/local + PauTa-outlier tokens with the Fig.-5
+//!    layer-aligned plan; write back by overwrite or fusion (Eq. 4);
+//! 7. incremental query prefill over the new cache + greedy decode.
+//!
+//! Every ablation axis of Table 4 (selection / personalized bias /
+//! recomputation, overwrite vs fusion) is a [`SamKvConfig`] switch.
+
+use std::time::Instant;
+
+use crate::attention::{analyze_doc, BlockAttention};
+use crate::config::{ProfileConfig, SamKvConfig, UpdateStrategy};
+use crate::kvcache::{AssembledContext, CacheStore, DocEntry, SlotKind};
+use crate::model::{Buffer, Model};
+use crate::sparse::{
+    block_scores_host, build_recompute_plan, cross_filter,
+    personalized_queries, topp_select, write_back,
+};
+use crate::tensor::Tensor;
+use crate::workload::Sample;
+
+use super::common::query_and_decode;
+use super::{ContextPolicy, PolicyOutput, RunStats};
+
+pub struct SamKvPolicy {
+    pub cfg: SamKvConfig,
+}
+
+impl SamKvPolicy {
+    pub fn new(cfg: SamKvConfig) -> SamKvPolicy {
+        SamKvPolicy { cfg }
+    }
+}
+
+/// Concatenate every document's init+local blocks into the compressed
+/// cache fed to `query_embed` (§3.1 "composite Cache unit").
+/// Returns `(comp_kv [L,2,H,Lc,Dh], comp_valid [Lc])`.
+pub fn build_compressed_cache(cfg: &ProfileConfig,
+                              entries: &[std::rc::Rc<DocEntry>])
+                              -> (Tensor, Vec<f32>) {
+    let bs = cfg.block_size;
+    let lc = cfg.comp_len;
+    let mut comp = Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, lc,
+                                   cfg.head_dim]);
+    let mut cursor = 0usize;
+    for e in entries.iter() {
+        let mut blocks: Vec<usize> = (0..cfg.init_blocks).collect();
+        blocks.extend(
+            cfg.blocks_per_doc - cfg.local_blocks..cfg.blocks_per_doc,
+        );
+        for b in blocks {
+            for l in 0..cfg.n_layers {
+                for c in 0..2 {
+                    for h in 0..cfg.n_heads {
+                        let src = e.kv.slice_at(&[l, c, h]);
+                        let dst = comp.slice_at_mut(&[l, c, h]);
+                        let d = cfg.head_dim;
+                        dst[cursor * d..(cursor + bs) * d].copy_from_slice(
+                            &src[b * bs * d..(b + 1) * bs * d],
+                        );
+                    }
+                }
+            }
+            cursor += bs;
+        }
+    }
+    (comp, vec![1.0; lc])
+}
+
+impl ContextPolicy for SamKvPolicy {
+    fn name(&self) -> String {
+        match self.cfg.update {
+            UpdateStrategy::Overwrite => "SamKV-overwrite".to_string(),
+            UpdateStrategy::Fusion => "SamKV-fusion".to_string(),
+        }
+    }
+
+    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
+           -> crate::Result<PolicyOutput> {
+        let cfg = model.cfg.clone();
+        let k = &self.cfg;
+        let mut warm = true;
+        let entries: Vec<_> = sample
+            .docs
+            .iter()
+            .map(|d| {
+                let (e, hit) = store.get_or_prefill(model, d)?;
+                warm &= hit;
+                Ok(e)
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+
+        // --- §3.1: generic query vector over the compressed cache -----
+        let (comp_kv, comp_valid) = build_compressed_cache(&cfg, &entries);
+        let q_pos: Vec<i32> = (0..cfg.query_len as i32)
+            .map(|i| cfg.ctx_len as i32 + i)
+            .collect();
+        let qe = model.query_embed(&sample.query, comp_kv, &comp_valid,
+                                   &q_pos)?;
+        let q_locals: Vec<&Tensor> =
+            entries.iter().map(|e| &e.q_local).collect();
+        let q_hats =
+            personalized_queries(&qe.q_que, &q_locals, k.pers_bias);
+
+        // --- A.1 analytics + §3.2 selection per document ---------------
+        let stable: Vec<usize> =
+            (cfg.stable_layer_start()..cfg.n_layers).collect();
+        let analyses: Vec<BlockAttention> = entries
+            .iter()
+            .map(|e| analyze_doc(&e.attn, &cfg, k.pauta_sigma))
+            .collect();
+        let picked_per_doc = if k.selection {
+            let mut sels = Vec::with_capacity(entries.len());
+            for (d, e) in entries.iter().enumerate() {
+                let per_layer: Vec<Vec<f32>> = if k.offload_scoring {
+                    let scores = model.score_blocks(
+                        q_hats[d].clone(),
+                        extract_k(&cfg, &e.kv),
+                        &vec![1.0; cfg.doc_len],
+                    )?;
+                    stable
+                        .iter()
+                        .map(|&l| scores.slice_at(&[l]).to_vec())
+                        .collect()
+                } else {
+                    stable
+                        .iter()
+                        .map(|&l| {
+                            block_scores_host(&q_hats[d], &e.kv, &cfg, l)
+                        })
+                        .collect()
+                };
+                sels.push(topp_select(&cfg, &per_layer, &stable,
+                                      &analyses[d]));
+            }
+            cross_filter(&cfg, &sels)
+        } else {
+            vec![Vec::new(); entries.len()]
+        };
+
+        // --- assemble the sparse buffer --------------------------------
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        for (d, e) in entries.iter().enumerate() {
+            for b in 0..cfg.init_blocks {
+                ctx.append_block(&cfg, e, d, b, SlotKind::Init)?;
+            }
+            for &b in &picked_per_doc[d] {
+                ctx.append_block(&cfg, e, d, b, SlotKind::Selected)?;
+            }
+            for b in
+                cfg.blocks_per_doc - cfg.local_blocks..cfg.blocks_per_doc
+            {
+                ctx.append_block(&cfg, e, d, b, SlotKind::Local)?;
+            }
+        }
+        let seq_ratio = ctx.seq_ratio(&cfg);
+        let kv_bytes = ctx.kv_bytes(&cfg);
+
+        // --- §3.3 recomputation with Fig.-5 planning --------------------
+        let mut recompute_ratio = 0.0;
+        if k.recompute {
+            let ba_refs: Vec<&BlockAttention> = analyses.iter().collect();
+            let plan = build_recompute_plan(&cfg, &ctx, &ba_refs, true);
+            recompute_ratio = plan.recompute_ratio;
+            let kv_new = model.recompute(Buffer::Sparse, &ctx.tokens,
+                                         &ctx.positions, &ctx.kv,
+                                         plan.mask.clone(), &ctx.valid)?;
+            let fused =
+                write_back(&cfg, &ctx.kv, kv_new, &plan.mask, k.update);
+            ctx.replace_kv(fused)?;
+        }
+        let prep_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // --- §3.3 final incremental prefill + decode --------------------
+        let td = Instant::now();
+        let answer = query_and_decode(model, &cfg, &mut ctx,
+                                      Buffer::Sparse, sample)?;
+        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
+        let frac = cfg.query_len as f64
+            / (cfg.query_len + answer.len().max(1)) as f64;
+
+        Ok(PolicyOutput {
+            answer,
+            stats: RunStats {
+                ttft_ms: prep_ms + qa_ms * frac,
+                decode_ms: qa_ms * (1.0 - frac),
+                seq_ratio,
+                recompute_ratio,
+                kv_bytes,
+                cache_warm: warm,
+            },
+        })
+    }
+}
+
+/// Pull the K half (`[L, H, Ld, Dh]`) out of a `[L, 2, H, Ld, Dh]`
+/// cache for the offloaded scoring artifact.
+fn extract_k(cfg: &ProfileConfig, kv: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[cfg.n_layers, cfg.n_heads, cfg.doc_len,
+                                  cfg.head_dim]);
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_heads {
+            out.slice_at_mut(&[l, h])
+                .copy_from_slice(kv.slice_at(&[l, 0, h]));
+        }
+    }
+    out
+}

@@ -1,0 +1,145 @@
+//! Host tensor <-> PJRT literal conversion.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{ITensor, Tensor};
+
+/// An input argument for an artifact execution.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F(Tensor),
+    I(ITensor),
+}
+
+impl From<Tensor> for Input {
+    fn from(t: Tensor) -> Self {
+        Input::F(t)
+    }
+}
+impl From<ITensor> for Input {
+    fn from(t: ITensor) -> Self {
+        Input::I(t)
+    }
+}
+impl From<i32> for Input {
+    fn from(v: i32) -> Self {
+        Input::I(ITensor::scalar(v))
+    }
+}
+impl From<f32> for Input {
+    fn from(v: f32) -> Self {
+        Input::F(Tensor::scalar(v))
+    }
+}
+
+impl Input {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Input::F(t) => t.shape(),
+            Input::I(t) => t.shape(),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F(t) => tensor_to_literal(t),
+            Input::I(t) => itensor_to_literal(t),
+        }
+    }
+}
+
+/// Raw byte view of a numeric slice (little-endian host).
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    if t.rank() == 0 {
+        return Ok(xla::Literal::scalar(t.data()[0]));
+    }
+    // single-copy path (vec1+reshape would copy twice) — §Perf L3 opt 1
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        as_bytes(t.data()),
+    )?)
+}
+
+pub fn itensor_to_literal(t: &ITensor) -> Result<xla::Literal> {
+    if t.shape().is_empty() {
+        return Ok(xla::Literal::scalar(t.data()[0]));
+    }
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        t.shape(),
+        as_bytes(t.data()),
+    )?)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Tensor::new(dims, lit.to_vec::<f32>()?)
+        }
+        other => bail!("expected f32 literal, got {:?}", other),
+    }
+}
+
+pub fn literal_to_itensor(lit: &xla::Literal) -> Result<ITensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::S32 => {
+            ITensor::new(dims, lit.to_vec::<i32>()?)
+        }
+        other => bail!("expected i32 literal, got {:?}", other),
+    }
+}
+
+/// Scalar f32 extraction (logits reductions etc. are tensors; this is for
+/// tiny outputs).
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar extract: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn itensor_roundtrip() {
+        let t = ITensor::new(vec![4], vec![1, -2, 3, -4]).unwrap();
+        let lit = itensor_to_literal(&t).unwrap();
+        let back = literal_to_itensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = Input::from(42i32).to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+        let lit = Input::from(1.5f32).to_literal().unwrap();
+        assert_eq!(literal_scalar_f32(&lit).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = ITensor::from_vec(vec![1, 2]);
+        let lit = itensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! `artifacts/manifest.json` loader — the contract between the python
+//! AOT build and the rust runtime (shapes, files, weight layout).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ProfileConfig;
+use crate::json::{self, Value};
+
+/// Element dtype of an artifact argument/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    fn from_json(v: &Value) -> Result<ArgSpec> {
+        let shape = v
+            .req("shape")?
+            .usize_vec()
+            .ok_or_else(|| anyhow!("bad shape"))?;
+        let dtype = match v.req("dtype")?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => anyhow::bail!("unsupported dtype {:?}", other),
+        };
+        Ok(ArgSpec { shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub file: String,
+    pub needs_weights: bool,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One model variant (tiny / s4 / m6).
+#[derive(Debug, Clone)]
+pub struct ProfileMeta {
+    pub config: ProfileConfig,
+    pub weights_file: String,
+    pub n_weight_arrays: usize,
+    pub entrypoints: BTreeMap<String, EntryMeta>,
+    /// dataset name -> path relative to the artifacts dir
+    pub datasets: BTreeMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profiles: BTreeMap<String, ProfileMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let mut profiles = BTreeMap::new();
+        for (name, pv) in root
+            .req("profiles")?
+            .members()
+            .ok_or_else(|| anyhow!("profiles not an object"))?
+        {
+            let config = ProfileConfig::from_json(pv.req("config")?)
+                .with_context(|| format!("profile {name} config"))?;
+            let mut entrypoints = BTreeMap::new();
+            for (ename, ev) in pv
+                .req("entrypoints")?
+                .members()
+                .ok_or_else(|| anyhow!("entrypoints not an object"))?
+            {
+                let args = ev
+                    .req("args")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("args not an array"))?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = ev
+                    .req("outputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("outputs not an array"))?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                entrypoints.insert(
+                    ename.clone(),
+                    EntryMeta {
+                        file: ev
+                            .req("file")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad file"))?
+                            .to_string(),
+                        needs_weights: ev
+                            .get("needs_weights")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(true),
+                        args,
+                        outputs,
+                    },
+                );
+            }
+            let mut datasets = BTreeMap::new();
+            if let Some(ds) = pv.get("datasets").and_then(|v| v.members()) {
+                for (dname, dpath) in ds {
+                    datasets.insert(
+                        dname.clone(),
+                        dpath
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad dataset path"))?
+                            .to_string(),
+                    );
+                }
+            }
+            profiles.insert(
+                name.clone(),
+                ProfileMeta {
+                    config,
+                    weights_file: pv
+                        .req("weights")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad weights"))?
+                        .to_string(),
+                    n_weight_arrays: pv
+                        .req("n_weight_arrays")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad n_weight_arrays"))?,
+                    entrypoints,
+                    datasets,
+                },
+            );
+        }
+        Ok(Manifest { dir, profiles })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileMeta> {
+        self.profiles
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown profile `{name}` in manifest"))
+    }
+
+    /// Absolute path of a profile-relative artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "profiles": {
+        "tiny": {
+          "config": {"name":"tiny","n_layers":2,"d_model":48,"n_heads":2,
+            "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+            "block_size":8,"init_blocks":1,"local_blocks":1,
+            "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+            "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+            "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+            "blocks_per_doc":4},
+          "weights": "tiny_weights.bin",
+          "n_weight_arrays": 18,
+          "entrypoints": {
+            "prefill_doc": {
+              "file": "tiny_prefill_doc.hlo.txt",
+              "needs_weights": true,
+              "args": [{"shape":[32],"dtype":"i32"},
+                       {"shape":[],"dtype":"i32"}],
+              "outputs": [{"shape":[2,2,2,32,24],"dtype":"f32"},
+                          {"shape":[2,2,32,32],"dtype":"f32"},
+                          {"shape":[2,2,24],"dtype":"f32"}]
+            }
+          },
+          "datasets": {"hotpot-sim": "datasets/d2x32_hotpot-sim.json"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m =
+            Manifest::from_json_str(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let p = m.profile("tiny").unwrap();
+        assert_eq!(p.n_weight_arrays, 18);
+        let e = &p.entrypoints["prefill_doc"];
+        assert!(e.needs_weights);
+        assert_eq!(e.args.len(), 2);
+        assert_eq!(e.args[0].dtype, DType::I32);
+        assert_eq!(e.outputs[0].shape, vec![2, 2, 2, 32, 24]);
+        assert_eq!(e.outputs[0].numel(), 2 * 2 * 2 * 32 * 24);
+        assert_eq!(p.datasets["hotpot-sim"], "datasets/d2x32_hotpot-sim.json");
+        assert_eq!(m.path("x.hlo.txt"), PathBuf::from("/tmp/a/x.hlo.txt"));
+        assert!(m.profile("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration-style: parse the actual build output when available.
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.profiles.contains_key("tiny"));
+            let p = m.profile("tiny").unwrap();
+            assert_eq!(p.config.n_layers * 8 + 2, p.n_weight_arrays);
+            for e in p.entrypoints.values() {
+                assert!(dir.join(&e.file).exists(), "missing {}", e.file);
+            }
+        }
+    }
+}

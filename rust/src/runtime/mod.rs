@@ -1,0 +1,226 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, and executes them from the serving hot path.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a [`Runtime`] lives on one
+//! thread; the coordinator owns it on a dedicated engine thread and other
+//! threads talk to it through channels (see `coordinator::engine`).
+
+mod literal;
+pub mod manifest;
+
+pub use literal::{
+    itensor_to_literal, literal_scalar_f32, literal_to_itensor,
+    literal_to_tensor, tensor_to_literal, Input,
+};
+pub use manifest::{ArgSpec, DType, EntryMeta, Manifest, ProfileMeta};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Locate the artifacts directory: `$SAMKV_ARTIFACTS`, else `artifacts/`
+/// under the crate root (works from `cargo test`/`bench`), else cwd.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SAMKV_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let candidate = manifest_dir.join("artifacts");
+    if candidate.exists() {
+        return candidate;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Per-entry-point execution accounting (feeds the §Perf analysis).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_ms: f64,
+    pub compile_ms: f64,
+}
+
+/// Artifact registry + executor. One per process/thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir: PathBuf = artifacts.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Lazily load + compile an entry point.
+    fn executable(
+        &self,
+        profile: &str,
+        entry: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = (profile.to_string(), entry.to_string());
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.profile(profile)?;
+        let emeta = meta
+            .entrypoints
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("unknown entrypoint `{entry}`"))?;
+        let path = self.manifest.path(&emeta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {entry}: {e:?}"))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        crate::debug!("compiled {}:{} in {:.0}ms", profile, entry, compile_ms);
+        self.stats
+            .borrow_mut()
+            .entry(format!("{profile}:{entry}"))
+            .or_default()
+            .compile_ms += compile_ms;
+        let exe = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of entry points (avoids first-request latency).
+    pub fn warmup(&self, profile: &str, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.executable(profile, e)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry point with pre-built literals (weights prepended
+    /// by the caller when the entry needs them). Returns the flattened
+    /// output tuple.
+    pub fn execute_literals(
+        &self,
+        profile: &str,
+        entry: &str,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(profile, entry)?;
+        let t0 = Instant::now();
+        let bufs = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {entry}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {entry}: {e:?}"))?;
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {entry}: {e:?}"))?;
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{profile}:{entry}")).or_default();
+        s.calls += 1;
+        s.total_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(outs)
+    }
+
+    /// Execute with typed host inputs, validating shapes against the
+    /// manifest. `weights` are prepended when the entry requires them.
+    pub fn execute(
+        &self,
+        profile: &str,
+        entry: &str,
+        weights: &[xla::Literal],
+        inputs: &[Input],
+    ) -> Result<Vec<xla::Literal>> {
+        let meta = self.manifest.profile(profile)?;
+        let emeta = meta
+            .entrypoints
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("unknown entrypoint `{entry}`"))?;
+        if emeta.args.len() != inputs.len() {
+            bail!(
+                "{entry}: expected {} args, got {}",
+                emeta.args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, input)) in emeta.args.iter().zip(inputs).enumerate() {
+            if spec.shape != input.shape() {
+                bail!(
+                    "{entry} arg {i}: expected shape {:?}, got {:?}",
+                    spec.shape,
+                    input.shape()
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()
+            .context("building input literals")?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(
+            weights.len() * (emeta.needs_weights as usize) + lits.len(),
+        );
+        if emeta.needs_weights {
+            if weights.len() != meta.n_weight_arrays {
+                bail!(
+                    "{entry}: needs {} weight arrays, got {}",
+                    meta.n_weight_arrays,
+                    weights.len()
+                );
+            }
+            refs.extend(weights.iter());
+        }
+        refs.extend(lits.iter());
+        self.execute_literals(profile, entry, &refs)
+    }
+
+    /// Execute and convert all outputs to host f32 tensors.
+    pub fn execute_f32(
+        &self,
+        profile: &str,
+        entry: &str,
+        weights: &[xla::Literal],
+        inputs: &[Input],
+    ) -> Result<Vec<Tensor>> {
+        self.execute(profile, entry, weights, inputs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect()
+    }
+
+    /// Snapshot of execution statistics.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<(String, ExecStats)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}

@@ -1,0 +1,179 @@
+//! JSON-lines-over-TCP serving front end + matching client.
+//!
+//! Wire format: one JSON object per line.
+//! Request:  `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion"}`
+//! Response: `{"id":1,"answer":[...],"ttft_ms":...,"seq_ratio":...}`
+//! `{"cmd":"metrics"}` returns the metrics report;
+//! `{"cmd":"shutdown"}` stops the listener.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{EngineHandle, Router, ServeRequest};
+use crate::exec::ThreadPool;
+use crate::json::{self, Value};
+use crate::metrics::Metrics;
+
+pub struct Server {
+    engines: Vec<EngineHandle>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(engines: Vec<EngineHandle>, metrics: Arc<Metrics>)
+               -> Server {
+        let router = Arc::new(Router::new(engines.len()));
+        Server {
+            engines,
+            router,
+            metrics,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Serve until a shutdown command arrives. Binds `addr` (e.g.
+    /// "127.0.0.1:7070"); returns the bound port via the callback before
+    /// blocking (useful with port 0 in tests).
+    pub fn run(&self, addr: &str, on_bound: impl FnOnce(u16)) -> Result<()> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(false)?;
+        on_bound(listener.local_addr()?.port());
+        let pool = ThreadPool::new(4, "conn");
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let engines = self.engines.clone();
+                    let router = Arc::clone(&self.router);
+                    let metrics = Arc::clone(&self.metrics);
+                    let stop = Arc::clone(&self.stop);
+                    pool.execute(move || {
+                        let _ = handle_conn(stream, &engines, &router,
+                                            &metrics, &stop);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, engines: &[EngineHandle],
+               router: &Router, metrics: &Metrics,
+               stop: &AtomicBool) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process_line(&line, engines, router, metrics,
+                                       stop) {
+            Ok(v) => v,
+            Err(e) => Value::obj().set("error", format!("{e:#}")),
+        };
+        writeln!(writer, "{reply}")?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
+                metrics: &Metrics, stop: &AtomicBool) -> Result<Value> {
+    let v = json::parse(line)?;
+    if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => Ok(Value::obj()
+                .set("report", metrics.report())
+                .set("loads",
+                     Value::Arr(router
+                         .loads()
+                         .iter()
+                         .map(|&l| (l as i64).into())
+                         .collect()))),
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                Ok(Value::obj().set("ok", true))
+            }
+            other => anyhow::bail!("unknown cmd `{other}`"),
+        };
+    }
+    let req = ServeRequest::from_json(&v)?;
+    let idx = router.pick(&req.sample);
+    let resp = engines[idx].serve(req);
+    router.done(idx);
+    Ok(resp?.to_json())
+}
+
+/// Minimal blocking client for examples, benches, and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+            next_id: 1,
+        })
+    }
+
+    fn roundtrip(&mut self, msg: &Value) -> Result<Value> {
+        writeln!(self.writer, "{msg}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line)
+    }
+
+    /// Serve one request; returns the parsed response object.
+    pub fn request(&mut self, docs: &[Vec<i32>], query: &[i32],
+                   policy: &str) -> Result<Value> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let msg = Value::obj()
+            .set("id", id as i64)
+            .set("docs",
+                 Value::Arr(docs
+                     .iter()
+                     .map(|d| {
+                         Value::Arr(d.iter()
+                             .map(|&t| (t as i64).into())
+                             .collect())
+                     })
+                     .collect()))
+            .set("query",
+                 Value::Arr(query.iter().map(|&t| (t as i64).into()).collect()))
+            .set("policy", policy);
+        self.roundtrip(&msg)
+    }
+
+    pub fn metrics(&mut self) -> Result<Value> {
+        self.roundtrip(&Value::obj().set("cmd", "metrics"))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.roundtrip(&Value::obj().set("cmd", "shutdown"))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,200 @@
+//! Fig. 5 — cross-layer recomputation planning over the assembled buffer.
+//!
+//! Sparse per-layer selections cannot be aligned across layers; the
+//! paper pads mismatched positions with blank blocks and applies two
+//! rules: (1) a token recomputed at layer n needs its outputs computed
+//! through layers 1..n-1, (2) at layer n, recompute where flagged and
+//! reuse cached entries elsewhere.
+//!
+//! Our buffer gives every selected token a slot at *every* layer, so the
+//! "blank block" of the paper is exactly a slot whose `rec_mask[l] = 0`:
+//! the recompute artifact computes its layer-n output from the cached KV
+//! (rule 2's reuse) while fresh KV is produced only where the mask is 1.
+//! The plan marks:
+//!   * init/local-block slots at every layer (the EPIC-inherited base),
+//!   * PauTa outlier tokens of selected middle blocks at the layers
+//!     where they are outliers (A.1),
+//! and reports the union token count (the paper's recomputation ratio).
+
+use crate::attention::BlockAttention;
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, SlotKind};
+use crate::tensor::Tensor;
+
+/// A layer-resolved recomputation plan for one assembled buffer.
+#[derive(Debug, Clone)]
+pub struct RecomputePlan {
+    /// `[L, S]` — 1.0 where the slot's KV is recomputed at that layer.
+    pub mask: Tensor,
+    /// Slots recomputed at >= 1 layer.
+    pub union_tokens: usize,
+    /// Per-layer recomputed-slot counts (diagnostics).
+    pub per_layer: Vec<usize>,
+    /// union_tokens / ctx_len — the paper's recomputation ratio.
+    pub recompute_ratio: f64,
+}
+
+/// Build the plan. `per_doc_ba[d]` is document d's attention analysis;
+/// pass `include_outliers = false` to restrict to init/local (EPIC-like
+/// behaviour inside SamKV's sparse buffer).
+pub fn build_recompute_plan(cfg: &ProfileConfig, ctx: &AssembledContext,
+                            per_doc_ba: &[&BlockAttention],
+                            include_outliers: bool) -> RecomputePlan {
+    let nl = cfg.n_layers;
+    let cap = ctx.capacity();
+    let mut mask = Tensor::zeros(&[nl, cap]);
+    for blk in &ctx.blocks {
+        match blk.kind {
+            SlotKind::Init | SlotKind::Local => {
+                // recompute whole block at every layer
+                for l in 0..nl {
+                    let row = mask.slice_at_mut(&[l]);
+                    for t in 0..cfg.block_size {
+                        row[blk.slot + t] = 1.0;
+                    }
+                }
+            }
+            SlotKind::Selected if include_outliers => {
+                let ba = per_doc_ba[blk.doc];
+                let t0 = blk.block * cfg.block_size;
+                let t1 = t0 + cfg.block_size;
+                for l in 0..nl {
+                    let row = mask.slice_at_mut(&[l]);
+                    for &tok in &ba.outlier_tokens[l] {
+                        if tok >= t0 && tok < t1 {
+                            row[blk.slot + (tok - t0)] = 1.0;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut per_layer = vec![0usize; nl];
+    let mut union = vec![false; cap];
+    for (l, pl) in per_layer.iter_mut().enumerate() {
+        let row = mask.slice_at(&[l]);
+        for (s, &m) in row.iter().enumerate() {
+            if m > 0.0 {
+                *pl += 1;
+                union[s] = true;
+            }
+        }
+    }
+    let union_tokens = union.iter().filter(|&&u| u).count();
+    RecomputePlan {
+        mask,
+        union_tokens,
+        per_layer,
+        recompute_ratio: union_tokens as f64 / cfg.ctx_len as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::kvcache::store::{doc_hash, DocEntry};
+    use crate::model::Buffer;
+
+    fn cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"t","n_layers":2,"d_model":8,"n_heads":1,
+                "head_dim":4,"d_ff":8,"vocab":16,"n_docs":2,"doc_len":32,
+                "block_size":4,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":4,"stable_layers":2,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":16,
+                "blocks_per_doc":8}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    fn doc(cfg: &ProfileConfig) -> DocEntry {
+        let tokens: Vec<i32> = (0..cfg.doc_len as i32).collect();
+        DocEntry {
+            hash: doc_hash(&tokens),
+            tokens,
+            kv: Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, cfg.doc_len,
+                                cfg.head_dim]),
+            attn: Tensor::zeros(&[1]),
+            q_local: Tensor::zeros(&[1]),
+            bytes: 0,
+        }
+    }
+
+    fn ba_with_outliers(cfg: &ProfileConfig, l0: Vec<usize>,
+                        l1: Vec<usize>) -> BlockAttention {
+        let nb = cfg.blocks_per_doc;
+        BlockAttention {
+            n_layers: 2,
+            n_blocks: nb,
+            rep_token: vec![vec![0; nb]; 2],
+            alpha: vec![vec![1.0; nb]; 2],
+            mean_received: vec![vec![0.1; nb]; 2],
+            importance_rank: vec![(0..nb).collect(); 2],
+            outlier_tokens: vec![l0, l1],
+        }
+    }
+
+    #[test]
+    fn init_local_recomputed_everywhere() {
+        let c = cfg();
+        let d = doc(&c);
+        let mut ctx = AssembledContext::new(&c, Buffer::Sparse);
+        ctx.append_block(&c, &d, 0, 0, SlotKind::Init).unwrap();
+        ctx.append_block(&c, &d, 0, 7, SlotKind::Local).unwrap();
+        let ba = ba_with_outliers(&c, vec![], vec![]);
+        let plan = build_recompute_plan(&c, &ctx, &[&ba, &ba], true);
+        assert_eq!(plan.per_layer, vec![8, 8]);
+        assert_eq!(plan.union_tokens, 8);
+        assert!((plan.recompute_ratio - 8.0 / 64.0).abs() < 1e-9);
+        // masked exactly on the occupied slots
+        assert_eq!(plan.mask.at(&[0, 0]), 1.0);
+        assert_eq!(plan.mask.at(&[1, 7]), 1.0);
+        assert_eq!(plan.mask.at(&[0, 8]), 0.0);
+    }
+
+    #[test]
+    fn outliers_are_layer_resolved_misaligned() {
+        let c = cfg();
+        let d = doc(&c);
+        let mut ctx = AssembledContext::new(&c, Buffer::Sparse);
+        // selected middle block 2 of doc 0 occupies tokens 8..12
+        ctx.append_block(&c, &d, 0, 2, SlotKind::Selected).unwrap();
+        // layer 0 flags token 9; layer 1 flags token 11 (Fig.-5 misalign)
+        let ba = ba_with_outliers(&c, vec![9], vec![11]);
+        let plan = build_recompute_plan(&c, &ctx, &[&ba], true);
+        assert_eq!(plan.mask.at(&[0, 1]), 1.0); // slot of token 9
+        assert_eq!(plan.mask.at(&[0, 3]), 0.0);
+        assert_eq!(plan.mask.at(&[1, 3]), 1.0); // slot of token 11
+        assert_eq!(plan.mask.at(&[1, 1]), 0.0);
+        assert_eq!(plan.per_layer, vec![1, 1]);
+        assert_eq!(plan.union_tokens, 2); // union across layers
+    }
+
+    #[test]
+    fn outliers_outside_selected_blocks_ignored() {
+        let c = cfg();
+        let d = doc(&c);
+        let mut ctx = AssembledContext::new(&c, Buffer::Sparse);
+        ctx.append_block(&c, &d, 0, 2, SlotKind::Selected).unwrap();
+        // outlier token 20 lives in block 5 which is NOT in the buffer
+        let ba = ba_with_outliers(&c, vec![20], vec![]);
+        let plan = build_recompute_plan(&c, &ctx, &[&ba], true);
+        assert_eq!(plan.union_tokens, 0);
+    }
+
+    #[test]
+    fn disable_outliers_restricts_to_fixed_blocks() {
+        let c = cfg();
+        let d = doc(&c);
+        let mut ctx = AssembledContext::new(&c, Buffer::Sparse);
+        ctx.append_block(&c, &d, 0, 0, SlotKind::Init).unwrap();
+        ctx.append_block(&c, &d, 0, 2, SlotKind::Selected).unwrap();
+        let ba = ba_with_outliers(&c, vec![9], vec![9]);
+        let plan = build_recompute_plan(&c, &ctx, &[&ba], false);
+        assert_eq!(plan.union_tokens, 4); // init block only
+    }
+}

@@ -1,0 +1,128 @@
+//! Cross-context filtering (§3.2 final step): normalize per-document
+//! block scores, pool every document's Top-P picks, and keep only the
+//! `pooled / D` most critical blocks — so documents compete for the
+//! sparse budget instead of each padding it independently.
+
+use crate::config::ProfileConfig;
+use crate::tensor::{mean, std_dev};
+
+use super::selection::DocSelection;
+
+/// Final per-document middle-block sets after cross-context filtering.
+/// The result is additionally capped at `cfg.sel_cap_blocks` total (the
+/// static sparse-buffer capacity).
+pub fn cross_filter(cfg: &ProfileConfig, selections: &[DocSelection])
+                    -> Vec<Vec<usize>> {
+    let d = selections.len();
+    let mut pooled: Vec<(usize, usize, f32)> = Vec::new(); // (doc, block, z)
+    for (doc, sel) in selections.iter().enumerate() {
+        if sel.picked.is_empty() {
+            continue;
+        }
+        // z-normalize this document's scores so documents are comparable
+        let m = mean(&sel.scores);
+        let s = std_dev(&sel.scores).max(1e-6);
+        for &b in &sel.picked {
+            pooled.push((doc, b, (sel.scores[b] - m) / s));
+        }
+    }
+    // keep = pooled / D, capped by the buffer budget
+    let keep = (pooled.len() / d.max(1))
+        .max(usize::from(!pooled.is_empty()))
+        .min(cfg.sel_cap_blocks);
+    pooled.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    pooled.truncate(keep);
+    let mut out = vec![Vec::new(); d];
+    for (doc, b, _) in pooled {
+        out[doc].push(b);
+    }
+    for v in out.iter_mut() {
+        v.sort_unstable();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"t","n_layers":2,"d_model":8,"n_heads":1,
+                "head_dim":4,"d_ff":8,"vocab":16,"n_docs":4,"doc_len":32,
+                "block_size":4,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":4,"stable_layers":2,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":128,"full_len":137,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":8}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    fn sel(picked: Vec<usize>, hot: &[(usize, f32)]) -> DocSelection {
+        let mut scores = vec![0.0f32; 8];
+        for &(b, s) in hot {
+            scores[b] = s;
+        }
+        DocSelection { p: 0.5, p_per_layer: vec![], scores, picked }
+    }
+
+    #[test]
+    fn keeps_pooled_over_d_blocks() {
+        let c = cfg();
+        // 4 docs x 2 picks = 8 pooled -> keep 8/4 = 2
+        let sels: Vec<DocSelection> = (0..4)
+            .map(|i| {
+                sel(vec![2, 3],
+                    &[(2, 1.0 + i as f32), (3, 0.5 + i as f32)])
+            })
+            .collect();
+        let out = cross_filter(&c, &sels);
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn strongest_blocks_survive() {
+        let c = cfg();
+        // doc 0 picked two blocks: 4 decisively hot (high z), 5 mild;
+        // doc 1 picked two close blocks (low z spread); docs 2/3 empty.
+        let sels = vec![
+            sel(vec![4, 5], &[(4, 10.0), (5, 5.0)]),
+            sel(vec![2, 3], &[(2, 1.0), (3, 0.9)]),
+            sel(vec![], &[]),
+            sel(vec![], &[]),
+        ];
+        // pooled 4 / D 4 = keep 1 -> doc 0's block 4 (highest z) wins
+        let out = cross_filter(&c, &sels);
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 1);
+        assert_eq!(out[0], vec![4], "{out:?}");
+        assert!(out[1].is_empty());
+    }
+
+    #[test]
+    fn empty_selections_yield_empty() {
+        let c = cfg();
+        let sels: Vec<DocSelection> =
+            (0..4).map(|_| sel(vec![], &[])).collect();
+        let out = cross_filter(&c, &sels);
+        assert!(out.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn respects_buffer_cap() {
+        let c = cfg(); // sel_cap_blocks = 4
+        let sels: Vec<DocSelection> = (0..4)
+            .map(|_| {
+                sel(vec![1, 2, 3, 4, 5, 6],
+                    &[(1, 1.), (2, 1.), (3, 1.), (4, 1.), (5, 1.), (6, 1.)])
+            })
+            .collect();
+        let out = cross_filter(&c, &sels);
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert!(total <= 4, "total {total}");
+    }
+}

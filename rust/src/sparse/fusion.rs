@@ -1,0 +1,138 @@
+//! Eq. 4 — overwrite vs fusion write-back of recomputed KV (§3.3).
+//!
+//! The recompute artifact returns a merged buffer (fresh values where
+//! `rec_mask` was set, cached elsewhere). *Overwrite* keeps it as-is.
+//! *Fusion* blends each recomputed vector with its old value using the
+//! cosine similarity θ = cos(new, old):
+//!
+//! ```text
+//! KV_new ← θ·KV_new + (1-θ)·KV_old
+//! ```
+//!
+//! θ is computed per (layer, K/V, head, slot) head-dim vector. θ ≈ 0.9
+//! in practice (paper's observation), so fusion mostly trusts the fresh
+//! cross-attention-aware values while retaining a sliver of the
+//! intra-document history.
+
+use crate::config::{ProfileConfig, UpdateStrategy};
+use crate::tensor::{cosine, Tensor};
+
+/// Apply the write-back strategy. `kv_old` is the pre-recompute buffer,
+/// `kv_new` the artifact output, `mask` the `[L, S]` recompute mask.
+pub fn write_back(cfg: &ProfileConfig, kv_old: &Tensor, mut kv_new: Tensor,
+                  mask: &Tensor, strategy: UpdateStrategy) -> Tensor {
+    if strategy == UpdateStrategy::Overwrite {
+        return kv_new;
+    }
+    let (nl, nh, dh) = (cfg.n_layers, cfg.n_heads, cfg.head_dim);
+    let cap = kv_old.shape()[3];
+    for l in 0..nl {
+        let mrow = mask.slice_at(&[l]);
+        for c in 0..2 {
+            for h in 0..nh {
+                let old = kv_old.slice_at(&[l, c, h]);
+                let new = kv_new.slice_at_mut(&[l, c, h]);
+                for s in 0..cap {
+                    if mrow[s] == 0.0 {
+                        continue;
+                    }
+                    let o = &old[s * dh..(s + 1) * dh];
+                    let range = s * dh..(s + 1) * dh;
+                    let theta = cosine(&new[range.clone()], o);
+                    for (nv, &ov) in
+                        new[range].iter_mut().zip(o.iter())
+                    {
+                        *nv = theta * *nv + (1.0 - theta) * ov;
+                    }
+                }
+            }
+        }
+    }
+    kv_new
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"t","n_layers":1,"d_model":8,"n_heads":1,
+                "head_dim":4,"d_ff":8,"vocab":16,"n_docs":2,"doc_len":8,
+                "block_size":4,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":16,"full_len":25,
+                "sparse_kv_len":16,"sparse_len":25,"comp_len":16,
+                "blocks_per_doc":2}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    fn bufs(cfg: &ProfileConfig) -> (Tensor, Tensor, Tensor) {
+        let shape = [cfg.n_layers, 2, cfg.n_heads, 4, cfg.head_dim];
+        let old = Tensor::full(&shape, 1.0);
+        let new = Tensor::full(&shape, 3.0);
+        let mask = Tensor::zeros(&[cfg.n_layers, 4]);
+        (old, new, mask)
+    }
+
+    #[test]
+    fn overwrite_returns_new_unchanged() {
+        let c = cfg();
+        let (old, new, mut mask) = bufs(&c);
+        mask.set(&[0, 1], 1.0);
+        let out =
+            write_back(&c, &old, new.clone(), &mask, UpdateStrategy::Overwrite);
+        assert_eq!(out, new);
+    }
+
+    #[test]
+    fn fusion_blends_only_masked_slots() {
+        let c = cfg();
+        let (old, new, mut mask) = bufs(&c);
+        mask.set(&[0, 1], 1.0);
+        let out = write_back(&c, &old, new, &mask, UpdateStrategy::Fusion);
+        // slot 1: old/new are parallel (all-ones direction): theta = 1
+        // -> stays 3.0; unmasked slots also stay 3.0 (untouched)
+        assert_eq!(out.at(&[0, 0, 0, 1, 0]), 3.0);
+        assert_eq!(out.at(&[0, 0, 0, 0, 0]), 3.0);
+    }
+
+    #[test]
+    fn fusion_interpolates_by_cosine() {
+        let c = cfg();
+        let shape = [1, 2, 1, 4, 4];
+        let mut old = Tensor::zeros(&shape);
+        let mut new = Tensor::zeros(&shape);
+        // slot 0, K: old = e1*2, new = e0*4 -> theta = 0
+        old.set(&[0, 0, 0, 0, 1], 2.0);
+        new.set(&[0, 0, 0, 0, 0], 4.0);
+        let mut mask = Tensor::zeros(&[1, 4]);
+        mask.set(&[0, 0], 1.0);
+        let out = write_back(&c, &old, new, &mask, UpdateStrategy::Fusion);
+        // theta = cos = 0 -> result = old entirely
+        assert_eq!(out.at(&[0, 0, 0, 0, 0]), 0.0);
+        assert_eq!(out.at(&[0, 0, 0, 0, 1]), 2.0);
+    }
+
+    #[test]
+    fn fusion_high_theta_trusts_new() {
+        let c = cfg();
+        let shape = [1, 2, 1, 4, 4];
+        let mut old = Tensor::zeros(&shape);
+        let mut new = Tensor::zeros(&shape);
+        // nearly-parallel: theta ~ 1 -> mostly new
+        for d in 0..4 {
+            old.set(&[0, 1, 0, 2, d], 1.0);
+            new.set(&[0, 1, 0, 2, d], 2.0);
+        }
+        old.set(&[0, 1, 0, 2, 3], 1.2);
+        let mut mask = Tensor::zeros(&[1, 4]);
+        mask.set(&[0, 2], 1.0);
+        let out = write_back(&c, &old, new, &mask, UpdateStrategy::Fusion);
+        let got = out.at(&[0, 1, 0, 2, 0]);
+        assert!(got > 1.9 && got <= 2.0, "got {got}");
+    }
+}

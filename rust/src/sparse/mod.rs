@@ -1,0 +1,21 @@
+//! The SamKV sparsification pipeline (§3):
+//!
+//! * [`query`] — personalized per-document query vectors (Eq. 1);
+//! * [`selection`] — anchor-based dynamic Top-P block selection
+//!   (Eq. 2 per layer, Eq. 3 across the stable layers N*);
+//! * [`crossfilter`] — cross-context normalization + final block filter;
+//! * [`alignment`] — cross-layer recomputation planning over the
+//!   assembled buffer (Fig. 5 rules);
+//! * [`fusion`] — overwrite/fusion write-back (Eq. 4).
+
+pub mod alignment;
+pub mod crossfilter;
+pub mod fusion;
+pub mod query;
+pub mod selection;
+
+pub use alignment::{build_recompute_plan, RecomputePlan};
+pub use crossfilter::cross_filter;
+pub use fusion::write_back;
+pub use query::personalized_queries;
+pub use selection::{block_scores_host, topp_select, DocSelection};

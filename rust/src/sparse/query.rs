@@ -1,0 +1,126 @@
+//! Eq. 1 — Personalized Query Embedding.
+//!
+//! Starting from the generic query vector `Q_que` (incremental prefill
+//! of the user query over the compressed init+local cache, mean-pooled
+//! per layer/head), each document i receives a bias from the *other*
+//! documents' local Q caches, weighted by `|cos(Q_que, Q_doc-j_loc)|`
+//! and normalized by `D-1`:
+//!
+//! ```text
+//! Q̂_i = Q_que + 1/(D-1) · Σ_{j≠i} |cos(Q_que, Q_loc_j)| · Q_loc_j
+//! ```
+//!
+//! The absolute cosine keeps the injected bias positively aligned with
+//! whatever K-direction `Q_loc_j` retrieves (§3.1), and the 1/(D-1)
+//! factor guards the user query against dilution.
+
+use crate::tensor::{cosine, Tensor};
+
+/// Compute Q̂ for every document.
+///
+/// * `q_que`: `[L, H, Dh]` generic query vector;
+/// * `q_locals[j]`: `[L, H, Dh]` local Q cache of document j;
+/// * `pers_bias = false` returns plain copies of `Q_que` (ablation row).
+pub fn personalized_queries(q_que: &Tensor, q_locals: &[&Tensor],
+                            pers_bias: bool) -> Vec<Tensor> {
+    let d = q_locals.len();
+    let shape = q_que.shape().to_vec();
+    debug_assert_eq!(shape.len(), 3);
+    let (nl, nh, dh) = (shape[0], shape[1], shape[2]);
+    if !pers_bias || d <= 1 {
+        return (0..d).map(|_| q_que.clone()).collect();
+    }
+    let norm = 1.0 / (d as f32 - 1.0);
+    (0..d)
+        .map(|i| {
+            let mut out = q_que.clone();
+            for l in 0..nl {
+                for h in 0..nh {
+                    let base = q_que.slice_at(&[l, h]);
+                    // accumulate bias over the *other* docs
+                    let mut bias = vec![0f32; dh];
+                    for (j, qloc) in q_locals.iter().enumerate() {
+                        if j == i {
+                            continue;
+                        }
+                        let v = qloc.slice_at(&[l, h]);
+                        let w = cosine(base, v).abs();
+                        for (b, &x) in bias.iter_mut().zip(v) {
+                            *b += w * x;
+                        }
+                    }
+                    let dst = out.slice_at_mut(&[l, h]);
+                    for (o, b) in dst.iter_mut().zip(&bias) {
+                        *o += norm * b;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec3(l: usize, h: usize, dh: usize, f: impl Fn(usize) -> f32)
+            -> Tensor {
+        let mut t = Tensor::zeros(&[l, h, dh]);
+        for i in 0..l {
+            for j in 0..h {
+                let s = t.slice_at_mut(&[i, j]);
+                for (k, x) in s.iter_mut().enumerate() {
+                    *x = f(k);
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn no_bias_returns_q_que() {
+        let q = vec3(2, 2, 4, |k| k as f32);
+        let l1 = vec3(2, 2, 4, |_| 1.0);
+        let l2 = vec3(2, 2, 4, |_| 2.0);
+        let out = personalized_queries(&q, &[&l1, &l2], false);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], q);
+        assert_eq!(out[1], q);
+    }
+
+    #[test]
+    fn bias_excludes_own_doc_and_weights_by_cos() {
+        // q_que = e0; doc0 local = e0 (cos 1), doc1 local = e1 (cos 0)
+        let q = vec3(1, 1, 2, |k| if k == 0 { 1.0 } else { 0.0 });
+        let l0 = vec3(1, 1, 2, |k| if k == 0 { 2.0 } else { 0.0 });
+        let l1 = vec3(1, 1, 2, |k| if k == 1 { 3.0 } else { 0.0 });
+        let out = personalized_queries(&q, &[&l0, &l1], true);
+        // doc 0's bias comes only from doc 1 (orthogonal => no change)
+        assert_eq!(out[0].slice_at(&[0, 0]), &[1.0, 0.0]);
+        // doc 1's bias comes from doc 0: |cos|=1, weight 1/(2-1)=1
+        assert_eq!(out[1].slice_at(&[0, 0]), &[3.0, 0.0]);
+    }
+
+    #[test]
+    fn negative_alignment_still_adds_positively_weighted_bias() {
+        // anti-aligned local Q: |cos| = 1, bias keeps the *vector* as-is
+        let q = vec3(1, 1, 2, |k| if k == 0 { 1.0 } else { 0.0 });
+        let l0 = vec3(1, 1, 2, |k| if k == 0 { -1.0 } else { 0.0 });
+        let l1 = vec3(1, 1, 2, |_| 0.0);
+        let out = personalized_queries(&q, &[&l1, &l0], true);
+        // doc 0 biased by doc 1 (= l0): 1 + 1*(-1) = 0
+        assert_eq!(out[0].slice_at(&[0, 0]), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn dilution_guard_normalizes_by_docs() {
+        // 4 docs, three identical aligned biases: each contributes /3
+        let q = vec3(1, 1, 1, |_| 1.0);
+        let li = vec3(1, 1, 1, |_| 3.0);
+        let out =
+            personalized_queries(&q, &[&li, &li, &li, &li], true);
+        // 1 + (1/3) * 3 docs * |cos|=1 * 3.0 = 1 + 3
+        assert_eq!(out[0].slice_at(&[0, 0]), &[4.0]);
+    }
+}

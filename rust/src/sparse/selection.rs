@@ -1,0 +1,219 @@
+//! Eq. 2/3 — anchor-based dynamic Top-P selection of middle KV blocks.
+//!
+//! Per stable layer n the personalized query Q̂ scores every block via
+//! the block-mean-K inner product. With the init/local anchor score
+//! `s_anc`, the most-important middle block `s_max`, and the most-
+//! unimportant middle block `s_min` (both from the Appendix-A analysis):
+//!
+//! ```text
+//! P^(n) = (s_max - s_anc) / (s_max - s_min)   if s_anc ∈ (s_min, s_max]
+//!         0                                    otherwise
+//! P     = mean over the stable layers N*                       (Eq. 3)
+//! ```
+//!
+//! `ceil(P · middle_blocks)` middle blocks are then picked by their
+//! N*-averaged scores.
+
+use crate::attention::BlockAttention;
+use crate::config::ProfileConfig;
+use crate::tensor::Tensor;
+
+/// Outcome of Top-P selection for one document.
+#[derive(Debug, Clone)]
+pub struct DocSelection {
+    /// Eq.-3 consolidated selection ratio.
+    pub p: f32,
+    /// Eq.-2 per-stable-layer ratios (diagnostics / Fig. ablations).
+    pub p_per_layer: Vec<f32>,
+    /// N*-averaged block scores (all blocks, absolute block index).
+    pub scores: Vec<f32>,
+    /// Picked middle blocks (absolute indices, sorted ascending).
+    pub picked: Vec<usize>,
+}
+
+/// Host-side block scoring for layer `l`: `mean_h ⟨Q̂[l,h], K̄_b[l,h]⟩`
+/// (the L1 `block_score` kernel computes the same; `offload_scoring`
+/// routes there instead).
+pub fn block_scores_host(q_hat: &Tensor, kv: &Tensor,
+                         cfg: &ProfileConfig, layer: usize) -> Vec<f32> {
+    let (nh, dh, bs) = (cfg.n_heads, cfg.head_dim, cfg.block_size);
+    let nb = cfg.blocks_per_doc;
+    let mut out = vec![0f32; nb];
+    for (b, o) in out.iter_mut().enumerate() {
+        let mut acc = 0f32;
+        for h in 0..nh {
+            let q = q_hat.slice_at(&[layer, h]);
+            let k = kv.slice_at(&[layer, 0, h]); // [Ld * Dh]
+            // block-mean K
+            let mut kbar = vec![0f32; dh];
+            for t in b * bs..(b + 1) * bs {
+                for (d, kb) in kbar.iter_mut().enumerate() {
+                    *kb += k[t * dh + d];
+                }
+            }
+            for (qd, kb) in q.iter().zip(&kbar) {
+                acc += qd * kb / bs as f32;
+            }
+        }
+        *o = acc / nh as f32;
+    }
+    out
+}
+
+/// Eq. 2 for one layer given per-block scores and the analysis blocks.
+pub fn topp_layer(scores: &[f32], cfg: &ProfileConfig,
+                  ba: &BlockAttention, layer: usize) -> f32 {
+    let anchors: Vec<usize> = (0..cfg.init_blocks)
+        .chain(cfg.blocks_per_doc - cfg.local_blocks..cfg.blocks_per_doc)
+        .collect();
+    let s_anc = anchors.iter().map(|&b| scores[b]).sum::<f32>()
+        / anchors.len() as f32;
+    let Some(bmax) = ba.max_middle_block(cfg, layer) else { return 0.0 };
+    let Some(bmin) = ba.min_middle_block(cfg, layer) else { return 0.0 };
+    let s_max = scores[bmax];
+    let s_min = scores[bmin];
+    if s_anc > s_min && s_anc <= s_max && s_max > s_min {
+        ((s_max - s_anc) / (s_max - s_min)).clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Full per-document selection: Eq. 2 per stable layer, Eq. 3 average,
+/// then pick `ceil(P · middle)` blocks by N*-mean score.
+pub fn topp_select(cfg: &ProfileConfig, per_layer_scores: &[Vec<f32>],
+                   stable_layers: &[usize], ba: &BlockAttention)
+                   -> DocSelection {
+    let nb = cfg.blocks_per_doc;
+    debug_assert_eq!(per_layer_scores.len(), stable_layers.len());
+    let mut p_per_layer = Vec::with_capacity(stable_layers.len());
+    let mut mean_scores = vec![0f32; nb];
+    for (scores, &l) in per_layer_scores.iter().zip(stable_layers) {
+        p_per_layer.push(topp_layer(scores, cfg, ba, l));
+        for (m, &s) in mean_scores.iter_mut().zip(scores) {
+            *m += s / stable_layers.len() as f32;
+        }
+    }
+    let p = p_per_layer.iter().sum::<f32>() / p_per_layer.len().max(1) as f32;
+    let middle: Vec<usize> =
+        (cfg.init_blocks..nb - cfg.local_blocks).collect();
+    let want = ((p * middle.len() as f32).ceil() as usize).min(middle.len());
+    let mut order = middle.clone();
+    order.sort_by(|&a, &b| {
+        mean_scores[b].partial_cmp(&mean_scores[a]).unwrap()
+    });
+    let mut picked: Vec<usize> = order.into_iter().take(want).collect();
+    picked.sort_unstable();
+    DocSelection { p, p_per_layer, scores: mean_scores, picked }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn cfg8() -> ProfileConfig {
+        // 8 blocks of 4: blocks 0 init, 7 local, 1..=6 middle
+        let v = json::parse(
+            r#"{"name":"t","n_layers":2,"d_model":8,"n_heads":1,
+                "head_dim":4,"d_ff":8,"vocab":16,"n_docs":2,"doc_len":32,
+                "block_size":4,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":4,"stable_layers":2,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":32,"sparse_len":41,"comp_len":16,
+                "blocks_per_doc":8}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    fn fake_ba(cfg: &ProfileConfig, bmax: usize, bmin: usize)
+               -> BlockAttention {
+        let nb = cfg.blocks_per_doc;
+        let nl = cfg.n_layers;
+        // alpha: bmax lowest, bmin highest; mean_received: bmin lowest
+        let mut alpha = vec![vec![1.0f32; nb]; nl];
+        let mut mr = vec![vec![0.5f32; nb]; nl];
+        for l in 0..nl {
+            alpha[l][bmax] = 0.1;
+            alpha[l][bmin] = 2.0;
+            mr[l][bmin] = 0.01;
+        }
+        BlockAttention {
+            n_layers: nl,
+            n_blocks: nb,
+            rep_token: vec![vec![0; nb]; nl],
+            alpha,
+            mean_received: mr,
+            importance_rank: vec![(0..nb).collect(); nl],
+            outlier_tokens: vec![Vec::new(); nl],
+        }
+    }
+
+    #[test]
+    fn host_scores_prefer_aligned_block() {
+        let cfg = cfg8();
+        let mut q = Tensor::zeros(&[2, 1, 4]);
+        q.slice_at_mut(&[0, 0])[0] = 1.0;
+        let mut kv = Tensor::zeros(&[2, 2, 1, 32, 4]);
+        // block 3 (tokens 12..16) aligned with q at layer 0
+        for t in 12..16 {
+            kv.slice_at_mut(&[0, 0, 0])[t * 4] = 2.0;
+        }
+        let s = block_scores_host(&q, &kv, &cfg, 0);
+        assert_eq!(s.len(), 8);
+        assert!(s[3] > 1.9 && s[3] > s[2] + 1.0, "{s:?}");
+    }
+
+    #[test]
+    fn eq2_interpolates_between_min_and_max() {
+        let cfg = cfg8();
+        let ba = fake_ba(&cfg, 3, 5);
+        // scores: max block 3 -> 1.0, min block 5 -> 0.0, anchors 0.25
+        let mut scores = vec![0.25f32; 8];
+        scores[3] = 1.0;
+        scores[5] = 0.0;
+        let p = topp_layer(&scores, &cfg, &ba, 0);
+        assert!((p - 0.75).abs() < 1e-6, "p = {p}");
+        // anchor above max -> 0
+        scores[0] = 2.0;
+        scores[7] = 2.0;
+        assert_eq!(topp_layer(&scores, &cfg, &ba, 0), 0.0);
+        // anchor below min -> 0 (outside the interval)
+        scores[0] = -1.0;
+        scores[7] = -1.0;
+        assert_eq!(topp_layer(&scores, &cfg, &ba, 0), 0.0);
+    }
+
+    #[test]
+    fn eq3_averages_and_picks_top_scored_middle_blocks() {
+        let cfg = cfg8();
+        let ba = fake_ba(&cfg, 2, 6);
+        // layer a: P = (1 - 0.5)/(1 - 0) = 0.5; layer b: 0 (anchor > max)
+        let mut sa = vec![0.3f32; 8];
+        sa[0] = 0.5; // anchors
+        sa[7] = 0.5;
+        sa[2] = 1.0;
+        sa[6] = 0.0;
+        sa[4] = 0.9; // second-best middle
+        let mut sb = vec![0.0f32; 8];
+        sb[2] = -0.5;
+        sb[6] = -1.0;
+        let sel = topp_select(&cfg, &[sa, sb], &[0, 1], &ba);
+        assert!((sel.p - 0.25).abs() < 1e-6, "p = {}", sel.p);
+        // ceil(0.25 * 6 middle) = 2 blocks; mean scores: b4 = 0.45,
+        // b2 = 0.25, other middles 0.15 -> picked {2, 4}
+        assert_eq!(sel.picked, vec![2, 4]);
+        assert_eq!(sel.p_per_layer.len(), 2);
+    }
+
+    #[test]
+    fn zero_p_picks_nothing() {
+        let cfg = cfg8();
+        let ba = fake_ba(&cfg, 2, 6);
+        let s = vec![1.0f32; 8]; // anchor == max == min -> degenerate
+        let sel = topp_select(&cfg, &[s.clone(), s], &[0, 1], &ba);
+        assert_eq!(sel.p, 0.0);
+        assert!(sel.picked.is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Host tensor substrate: contiguous row-major f32/i32 arrays with shape.
+//!
+//! Purposefully minimal — just what the coordinator needs to shuttle KV
+//! caches between PJRT literals and the sparse-selection math. Heavy
+//! compute belongs in the AOT artifacts, not here.
+
+mod ops;
+
+pub use ops::{cosine, dot, l2_norm, mean, powerlaw_fit, std_dev};
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Byte size of the payload (memory accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Flat offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {x} out of dim {d} (axis {i})");
+            off = off * d + x;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Contiguous sub-slice holding `idx` as a prefix of the full index.
+    /// E.g. for shape [L,2,H,S,Dh], `slice_at(&[l,0,h])` is the [S,Dh] row
+    /// block.
+    pub fn slice_at(&self, idx: &[usize]) -> &[f32] {
+        let tail: usize = self.shape[idx.len()..].iter().product();
+        let mut off = 0;
+        for (&x, &d) in idx.iter().zip(&self.shape) {
+            off = off * d + x;
+        }
+        &self.data[off * tail..(off + 1) * tail]
+    }
+
+    pub fn slice_at_mut(&mut self, idx: &[usize]) -> &mut [f32] {
+        let tail: usize = self.shape[idx.len()..].iter().product();
+        let mut off = 0;
+        for (&x, &d) in idx.iter().zip(&self.shape) {
+            off = off * d + x;
+        }
+        &mut self.data[off * tail..(off + 1) * tail]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+/// Row-major i32 tensor (token ids, positions, masks fed to artifacts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ITensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(ITensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        ITensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        ITensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<i32>) -> Self {
+        ITensor { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn slice_at_views() {
+        // shape [2,2,3]: slice_at(&[1]) is the second [2,3] block
+        let t = Tensor::new(vec![2, 2, 3], (0..12).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(t.slice_at(&[1]), &[6., 7., 8., 9., 10., 11.]);
+        assert_eq!(t.slice_at(&[0, 1]), &[3., 4., 5.]);
+    }
+
+    #[test]
+    fn set_and_mutate() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.set(&[1, 1], 7.0);
+        assert_eq!(t.at(&[1, 1]), 7.0);
+        t.slice_at_mut(&[0]).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(t.data(), &[1.0, 2.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert_eq!(t.clone().reshape(vec![2, 4]).unwrap().shape(), &[2, 4]);
+        assert!(t.reshape(vec![3, 3]).is_err());
+    }
+}

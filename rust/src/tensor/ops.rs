@@ -1,0 +1,126 @@
+//! Small numeric helpers used by the sparse-selection pipeline and the
+//! Appendix-A attention analytics.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+pub fn l2_norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity (0 when either vector is ~zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = l2_norm(a);
+    let nb = l2_norm(b);
+    if na < 1e-12 || nb < 1e-12 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+pub fn mean(a: &[f32]) -> f32 {
+    if a.is_empty() {
+        0.0
+    } else {
+        a.iter().sum::<f32>() / a.len() as f32
+    }
+}
+
+pub fn std_dev(a: &[f32]) -> f32 {
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(a);
+    (a.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / a.len() as f32).sqrt()
+}
+
+/// Least-squares power-law fit `y ≈ c · x^(-alpha)` over positive samples
+/// (log-log linear regression). Returns `(alpha, log_c)`; alpha > 0 means
+/// decaying attention (Fig. 7: smaller alpha = stronger overall attention).
+///
+/// `ys[i]` is the sample at x = i+1. Non-positive samples are clamped to
+/// `eps` (attention probabilities can underflow to 0).
+pub fn powerlaw_fit(ys: &[f32]) -> (f32, f32) {
+    let eps = 1e-9f32;
+    let n = ys.len();
+    if n < 2 {
+        return (0.0, ys.first().map(|y| y.max(eps).ln()).unwrap_or(0.0));
+    }
+    let mut sx = 0.0f64;
+    let mut sy = 0.0f64;
+    let mut sxx = 0.0f64;
+    let mut sxy = 0.0f64;
+    for (i, &y) in ys.iter().enumerate() {
+        let x = ((i + 1) as f64).ln();
+        let yl = (y.max(eps) as f64).ln();
+        sx += x;
+        sy += yl;
+        sxx += x * x;
+        sxy += x * yl;
+    }
+    let nf = n as f64;
+    let denom = nf * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (0.0, (sy / nf) as f32);
+    }
+    let slope = (nf * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / nf;
+    ((-slope) as f32, intercept as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_cosine() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-2.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0)
+            .abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn powerlaw_recovers_exponent() {
+        // y = 3 * x^-1.7 exactly
+        let ys: Vec<f32> = (1..=64)
+            .map(|x| 3.0 * (x as f32).powf(-1.7))
+            .collect();
+        let (alpha, log_c) = powerlaw_fit(&ys);
+        assert!((alpha - 1.7).abs() < 1e-3, "alpha = {alpha}");
+        assert!((log_c - 3.0f32.ln()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn powerlaw_orders_attention_strength() {
+        // paper Fig. 7: lower alpha <=> higher sustained attention
+        let strong: Vec<f32> = (1..=32).map(|x| (x as f32).powf(-0.5)).collect();
+        let weak: Vec<f32> = (1..=32).map(|x| (x as f32).powf(-2.5)).collect();
+        let (a_strong, _) = powerlaw_fit(&strong);
+        let (a_weak, _) = powerlaw_fit(&weak);
+        assert!(a_strong < a_weak);
+    }
+
+    #[test]
+    fn powerlaw_handles_zeros() {
+        let ys = vec![0.5, 0.0, 0.0, 0.0];
+        let (alpha, _) = powerlaw_fit(&ys);
+        assert!(alpha.is_finite() && alpha > 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Synthetic-task tokenizer: mirrors `python/compile/taskspec.py`.
+//!
+//! The vocabulary is fixed (256 ids): specials, ordinals, keys, values,
+//! fillers. Provides id<->name mapping for logs/examples and the token
+//! classification the eval harness and workload generator need.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const QUERY: i32 = 2;
+pub const ANS: i32 = 3;
+pub const EOS: i32 = 4;
+pub const NOORD: i32 = 5;
+pub const ORD_BASE: i32 = 6;
+pub const MAX_ORD: i32 = 8;
+
+pub const KEY_BASE: i32 = 16;
+pub const N_KEYS: i32 = 64;
+pub const VAL_BASE: i32 = 80;
+pub const N_VALS: i32 = 64;
+pub const FILLER_BASE: i32 = 144;
+pub const N_FILLERS: i32 = 112;
+pub const VOCAB: i32 = 256;
+
+pub const QUERY_LEN: usize = 5;
+pub const ANSWER_MAX: usize = 4;
+
+pub fn key_tok(i: i32) -> i32 {
+    debug_assert!((0..N_KEYS).contains(&i));
+    KEY_BASE + i
+}
+
+pub fn val_tok(i: i32) -> i32 {
+    debug_assert!((0..N_VALS).contains(&i));
+    VAL_BASE + i
+}
+
+pub fn filler_tok(i: i32) -> i32 {
+    debug_assert!((0..N_FILLERS).contains(&i));
+    FILLER_BASE + i
+}
+
+/// 1-based ordinal token.
+pub fn ord_tok(i: i32) -> i32 {
+    debug_assert!((1..=MAX_ORD).contains(&i));
+    ORD_BASE + i - 1
+}
+
+pub fn is_key(tok: i32) -> bool {
+    (KEY_BASE..KEY_BASE + N_KEYS).contains(&tok)
+}
+
+pub fn is_value(tok: i32) -> bool {
+    (VAL_BASE..VAL_BASE + N_VALS).contains(&tok)
+}
+
+pub fn is_filler(tok: i32) -> bool {
+    (FILLER_BASE..FILLER_BASE + N_FILLERS).contains(&tok)
+}
+
+pub fn is_special(tok: i32) -> bool {
+    (0..KEY_BASE).contains(&tok)
+}
+
+/// Human-readable token name (for logs and the examples).
+pub fn name(tok: i32) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        BOS => "<bos>".into(),
+        QUERY => "<query>".into(),
+        ANS => "<ans>".into(),
+        EOS => "<eos>".into(),
+        NOORD => "<noord>".into(),
+        t if (ORD_BASE..ORD_BASE + MAX_ORD).contains(&t) => {
+            format!("<ord{}>", t - ORD_BASE + 1)
+        }
+        t if is_key(t) => format!("K{}", t - KEY_BASE),
+        t if is_value(t) => format!("V{}", t - VAL_BASE),
+        t if is_filler(t) => format!("f{}", t - FILLER_BASE),
+        t => format!("<unk:{t}>"),
+    }
+}
+
+/// Render a token sequence for display.
+pub fn render(toks: &[i32]) -> String {
+    toks.iter().map(|&t| name(t)).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_disjoint_and_cover() {
+        for t in 0..VOCAB {
+            let classes = [is_key(t), is_value(t), is_filler(t),
+                           is_special(t)];
+            let n = classes.iter().filter(|&&b| b).count();
+            // reserved ids 14..15 are special-range; everything else exactly 1
+            assert!(n <= 1 || (is_special(t) && n == 1), "tok {t}");
+        }
+        assert!(is_key(key_tok(0)) && is_key(key_tok(63)));
+        assert!(is_value(val_tok(0)) && is_value(val_tok(63)));
+        assert!(is_filler(filler_tok(0)) && is_filler(filler_tok(111)));
+    }
+
+    #[test]
+    fn names_roundtrip_meaning() {
+        assert_eq!(name(BOS), "<bos>");
+        assert_eq!(name(key_tok(12)), "K12");
+        assert_eq!(name(val_tok(5)), "V5");
+        assert_eq!(name(ord_tok(2)), "<ord2>");
+        assert_eq!(render(&[QUERY, NOORD, key_tok(1), PAD, ANS]),
+                   "<query> <noord> K1 <pad> <ans>");
+    }
+
+    #[test]
+    fn ordinals() {
+        assert_eq!(ord_tok(1), ORD_BASE);
+        assert_eq!(ord_tok(8), ORD_BASE + 7);
+    }
+}

@@ -1,0 +1,214 @@
+//! Workloads: evaluation datasets emitted by the AOT build (the
+//! LongBench stand-ins) and synthetic load generation for throughput
+//! benches.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ProfileConfig;
+use crate::json;
+use crate::rng::Rng;
+use crate::tokenizer as tok;
+
+/// One multi-document QA sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub docs: Vec<Vec<i32>>,
+    pub query: Vec<i32>,
+    pub answer: Vec<i32>,
+    pub qtype: String,
+}
+
+/// A loaded evaluation dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub profile: String,
+    pub dataset: String,
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(
+            || format!("reading dataset {}", path.as_ref().display()),
+        )?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Dataset> {
+        let v = json::parse(text)?;
+        let samples = v
+            .req("samples")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("samples not an array"))?
+            .iter()
+            .map(|s| {
+                let docs = s
+                    .req("docs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("docs not an array"))?
+                    .iter()
+                    .map(|d| d.i32_vec().ok_or_else(|| anyhow!("bad doc")))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Sample {
+                    docs,
+                    query: s
+                        .req("query")?
+                        .i32_vec()
+                        .ok_or_else(|| anyhow!("bad query"))?,
+                    answer: s
+                        .req("answer")?
+                        .i32_vec()
+                        .ok_or_else(|| anyhow!("bad answer"))?,
+                    qtype: s
+                        .req("qtype")?
+                        .as_str()
+                        .unwrap_or("unknown")
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Dataset {
+            profile: v
+                .req("profile")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            dataset: v
+                .req("dataset")?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            samples,
+        })
+    }
+}
+
+/// Joint (training-layout) sequence assembly — mirrors
+/// `python/compile/data.py::assemble_full`. Returns
+/// `(tokens, valid, ans_start)` padded to `cfg.full_len`.
+pub fn assemble_full(sample: &Sample, cfg: &ProfileConfig)
+                     -> (Vec<i32>, Vec<f32>, usize) {
+    let mut seq: Vec<i32> = Vec::with_capacity(cfg.full_len);
+    for d in &sample.docs {
+        seq.extend_from_slice(d);
+    }
+    seq.extend_from_slice(&sample.query);
+    let ans_start = seq.len();
+    assert!(seq.len() <= cfg.full_len);
+    let mut tokens = vec![tok::PAD; cfg.full_len];
+    tokens[..seq.len()].copy_from_slice(&seq);
+    let mut valid = vec![0.0f32; cfg.full_len];
+    for v in valid.iter_mut().take(seq.len()) {
+        *v = 1.0;
+    }
+    (tokens, valid, ans_start)
+}
+
+/// Synthetic sample with arbitrary (untrained-distribution) content —
+/// used by throughput/latency benches where answer quality is
+/// irrelevant. Facts are still planted so selection has structure.
+pub fn synthetic_sample(cfg: &ProfileConfig, rng: &mut Rng) -> Sample {
+    let mut docs = Vec::with_capacity(cfg.n_docs);
+    for _ in 0..cfg.n_docs {
+        let mut d = Vec::with_capacity(cfg.doc_len);
+        d.push(tok::BOS);
+        while d.len() < cfg.doc_len {
+            if rng.next_f32() < 0.15 && d.len() + 2 <= cfg.doc_len {
+                d.push(tok::key_tok(rng.below(tok::N_KEYS as usize) as i32));
+                d.push(tok::val_tok(rng.below(tok::N_VALS as usize) as i32));
+            } else {
+                d.push(tok::filler_tok(
+                    rng.below(tok::N_FILLERS as usize) as i32,
+                ));
+            }
+        }
+        docs.push(d);
+    }
+    let k = tok::key_tok(rng.below(tok::N_KEYS as usize) as i32);
+    Sample {
+        docs,
+        query: vec![tok::QUERY, tok::NOORD, k, tok::PAD, tok::ANS],
+        answer: vec![tok::val_tok(0)],
+        qtype: "synthetic".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ProfileConfig {
+        let v = json::parse(
+            r#"{"name":"tiny","n_layers":2,"d_model":48,"n_heads":2,
+                "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+                "block_size":8,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":4}"#,
+        )
+        .unwrap();
+        ProfileConfig::from_json(&v).unwrap()
+    }
+
+    #[test]
+    fn dataset_from_json() {
+        let d = Dataset::from_json_str(
+            r#"{"profile":"tiny","dataset":"hotpot-sim","seed":1,
+                "samples":[{"docs":[[1,2],[1,3]],"query":[2,5,16,0,3],
+                            "answer":[80],"qtype":"single"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(d.samples.len(), 1);
+        assert_eq!(d.samples[0].docs[1], vec![1, 3]);
+        assert_eq!(d.samples[0].answer, vec![80]);
+    }
+
+    #[test]
+    fn assemble_layout() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let s = synthetic_sample(&cfg, &mut rng);
+        let (tokens, valid, ans_start) = assemble_full(&s, &cfg);
+        assert_eq!(tokens.len(), cfg.full_len);
+        assert_eq!(ans_start, cfg.ctx_len + cfg.query_len);
+        assert_eq!(tokens[ans_start - 1], tok::ANS);
+        assert_eq!(tokens[0], tok::BOS);
+        assert_eq!(tokens[cfg.doc_len], tok::BOS); // doc 2 starts with BOS
+        assert_eq!(valid[ans_start - 1], 1.0);
+        assert_eq!(valid[ans_start], 0.0);
+    }
+
+    #[test]
+    fn synthetic_docs_are_well_formed() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let s = synthetic_sample(&cfg, &mut rng);
+            assert_eq!(s.docs.len(), cfg.n_docs);
+            for d in &s.docs {
+                assert_eq!(d.len(), cfg.doc_len);
+                assert_eq!(d[0], tok::BOS);
+            }
+            assert_eq!(s.query.len(), cfg.query_len);
+        }
+    }
+
+    #[test]
+    fn real_tiny_dataset_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        let p = dir.join("datasets/d2x32_hotpot-sim.json");
+        if p.exists() {
+            let d = Dataset::load(&p).unwrap();
+            assert!(!d.samples.is_empty());
+            let cfg = tiny_cfg();
+            for s in &d.samples {
+                assert_eq!(s.docs.len(), cfg.n_docs);
+                assert_eq!(s.query.len(), cfg.query_len);
+                assert!(!s.answer.is_empty());
+            }
+        }
+    }
+}

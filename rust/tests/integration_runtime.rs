@@ -1,0 +1,152 @@
+//! End-to-end runtime integration: load tiny artifacts through PJRT and
+//! verify the same cross-entrypoint invariants the python suite checks —
+//! now through the HLO-text -> compile -> execute path the serving stack
+//! uses.
+//!
+//! Tests no-op (pass trivially) when `artifacts/` has not been built.
+
+use std::rc::Rc;
+
+use samkv::model::{Buffer, Model};
+use samkv::runtime::{artifacts_dir, Runtime};
+use samkv::tensor::Tensor;
+use samkv::workload::{assemble_full, Dataset};
+
+fn setup() -> Option<(Rc<Runtime>, Model, samkv::workload::Sample)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists()
+        || !dir.join("tiny_weights.bin").exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let rt = Rc::new(Runtime::new(dir.clone()).expect("runtime"));
+    let model = Model::load(rt.clone(), "tiny").expect("tiny model");
+    let ds = Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json"))
+        .expect("tiny dataset");
+    let sample = ds.samples[0].clone();
+    Some((rt, model, sample))
+}
+
+#[test]
+fn prefill_doc_shapes_and_probs() {
+    let Some((_rt, model, sample)) = setup() else { return };
+    let cfg = &model.cfg;
+    let out = model.prefill_doc(&sample.docs[0], 0).unwrap();
+    assert_eq!(out.kv.shape(), &[cfg.n_layers, 2, cfg.n_heads, cfg.doc_len,
+                                 cfg.head_dim]);
+    assert_eq!(out.attn.shape(), &[cfg.n_layers, cfg.n_heads, cfg.doc_len,
+                                   cfg.doc_len]);
+    assert_eq!(out.q_local.shape(), &[cfg.n_layers, cfg.n_heads,
+                                      cfg.head_dim]);
+    // each attention row sums to 1
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_heads {
+            for q in 0..cfg.doc_len {
+                let row: f32 =
+                    out.attn.slice_at(&[l, h, q]).iter().sum();
+                assert!((row - 1.0).abs() < 1e-3, "row sum {row}");
+            }
+        }
+    }
+}
+
+#[test]
+fn first_doc_prefill_matches_joint_prefill() {
+    let Some((_rt, model, sample)) = setup() else { return };
+    let cfg = model.cfg.clone();
+    let (tokens, valid, _) = assemble_full(&sample, &cfg);
+    let kv_full = model.prefill_full(&tokens, &valid).unwrap();
+    let doc = model.prefill_doc(&sample.docs[0], 0).unwrap();
+    // doc 1 occupies slots 0..Ld at identical positions in both layouts
+    let mut max_err = 0f32;
+    for l in 0..cfg.n_layers {
+        for kv in 0..2 {
+            for h in 0..cfg.n_heads {
+                for s in 0..cfg.doc_len {
+                    let a = kv_full.slice_at(&[l, kv, h, s]);
+                    let b = doc.kv.slice_at(&[l, kv, h, s]);
+                    for (x, y) in a.iter().zip(b) {
+                        max_err = max_err.max((x - y).abs());
+                    }
+                }
+            }
+        }
+    }
+    assert!(max_err < 2e-3, "max err {max_err}");
+}
+
+#[test]
+fn recompute_everything_recovers_joint_prefill() {
+    let Some((_rt, model, sample)) = setup() else { return };
+    let cfg = model.cfg.clone();
+    let (tokens, valid, _) = assemble_full(&sample, &cfg);
+    let kv_full = model.prefill_full(&tokens, &valid).unwrap();
+    let lt = cfg.full_len;
+    let kv_junk = Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, lt,
+                                  cfg.head_dim]);
+    let positions: Vec<i32> = (0..lt as i32).collect();
+    let rec = Tensor::full(&[cfg.n_layers, lt], 1.0);
+    let kv_out = model
+        .recompute(Buffer::Full, &tokens, &positions, &kv_junk, rec, &valid)
+        .unwrap();
+    let mut max_err = 0f32;
+    for (i, (a, b)) in kv_out.data().iter().zip(kv_full.data()).enumerate() {
+        // only compare valid slots
+        let s = (i / cfg.head_dim) % lt;
+        if valid[s] > 0.0 {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(max_err < 2e-3, "max err {max_err}");
+}
+
+#[test]
+fn decode_returns_cache_consistent_kv() {
+    let Some((_rt, model, sample)) = setup() else { return };
+    let cfg = model.cfg.clone();
+    let (tokens, valid, ans_start) = assemble_full(&sample, &cfg);
+    let kv_full = model.prefill_full(&tokens, &valid).unwrap();
+    let last = ans_start - 1; // ANS token slot
+    let kv_valid: Vec<f32> = (0..cfg.full_len)
+        .map(|i| if i < last { 1.0 } else { 0.0 })
+        .collect();
+    let out = model
+        .decode(Buffer::Full, tokens[last], last as i32, last as i32,
+                &kv_full, &kv_valid)
+        .unwrap();
+    assert_eq!(out.logits.len(), cfg.vocab);
+    // decode recomputes the ANS token's K/V — must match the joint prefill
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_heads {
+            let k_cache = kv_full.slice_at(&[l, 0, h, last]);
+            let k_new = out.k_new.slice_at(&[l, h]);
+            for (a, b) in k_cache.iter().zip(k_new) {
+                assert!((a - b).abs() < 2e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some((rt, model, sample)) = setup() else { return };
+    rt.reset_stats();
+    let _ = model.prefill_doc(&sample.docs[0], 0).unwrap();
+    let _ = model.prefill_doc(&sample.docs[1], 0).unwrap();
+    let stats = rt.stats();
+    let (name, s) = stats
+        .iter()
+        .find(|(n, _)| n == "tiny:prefill_doc")
+        .expect("stats entry");
+    assert_eq!(name, "tiny:prefill_doc");
+    assert_eq!(s.calls, 2);
+    assert!(s.total_ms > 0.0);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some((_rt, model, _sample)) = setup() else { return };
+    let bad = vec![1i32; 3];
+    assert!(model.prefill_doc(&bad, 0).is_err());
+}

@@ -1,0 +1,155 @@
+//! Serving-stack integration: engine thread + router + TCP server +
+//! client, over the tiny artifacts. No-ops when artifacts are missing.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use samkv::config::ServingConfig;
+use samkv::coordinator::{Engine, ServeRequest};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::server::{Client, Server};
+use samkv::workload::Dataset;
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+#[test]
+fn engine_serves_requests_from_channel() {
+    let Some(ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "SamKV-fusion".to_string(),
+                               Arc::clone(&metrics))
+        .unwrap();
+    let h = engine.handle();
+    let resp = h
+        .serve(ServeRequest {
+            id: 11,
+            sample: ds.samples[0].clone(),
+            policy: String::new(), // default policy
+        })
+        .unwrap();
+    assert_eq!(resp.id, 11);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed)
+            == 1);
+
+    // unknown policy is rejected, not crashed
+    let resp = h
+        .serve(ServeRequest {
+            id: 12,
+            sample: ds.samples[0].clone(),
+            policy: "NoSuchPolicy".to_string(),
+        })
+        .unwrap();
+    assert!(resp.error.is_some());
+}
+
+#[test]
+fn engine_parallel_submitters() {
+    let Some(ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "Reuse".to_string(), Arc::clone(&metrics))
+        .unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let h = engine.handle();
+            let s = ds.samples[i % ds.samples.len()].clone();
+            thread::spawn(move || {
+                h.serve(ServeRequest { id: i as u64, sample: s,
+                                       policy: String::new() })
+                    .unwrap()
+            })
+        })
+        .collect();
+    for t in handles {
+        let r = t.join().unwrap();
+        assert!(r.error.is_none());
+    }
+    assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+               6);
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    let Some(ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "SamKV-fusion".to_string(),
+                               Arc::clone(&metrics))
+        .unwrap();
+    let handles = vec![engine.handle()];
+    let server = Server::new(handles, metrics);
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = thread::spawn(move || {
+        server.run("127.0.0.1:0", move |p| {
+            port_tx.send(p).unwrap();
+        })
+    });
+    let port = port_rx.recv().unwrap();
+    let addr = format!("127.0.0.1:{port}");
+
+    let mut client = Client::connect(&addr).unwrap();
+    let s = &ds.samples[0];
+    let resp = client.request(&s.docs, &s.query, "Reuse").unwrap();
+    assert!(resp.get("error").is_none(), "{resp}");
+    assert!(resp.get("answer").unwrap().as_arr().is_some());
+    assert!(resp.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // second request on the same connection hits the doc cache
+    let resp2 = client.request(&s.docs, &s.query, "Reuse").unwrap();
+    assert_eq!(resp2.get("cache_warm").unwrap().as_bool(), Some(true));
+    // same answer with warm cache
+    assert_eq!(resp.get("answer").unwrap(), resp2.get("answer").unwrap());
+
+    let m = client.metrics().unwrap();
+    assert!(m.get("report").unwrap().as_str().unwrap()
+        .contains("completed=2"));
+
+    client.shutdown().unwrap();
+    srv.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_request_returns_error_line() {
+    let Some(_ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "Reuse".to_string(), Arc::clone(&metrics))
+        .unwrap();
+    let server = Server::new(vec![engine.handle()], metrics);
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = thread::spawn(move || {
+        server.run("127.0.0.1:0", move |p| {
+            port_tx.send(p).unwrap();
+        })
+    });
+    let port = port_rx.recv().unwrap();
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream =
+        std::net::TcpStream::connect(format!("127.0.0.1:{port}")).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+    writeln!(w, "{{\"cmd\":\"shutdown\"}}").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    srv.join().unwrap().unwrap();
+}

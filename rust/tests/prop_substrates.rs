@@ -1,0 +1,223 @@
+//! Property-based tests over the substrates and the sparse-pipeline
+//! invariants, driven by the seeded [`samkv::rng::Rng`] (no proptest in
+//! the offline image — each property runs a few hundred random cases
+//! with the failing seed printed by the assertion message).
+
+use samkv::eval::token_f1;
+use samkv::json::{self, Value};
+use samkv::rng::Rng;
+use samkv::tensor::{cosine, powerlaw_fit, Tensor};
+
+const CASES: u64 = 200;
+
+fn rand_value(rng: &mut Rng, depth: usize) -> Value {
+    match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_f32() < 0.5),
+        2 => Value::Num((rng.next_f64() * 2e6 - 1e6).round() / 16.0),
+        3 => {
+            let n = rng.below(12);
+            Value::Str(
+                (0..n)
+                    .map(|_| {
+                        char::from_u32(32 + rng.below(90) as u32).unwrap()
+                    })
+                    .collect(),
+            )
+        }
+        4 => Value::Arr(
+            (0..rng.below(5)).map(|_| rand_value(rng, depth + 1)).collect(),
+        ),
+        _ => Value::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), rand_value(rng, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let v = rand_value(&mut rng, 0);
+        let s = v.to_string();
+        let back = json::parse(&s)
+            .unwrap_or_else(|e| panic!("seed {seed}: parse failed {e}: {s}"));
+        assert_eq!(v, back, "seed {seed}: {s}");
+    }
+}
+
+#[test]
+fn prop_f1_bounds_and_symmetries() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xf1);
+        let n = 1 + rng.below(4);
+        let m = 1 + rng.below(4);
+        let pred: Vec<i32> =
+            (0..n).map(|_| 80 + rng.below(8) as i32).collect();
+        let gold: Vec<i32> =
+            (0..m).map(|_| 80 + rng.below(8) as i32).collect();
+        let f = token_f1(&pred, &gold);
+        assert!((0.0..=1.0).contains(&f), "seed {seed}: f1 {f}");
+        // identity
+        assert_eq!(token_f1(&gold, &gold), 1.0);
+        // symmetry of the overlap-based F1
+        let g = token_f1(&gold, &pred);
+        assert!((f - g).abs() < 1e-12, "seed {seed}: asymmetric {f} {g}");
+        // permutation invariance
+        let mut shuffled = pred.clone();
+        rng.shuffle(&mut shuffled);
+        assert_eq!(token_f1(&shuffled, &gold), f, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_cosine_bounds_and_scale_invariance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xc0);
+        let d = 2 + rng.below(16);
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let c = cosine(&a, &b);
+        assert!((-1.0 - 1e-5..=1.0 + 1e-5).contains(&c), "seed {seed}");
+        let scaled: Vec<f32> = a.iter().map(|x| x * 7.5).collect();
+        let c2 = cosine(&scaled, &b);
+        assert!((c - c2).abs() < 1e-4, "seed {seed}: {c} vs {c2}");
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-5, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_powerlaw_fit_recovers_planted_exponent() {
+    for seed in 0..100 {
+        let mut rng = Rng::new(seed ^ 0x99);
+        let alpha = 0.2 + 2.3 * rng.next_f32();
+        let c = 0.5 + rng.next_f32();
+        let n = 16 + rng.below(48);
+        let ys: Vec<f32> =
+            (1..=n).map(|x| c * (x as f32).powf(-alpha)).collect();
+        let (got, _) = powerlaw_fit(&ys);
+        assert!((got - alpha).abs() < 1e-2,
+                "seed {seed}: planted {alpha}, got {got}");
+    }
+}
+
+#[test]
+fn prop_tensor_slice_at_equals_manual_offset() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7e);
+        let dims: Vec<usize> = (0..3).map(|_| 1 + rng.below(5)).collect();
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let t = Tensor::new(dims.clone(), data).unwrap();
+        let i = rng.below(dims[0]);
+        let j = rng.below(dims[1]);
+        let s = t.slice_at(&[i, j]);
+        for (k, &v) in s.iter().enumerate() {
+            assert_eq!(v, t.at(&[i, j, k]), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_rng_shuffle_is_permutation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5f);
+        let n = 1 + rng.below(64);
+        let mut xs: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max() {
+    use samkv::coordinator::batcher::next_batch;
+    use std::sync::mpsc;
+    use std::time::Duration;
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0xba);
+        let (tx, rx) = mpsc::channel();
+        let total = 1 + rng.below(30);
+        for i in 0..total {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let max = 1 + rng.below(8);
+        let mut seen = Vec::new();
+        while let Some(batch) =
+            next_batch(&rx, max, Duration::from_millis(1))
+        {
+            assert!(batch.len() <= max, "seed {seed}");
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..total).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_cross_filter_output_is_subset_of_picks() {
+    use samkv::config::ProfileConfig;
+    use samkv::sparse::{cross_filter, DocSelection};
+    let cfg_json = r#"{"name":"t","n_layers":2,"d_model":8,"n_heads":1,
+        "head_dim":4,"d_ff":8,"vocab":16,"n_docs":4,"doc_len":32,
+        "block_size":4,"init_blocks":1,"local_blocks":1,
+        "sel_cap_blocks":4,"stable_layers":2,"rope_theta":10000.0,
+        "query_len":5,"answer_max":4,"ctx_len":128,"full_len":137,
+        "sparse_kv_len":48,"sparse_len":57,"blocks_per_doc":8,
+        "comp_len":32}"#;
+    let cfg =
+        ProfileConfig::from_json(&json::parse(cfg_json).unwrap()).unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xcf);
+        let sels: Vec<DocSelection> = (0..4)
+            .map(|_| {
+                let scores: Vec<f32> =
+                    (0..8).map(|_| rng.normal() as f32).collect();
+                let n_pick = rng.below(6);
+                let mut picked: Vec<usize> = (1..7).collect();
+                rng.shuffle(&mut picked);
+                picked.truncate(n_pick);
+                picked.sort_unstable();
+                DocSelection { p: 0.5, p_per_layer: vec![], scores, picked }
+            })
+            .collect();
+        let out = cross_filter(&cfg, &sels);
+        let total: usize = out.iter().map(|v| v.len()).sum();
+        assert!(total <= cfg.sel_cap_blocks, "seed {seed}");
+        for (d, blocks) in out.iter().enumerate() {
+            for b in blocks {
+                assert!(sels[d].picked.contains(b),
+                        "seed {seed}: doc {d} block {b} not picked");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_personalized_query_is_identity_without_bias() {
+    use samkv::sparse::personalized_queries;
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0xe1);
+        let shape = [2usize, 2, 4];
+        let n: usize = shape.iter().product();
+        let q = Tensor::new(shape.to_vec(),
+                            (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap();
+        let l1 = Tensor::new(shape.to_vec(),
+                             (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap();
+        let l2 = Tensor::new(shape.to_vec(),
+                             (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap();
+        let out = personalized_queries(&q, &[&l1, &l2], false);
+        assert_eq!(out[0], q, "seed {seed}");
+        assert_eq!(out[1], q, "seed {seed}");
+        // with bias, outputs differ across docs unless locals coincide
+        let out_b = personalized_queries(&q, &[&l1, &l2], true);
+        assert_ne!(out_b[0], out_b[1], "seed {seed}");
+    }
+}
