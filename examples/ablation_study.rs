@@ -23,7 +23,8 @@ fn main() -> samkv::Result<()> {
     println!("SamKV ablations on {} / {} (n={n})\n", profile, ds.dataset);
 
     let mut tbl = Table::new(&["selection", "pers-bias", "recompute",
-                               "update", "F1", "TTFT", "seq%", "rec%"]);
+                               "update", "F1", "TTFT", "plan ms",
+                               "seq%", "rec%"]);
     for (sel, pb, rec, update) in [
         (false, false, false, UpdateStrategy::Fusion),
         (false, false, true, UpdateStrategy::Fusion),
@@ -47,6 +48,7 @@ fn main() -> samkv::Result<()> {
             format!("{update:?}"),
             format!("{:.2}", r.f1),
             ms(r.mean_ttft_ms),
+            format!("{:.3}", r.mean_plan_ms),
             format!("{:.1}", 100.0 * r.mean_seq_ratio),
             format!("{:.1}", 100.0 * r.mean_recompute_ratio),
         ]);

@@ -1,13 +1,17 @@
 //! Quickstart: load a model profile, serve one multi-document request
-//! with SamKV, and print what the pipeline did.
+//! with SamKV through the staged serving protocol (plan → prefill_docs
+//! → assemble → attend → decode_step), streaming tokens as they
+//! decode, and print what each stage did.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+use std::io::Write;
+
 use samkv::bench::experiments as exp;
 use samkv::config::SamKvConfig;
 use samkv::kvcache::CacheStore;
-use samkv::policies::{ContextPolicy, SamKvPolicy};
+use samkv::policies::{ContextPolicy, FnSink, SamKvPolicy, ServeSession};
 use samkv::tokenizer as tok;
 
 fn main() -> samkv::Result<()> {
@@ -28,15 +32,50 @@ fn main() -> samkv::Result<()> {
 
     let mut store = CacheStore::unbounded();
     let policy = SamKvPolicy::new(SamKvConfig::default());
-    let out = policy.run(&model, &mut store, sample)?;
 
-    println!("\nSamKV-fusion answered: {}", tok::render(&out.answer));
-    println!("sequence ratio     : {:.1}% of the joint context",
+    // stage 1 — pure planning (no model, no device)
+    let mut session = ServeSession::new(&policy, &model.cfg, sample);
+    println!("\nplan: {} doc caches needed, buffer {:?}, \
+              {} fixed spans, <= {} dynamic blocks, \
+              ~{} tokens planned for recompute",
+             session.plan().doc_hashes.len(), session.plan().buffer,
+             session.plan().fixed_spans.len(),
+             session.plan().dynamic_blocks,
+             session.plan().planned_recompute_tokens);
+
+    // stages 2-4 — document prefill, sparsify/recompute, query prefill
+    session.prefill_docs(&model, &mut store)?;
+    session.assemble(&model)?;
+    session.attend(&model)?;
+
+    // stage 5 — streaming decode: tokens print as they are generated
+    print!("\nSamKV-fusion streams:");
+    let mut sink = FnSink(|t: i32| {
+        print!(" {}", tok::render(&[t]));
+        let _ = std::io::stdout().flush();
+    });
+    while session.decode_step(&model, &mut sink)?.is_some() {}
+    println!();
+
+    let out = session.finish();
+    println!("\nfinal answer        : {}", tok::render(&out.answer));
+    println!("plan                : {:.3} ms", out.stats.plan_ms);
+    println!("doc prefill         : {:.1} ms (warm: {})",
+             out.stats.doc_prefill_ms, out.stats.cache_warm);
+    println!("TTFT (assemble+attend+1st token): {:.1} ms",
+             out.stats.ttft_ms);
+    println!("decode              : {:.1} ms", out.stats.decode_ms);
+    println!("sequence ratio      : {:.1}% of the joint context",
              100.0 * out.stats.seq_ratio);
-    println!("recompute ratio    : {:.1}% of context tokens",
+    println!("recompute ratio     : {:.1}% of context tokens",
              100.0 * out.stats.recompute_ratio);
-    println!("KV loaded          : {} KiB", out.stats.kv_bytes / 1024);
-    println!("TTFT               : {:.1} ms (docs cached: {})",
-             out.stats.ttft_ms, out.stats.cache_warm);
+    println!("KV loaded           : {} KiB", out.stats.kv_bytes / 1024);
+
+    // the legacy blocking entry point still works and is
+    // token-identical — it is a default method over the same stages
+    let blocking = policy.run(&model, &mut store, sample)?;
+    assert_eq!(blocking.answer, out.answer);
+    println!("\n`run()` (blocking, warm cache) agreed: {}",
+             tok::render(&blocking.answer));
     Ok(())
 }

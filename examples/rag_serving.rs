@@ -67,6 +67,21 @@ fn main() -> samkv::Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+
+    // streaming: tokens arrive over the wire as they decode
+    let s = &pool[0];
+    print!("\nstreaming demo:");
+    let resp = client.request_stream(&s.docs, &s.query, &policy, |t| {
+        print!(" {t}");
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+    })?;
+    println!("\nstreamed request: ttft {:.1}ms (plan {:.3}ms, \
+              doc prefill {:.1}ms, warm {})",
+             resp.get("ttft_ms").unwrap().as_f64().unwrap(),
+             resp.get("plan_ms").unwrap().as_f64().unwrap(),
+             resp.get("doc_prefill_ms").unwrap().as_f64().unwrap(),
+             resp.get("cache_warm").unwrap().as_bool().unwrap());
+
     println!("\n{}", metrics.report());
     println!("{} requests in {:.1}s -> {:.2} req/s", n_requests, wall,
              n_requests as f64 / wall);

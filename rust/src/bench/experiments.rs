@@ -63,6 +63,8 @@ fn eval_to_json(r: &EvalResult) -> Value {
         .set("em", r.em)
         .set("ttft_ms", r.mean_ttft_ms)
         .set("decode_ms", r.mean_decode_ms)
+        .set("plan_ms", r.mean_plan_ms)
+        .set("doc_prefill_ms", r.mean_doc_prefill_ms)
         .set("seq_ratio", r.mean_seq_ratio)
         .set("recompute_ratio", r.mean_recompute_ratio)
         .set("kv_bytes", r.mean_kv_bytes)
@@ -377,7 +379,7 @@ pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
 pub fn throughput(profile: &str, policy: &str, n_requests: usize,
                   n_unique: usize) -> Result<Value> {
     use crate::config::ServingConfig;
-    use crate::coordinator::{Engine, ServeRequest};
+    use crate::coordinator::{recv_done, Engine, ServeRequest};
     use crate::metrics::Metrics;
     use crate::rng::Rng;
     use crate::workload::synthetic_sample;
@@ -410,15 +412,16 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
             id: i as u64,
             sample,
             policy: policy.to_string(),
+            stream: false,
         })?;
         pending.push_back(rx);
         if pending.len() >= 8 {
-            let _ = pending.pop_front().unwrap().recv();
+            let _ = recv_done(&pending.pop_front().unwrap());
         }
     }
     let mut errors = 0usize;
     while let Some(rx) = pending.pop_front() {
-        match rx.recv() {
+        match recv_done(&rx) {
             Ok(r) if r.error.is_none() => {}
             _ => errors += 1,
         }
@@ -438,7 +441,12 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         .set("errors", errors)
         .set("ttft_mean_ms", metrics.ttft.mean_ms())
         .set("ttft_p95_ms", metrics.ttft.percentile_ms(0.95))
-        .set("e2e_p95_ms", metrics.e2e.percentile_ms(0.95));
+        .set("e2e_p95_ms", metrics.e2e.percentile_ms(0.95))
+        .set("plan_mean_ms", metrics.plan.mean_ms())
+        .set("doc_prefill_mean_ms", metrics.doc_prefill.mean_ms())
+        .set("doc_prefills",
+             metrics.doc_prefills
+                 .load(std::sync::atomic::Ordering::Relaxed) as i64);
     save_result(&format!("throughput_{profile}_{policy}"), &v)?;
     Ok(v)
 }

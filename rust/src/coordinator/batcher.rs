@@ -63,6 +63,33 @@ mod tests {
     }
 
     #[test]
+    fn disconnect_mid_gather_returns_partial_batch() {
+        // first item arrives, then the sender closes before max_batch:
+        // the gathered partial batch is still delivered (not dropped),
+        // and the NEXT call observes the closed channel
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(next_batch(&rx, 8, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_under_max() {
+        // a slow trickle never fills max_batch; the window deadline
+        // flushes whatever was gathered so latency stays bounded
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, 64, Duration::from_millis(10)).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        drop(tx);
+    }
+
+    #[test]
     fn gathers_late_arrivals_within_window() {
         let (tx, rx) = mpsc::channel();
         tx.send(0).unwrap();

@@ -2,6 +2,16 @@
 //! serving requests from a channel (dynamic batching applied at the
 //! queue). The PJRT client is not `Send`, so everything device-adjacent
 //! lives here.
+//!
+//! The batch loop exploits the staged policy protocol
+//! ([`crate::policies::pipeline`]): every request in the batch is
+//! planned up front (pure, model-free), shared document prefills are
+//! deduplicated across the batch (the multi-context RAG hot path —
+//! the same retrieved document appearing in many concurrent requests is
+//! prefilled once and its cost split across sharers), then the
+//! per-request assemble/attend/decode stages are interleaved
+//! round-robin so streaming requests emit tokens fairly instead of
+//! serializing whole requests.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -9,7 +19,7 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -17,14 +27,15 @@ use crate::config::ServingConfig;
 use crate::kvcache::CacheStore;
 use crate::metrics::Metrics;
 use crate::model::Model;
-use crate::policies::{all_policies, ContextPolicy};
+use crate::policies::pipeline::{dedup_doc_plans, FnSink, ServeSession};
+use crate::policies::{all_policies, ContextPolicy, ServePlan};
 use crate::runtime::Runtime;
 
 use super::batcher::next_batch;
-use super::request::{ServeRequest, ServeResponse};
+use super::request::{recv_done, ServeEvent, ServeRequest, ServeResponse};
 
 enum Msg {
-    Serve(ServeRequest, mpsc::Sender<ServeResponse>),
+    Serve(ServeRequest, mpsc::Sender<ServeEvent>),
 }
 
 /// Cloneable handle for submitting work to one engine thread.
@@ -35,9 +46,10 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Fire a request; the response arrives on the returned receiver.
+    /// Fire a request; events (streamed tokens, then the terminal
+    /// response) arrive on the returned receiver.
     pub fn submit(&self, req: ServeRequest)
-                  -> Result<mpsc::Receiver<ServeResponse>> {
+                  -> Result<mpsc::Receiver<ServeEvent>> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Msg::Serve(req, tx))
@@ -45,15 +57,17 @@ impl EngineHandle {
         Ok(rx)
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit and block for the terminal response.
     pub fn serve(&self, req: ServeRequest) -> Result<ServeResponse> {
         let rx = self.submit(req)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))
+        recv_done(&rx)
     }
 }
 
 pub struct Engine {
-    handle: EngineHandle,
+    /// `Some` while the engine runs; taken on drop to close the queue.
+    tx: Option<mpsc::Sender<Msg>>,
+    index: usize,
     join: Option<thread::JoinHandle<()>>,
 }
 
@@ -75,19 +89,22 @@ impl Engine {
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine init crashed"))??;
-        Ok(Engine { handle: EngineHandle { tx, index }, join: Some(join) })
+        Ok(Engine { tx: Some(tx), index, join: Some(join) })
     }
 
     pub fn handle(&self) -> EngineHandle {
-        self.handle.clone()
+        EngineHandle {
+            tx: self.tx.clone().expect("engine running"),
+            index: self.index,
+        }
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        // close the queue; the thread drains and exits
-        let (dead_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.handle.tx, dead_tx);
+        // close our end of the queue; the thread drains and exits once
+        // every outstanding `EngineHandle` clone is gone too
+        drop(self.tx.take());
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -130,54 +147,176 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
     while let Some(batch) =
         next_batch(&rx, cfg.max_batch, Duration::from_millis(2))
     {
-        for msg in batch {
-            let Msg::Serve(req, reply) = msg;
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            let pname = if req.policy.is_empty() {
-                default_policy.clone()
-            } else {
-                req.policy.clone()
-            };
-            let resp = match policies.get(&pname) {
-                Some(policy) => {
-                    match policy.run(&model, &mut store, &req.sample) {
-                        Ok(out) => {
-                            metrics.record_completion(
-                                out.stats.ttft_ms,
-                                out.stats.decode_ms,
-                                out.answer.len(),
-                                store.stats().current_bytes,
-                            );
-                            ServeResponse {
-                                id: req.id,
-                                answer: out.answer,
-                                stats: out.stats,
-                                error: None,
-                            }
-                        }
-                        Err(e) => {
-                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                            ServeResponse {
-                                id: req.id,
-                                answer: vec![],
-                                stats: Default::default(),
-                                error: Some(format!("{e:#}")),
-                            }
-                        }
-                    }
-                }
-                None => {
-                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    ServeResponse {
-                        id: req.id,
-                        answer: vec![],
-                        stats: Default::default(),
-                        error: Some(format!("unknown policy `{pname}`")),
-                    }
-                }
-            };
-            let _ = reply.send(resp);
-        }
+        serve_batch(&model, &mut store, &policies, &default_policy,
+                    &metrics, batch);
     }
     crate::info!("engine-{index} shutting down");
+}
+
+fn error_response(id: u64, msg: String) -> ServeResponse {
+    ServeResponse {
+        id,
+        answer: vec![],
+        stats: Default::default(),
+        error: Some(msg),
+    }
+}
+
+/// Serve one gathered batch through the staged protocol.
+fn serve_batch(model: &Model, store: &mut CacheStore,
+               policies: &HashMap<String, Box<dyn ContextPolicy>>,
+               default_policy: &str, metrics: &Metrics,
+               batch: Vec<Msg>) {
+    let items: Vec<(ServeRequest, mpsc::Sender<ServeEvent>)> = batch
+        .into_iter()
+        .map(|m| match m {
+            Msg::Serve(req, reply) => (req, reply),
+        })
+        .collect();
+    metrics.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
+
+    // --- stage 1: plan every request (pure, model-free) ---------------
+    let mut sessions: Vec<Option<ServeSession<dyn ContextPolicy>>> =
+        Vec::with_capacity(items.len());
+    for (req, reply) in &items {
+        let pname = if req.policy.is_empty() {
+            default_policy
+        } else {
+            req.policy.as_str()
+        };
+        match policies.get(pname) {
+            Some(p) => sessions.push(Some(ServeSession::new(
+                p.as_ref(), &model.cfg, &req.sample))),
+            None => {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(ServeEvent::Done(error_response(
+                    req.id, format!("unknown policy `{pname}`"))));
+                sessions.push(None);
+            }
+        }
+    }
+
+    // --- stage 2: cross-request doc-prefill dedup ----------------------
+    // prefill each document needed by the batch exactly once; split the
+    // cost across the requests sharing it
+    let shared = {
+        let plans: Vec<Option<&ServePlan>> = sessions
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.plan()))
+            .collect();
+        dedup_doc_plans(&plans)
+    };
+    for sd in &shared {
+        // sharers may have died earlier in this stage (a previous doc's
+        // prefill failed); don't prefill for nobody, and split the cost
+        // over the requests actually served
+        let live: Vec<usize> = sd
+            .sharers
+            .iter()
+            .copied()
+            .filter(|&si| sessions[si].is_some())
+            .collect();
+        if live.is_empty() {
+            continue;
+        }
+        let tokens = &items[sd.req].0.sample.docs[sd.doc];
+        let t = Instant::now();
+        match store.get_or_prefill(model, tokens) {
+            Ok((_, true)) => continue,  // already cached: nothing to credit
+            Ok((_, false)) => {}
+            Err(e) => {
+                // fail every live sharer now rather than re-running the
+                // (expensive, failing) prefill once per request later
+                for &si in &live {
+                    sessions[si] = None;
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let (req, reply) = &items[si];
+                    let _ = reply.send(ServeEvent::Done(error_response(
+                        req.id, format!("doc prefill failed: {e:#}"))));
+                }
+                continue;
+            }
+        }
+        metrics.doc_prefills.fetch_add(1, Ordering::Relaxed);
+        let share = t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
+        for &si in &live {
+            if let Some(s) = sessions[si].as_mut() {
+                s.credit_shared_prefill(share, true);
+            }
+        }
+    }
+
+    // --- stage 3: per-request prefill (cache hits) + assemble + attend
+    for i in 0..sessions.len() {
+        if sessions[i].is_none() {
+            continue;
+        }
+        let staged = (|| -> Result<()> {
+            let s = sessions[i].as_mut().unwrap();
+            s.prefill_docs(model, store)?;
+            s.assemble(model)?;
+            s.attend(model)
+        })();
+        if let Err(e) = staged {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let (req, reply) = &items[i];
+            let _ = reply.send(ServeEvent::Done(error_response(
+                req.id, format!("{e:#}"))));
+            sessions[i] = None;
+        }
+    }
+
+    // --- stage 4: interleaved decode, one token per session per round
+    loop {
+        let mut progressed = false;
+        for i in 0..sessions.len() {
+            if sessions[i].is_none() {
+                continue;
+            }
+            let (req, reply) = &items[i];
+            let step = {
+                let s = sessions[i].as_mut().unwrap();
+                let index = s.answer().len();
+                let mut sink = FnSink(|token: i32| {
+                    if req.stream {
+                        let _ = reply.send(ServeEvent::Token {
+                            id: req.id,
+                            index,
+                            token,
+                        });
+                    }
+                });
+                s.decode_step(model, &mut sink)
+            };
+            match step {
+                Ok(Some(_)) => progressed = true,
+                Ok(None) => {
+                    let out = sessions[i].take().unwrap().finish();
+                    metrics.record_completion(
+                        out.stats.ttft_ms,
+                        out.stats.decode_ms,
+                        out.answer.len(),
+                        store.stats().current_bytes,
+                    );
+                    metrics.record_stage_times(out.stats.plan_ms,
+                                               out.stats.doc_prefill_ms);
+                    let _ = reply.send(ServeEvent::Done(ServeResponse {
+                        id: req.id,
+                        answer: out.answer,
+                        stats: out.stats,
+                        error: None,
+                    }));
+                }
+                Err(e) => {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(ServeEvent::Done(error_response(
+                        req.id, format!("{e:#}"))));
+                    sessions[i] = None;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
 }

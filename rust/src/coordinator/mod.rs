@@ -12,5 +12,5 @@ pub mod request;
 pub mod router;
 
 pub use engine::{Engine, EngineHandle};
-pub use request::{ServeRequest, ServeResponse};
+pub use request::{recv_done, ServeEvent, ServeRequest, ServeResponse};
 pub use router::Router;

@@ -1,5 +1,7 @@
 //! Request/response types crossing the server <-> engine boundary.
 
+use std::sync::mpsc;
+
 use crate::json::Value;
 use crate::policies::RunStats;
 use crate::workload::Sample;
@@ -11,11 +13,15 @@ pub struct ServeRequest {
     pub sample: Sample,
     /// Policy table name (e.g. "SamKV-fusion"); empty = engine default.
     pub policy: String,
+    /// Stream tokens as they decode ([`ServeEvent::Token`] events
+    /// before the terminal [`ServeEvent::Done`]).
+    pub stream: bool,
 }
 
 impl ServeRequest {
     /// Parse the JSON-lines wire format:
-    /// `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion"}`.
+    /// `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion",
+    ///   "stream":true}`.
     pub fn from_json(v: &Value) -> crate::Result<ServeRequest> {
         let docs = v
             .req("docs")?
@@ -43,11 +49,15 @@ impl ServeRequest {
                 .and_then(|p| p.as_str())
                 .unwrap_or("")
                 .to_string(),
+            stream: v
+                .get("stream")
+                .and_then(|s| s.as_bool())
+                .unwrap_or(false),
         })
     }
 }
 
-/// The engine's reply.
+/// The engine's terminal reply.
 #[derive(Debug, Clone)]
 pub struct ServeResponse {
     pub id: u64,
@@ -68,6 +78,8 @@ impl ServeResponse {
             )
             .set("ttft_ms", self.stats.ttft_ms)
             .set("decode_ms", self.stats.decode_ms)
+            .set("plan_ms", self.stats.plan_ms)
+            .set("doc_prefill_ms", self.stats.doc_prefill_ms)
             .set("seq_ratio", self.stats.seq_ratio)
             .set("recompute_ratio", self.stats.recompute_ratio)
             .set("kv_bytes", self.stats.kv_bytes)
@@ -76,6 +88,42 @@ impl ServeResponse {
             v = v.set("error", e.as_str());
         }
         v
+    }
+}
+
+/// One message on a request's reply channel. Non-streaming requests
+/// only ever see [`ServeEvent::Done`]; streaming requests see one
+/// [`ServeEvent::Token`] per generated token first.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// One decoded answer token, emitted as soon as it exists.
+    Token { id: u64, index: usize, token: i32 },
+    /// Terminal event: the full response (or error).
+    Done(ServeResponse),
+}
+
+impl ServeEvent {
+    pub fn to_json(&self) -> Value {
+        match self {
+            ServeEvent::Token { id, index, token } => Value::obj()
+                .set("id", *id as i64)
+                .set("index", *index as i64)
+                .set("token", *token as i64),
+            ServeEvent::Done(resp) => resp.to_json(),
+        }
+    }
+}
+
+/// Drain a reply channel until the terminal event, discarding any
+/// streamed tokens (the blocking-caller path).
+pub fn recv_done(rx: &mpsc::Receiver<ServeEvent>)
+                 -> crate::Result<ServeResponse> {
+    loop {
+        match rx.recv() {
+            Ok(ServeEvent::Done(resp)) => return Ok(resp),
+            Ok(ServeEvent::Token { .. }) => continue,
+            Err(_) => anyhow::bail!("engine dropped reply"),
+        }
     }
 }
 
@@ -95,6 +143,16 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.sample.docs.len(), 2);
         assert_eq!(r.policy, "Reuse");
+        assert!(!r.stream); // default: no streaming
+    }
+
+    #[test]
+    fn parse_stream_flag() {
+        let v = json::parse(
+            r#"{"id":1,"docs":[[1]],"query":[2],"stream":true}"#,
+        )
+        .unwrap();
+        assert!(ServeRequest::from_json(&v).unwrap().stream);
     }
 
     #[test]
@@ -116,6 +174,34 @@ mod tests {
         let s = r.to_json().to_string();
         assert!(s.contains("\"id\":3"));
         assert!(s.contains("\"answer\":[80,81]"));
+        assert!(s.contains("plan_ms"));
+        assert!(s.contains("doc_prefill_ms"));
         assert!(!s.contains("error"));
+    }
+
+    #[test]
+    fn token_event_serializes() {
+        let e = ServeEvent::Token { id: 2, index: 1, token: 81 };
+        let s = e.to_json().to_string();
+        assert!(s.contains("\"token\":81"), "{s}");
+        assert!(s.contains("\"index\":1"), "{s}");
+    }
+
+    #[test]
+    fn recv_done_skips_tokens() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(ServeEvent::Token { id: 1, index: 0, token: 80 })
+            .unwrap();
+        tx.send(ServeEvent::Done(ServeResponse {
+            id: 1,
+            answer: vec![80],
+            stats: Default::default(),
+            error: None,
+        }))
+        .unwrap();
+        let resp = recv_done(&rx).unwrap();
+        assert_eq!(resp.answer, vec![80]);
+        drop(tx);
+        assert!(recv_done(&rx).is_err());
     }
 }

@@ -48,6 +48,10 @@ pub struct EvalResult {
     pub em: f64,
     pub mean_ttft_ms: f64,
     pub mean_decode_ms: f64,
+    /// Mean pure-planning stage time (staged serving protocol).
+    pub mean_plan_ms: f64,
+    /// Mean document-prefill stage time (near zero: caches pre-warmed).
+    pub mean_doc_prefill_ms: f64,
     pub mean_seq_ratio: f64,
     pub mean_recompute_ratio: f64,
     pub mean_kv_bytes: f64,
@@ -69,6 +73,8 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
     let mut em_sum = 0.0;
     let mut ttft = 0.0;
     let mut decode = 0.0;
+    let mut plan = 0.0;
+    let mut doc_prefill = 0.0;
     let mut seq = 0.0;
     let mut rec = 0.0;
     let mut bytes = 0.0;
@@ -86,6 +92,8 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         em_sum += f64::from(out.answer == sample.answer);
         ttft += out.stats.ttft_ms;
         decode += out.stats.decode_ms;
+        plan += out.stats.plan_ms;
+        doc_prefill += out.stats.doc_prefill_ms;
         seq += out.stats.seq_ratio;
         rec += out.stats.recompute_ratio;
         bytes += out.stats.kv_bytes as f64;
@@ -106,6 +114,8 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         em: em_sum / nf,
         mean_ttft_ms: ttft / nf,
         mean_decode_ms: decode / nf,
+        mean_plan_ms: plan / nf,
+        mean_doc_prefill_ms: doc_prefill / nf,
         mean_seq_ratio: seq / nf,
         mean_recompute_ratio: rec / nf,
         mean_kv_bytes: bytes / nf,

@@ -84,11 +84,19 @@ pub struct Metrics {
     pub ttft: Histogram,
     pub e2e: Histogram,
     pub decode: Histogram,
+    /// Pure planning stage (staged serving protocol).
+    pub plan: Histogram,
+    /// Document-prefill stage (per request, dedup shares included).
+    pub doc_prefill: Histogram,
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub kv_bytes_gauge: AtomicU64,
+    /// Document prefills executed by the engine's batch-dedup stage
+    /// (requests sharing a document count it once; per-session cache
+    /// hits never count).
+    pub doc_prefills: AtomicU64,
     started: Mutex<Option<Instant>>,
 }
 
@@ -109,6 +117,12 @@ impl Metrics {
             .fetch_add(tokens as u64, Ordering::Relaxed);
         self.kv_bytes_gauge
             .store(kv_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record the staged-protocol timings of one completed request.
+    pub fn record_stage_times(&self, plan_ms: f64, doc_prefill_ms: f64) {
+        self.plan.observe_ms(plan_ms);
+        self.doc_prefill.observe_ms(doc_prefill_ms);
     }
 
     pub fn uptime_s(&self) -> f64 {
@@ -132,16 +146,21 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} completed={} rejected={} tokens={} \
+             doc_prefills={} \
              ttft(mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms) \
+             plan(mean={:.2}ms) doc_prefill(mean={:.1}ms) \
              e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
+            self.doc_prefills.load(Ordering::Relaxed),
             self.ttft.mean_ms(),
             self.ttft.percentile_ms(0.50),
             self.ttft.percentile_ms(0.95),
             self.ttft.percentile_ms(0.99),
+            self.plan.mean_ms(),
+            self.doc_prefill.mean_ms(),
             self.e2e.mean_ms(),
             self.e2e.percentile_ms(0.95),
             self.throughput_rps(),

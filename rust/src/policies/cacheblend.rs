@@ -10,15 +10,16 @@
 //! behaviour (high-impact tokens get refreshed first). Documented in
 //! DESIGN.md §2.
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use crate::kvcache::{AssembledContext, CacheStore, DocEntry};
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, DocEntry};
 use crate::model::{Buffer, Model};
 use crate::tensor::Tensor;
 use crate::workload::Sample;
 
-use super::common::query_and_decode;
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct CacheBlendPolicy {
     /// Base fraction of context tokens recomputed at layer 0.
@@ -63,29 +64,26 @@ impl ContextPolicy for CacheBlendPolicy {
         "CacheBlend".to_string()
     }
 
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
-        let cfg = model.cfg.clone();
-        let mut warm = true;
-        let entries: Vec<_> = sample
-            .docs
-            .iter()
-            .map(|d| {
-                let (e, hit) = store.get_or_prefill(model, d)?;
-                warm &= hit;
-                Ok(e)
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        let mut plan = ServePlan::full_docs("CacheBlend", cfg, sample);
+        // layer-0 saliency budget per doc (which tokens is dynamic)
+        let keep = (self.recompute_ratio * cfg.doc_len as f64).ceil()
+            as usize;
+        plan.planned_recompute_tokens = sample.docs.len() * keep;
+        plan
+    }
 
-        let t0 = Instant::now();
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                _sample: &Sample) -> crate::Result<ReadyContext> {
+        let cfg = model.cfg.clone();
         let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
-        for (d, e) in entries.iter().enumerate() {
+        for (d, e) in docs.iter().enumerate() {
             ctx.append_doc(&cfg, e, d)?;
         }
         // layer-shrinking saliency mask
         let mut mask = Tensor::zeros(&[cfg.n_layers, cfg.full_len]);
         let mut union = vec![false; cfg.full_len];
-        for (d, e) in entries.iter().enumerate() {
+        for (d, e) in docs.iter().enumerate() {
             let sal = token_saliency(&cfg, e);
             let mut order: Vec<usize> = (0..cfg.doc_len).collect();
             order.sort_by(|&a, &b| sal[b].partial_cmp(&sal[a]).unwrap());
@@ -109,27 +107,8 @@ impl ContextPolicy for CacheBlendPolicy {
                                      &ctx.positions, &ctx.kv, mask,
                                      &ctx.valid)?;
         ctx.replace_kv(kv_new)?;
-        let seq_ratio = ctx.seq_ratio(&cfg);
-        let kv_bytes = ctx.kv_bytes(&cfg);
-        let prep_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let td = Instant::now();
-        let answer = query_and_decode(model, &cfg, &mut ctx, Buffer::Full,
-                                      sample)?;
-        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
-        let frac = cfg.query_len as f64
-            / (cfg.query_len + answer.len().max(1)) as f64;
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms: prep_ms + qa_ms * frac,
-                decode_ms: qa_ms * (1.0 - frac),
-                seq_ratio,
-                recompute_ratio: recomputed as f64 / cfg.ctx_len as f64,
-                kv_bytes,
-                cache_warm: warm,
-            },
-        })
+        let mut ready = ReadyContext::new(&cfg, ctx, Buffer::Full);
+        ready.recompute_ratio = recomputed as f64 / cfg.ctx_len as f64;
+        Ok(ready)
     }
 }

@@ -1,56 +1,42 @@
 //! Shared serving steps: incremental query prefill (token-by-token
-//! decode at global positions) and greedy answer decoding over an
-//! assembled buffer.
+//! decode at global positions) over an assembled buffer.
+//!
+//! The greedy answer loop that used to live here (`query_and_decode`,
+//! with its duplicated `answer_max` checks and potential dead final
+//! decode step) moved into [`super::pipeline::ServeSession`], which
+//! checks the bound in exactly one place and never runs a decode step
+//! whose logits would be discarded.
 
 use anyhow::Result;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::AssembledContext;
 use crate::model::{Buffer, Model};
-use crate::tokenizer as tok;
 use crate::workload::Sample;
 
-/// Feed the user query incrementally over the assembled cache, then
-/// greedily decode up to `answer_max` tokens (stopping at EOS).
+/// Feed the user query incrementally over the assembled cache and
+/// return the logits produced by its final token (the first answer
+/// token's distribution).
 ///
 /// The query occupies global positions `ctx_len .. ctx_len+Lq` (the
 /// joint-training layout) regardless of how sparse the document KV is —
 /// §3.3: "we re-perform an incremental prefill of the user query based
 /// on KV_docs_new and then infer the answer".
-///
-/// Returns `(answer, first_token_extra_ms)` where the extra time is the
-/// query-prefill part of TTFT that this helper performed.
-pub fn query_and_decode(model: &Model, cfg: &ProfileConfig,
-                        ctx: &mut AssembledContext, buffer: Buffer,
-                        sample: &Sample) -> Result<Vec<i32>> {
+pub fn prefill_query(model: &Model, cfg: &ProfileConfig,
+                     ctx: &mut AssembledContext, buffer: Buffer,
+                     query: &[i32]) -> Result<Vec<f32>> {
     let q0 = cfg.ctx_len as i32;
     let mut logits: Option<Vec<f32>> = None;
-    for (i, &t) in sample.query.iter().enumerate() {
-        let out = step(model, cfg, ctx, buffer, t, q0 + i as i32)?;
-        logits = Some(out);
+    for (i, &t) in query.iter().enumerate() {
+        logits = Some(step(model, ctx, buffer, t, q0 + i as i32)?);
     }
-    // greedy answer loop
-    let mut answer = Vec::new();
-    let mut pos = q0 + cfg.query_len as i32;
-    let mut cur = Model::argmax(&logits.expect("query fed"));
-    for _ in 0..cfg.answer_max {
-        if cur == tok::EOS {
-            break;
-        }
-        answer.push(cur);
-        if answer.len() >= cfg.answer_max {
-            break;
-        }
-        let out = step(model, cfg, ctx, buffer, cur, pos)?;
-        cur = Model::argmax(&out);
-        pos += 1;
-    }
-    Ok(answer)
+    logits.ok_or_else(|| anyhow::anyhow!("empty query"))
 }
 
 /// One decode step: reserve a slot, run the artifact, mirror the KV.
-fn step(model: &Model, _cfg: &ProfileConfig, ctx: &mut AssembledContext,
-        buffer: Buffer, token: i32, position: i32) -> Result<Vec<f32>> {
+/// Returns the step's logits.
+pub fn step(model: &Model, ctx: &mut AssembledContext, buffer: Buffer,
+            token: i32, position: i32) -> Result<Vec<f32>> {
     let slot = ctx.push_token(token, position)?;
     let out = model.decode(buffer, token, position, slot as i32,
                            &ctx.kv, &ctx.valid)?;

@@ -2,15 +2,16 @@
 //! caching that recomputes only the *initial* tokens of every chunk
 //! plus a local window (AttnLink), over the full loaded cache.
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use crate::kvcache::{AssembledContext, CacheStore};
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, DocEntry};
 use crate::model::{Buffer, Model};
 use crate::tensor::Tensor;
 use crate::workload::Sample;
 
-use super::common::query_and_decode;
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct EpicPolicy {
     /// Fraction of each document recomputed at its head.
@@ -26,30 +27,9 @@ impl Default for EpicPolicy {
     }
 }
 
-impl ContextPolicy for EpicPolicy {
-    fn name(&self) -> String {
-        "EPIC".to_string()
-    }
-
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
-        let cfg = model.cfg.clone();
-        let mut warm = true;
-        let entries: Vec<_> = sample
-            .docs
-            .iter()
-            .map(|d| {
-                let (e, hit) = store.get_or_prefill(model, d)?;
-                warm &= hit;
-                Ok(e)
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
-
-        let t0 = Instant::now();
-        let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
-        for (d, e) in entries.iter().enumerate() {
-            ctx.append_doc(&cfg, e, d)?;
-        }
+impl EpicPolicy {
+    /// (init, local) recompute window sizes in tokens per document.
+    fn windows(&self, cfg: &ProfileConfig) -> (usize, usize) {
         let init = ((self.init_frac * cfg.doc_len as f64).ceil() as usize)
             .max(1)
             .min(cfg.doc_len);
@@ -57,6 +37,32 @@ impl ContextPolicy for EpicPolicy {
             as usize)
             .max(1)
             .min(cfg.doc_len - init);
+        (init, local)
+    }
+}
+
+impl ContextPolicy for EpicPolicy {
+    fn name(&self) -> String {
+        "EPIC".to_string()
+    }
+
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        let mut plan = ServePlan::full_docs("EPIC", cfg, sample);
+        // AttnLink windows are statically known: the whole recompute
+        // set is fixed before any attention is seen
+        let (init, local) = self.windows(cfg);
+        plan.planned_recompute_tokens = sample.docs.len() * (init + local);
+        plan
+    }
+
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                _sample: &Sample) -> crate::Result<ReadyContext> {
+        let cfg = model.cfg.clone();
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
+        for (d, e) in docs.iter().enumerate() {
+            ctx.append_doc(&cfg, e, d)?;
+        }
+        let (init, local) = self.windows(&cfg);
         let mut mask = Tensor::zeros(&[cfg.n_layers, cfg.full_len]);
         for d in 0..cfg.n_docs {
             let off = cfg.doc_offset(d);
@@ -76,27 +82,8 @@ impl ContextPolicy for EpicPolicy {
                                      &ctx.positions, &ctx.kv, mask,
                                      &ctx.valid)?;
         ctx.replace_kv(kv_new)?;
-        let seq_ratio = ctx.seq_ratio(&cfg);
-        let kv_bytes = ctx.kv_bytes(&cfg);
-        let prep_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let td = Instant::now();
-        let answer = query_and_decode(model, &cfg, &mut ctx, Buffer::Full,
-                                      sample)?;
-        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
-        let frac = cfg.query_len as f64
-            / (cfg.query_len + answer.len().max(1)) as f64;
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms: prep_ms + qa_ms * frac,
-                decode_ms: qa_ms * (1.0 - frac),
-                seq_ratio,
-                recompute_ratio: recomputed as f64 / cfg.ctx_len as f64,
-                kv_bytes,
-                cache_warm: warm,
-            },
-        })
+        let mut ready = ReadyContext::new(&cfg, ctx, Buffer::Full);
+        ready.recompute_ratio = recomputed as f64 / cfg.ctx_len as f64;
+        Ok(ready)
     }
 }

@@ -1,20 +1,31 @@
 //! Context-cache policies: the paper's SamKV plus all evaluated
-//! baselines, behind one [`ContextPolicy`] trait so the coordinator,
-//! eval harness, and benches treat them uniformly.
+//! baselines, behind one staged [`ContextPolicy`] trait so the
+//! coordinator, eval harness, and benches treat them uniformly.
 //!
-//! | policy | sparse? | recompute? | KV loaded | paper row |
-//! |--------|---------|------------|-----------|-----------|
-//! | [`RecomputePolicy`] | n/a | full joint prefill | 100% | "Recompute" |
-//! | [`ReusePolicy`] | no | none | 100% | "Reuse" |
-//! | [`MultiInfLlmPolicy`] | yes (concat view) | none | ~15% | "Multi-InfLLM" |
-//! | [`CacheBlendPolicy`] | no | ~15% of tokens | 100% | "CacheBlend" |
-//! | [`EpicPolicy`] | no | init+local tokens | 100% | "EPIC" |
-//! | [`SamKvPolicy`] | yes (Eq. 1-3) | sparse subset (Fig. 5) | ~15% | "SamKV-overwrite/-fusion" |
+//! Every policy is served through the staged protocol defined in
+//! [`pipeline`] — `plan` (pure, model-free) → `prefill_docs` (document
+//! KV via the [`CacheStore`]) → `assemble` (sparsify/recompute into a
+//! decode-ready buffer) → `attend` (incremental query prefill) →
+//! `decode_step` (one streamed token per call). Policies implement the
+//! two policy-specific stages, [`ContextPolicy::plan`] and
+//! [`ContextPolicy::assemble`]; [`pipeline::ServeSession`] drives the
+//! rest, and the legacy blocking [`ContextPolicy::run`] survives only as
+//! a default method delegating to the stages.
+//!
+//! | policy | sparse? | assemble stage does | KV loaded | paper row |
+//! |--------|---------|---------------------|-----------|-----------|
+//! | [`RecomputePolicy`] | n/a | full joint prefill (query included) | 100% | "Recompute" |
+//! | [`ReusePolicy`] | no | verbatim concat of doc caches | 100% | "Reuse" |
+//! | [`MultiInfLlmPolicy`] | yes (concat view) | InfLLM block retrieval | ~15% | "Multi-InfLLM" |
+//! | [`CacheBlendPolicy`] | no | saliency-ranked ~15% token recompute | 100% | "CacheBlend" |
+//! | [`EpicPolicy`] | no | AttnLink init+local recompute | 100% | "EPIC" |
+//! | [`SamKvPolicy`] | yes (Eq. 1-3) | Top-P selection + Fig.-5 recompute | ~15% | "SamKV-overwrite/-fusion" |
 
 pub mod cacheblend;
 pub mod common;
 pub mod epic;
 pub mod multi_infllm;
+pub mod pipeline;
 pub mod recompute;
 pub mod reuse;
 pub mod samkv;
@@ -22,21 +33,38 @@ pub mod samkv;
 pub use cacheblend::CacheBlendPolicy;
 pub use epic::EpicPolicy;
 pub use multi_infllm::MultiInfLlmPolicy;
+pub use pipeline::{
+    serve_blocking, CollectSink, FnSink, NullSink, PlannedSpan,
+    ReadyContext, ServePlan, ServeSession, SharedDoc, Stage, TokenSink,
+};
 pub use recompute::RecomputePolicy;
 pub use reuse::ReusePolicy;
 pub use samkv::SamKvPolicy;
 
-use crate::kvcache::CacheStore;
+use std::rc::Rc;
+
+use crate::config::ProfileConfig;
+use crate::kvcache::{CacheStore, DocEntry};
 use crate::model::Model;
 use crate::workload::Sample;
 
 /// Measurements for one request (feeds Table 1, Fig. 1, Table 3/4).
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
-    /// Time to first generated token, excluding cached doc prefill.
+    /// Time to first generated token: assemble + attend + emitting the
+    /// first token (the forward pass computing the *next* token's
+    /// logits counts as decode). Excludes planning and document
+    /// prefill, which are reported separately below (the paper's
+    /// context-caching regime).
     pub ttft_ms: f64,
     /// Remaining decode time.
     pub decode_ms: f64,
+    /// Time spent in the pure planning stage.
+    pub plan_ms: f64,
+    /// Time spent prefilling this request's document caches (zero when
+    /// fully warm), including this request's share of batch-deduped
+    /// shared prefills.
+    pub doc_prefill_ms: f64,
     /// Fraction of the joint context KV held on the "device" during
     /// inference (Table 1 "sequence ratio").
     pub seq_ratio: f64,
@@ -56,7 +84,8 @@ pub struct PolicyOutput {
     pub stats: RunStats,
 }
 
-/// A multi-context KV cache serving policy.
+/// A multi-context KV cache serving policy, expressed as the two
+/// policy-specific stages of the [`pipeline`] protocol.
 pub trait ContextPolicy {
     /// Display name (matches the paper's tables).
     fn name(&self) -> String;
@@ -67,29 +96,80 @@ pub trait ContextPolicy {
         true
     }
 
-    /// Serve one request: produce the answer tokens + measurements.
+    /// Stage 1 — pure, model-free planning: which document caches the
+    /// request needs and which spans are statically known. Must not
+    /// touch the model or the store.
+    fn plan(&self, _cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        ServePlan::docs_only(&self.name(), self.uses_doc_cache(), sample)
+    }
+
+    /// Stage 3 — sparsify/select/recompute over the cached documents
+    /// (in the order of `sample.docs`; empty when `uses_doc_cache()` is
+    /// false) and return a decode-ready context.
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                sample: &Sample) -> crate::Result<ReadyContext>;
+
+    /// Serve one request end to end: the legacy blocking entry point,
+    /// implemented in terms of the stages (see
+    /// [`pipeline::serve_blocking`]). Not meant to be overridden.
     fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput>;
+           -> crate::Result<PolicyOutput> {
+        serve_blocking(self, model, store, sample)
+    }
 }
 
-/// Instantiate every paper policy (Table 3 row order).
+/// Table-3 row order of the paper's policies.
+pub const POLICY_TABLE: [&str; 7] = [
+    "Recompute",
+    "Reuse",
+    "Multi-InfLLM",
+    "CacheBlend",
+    "EPIC",
+    "SamKV-overwrite",
+    "SamKV-fusion",
+];
+
+/// Instantiate every paper policy (Table 3 row order). Construction
+/// lives in [`policy_by_name`] so the two can't drift.
 pub fn all_policies() -> Vec<Box<dyn ContextPolicy>> {
+    POLICY_TABLE
+        .iter()
+        .map(|n| policy_by_name(n).expect("table policy constructs"))
+        .collect()
+}
+
+/// Look a policy up by its table name, building only the requested one.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn ContextPolicy>> {
     use crate::config::{SamKvConfig, UpdateStrategy};
-    vec![
-        Box::new(RecomputePolicy),
-        Box::new(ReusePolicy),
-        Box::new(MultiInfLlmPolicy),
-        Box::new(CacheBlendPolicy::default()),
-        Box::new(EpicPolicy::default()),
-        Box::new(SamKvPolicy::new(SamKvConfig {
+    Some(match name {
+        "Recompute" => Box::new(RecomputePolicy),
+        "Reuse" => Box::new(ReusePolicy),
+        "Multi-InfLLM" => Box::new(MultiInfLlmPolicy),
+        "CacheBlend" => Box::new(CacheBlendPolicy::default()),
+        "EPIC" => Box::new(EpicPolicy::default()),
+        "SamKV-overwrite" => Box::new(SamKvPolicy::new(SamKvConfig {
             update: UpdateStrategy::Overwrite,
             ..SamKvConfig::default()
         })),
-        Box::new(SamKvPolicy::new(SamKvConfig::default())), // fusion
-    ]
+        "SamKV-fusion" => {
+            Box::new(SamKvPolicy::new(SamKvConfig::default()))
+        }
+        _ => return None,
+    })
 }
 
-/// Look a policy up by its table name.
-pub fn policy_by_name(name: &str) -> Option<Box<dyn ContextPolicy>> {
-    all_policies().into_iter().find(|p| p.name() == name)
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_by_name_matches_table_names() {
+        for p in all_policies() {
+            let name = p.name();
+            let found = policy_by_name(&name)
+                .unwrap_or_else(|| panic!("`{name}` not found"));
+            assert_eq!(found.name(), name);
+        }
+        assert!(policy_by_name("NoSuchPolicy").is_none());
+    }
 }

@@ -4,15 +4,16 @@
 //! blocks. No recomputation, no cross-context awareness (the paper's
 //! §4.1 adaptation of InfLLM to the multi-context setting).
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use crate::kvcache::{AssembledContext, CacheStore, SlotKind};
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, DocEntry, SlotKind};
 use crate::model::{Buffer, Model};
 use crate::sparse::block_scores_host;
 use crate::workload::Sample;
 
-use super::common::query_and_decode;
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{PlannedSpan, ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct MultiInfLlmPolicy;
 
@@ -21,26 +22,40 @@ impl ContextPolicy for MultiInfLlmPolicy {
         "Multi-InfLLM".to_string()
     }
 
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
-        let cfg = model.cfg.clone();
-        let mut warm = true;
-        let entries: Vec<_> = sample
-            .docs
-            .iter()
-            .map(|d| {
-                let (e, hit) = store.get_or_prefill(model, d)?;
-                warm &= hit;
-                Ok(e)
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        let mut plan = ServePlan::docs_only("Multi-InfLLM", true, sample);
+        plan.buffer = Buffer::Sparse;
+        // concatenated view: init block of the first doc, local window
+        // of the last doc; everything else is retrieved dynamically
+        if !sample.docs.is_empty() {
+            plan.fixed_spans.push(PlannedSpan {
+                doc: 0,
+                start: 0,
+                len: cfg.block_size,
+                kind: SlotKind::Init,
+            });
+            plan.fixed_spans.push(PlannedSpan {
+                doc: sample.docs.len() - 1,
+                start: (cfg.blocks_per_doc - cfg.local_blocks)
+                    * cfg.block_size,
+                len: cfg.local_blocks * cfg.block_size,
+                kind: SlotKind::Local,
+            });
+        }
+        let total_budget = cfg.sparse_kv_len / cfg.block_size;
+        plan.dynamic_blocks =
+            total_budget.saturating_sub(1 + cfg.local_blocks);
+        plan
+    }
 
-        let t0 = Instant::now();
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                sample: &Sample) -> crate::Result<ReadyContext> {
+        let cfg = model.cfg.clone();
         // generic retrieval vector: incremental query prefill over the
         // concatenated init+local compressed cache (same machinery the
         // paper grants every sparse method)
         let (comp_kv, comp_valid) =
-            super::samkv::build_compressed_cache(&cfg, &entries);
+            super::samkv::build_compressed_cache(&cfg, docs);
         let q_pos: Vec<i32> = (0..cfg.query_len as i32)
             .map(|i| cfg.ctx_len as i32 + i)
             .collect();
@@ -61,7 +76,7 @@ impl ContextPolicy for MultiInfLlmPolicy {
         // score every remaining block of the concatenated cache
         let stable = cfg.stable_layer_start();
         let mut scored: Vec<(f32, usize, usize)> = Vec::new();
-        for (d, e) in entries.iter().enumerate() {
+        for (d, e) in docs.iter().enumerate() {
             let mut acc = vec![0f32; cfg.blocks_per_doc];
             for l in stable..cfg.n_layers {
                 let s = block_scores_host(&qe.q_que, &e.kv, &cfg, l);
@@ -83,29 +98,8 @@ impl ContextPolicy for MultiInfLlmPolicy {
 
         let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
         for &(d, b, kind) in &picks {
-            ctx.append_block(&cfg, &entries[d], d, b, kind)?;
+            ctx.append_block(&cfg, &docs[d], d, b, kind)?;
         }
-        let seq_ratio = ctx.seq_ratio(&cfg);
-        let kv_bytes = ctx.kv_bytes(&cfg);
-        let prep_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let td = Instant::now();
-        let answer = query_and_decode(model, &cfg, &mut ctx,
-                                      Buffer::Sparse, sample)?;
-        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
-        let frac = cfg.query_len as f64
-            / (cfg.query_len + answer.len().max(1)) as f64;
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms: prep_ms + qa_ms * frac,
-                decode_ms: qa_ms * (1.0 - frac),
-                seq_ratio,
-                recompute_ratio: 0.0,
-                kv_bytes,
-                cache_warm: warm,
-            },
-        })
+        Ok(ReadyContext::new(&cfg, ctx, Buffer::Sparse))
     }
 }

@@ -1,0 +1,572 @@
+//! Staged serving protocol: `plan → prefill_docs → assemble → attend →
+//! decode_step*`, replacing the old monolithic `ContextPolicy::run()`.
+//!
+//! # Stage lifecycle
+//!
+//! A [`ServeSession`] drives one request through five explicit stages
+//! (tracked by [`Stage`]; each method enforces its precondition and
+//! advances the machine):
+//!
+//! 1. **plan** ([`ServeSession::new`]) — pure and model-free: the
+//!    policy's [`super::ContextPolicy::plan`] computes a [`ServePlan`]
+//!    describing which document caches the request needs (content
+//!    hashes), which buffer geometry it will occupy, and which token
+//!    spans are statically known to be kept or recomputed. Because no
+//!    device or model state is touched, the engine can plan a whole
+//!    batch up front and schedule shared work across requests — see
+//!    [`dedup_doc_plans`].
+//! 2. **prefill_docs** ([`ServeSession::prefill_docs`]) — ensure every
+//!    planned document KV exists in the [`CacheStore`] (prefilling on
+//!    miss). The engine may instead prefill shared documents once per
+//!    batch and report the attributable cost via
+//!    [`ServeSession::credit_shared_prefill`]; the per-session call then
+//!    only performs (cheap) cache hits.
+//! 3. **assemble** ([`ServeSession::assemble`]) — the policy sparsifies,
+//!    selects, and recomputes over the cached documents and returns a
+//!    decode-ready [`ReadyContext`] (Eq. 1-3 selection + §3.3 local
+//!    recomputation for SamKV; saliency/AttnLink recomputation for the
+//!    baselines; the full joint prefill for Recompute).
+//! 4. **attend** ([`ServeSession::attend`]) — incremental prefill of the
+//!    user query over the assembled cache (§3.3), producing the logits
+//!    of the first answer token. Policies whose assemble already fed the
+//!    query (Recompute's joint prefill) skip the extra work.
+//! 5. **decode_step** ([`ServeSession::decode_step`]) — emit exactly one
+//!    answer token per call (greedy argmax), streaming it through the
+//!    caller's [`TokenSink`], until EOS or `answer_max`. The bound is
+//!    checked in one place and no decode step ever runs whose logits
+//!    would be discarded. [`ServeSession::finish`] then yields the
+//!    final [`super::PolicyOutput`] with per-stage timings
+//!    (`plan_ms`, `doc_prefill_ms` split out of `ttft_ms`).
+//!
+//! # `TokenSink` contract
+//!
+//! [`TokenSink::on_token`] is invoked **synchronously, exactly once per
+//! generated answer token, in generation order**, before
+//! `decode_step` returns that token. EOS is never delivered to the
+//! sink; the tokens observed by the sink are exactly the final
+//! `PolicyOutput::answer`. Sinks must not block for long (they run on
+//! the engine thread) and must not call back into the session.
+//! [`NullSink`] ignores tokens (blocking callers that only want the
+//! final answer), [`CollectSink`] accumulates them, and [`FnSink`]
+//! adapts a closure (the engine uses it to forward tokens onto the
+//! response channel as they are produced).
+//!
+//! The legacy entry point survives as the default
+//! `ContextPolicy::run()`, implemented by [`serve_blocking`] in terms of
+//! the stages, so callers that don't care about staging or streaming
+//! migrate without change.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::ProfileConfig;
+use crate::kvcache::store::doc_hash;
+use crate::kvcache::{AssembledContext, CacheStore, DocEntry, SlotKind};
+use crate::model::{Buffer, Model};
+use crate::tokenizer as tok;
+use crate::workload::Sample;
+
+use super::common;
+use super::{ContextPolicy, PolicyOutput, RunStats};
+
+/// Streaming consumer of decoded tokens (see the module docs for the
+/// delivery contract).
+pub trait TokenSink {
+    fn on_token(&mut self, token: i32);
+}
+
+/// Ignores tokens — for blocking callers that read the final answer.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl TokenSink for NullSink {
+    fn on_token(&mut self, _token: i32) {}
+}
+
+/// Collects tokens into a vector.
+#[derive(Debug, Default)]
+pub struct CollectSink(pub Vec<i32>);
+
+impl TokenSink for CollectSink {
+    fn on_token(&mut self, token: i32) {
+        self.0.push(token);
+    }
+}
+
+/// Adapts a closure into a sink.
+pub struct FnSink<F: FnMut(i32)>(pub F);
+
+impl<F: FnMut(i32)> TokenSink for FnSink<F> {
+    fn on_token(&mut self, token: i32) {
+        (self.0)(token);
+    }
+}
+
+/// A token span of one document with a planned role in the buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedSpan {
+    pub doc: usize,
+    /// Token offset within the document.
+    pub start: usize,
+    pub len: usize,
+    pub kind: SlotKind,
+}
+
+/// Pure, model-free plan for serving one request: what the request
+/// needs before it can assemble, and what it will statically do.
+/// Computable per request without holding the device, so the engine can
+/// plan a whole batch and dedup shared document prefills.
+#[derive(Debug, Clone)]
+pub struct ServePlan {
+    /// Policy table name.
+    pub policy: String,
+    /// False only for full recomputation (no document caches consumed).
+    pub needs_doc_cache: bool,
+    /// Content hashes of the per-document KV caches this request needs,
+    /// in document order (empty when `needs_doc_cache` is false).
+    pub doc_hashes: Vec<u64>,
+    /// Buffer geometry the assembled context will occupy.
+    pub buffer: Buffer,
+    /// Statically known resident spans (init/local/full blocks).
+    /// Dynamically selected spans are counted in `dynamic_blocks`.
+    pub fixed_spans: Vec<PlannedSpan>,
+    /// Upper bound on blocks chosen at assemble time (Eq. 2/3 Top-P,
+    /// InfLLM retrieval) — unknown until attention scores exist.
+    pub dynamic_blocks: usize,
+    /// Statically planned recomputation size in tokens (PauTa outliers
+    /// and saliency picks add dynamically at assemble time).
+    pub planned_recompute_tokens: usize,
+}
+
+impl ServePlan {
+    /// Minimal plan: the request needs its documents cached, nothing
+    /// more is statically known.
+    pub fn docs_only(policy: &str, needs_doc_cache: bool, sample: &Sample)
+                     -> ServePlan {
+        ServePlan {
+            policy: policy.to_string(),
+            needs_doc_cache,
+            doc_hashes: if needs_doc_cache {
+                sample.docs.iter().map(|d| doc_hash(d)).collect()
+            } else {
+                Vec::new()
+            },
+            buffer: Buffer::Full,
+            fixed_spans: Vec::new(),
+            dynamic_blocks: 0,
+            planned_recompute_tokens: 0,
+        }
+    }
+
+    /// Plan for policies that keep every document fully resident in
+    /// the full buffer (Reuse / CacheBlend / EPIC): [`Self::docs_only`]
+    /// plus one `Full` span per document.
+    pub fn full_docs(policy: &str, cfg: &ProfileConfig, sample: &Sample)
+                     -> ServePlan {
+        let mut plan = ServePlan::docs_only(policy, true, sample);
+        plan.buffer = Buffer::Full;
+        for doc in 0..sample.docs.len() {
+            plan.fixed_spans.push(PlannedSpan {
+                doc,
+                start: 0,
+                len: cfg.doc_len,
+                kind: SlotKind::Full,
+            });
+        }
+        plan
+    }
+}
+
+/// A decode-ready context produced by a policy's `assemble` stage.
+#[derive(Debug)]
+pub struct ReadyContext {
+    pub ctx: AssembledContext,
+    pub buffer: Buffer,
+    /// Table-1 sequence ratio of the assembled buffer.
+    pub seq_ratio: f64,
+    /// Table-1 recomputation ratio (set by recomputing policies).
+    pub recompute_ratio: f64,
+    /// KV bytes loaded for inference.
+    pub kv_bytes: usize,
+    /// Logits of the next token when the query was already fed during
+    /// assemble (Recompute's joint prefill); `None` means the attend
+    /// stage must run the incremental query prefill.
+    pub logits: Option<Vec<f32>>,
+    /// Next global decode position (joint layout).
+    pub next_pos: i32,
+}
+
+impl ReadyContext {
+    /// Wrap an assembled buffer with the standard ratio accounting and
+    /// the joint-layout decode position.
+    pub fn new(cfg: &ProfileConfig, ctx: AssembledContext, buffer: Buffer)
+               -> ReadyContext {
+        ReadyContext {
+            seq_ratio: ctx.seq_ratio(cfg),
+            kv_bytes: ctx.kv_bytes(cfg),
+            recompute_ratio: 0.0,
+            logits: None,
+            next_pos: (cfg.ctx_len + cfg.query_len) as i32,
+            ctx,
+            buffer,
+        }
+    }
+}
+
+/// Where a session is in the stage lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Planned,
+    DocsReady,
+    Assembled,
+    Attended,
+    Done,
+}
+
+/// State machine serving one request through the staged protocol.
+/// Generic over the policy reference so it works both with concrete
+/// policies and `&dyn ContextPolicy` (the engine's case).
+pub struct ServeSession<'a, P: ContextPolicy + ?Sized> {
+    policy: &'a P,
+    sample: &'a Sample,
+    cfg: ProfileConfig,
+    plan: ServePlan,
+    stage: Stage,
+    docs: Vec<Rc<DocEntry>>,
+    warm: bool,
+    ready: Option<ReadyContext>,
+    answer: Vec<i32>,
+    plan_ms: f64,
+    doc_prefill_ms: f64,
+    ttft_ms: f64,
+    decode_ms: f64,
+}
+
+impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
+    /// Stage 1: run the policy's pure plan.
+    pub fn new(policy: &'a P, cfg: &ProfileConfig, sample: &'a Sample)
+               -> ServeSession<'a, P> {
+        let t = Instant::now();
+        let plan = policy.plan(cfg, sample);
+        let plan_ms = t.elapsed().as_secs_f64() * 1e3;
+        // a policy that never touches the doc cache is cold by definition
+        let warm = plan.needs_doc_cache;
+        ServeSession {
+            policy,
+            sample,
+            cfg: cfg.clone(),
+            plan,
+            stage: Stage::Planned,
+            docs: Vec::new(),
+            warm,
+            ready: None,
+            answer: Vec::new(),
+            plan_ms,
+            doc_prefill_ms: 0.0,
+            ttft_ms: 0.0,
+            decode_ms: 0.0,
+        }
+    }
+
+    pub fn plan(&self) -> &ServePlan {
+        &self.plan
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stage
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.stage == Stage::Done
+    }
+
+    /// Tokens generated so far.
+    pub fn answer(&self) -> &[i32] {
+        &self.answer
+    }
+
+    /// Credit document-prefill work performed outside this session
+    /// (batch-level dedup): `ms` is this request's attributable share;
+    /// `fresh` marks that a needed document was not cached before the
+    /// batch, so the request's TTFT did not enjoy a fully warm cache.
+    pub fn credit_shared_prefill(&mut self, ms: f64, fresh: bool) {
+        self.doc_prefill_ms += ms;
+        if fresh {
+            self.warm = false;
+        }
+    }
+
+    /// Stage 2: ensure every planned document KV exists in the store.
+    pub fn prefill_docs(&mut self, model: &Model, store: &mut CacheStore)
+                        -> Result<()> {
+        if self.stage != Stage::Planned {
+            bail!("prefill_docs called in stage {:?}", self.stage);
+        }
+        if self.plan.needs_doc_cache {
+            let t = Instant::now();
+            for d in &self.sample.docs {
+                let (e, hit) = store.get_or_prefill(model, d)?;
+                self.warm &= hit;
+                self.docs.push(e);
+            }
+            self.doc_prefill_ms += t.elapsed().as_secs_f64() * 1e3;
+        }
+        self.stage = Stage::DocsReady;
+        Ok(())
+    }
+
+    /// Stage 3: sparsify/recompute into a decode-ready context.
+    pub fn assemble(&mut self, model: &Model) -> Result<()> {
+        if self.stage != Stage::DocsReady {
+            bail!("assemble called in stage {:?}", self.stage);
+        }
+        let t = Instant::now();
+        let ready = self.policy.assemble(model, &self.docs, self.sample)?;
+        self.ttft_ms += t.elapsed().as_secs_f64() * 1e3;
+        self.ready = Some(ready);
+        self.stage = Stage::Assembled;
+        Ok(())
+    }
+
+    /// Stage 4: incremental query prefill over the assembled cache
+    /// (no-op when assemble already fed the query).
+    pub fn attend(&mut self, model: &Model) -> Result<()> {
+        if self.stage != Stage::Assembled {
+            bail!("attend called in stage {:?}", self.stage);
+        }
+        let t = Instant::now();
+        let ready = self.ready.as_mut().expect("assembled");
+        if ready.logits.is_none() {
+            let logits = common::prefill_query(model, &self.cfg,
+                                               &mut ready.ctx, ready.buffer,
+                                               &self.sample.query)?;
+            ready.logits = Some(logits);
+        }
+        self.ttft_ms += t.elapsed().as_secs_f64() * 1e3;
+        self.stage = Stage::Attended;
+        Ok(())
+    }
+
+    /// Stage 5: emit at most one answer token. Returns the token, or
+    /// `None` once the session is done (EOS or `answer_max` reached —
+    /// the single bound check; no decode step runs whose logits would
+    /// be discarded). Calling after completion keeps returning `None`.
+    pub fn decode_step(&mut self, model: &Model, sink: &mut dyn TokenSink)
+                       -> Result<Option<i32>> {
+        match self.stage {
+            Stage::Assembled => self.attend(model)?,
+            Stage::Attended => {}
+            Stage::Done => return Ok(None),
+            s => bail!("decode_step called in stage {s:?}"),
+        }
+        let t = Instant::now();
+        let ready = self.ready.as_mut().expect("attended");
+        let cur = Model::argmax(ready.logits.as_ref().expect("attended"));
+        if cur == tok::EOS || self.answer.len() >= self.cfg.answer_max {
+            self.stage = Stage::Done;
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            if self.answer.is_empty() {
+                self.ttft_ms += ms; // never emitted: still pre-first-token
+            } else {
+                self.decode_ms += ms;
+            }
+            return Ok(None);
+        }
+        let first = self.answer.is_empty();
+        self.answer.push(cur);
+        sink.on_token(cur);
+        // TTFT ends at the first emission; the forward pass computing
+        // the NEXT token's logits below is decode time
+        let emit_ms = t.elapsed().as_secs_f64() * 1e3;
+        if first {
+            self.ttft_ms += emit_ms;
+        } else {
+            self.decode_ms += emit_ms;
+        }
+        if self.answer.len() < self.cfg.answer_max {
+            // more tokens wanted: compute the next logits now
+            let ts = Instant::now();
+            let out = common::step(model, &mut ready.ctx, ready.buffer, cur,
+                                   ready.next_pos)?;
+            ready.logits = Some(out);
+            ready.next_pos += 1;
+            self.decode_ms += ts.elapsed().as_secs_f64() * 1e3;
+        } else {
+            self.stage = Stage::Done;
+        }
+        Ok(Some(cur))
+    }
+
+    /// Collapse the session into the legacy output shape. Valid at any
+    /// stage (fields of unreached stages are zero).
+    pub fn finish(self) -> PolicyOutput {
+        let (seq_ratio, recompute_ratio, kv_bytes) = match &self.ready {
+            Some(r) => (r.seq_ratio, r.recompute_ratio, r.kv_bytes),
+            None => (0.0, 0.0, 0),
+        };
+        PolicyOutput {
+            answer: self.answer,
+            stats: RunStats {
+                ttft_ms: self.ttft_ms,
+                decode_ms: self.decode_ms,
+                seq_ratio,
+                recompute_ratio,
+                kv_bytes,
+                cache_warm: self.warm,
+                plan_ms: self.plan_ms,
+                doc_prefill_ms: self.doc_prefill_ms,
+            },
+        }
+    }
+}
+
+/// The legacy blocking path: all stages in order, no streaming. This is
+/// the default `ContextPolicy::run()` body.
+pub fn serve_blocking<P: ContextPolicy + ?Sized>(
+    policy: &P, model: &Model, store: &mut CacheStore, sample: &Sample)
+    -> Result<PolicyOutput> {
+    let mut session = ServeSession::new(policy, &model.cfg, sample);
+    session.prefill_docs(model, store)?;
+    session.assemble(model)?;
+    session.attend(model)?;
+    let mut sink = NullSink;
+    while session.decode_step(model, &mut sink)?.is_some() {}
+    Ok(session.finish())
+}
+
+/// One unique document shared by a batch of planned requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharedDoc {
+    pub hash: u64,
+    /// First batch request needing it, and the document's index within
+    /// that request (locates its tokens).
+    pub req: usize,
+    pub doc: usize,
+    /// Every batch request sharing this document (includes `req`).
+    pub sharers: Vec<usize>,
+}
+
+/// Group a batch's planned document prefills by content hash, in first
+/// appearance order. The engine prefills each unique document once and
+/// credits the cost evenly across its sharers — the multi-context RAG
+/// hot path where the same retrieved document appears in many
+/// concurrent requests.
+pub fn dedup_doc_plans(plans: &[Option<&ServePlan>]) -> Vec<SharedDoc> {
+    let mut order: Vec<SharedDoc> = Vec::new();
+    let mut seen: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    for (i, plan) in plans.iter().enumerate() {
+        let Some(plan) = plan else { continue };
+        if !plan.needs_doc_cache {
+            continue;
+        }
+        for (j, &h) in plan.doc_hashes.iter().enumerate() {
+            match seen.get(&h) {
+                Some(&k) => {
+                    if !order[k].sharers.contains(&i) {
+                        order[k].sharers.push(i);
+                    }
+                }
+                None => {
+                    seen.insert(h, order.len());
+                    order.push(SharedDoc {
+                        hash: h,
+                        req: i,
+                        doc: j,
+                        sharers: vec![i],
+                    });
+                }
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_with(hashes: Vec<u64>) -> ServePlan {
+        ServePlan {
+            policy: "t".to_string(),
+            needs_doc_cache: true,
+            doc_hashes: hashes,
+            buffer: Buffer::Full,
+            fixed_spans: Vec::new(),
+            dynamic_blocks: 0,
+            planned_recompute_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn docs_only_plan_hashes_content() {
+        let s = Sample {
+            docs: vec![vec![1, 2], vec![3, 4]],
+            query: vec![2, 5, 16, 0, 3],
+            answer: vec![],
+            qtype: "t".into(),
+        };
+        let p = ServePlan::docs_only("Reuse", true, &s);
+        assert_eq!(p.doc_hashes.len(), 2);
+        assert_eq!(p.doc_hashes[0], doc_hash(&[1, 2]));
+        assert_ne!(p.doc_hashes[0], p.doc_hashes[1]);
+        let q = ServePlan::docs_only("Recompute", false, &s);
+        assert!(q.doc_hashes.is_empty());
+        assert!(!q.needs_doc_cache);
+    }
+
+    #[test]
+    fn dedup_groups_shared_docs_across_requests() {
+        // req 0: docs A, B; req 1: docs B, C; req 2 (None) skipped;
+        // req 3: doc A again
+        let p0 = plan_with(vec![10, 20]);
+        let p1 = plan_with(vec![20, 30]);
+        let p3 = plan_with(vec![10]);
+        let plans = vec![Some(&p0), Some(&p1), None, Some(&p3)];
+        let shared = dedup_doc_plans(&plans);
+        assert_eq!(shared.len(), 3); // A, B, C unique
+        let a = &shared[0];
+        assert_eq!((a.hash, a.req, a.doc), (10, 0, 0));
+        assert_eq!(a.sharers, vec![0, 3]);
+        let b = &shared[1];
+        assert_eq!((b.hash, b.req, b.doc), (20, 0, 1));
+        assert_eq!(b.sharers, vec![0, 1]);
+        let c = &shared[2];
+        assert_eq!((c.hash, c.req, c.doc), (30, 1, 1));
+        assert_eq!(c.sharers, vec![1]);
+    }
+
+    #[test]
+    fn dedup_ignores_cacheless_plans() {
+        let mut p = plan_with(vec![10]);
+        p.needs_doc_cache = false;
+        let plans = vec![Some(&p)];
+        assert!(dedup_doc_plans(&plans).is_empty());
+    }
+
+    #[test]
+    fn dedup_same_doc_twice_in_one_request() {
+        let p = plan_with(vec![10, 10]);
+        let plans = vec![Some(&p)];
+        let shared = dedup_doc_plans(&plans);
+        assert_eq!(shared.len(), 1);
+        assert_eq!(shared[0].sharers, vec![0]);
+    }
+
+    #[test]
+    fn sinks_deliver_in_order() {
+        let mut c = CollectSink::default();
+        c.on_token(5);
+        c.on_token(7);
+        assert_eq!(c.0, vec![5, 7]);
+        let mut seen = Vec::new();
+        {
+            let mut f = FnSink(|t| seen.push(t));
+            f.on_token(9);
+        }
+        assert_eq!(seen, vec![9]);
+        NullSink.on_token(1); // no-op
+    }
+}

@@ -1,13 +1,19 @@
 //! "Recompute" baseline: full joint causal prefill of documents + query
 //! (maximum quality, maximum TTFT, 100% KV).
+//!
+//! The only policy whose `assemble` stage feeds the query itself (the
+//! joint prefill already covers it), so its `ReadyContext` carries the
+//! first answer token's logits and the attend stage is a no-op.
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use crate::kvcache::{AssembledContext, CacheStore};
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, DocEntry};
 use crate::model::{Buffer, Model};
 use crate::workload::{assemble_full, Sample};
 
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct RecomputePolicy;
 
@@ -20,10 +26,16 @@ impl ContextPolicy for RecomputePolicy {
         false
     }
 
-    fn run(&self, model: &Model, _store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        let mut plan = ServePlan::docs_only("Recompute", false, sample);
+        plan.buffer = Buffer::Full;
+        plan.planned_recompute_tokens = cfg.ctx_len;
+        plan
+    }
+
+    fn assemble(&self, model: &Model, _docs: &[Rc<DocEntry>],
+                sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
-        let t0 = Instant::now();
         let (tokens, valid, ans_start) = assemble_full(sample, &cfg);
         let kv = model.prefill_full(&tokens, &valid)?;
 
@@ -50,39 +62,10 @@ impl ContextPolicy for RecomputePolicy {
         let out = model.decode(Buffer::Full, tokens[last], last as i32,
                                last as i32, &ctx.kv, &ctx.valid)?;
         ctx.write_token_kv(last, &out.k_new, &out.v_new);
-        let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        // greedy decode from these logits
-        let td = Instant::now();
-        let mut answer = Vec::new();
-        let mut cur = Model::argmax(&out.logits);
-        let mut pos = ans_start as i32;
-        for _ in 0..cfg.answer_max {
-            if cur == crate::tokenizer::EOS {
-                break;
-            }
-            answer.push(cur);
-            if answer.len() >= cfg.answer_max {
-                break;
-            }
-            let slot = ctx.push_token(cur, pos)?;
-            let step = model.decode(Buffer::Full, cur, pos, slot as i32,
-                                    &ctx.kv, &ctx.valid)?;
-            ctx.write_token_kv(slot, &step.k_new, &step.v_new);
-            cur = Model::argmax(&step.logits);
-            pos += 1;
-        }
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms,
-                decode_ms: td.elapsed().as_secs_f64() * 1e3,
-                seq_ratio: 1.0,
-                recompute_ratio: 1.0,
-                kv_bytes: cfg.ctx_len * cfg.kv_bytes_per_token(),
-                cache_warm: false,
-            },
-        })
+        let mut ready = ReadyContext::new(&cfg, ctx, Buffer::Full);
+        ready.recompute_ratio = 1.0;
+        ready.logits = Some(out.logits); // query already fed
+        Ok(ready)
     }
 }

@@ -3,14 +3,15 @@
 //! collapses on position-critical queries (the paper's motivating
 //! failure: missing cross-attention + RoPE position collisions).
 
-use std::time::Instant;
+use std::rc::Rc;
 
-use crate::kvcache::{AssembledContext, CacheStore};
+use crate::config::ProfileConfig;
+use crate::kvcache::{AssembledContext, DocEntry};
 use crate::model::{Buffer, Model};
 use crate::workload::Sample;
 
-use super::common::query_and_decode;
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct ReusePolicy;
 
@@ -19,48 +20,17 @@ impl ContextPolicy for ReusePolicy {
         "Reuse".to_string()
     }
 
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
-        let cfg = model.cfg.clone();
-        let mut warm = true;
-        let entries: Vec<_> = sample
-            .docs
-            .iter()
-            .map(|d| {
-                let (e, hit) = store.get_or_prefill(model, d)?;
-                warm &= hit;
-                Ok(e)
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        ServePlan::full_docs("Reuse", cfg, sample)
+    }
 
-        let t0 = Instant::now();
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                _sample: &Sample) -> crate::Result<ReadyContext> {
+        let cfg = model.cfg.clone();
         let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
-        for (d, e) in entries.iter().enumerate() {
+        for (d, e) in docs.iter().enumerate() {
             ctx.append_doc(&cfg, e, d)?;
         }
-        let seq_ratio = ctx.seq_ratio(&cfg);
-        let kv_bytes = ctx.kv_bytes(&cfg);
-        let ttft_partial = t0.elapsed().as_secs_f64() * 1e3;
-
-        let td = Instant::now();
-        let answer = query_and_decode(model, &cfg, &mut ctx, Buffer::Full,
-                                      sample)?;
-        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
-        // TTFT = assembly + query prefill (5 decode steps) + 1st token;
-        // approximate the query part as Lq/(Lq+answer) of the loop time
-        let frac = cfg.query_len as f64
-            / (cfg.query_len + answer.len().max(1)) as f64;
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms: ttft_partial + qa_ms * frac,
-                decode_ms: qa_ms * (1.0 - frac),
-                seq_ratio,
-                recompute_ratio: 0.0,
-                kv_bytes,
-                cache_warm: warm,
-            },
-        })
+        Ok(ReadyContext::new(&cfg, ctx, Buffer::Full))
     }
 }

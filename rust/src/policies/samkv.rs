@@ -1,6 +1,7 @@
 //! SamKV (§3): sparse attention across the multiple-context KV cache.
 //!
-//! Pipeline per request (documents assumed cached — the RAG premise):
+//! The assemble stage performs, per request (documents cached via the
+//! prefill stage — the RAG premise):
 //! 1. build the compressed cache (init+local blocks of every doc) and
 //!    run the query's incremental prefill over it → `Q_que` (§3.1);
 //! 2. personalize per document with the other docs' local Q caches
@@ -12,17 +13,19 @@
 //! 5. assemble the sparse buffer (init + selected + local per doc, in
 //!    document order at *global* positions);
 //! 6. recompute init/local + PauTa-outlier tokens with the Fig.-5
-//!    layer-aligned plan; write back by overwrite or fusion (Eq. 4);
-//! 7. incremental query prefill over the new cache + greedy decode.
+//!    layer-aligned plan; write back by overwrite or fusion (Eq. 4).
 //!
-//! Every ablation axis of Table 4 (selection / personalized bias /
-//! recomputation, overwrite vs fusion) is a [`SamKvConfig`] switch.
+//! The attend/decode stages (incremental query prefill over the new
+//! cache + greedy streaming decode, §3.3) are driven by
+//! [`super::pipeline::ServeSession`]. Every ablation axis of Table 4
+//! (selection / personalized bias / recomputation, overwrite vs fusion)
+//! is a [`SamKvConfig`] switch.
 
-use std::time::Instant;
+use std::rc::Rc;
 
 use crate::attention::{analyze_doc, BlockAttention};
 use crate::config::{ProfileConfig, SamKvConfig, UpdateStrategy};
-use crate::kvcache::{AssembledContext, CacheStore, DocEntry, SlotKind};
+use crate::kvcache::{AssembledContext, DocEntry, SlotKind};
 use crate::model::{Buffer, Model};
 use crate::sparse::{
     block_scores_host, build_recompute_plan, cross_filter,
@@ -31,8 +34,8 @@ use crate::sparse::{
 use crate::tensor::Tensor;
 use crate::workload::Sample;
 
-use super::common::query_and_decode;
-use super::{ContextPolicy, PolicyOutput, RunStats};
+use super::pipeline::{PlannedSpan, ReadyContext, ServePlan};
+use super::ContextPolicy;
 
 pub struct SamKvPolicy {
     pub cfg: SamKvConfig,
@@ -48,7 +51,7 @@ impl SamKvPolicy {
 /// cache fed to `query_embed` (§3.1 "composite Cache unit").
 /// Returns `(comp_kv [L,2,H,Lc,Dh], comp_valid [Lc])`.
 pub fn build_compressed_cache(cfg: &ProfileConfig,
-                              entries: &[std::rc::Rc<DocEntry>])
+                              entries: &[Rc<DocEntry>])
                               -> (Tensor, Vec<f32>) {
     let bs = cfg.block_size;
     let lc = cfg.comp_len;
@@ -87,45 +90,67 @@ impl ContextPolicy for SamKvPolicy {
         }
     }
 
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
+    fn plan(&self, cfg: &ProfileConfig, sample: &Sample) -> ServePlan {
+        let mut plan =
+            ServePlan::docs_only(&self.name(), true, sample);
+        plan.buffer = Buffer::Sparse;
+        for doc in 0..sample.docs.len() {
+            plan.fixed_spans.push(PlannedSpan {
+                doc,
+                start: 0,
+                len: cfg.init_blocks * cfg.block_size,
+                kind: SlotKind::Init,
+            });
+            plan.fixed_spans.push(PlannedSpan {
+                doc,
+                start: (cfg.blocks_per_doc - cfg.local_blocks)
+                    * cfg.block_size,
+                len: cfg.local_blocks * cfg.block_size,
+                kind: SlotKind::Local,
+            });
+        }
+        if self.cfg.selection {
+            // Eq. 2/3 Top-P picks are dynamic; cap per doc
+            plan.dynamic_blocks =
+                sample.docs.len() * cfg.sel_cap_blocks;
+        }
+        if self.cfg.recompute {
+            // init+local always recomputed; PauTa outliers add
+            // dynamically (Fig. 5 planning)
+            plan.planned_recompute_tokens = sample.docs.len()
+                * cfg.fixed_blocks_per_doc()
+                * cfg.block_size;
+        }
+        plan
+    }
+
+    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+                sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let k = &self.cfg;
-        let mut warm = true;
-        let entries: Vec<_> = sample
-            .docs
-            .iter()
-            .map(|d| {
-                let (e, hit) = store.get_or_prefill(model, d)?;
-                warm &= hit;
-                Ok(e)
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
-
-        let t0 = Instant::now();
 
         // --- §3.1: generic query vector over the compressed cache -----
-        let (comp_kv, comp_valid) = build_compressed_cache(&cfg, &entries);
+        let (comp_kv, comp_valid) = build_compressed_cache(&cfg, docs);
         let q_pos: Vec<i32> = (0..cfg.query_len as i32)
             .map(|i| cfg.ctx_len as i32 + i)
             .collect();
         let qe = model.query_embed(&sample.query, comp_kv, &comp_valid,
                                    &q_pos)?;
         let q_locals: Vec<&Tensor> =
-            entries.iter().map(|e| &e.q_local).collect();
+            docs.iter().map(|e| &e.q_local).collect();
         let q_hats =
             personalized_queries(&qe.q_que, &q_locals, k.pers_bias);
 
         // --- A.1 analytics + §3.2 selection per document ---------------
         let stable: Vec<usize> =
             (cfg.stable_layer_start()..cfg.n_layers).collect();
-        let analyses: Vec<BlockAttention> = entries
+        let analyses: Vec<BlockAttention> = docs
             .iter()
             .map(|e| analyze_doc(&e.attn, &cfg, k.pauta_sigma))
             .collect();
         let picked_per_doc = if k.selection {
-            let mut sels = Vec::with_capacity(entries.len());
-            for (d, e) in entries.iter().enumerate() {
+            let mut sels = Vec::with_capacity(docs.len());
+            for (d, e) in docs.iter().enumerate() {
                 let per_layer: Vec<Vec<f32>> = if k.offload_scoring {
                     let scores = model.score_blocks(
                         q_hats[d].clone(),
@@ -149,12 +174,12 @@ impl ContextPolicy for SamKvPolicy {
             }
             cross_filter(&cfg, &sels)
         } else {
-            vec![Vec::new(); entries.len()]
+            vec![Vec::new(); docs.len()]
         };
 
         // --- assemble the sparse buffer --------------------------------
         let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
-        for (d, e) in entries.iter().enumerate() {
+        for (d, e) in docs.iter().enumerate() {
             for b in 0..cfg.init_blocks {
                 ctx.append_block(&cfg, e, d, b, SlotKind::Init)?;
             }
@@ -167,8 +192,6 @@ impl ContextPolicy for SamKvPolicy {
                 ctx.append_block(&cfg, e, d, b, SlotKind::Local)?;
             }
         }
-        let seq_ratio = ctx.seq_ratio(&cfg);
-        let kv_bytes = ctx.kv_bytes(&cfg);
 
         // --- §3.3 recomputation with Fig.-5 planning --------------------
         let mut recompute_ratio = 0.0;
@@ -183,27 +206,9 @@ impl ContextPolicy for SamKvPolicy {
                 write_back(&cfg, &ctx.kv, kv_new, &plan.mask, k.update);
             ctx.replace_kv(fused)?;
         }
-        let prep_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        // --- §3.3 final incremental prefill + decode --------------------
-        let td = Instant::now();
-        let answer = query_and_decode(model, &cfg, &mut ctx,
-                                      Buffer::Sparse, sample)?;
-        let qa_ms = td.elapsed().as_secs_f64() * 1e3;
-        let frac = cfg.query_len as f64
-            / (cfg.query_len + answer.len().max(1)) as f64;
-
-        Ok(PolicyOutput {
-            answer,
-            stats: RunStats {
-                ttft_ms: prep_ms + qa_ms * frac,
-                decode_ms: qa_ms * (1.0 - frac),
-                seq_ratio,
-                recompute_ratio,
-                kv_bytes,
-                cache_warm: warm,
-            },
-        })
+        let mut ready = ReadyContext::new(&cfg, ctx, Buffer::Sparse);
+        ready.recompute_ratio = recompute_ratio;
+        Ok(ready)
     }
 }
 

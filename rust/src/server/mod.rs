@@ -1,8 +1,14 @@
 //! JSON-lines-over-TCP serving front end + matching client.
 //!
 //! Wire format: one JSON object per line.
-//! Request:  `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion"}`
-//! Response: `{"id":1,"answer":[...],"ttft_ms":...,"seq_ratio":...}`
+//! Request:  `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion",
+//!             "stream":true}`
+//! Response: `{"id":1,"answer":[...],"ttft_ms":...,"plan_ms":...,
+//!             "doc_prefill_ms":...,"seq_ratio":...}`
+//! With `"stream":true`, one token line
+//! `{"id":1,"index":0,"token":...}` is written per generated token
+//! (SSE-style incremental output) before the final response line; the
+//! terminal line is the one carrying `answer` (or `error`).
 //! `{"cmd":"metrics"}` returns the metrics report;
 //! `{"cmd":"shutdown"}` stops the listener.
 
@@ -13,7 +19,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{EngineHandle, Router, ServeRequest};
+use crate::coordinator::{EngineHandle, Router, ServeEvent, ServeRequest};
 use crate::exec::ThreadPool;
 use crate::json::{self, Value};
 use crate::metrics::Metrics;
@@ -82,7 +88,7 @@ fn handle_conn(stream: TcpStream, engines: &[EngineHandle],
             continue;
         }
         let reply = match process_line(&line, engines, router, metrics,
-                                       stop) {
+                                       stop, &mut writer) {
             Ok(v) => v,
             Err(e) => Value::obj().set("error", format!("{e:#}")),
         };
@@ -94,8 +100,12 @@ fn handle_conn(stream: TcpStream, engines: &[EngineHandle],
     Ok(())
 }
 
+/// Handle one request line; streamed token lines are written to
+/// `writer` as they arrive, and the returned value is the terminal
+/// line (response or command result).
 fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
-                metrics: &Metrics, stop: &AtomicBool) -> Result<Value> {
+                metrics: &Metrics, stop: &AtomicBool,
+                writer: &mut impl Write) -> Result<Value> {
     let v = json::parse(line)?;
     if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
@@ -115,10 +125,25 @@ fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
         };
     }
     let req = ServeRequest::from_json(&v)?;
+    let stream_tokens = req.stream;
     let idx = router.pick(&req.sample);
-    let resp = engines[idx].serve(req);
+    let events = engines[idx].submit(req);
+    let outcome = (|| -> Result<Value> {
+        let events = events?;
+        loop {
+            match events.recv() {
+                Ok(ev @ ServeEvent::Token { .. }) => {
+                    if stream_tokens {
+                        writeln!(writer, "{}", ev.to_json())?;
+                    }
+                }
+                Ok(ServeEvent::Done(resp)) => return Ok(resp.to_json()),
+                Err(_) => anyhow::bail!("engine dropped reply"),
+            }
+        }
+    })();
     router.done(idx);
-    Ok(resp?.to_json())
+    outcome
 }
 
 /// Minimal blocking client for examples, benches, and tests.
@@ -146,12 +171,11 @@ impl Client {
         json::parse(&line)
     }
 
-    /// Serve one request; returns the parsed response object.
-    pub fn request(&mut self, docs: &[Vec<i32>], query: &[i32],
-                   policy: &str) -> Result<Value> {
+    fn request_value(&mut self, docs: &[Vec<i32>], query: &[i32],
+                     policy: &str, stream: bool) -> Value {
         let id = self.next_id;
         self.next_id += 1;
-        let msg = Value::obj()
+        let mut msg = Value::obj()
             .set("id", id as i64)
             .set("docs",
                  Value::Arr(docs
@@ -165,7 +189,35 @@ impl Client {
             .set("query",
                  Value::Arr(query.iter().map(|&t| (t as i64).into()).collect()))
             .set("policy", policy);
+        if stream {
+            msg = msg.set("stream", true);
+        }
+        msg
+    }
+
+    /// Serve one request; returns the parsed response object.
+    pub fn request(&mut self, docs: &[Vec<i32>], query: &[i32],
+                   policy: &str) -> Result<Value> {
+        let msg = self.request_value(docs, query, policy, false);
         self.roundtrip(&msg)
+    }
+
+    /// Serve one request with streaming: `on_token` fires for every
+    /// token line as it arrives; returns the terminal response object.
+    pub fn request_stream(&mut self, docs: &[Vec<i32>], query: &[i32],
+                          policy: &str, mut on_token: impl FnMut(i32))
+                          -> Result<Value> {
+        let msg = self.request_value(docs, query, policy, true);
+        writeln!(self.writer, "{msg}")?;
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            let v = json::parse(&line)?;
+            match v.get("token").and_then(|t| t.as_i64()) {
+                Some(t) => on_token(t as i32),
+                None => return Ok(v), // terminal line: answer or error
+            }
+        }
     }
 
     pub fn metrics(&mut self) -> Result<Value> {

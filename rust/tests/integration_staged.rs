@@ -1,0 +1,179 @@
+//! Staged-protocol integration over the tiny artifacts: for every
+//! policy, driving the explicit plan/prefill/assemble/attend/decode
+//! stages must be token-identical to the legacy blocking `run()` entry
+//! point, streamed tokens must equal the final answer, and the
+//! per-stage timing split must be consistent.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use samkv::kvcache::CacheStore;
+use samkv::model::Model;
+use samkv::policies::{
+    all_policies, CollectSink, ContextPolicy, ServeSession, Stage,
+};
+use samkv::runtime::{artifacts_dir, Runtime};
+use samkv::workload::Dataset;
+use std::rc::Rc;
+
+fn setup() -> Option<(Model, Dataset)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let rt = Rc::new(Runtime::new(dir.clone()).unwrap());
+    let model = Model::load(rt, "tiny").unwrap();
+    let ds =
+        Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap();
+    Some((model, ds))
+}
+
+#[test]
+fn staged_is_token_identical_to_run_for_every_policy() {
+    let Some((model, ds)) = setup() else { return };
+    let sample = &ds.samples[0]; // fixed sample; artifacts are seeded
+    for policy in all_policies() {
+        // legacy path: run() (the default staged blocking driver)
+        let mut store_a = CacheStore::unbounded();
+        let legacy = policy.run(&model, &mut store_a, sample).unwrap();
+
+        // explicit staged path with streaming
+        let mut store_b = CacheStore::unbounded();
+        let mut session =
+            ServeSession::new(policy.as_ref(), &model.cfg, sample);
+        assert_eq!(session.stage(), Stage::Planned);
+        session.prefill_docs(&model, &mut store_b).unwrap();
+        session.assemble(&model).unwrap();
+        session.attend(&model).unwrap();
+        let mut sink = CollectSink::default();
+        while session.decode_step(&model, &mut sink).unwrap().is_some() {}
+        assert!(session.is_done());
+        let staged = session.finish();
+
+        assert_eq!(staged.answer, legacy.answer,
+                   "{}: staged != run()", policy.name());
+        assert_eq!(sink.0, staged.answer,
+                   "{}: streamed tokens != final answer", policy.name());
+        assert_eq!(staged.stats.cache_warm, legacy.stats.cache_warm);
+        assert_eq!(staged.stats.seq_ratio, legacy.stats.seq_ratio,
+                   "{}", policy.name());
+        assert_eq!(staged.stats.recompute_ratio,
+                   legacy.stats.recompute_ratio, "{}", policy.name());
+        assert!(staged.stats.ttft_ms > 0.0, "{}", policy.name());
+        assert!(staged.stats.plan_ms >= 0.0);
+    }
+}
+
+/// Non-circular legacy check: `run()` is now a default method over the
+/// stages, so comparing it with a session exercises one code path
+/// twice. This test instead re-implements the SEED's monolithic Reuse
+/// serving loop (assemble + incremental query prefill + the old
+/// greedy decode with its original bound structure) directly against
+/// public APIs and asserts the staged pipeline reproduces it
+/// token-for-token.
+#[test]
+fn staged_decode_matches_seed_era_reference_loop() {
+    use samkv::kvcache::{AssembledContext, CacheStore as Store};
+    use samkv::model::Buffer;
+    use samkv::tokenizer as tok;
+
+    let Some((model, ds)) = setup() else { return };
+    let cfg = model.cfg.clone();
+    let sample = &ds.samples[0];
+
+    // --- reference: the pre-refactor Reuse pipeline, inlined ----------
+    let mut store = Store::unbounded();
+    let mut ctx = AssembledContext::new(&cfg, Buffer::Full);
+    for (d, doc) in sample.docs.iter().enumerate() {
+        let (e, _) = store.get_or_prefill(&model, doc).unwrap();
+        ctx.append_doc(&cfg, &e, d).unwrap();
+    }
+    let step = |ctx: &mut AssembledContext, t: i32, pos: i32| {
+        let slot = ctx.push_token(t, pos).unwrap();
+        let out = model
+            .decode(Buffer::Full, t, pos, slot as i32, &ctx.kv,
+                    &ctx.valid)
+            .unwrap();
+        ctx.write_token_kv(slot, &out.k_new, &out.v_new);
+        out.logits
+    };
+    let q0 = cfg.ctx_len as i32;
+    let mut logits: Option<Vec<f32>> = None;
+    for (i, &t) in sample.query.iter().enumerate() {
+        logits = Some(step(&mut ctx, t, q0 + i as i32));
+    }
+    // the seed's greedy loop, duplicated bound checks and all
+    let mut reference = Vec::new();
+    let mut pos = q0 + cfg.query_len as i32;
+    let mut cur = samkv::model::Model::argmax(&logits.unwrap());
+    for _ in 0..cfg.answer_max {
+        if cur == tok::EOS {
+            break;
+        }
+        reference.push(cur);
+        if reference.len() >= cfg.answer_max {
+            break;
+        }
+        let out = step(&mut ctx, cur, pos);
+        cur = samkv::model::Model::argmax(&out);
+        pos += 1;
+    }
+
+    // --- staged pipeline on a fresh store ------------------------------
+    let staged = samkv::policies::ReusePolicy
+        .run(&model, &mut CacheStore::unbounded(), sample)
+        .unwrap();
+    assert_eq!(staged.answer, reference,
+               "staged Reuse diverged from the seed-era serving loop");
+}
+
+#[test]
+fn plans_are_pure_and_describe_requests() {
+    let Some((model, ds)) = setup() else { return };
+    let sample = &ds.samples[0];
+    for policy in all_policies() {
+        let p1 = policy.plan(&model.cfg, sample);
+        let p2 = policy.plan(&model.cfg, sample);
+        assert_eq!(p1.doc_hashes, p2.doc_hashes, "{}", policy.name());
+        assert_eq!(p1.needs_doc_cache, policy.uses_doc_cache());
+        if p1.needs_doc_cache {
+            assert_eq!(p1.doc_hashes.len(), sample.docs.len());
+        } else {
+            assert!(p1.doc_hashes.is_empty());
+        }
+    }
+}
+
+#[test]
+fn stage_order_is_enforced() {
+    let Some((model, ds)) = setup() else { return };
+    let sample = &ds.samples[0];
+    let policies = all_policies();
+    let policy = policies[1].as_ref(); // Reuse
+    let mut session = ServeSession::new(policy, &model.cfg, sample);
+    // assemble before prefill_docs must fail, not misbehave
+    assert!(session.assemble(&model).is_err());
+    assert!(session.attend(&model).is_err());
+    let mut store = CacheStore::unbounded();
+    session.prefill_docs(&model, &mut store).unwrap();
+    assert!(session.prefill_docs(&model, &mut store).is_err());
+    session.assemble(&model).unwrap();
+    session.attend(&model).unwrap();
+    assert!(session.attend(&model).is_err());
+}
+
+#[test]
+fn warm_second_session_matches_cold_first() {
+    let Some((model, ds)) = setup() else { return };
+    let sample = &ds.samples[0];
+    let policies = all_policies();
+    let policy = policies.last().unwrap(); // SamKV-fusion
+    let mut store = CacheStore::unbounded();
+    let cold = policy.run(&model, &mut store, sample).unwrap();
+    assert!(!cold.stats.cache_warm);
+    let warm = policy.run(&model, &mut store, sample).unwrap();
+    assert!(warm.stats.cache_warm);
+    assert_eq!(cold.answer, warm.answer);
+    // warm path did no document prefill work to speak of
+    assert!(warm.stats.doc_prefill_ms <= cold.stats.doc_prefill_ms);
+}
