@@ -10,7 +10,7 @@ use samkv::attention::{analyze_doc, layer_stability_scores,
 use samkv::bench::experiments as exp;
 use samkv::bench::Table;
 use samkv::cli::Args;
-use samkv::kvcache::CacheStore;
+use samkv::kvcache::EngineDocCache;
 use samkv::sparse::{block_scores_host, topp_select};
 
 fn main() -> samkv::Result<()> {
@@ -22,7 +22,7 @@ fn main() -> samkv::Result<()> {
     let cfg = model.cfg.clone();
     let ds = exp::load_dataset(&model,
                                &args.get_str("dataset", "hotpot-sim"))?;
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
 
     // one document in depth
     let sample = &ds.samples[0];

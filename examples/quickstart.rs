@@ -10,7 +10,7 @@ use std::io::Write;
 
 use samkv::bench::experiments as exp;
 use samkv::config::SamKvConfig;
-use samkv::kvcache::CacheStore;
+use samkv::kvcache::EngineDocCache;
 use samkv::policies::{ContextPolicy, FnSink, SamKvPolicy, ServeSession};
 use samkv::tokenizer as tok;
 
@@ -30,7 +30,7 @@ fn main() -> samkv::Result<()> {
     println!("\nquery: {}", tok::render(&sample.query));
     println!("gold answer: {}", tok::render(&sample.answer));
 
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let policy = SamKvPolicy::new(SamKvConfig::default());
 
     // stage 1 — pure planning (no model, no device)

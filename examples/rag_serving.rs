@@ -14,7 +14,8 @@ use std::thread;
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 use samkv::config::ServingConfig;
-use samkv::coordinator::Engine;
+use samkv::coordinator::{Engine, Router};
+use samkv::kvcache::HostDocCache;
 use samkv::metrics::Metrics;
 use samkv::rng::Rng;
 use samkv::runtime::artifacts_dir;
@@ -33,9 +34,13 @@ fn main() -> samkv::Result<()> {
     let metrics = Arc::new(Metrics::new());
     let cfg = ServingConfig { profile: profile.clone(),
                               ..ServingConfig::default() };
+    let host = Arc::new(HostDocCache::unbounded());
+    let router = Arc::new(Router::new(1));
     let engine = Engine::spawn(0, artifacts_dir(), cfg, policy.clone(),
-                               Arc::clone(&metrics))?;
-    let server = Server::new(vec![engine.handle()], Arc::clone(&metrics));
+                               Arc::clone(&metrics), host,
+                               Some(router.residency_handle(0)))?;
+    let server = Server::with_router(vec![engine.handle()],
+                                     Arc::clone(&metrics), router);
     let (port_tx, port_rx) = mpsc::channel();
     let srv = thread::spawn(move || {
         server.run("127.0.0.1:0", move |p| {

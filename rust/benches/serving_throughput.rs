@@ -1,6 +1,10 @@
 //! End-to-end serving throughput/latency under synthetic load through
-//! the full coordinator stack (engine thread, batcher, metrics), with
-//! recurring document sets exercising the context cache.
+//! the full coordinator stack (engine threads over the shared host
+//! doc-cache tier, cache-aware router, batcher, metrics), with
+//! recurring document sets exercising both cache tiers. The emitted
+//! JSON carries the per-tier hit/miss/eviction/publish counters; with
+//! `--engines 2+`, `host_publishes == unique documents` demonstrates
+//! the cross-engine prefill dedup.
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 
@@ -12,7 +16,8 @@ fn main() {
                                "SamKV-fusion,CacheBlend,Reuse").split(',') {
         exp::throughput(&profile, policy,
                         args.get::<usize>("requests", 24),
-                        args.get::<usize>("unique", 8))
+                        args.get::<usize>("unique", 8),
+                        args.get::<usize>("engines", 2))
             .unwrap();
     }
 }

@@ -12,7 +12,7 @@ use crate::bench::Table;
 use crate::config::{SamKvConfig, UpdateStrategy};
 use crate::eval::{evaluate, EvalResult};
 use crate::json::Value;
-use crate::kvcache::CacheStore;
+use crate::kvcache::EngineDocCache;
 use crate::model::Model;
 use crate::policies::{
     all_policies, CacheBlendPolicy, ContextPolicy, EpicPolicy,
@@ -68,6 +68,8 @@ fn eval_to_json(r: &EvalResult) -> Value {
         .set("seq_ratio", r.mean_seq_ratio)
         .set("recompute_ratio", r.mean_recompute_ratio)
         .set("kv_bytes", r.mean_kv_bytes)
+        .set("doc_cache_hit_rate", r.doc_cache_hit_rate)
+        .set("doc_cache_peak_bytes", r.doc_cache_peak_bytes)
 }
 
 // ---------------------------------------------------------------------------
@@ -267,7 +269,7 @@ pub fn fig7(model: &Model, dataset: &Dataset, n_docs: usize)
     println!("== Fig. 7: block power-law fits (model {}, {} docs)\n",
              model.name, n_docs);
     let cfg = model.cfg.clone();
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let mut alphas_all = Vec::new();
     let mut tbl = Table::new(&["doc", "block", "rep tok", "alpha",
                                "mean recv", "imp rank"]);
@@ -334,7 +336,7 @@ pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
     let mut out_rows = Vec::new();
     for ds_name in dataset_names(model) {
         let ds = load_dataset(model, &ds_name)?;
-        let mut store = CacheStore::unbounded();
+        let mut store = EngineDocCache::unbounded();
         let mut analyses = Vec::new();
         let mut count = 0;
         'outer: for sample in &ds.samples {
@@ -372,29 +374,43 @@ pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
 // Serving throughput/latency under load (system experiment)
 // ---------------------------------------------------------------------------
 
-/// Drive the full serving stack (engine thread + router + metrics) with
-/// a synthetic load where document sets recur (`n_unique` distinct sets
-/// across `n_requests`), reporting throughput, latency percentiles, and
-/// cache hit behaviour.
+/// Drive the full serving stack (engine threads over one shared host
+/// doc-cache tier + cache-aware router + metrics) with a synthetic
+/// load where document sets recur (`n_unique` distinct sets across
+/// `n_requests`), reporting throughput, latency percentiles, and
+/// per-tier cache behaviour. With `n_engines >= 2` the host-tier
+/// publish counter proves the cross-engine dedup: each unique document
+/// is prefilled exactly once process-wide.
 pub fn throughput(profile: &str, policy: &str, n_requests: usize,
-                  n_unique: usize) -> Result<Value> {
+                  n_unique: usize, n_engines: usize) -> Result<Value> {
     use crate::config::ServingConfig;
-    use crate::coordinator::{recv_done, Engine, ServeRequest};
+    use crate::coordinator::{recv_done, Engine, Router, ServeRequest};
+    use crate::kvcache::HostDocCache;
     use crate::metrics::Metrics;
     use crate::rng::Rng;
     use crate::workload::synthetic_sample;
     use std::sync::Arc;
 
+    let n_engines = n_engines.max(1);
     println!("== Serving throughput: profile {profile}, policy {policy}, \
-              {n_requests} requests over {n_unique} doc-sets\n");
+              {n_requests} requests over {n_unique} doc-sets, \
+              {n_engines} engine(s)\n");
     let metrics = Arc::new(Metrics::new());
+    let host = Arc::new(HostDocCache::unbounded());
+    let router = Arc::new(Router::new(n_engines));
     let cfg = ServingConfig {
         profile: profile.to_string(),
         ..ServingConfig::default()
     };
-    let engine = Engine::spawn(0, artifacts_dir(), cfg,
-                               policy.to_string(), Arc::clone(&metrics))?;
-    let handle = engine.handle();
+    let engines: Vec<Engine> = (0..n_engines)
+        .map(|i| {
+            Engine::spawn(i, artifacts_dir(), cfg.clone(),
+                          policy.to_string(), Arc::clone(&metrics),
+                          Arc::clone(&host),
+                          Some(router.residency_handle(i)))
+        })
+        .collect::<Result<_>>()?;
+    let handles: Vec<_> = engines.iter().map(|e| e.handle()).collect();
 
     // unique doc-sets generated once, then requests cycle over them
     let model = load_model(profile)?;
@@ -406,36 +422,45 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
     let t0 = std::time::Instant::now();
     // pipelined submission: keep a small window in flight
     let mut pending = std::collections::VecDeque::new();
+    let mut errors = 0usize;
+    let mut finish = |pending: &mut std::collections::VecDeque<_>| {
+        let (engine, rx): (usize, _) = pending.pop_front().unwrap();
+        if !matches!(recv_done(&rx), Ok(r) if r.error.is_none()) {
+            errors += 1;
+        }
+        router.done(engine);
+    };
     for i in 0..n_requests {
         let sample = pool[i % n_unique].clone();
-        let rx = handle.submit(ServeRequest {
+        let engine = router.pick(&sample);
+        let rx = handles[engine].submit(ServeRequest {
             id: i as u64,
             sample,
             policy: policy.to_string(),
             stream: false,
         })?;
-        pending.push_back(rx);
+        pending.push_back((engine, rx));
         if pending.len() >= 8 {
-            let _ = recv_done(&pending.pop_front().unwrap());
+            finish(&mut pending);
         }
     }
-    let mut errors = 0usize;
-    while let Some(rx) = pending.pop_front() {
-        match recv_done(&rx) {
-            Ok(r) if r.error.is_none() => {}
-            _ => errors += 1,
-        }
+    while !pending.is_empty() {
+        finish(&mut pending);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let rps = n_requests as f64 / wall_s;
     println!("{}", metrics.report());
     println!("wall {:.1}s -> {:.2} req/s, errors {}", wall_s, rps, errors);
+    let load = |a: &std::sync::atomic::AtomicU64| {
+        a.load(std::sync::atomic::Ordering::Relaxed) as i64
+    };
     let v = Value::obj()
         .set("experiment", "throughput")
         .set("model", profile)
         .set("policy", policy)
         .set("requests", n_requests)
         .set("unique_docsets", n_unique)
+        .set("engines", n_engines)
         .set("wall_s", wall_s)
         .set("req_per_s", rps)
         .set("errors", errors)
@@ -444,9 +469,16 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         .set("e2e_p95_ms", metrics.e2e.percentile_ms(0.95))
         .set("plan_mean_ms", metrics.plan.mean_ms())
         .set("doc_prefill_mean_ms", metrics.doc_prefill.mean_ms())
-        .set("doc_prefills",
-             metrics.doc_prefills
-                 .load(std::sync::atomic::Ordering::Relaxed) as i64);
+        .set("doc_prefills", load(&metrics.doc_prefills))
+        // per-tier document-cache counters (see Metrics)
+        .set("host_hits", load(&metrics.host_hits))
+        .set("host_misses", load(&metrics.host_misses))
+        .set("host_publishes", load(&metrics.host_publishes))
+        .set("host_evictions", load(&metrics.host_evictions))
+        .set("host_bytes", load(&metrics.host_bytes))
+        .set("resident_hits", load(&metrics.resident_hits))
+        .set("resident_misses", load(&metrics.resident_misses))
+        .set("resident_evictions", load(&metrics.resident_evictions));
     save_result(&format!("throughput_{profile}_{policy}"), &v)?;
     Ok(v)
 }

@@ -1,7 +1,10 @@
-//! Engine: one thread owning a PJRT runtime + model + document cache,
-//! serving requests from a channel (dynamic batching applied at the
-//! queue). The PJRT client is not `Send`, so everything device-adjacent
-//! lives here.
+//! Engine: one thread owning a PJRT runtime + model + the engine-local
+//! residency tier of the document cache, serving requests from a
+//! channel (dynamic batching applied at the queue). The PJRT client is
+//! not `Send`, so everything device-adjacent lives here; the
+//! [`HostDocCache`] beneath the residency tier is shared across all
+//! engines, so a document prefilled by any engine is a host-tier hit
+//! for every other (see [`crate::kvcache`]).
 //!
 //! The batch loop exploits the staged policy protocol
 //! ([`crate::policies::pipeline`]): every request in the batch is
@@ -24,7 +27,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::kvcache::CacheStore;
+use crate::kvcache::{
+    EngineDocCache, HostDocCache, ResidencyHandle, TierHit,
+};
 use crate::metrics::Metrics;
 use crate::model::Model;
 use crate::policies::pipeline::{dedup_doc_plans, FnSink, ServeSession};
@@ -73,18 +78,22 @@ pub struct Engine {
 
 impl Engine {
     /// Spawn the engine thread: loads the runtime + model, compiles the
-    /// serving entry points, then loops on the queue. `ready` resolves
-    /// after warmup (Err when initialization failed).
+    /// serving entry points, then loops on the queue. The engine's
+    /// residency tier is constructed over the shared `host` tier;
+    /// `residency` (when routed) advertises resident hashes for
+    /// cache-aware placement. `ready` resolves after warmup (Err when
+    /// initialization failed).
     pub fn spawn(index: usize, artifacts: PathBuf, cfg: ServingConfig,
-                 default_policy: String, metrics: Arc<Metrics>)
-                 -> Result<Engine> {
+                 default_policy: String, metrics: Arc<Metrics>,
+                 host: Arc<HostDocCache>,
+                 residency: Option<ResidencyHandle>) -> Result<Engine> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = thread::Builder::new()
             .name(format!("engine-{index}"))
             .spawn(move || {
                 engine_main(index, artifacts, cfg, default_policy, metrics,
-                            rx, ready_tx);
+                            host, residency, rx, ready_tx);
             })?;
         ready_rx
             .recv()
@@ -111,21 +120,28 @@ impl Drop for Engine {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                default_policy: String, metrics: Arc<Metrics>,
+               host: Arc<HostDocCache>,
+               residency: Option<ResidencyHandle>,
                rx: mpsc::Receiver<Msg>,
                ready_tx: mpsc::Sender<Result<()>>) {
-    let init = (|| -> Result<(Model, CacheStore)> {
+    let init = (|| -> Result<(Model, EngineDocCache)> {
         let rt = std::rc::Rc::new(Runtime::new(artifacts)?);
         let model = Model::load(rt, &cfg.profile)?;
         model.warmup()?;
-        // budget: documents for ~64 concurrent doc-sets
+        // residency budget: documents for ~64 concurrent doc-sets
         let budget = 64
             * model.cfg.n_docs
             * model.cfg.doc_len
             * model.cfg.kv_bytes_per_token()
             * 4;
-        Ok((model, CacheStore::new(budget)))
+        // an auto-sized host tier is bounded too: hold ~4 engines'
+        // worth of residency (explicitly configured budgets win)
+        host.ensure_min_budget(budget.saturating_mul(4));
+        Ok((model,
+            EngineDocCache::new(host, budget).with_residency(residency)))
     })();
     let (model, mut store) = match init {
         Ok(x) => {
@@ -163,7 +179,7 @@ fn error_response(id: u64, msg: String) -> ServeResponse {
 }
 
 /// Serve one gathered batch through the staged protocol.
-fn serve_batch(model: &Model, store: &mut CacheStore,
+fn serve_batch(model: &Model, store: &mut EngineDocCache,
                policies: &HashMap<String, Box<dyn ContextPolicy>>,
                default_policy: &str, metrics: &Metrics,
                batch: Vec<Msg>) {
@@ -198,13 +214,19 @@ fn serve_batch(model: &Model, store: &mut CacheStore,
 
     // --- stage 2: cross-request doc-prefill dedup ----------------------
     // prefill each document needed by the batch exactly once; split the
-    // cost across the requests sharing it
+    // cost across the requests sharing it. The whole batch's planned
+    // hashes are pinned for the duration so no tier eviction can race
+    // the per-session stages below.
     let shared = {
         let plans: Vec<Option<&ServePlan>> = sessions
             .iter()
             .map(|s| s.as_ref().map(|s| s.plan()))
             .collect();
         dedup_doc_plans(&plans)
+    };
+    let _batch_pins = {
+        let hashes: Vec<u64> = shared.iter().map(|sd| sd.hash).collect();
+        store.pin_planned(&hashes)
     };
     for sd in &shared {
         // sharers may have died earlier in this stage (a previous doc's
@@ -222,8 +244,23 @@ fn serve_batch(model: &Model, store: &mut CacheStore,
         let tokens = &items[sd.req].0.sample.docs[sd.doc];
         let t = Instant::now();
         match store.get_or_prefill(model, tokens) {
-            Ok((_, true)) => continue,  // already cached: nothing to credit
-            Ok((_, false)) => {}
+            // already resident: free
+            Ok((_, TierHit::Resident)) => continue,
+            // host-tier hit — but the lookup may have blocked on
+            // another engine's in-flight prefill lease; attribute that
+            // wait to the sharers' doc_prefill time (cache still warm:
+            // no local prefill ran)
+            Ok((_, TierHit::Host)) => {
+                let share =
+                    t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
+                for &si in &live {
+                    if let Some(s) = sessions[si].as_mut() {
+                        s.credit_shared_prefill(share, false);
+                    }
+                }
+                continue;
+            }
+            Ok((_, TierHit::Prefilled)) => {}
             Err(e) => {
                 // fail every live sharer now rather than re-running the
                 // (expensive, failing) prefill once per request later
@@ -265,6 +302,12 @@ fn serve_batch(model: &Model, store: &mut CacheStore,
             sessions[i] = None;
         }
     }
+
+    // flush per-tier cache counters now — decode below never touches
+    // the doc cache, and responses must not outrun the stats they
+    // describe (metrics report, server wire, bench JSON)
+    metrics.record_cache_tiers(&store.host_stats(),
+                               &store.take_stats_delta());
 
     // --- stage 4: interleaved decode, one token per session per round
     loop {

@@ -1,10 +1,12 @@
 //! L3 coordinator: the serving control plane.
 //!
 //! PJRT clients are not `Send`, so each [`engine::Engine`] owns its
-//! runtime + model + document cache on a dedicated thread (the vLLM
-//! executor-thread pattern); [`router::Router`] spreads requests across
-//! engines with document-cache affinity, and [`batcher`] shapes the
-//! per-engine queue into bounded batches.
+//! runtime + model + document-cache residency tier on a dedicated
+//! thread (the vLLM executor-thread pattern), all engines sharing one
+//! [`crate::kvcache::HostDocCache`] beneath; [`router::Router`] spreads
+//! requests across engines with cache-aware placement (residency →
+//! affinity → least-loaded), and [`batcher`] shapes the per-engine
+//! queue into bounded batches.
 
 pub mod batcher;
 pub mod engine;

@@ -1,17 +1,31 @@
-//! Document-cache-affinity router (the vLLM-router shape): requests
-//! whose document set hashes alike land on the same engine so its LRU
-//! cache keeps serving them; load imbalance beyond a threshold falls
-//! back to least-loaded.
+//! Cache-aware, affinity-backed router (the vLLM-router shape).
+//!
+//! Placement order for a request:
+//! 1. **Residency** — the engine already holding the most of the
+//!    request's document hashes device-resident (read from the shared
+//!    [`ResidencyBoard`] that every engine's residency tier updates)
+//!    wins, so the request lands where its KV already lives.
+//! 2. **Affinity** — otherwise the combined doc-set hash picks a
+//!    stable engine, so recurring doc-sets keep warming one cache.
+//! 3. **Least-loaded** — either preference is overridden when the
+//!    preferred engine's in-flight load exceeds the minimum by more
+//!    than `imbalance_limit`.
+//!
+//! A bad placement is never incorrect — the shared host tier still
+//! dedups prefill work across engines — it just costs residency churn.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::kvcache::store::doc_hash;
+use crate::kvcache::{ResidencyBoard, ResidencyHandle};
 use crate::workload::Sample;
 
 pub struct Router {
     in_flight: Vec<AtomicU64>,
-    /// Allowed load gap before affinity is overridden.
+    /// Allowed load gap before a preference is overridden.
     pub imbalance_limit: u64,
+    board: Arc<ResidencyBoard>,
 }
 
 impl Router {
@@ -20,6 +34,7 @@ impl Router {
         Router {
             in_flight: (0..n_engines).map(|_| AtomicU64::new(0)).collect(),
             imbalance_limit: 8,
+            board: Arc::new(ResidencyBoard::new(n_engines)),
         }
     }
 
@@ -27,42 +42,84 @@ impl Router {
         self.in_flight.len()
     }
 
+    /// The residency board engines should advertise on.
+    pub fn board(&self) -> &Arc<ResidencyBoard> {
+        &self.board
+    }
+
+    /// Writer handle wiring engine `i`'s residency tier to this
+    /// router's board (pass to `Engine::spawn`).
+    pub fn residency_handle(&self, engine: usize) -> ResidencyHandle {
+        ResidencyHandle::new(Arc::clone(&self.board), engine)
+    }
+
     /// Combined hash of the sample's document set (order-insensitive so
     /// permuted retrievals still hit the same engine cache).
     pub fn affinity_hash(sample: &Sample) -> u64 {
-        sample
-            .docs
-            .iter()
-            .map(|d| doc_hash(d))
-            .fold(0u64, |acc, h| acc ^ h)
+        Self::fold_hashes(
+            &sample.docs.iter().map(|d| doc_hash(d)).collect::<Vec<_>>())
+    }
+
+    /// The affinity fold over already-computed per-doc hashes — the
+    /// single definition [`Self::affinity_hash`] and [`Self::pick`]
+    /// share.
+    fn fold_hashes(hashes: &[u64]) -> u64 {
+        hashes.iter().fold(0u64, |acc, &h| acc ^ h)
     }
 
     /// Pick an engine; callers must pair with [`Router::done`].
     pub fn pick(&self, sample: &Sample) -> usize {
         let n = self.in_flight.len();
-        let preferred = (Self::affinity_hash(sample) % n as u64) as usize;
         let loads: Vec<u64> = self
             .in_flight
             .iter()
             .map(|l| l.load(Ordering::Relaxed))
             .collect();
         let min = *loads.iter().min().unwrap();
-        let chosen = if loads[preferred] > min + self.imbalance_limit {
-            loads
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &l)| l)
-                .map(|(i, _)| i)
-                .unwrap()
-        } else {
-            preferred
+        let not_overloaded =
+            |e: usize| loads[e] <= min + self.imbalance_limit;
+
+        // 1) cache-aware: most planned docs already resident wins
+        // (ties: lighter load, then lower index — deterministic)
+        let hashes: Vec<u64> =
+            sample.docs.iter().map(|d| doc_hash(d)).collect();
+        let resident = (0..n)
+            .map(|e| (self.board.resident_count(e, &hashes), e))
+            .filter(|&(c, e)| c > 0 && not_overloaded(e))
+            .max_by_key(|&(c, e)| (c, std::cmp::Reverse((loads[e], e))));
+
+        let chosen = match resident {
+            Some((_, e)) => e,
+            None => {
+                // 2) doc-set affinity (folding the per-doc hashes
+                // already computed above), 3) least-loaded fallback
+                let preferred =
+                    (Self::fold_hashes(&hashes) % n as u64) as usize;
+                if not_overloaded(preferred) {
+                    preferred
+                } else {
+                    loads
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, &l)| l)
+                        .map(|(i, _)| i)
+                        .unwrap()
+                }
+            }
         };
         self.in_flight[chosen].fetch_add(1, Ordering::Relaxed);
         chosen
     }
 
+    /// Release one in-flight slot. Saturates at zero: an unmatched
+    /// `done` (double release, error path) must not wrap the load
+    /// counter to u64::MAX and poison placement forever.
     pub fn done(&self, engine: usize) {
-        self.in_flight[engine].fetch_sub(1, Ordering::Relaxed);
+        let _ = self.in_flight[engine].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
     }
 
     pub fn loads(&self) -> Vec<u64> {
@@ -123,6 +180,63 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_tie_breaks_to_lowest_index() {
+        let mut r = Router::new(3);
+        r.imbalance_limit = 0;
+        let s = sample(3);
+        let preferred = (Router::affinity_hash(&s) % 3) as usize;
+        // overload the affinity engine; all others idle and tied
+        r.in_flight[preferred].fetch_add(5, Ordering::Relaxed);
+        let chosen = r.pick(&s);
+        let expected =
+            (0..3).find(|&e| e != preferred).unwrap();
+        assert_eq!(chosen, expected,
+                   "tied least-loaded must pick the lowest index");
+    }
+
+    #[test]
+    fn cache_aware_placement_prefers_resident_engine() {
+        let r = Router::new(4);
+        let s = sample(42);
+        let affinity = (Router::affinity_hash(&s) % 4) as usize;
+        // some non-affinity engine holds the sample's docs resident
+        let resident_engine = (affinity + 1) % 4;
+        let h = r.residency_handle(resident_engine);
+        for d in &s.docs {
+            h.insert(doc_hash(d));
+        }
+        let chosen = r.pick(&s);
+        assert_eq!(chosen, resident_engine,
+                   "placement must follow residency over affinity");
+        r.done(chosen);
+        // partial residency still beats none
+        h.remove(doc_hash(&s.docs[0]));
+        let chosen = r.pick(&s);
+        assert_eq!(chosen, resident_engine);
+        r.done(chosen);
+        // residency preference yields under overload
+        r.in_flight[resident_engine]
+            .fetch_add(r.imbalance_limit + 1, Ordering::Relaxed);
+        let chosen = r.pick(&s);
+        assert_eq!(chosen, affinity,
+                   "overloaded resident engine must fall back");
+    }
+
+    #[test]
+    fn most_resident_engine_wins_ties_by_load() {
+        let r = Router::new(2);
+        let s = sample(9);
+        // engine 0: 1 doc resident; engine 1: both docs resident
+        r.residency_handle(0).insert(doc_hash(&s.docs[0]));
+        let h1 = r.residency_handle(1);
+        h1.insert(doc_hash(&s.docs[0]));
+        h1.insert(doc_hash(&s.docs[1]));
+        let chosen = r.pick(&s);
+        assert_eq!(chosen, 1, "more resident docs must win");
+        r.done(chosen);
+    }
+
+    #[test]
     fn loads_track_in_flight() {
         let r = Router::new(2);
         let s = sample(1);
@@ -130,5 +244,20 @@ mod tests {
         assert_eq!(r.loads().iter().sum::<u64>(), 1);
         r.done(e);
         assert_eq!(r.loads().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn done_underflow_saturates_at_zero() {
+        let r = Router::new(2);
+        let s = sample(5);
+        let e = r.pick(&s);
+        r.done(e);
+        r.done(e); // unmatched: must not wrap to u64::MAX
+        r.done(1 - e);
+        assert_eq!(r.loads(), vec![0, 0]);
+        // routing still behaves after the double release
+        let e2 = r.pick(&s);
+        assert_eq!(r.loads().iter().sum::<u64>(), 1);
+        r.done(e2);
     }
 }

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::kvcache::CacheStore;
+use crate::kvcache::EngineDocCache;
 use crate::model::Model;
 use crate::policies::ContextPolicy;
 use crate::workload::{Dataset, Sample};
@@ -55,6 +55,13 @@ pub struct EvalResult {
     pub mean_seq_ratio: f64,
     pub mean_recompute_ratio: f64,
     pub mean_kv_bytes: f64,
+    /// Fraction of document lookups served from either cache tier
+    /// (resident or host) rather than freshly prefilled, over the
+    /// whole run including the pre-warm pass (0 for cacheless
+    /// policies).
+    pub doc_cache_hit_rate: f64,
+    /// Host-tier peak footprint over the run, bytes.
+    pub doc_cache_peak_bytes: usize,
     /// Per-query-type F1 × 100.
     pub per_type: Vec<(String, f64, usize)>,
 }
@@ -67,7 +74,7 @@ pub struct EvalResult {
 pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
                 dataset: &Dataset, max_samples: usize)
                 -> Result<EvalResult> {
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let n = dataset.samples.len().min(max_samples);
     let mut f1_sum = 0.0;
     let mut em_sum = 0.0;
@@ -101,11 +108,24 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         e.0 += f1;
         e.1 += 1;
         // bound memory: evaluation samples never repeat documents
+        // (drop both tiers — the private host tier would otherwise
+        // keep every entry alive)
         if store.len() > 64 {
-            store.clear();
+            store.clear_all();
         }
     }
     let nf = n as f64;
+    let host = store.host_stats();
+    let res = store.stats().clone();
+    // every resident-tier miss falls through to the host tier, so the
+    // resident counters cover all lookups and host.misses are the true
+    // prefills
+    let lookups = res.hits + res.misses;
+    let tier_hit_rate = if lookups == 0 {
+        0.0
+    } else {
+        (res.hits + host.hits) as f64 / lookups as f64
+    };
     Ok(EvalResult {
         policy: policy.name(),
         dataset: dataset.dataset.clone(),
@@ -119,6 +139,8 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         mean_seq_ratio: seq / nf,
         mean_recompute_ratio: rec / nf,
         mean_kv_bytes: bytes / nf,
+        doc_cache_hit_rate: tier_hit_rate,
+        doc_cache_peak_bytes: host.peak_bytes,
         per_type: per
             .into_iter()
             .map(|(k, (s, c))| (k, 100.0 * s / c as f64, c))

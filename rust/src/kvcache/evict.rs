@@ -1,0 +1,126 @@
+//! Pluggable eviction for the document-cache tiers.
+//!
+//! Both tiers ([`super::HostDocCache`] and [`super::EngineDocCache`])
+//! delegate victim selection to an [`EvictionPolicy`]. The tier owns
+//! the mechanism — byte accounting, pin filtering, the eviction loop —
+//! and hands the policy only unpinned candidates; the policy owns the
+//! decision. Policies must be `Send + Sync` because the host tier is
+//! shared across engine threads.
+
+/// One unpinned cache entry offered for eviction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictionCandidate {
+    pub hash: u64,
+    /// Bytes freed by evicting this entry.
+    pub bytes: usize,
+    /// Tier clock at the entry's last access (higher = more recent).
+    pub last_use: u64,
+    /// Proxy for the cost of re-creating the entry on a future miss:
+    /// the document length in tokens (prefill cost scales with it).
+    pub recompute_cost: usize,
+}
+
+/// Chooses which entry a tier evicts when over its byte budget.
+pub trait EvictionPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Pick the victim's hash, or `None` to refuse (stops the eviction
+    /// loop even if the tier is still over budget — e.g. every entry
+    /// is pinned). Must return a hash from `candidates`.
+    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64>;
+}
+
+/// Least-recently-used (the seed store's behaviour).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LruPolicy;
+
+impl EvictionPolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64> {
+        candidates.iter().min_by_key(|c| c.last_use).map(|c| c.hash)
+    }
+}
+
+/// Cost-aware: evict the entry whose bytes are cheapest to get back —
+/// the minimum recompute-cost per byte freed — so large, cheap entries
+/// leave before small, expensive ones. Ties fall back to LRU.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CostAwarePolicy;
+
+impl CostAwarePolicy {
+    fn cost_per_byte(c: &EvictionCandidate) -> f64 {
+        c.recompute_cost as f64 / c.bytes.max(1) as f64
+    }
+}
+
+impl EvictionPolicy for CostAwarePolicy {
+    fn name(&self) -> &'static str {
+        "cost-aware"
+    }
+
+    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64> {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                Self::cost_per_byte(a)
+                    .partial_cmp(&Self::cost_per_byte(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.last_use.cmp(&b.last_use))
+            })
+            .map(|c| c.hash)
+    }
+}
+
+/// Look an eviction policy up by its CLI name.
+pub fn eviction_policy_by_name(name: &str)
+                               -> Option<Box<dyn EvictionPolicy>> {
+    match name {
+        "lru" => Some(Box::new(LruPolicy)),
+        "cost-aware" => Some(Box::new(CostAwarePolicy)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(hash: u64, bytes: usize, last_use: u64, cost: usize)
+            -> EvictionCandidate {
+        EvictionCandidate { hash, bytes, last_use, recompute_cost: cost }
+    }
+
+    #[test]
+    fn lru_picks_oldest() {
+        let cs = [cand(1, 10, 5, 32), cand(2, 10, 3, 32),
+                  cand(3, 10, 9, 32)];
+        assert_eq!(LruPolicy.pick_victim(&cs), Some(2));
+        assert_eq!(LruPolicy.pick_victim(&[]), None);
+    }
+
+    #[test]
+    fn cost_aware_prefers_cheap_bytes() {
+        // entry 1: huge but cheap to recompute; entry 2: small and
+        // expensive per byte — 1 must go first despite being recent
+        let cs = [cand(1, 4096, 9, 32), cand(2, 64, 1, 32)];
+        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(1));
+    }
+
+    #[test]
+    fn cost_aware_ties_fall_back_to_lru() {
+        let cs = [cand(1, 100, 7, 50), cand(2, 100, 2, 50)];
+        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(2));
+        assert_eq!(CostAwarePolicy.pick_victim(&[]), None);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(eviction_policy_by_name("lru").unwrap().name(), "lru");
+        assert_eq!(eviction_policy_by_name("cost-aware").unwrap().name(),
+                   "cost-aware");
+        assert!(eviction_policy_by_name("fifo").is_none());
+    }
+}

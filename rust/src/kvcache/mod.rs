@@ -1,15 +1,79 @@
-//! Multi-context KV cache management.
+//! Multi-context KV cache management: the tiered document cache and
+//! the buffer assembly that consumes it.
 //!
-//! [`store`] — the document cache: content-addressed per-document KV
-//! entries (the "multiple-context KV Cache" of the paper: each document
-//! prefilled independently at local positions), with ref-counted LRU
-//! eviction and byte-accurate memory accounting.
+//! # The two tiers
+//!
+//! Document KV caches (the "multiple-context KV Cache" of the paper:
+//! each document prefilled independently at local positions) live in a
+//! two-tier subsystem so that one engine's prefill is every engine's
+//! hit:
+//!
+//! ```text
+//!   engine 0 thread            engine 1 thread         router
+//! ┌───────────────────┐     ┌───────────────────┐   placement reads
+//! │ EngineDocCache    │     │ EngineDocCache    │   ResidencyBoard
+//! │ (residency tier:  │     │ (residency tier:  │◄──────────────────
+//! │  device-resident  │     │  own budget, LRU/ │
+//! │  subset, own      │     │  cost-aware)      │
+//! │  budget)          │     │                   │
+//! └─────────┬─────────┘     └─────────┬─────────┘
+//!     miss  │  publish          miss  │  publish
+//!           ▼                         ▼
+//! ┌─────────────────────────────────────────────────┐
+//! │ HostDocCache (shared host tier, Arc<DocEntry>)  │
+//! │  content-addressed · thread-safe · byte budget  │
+//! │  pin guards · prefill leases (exactly-once)     │
+//! └─────────────────────────────────────────────────┘
+//! ```
+//!
+//! A [`EngineDocCache::get_or_prefill`] miss consults the shared
+//! [`HostDocCache`] before running `model.prefill_doc`; a true miss
+//! takes a [`store::PrefillLease`] (concurrent requests for the same
+//! document block until it publishes — each unique document is
+//! prefilled **exactly once process-wide**) and publishes the fresh
+//! entry back to the host tier. Engines advertise their resident
+//! hashes on a [`ResidencyBoard`] so the router can prefer the engine
+//! that already holds a request's documents.
+//!
+//! # Pin-guard contract
+//!
+//! Eviction (pluggable via [`EvictionPolicy`]: [`LruPolicy`] or
+//! [`CostAwarePolicy`]) only ever removes **unpinned** entries.
+//! In-flight work pins the document hashes it planned
+//! ([`store::PinGuard`], from [`EngineDocCache::pin_planned`]) for as
+//! long as the guard lives — sessions pin across
+//! prefill→assemble→decode, and the engine batch loop pins a whole
+//! batch's planned hashes — so eviction can never race a live
+//! assemble. The **host tier** honors every engine's pins (its
+//! entries are shared); a **residency tier** honors only its own
+//! engine's pins, because evicting another engine's resident copy
+//! cannot invalidate `Arc`-held documents and must not be blockable
+//! cross-engine. An eviction between pins can therefore only ever
+//! cost a recompute, never dangle a reference. Pins are counted
+//! (re-pinning is fine) and may name hashes that are not published
+//! yet.
+//!
+//! # Stats
+//!
+//! Each tier keeps its own [`CacheStats`]; `hits`/`misses`/
+//! `evictions`/`publishes`/`reinserts`/`peak_bytes` are lifetime
+//! counters, `current_bytes` is current state (see [`store`]).
 //!
 //! [`assembly`] — building the fixed-shape sparse/full buffers the AOT
 //! artifacts consume from a set of selected (doc, block) slots.
 
 pub mod assembly;
+pub mod evict;
+pub mod residency;
 pub mod store;
 
 pub use assembly::{AssembledContext, BlockRef, SlotKind};
-pub use store::{CacheStats, CacheStore, DocEntry};
+pub use evict::{
+    eviction_policy_by_name, CostAwarePolicy, EvictionCandidate,
+    EvictionPolicy, LruPolicy,
+};
+pub use residency::{ResidencyBoard, ResidencyHandle};
+pub use store::{
+    doc_hash, CacheStats, DocEntry, EngineDocCache, HostDocCache,
+    PinGuard, TierHit,
+};

@@ -1,0 +1,98 @@
+//! Shared directory of per-engine device residency.
+//!
+//! Each engine's [`super::EngineDocCache`] advertises which document
+//! hashes it currently holds resident; the router reads the board to
+//! steer a request toward the engine that already has its documents
+//! (cache-aware placement). The board is advisory: a stale read only
+//! costs placement quality — the host tier still dedups the actual
+//! prefill work — so entries are plain per-engine hash sets behind
+//! mutexes, updated on admit/evict.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+/// Per-engine sets of device-resident document hashes.
+#[derive(Debug)]
+pub struct ResidencyBoard {
+    engines: Vec<Mutex<HashSet<u64>>>,
+}
+
+impl ResidencyBoard {
+    pub fn new(n_engines: usize) -> ResidencyBoard {
+        ResidencyBoard {
+            engines: (0..n_engines)
+                .map(|_| Mutex::new(HashSet::new()))
+                .collect(),
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// How many of `hashes` are resident on `engine`.
+    pub fn resident_count(&self, engine: usize, hashes: &[u64]) -> usize {
+        let set = self.engines[engine].lock().unwrap();
+        hashes.iter().filter(|h| set.contains(h)).count()
+    }
+
+    pub fn is_resident(&self, engine: usize, hash: u64) -> bool {
+        self.engines[engine].lock().unwrap().contains(&hash)
+    }
+}
+
+/// One engine's write handle onto the board (held by its
+/// [`super::EngineDocCache`]).
+#[derive(Debug, Clone)]
+pub struct ResidencyHandle {
+    board: Arc<ResidencyBoard>,
+    engine: usize,
+}
+
+impl ResidencyHandle {
+    /// Writer handle for one engine's residency tier.
+    pub fn new(board: Arc<ResidencyBoard>, engine: usize)
+               -> ResidencyHandle {
+        assert!(engine < board.engines.len());
+        ResidencyHandle { board, engine }
+    }
+
+    pub fn engine(&self) -> usize {
+        self.engine
+    }
+
+    pub fn insert(&self, hash: u64) {
+        self.board.engines[self.engine].lock().unwrap().insert(hash);
+    }
+
+    pub fn remove(&self, hash: u64) {
+        self.board.engines[self.engine].lock().unwrap().remove(&hash);
+    }
+
+    pub fn clear(&self) {
+        self.board.engines[self.engine].lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_tracks_per_engine_residency() {
+        let board = Arc::new(ResidencyBoard::new(2));
+        let h0 = ResidencyHandle::new(Arc::clone(&board), 0);
+        let h1 = ResidencyHandle::new(Arc::clone(&board), 1);
+        h0.insert(10);
+        h0.insert(20);
+        h1.insert(20);
+        assert_eq!(board.resident_count(0, &[10, 20, 30]), 2);
+        assert_eq!(board.resident_count(1, &[10, 20, 30]), 1);
+        assert!(board.is_resident(0, 10));
+        assert!(!board.is_resident(1, 10));
+        h0.remove(10);
+        assert!(!board.is_resident(0, 10));
+        h1.clear();
+        assert_eq!(board.resident_count(1, &[20]), 0);
+    }
+}

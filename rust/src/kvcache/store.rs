@@ -1,18 +1,41 @@
-//! Content-addressed document KV cache with LRU eviction.
+//! The two document-cache tiers: shared host tier + per-engine
+//! residency tier (see the [`super`] module docs for the full diagram
+//! and the pin-guard contract).
 //!
-//! In the paper's RAG setting, retrieved documents recur across requests
-//! and their KV caches are computed once and stored ("context caching").
-//! The store hashes document token content (FNV-1a), keeps the prefill
-//! outputs (`kv`, attention maps, local Q), and evicts least-recently-
-//! used unpinned entries when a byte budget is exceeded.
+//! [`HostDocCache`] is the process-wide, thread-safe, content-addressed
+//! tier: one entry per unique document (FNV-1a over token ids), shared
+//! by every engine behind an `Arc`. A miss hands the caller a
+//! [`PrefillLease`] so each unique document is prefilled **exactly once
+//! process-wide** — concurrent engines asking for the same in-flight
+//! document block until the lease publishes (or is abandoned on error).
+//!
+//! [`EngineDocCache`] is one engine's residency tier: the subset of
+//! host entries "device-resident" for that engine (its own byte budget
+//! and LRU clock), consulted first; misses fall through to the host
+//! tier, and fresh prefills are published back so one engine's work is
+//! every engine's hit.
+//!
+//! # Stats counters: lifetime vs. current
+//!
+//! [`CacheStats`] mixes two kinds of counters. **Lifetime** counters
+//! only grow and survive [`clear`](EngineDocCache::clear): `hits`,
+//! `misses`, `evictions`, `publishes`, `reinserts`, and `peak_bytes`
+//! (the high-water mark). **Current** state — `current_bytes` — tracks
+//! what the tier holds right now and resets to zero on `clear`.
+//! [`EngineDocCache::reset_stats`] / [`HostDocCache::reset_stats`]
+//! zero the lifetime counters too (peak collapses to the current
+//! footprint).
 
-use std::collections::HashMap;
-use std::rc::Rc;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
 use crate::model::{Model, PrefillDocOut};
 use crate::tensor::Tensor;
+
+use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy};
+use super::residency::ResidencyHandle;
 
 /// FNV-1a over token ids — the document cache key.
 pub fn doc_hash(tokens: &[i32]) -> u64 {
@@ -26,7 +49,9 @@ pub fn doc_hash(tokens: &[i32]) -> u64 {
     h
 }
 
-/// A cached document: prefill outputs + bookkeeping.
+/// A cached document: prefill outputs + bookkeeping. Shared across
+/// engine threads (and with in-flight sessions) via `Arc`, so eviction
+/// from either tier never invalidates a live assemble.
 #[derive(Debug)]
 pub struct DocEntry {
     pub hash: u64,
@@ -55,11 +80,21 @@ impl DocEntry {
     }
 }
 
-#[derive(Debug, Default, Clone)]
+/// Per-tier counters. Lifetime counters (`hits`, `misses`,
+/// `evictions`, `publishes`, `reinserts`, `peak_bytes`) survive
+/// `clear`; `current_bytes` is current state and resets with the
+/// entries (see the module docs).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Entries inserted: host tier — published prefills; residency
+    /// tier — admissions (fresh prefills and host-tier promotions).
+    pub publishes: u64,
+    /// Inserts that replaced an entry already present under the same
+    /// hash (the old entry's bytes are subtracted, never leaked).
+    pub reinserts: u64,
     pub current_bytes: usize,
     pub peak_bytes: usize,
 }
@@ -73,102 +108,677 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    fn note_insert(&mut self, bytes: usize, replaced: Option<usize>) {
+        if let Some(old) = replaced {
+            self.current_bytes -= old;
+            self.reinserts += 1;
+        }
+        self.current_bytes += bytes;
+        self.publishes += 1;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    fn reset_lifetime(&mut self) {
+        let current = self.current_bytes;
+        *self = CacheStats { current_bytes: current,
+                             peak_bytes: current,
+                             ..CacheStats::default() };
+    }
 }
 
-/// LRU document cache. Entries are `Rc` so in-flight requests keep
-/// evicted entries alive until they finish.
-pub struct CacheStore {
-    entries: HashMap<u64, (Rc<DocEntry>, u64)>, // value: (entry, last_use)
+// ---------------------------------------------------------------------------
+// Host tier
+// ---------------------------------------------------------------------------
+
+struct HostSlot {
+    entry: Arc<DocEntry>,
+    last_use: u64,
+}
+
+struct HostInner {
+    entries: HashMap<u64, HostSlot>,
+    /// Hashes currently being prefilled under a [`PrefillLease`].
+    in_flight: HashSet<u64>,
+    /// Pin counts per hash (a hash may be pinned before it exists).
+    pins: HashMap<u64, u32>,
     clock: u64,
     budget_bytes: usize,
+    /// True when the budget was fixed by the operator/caller;
+    /// auto-sized tiers let engines raise it from model geometry.
+    budget_explicit: bool,
     stats: CacheStats,
 }
 
-impl CacheStore {
-    pub fn new(budget_bytes: usize) -> CacheStore {
-        CacheStore {
-            entries: HashMap::new(),
-            clock: 0,
-            budget_bytes,
-            stats: CacheStats::default(),
+/// Result of [`HostDocCache::lookup_or_begin`].
+pub enum HostLookup {
+    /// The entry is cached; use it.
+    Hit(Arc<DocEntry>),
+    /// Nobody holds this document: the caller must prefill it and
+    /// [`PrefillLease::publish`] the result (dropping the lease
+    /// without publishing abandons it, waking any waiters to retry).
+    Miss(PrefillLease),
+}
+
+/// The shared host tier: thread-safe, content-addressed document cache
+/// with a byte budget, pluggable eviction, pin guards, and
+/// exactly-once prefill leasing.
+pub struct HostDocCache {
+    inner: Mutex<HostInner>,
+    published: Condvar,
+    policy: Box<dyn EvictionPolicy>,
+}
+
+impl HostDocCache {
+    pub fn new(budget_bytes: usize) -> HostDocCache {
+        Self::with_policy(budget_bytes, Box::new(LruPolicy))
+    }
+
+    pub fn with_policy(budget_bytes: usize,
+                       policy: Box<dyn EvictionPolicy>) -> HostDocCache {
+        Self::build(budget_bytes, true, policy)
+    }
+
+    /// Auto-sized tier: starts with a zero budget that engines raise
+    /// via [`Self::ensure_min_budget`] once their model geometry is
+    /// known — bounded by default without the caller having to guess
+    /// KV sizes up front.
+    pub fn auto_sized(policy: Box<dyn EvictionPolicy>) -> HostDocCache {
+        Self::build(0, false, policy)
+    }
+
+    fn build(budget_bytes: usize, budget_explicit: bool,
+             policy: Box<dyn EvictionPolicy>) -> HostDocCache {
+        HostDocCache {
+            inner: Mutex::new(HostInner {
+                entries: HashMap::new(),
+                in_flight: HashSet::new(),
+                pins: HashMap::new(),
+                clock: 0,
+                budget_bytes,
+                budget_explicit,
+                stats: CacheStats::default(),
+            }),
+            published: Condvar::new(),
+            policy,
         }
     }
 
-    /// Unbounded store (eval harness).
-    pub fn unbounded() -> CacheStore {
+    /// Unbounded tier (eval harness / tests).
+    pub fn unbounded() -> HostDocCache {
         Self::new(usize::MAX)
     }
 
-    pub fn stats(&self) -> &CacheStats {
-        &self.stats
+    /// Raise an auto-sized tier's budget to at least `bytes` (engines
+    /// call this at init with a budget derived from model geometry).
+    /// No-op when the budget was set explicitly, or already larger.
+    pub fn ensure_min_budget(&self, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.budget_explicit && g.budget_bytes < bytes {
+            g.budget_bytes = bytes;
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.lock().unwrap().budget_bytes
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats.clone()
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.inner.lock().unwrap().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
-    pub fn contains(&self, tokens: &[i32]) -> bool {
-        self.entries.contains_key(&doc_hash(tokens))
+    pub fn contains(&self, hash: u64) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&hash)
     }
 
-    /// Fetch the document's KV cache, prefilling (at local positions,
-    /// offset 0 — the multiple-context regime) on a miss.
-    pub fn get_or_prefill(&mut self, model: &Model, tokens: &[i32])
-                          -> Result<(Rc<DocEntry>, bool)> {
-        let h = doc_hash(tokens);
-        self.clock += 1;
-        if let Some((e, last)) = self.entries.get_mut(&h) {
-            *last = self.clock;
-            self.stats.hits += 1;
-            return Ok((e.clone(), true));
+    /// Fetch-or-lease: a hit bumps recency and returns the entry; a
+    /// miss registers the hash as in-flight and returns the lease.
+    /// Blocks while another thread holds the hash's lease (their
+    /// publish becomes our hit — the exactly-once contract).
+    /// Associated fn (not a method): the lease must hold the `Arc`.
+    pub fn lookup_or_begin(host: &Arc<HostDocCache>, hash: u64)
+                           -> HostLookup {
+        let mut g = host.inner.lock().unwrap();
+        loop {
+            {
+                let inner = &mut *g;
+                if let Some(slot) = inner.entries.get_mut(&hash) {
+                    inner.clock += 1;
+                    slot.last_use = inner.clock;
+                    inner.stats.hits += 1;
+                    return HostLookup::Hit(Arc::clone(&slot.entry));
+                }
+                if !inner.in_flight.contains(&hash) {
+                    inner.stats.misses += 1;
+                    inner.in_flight.insert(hash);
+                    return HostLookup::Miss(PrefillLease {
+                        host: Arc::clone(host),
+                        hash,
+                        done: false,
+                    });
+                }
+            }
+            // someone else holds the lease: wait for their publish (or
+            // abandonment) and retry
+            g = host.published.wait(g).unwrap();
         }
-        self.stats.misses += 1;
-        let out = model.prefill_doc(tokens, 0)?;
-        let entry = Rc::new(DocEntry::new(tokens.to_vec(), out));
-        self.stats.current_bytes += entry.bytes;
-        self.stats.peak_bytes =
-            self.stats.peak_bytes.max(self.stats.current_bytes);
-        self.entries.insert(h, (entry.clone(), self.clock));
-        self.evict_to_budget();
-        Ok((entry, false))
     }
 
-    /// Insert a pre-computed entry (tests / replay).
-    pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
-        self.clock += 1;
-        let entry = Rc::new(DocEntry::new(tokens, out));
-        self.stats.current_bytes += entry.bytes;
-        self.stats.peak_bytes =
-            self.stats.peak_bytes.max(self.stats.current_bytes);
-        self.entries.insert(entry.hash, (entry, self.clock));
-        self.evict_to_budget();
-    }
-
-    fn evict_to_budget(&mut self) {
-        while self.stats.current_bytes > self.budget_bytes
-            && self.entries.len() > 1
-        {
-            // evict the least-recently-used entry
-            let victim = self
-                .entries
-                .iter()
-                .min_by_key(|(_, (_, last))| *last)
-                .map(|(h, _)| *h);
-            let Some(h) = victim else { break };
-            if let Some((e, _)) = self.entries.remove(&h) {
-                self.stats.current_bytes -= e.bytes;
-                self.stats.evictions += 1;
+    /// Non-leasing lookup (counts a hit or a miss, never blocks).
+    pub fn try_lookup(&self, hash: u64) -> Option<Arc<DocEntry>> {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        match inner.entries.get_mut(&hash) {
+            Some(slot) => {
+                inner.clock += 1;
+                slot.last_use = inner.clock;
+                inner.stats.hits += 1;
+                Some(Arc::clone(&slot.entry))
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
             }
         }
     }
 
+    /// Insert an entry directly (tests / replay / lease-less callers).
+    /// Replacing an existing hash subtracts the old entry's bytes —
+    /// duplicate inserts never inflate the accounting.
+    pub fn publish(&self, entry: Arc<DocEntry>) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            Self::insert_locked(&mut g, entry);
+            self.evict_to_budget_locked(&mut g);
+        }
+        self.published.notify_all();
+    }
+
+    /// Complete (or abandon) a lease; called by [`PrefillLease`].
+    fn finish_lease(&self, hash: u64, entry: Option<Arc<DocEntry>>) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.in_flight.remove(&hash);
+            if let Some(e) = entry {
+                Self::insert_locked(&mut g, e);
+                self.evict_to_budget_locked(&mut g);
+            }
+        }
+        self.published.notify_all();
+    }
+
+    fn insert_locked(g: &mut HostInner, entry: Arc<DocEntry>) {
+        g.clock += 1;
+        let clock = g.clock;
+        let (hash, bytes) = (entry.hash, entry.bytes);
+        let replaced = g
+            .entries
+            .insert(hash, HostSlot { entry, last_use: clock })
+            .map(|old| old.entry.bytes);
+        g.stats.note_insert(bytes, replaced);
+    }
+
+    fn evict_to_budget_locked(&self, g: &mut HostInner) {
+        if g.stats.current_bytes <= g.budget_bytes {
+            return;
+        }
+        // build the unpinned candidate list once; the lock is held for
+        // the whole pass, so only our own removals invalidate it
+        let pins = &g.pins;
+        let mut candidates: Vec<EvictionCandidate> = g
+            .entries
+            .iter()
+            .filter(|e| pins.get(e.0).copied().unwrap_or(0) == 0)
+            .map(|(&h, s)| EvictionCandidate {
+                hash: h,
+                bytes: s.entry.bytes,
+                last_use: s.last_use,
+                recompute_cost: s.entry.tokens.len(),
+            })
+            .collect();
+        while g.stats.current_bytes > g.budget_bytes
+            && g.entries.len() > 1
+        {
+            let Some(victim) = self.policy.pick_victim(&candidates) else {
+                break; // everything pinned (or policy refused)
+            };
+            candidates.retain(|c| c.hash != victim);
+            let Some(slot) = g.entries.remove(&victim) else { break };
+            g.stats.current_bytes -= slot.entry.bytes;
+            g.stats.evictions += 1;
+        }
+    }
+
+    pub fn is_pinned(&self, hash: u64) -> bool {
+        self.inner.lock().unwrap().pins.get(&hash).copied().unwrap_or(0)
+            > 0
+    }
+
+    /// Snapshot of every currently pinned hash (one lock acquisition —
+    /// for eviction passes that filter many candidates).
+    pub fn pinned_hashes(&self) -> HashSet<u64> {
+        self.inner.lock().unwrap().pins.keys().copied().collect()
+    }
+
+    fn unpin(&self, hashes: &[u64]) {
+        let mut g = self.inner.lock().unwrap();
+        for &h in hashes {
+            if let Some(c) = g.pins.get_mut(&h) {
+                *c -= 1;
+                if *c == 0 {
+                    g.pins.remove(&h);
+                }
+            }
+        }
+    }
+
+    /// Drop every entry. Lifetime counters and `peak_bytes` survive;
+    /// `current_bytes` resets (see the module docs). Outstanding pins
+    /// and leases are untouched.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.entries.clear();
+        g.stats.current_bytes = 0;
+    }
+
+    /// Zero the lifetime counters too (peak collapses to current).
+    pub fn reset_stats(&self) {
+        self.inner.lock().unwrap().stats.reset_lifetime();
+    }
+}
+
+/// Exclusive right (and obligation) to prefill one document. Publish
+/// the result with [`PrefillLease::publish`]; dropping the lease
+/// without publishing (prefill error, panic) abandons it so blocked
+/// waiters retry instead of hanging.
+pub struct PrefillLease {
+    host: Arc<HostDocCache>,
+    hash: u64,
+    done: bool,
+}
+
+impl PrefillLease {
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn publish(mut self, entry: Arc<DocEntry>) {
+        self.done = true;
+        self.host.finish_lease(self.hash, Some(entry));
+    }
+}
+
+impl Drop for PrefillLease {
+    fn drop(&mut self) {
+        if !self.done {
+            self.host.finish_lease(self.hash, None);
+        }
+    }
+}
+
+/// Counted pin registry shared between an [`EngineDocCache`] and the
+/// [`PinGuard`]s it hands out (the guard outlives the borrow of the
+/// cache, so the registry is refcounted).
+type PinMap = Arc<Mutex<HashMap<u64, u32>>>;
+
+fn pin_map_remove(map: &PinMap, hashes: &[u64]) {
+    let mut m = map.lock().unwrap();
+    for &h in hashes {
+        if let Some(c) = m.get_mut(&h) {
+            *c -= 1;
+            if *c == 0 {
+                m.remove(&h);
+            }
+        }
+    }
+}
+
+/// RAII pin over a set of document hashes. Held by in-flight sessions
+/// (and the engine batch loop) over their planned `doc_hashes` so
+/// eviction can never race a live assemble. The host tier honors
+/// every engine's pins (its entries are shared); a residency tier
+/// honors only its **own** engine's pins — evicting another engine's
+/// resident copy can never invalidate `Arc`-held documents, and must
+/// not be blockable cross-engine.
+pub struct PinGuard {
+    host: Arc<HostDocCache>,
+    /// The pinning engine's own residency-tier pin registry.
+    local: Option<PinMap>,
+    hashes: Vec<u64>,
+}
+
+impl PinGuard {
+    /// Pin `hashes` in `host` against eviction until the guard drops.
+    /// Hashes not yet present are pinned prospectively (a publish
+    /// racing the pin is still protected). Reentrant: pins are
+    /// counted.
+    pub fn new(host: Arc<HostDocCache>, hashes: &[u64]) -> PinGuard {
+        {
+            let mut g = host.inner.lock().unwrap();
+            for &h in hashes {
+                *g.pins.entry(h).or_insert(0) += 1;
+            }
+        }
+        PinGuard { host, local: None, hashes: hashes.to_vec() }
+    }
+
+    /// [`Self::new`] plus a pin in the issuing engine's own registry
+    /// (see [`EngineDocCache::pin_planned`]).
+    fn with_local(host: Arc<HostDocCache>, local: PinMap,
+                  hashes: &[u64]) -> PinGuard {
+        {
+            let mut m = local.lock().unwrap();
+            for &h in hashes {
+                *m.entry(h).or_insert(0) += 1;
+            }
+        }
+        let mut guard = PinGuard::new(host, hashes);
+        guard.local = Some(local);
+        guard
+    }
+
+    pub fn hashes(&self) -> &[u64] {
+        &self.hashes
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.host.unpin(&self.hashes);
+        if let Some(local) = &self.local {
+            pin_map_remove(local, &self.hashes);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-engine residency tier
+// ---------------------------------------------------------------------------
+
+/// Where a [`EngineDocCache::get_or_prefill`] found the document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierHit {
+    /// Already device-resident on this engine.
+    Resident,
+    /// Host-tier hit (published by another engine or an earlier
+    /// request); promoted to resident without any prefill.
+    Host,
+    /// Cold everywhere: this call ran the prefill and published it.
+    Prefilled,
+}
+
+impl TierHit {
+    /// Cache-warm semantics: did the request avoid a fresh prefill?
+    pub fn is_warm(self) -> bool {
+        self != TierHit::Prefilled
+    }
+}
+
+struct ResidentSlot {
+    entry: Arc<DocEntry>,
+    last_use: u64,
+}
+
+/// One engine's residency tier over the shared host tier. Not
+/// thread-safe by itself — it lives on the engine thread, like the
+/// model; all cross-engine sharing happens through the host tier.
+pub struct EngineDocCache {
+    host: Arc<HostDocCache>,
+    resident: HashMap<u64, ResidentSlot>,
+    clock: u64,
+    budget_bytes: usize,
+    policy: Box<dyn EvictionPolicy>,
+    stats: CacheStats,
+    /// Snapshot at the last [`Self::take_stats_delta`] flush.
+    flushed: CacheStats,
+    residency: Option<ResidencyHandle>,
+    /// This engine's own pins (see [`PinGuard`]): the only pins its
+    /// residency eviction honors.
+    own_pins: PinMap,
+}
+
+impl EngineDocCache {
+    pub fn new(host: Arc<HostDocCache>, budget_bytes: usize)
+               -> EngineDocCache {
+        Self::with_policy(host, budget_bytes, Box::new(LruPolicy))
+    }
+
+    pub fn with_policy(host: Arc<HostDocCache>, budget_bytes: usize,
+                       policy: Box<dyn EvictionPolicy>) -> EngineDocCache {
+        EngineDocCache {
+            host,
+            resident: HashMap::new(),
+            clock: 0,
+            budget_bytes,
+            policy,
+            stats: CacheStats::default(),
+            flushed: CacheStats::default(),
+            residency: None,
+            own_pins: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Advertise residency changes on a shared board (router
+    /// cache-aware placement).
+    pub fn with_residency(mut self, handle: Option<ResidencyHandle>)
+                          -> EngineDocCache {
+        self.residency = handle;
+        self
+    }
+
+    /// Self-contained unbounded store (eval harness, examples, tests):
+    /// a private unbounded host tier beneath an unbounded residency
+    /// tier.
+    pub fn unbounded() -> EngineDocCache {
+        Self::new(Arc::new(HostDocCache::unbounded()), usize::MAX)
+    }
+
+    pub fn host(&self) -> &Arc<HostDocCache> {
+        &self.host
+    }
+
+    /// This engine's residency-tier stats.
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Snapshot of the shared host tier's stats.
+    pub fn host_stats(&self) -> CacheStats {
+        self.host.stats()
+    }
+
+    /// Residency-tier counters accumulated since the previous call
+    /// (`current_bytes`/`peak_bytes` are absolute). The engine flushes
+    /// these into [`crate::metrics::Metrics`] after every batch.
+    pub fn take_stats_delta(&mut self) -> CacheStats {
+        let d = CacheStats {
+            hits: self.stats.hits.saturating_sub(self.flushed.hits),
+            misses: self.stats.misses.saturating_sub(self.flushed.misses),
+            evictions: self
+                .stats
+                .evictions
+                .saturating_sub(self.flushed.evictions),
+            publishes: self
+                .stats
+                .publishes
+                .saturating_sub(self.flushed.publishes),
+            reinserts: self
+                .stats
+                .reinserts
+                .saturating_sub(self.flushed.reinserts),
+            current_bytes: self.stats.current_bytes,
+            peak_bytes: self.stats.peak_bytes,
+        };
+        self.flushed = self.stats.clone();
+        d
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    /// Resident on this engine (the host tier may hold more).
+    pub fn contains(&self, tokens: &[i32]) -> bool {
+        self.resident.contains_key(&doc_hash(tokens))
+    }
+
+    /// Pin the planned hashes for the lifetime of the returned guard:
+    /// globally in the host tier, and locally for this engine's own
+    /// residency eviction (see [`PinGuard`]).
+    pub fn pin_planned(&self, hashes: &[u64]) -> PinGuard {
+        PinGuard::with_local(Arc::clone(&self.host),
+                             Arc::clone(&self.own_pins), hashes)
+    }
+
+    /// Fetch the document's KV cache: resident tier, then the shared
+    /// host tier, then prefill (at local positions, offset 0 — the
+    /// multiple-context regime) under an exactly-once lease, publishing
+    /// the result back to the host tier.
+    pub fn get_or_prefill(&mut self, model: &Model, tokens: &[i32])
+                          -> Result<(Arc<DocEntry>, TierHit)> {
+        let h = doc_hash(tokens);
+        self.clock += 1;
+        if let Some(slot) = self.resident.get_mut(&h) {
+            slot.last_use = self.clock;
+            self.stats.hits += 1;
+            return Ok((Arc::clone(&slot.entry), TierHit::Resident));
+        }
+        self.stats.misses += 1;
+        match HostDocCache::lookup_or_begin(&self.host, h) {
+            HostLookup::Hit(entry) => {
+                self.admit(Arc::clone(&entry));
+                Ok((entry, TierHit::Host))
+            }
+            HostLookup::Miss(lease) => {
+                // prefill outside any lock; on error the lease drop
+                // wakes waiters to retry for themselves
+                let out = model.prefill_doc(tokens, 0)?;
+                let entry = Arc::new(DocEntry::new(tokens.to_vec(), out));
+                lease.publish(Arc::clone(&entry));
+                self.admit(Arc::clone(&entry));
+                Ok((entry, TierHit::Prefilled))
+            }
+        }
+    }
+
+    /// Model-free lookup: resident tier, then host tier (promoting a
+    /// hit to resident); `None` on a true miss.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<Arc<DocEntry>> {
+        let h = doc_hash(tokens);
+        self.clock += 1;
+        if let Some(slot) = self.resident.get_mut(&h) {
+            slot.last_use = self.clock;
+            self.stats.hits += 1;
+            return Some(Arc::clone(&slot.entry));
+        }
+        self.stats.misses += 1;
+        let entry = self.host.try_lookup(h)?;
+        self.admit(Arc::clone(&entry));
+        Some(entry)
+    }
+
+    /// Insert a pre-computed entry (tests / replay): published to the
+    /// host tier and admitted as resident here.
+    pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
+        let entry = Arc::new(DocEntry::new(tokens, out));
+        self.host.publish(Arc::clone(&entry));
+        self.admit(entry);
+    }
+
+    /// Make an entry device-resident, with the duplicate-insert byte
+    /// accounting fix: replacing an existing hash subtracts the old
+    /// entry's bytes first.
+    fn admit(&mut self, entry: Arc<DocEntry>) {
+        let (h, bytes) = (entry.hash, entry.bytes);
+        self.clock += 1;
+        let replaced = self
+            .resident
+            .insert(h, ResidentSlot { entry, last_use: self.clock })
+            .map(|old| old.entry.bytes);
+        if replaced.is_none() {
+            if let Some(r) = &self.residency {
+                r.insert(h);
+            }
+        }
+        self.stats.note_insert(bytes, replaced);
+        self.evict_to_budget();
+    }
+
+    fn evict_to_budget(&mut self) {
+        if self.stats.current_bytes <= self.budget_bytes {
+            return;
+        }
+        // only this engine's own pins matter here: evicting our
+        // resident copy never invalidates Arc-held docs, and another
+        // engine's session must not be able to wedge us over our
+        // device budget. One snapshot for the whole pass.
+        let pinned: HashSet<u64> =
+            self.own_pins.lock().unwrap().keys().copied().collect();
+        let mut candidates: Vec<EvictionCandidate> = self
+            .resident
+            .iter()
+            .filter(|e| !pinned.contains(e.0))
+            .map(|(&h, s)| EvictionCandidate {
+                hash: h,
+                bytes: s.entry.bytes,
+                last_use: s.last_use,
+                recompute_cost: s.entry.tokens.len(),
+            })
+            .collect();
+        while self.stats.current_bytes > self.budget_bytes
+            && self.resident.len() > 1
+        {
+            let Some(victim) = self.policy.pick_victim(&candidates) else {
+                break;
+            };
+            candidates.retain(|c| c.hash != victim);
+            let Some(slot) = self.resident.remove(&victim) else { break };
+            self.stats.current_bytes -= slot.entry.bytes;
+            self.stats.evictions += 1;
+            if let Some(r) = &self.residency {
+                r.remove(victim);
+            }
+        }
+    }
+
+    /// Drop this engine's residency (the host tier keeps its entries).
+    /// Lifetime counters and `peak_bytes` survive; `current_bytes`
+    /// resets (see the module docs).
     pub fn clear(&mut self) {
-        self.entries.clear();
+        if let Some(r) = &self.residency {
+            r.clear();
+        }
+        self.resident.clear();
         self.stats.current_bytes = 0;
+    }
+
+    /// Drop residency **and** the backing host tier's entries (eval
+    /// harness memory bound between disjoint sample sets).
+    pub fn clear_all(&mut self) {
+        self.clear();
+        self.host.clear();
+    }
+
+    /// Zero the lifetime counters too (peak collapses to current).
+    pub fn reset_stats(&mut self) {
+        self.stats.reset_lifetime();
+        self.flushed = self.stats.clone();
     }
 }
 
@@ -177,13 +787,17 @@ mod tests {
     use super::*;
     use crate::model::PrefillDocOut;
 
-    fn fake_entry(tokens: Vec<i32>, bytes_hint: usize) -> PrefillDocOut {
+    fn fake_entry(bytes_hint: usize) -> PrefillDocOut {
         // bytes = (kv + attn + q_local) * 4; use kv only for sizing
         PrefillDocOut {
             kv: Tensor::zeros(&[1, 2, 1, bytes_hint / 8, 1]),
             attn: Tensor::zeros(&[1, 1, 1, 1]),
             q_local: Tensor::zeros(&[1, 1, 1]),
         }
+    }
+
+    fn arc_entry(tokens: Vec<i32>, bytes_hint: usize) -> Arc<DocEntry> {
+        Arc::new(DocEntry::new(tokens, fake_entry(bytes_hint)))
     }
 
     #[test]
@@ -195,38 +809,243 @@ mod tests {
 
     #[test]
     fn insert_and_contains() {
-        let mut s = CacheStore::unbounded();
-        s.insert(vec![1, 2, 3], fake_entry(vec![1, 2, 3], 64));
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1, 2, 3], fake_entry(64));
         assert!(s.contains(&[1, 2, 3]));
         assert!(!s.contains(&[9, 9]));
         assert_eq!(s.len(), 1);
+        assert_eq!(s.host().len(), 1);
         assert!(s.stats().current_bytes > 0);
+        assert_eq!(s.host_stats().current_bytes,
+                   s.stats().current_bytes);
+    }
+
+    #[test]
+    fn duplicate_insert_does_not_leak_bytes() {
+        // the seed bug: re-inserting an existing hash inflated
+        // current_bytes forever; both tiers must subtract the old entry
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1, 2], fake_entry(128));
+        let once = s.stats().current_bytes;
+        s.insert(vec![1, 2], fake_entry(128));
+        assert_eq!(s.stats().current_bytes, once,
+                   "residency tier leaked duplicate-insert bytes");
+        assert_eq!(s.stats().reinserts, 1);
+        assert_eq!(s.host_stats().current_bytes, once,
+                   "host tier leaked duplicate-insert bytes");
+        assert_eq!(s.host_stats().reinserts, 1);
+        assert_eq!(s.len(), 1);
     }
 
     #[test]
     fn lru_eviction_respects_budget() {
         // each entry: kv 32 elems (128B) + attn 4B + q_local 4B = 136B
-        let mut s = CacheStore::new(300);
-        s.insert(vec![1], fake_entry(vec![1], 128));
-        s.insert(vec![2], fake_entry(vec![2], 128));
+        let host = Arc::new(HostDocCache::unbounded());
+        let mut s = EngineDocCache::new(Arc::clone(&host), 300);
+        s.insert(vec![1], fake_entry(128));
+        s.insert(vec![2], fake_entry(128));
         assert_eq!(s.len(), 2);
-        s.insert(vec![3], fake_entry(vec![3], 128));
+        s.insert(vec![3], fake_entry(128));
         assert!(s.stats().evictions >= 1);
         assert!(s.stats().current_bytes <= 300);
-        // entry 1 was the LRU victim
+        // entry 1 was the LRU victim — resident no longer, but the
+        // unbounded host tier still holds it (tiering, not loss)
         assert!(!s.contains(&[1]));
         assert!(s.contains(&[3]));
+        assert!(host.contains(doc_hash(&[1])));
+        assert!(s.lookup(&[1]).is_some(), "host tier must backfill");
+    }
+
+    #[test]
+    fn host_eviction_skips_pinned_entries() {
+        let host = Arc::new(HostDocCache::new(300));
+        let e1 = arc_entry(vec![1], 128);
+        let pin = PinGuard::new(Arc::clone(&host), &[e1.hash]);
+        host.publish(e1);
+        host.publish(arc_entry(vec![2], 128));
+        host.publish(arc_entry(vec![3], 128)); // over budget
+        assert!(host.stats().evictions >= 1);
+        assert!(host.contains(doc_hash(&[1])),
+                "pinned entry was evicted");
+        assert!(!host.contains(doc_hash(&[2])),
+                "LRU unpinned entry should have been the victim");
+        drop(pin);
+        assert!(!host.is_pinned(doc_hash(&[1])));
+        host.publish(arc_entry(vec![4], 128)); // over budget again
+        assert!(!host.contains(doc_hash(&[1])),
+                "unpinned entry must become evictable");
+    }
+
+    #[test]
+    fn resident_eviction_skips_own_pinned_entries() {
+        let host = Arc::new(HostDocCache::unbounded());
+        let mut s = EngineDocCache::new(Arc::clone(&host), 300);
+        let pinned_hash = doc_hash(&[1]);
+        let _pin = s.pin_planned(&[pinned_hash]);
+        s.insert(vec![1], fake_entry(128));
+        s.insert(vec![2], fake_entry(128));
+        s.insert(vec![3], fake_entry(128));
+        assert!(s.contains(&[1]), "pinned entry evicted from residency");
+        assert!(!s.contains(&[2]));
+    }
+
+    #[test]
+    fn resident_eviction_ignores_other_engines_pins() {
+        // engine A's session pins must not wedge engine B over its
+        // device budget: B may evict its own copy (A's Arc-held docs
+        // and the host entry are untouched)
+        let host = Arc::new(HostDocCache::unbounded());
+        let a = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        let mut b = EngineDocCache::new(Arc::clone(&host), 300);
+        let _pin = a.pin_planned(&[doc_hash(&[1])]);
+        b.insert(vec![1], fake_entry(128));
+        b.insert(vec![2], fake_entry(128));
+        b.insert(vec![3], fake_entry(128));
+        assert!(b.stats().current_bytes <= 300,
+                "cross-engine pin wedged B over its budget");
+        assert!(!b.contains(&[1]), "B's own LRU copy must be evictable");
+        assert!(host.contains(doc_hash(&[1])),
+                "the shared host entry honors A's pin");
+        assert!(host.is_pinned(doc_hash(&[1])));
+    }
+
+    #[test]
+    fn cross_engine_host_tier_hit() {
+        // engine B hits what engine A published, without any prefill
+        let host = Arc::new(HostDocCache::unbounded());
+        let mut a = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        let mut b = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        a.insert(vec![7, 8], fake_entry(64));
+        assert!(!b.contains(&[7, 8]));
+        let hit = b.lookup(&[7, 8]).expect("host tier hit");
+        assert_eq!(hit.hash, doc_hash(&[7, 8]));
+        assert!(b.contains(&[7, 8]), "host hit promotes to resident");
+        assert_eq!(host.stats().hits, 1);
+        assert_eq!(b.stats().misses, 1); // residency miss, host hit
+        assert!(b.lookup(&[9]).is_none());
+    }
+
+    #[test]
+    fn lease_lifecycle_is_exactly_once() {
+        let host = Arc::new(HostDocCache::unbounded());
+        let h = doc_hash(&[5]);
+        let HostLookup::Miss(lease) =
+            HostDocCache::lookup_or_begin(&host, h)
+        else {
+            panic!("expected miss");
+        };
+        assert_eq!(lease.hash(), h);
+        lease.publish(arc_entry(vec![5], 64));
+        match HostDocCache::lookup_or_begin(&host, h) {
+            HostLookup::Hit(e) => assert_eq!(e.hash, h),
+            HostLookup::Miss(_) => panic!("published entry must hit"),
+        }
+        assert_eq!(host.stats().publishes, 1);
+        // abandoned lease (failed prefill) re-opens the hash
+        let h2 = doc_hash(&[6]);
+        let HostLookup::Miss(lease2) =
+            HostDocCache::lookup_or_begin(&host, h2)
+        else {
+            panic!("expected miss");
+        };
+        drop(lease2);
+        assert!(matches!(HostDocCache::lookup_or_begin(&host, h2),
+                         HostLookup::Miss(_)));
+    }
+
+    #[test]
+    fn concurrent_leases_block_until_publish() {
+        let host = Arc::new(HostDocCache::unbounded());
+        let h = doc_hash(&[42]);
+        let HostLookup::Miss(lease) =
+            HostDocCache::lookup_or_begin(&host, h)
+        else {
+            panic!("expected miss");
+        };
+        let waiter = {
+            let host = Arc::clone(&host);
+            std::thread::spawn(move || {
+                match HostDocCache::lookup_or_begin(&host, h) {
+                    HostLookup::Hit(e) => e.hash,
+                    HostLookup::Miss(_) => panic!("waiter must see the \
+                                                   publish, not prefill"),
+                }
+            })
+        };
+        // give the waiter time to block on the in-flight lease
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        lease.publish(arc_entry(vec![42], 64));
+        assert_eq!(waiter.join().unwrap(), h);
+        assert_eq!(host.stats().publishes, 1);
+        assert_eq!(host.stats().hits, 1);
+    }
+
+    #[test]
+    fn clear_keeps_lifetime_counters() {
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1], fake_entry(128));
+        let _ = s.lookup(&[1]);
+        let _ = s.lookup(&[9]); // miss
+        s.clear_all();
+        assert_eq!(s.stats().current_bytes, 0);
+        assert_eq!(s.host_stats().current_bytes, 0);
+        assert_eq!(s.len(), 0);
+        // lifetime counters survive clear...
+        assert_eq!(s.stats().hits, 1);
+        assert_eq!(s.stats().misses, 1);
+        assert_eq!(s.stats().publishes, 1);
+        assert!(s.stats().peak_bytes > 0);
+        // ...and reset_stats zeroes them
+        s.reset_stats();
+        s.host().reset_stats();
+        assert_eq!(*s.stats(), CacheStats::default());
+        assert_eq!(s.host_stats(), CacheStats::default());
     }
 
     #[test]
     fn peak_tracks_high_water() {
-        let mut s = CacheStore::unbounded();
-        s.insert(vec![1], fake_entry(vec![1], 128));
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1], fake_entry(128));
         let p1 = s.stats().peak_bytes;
-        s.insert(vec![2], fake_entry(vec![2], 128));
+        s.insert(vec![2], fake_entry(128));
         assert!(s.stats().peak_bytes > p1);
         s.clear();
         assert_eq!(s.stats().current_bytes, 0);
         assert!(s.stats().peak_bytes > p1);
+    }
+
+    #[test]
+    fn stats_delta_accumulates_between_flushes() {
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1], fake_entry(64));
+        let _ = s.lookup(&[1]);
+        let d1 = s.take_stats_delta();
+        assert_eq!((d1.hits, d1.publishes), (1, 1));
+        let d2 = s.take_stats_delta();
+        assert_eq!((d2.hits, d2.publishes), (0, 0));
+        assert_eq!(d2.current_bytes, s.stats().current_bytes);
+        let _ = s.lookup(&[1]);
+        assert_eq!(s.take_stats_delta().hits, 1);
+    }
+
+    #[test]
+    fn auto_sized_budget_raised_by_engines_only() {
+        let auto = HostDocCache::auto_sized(Box::new(LruPolicy));
+        assert_eq!(auto.budget_bytes(), 0);
+        auto.ensure_min_budget(1024);
+        auto.ensure_min_budget(512); // never lowers
+        assert_eq!(auto.budget_bytes(), 1024);
+        // an explicit budget is the operator's word: ensure_min is a
+        // no-op
+        let fixed = HostDocCache::new(300);
+        fixed.ensure_min_budget(1 << 30);
+        assert_eq!(fixed.budget_bytes(), 300);
+    }
+
+    #[test]
+    fn tier_hit_warmth() {
+        assert!(TierHit::Resident.is_warm());
+        assert!(TierHit::Host.is_warm());
+        assert!(!TierHit::Prefilled.is_warm());
     }
 }

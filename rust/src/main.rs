@@ -15,8 +15,9 @@ use std::sync::Arc;
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 use samkv::config::ServingConfig;
-use samkv::coordinator::Engine;
+use samkv::coordinator::{Engine, Router};
 use samkv::eval::evaluate;
+use samkv::kvcache::{eviction_policy_by_name, HostDocCache};
 use samkv::metrics::Metrics;
 use samkv::policies::{all_policies, policy_by_name};
 use samkv::runtime::artifacts_dir;
@@ -91,6 +92,7 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
                 &args.get_str("policy", "SamKV-fusion"),
                 args.get::<usize>("requests", 64),
                 args.get::<usize>("unique", 8),
+                args.get::<usize>("engines", 2),
             )?;
             Ok(())
         }
@@ -108,8 +110,9 @@ fn print_help() {
          info                          manifest summary\n  \
          eval --profile P --dataset D --policy NAME|all --samples N\n  \
          serve --profile P --port N --engines N --policy NAME\n  \
+               --host-cache-mb N (0 = auto-size) --eviction lru|cost-aware\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
-         throughput --policy NAME --requests N --unique N\n  \
+         throughput --policy NAME --requests N --unique N --engines N\n  \
          analyze --profile P           Fig.7 + Fig.8 analytics"
     );
 }
@@ -175,16 +178,33 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         port,
         ..ServingConfig::default()
     };
+    // the shared host doc-cache tier beneath every engine's residency
+    // tier: one prefill per unique document process-wide. Default is
+    // auto-sized (engines raise the budget from model geometry), so
+    // the host tier is bounded without operator tuning.
+    let host_mb = args.get::<usize>("host-cache-mb", 0);
+    let eviction = args.get_str("eviction", "lru");
+    let evict_policy = eviction_policy_by_name(&eviction)
+        .ok_or_else(|| anyhow::anyhow!("unknown eviction `{eviction}`"))?;
+    let host = Arc::new(if host_mb == 0 {
+        HostDocCache::auto_sized(evict_policy)
+    } else {
+        HostDocCache::with_policy(host_mb * 1024 * 1024, evict_policy)
+    });
+    let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
-           policy {policy}");
+           policy {policy}, host cache {} ({eviction})",
+          if host_mb == 0 { "auto-sized".to_string() }
+          else { format!("{host_mb}MiB") });
     let engines: Vec<Engine> = (0..n_engines)
         .map(|i| {
             Engine::spawn(i, artifacts_dir(), cfg.clone(), policy.clone(),
-                          Arc::clone(&metrics))
+                          Arc::clone(&metrics), Arc::clone(&host),
+                          Some(router.residency_handle(i)))
         })
         .collect::<samkv::Result<_>>()?;
     let handles = engines.iter().map(|e| e.handle()).collect();
-    let server = Server::new(handles, metrics);
+    let server = Server::with_router(handles, metrics, router);
     server.run(&format!("127.0.0.1:{port}"), |p| {
         info!("listening on 127.0.0.1:{p}");
         println!("READY {p}");

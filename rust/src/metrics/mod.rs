@@ -5,6 +5,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::json::Value;
+use crate::kvcache::CacheStats;
+
 /// Log-bucketed latency histogram (microsecond granularity, buckets
 /// doubling from 100us to ~400s).
 #[derive(Debug)]
@@ -97,6 +100,20 @@ pub struct Metrics {
     /// (requests sharing a document count it once; per-session cache
     /// hits never count).
     pub doc_prefills: AtomicU64,
+    /// Shared host document-cache tier: monotone totals snapshotted
+    /// after every served batch and folded in with `fetch_max`, so a
+    /// stale snapshot from a racing engine can never regress them
+    /// (the tier is process-wide; every engine reads the same totals).
+    pub host_hits: AtomicU64,
+    pub host_misses: AtomicU64,
+    pub host_publishes: AtomicU64,
+    pub host_evictions: AtomicU64,
+    pub host_bytes: AtomicU64,
+    /// Per-engine residency tiers, accumulated as per-batch deltas
+    /// summed across all engines.
+    pub resident_hits: AtomicU64,
+    pub resident_misses: AtomicU64,
+    pub resident_evictions: AtomicU64,
     started: Mutex<Option<Instant>>,
 }
 
@@ -125,6 +142,49 @@ impl Metrics {
         self.doc_prefill.observe_ms(doc_prefill_ms);
     }
 
+    /// Flush document-cache tier counters after a served batch: the
+    /// shared host tier's counters are monotone totals, folded in with
+    /// `fetch_max` so concurrent engine flushes can never regress them
+    /// with a stale snapshot (`host_bytes` is a gauge: last write
+    /// wins); the engine's residency-tier `delta` (since its previous
+    /// flush) is added.
+    pub fn record_cache_tiers(&self, host: &CacheStats,
+                              resident_delta: &CacheStats) {
+        self.host_hits.fetch_max(host.hits, Ordering::Relaxed);
+        self.host_misses.fetch_max(host.misses, Ordering::Relaxed);
+        self.host_publishes
+            .fetch_max(host.publishes, Ordering::Relaxed);
+        self.host_evictions
+            .fetch_max(host.evictions, Ordering::Relaxed);
+        self.host_bytes
+            .store(host.current_bytes as u64, Ordering::Relaxed);
+        self.resident_hits
+            .fetch_add(resident_delta.hits, Ordering::Relaxed);
+        self.resident_misses
+            .fetch_add(resident_delta.misses, Ordering::Relaxed);
+        self.resident_evictions
+            .fetch_add(resident_delta.evictions, Ordering::Relaxed);
+    }
+
+    /// Per-tier cache counters as a JSON object (server wire stats,
+    /// bench artifacts).
+    pub fn cache_tiers_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("host",
+                 Value::obj()
+                     .set("hits", g(&self.host_hits))
+                     .set("misses", g(&self.host_misses))
+                     .set("publishes", g(&self.host_publishes))
+                     .set("evictions", g(&self.host_evictions))
+                     .set("bytes", g(&self.host_bytes)))
+            .set("resident",
+                 Value::obj()
+                     .set("hits", g(&self.resident_hits))
+                     .set("misses", g(&self.resident_misses))
+                     .set("evictions", g(&self.resident_evictions)))
+    }
+
     pub fn uptime_s(&self) -> f64 {
         self.started
             .lock()
@@ -149,7 +209,9 @@ impl Metrics {
              doc_prefills={} \
              ttft(mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms) \
              plan(mean={:.2}ms) doc_prefill(mean={:.1}ms) \
-             e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s",
+             e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s \
+             host(hits={} misses={} publishes={} evictions={} bytes={}) \
+             resident(hits={} misses={} evictions={})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -164,6 +226,14 @@ impl Metrics {
             self.e2e.mean_ms(),
             self.e2e.percentile_ms(0.95),
             self.throughput_rps(),
+            self.host_hits.load(Ordering::Relaxed),
+            self.host_misses.load(Ordering::Relaxed),
+            self.host_publishes.load(Ordering::Relaxed),
+            self.host_evictions.load(Ordering::Relaxed),
+            self.host_bytes.load(Ordering::Relaxed),
+            self.resident_hits.load(Ordering::Relaxed),
+            self.resident_misses.load(Ordering::Relaxed),
+            self.resident_evictions.load(Ordering::Relaxed),
         )
     }
 }
@@ -205,6 +275,32 @@ mod tests {
         assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 5);
         assert!((m.ttft.mean_ms() - 15.0).abs() < 0.1);
         assert!(m.report().contains("completed=2"));
+    }
+
+    #[test]
+    fn cache_tier_counters_flush() {
+        let m = Metrics::new();
+        let host = CacheStats {
+            hits: 5,
+            misses: 2,
+            publishes: 2,
+            evictions: 1,
+            current_bytes: 640,
+            ..CacheStats::default()
+        };
+        let delta =
+            CacheStats { hits: 3, misses: 1, ..CacheStats::default() };
+        m.record_cache_tiers(&host, &delta);
+        m.record_cache_tiers(&host, &delta);
+        // host tier is an absolute snapshot; residency deltas accumulate
+        assert_eq!(m.host_hits.load(Ordering::Relaxed), 5);
+        assert_eq!(m.host_publishes.load(Ordering::Relaxed), 2);
+        assert_eq!(m.host_bytes.load(Ordering::Relaxed), 640);
+        assert_eq!(m.resident_hits.load(Ordering::Relaxed), 6);
+        assert_eq!(m.resident_misses.load(Ordering::Relaxed), 2);
+        let j = m.cache_tiers_json().to_string();
+        assert!(j.contains("\"host\"") && j.contains("\"resident\""), "{j}");
+        assert!(m.report().contains("host(hits=5"), "{}", m.report());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! behaviour (high-impact tokens get refreshed first). Documented in
 //! DESIGN.md §2.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::{AssembledContext, DocEntry};
@@ -73,7 +73,7 @@ impl ContextPolicy for CacheBlendPolicy {
         plan
     }
 
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 _sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let mut ctx = AssembledContext::new(&cfg, Buffer::Full);

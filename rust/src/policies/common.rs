@@ -47,7 +47,7 @@ pub fn step(model: &Model, ctx: &mut AssembledContext, buffer: Buffer,
 /// Convenience for tests/benches: run a policy and return just the
 /// answer.
 pub fn answer_of(policy: &dyn super::ContextPolicy, model: &Model,
-                 store: &mut crate::kvcache::CacheStore,
+                 store: &mut crate::kvcache::EngineDocCache,
                  sample: &Sample) -> Result<Vec<i32>> {
     Ok(policy.run(model, store, sample)?.answer)
 }

@@ -2,7 +2,7 @@
 //! caching that recomputes only the *initial* tokens of every chunk
 //! plus a local window (AttnLink), over the full loaded cache.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::{AssembledContext, DocEntry};
@@ -55,7 +55,7 @@ impl ContextPolicy for EpicPolicy {
         plan
     }
 
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 _sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let mut ctx = AssembledContext::new(&cfg, Buffer::Full);

@@ -4,7 +4,7 @@
 //!
 //! Every policy is served through the staged protocol defined in
 //! [`pipeline`] — `plan` (pure, model-free) → `prefill_docs` (document
-//! KV via the [`CacheStore`]) → `assemble` (sparsify/recompute into a
+//! KV via the tiered [`EngineDocCache`]) → `assemble` (sparsify/recompute into a
 //! decode-ready buffer) → `attend` (incremental query prefill) →
 //! `decode_step` (one streamed token per call). Policies implement the
 //! two policy-specific stages, [`ContextPolicy::plan`] and
@@ -41,10 +41,10 @@ pub use recompute::RecomputePolicy;
 pub use reuse::ReusePolicy;
 pub use samkv::SamKvPolicy;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
-use crate::kvcache::{CacheStore, DocEntry};
+use crate::kvcache::{DocEntry, EngineDocCache};
 use crate::model::Model;
 use crate::workload::Sample;
 
@@ -106,14 +106,14 @@ pub trait ContextPolicy {
     /// Stage 3 — sparsify/select/recompute over the cached documents
     /// (in the order of `sample.docs`; empty when `uses_doc_cache()` is
     /// false) and return a decode-ready context.
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 sample: &Sample) -> crate::Result<ReadyContext>;
 
     /// Serve one request end to end: the legacy blocking entry point,
     /// implemented in terms of the stages (see
     /// [`pipeline::serve_blocking`]). Not meant to be overridden.
-    fn run(&self, model: &Model, store: &mut CacheStore, sample: &Sample)
-           -> crate::Result<PolicyOutput> {
+    fn run(&self, model: &Model, store: &mut EngineDocCache,
+           sample: &Sample) -> crate::Result<PolicyOutput> {
         serve_blocking(self, model, store, sample)
     }
 }

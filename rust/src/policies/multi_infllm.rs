@@ -4,7 +4,7 @@
 //! blocks. No recomputation, no cross-context awareness (the paper's
 //! §4.1 adaptation of InfLLM to the multi-context setting).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::{AssembledContext, DocEntry, SlotKind};
@@ -48,7 +48,7 @@ impl ContextPolicy for MultiInfLlmPolicy {
         plan
     }
 
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         // generic retrieval vector: incremental query prefill over the

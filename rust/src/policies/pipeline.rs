@@ -15,10 +15,13 @@
 //!    device or model state is touched, the engine can plan a whole
 //!    batch up front and schedule shared work across requests — see
 //!    [`dedup_doc_plans`].
-//! 2. **prefill_docs** ([`ServeSession::prefill_docs`]) — ensure every
-//!    planned document KV exists in the [`CacheStore`] (prefilling on
-//!    miss). The engine may instead prefill shared documents once per
-//!    batch and report the attributable cost via
+//! 2. **prefill_docs** ([`ServeSession::prefill_docs`]) — pin the
+//!    planned doc hashes (a [`PinGuard`] held until the session ends,
+//!    so tier eviction can never race the stages below), then ensure
+//!    every planned document KV exists in the tiered cache (resident →
+//!    shared host tier → prefill-and-publish; see [`crate::kvcache`]).
+//!    The engine may instead prefill shared documents once per batch
+//!    and report the attributable cost via
 //!    [`ServeSession::credit_shared_prefill`]; the per-session call then
 //!    only performs (cheap) cache hits.
 //! 3. **assemble** ([`ServeSession::assemble`]) — the policy sparsifies,
@@ -56,14 +59,16 @@
 //! the stages, so callers that don't care about staging or streaming
 //! migrate without change.
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::config::ProfileConfig;
 use crate::kvcache::store::doc_hash;
-use crate::kvcache::{AssembledContext, CacheStore, DocEntry, SlotKind};
+use crate::kvcache::{
+    AssembledContext, DocEntry, EngineDocCache, PinGuard, SlotKind,
+};
 use crate::model::{Buffer, Model};
 use crate::tokenizer as tok;
 use crate::workload::Sample;
@@ -234,7 +239,10 @@ pub struct ServeSession<'a, P: ContextPolicy + ?Sized> {
     cfg: ProfileConfig,
     plan: ServePlan,
     stage: Stage,
-    docs: Vec<Rc<DocEntry>>,
+    docs: Vec<Arc<DocEntry>>,
+    /// Holds the planned doc hashes pinned against tier eviction from
+    /// `prefill_docs` until the session is dropped/finished.
+    _pins: Option<PinGuard>,
     warm: bool,
     ready: Option<ReadyContext>,
     answer: Vec<i32>,
@@ -260,6 +268,7 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
             plan,
             stage: Stage::Planned,
             docs: Vec::new(),
+            _pins: None,
             warm,
             ready: None,
             answer: Vec::new(),
@@ -298,17 +307,20 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
         }
     }
 
-    /// Stage 2: ensure every planned document KV exists in the store.
-    pub fn prefill_docs(&mut self, model: &Model, store: &mut CacheStore)
-                        -> Result<()> {
+    /// Stage 2: pin the planned doc hashes for the session's lifetime,
+    /// then ensure every planned document KV exists in the tiered
+    /// cache.
+    pub fn prefill_docs(&mut self, model: &Model,
+                        store: &mut EngineDocCache) -> Result<()> {
         if self.stage != Stage::Planned {
             bail!("prefill_docs called in stage {:?}", self.stage);
         }
         if self.plan.needs_doc_cache {
             let t = Instant::now();
+            self._pins = Some(store.pin_planned(&self.plan.doc_hashes));
             for d in &self.sample.docs {
                 let (e, hit) = store.get_or_prefill(model, d)?;
-                self.warm &= hit;
+                self.warm &= hit.is_warm();
                 self.docs.push(e);
             }
             self.doc_prefill_ms += t.elapsed().as_secs_f64() * 1e3;
@@ -425,8 +437,8 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
 /// The legacy blocking path: all stages in order, no streaming. This is
 /// the default `ContextPolicy::run()` body.
 pub fn serve_blocking<P: ContextPolicy + ?Sized>(
-    policy: &P, model: &Model, store: &mut CacheStore, sample: &Sample)
-    -> Result<PolicyOutput> {
+    policy: &P, model: &Model, store: &mut EngineDocCache,
+    sample: &Sample) -> Result<PolicyOutput> {
     let mut session = ServeSession::new(policy, &model.cfg, sample);
     session.prefill_docs(model, store)?;
     session.assemble(model)?;

@@ -5,7 +5,7 @@
 //! joint prefill already covers it), so its `ReadyContext` carries the
 //! first answer token's logits and the attend stage is a no-op.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::{AssembledContext, DocEntry};
@@ -33,7 +33,7 @@ impl ContextPolicy for RecomputePolicy {
         plan
     }
 
-    fn assemble(&self, model: &Model, _docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, _docs: &[Arc<DocEntry>],
                 sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let (tokens, valid, ans_start) = assemble_full(sample, &cfg);

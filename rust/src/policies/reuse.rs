@@ -3,7 +3,7 @@
 //! collapses on position-critical queries (the paper's motivating
 //! failure: missing cross-attention + RoPE position collisions).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::ProfileConfig;
 use crate::kvcache::{AssembledContext, DocEntry};
@@ -24,7 +24,7 @@ impl ContextPolicy for ReusePolicy {
         ServePlan::full_docs("Reuse", cfg, sample)
     }
 
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 _sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let mut ctx = AssembledContext::new(&cfg, Buffer::Full);

@@ -21,7 +21,7 @@
 //! (selection / personalized bias / recomputation, overwrite vs fusion)
 //! is a [`SamKvConfig`] switch.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::attention::{analyze_doc, BlockAttention};
 use crate::config::{ProfileConfig, SamKvConfig, UpdateStrategy};
@@ -51,7 +51,7 @@ impl SamKvPolicy {
 /// cache fed to `query_embed` (§3.1 "composite Cache unit").
 /// Returns `(comp_kv [L,2,H,Lc,Dh], comp_valid [Lc])`.
 pub fn build_compressed_cache(cfg: &ProfileConfig,
-                              entries: &[Rc<DocEntry>])
+                              entries: &[Arc<DocEntry>])
                               -> (Tensor, Vec<f32>) {
     let bs = cfg.block_size;
     let lc = cfg.comp_len;
@@ -124,7 +124,7 @@ impl ContextPolicy for SamKvPolicy {
         plan
     }
 
-    fn assemble(&self, model: &Model, docs: &[Rc<DocEntry>],
+    fn assemble(&self, model: &Model, docs: &[Arc<DocEntry>],
                 sample: &Sample) -> crate::Result<ReadyContext> {
         let cfg = model.cfg.clone();
         let k = &self.cfg;

@@ -9,7 +9,9 @@
 //! `{"id":1,"index":0,"token":...}` is written per generated token
 //! (SSE-style incremental output) before the final response line; the
 //! terminal line is the one carrying `answer` (or `error`).
-//! `{"cmd":"metrics"}` returns the metrics report;
+//! `{"cmd":"metrics"}` returns the metrics report, per-engine loads,
+//! and the per-tier document-cache counters
+//! (`{"cache":{"host":{...},"resident":{...}}}`);
 //! `{"cmd":"shutdown"}` stops the listener.
 
 use std::io::{BufRead, BufReader, Write};
@@ -35,6 +37,15 @@ impl Server {
     pub fn new(engines: Vec<EngineHandle>, metrics: Arc<Metrics>)
                -> Server {
         let router = Arc::new(Router::new(engines.len()));
+        Self::with_router(engines, metrics, router)
+    }
+
+    /// Construct over an externally created router — the production
+    /// wiring, where the router's residency board is shared with the
+    /// engines' caches so placement can follow device residency.
+    pub fn with_router(engines: Vec<EngineHandle>, metrics: Arc<Metrics>,
+                       router: Arc<Router>) -> Server {
+        assert_eq!(router.n_engines(), engines.len());
         Server {
             engines,
             router,
@@ -111,6 +122,7 @@ fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
         return match cmd {
             "metrics" => Ok(Value::obj()
                 .set("report", metrics.report())
+                .set("cache", metrics.cache_tiers_json())
                 .set("loads",
                      Value::Arr(router
                          .loads()

@@ -9,7 +9,7 @@
 
 use samkv::config::{SamKvConfig, UpdateStrategy};
 use samkv::eval::{evaluate, token_f1};
-use samkv::kvcache::CacheStore;
+use samkv::kvcache::EngineDocCache;
 use samkv::model::Model;
 use samkv::policies::{all_policies, CacheBlendPolicy, ContextPolicy, ReusePolicy, SamKvPolicy};
 use samkv::runtime::{artifacts_dir, Runtime};
@@ -32,7 +32,7 @@ fn setup() -> Option<(Model, Dataset)> {
 #[test]
 fn all_policies_produce_answers() {
     let Some((model, ds)) = setup() else { return };
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     for p in all_policies() {
         let out = p.run(&model, &mut store, &ds.samples[0]).unwrap();
         assert!(out.answer.len() <= model.cfg.answer_max,
@@ -101,7 +101,7 @@ fn samkv_memory_strictly_below_full_load() {
 #[test]
 fn ablation_switches_change_behaviour() {
     let Some((model, ds)) = setup() else { return };
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let s = &ds.samples[0];
     let no_sel = SamKvPolicy::new(SamKvConfig {
         selection: false,
@@ -126,7 +126,7 @@ fn ablation_switches_change_behaviour() {
 #[test]
 fn overwrite_and_fusion_may_differ_but_both_serve() {
     let Some((model, ds)) = setup() else { return };
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let s = &ds.samples[1 % ds.samples.len()];
     let over = SamKvPolicy::new(SamKvConfig {
         update: UpdateStrategy::Overwrite,
@@ -142,7 +142,7 @@ fn overwrite_and_fusion_may_differ_but_both_serve() {
 #[test]
 fn offloaded_scoring_matches_host_scoring_selection() {
     let Some((model, ds)) = setup() else { return };
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let s = &ds.samples[0];
     let host = SamKvPolicy::new(SamKvConfig {
         offload_scoring: false,
@@ -164,7 +164,7 @@ fn offloaded_scoring_matches_host_scoring_selection() {
 #[test]
 fn doc_cache_hits_across_requests() {
     let Some((model, ds)) = setup() else { return };
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let p = SamKvPolicy::new(SamKvConfig::default());
     let s = &ds.samples[0];
     let first = p.run(&model, &mut store, s).unwrap();

@@ -7,6 +7,7 @@ use std::thread;
 
 use samkv::config::ServingConfig;
 use samkv::coordinator::{Engine, ServeRequest};
+use samkv::kvcache::HostDocCache;
 use samkv::metrics::Metrics;
 use samkv::runtime::artifacts_dir;
 use samkv::server::{Client, Server};
@@ -25,14 +26,19 @@ fn tiny_cfg() -> ServingConfig {
     ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
 }
 
+/// Single engine over a private host tier (the pre-tier spawn shape).
+fn spawn_one(policy: &str, metrics: &Arc<Metrics>) -> Engine {
+    Engine::spawn(0, artifacts_dir(), tiny_cfg(), policy.to_string(),
+                  Arc::clone(metrics),
+                  Arc::new(HostDocCache::unbounded()), None)
+        .unwrap()
+}
+
 #[test]
 fn engine_serves_requests_from_channel() {
     let Some(ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "SamKV-fusion".to_string(),
-                               Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("SamKV-fusion", &metrics);
     let h = engine.handle();
     let resp = h
         .serve(ServeRequest {
@@ -63,9 +69,7 @@ fn engine_serves_requests_from_channel() {
 fn engine_parallel_submitters() {
     let Some(ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "Reuse".to_string(), Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("Reuse", &metrics);
     let handles: Vec<_> = (0..6)
         .map(|i| {
             let h = engine.handle();
@@ -89,7 +93,7 @@ fn engine_parallel_submitters() {
 #[test]
 fn batch_dedups_shared_doc_prefill() {
     // two requests over the SAME document set must trigger exactly one
-    // prefill per unique document (the CacheStore-backed doc_prefills
+    // prefill per unique document (the tier-backed doc_prefills
     // counter proves it), and — when the two land in one batch window —
     // batch-level dedup must split the shared prefill cost across both
     // (both cold, both credited), not leave request 2 a store hit.
@@ -97,9 +101,7 @@ fn batch_dedups_shared_doc_prefill() {
     // fresh documents until a same-batch pair is observed.
     let Some(ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "Reuse".to_string(), Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("Reuse", &metrics);
     let h = engine.handle();
     let mut saw_same_batch = false;
     for attempt in 0..25 {
@@ -171,10 +173,7 @@ fn batch_dedups_shared_doc_prefill() {
 fn engine_streams_tokens_before_done() {
     let Some(ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "SamKV-fusion".to_string(),
-                               Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("SamKV-fusion", &metrics);
     let rx = engine
         .handle()
         .submit(ServeRequest { id: 9, sample: ds.samples[0].clone(),
@@ -201,10 +200,7 @@ fn engine_streams_tokens_before_done() {
 fn tcp_server_end_to_end() {
     let Some(ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "SamKV-fusion".to_string(),
-                               Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("SamKV-fusion", &metrics);
     let handles = vec![engine.handle()];
     let server = Server::new(handles, metrics);
     let (port_tx, port_rx) = mpsc::channel();
@@ -253,9 +249,7 @@ fn tcp_server_end_to_end() {
 fn malformed_request_returns_error_line() {
     let Some(_ds) = ready() else { return };
     let metrics = Arc::new(Metrics::new());
-    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
-                               "Reuse".to_string(), Arc::clone(&metrics))
-        .unwrap();
+    let engine = spawn_one("Reuse", &metrics);
     let server = Server::new(vec![engine.handle()], metrics);
     let (port_tx, port_rx) = mpsc::channel();
     let srv = thread::spawn(move || {

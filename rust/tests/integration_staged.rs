@@ -6,7 +6,7 @@
 //!
 //! Tests no-op when artifacts aren't built.
 
-use samkv::kvcache::CacheStore;
+use samkv::kvcache::EngineDocCache;
 use samkv::model::Model;
 use samkv::policies::{
     all_policies, CollectSink, ContextPolicy, ServeSession, Stage,
@@ -34,11 +34,11 @@ fn staged_is_token_identical_to_run_for_every_policy() {
     let sample = &ds.samples[0]; // fixed sample; artifacts are seeded
     for policy in all_policies() {
         // legacy path: run() (the default staged blocking driver)
-        let mut store_a = CacheStore::unbounded();
+        let mut store_a = EngineDocCache::unbounded();
         let legacy = policy.run(&model, &mut store_a, sample).unwrap();
 
         // explicit staged path with streaming
-        let mut store_b = CacheStore::unbounded();
+        let mut store_b = EngineDocCache::unbounded();
         let mut session =
             ServeSession::new(policy.as_ref(), &model.cfg, sample);
         assert_eq!(session.stage(), Stage::Planned);
@@ -73,7 +73,7 @@ fn staged_is_token_identical_to_run_for_every_policy() {
 /// token-for-token.
 #[test]
 fn staged_decode_matches_seed_era_reference_loop() {
-    use samkv::kvcache::{AssembledContext, CacheStore as Store};
+    use samkv::kvcache::{AssembledContext, EngineDocCache as Store};
     use samkv::model::Buffer;
     use samkv::tokenizer as tok;
 
@@ -121,7 +121,7 @@ fn staged_decode_matches_seed_era_reference_loop() {
 
     // --- staged pipeline on a fresh store ------------------------------
     let staged = samkv::policies::ReusePolicy
-        .run(&model, &mut CacheStore::unbounded(), sample)
+        .run(&model, &mut EngineDocCache::unbounded(), sample)
         .unwrap();
     assert_eq!(staged.answer, reference,
                "staged Reuse diverged from the seed-era serving loop");
@@ -154,7 +154,7 @@ fn stage_order_is_enforced() {
     // assemble before prefill_docs must fail, not misbehave
     assert!(session.assemble(&model).is_err());
     assert!(session.attend(&model).is_err());
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     session.prefill_docs(&model, &mut store).unwrap();
     assert!(session.prefill_docs(&model, &mut store).is_err());
     session.assemble(&model).unwrap();
@@ -168,7 +168,7 @@ fn warm_second_session_matches_cold_first() {
     let sample = &ds.samples[0];
     let policies = all_policies();
     let policy = policies.last().unwrap(); // SamKV-fusion
-    let mut store = CacheStore::unbounded();
+    let mut store = EngineDocCache::unbounded();
     let cold = policy.run(&model, &mut store, sample).unwrap();
     assert!(!cold.stats.cache_warm);
     let warm = policy.run(&model, &mut store, sample).unwrap();

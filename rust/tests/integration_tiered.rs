@@ -1,0 +1,150 @@
+//! Tiered document-cache integration over the tiny artifacts: two
+//! engines sharing one host tier must prefill each unique document
+//! exactly once process-wide (engine B hits what engine A published),
+//! visible end-to-end through the per-tier `Metrics` counters, and the
+//! cache-aware router must follow residency.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use samkv::config::ServingConfig;
+use samkv::coordinator::{Engine, Router, ServeRequest};
+use samkv::kvcache::{doc_hash, HostDocCache};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::workload::Dataset;
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+fn spawn_pair(metrics: &Arc<Metrics>, host: &Arc<HostDocCache>,
+              router: &Arc<Router>) -> Vec<Engine> {
+    (0..2)
+        .map(|i| {
+            Engine::spawn(i, artifacts_dir(), tiny_cfg(),
+                          "Reuse".to_string(), Arc::clone(metrics),
+                          Arc::clone(host),
+                          Some(router.residency_handle(i)))
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn unique_docs_prefill_once_across_engines() {
+    let Some(ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let host = Arc::new(HostDocCache::unbounded());
+    let router = Arc::new(Router::new(2));
+    let engines = spawn_pair(&metrics, &host, &router);
+    let sample = ds.samples[0].clone();
+    let n_docs: std::collections::HashSet<u64> =
+        sample.docs.iter().map(|d| doc_hash(d)).collect();
+    let n_docs = n_docs.len() as u64;
+
+    // sequential: engine 0 prefills, engine 1 must hit the host tier
+    let req = |id: u64| ServeRequest {
+        id,
+        sample: sample.clone(),
+        policy: String::new(),
+        stream: false,
+    };
+    let r0 = engines[0].handle().serve(req(0)).unwrap();
+    assert!(r0.error.is_none(), "{:?}", r0.error);
+    assert!(!r0.stats.cache_warm, "first request must be cold");
+    let after_first = host.stats();
+    assert_eq!(after_first.publishes, n_docs,
+               "engine 0 must publish each unique doc once");
+
+    let r1 = engines[1].handle().serve(req(1)).unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    assert_eq!(r0.answer, r1.answer,
+               "host-tier sharing must not change results");
+    assert!(r1.stats.cache_warm,
+            "engine 1 must be warm off engine 0's published prefills");
+    let after_second = host.stats();
+    assert_eq!(after_second.publishes, n_docs,
+               "engine 1 must not prefill what engine 0 published");
+    assert!(after_second.hits >= n_docs,
+            "engine 1's lookups must be host-tier hits");
+
+    // concurrent: fresh docs to both engines at once — the prefill
+    // lease must still keep it to one publish per unique doc
+    let mut s2 = ds.samples[0].clone();
+    for d in &mut s2.docs {
+        d[1] = samkv::tokenizer::filler_tok(3);
+    }
+    let uniq2: std::collections::HashSet<u64> =
+        s2.docs.iter().map(|d| doc_hash(d)).collect();
+    assert!(uniq2.iter().all(|h| !host.contains(*h)),
+            "mutated docs must be new to the host tier");
+    let rx_a = engines[0]
+        .handle()
+        .submit(ServeRequest { id: 10, sample: s2.clone(),
+                               policy: String::new(), stream: false })
+        .unwrap();
+    let rx_b = engines[1]
+        .handle()
+        .submit(ServeRequest { id: 11, sample: s2,
+                               policy: String::new(), stream: false })
+        .unwrap();
+    let ra = samkv::coordinator::recv_done(&rx_a).unwrap();
+    let rb = samkv::coordinator::recv_done(&rx_b).unwrap();
+    assert!(ra.error.is_none() && rb.error.is_none());
+    assert_eq!(ra.answer, rb.answer);
+    assert_eq!(host.stats().publishes, n_docs + uniq2.len() as u64,
+               "concurrent engines must not double-prefill a document");
+
+    // end-to-end visibility: the engines flushed the tier counters
+    // into the shared metrics registry after serving
+    assert_eq!(metrics.host_publishes.load(Ordering::Relaxed),
+               host.stats().publishes);
+    assert!(metrics.resident_hits.load(Ordering::Relaxed) > 0,
+            "session prefill stage must hit the residency tier");
+    assert!(metrics.report().contains("host(hits="));
+}
+
+#[test]
+fn router_places_repeat_docsets_on_the_resident_engine() {
+    let Some(ds) = ready() else { return };
+    let metrics = Arc::new(Metrics::new());
+    let host = Arc::new(HostDocCache::unbounded());
+    let router = Arc::new(Router::new(2));
+    let engines = spawn_pair(&metrics, &host, &router);
+    let sample = ds.samples[0].clone();
+
+    // first placement (affinity or residency-free), served to warm
+    // exactly one engine's residency tier
+    let first = router.pick(&sample);
+    let r = engines[first]
+        .handle()
+        .serve(ServeRequest { id: 1, sample: sample.clone(),
+                              policy: String::new(), stream: false })
+        .unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    router.done(first);
+    for d in &sample.docs {
+        assert!(router.board().is_resident(first, doc_hash(d)),
+                "served engine must advertise residency");
+    }
+
+    // every repeat of the doc-set must land on the warmed engine
+    for _ in 0..4 {
+        let again = router.pick(&sample);
+        assert_eq!(again, first,
+                   "cache-aware routing must follow residency");
+        router.done(again);
+    }
+}
