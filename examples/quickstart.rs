@@ -34,7 +34,7 @@ fn main() -> samkv::Result<()> {
     let policy = SamKvPolicy::new(SamKvConfig::default());
 
     // stage 1 — pure planning (no model, no device)
-    let mut session = ServeSession::new(&policy, &model.cfg, sample);
+    let mut session = ServeSession::new(&policy, &model.cfg, sample.clone());
     println!("\nplan: {} doc caches needed, buffer {:?}, \
               {} fixed spans, <= {} dynamic blocks, \
               ~{} tokens planned for recompute",

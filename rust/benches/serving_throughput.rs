@@ -1,10 +1,14 @@
 //! End-to-end serving throughput/latency under synthetic load through
-//! the full coordinator stack (engine threads over the shared host
-//! doc-cache tier, cache-aware router, batcher, metrics), with
-//! recurring document sets exercising both cache tiers. The emitted
-//! JSON carries the per-tier hit/miss/eviction/publish counters; with
-//! `--engines 2+`, `host_publishes == unique documents` demonstrates
-//! the cross-engine prefill dedup.
+//! the full coordinator stack (continuous-batching engine threads over
+//! the shared host doc-cache tier, cache-aware router, batcher,
+//! metrics), swept over admission-wave size (`--batch-sizes`) × open
+//! loop arrival rate (`--rates`, requests/sec, 0 = as fast as
+//! possible), with recurring document sets exercising both cache
+//! tiers. Each sweep row in the emitted JSON carries tokens/sec, TTFT
+//! p50/p95, queue-wait p50/p95, the fused decode-round counters, and
+//! the per-tier hit/miss/eviction/publish counters; with `--engines
+//! 2+`, `host_publishes == unique documents` demonstrates the
+//! cross-engine prefill dedup.
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 
@@ -12,12 +16,18 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1)
         .filter(|a| a != "--bench"));
     let profile = args.get_str("profile", "s4");
+    let batch_sizes =
+        exp::parse_usize_list(&args.get_str("batch-sizes", "1,4"))
+            .expect("--batch-sizes");
+    let rates = exp::parse_f64_list(&args.get_str("rates", "0,32"))
+        .expect("--rates");
     for policy in args.get_str("policies",
                                "SamKV-fusion,CacheBlend,Reuse").split(',') {
         exp::throughput(&profile, policy,
                         args.get::<usize>("requests", 24),
                         args.get::<usize>("unique", 8),
-                        args.get::<usize>("engines", 2))
+                        args.get::<usize>("engines", 2),
+                        &batch_sizes, &rates)
             .unwrap();
     }
 }

@@ -64,6 +64,7 @@ fn eval_to_json(r: &EvalResult) -> Value {
         .set("ttft_ms", r.mean_ttft_ms)
         .set("decode_ms", r.mean_decode_ms)
         .set("plan_ms", r.mean_plan_ms)
+        .set("queue_wait_ms", r.mean_queue_wait_ms)
         .set("doc_prefill_ms", r.mean_doc_prefill_ms)
         .set("seq_ratio", r.mean_seq_ratio)
         .set("recompute_ratio", r.mean_recompute_ratio)
@@ -374,15 +375,44 @@ pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
 // Serving throughput/latency under load (system experiment)
 // ---------------------------------------------------------------------------
 
-/// Drive the full serving stack (engine threads over one shared host
-/// doc-cache tier + cache-aware router + metrics) with a synthetic
-/// load where document sets recur (`n_unique` distinct sets across
-/// `n_requests`), reporting throughput, latency percentiles, and
-/// per-tier cache behaviour. With `n_engines >= 2` the host-tier
-/// publish counter proves the cross-engine dedup: each unique document
-/// is prefilled exactly once process-wide.
-pub fn throughput(profile: &str, policy: &str, n_requests: usize,
-                  n_unique: usize, n_engines: usize) -> Result<Value> {
+/// Parse a `--batch-sizes`-style CSV flag value (shared by the bench
+/// binary and the CLI subcommand so their defaults cannot drift).
+/// Errors on any unparsable entry rather than silently shrinking the
+/// sweep grid.
+pub fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad list entry `{x}`"))
+        })
+        .collect()
+}
+
+/// Parse a `--rates`-style CSV flag value (errors on bad entries).
+pub fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<f64>()
+                .with_context(|| format!("bad list entry `{x}`"))
+        })
+        .collect()
+}
+
+/// One serving-throughput run: drive the continuous-batching engines
+/// (persistent decode scheduler + mid-round admission over one shared
+/// host doc-cache tier + cache-aware router + metrics) with a
+/// synthetic load where document sets recur (`n_unique` distinct sets
+/// across `n_requests`) and requests arrive at `arrival_rps` requests
+/// per second (0 = submit as fast as possible). Returns the per-run
+/// JSON row: tokens/sec, TTFT and queue-wait percentiles, fused decode
+/// round counters, and the per-tier cache behaviour. With `n_engines
+/// >= 2` the host-tier publish counter proves the cross-engine dedup:
+/// each unique document is prefilled exactly once process-wide.
+pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
+                      n_unique: usize, n_engines: usize, max_batch: usize,
+                      arrival_rps: f64) -> Result<Value> {
     use crate::config::ServingConfig;
     use crate::coordinator::{recv_done, Engine, Router, ServeRequest};
     use crate::kvcache::HostDocCache;
@@ -392,15 +422,17 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
     use std::sync::Arc;
 
     let n_engines = n_engines.max(1);
-    println!("== Serving throughput: profile {profile}, policy {policy}, \
-              {n_requests} requests over {n_unique} doc-sets, \
-              {n_engines} engine(s)\n");
     let metrics = Arc::new(Metrics::new());
     let host = Arc::new(HostDocCache::unbounded());
     let router = Arc::new(Router::new(n_engines));
+    let defaults = ServingConfig::default();
     let cfg = ServingConfig {
         profile: profile.to_string(),
-        ..ServingConfig::default()
+        max_batch: max_batch.max(1),
+        // the pool must fit a full admission wave, or the engine would
+        // silently clamp the sweep's batch axis to the default cap
+        max_active: defaults.max_active.max(max_batch),
+        ..defaults
     };
     let engines: Vec<Engine> = (0..n_engines)
         .map(|i| {
@@ -419,18 +451,20 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         .map(|_| synthetic_sample(&model.cfg, &mut rng))
         .collect();
 
-    let t0 = std::time::Instant::now();
-    // pipelined submission: keep a small window in flight
-    let mut pending = std::collections::VecDeque::new();
-    let mut errors = 0usize;
-    let mut finish = |pending: &mut std::collections::VecDeque<_>| {
-        let (engine, rx): (usize, _) = pending.pop_front().unwrap();
-        if !matches!(recv_done(&rx), Ok(r) if r.error.is_none()) {
-            errors += 1;
-        }
-        router.done(engine);
+    // paced open-loop arrivals: the engines' mid-round admission (not a
+    // client-side in-flight window) is what bounds concurrency, so
+    // queue-wait under pressure is actually measurable
+    let gap = if arrival_rps > 0.0 {
+        std::time::Duration::from_secs_f64(1.0 / arrival_rps)
+    } else {
+        std::time::Duration::ZERO
     };
+    let t0 = std::time::Instant::now();
+    let mut inflight = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
+        if i > 0 && !gap.is_zero() {
+            std::thread::sleep(gap);
+        }
         let sample = pool[i % n_unique].clone();
         let engine = router.pick(&sample);
         let rx = handles[engine].submit(ServeRequest {
@@ -439,36 +473,52 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
             policy: policy.to_string(),
             stream: false,
         })?;
-        pending.push_back((engine, rx));
-        if pending.len() >= 8 {
-            finish(&mut pending);
-        }
+        inflight.push((engine, rx));
     }
-    while !pending.is_empty() {
-        finish(&mut pending);
+    let mut errors = 0usize;
+    for (engine, rx) in inflight {
+        if !matches!(recv_done(&rx), Ok(r) if r.error.is_none()) {
+            errors += 1;
+        }
+        router.done(engine);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let rps = n_requests as f64 / wall_s;
-    println!("{}", metrics.report());
-    println!("wall {:.1}s -> {:.2} req/s, errors {}", wall_s, rps, errors);
     let load = |a: &std::sync::atomic::AtomicU64| {
         a.load(std::sync::atomic::Ordering::Relaxed) as i64
     };
-    let v = Value::obj()
-        .set("experiment", "throughput")
+    let tokens_per_s =
+        metrics.tokens_generated.load(std::sync::atomic::Ordering::Relaxed)
+            as f64
+            / wall_s;
+    println!("{}", metrics.report());
+    println!("batch {max_batch}, rate {arrival_rps:.0} r/s: wall {:.1}s \
+              -> {:.2} req/s, {:.1} tok/s, errors {}\n",
+             wall_s, rps, tokens_per_s, errors);
+    Ok(Value::obj()
         .set("model", profile)
         .set("policy", policy)
         .set("requests", n_requests)
         .set("unique_docsets", n_unique)
         .set("engines", n_engines)
+        .set("max_batch", max_batch)
+        .set("arrival_rps", arrival_rps)
         .set("wall_s", wall_s)
         .set("req_per_s", rps)
+        .set("tokens_per_s", tokens_per_s)
         .set("errors", errors)
         .set("ttft_mean_ms", metrics.ttft.mean_ms())
+        .set("ttft_p50_ms", metrics.ttft.percentile_ms(0.50))
         .set("ttft_p95_ms", metrics.ttft.percentile_ms(0.95))
         .set("e2e_p95_ms", metrics.e2e.percentile_ms(0.95))
         .set("plan_mean_ms", metrics.plan.mean_ms())
         .set("doc_prefill_mean_ms", metrics.doc_prefill.mean_ms())
+        // continuous-batching scheduler measurements
+        .set("queue_wait_mean_ms", metrics.queue_wait.mean_ms())
+        .set("queue_wait_p50_ms", metrics.queue_wait.percentile_ms(0.50))
+        .set("queue_wait_p95_ms", metrics.queue_wait.percentile_ms(0.95))
+        .set("fused_rounds", load(&metrics.fused_rounds))
+        .set("fused_round_sessions", load(&metrics.fused_round_sessions))
         .set("doc_prefills", load(&metrics.doc_prefills))
         // per-tier document-cache counters (see Metrics)
         .set("host_hits", load(&metrics.host_hits))
@@ -478,7 +528,59 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         .set("host_bytes", load(&metrics.host_bytes))
         .set("resident_hits", load(&metrics.resident_hits))
         .set("resident_misses", load(&metrics.resident_misses))
-        .set("resident_evictions", load(&metrics.resident_evictions));
+        .set("resident_evictions", load(&metrics.resident_evictions)))
+}
+
+/// Serving-throughput sweep over admission-wave size (`max_batch`) ×
+/// open-loop arrival rate, persisting every run's row (tokens/sec,
+/// TTFT p50/p95, queue-wait p50/p95, fused-round counters, per-tier
+/// cache stats) under `throughput_{profile}_{policy}.json`.
+pub fn throughput(profile: &str, policy: &str, n_requests: usize,
+                  n_unique: usize, n_engines: usize,
+                  batch_sizes: &[usize], rates: &[f64]) -> Result<Value> {
+    let batch_sizes: Vec<usize> = if batch_sizes.is_empty() {
+        vec![4]
+    } else {
+        batch_sizes.to_vec()
+    };
+    let rates: Vec<f64> =
+        if rates.is_empty() { vec![0.0] } else { rates.to_vec() };
+    println!("== Serving throughput sweep: profile {profile}, policy \
+              {policy}, {n_requests} requests over {n_unique} doc-sets, \
+              {} engine(s), batch x rate = {:?} x {:?}\n",
+             n_engines.max(1), batch_sizes, rates);
+    let mut tbl = Table::new(&["batch", "rate r/s", "tok/s", "req/s",
+                               "TTFT p50/p95 ms", "qwait p50/p95 ms"]);
+    let mut rows = Vec::new();
+    for &mb in &batch_sizes {
+        for &rate in &rates {
+            let row = throughput_run(profile, policy, n_requests, n_unique,
+                                     n_engines, mb, rate)?;
+            let f = |k: &str| {
+                row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+            };
+            tbl.row(vec![
+                format!("{mb}"),
+                if rate > 0.0 { format!("{rate:.0}") }
+                else { "max".to_string() },
+                format!("{:.1}", f("tokens_per_s")),
+                format!("{:.2}", f("req_per_s")),
+                format!("{:.1}/{:.1}", f("ttft_p50_ms"), f("ttft_p95_ms")),
+                format!("{:.1}/{:.1}", f("queue_wait_p50_ms"),
+                        f("queue_wait_p95_ms")),
+            ]);
+            rows.push(row);
+        }
+    }
+    tbl.print();
+    let v = Value::obj()
+        .set("experiment", "throughput")
+        .set("model", profile)
+        .set("policy", policy)
+        .set("requests", n_requests)
+        .set("unique_docsets", n_unique)
+        .set("engines", n_engines.max(1))
+        .set("rows", Value::Arr(rows));
     save_result(&format!("throughput_{profile}_{policy}"), &v)?;
     Ok(v)
 }

@@ -158,9 +158,22 @@ pub struct ServingConfig {
     pub artifacts_dir: String,
     pub profile: String,
     pub workers: usize,
+    /// Largest admission wave: how many queued requests one gather (the
+    /// initial blocking gather or a mid-round admission poll) may pull
+    /// into the engine at once.
     pub max_batch: usize,
     pub queue_capacity: usize,
     pub port: u16,
+    /// Gather window (`--batch-window-ms`): once at least one request
+    /// is in hand, how long the engine keeps gathering more before the
+    /// wave is admitted. Used by both the initial blocking gather and
+    /// mid-round admission (where the queue is first polled without
+    /// blocking, so an empty queue never stalls decode).
+    pub batch_window_ms: u64,
+    /// Cap on concurrently decoding sessions (`--max-active`): the
+    /// persistent scheduler admits new requests between decode rounds
+    /// only while the active pool is below this.
+    pub max_active: usize,
 }
 
 impl Default for ServingConfig {
@@ -172,6 +185,8 @@ impl Default for ServingConfig {
             max_batch: 4,
             queue_capacity: 256,
             port: 7070,
+            batch_window_ms: 2,
+            max_active: 8,
         }
     }
 }
@@ -210,6 +225,15 @@ mod tests {
     fn missing_field_errors() {
         let v = json::parse(r#"{"name":"x"}"#).unwrap();
         assert!(ProfileConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn serving_defaults() {
+        let c = ServingConfig::default();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.batch_window_ms, 2);
+        assert!(c.max_active >= c.max_batch,
+                "default pool must fit a full admission wave");
     }
 
     #[test]

@@ -1,20 +1,48 @@
 //! Engine: one thread owning a PJRT runtime + model + the engine-local
 //! residency tier of the document cache, serving requests from a
-//! channel (dynamic batching applied at the queue). The PJRT client is
-//! not `Send`, so everything device-adjacent lives here; the
-//! [`HostDocCache`] beneath the residency tier is shared across all
-//! engines, so a document prefilled by any engine is a host-tier hit
-//! for every other (see [`crate::kvcache`]).
+//! channel. The PJRT client is not `Send`, so everything
+//! device-adjacent lives here; the [`HostDocCache`] beneath the
+//! residency tier is shared across all engines, so a document
+//! prefilled by any engine is a host-tier hit for every other (see
+//! [`crate::kvcache`]).
 //!
-//! The batch loop exploits the staged policy protocol
-//! ([`crate::policies::pipeline`]): every request in the batch is
-//! planned up front (pure, model-free), shared document prefills are
-//! deduplicated across the batch (the multi-context RAG hot path —
-//! the same retrieved document appearing in many concurrent requests is
-//! prefilled once and its cost split across sharers), then the
-//! per-request assemble/attend/decode stages are interleaved
-//! round-robin so streaming requests emit tokens fairly instead of
-//! serializing whole requests.
+//! # Continuous-batching scheduler
+//!
+//! The engine runs a persistent decode scheduler instead of the old
+//! drain-to-empty batch loop. It owns a long-lived pool of [`Active`]
+//! sessions and alternates two phases forever:
+//!
+//! 1. **Admission.** When the pool is empty the engine blocks on the
+//!    queue ([`next_batch`]); while sessions are decoding it instead
+//!    polls without blocking ([`poll_batch`]) between rounds, so an
+//!    idle queue never stalls a token. Each admitted *wave* (at most
+//!    `max_batch` requests, bounded by the `max_active` pool cap and
+//!    coalesced within `batch_window_ms`) runs the front of the staged
+//!    protocol ([`crate::policies::pipeline`]): every request is
+//!    planned (pure, model-free), shared document prefills are
+//!    deduplicated across the wave (the multi-context RAG hot path —
+//!    the same retrieved document appearing in many concurrent
+//!    requests is prefilled once and its cost split across sharers),
+//!    then each newcomer assembles and attends and joins the pool.
+//!    Per-request queue wait (submit → plan start) is recorded here,
+//!    and the per-tier cache counters are flushed after every wave so
+//!    they cannot go stale under continuous admission.
+//!
+//! 2. **One fused decode round.** Every active session emits at most
+//!    one token ([`ServeSession::decode_step_begin`], round-robin in
+//!    pool order — arrival order, newcomers at the back), then all
+//!    requested forward passes run as a single amortized dispatch
+//!    ([`Model::decode_batch`], counted in `Metrics::fused_rounds` /
+//!    `fused_round_sessions`), and the outputs are folded back
+//!    ([`ServeSession::decode_step_complete`]). Finished sessions are
+//!    retired at the end of the round — token events of a round are
+//!    always sent before any of its `Done` events.
+//!
+//! Because admission happens *between rounds*, a newly arrived request
+//! reaches its first token after at most one round plus its own
+//! prefill/assemble/attend — it no longer waits for the oldest
+//! request's full decode, which is the TTFT win continuous batching
+//! exists for.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -31,16 +59,20 @@ use crate::kvcache::{
     EngineDocCache, HostDocCache, ResidencyHandle, TierHit,
 };
 use crate::metrics::Metrics;
-use crate::model::Model;
-use crate::policies::pipeline::{dedup_doc_plans, FnSink, ServeSession};
-use crate::policies::{all_policies, ContextPolicy, ServePlan};
+use crate::model::{DecodeReq, Model};
+use crate::policies::pipeline::{
+    dedup_doc_plans, FnSink, FusedStep, ServeSession,
+};
+use crate::policies::{all_policies, ContextPolicy};
 use crate::runtime::Runtime;
 
-use super::batcher::next_batch;
+use super::batcher::{next_batch, poll_batch};
 use super::request::{recv_done, ServeEvent, ServeRequest, ServeResponse};
 
 enum Msg {
-    Serve(ServeRequest, mpsc::Sender<ServeEvent>),
+    /// A request, its reply channel, and its submission instant (the
+    /// queue-wait clock starts at submit).
+    Serve(ServeRequest, mpsc::Sender<ServeEvent>, Instant),
 }
 
 /// Cloneable handle for submitting work to one engine thread.
@@ -57,7 +89,7 @@ impl EngineHandle {
                   -> Result<mpsc::Receiver<ServeEvent>> {
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Serve(req, tx))
+            .send(Msg::Serve(req, tx, Instant::now()))
             .map_err(|_| anyhow::anyhow!("engine closed"))?;
         Ok(rx)
     }
@@ -78,11 +110,11 @@ pub struct Engine {
 
 impl Engine {
     /// Spawn the engine thread: loads the runtime + model, compiles the
-    /// serving entry points, then loops on the queue. The engine's
-    /// residency tier is constructed over the shared `host` tier;
-    /// `residency` (when routed) advertises resident hashes for
-    /// cache-aware placement. `ready` resolves after warmup (Err when
-    /// initialization failed).
+    /// serving entry points, then runs the persistent scheduler on the
+    /// queue. The engine's residency tier is constructed over the
+    /// shared `host` tier; `residency` (when routed) advertises
+    /// resident hashes for cache-aware placement. `ready` resolves
+    /// after warmup (Err when initialization failed).
     pub fn spawn(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                  default_policy: String, metrics: Arc<Metrics>,
                  host: Arc<HostDocCache>,
@@ -118,6 +150,15 @@ impl Drop for Engine {
             let _ = j.join();
         }
     }
+}
+
+/// One pooled session: the staged state machine plus what is needed to
+/// stream its events after the originating request has been consumed.
+struct Active<'p> {
+    id: u64,
+    stream: bool,
+    reply: mpsc::Sender<ServeEvent>,
+    session: ServeSession<'p, dyn ContextPolicy>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -160,11 +201,42 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
     crate::info!("engine-{index} ready (profile {}, {} params)",
                  model.name, model.n_params);
 
-    while let Some(batch) =
-        next_batch(&rx, cfg.max_batch, Duration::from_millis(2))
-    {
-        serve_batch(&model, &mut store, &policies, &default_policy,
-                    &metrics, batch);
+    // --- the persistent scheduler -------------------------------------
+    let window = Duration::from_millis(cfg.batch_window_ms);
+    let max_active = cfg.max_active.max(1);
+    let wave_cap = cfg.max_batch.max(1);
+    let mut active: Vec<Active> = Vec::new();
+    let mut open = true;
+    loop {
+        if active.is_empty() {
+            if !open {
+                break;
+            }
+            // idle: block for work (or exit once the queue closes)
+            match next_batch(&rx, wave_cap.min(max_active), window) {
+                Some(wave) => admit_wave(&model, &mut store, &policies,
+                                         &default_policy, &metrics, wave,
+                                         &mut active),
+                None => open = false,
+            }
+        } else if open {
+            // mid-round admission: a non-blocking poll between decode
+            // rounds, capped by the pool's free slots
+            let free = max_active.saturating_sub(active.len());
+            if free > 0 {
+                let (wave, still_open) =
+                    poll_batch(&rx, free.min(wave_cap), window);
+                open = still_open;
+                if !wave.is_empty() {
+                    admit_wave(&model, &mut store, &policies,
+                               &default_policy, &metrics, wave,
+                               &mut active);
+                }
+            }
+        }
+        if !active.is_empty() {
+            decode_round(&model, &store, &metrics, &mut active);
+        }
     }
     crate::info!("engine-{index} shutting down");
 }
@@ -178,53 +250,61 @@ fn error_response(id: u64, msg: String) -> ServeResponse {
     }
 }
 
-/// Serve one gathered batch through the staged protocol.
-fn serve_batch(model: &Model, store: &mut EngineDocCache,
-               policies: &HashMap<String, Box<dyn ContextPolicy>>,
-               default_policy: &str, metrics: &Metrics,
-               batch: Vec<Msg>) {
-    let items: Vec<(ServeRequest, mpsc::Sender<ServeEvent>)> = batch
-        .into_iter()
-        .map(|m| match m {
-            Msg::Serve(req, reply) => (req, reply),
-        })
-        .collect();
-    metrics.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
-
+/// Admit one wave of queued requests into the active pool: plan every
+/// request, dedup shared document prefills across the wave, then run
+/// each survivor's prefill/assemble/attend. Requests that fail any
+/// stage are answered with an error immediately; survivors join the
+/// pool (at the back — round-robin order is arrival order).
+fn admit_wave<'p>(model: &Model, store: &mut EngineDocCache,
+                  policies: &'p HashMap<String, Box<dyn ContextPolicy>>,
+                  default_policy: &str, metrics: &Metrics,
+                  wave: Vec<Msg>, active: &mut Vec<Active<'p>>) {
     // --- stage 1: plan every request (pure, model-free) ---------------
-    let mut sessions: Vec<Option<ServeSession<dyn ContextPolicy>>> =
-        Vec::with_capacity(items.len());
-    for (req, reply) in &items {
-        let pname = if req.policy.is_empty() {
+    let mut items: Vec<(u64, bool, mpsc::Sender<ServeEvent>)> =
+        Vec::with_capacity(wave.len());
+    let mut sessions: Vec<Option<ServeSession<'p, dyn ContextPolicy>>> =
+        Vec::with_capacity(wave.len());
+    for msg in wave {
+        let Msg::Serve(req, reply, submitted) = msg;
+        let ServeRequest { id, sample, policy, stream } = req;
+        metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let queue_wait_ms = submitted.elapsed().as_secs_f64() * 1e3;
+        metrics.queue_wait.observe_ms(queue_wait_ms);
+        let pname = if policy.is_empty() {
             default_policy
         } else {
-            req.policy.as_str()
+            policy.as_str()
         };
         match policies.get(pname) {
-            Some(p) => sessions.push(Some(ServeSession::new(
-                p.as_ref(), &model.cfg, &req.sample))),
+            Some(p) => {
+                let mut s =
+                    ServeSession::new(p.as_ref(), &model.cfg, sample);
+                s.set_queue_wait(queue_wait_ms);
+                sessions.push(Some(s));
+            }
             None => {
                 metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(ServeEvent::Done(error_response(
-                    req.id, format!("unknown policy `{pname}`"))));
+                    id, format!("unknown policy `{pname}`"))));
                 sessions.push(None);
             }
         }
+        items.push((id, stream, reply));
     }
 
     // --- stage 2: cross-request doc-prefill dedup ----------------------
-    // prefill each document needed by the batch exactly once; split the
-    // cost across the requests sharing it. The whole batch's planned
+    // prefill each document needed by the wave exactly once; split the
+    // cost across the requests sharing it. The whole wave's planned
     // hashes are pinned for the duration so no tier eviction can race
     // the per-session stages below.
     let shared = {
-        let plans: Vec<Option<&ServePlan>> = sessions
+        let plans: Vec<Option<&crate::policies::ServePlan>> = sessions
             .iter()
             .map(|s| s.as_ref().map(|s| s.plan()))
             .collect();
         dedup_doc_plans(&plans)
     };
-    let _batch_pins = {
+    let _wave_pins = {
         let hashes: Vec<u64> = shared.iter().map(|sd| sd.hash).collect();
         store.pin_planned(&hashes)
     };
@@ -241,9 +321,24 @@ fn serve_batch(model: &Model, store: &mut EngineDocCache,
         if live.is_empty() {
             continue;
         }
-        let tokens = &items[sd.req].0.sample.docs[sd.doc];
+        // locate the document's tokens through the first live sharer
+        // (plan hash order mirrors its sample's doc order)
+        let (owner, dj) = {
+            let s = sessions[live[0]].as_ref().unwrap();
+            let dj = s
+                .plan()
+                .doc_hashes
+                .iter()
+                .position(|&h| h == sd.hash)
+                .expect("live sharer plans the doc");
+            (live[0], dj)
+        };
         let t = Instant::now();
-        match store.get_or_prefill(model, tokens) {
+        let hit = {
+            let tokens = &sessions[owner].as_ref().unwrap().sample().docs[dj];
+            store.get_or_prefill(model, tokens)
+        };
+        match hit {
             // already resident: free
             Ok((_, TierHit::Resident)) => continue,
             // host-tier hit — but the lookup may have blocked on
@@ -267,9 +362,9 @@ fn serve_batch(model: &Model, store: &mut EngineDocCache,
                 for &si in &live {
                     sessions[si] = None;
                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let (req, reply) = &items[si];
+                    let (id, _, reply) = &items[si];
                     let _ = reply.send(ServeEvent::Done(error_response(
-                        req.id, format!("doc prefill failed: {e:#}"))));
+                        *id, format!("doc prefill failed: {e:#}"))));
                 }
                 continue;
             }
@@ -296,70 +391,132 @@ fn serve_batch(model: &Model, store: &mut EngineDocCache,
         })();
         if let Err(e) = staged {
             metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let (req, reply) = &items[i];
+            let (id, _, reply) = &items[i];
             let _ = reply.send(ServeEvent::Done(error_response(
-                req.id, format!("{e:#}"))));
+                *id, format!("{e:#}"))));
             sessions[i] = None;
         }
     }
 
-    // flush per-tier cache counters now — decode below never touches
-    // the doc cache, and responses must not outrun the stats they
-    // describe (metrics report, server wire, bench JSON)
+    // flush per-tier cache counters after every admission wave — decode
+    // never touches the doc cache, and under continuous admission there
+    // is no "end of batch" to flush at, so this is the only point where
+    // the counters stay in lockstep with responses
     metrics.record_cache_tiers(&store.host_stats(),
                                &store.take_stats_delta());
 
-    // --- stage 4: interleaved decode, one token per session per round
-    loop {
-        let mut progressed = false;
-        for i in 0..sessions.len() {
-            if sessions[i].is_none() {
-                continue;
+    // --- survivors join the decode pool --------------------------------
+    for ((id, stream, reply), s) in items.into_iter().zip(sessions) {
+        if let Some(session) = s {
+            metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
+            active.push(Active { id, stream, reply, session });
+        }
+    }
+}
+
+/// One fused decode round over the pool: every session emits at most
+/// one token (round-robin in pool order), all requested forward passes
+/// run as one [`Model::decode_batch`] dispatch, and finished or failed
+/// sessions are retired — after the round's token emissions, so a
+/// round's `Done` events never precede its tokens.
+fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
+                active: &mut Vec<Active<'_>>) {
+    // --- emit: at most one token per session ---------------------------
+    let mut pending: Vec<(usize, FusedStep)> = Vec::new();
+    let mut finished: Vec<usize> = Vec::new();
+    let mut dead: Vec<(usize, String)> = Vec::new();
+    for i in 0..active.len() {
+        let Active { id, stream, reply, session } = &mut active[i];
+        let (id, stream) = (*id, *stream);
+        let index = session.answer().len();
+        let mut sink = FnSink(|token: i32| {
+            if stream {
+                let _ = reply.send(ServeEvent::Token { id, index, token });
             }
-            let (req, reply) = &items[i];
-            let step = {
-                let s = sessions[i].as_mut().unwrap();
-                let index = s.answer().len();
-                let mut sink = FnSink(|token: i32| {
-                    if req.stream {
-                        let _ = reply.send(ServeEvent::Token {
-                            id: req.id,
-                            index,
-                            token,
-                        });
-                    }
+        });
+        match session.decode_step_begin(&mut sink) {
+            Ok((_, Some(step))) => pending.push((i, step)),
+            Ok((_, None)) => finished.push(i),
+            Err(e) => dead.push((i, format!("{e:#}"))),
+        }
+    }
+
+    // --- one fused dispatch for every session that wants logits --------
+    let mut reqs: Vec<DecodeReq> = Vec::with_capacity(pending.len());
+    let mut dispatch: Vec<(usize, FusedStep)> =
+        Vec::with_capacity(pending.len());
+    for &(i, step) in &pending {
+        match active[i].session.decode_inputs() {
+            Ok((buffer, kv, kv_valid)) => {
+                reqs.push(DecodeReq {
+                    buffer,
+                    token: step.token,
+                    pos: step.pos,
+                    slot: step.slot as i32,
+                    kv,
+                    kv_valid,
                 });
-                s.decode_step(model, &mut sink)
-            };
-            match step {
-                Ok(Some(_)) => progressed = true,
-                Ok(None) => {
-                    let out = sessions[i].take().unwrap().finish();
-                    metrics.record_completion(
-                        out.stats.ttft_ms,
-                        out.stats.decode_ms,
-                        out.answer.len(),
-                        store.stats().current_bytes,
-                    );
-                    metrics.record_stage_times(out.stats.plan_ms,
-                                               out.stats.doc_prefill_ms);
-                    let _ = reply.send(ServeEvent::Done(ServeResponse {
-                        id: req.id,
-                        answer: out.answer,
-                        stats: out.stats,
-                        error: None,
-                    }));
-                }
-                Err(e) => {
-                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = reply.send(ServeEvent::Done(error_response(
-                        req.id, format!("{e:#}"))));
-                    sessions[i] = None;
-                }
+                dispatch.push((i, step));
+            }
+            Err(e) => dead.push((i, format!("{e:#}"))),
+        }
+    }
+    if !dispatch.is_empty() {
+        metrics.fused_rounds.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .fused_round_sessions
+            .fetch_add(dispatch.len() as u64, Ordering::Relaxed);
+        let t = Instant::now();
+        let outs = model.decode_batch(&reqs);
+        drop(reqs);
+        let share =
+            t.elapsed().as_secs_f64() * 1e3 / dispatch.len() as f64;
+        // per-request outcomes: a failing session is retired alone and
+        // never poisons the rest of the round
+        for (&(i, step), out) in dispatch.iter().zip(outs) {
+            let folded = out.and_then(|o| {
+                active[i].session.decode_step_complete(step, o, share)
+            });
+            if let Err(e) = folded {
+                dead.push((i, format!("{e:#}")));
             }
         }
-        if !progressed {
-            break;
+    }
+
+    // --- retire finished/failed sessions (descending index keeps the
+    // remaining pool's round-robin order stable) ------------------------
+    let mut retire: Vec<(usize, Option<String>)> = finished
+        .into_iter()
+        .map(|i| (i, None))
+        .chain(dead.into_iter().map(|(i, e)| (i, Some(e))))
+        .collect();
+    retire.sort_by_key(|r| std::cmp::Reverse(r.0));
+    for (i, err) in retire {
+        let a = active.remove(i);
+        metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+        match err {
+            None => {
+                let out = a.session.finish();
+                metrics.record_completion(
+                    out.stats.ttft_ms,
+                    out.stats.decode_ms,
+                    out.answer.len(),
+                    store.stats().current_bytes,
+                );
+                metrics.record_stage_times(out.stats.plan_ms,
+                                           out.stats.doc_prefill_ms);
+                let _ = a.reply.send(ServeEvent::Done(ServeResponse {
+                    id: a.id,
+                    answer: out.answer,
+                    stats: out.stats,
+                    error: None,
+                }));
+            }
+            Some(msg) => {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = a.reply.send(ServeEvent::Done(error_response(
+                    a.id, msg)));
+            }
         }
     }
 }

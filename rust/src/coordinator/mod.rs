@@ -6,7 +6,11 @@
 //! [`crate::kvcache::HostDocCache`] beneath; [`router::Router`] spreads
 //! requests across engines with cache-aware placement (residency →
 //! affinity → least-loaded), and [`batcher`] shapes the per-engine
-//! queue into bounded batches.
+//! queue into bounded admission waves. Each engine runs a persistent
+//! continuous-batching scheduler: new requests are admitted between
+//! decode rounds (never behind a draining batch) and each round's
+//! forward passes are fused into one amortized dispatch — see
+//! [`engine`] for the lifecycle.
 
 pub mod batcher;
 pub mod engine;

@@ -79,6 +79,7 @@ impl ServeResponse {
             .set("ttft_ms", self.stats.ttft_ms)
             .set("decode_ms", self.stats.decode_ms)
             .set("plan_ms", self.stats.plan_ms)
+            .set("queue_wait_ms", self.stats.queue_wait_ms)
             .set("doc_prefill_ms", self.stats.doc_prefill_ms)
             .set("seq_ratio", self.stats.seq_ratio)
             .set("recompute_ratio", self.stats.recompute_ratio)
@@ -175,6 +176,7 @@ mod tests {
         assert!(s.contains("\"id\":3"));
         assert!(s.contains("\"answer\":[80,81]"));
         assert!(s.contains("plan_ms"));
+        assert!(s.contains("queue_wait_ms"));
         assert!(s.contains("doc_prefill_ms"));
         assert!(!s.contains("error"));
     }

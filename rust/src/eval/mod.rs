@@ -50,6 +50,9 @@ pub struct EvalResult {
     pub mean_decode_ms: f64,
     /// Mean pure-planning stage time (staged serving protocol).
     pub mean_plan_ms: f64,
+    /// Mean engine-queue wait (zero on this blocking path; populated
+    /// when stats come back through the continuous-batching engine).
+    pub mean_queue_wait_ms: f64,
     /// Mean document-prefill stage time (near zero: caches pre-warmed).
     pub mean_doc_prefill_ms: f64,
     pub mean_seq_ratio: f64,
@@ -81,6 +84,7 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
     let mut ttft = 0.0;
     let mut decode = 0.0;
     let mut plan = 0.0;
+    let mut queue_wait = 0.0;
     let mut doc_prefill = 0.0;
     let mut seq = 0.0;
     let mut rec = 0.0;
@@ -100,6 +104,7 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         ttft += out.stats.ttft_ms;
         decode += out.stats.decode_ms;
         plan += out.stats.plan_ms;
+        queue_wait += out.stats.queue_wait_ms;
         doc_prefill += out.stats.doc_prefill_ms;
         seq += out.stats.seq_ratio;
         rec += out.stats.recompute_ratio;
@@ -135,6 +140,7 @@ pub fn evaluate(model: &Model, policy: &dyn ContextPolicy,
         mean_ttft_ms: ttft / nf,
         mean_decode_ms: decode / nf,
         mean_plan_ms: plan / nf,
+        mean_queue_wait_ms: queue_wait / nf,
         mean_doc_prefill_ms: doc_prefill / nf,
         mean_seq_ratio: seq / nf,
         mean_recompute_ratio: rec / nf,

@@ -93,6 +93,9 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
                 args.get::<usize>("requests", 64),
                 args.get::<usize>("unique", 8),
                 args.get::<usize>("engines", 2),
+                &exp::parse_usize_list(
+                    &args.get_str("batch-sizes", "1,4"))?,
+                &exp::parse_f64_list(&args.get_str("rates", "0,32"))?,
             )?;
             Ok(())
         }
@@ -111,8 +114,12 @@ fn print_help() {
          eval --profile P --dataset D --policy NAME|all --samples N\n  \
          serve --profile P --port N --engines N --policy NAME\n  \
                --host-cache-mb N (0 = auto-size) --eviction lru|cost-aware\n  \
+               --max-batch N --batch-window-ms N --max-active N\n  \
+               (continuous batching: admission wave size, gather window,\n  \
+                in-flight session cap)\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
          throughput --policy NAME --requests N --unique N --engines N\n  \
+                    --batch-sizes 1,4 --rates 0,32  (sweep)\n  \
          analyze --profile P           Fig.7 + Fig.8 analytics"
     );
 }
@@ -173,10 +180,19 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let n_engines = args.get::<usize>("engines", 1);
     let policy = args.get_str("policy", "SamKV-fusion");
     let metrics = Arc::new(Metrics::new());
+    let defaults = ServingConfig::default();
+    let max_batch = args.get::<usize>("max-batch", defaults.max_batch);
     let cfg = ServingConfig {
         profile: profile.to_string(),
         port,
-        ..ServingConfig::default()
+        max_batch,
+        batch_window_ms: args
+            .get::<u64>("batch-window-ms", defaults.batch_window_ms),
+        // unless pinned explicitly, grow the pool to fit a full
+        // admission wave so `--max-batch 16` is not silently clamped
+        max_active: args.get::<usize>("max-active",
+                                      defaults.max_active.max(max_batch)),
+        ..defaults
     };
     // the shared host doc-cache tier beneath every engine's residency
     // tier: one prefill per unique document process-wide. Default is
@@ -193,9 +209,11 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     });
     let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
-           policy {policy}, host cache {} ({eviction})",
+           policy {policy}, host cache {} ({eviction}), continuous \
+           batching (wave {}, window {}ms, max active {})",
           if host_mb == 0 { "auto-sized".to_string() }
-          else { format!("{host_mb}MiB") });
+          else { format!("{host_mb}MiB") },
+          cfg.max_batch, cfg.batch_window_ms, cfg.max_active);
     let engines: Vec<Engine> = (0..n_engines)
         .map(|i| {
             Engine::spawn(i, artifacts_dir(), cfg.clone(), policy.clone(),

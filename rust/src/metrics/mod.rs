@@ -91,6 +91,18 @@ pub struct Metrics {
     pub plan: Histogram,
     /// Document-prefill stage (per request, dedup shares included).
     pub doc_prefill: Histogram,
+    /// Queue wait: submit → plan start (observed at admission, so
+    /// requests that later fail still count).
+    pub queue_wait: Histogram,
+    /// Sessions currently in engine decode pools, summed over engines
+    /// (gauge: engines add on admission, subtract on completion).
+    pub active_sessions: AtomicU64,
+    /// Fused decode rounds dispatched (one `Model::decode_batch` call
+    /// per round per engine).
+    pub fused_rounds: AtomicU64,
+    /// Sessions covered by those fused rounds; `fused_round_sessions /
+    /// fused_rounds` is the mean decode batch size actually achieved.
+    pub fused_round_sessions: AtomicU64,
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
@@ -166,6 +178,24 @@ impl Metrics {
             .fetch_add(resident_delta.evictions, Ordering::Relaxed);
     }
 
+    /// Scheduler-facing serving snapshot as a JSON object (server wire
+    /// stats, bench artifacts): latency percentiles, queue wait, and
+    /// the continuous-batching gauges.
+    pub fn serving_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("active_sessions", g(&self.active_sessions))
+            .set("queue_wait_mean_ms", self.queue_wait.mean_ms())
+            .set("queue_wait_p50_ms", self.queue_wait.percentile_ms(0.50))
+            .set("queue_wait_p95_ms", self.queue_wait.percentile_ms(0.95))
+            .set("ttft_p50_ms", self.ttft.percentile_ms(0.50))
+            .set("ttft_p95_ms", self.ttft.percentile_ms(0.95))
+            .set("e2e_p50_ms", self.e2e.percentile_ms(0.50))
+            .set("e2e_p95_ms", self.e2e.percentile_ms(0.95))
+            .set("fused_rounds", g(&self.fused_rounds))
+            .set("fused_round_sessions", g(&self.fused_round_sessions))
+    }
+
     /// Per-tier cache counters as a JSON object (server wire stats,
     /// bench artifacts).
     pub fn cache_tiers_json(&self) -> Value {
@@ -209,6 +239,8 @@ impl Metrics {
              doc_prefills={} \
              ttft(mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms) \
              plan(mean={:.2}ms) doc_prefill(mean={:.1}ms) \
+             queue_wait(mean={:.1}ms p95={:.1}ms) active={} \
+             fused(rounds={} sessions={}) \
              e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s \
              host(hits={} misses={} publishes={} evictions={} bytes={}) \
              resident(hits={} misses={} evictions={})",
@@ -223,6 +255,11 @@ impl Metrics {
             self.ttft.percentile_ms(0.99),
             self.plan.mean_ms(),
             self.doc_prefill.mean_ms(),
+            self.queue_wait.mean_ms(),
+            self.queue_wait.percentile_ms(0.95),
+            self.active_sessions.load(Ordering::Relaxed),
+            self.fused_rounds.load(Ordering::Relaxed),
+            self.fused_round_sessions.load(Ordering::Relaxed),
             self.e2e.mean_ms(),
             self.e2e.percentile_ms(0.95),
             self.throughput_rps(),
@@ -301,6 +338,30 @@ mod tests {
         let j = m.cache_tiers_json().to_string();
         assert!(j.contains("\"host\"") && j.contains("\"resident\""), "{j}");
         assert!(m.report().contains("host(hits=5"), "{}", m.report());
+    }
+
+    #[test]
+    fn serving_snapshot_reports_scheduler_gauges() {
+        let m = Metrics::new();
+        m.queue_wait.observe_ms(4.0);
+        m.active_sessions.fetch_add(3, Ordering::Relaxed);
+        m.fused_rounds.fetch_add(2, Ordering::Relaxed);
+        m.fused_round_sessions.fetch_add(5, Ordering::Relaxed);
+        m.record_completion(10.0, 5.0, 3, 0);
+        let j = m.serving_json().to_string();
+        for field in [
+            "active_sessions", "queue_wait_mean_ms", "queue_wait_p50_ms",
+            "queue_wait_p95_ms", "ttft_p50_ms", "ttft_p95_ms",
+            "e2e_p50_ms", "e2e_p95_ms", "fused_rounds",
+            "fused_round_sessions",
+        ] {
+            assert!(j.contains(&format!("\"{field}\"")), "{field}: {j}");
+        }
+        assert!(j.contains("\"active_sessions\":3"), "{j}");
+        assert!(j.contains("\"fused_rounds\":2"), "{j}");
+        let r = m.report();
+        assert!(r.contains("active=3"), "{r}");
+        assert!(r.contains("fused(rounds=2 sessions=5)"), "{r}");
     }
 
     #[test]

@@ -45,6 +45,19 @@ pub struct DecodeOut {
     pub v_new: Tensor,
 }
 
+/// One session's share of a fused decode round (see
+/// [`Model::decode_batch`]): the same arguments as [`Model::decode`],
+/// borrowing the session's assembled KV buffer.
+#[derive(Debug)]
+pub struct DecodeReq<'a> {
+    pub buffer: Buffer,
+    pub token: i32,
+    pub pos: i32,
+    pub slot: i32,
+    pub kv: &'a Tensor,
+    pub kv_valid: &'a [f32],
+}
+
 /// Which decode/recompute buffer geometry a call targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Buffer {
@@ -209,32 +222,57 @@ impl Model {
     /// in `slot` (the caller mirrors it into its host buffer).
     pub fn decode(&self, buffer: Buffer, token: i32, pos: i32, slot: i32,
                   kv: &Tensor, kv_valid: &[f32]) -> Result<DecodeOut> {
-        let entry = match buffer {
-            Buffer::Sparse => "decode_sparse",
-            Buffer::Full => "decode_full",
-        };
-        // hot path: borrow the KV buffer; build literals directly
-        let lits = vec![
-            xla::Literal::scalar(token),
-            xla::Literal::scalar(pos),
-            xla::Literal::scalar(slot),
-            crate::runtime::tensor_to_literal(kv)?,
-            crate::runtime::tensor_to_literal(
-                &Tensor::new(vec![kv_valid.len()], kv_valid.to_vec())?)?,
-        ];
-        let mut refs: Vec<&xla::Literal> =
+        let req = DecodeReq { buffer, token, pos, slot, kv, kv_valid };
+        self.decode_batch(std::slice::from_ref(&req))
+            .pop()
+            .expect("one decode result")
+    }
+
+    /// Fused decode round: one decode step for every request, dispatched
+    /// in a single amortized loop — the weight argument prefix is
+    /// assembled once per round instead of once per token (what
+    /// per-call [`Model::decode`] used to pay), while each request's
+    /// own literals (including its large KV-buffer copy) are built
+    /// just-in-time so only one session's KV literal is alive at a
+    /// time. Outcomes are returned in request order, one `Result` per
+    /// request: a failing session never poisons the rest of the round.
+    pub fn decode_batch(&self, reqs: &[DecodeReq])
+                        -> Vec<Result<DecodeOut>> {
+        let weight_refs: Vec<&xla::Literal> =
             self.weight_lits.iter().collect();
-        refs.extend(lits.iter());
-        let mut outs = self
-            .runtime
-            .execute_literals(&self.name, entry, &refs)?
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<Vec<_>>>()?;
-        let v_new = outs.pop().unwrap();
-        let k_new = outs.pop().unwrap();
-        let logits = outs.pop().unwrap().into_data();
-        Ok(DecodeOut { logits, k_new, v_new })
+        reqs.iter()
+            .map(|r| {
+                let entry = match r.buffer {
+                    Buffer::Sparse => "decode_sparse",
+                    Buffer::Full => "decode_full",
+                };
+                // hot path: borrow the KV buffer; build literals directly
+                let lits = [
+                    xla::Literal::scalar(r.token),
+                    xla::Literal::scalar(r.pos),
+                    xla::Literal::scalar(r.slot),
+                    crate::runtime::tensor_to_literal(r.kv)?,
+                    crate::runtime::tensor_to_literal(&Tensor::new(
+                        vec![r.kv_valid.len()],
+                        r.kv_valid.to_vec(),
+                    )?)?,
+                ];
+                let mut refs: Vec<&xla::Literal> =
+                    Vec::with_capacity(weight_refs.len() + lits.len());
+                refs.extend_from_slice(&weight_refs);
+                refs.extend(lits.iter());
+                let mut outs = self
+                    .runtime
+                    .execute_literals(&self.name, entry, &refs)?
+                    .iter()
+                    .map(literal_to_tensor)
+                    .collect::<Result<Vec<_>>>()?;
+                let v_new = outs.pop().unwrap();
+                let k_new = outs.pop().unwrap();
+                let logits = outs.pop().unwrap().into_data();
+                Ok(DecodeOut { logits, k_new, v_new })
+            })
+            .collect()
     }
 
     /// Offloaded block scoring (L1 Pallas kernel; weight-free artifact).

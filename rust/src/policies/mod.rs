@@ -34,7 +34,7 @@ pub use cacheblend::CacheBlendPolicy;
 pub use epic::EpicPolicy;
 pub use multi_infllm::MultiInfLlmPolicy;
 pub use pipeline::{
-    serve_blocking, CollectSink, FnSink, NullSink, PlannedSpan,
+    serve_blocking, CollectSink, FnSink, FusedStep, NullSink, PlannedSpan,
     ReadyContext, ServePlan, ServeSession, SharedDoc, Stage, TokenSink,
 };
 pub use recompute::RecomputePolicy;
@@ -61,6 +61,10 @@ pub struct RunStats {
     pub decode_ms: f64,
     /// Time spent in the pure planning stage.
     pub plan_ms: f64,
+    /// Time the request waited in the engine queue before planning
+    /// started (submit → plan start). Zero on the blocking/eval path,
+    /// where there is no queue.
+    pub queue_wait_ms: f64,
     /// Time spent prefilling this request's document caches (zero when
     /// fully warm), including this request's share of batch-deduped
     /// shared prefills.

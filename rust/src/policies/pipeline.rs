@@ -39,7 +39,25 @@
 //!    checked in one place and no decode step ever runs whose logits
 //!    would be discarded. [`ServeSession::finish`] then yields the
 //!    final [`super::PolicyOutput`] with per-stage timings
-//!    (`plan_ms`, `doc_prefill_ms` split out of `ttft_ms`).
+//!    (`plan_ms`, `doc_prefill_ms`, `queue_wait_ms` split out of
+//!    `ttft_ms`).
+//!
+//! # Fused decode rounds
+//!
+//! `decode_step` is also available split in two halves so an engine
+//! can run one fused model dispatch per round over many sessions
+//! (see [`crate::model::Model::decode_batch`]):
+//! [`ServeSession::decode_step_begin`] consumes the pending logits,
+//! emits at most one token through the sink, and — when the session
+//! wants another token — reserves its KV slot and returns a
+//! [`FusedStep`] describing the forward pass it needs;
+//! [`ServeSession::decode_step_complete`] then accepts the externally
+//! computed [`DecodeOut`] and folds it back into the session (KV
+//! mirror, next logits, timing), so all session state and timing
+//! accounting stays here regardless of who ran the model.
+//! `decode_step` itself is implemented over the same two halves with a
+//! single-request dispatch, so the fused and per-session paths cannot
+//! drift.
 //!
 //! # `TokenSink` contract
 //!
@@ -69,7 +87,8 @@ use crate::kvcache::store::doc_hash;
 use crate::kvcache::{
     AssembledContext, DocEntry, EngineDocCache, PinGuard, SlotKind,
 };
-use crate::model::{Buffer, Model};
+use crate::model::{Buffer, DecodeOut, Model};
+use crate::tensor::Tensor;
 use crate::tokenizer as tok;
 use crate::workload::Sample;
 
@@ -230,12 +249,24 @@ pub enum Stage {
     Done,
 }
 
+/// The forward pass one session needs from a fused decode round: the
+/// just-emitted token, its global position, and the KV slot reserved
+/// for it by [`ServeSession::decode_step_begin`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusedStep {
+    pub token: i32,
+    pub pos: i32,
+    pub slot: usize,
+}
+
 /// State machine serving one request through the staged protocol.
-/// Generic over the policy reference so it works both with concrete
+/// Owns its [`Sample`] (so a persistent scheduler can keep sessions
+/// alive across decode rounds after the originating request is gone);
+/// generic over the policy reference so it works both with concrete
 /// policies and `&dyn ContextPolicy` (the engine's case).
 pub struct ServeSession<'a, P: ContextPolicy + ?Sized> {
     policy: &'a P,
-    sample: &'a Sample,
+    sample: Sample,
     cfg: ProfileConfig,
     plan: ServePlan,
     stage: Stage,
@@ -248,16 +279,17 @@ pub struct ServeSession<'a, P: ContextPolicy + ?Sized> {
     answer: Vec<i32>,
     plan_ms: f64,
     doc_prefill_ms: f64,
+    queue_wait_ms: f64,
     ttft_ms: f64,
     decode_ms: f64,
 }
 
 impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
     /// Stage 1: run the policy's pure plan.
-    pub fn new(policy: &'a P, cfg: &ProfileConfig, sample: &'a Sample)
+    pub fn new(policy: &'a P, cfg: &ProfileConfig, sample: Sample)
                -> ServeSession<'a, P> {
         let t = Instant::now();
-        let plan = policy.plan(cfg, sample);
+        let plan = policy.plan(cfg, &sample);
         let plan_ms = t.elapsed().as_secs_f64() * 1e3;
         // a policy that never touches the doc cache is cold by definition
         let warm = plan.needs_doc_cache;
@@ -274,6 +306,7 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
             answer: Vec::new(),
             plan_ms,
             doc_prefill_ms: 0.0,
+            queue_wait_ms: 0.0,
             ttft_ms: 0.0,
             decode_ms: 0.0,
         }
@@ -281,6 +314,17 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
 
     pub fn plan(&self) -> &ServePlan {
         &self.plan
+    }
+
+    /// The request this session serves.
+    pub fn sample(&self) -> &Sample {
+        &self.sample
+    }
+
+    /// Record how long the request waited in the engine queue before
+    /// planning started (reported in [`super::RunStats`]).
+    pub fn set_queue_wait(&mut self, ms: f64) {
+        self.queue_wait_ms = ms;
     }
 
     pub fn stage(&self) -> Stage {
@@ -335,7 +379,7 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
             bail!("assemble called in stage {:?}", self.stage);
         }
         let t = Instant::now();
-        let ready = self.policy.assemble(model, &self.docs, self.sample)?;
+        let ready = self.policy.assemble(model, &self.docs, &self.sample)?;
         self.ttft_ms += t.elapsed().as_secs_f64() * 1e3;
         self.ready = Some(ready);
         self.stage = Stage::Assembled;
@@ -365,6 +409,10 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
     /// `None` once the session is done (EOS or `answer_max` reached —
     /// the single bound check; no decode step runs whose logits would
     /// be discarded). Calling after completion keeps returning `None`.
+    ///
+    /// Implemented over the fused-round halves with a single-request
+    /// dispatch, so this path and an engine's
+    /// [`Model::decode_batch`]-driven rounds cannot diverge.
     pub fn decode_step(&mut self, model: &Model, sink: &mut dyn TokenSink)
                        -> Result<Option<i32>> {
         match self.stage {
@@ -373,42 +421,110 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
             Stage::Done => return Ok(None),
             s => bail!("decode_step called in stage {s:?}"),
         }
+        let (token, step) = self.decode_step_begin(sink)?;
+        if let Some(step) = step {
+            let t = Instant::now();
+            let out = {
+                let ready = self.ready.as_ref().expect("attended");
+                model.decode(ready.buffer, step.token, step.pos,
+                             step.slot as i32, &ready.ctx.kv,
+                             &ready.ctx.valid)?
+            };
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            self.decode_step_complete(step, out, ms)?;
+        }
+        Ok(token)
+    }
+
+    /// Attribute decode-loop host time: TTFT while the first token has
+    /// not yet been emitted, decode time after (single place, so the
+    /// EOS / bound / emit paths cannot drift apart).
+    fn account_decode_time(&mut self, ms: f64, pre_first_token: bool) {
+        if pre_first_token {
+            self.ttft_ms += ms;
+        } else {
+            self.decode_ms += ms;
+        }
+    }
+
+    /// Emit half of a fused decode round: consume the pending logits
+    /// and emit at most one token (identical greedy/EOS/bound semantics
+    /// to [`Self::decode_step`]). When the session wants another token,
+    /// its KV slot is reserved here and the returned [`FusedStep`]
+    /// describes the forward pass the caller must run — typically one
+    /// [`Model::decode_batch`] dispatch covering every active session —
+    /// before handing the output back via [`Self::decode_step_complete`].
+    /// Returns `(emitted token, wanted forward pass)`; `(None, None)`
+    /// means the session is done. Requires the session to be attended
+    /// (the engine attends at admission).
+    pub fn decode_step_begin(&mut self, sink: &mut dyn TokenSink)
+                             -> Result<(Option<i32>, Option<FusedStep>)> {
+        match self.stage {
+            Stage::Attended => {}
+            Stage::Done => return Ok((None, None)),
+            s => bail!("decode_step_begin called in stage {s:?}"),
+        }
         let t = Instant::now();
         let ready = self.ready.as_mut().expect("attended");
         let cur = Model::argmax(ready.logits.as_ref().expect("attended"));
         if cur == tok::EOS || self.answer.len() >= self.cfg.answer_max {
             self.stage = Stage::Done;
             let ms = t.elapsed().as_secs_f64() * 1e3;
-            if self.answer.is_empty() {
-                self.ttft_ms += ms; // never emitted: still pre-first-token
-            } else {
-                self.decode_ms += ms;
-            }
-            return Ok(None);
+            // never emitted: still pre-first-token
+            let pre_first = self.answer.is_empty();
+            self.account_decode_time(ms, pre_first);
+            return Ok((None, None));
         }
         let first = self.answer.is_empty();
         self.answer.push(cur);
         sink.on_token(cur);
-        // TTFT ends at the first emission; the forward pass computing
-        // the NEXT token's logits below is decode time
-        let emit_ms = t.elapsed().as_secs_f64() * 1e3;
-        if first {
-            self.ttft_ms += emit_ms;
-        } else {
-            self.decode_ms += emit_ms;
-        }
-        if self.answer.len() < self.cfg.answer_max {
-            // more tokens wanted: compute the next logits now
-            let ts = Instant::now();
-            let out = common::step(model, &mut ready.ctx, ready.buffer, cur,
-                                   ready.next_pos)?;
-            ready.logits = Some(out);
-            ready.next_pos += 1;
-            self.decode_ms += ts.elapsed().as_secs_f64() * 1e3;
-        } else {
+        if self.answer.len() >= self.cfg.answer_max {
+            // bound reached: no further logits wanted
             self.stage = Stage::Done;
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            self.account_decode_time(ms, first);
+            return Ok((Some(cur), None));
         }
-        Ok(Some(cur))
+        // reserve the token's KV slot now so the caller can batch the
+        // forward pass across sessions
+        let pos = ready.next_pos;
+        let slot = ready.ctx.push_token(cur, pos)?;
+        ready.next_pos += 1;
+        // TTFT ends at the first emission; the forward pass computing
+        // the NEXT token's logits is decode time
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        self.account_decode_time(ms, first);
+        Ok((Some(cur), Some(FusedStep { token: cur, pos, slot })))
+    }
+
+    /// Completion half of a fused decode round: fold the externally
+    /// computed forward pass for the [`FusedStep`] returned by
+    /// [`Self::decode_step_begin`] back into the session — mirror the
+    /// token's KV into the reserved slot, stage the logits for the next
+    /// round, and account `dispatch_share_ms` (this session's share of
+    /// the fused dispatch wall time) as decode time.
+    pub fn decode_step_complete(&mut self, step: FusedStep, out: DecodeOut,
+                                dispatch_share_ms: f64) -> Result<()> {
+        if self.stage != Stage::Attended {
+            bail!("decode_step_complete called in stage {:?}", self.stage);
+        }
+        let t = Instant::now();
+        let ready = self.ready.as_mut().expect("attended");
+        ready.ctx.write_token_kv(step.slot, &out.k_new, &out.v_new);
+        ready.logits = Some(out.logits);
+        self.decode_ms +=
+            dispatch_share_ms + t.elapsed().as_secs_f64() * 1e3;
+        Ok(())
+    }
+
+    /// The assembled buffer a fused dispatch reads for this session
+    /// (valid from assemble onward).
+    pub fn decode_inputs(&self) -> Result<(Buffer, &Tensor, &[f32])> {
+        let ready = self
+            .ready
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("decode_inputs before assemble"))?;
+        Ok((ready.buffer, &ready.ctx.kv, &ready.ctx.valid))
     }
 
     /// Collapse the session into the legacy output shape. Valid at any
@@ -428,6 +544,7 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
                 kv_bytes,
                 cache_warm: self.warm,
                 plan_ms: self.plan_ms,
+                queue_wait_ms: self.queue_wait_ms,
                 doc_prefill_ms: self.doc_prefill_ms,
             },
         }
@@ -439,7 +556,8 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
 pub fn serve_blocking<P: ContextPolicy + ?Sized>(
     policy: &P, model: &Model, store: &mut EngineDocCache,
     sample: &Sample) -> Result<PolicyOutput> {
-    let mut session = ServeSession::new(policy, &model.cfg, sample);
+    let mut session =
+        ServeSession::new(policy, &model.cfg, sample.clone());
     session.prefill_docs(model, store)?;
     session.assemble(model)?;
     session.attend(model)?;

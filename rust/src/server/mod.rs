@@ -10,7 +10,9 @@
 //! (SSE-style incremental output) before the final response line; the
 //! terminal line is the one carrying `answer` (or `error`).
 //! `{"cmd":"metrics"}` returns the metrics report, per-engine loads,
-//! and the per-tier document-cache counters
+//! the continuous-batching serving snapshot (`{"serving":{...}}` —
+//! queue-wait/TTFT/e2e p50+p95, active-session count, fused decode
+//! round counters), and the per-tier document-cache counters
 //! (`{"cache":{"host":{...},"resident":{...}}}`);
 //! `{"cmd":"shutdown"}` stops the listener.
 
@@ -122,6 +124,7 @@ fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
         return match cmd {
             "metrics" => Ok(Value::obj()
                 .set("report", metrics.report())
+                .set("serving", metrics.serving_json())
                 .set("cache", metrics.cache_tiers_json())
                 .set("loads",
                      Value::Arr(router

@@ -40,7 +40,7 @@ fn staged_is_token_identical_to_run_for_every_policy() {
         // explicit staged path with streaming
         let mut store_b = EngineDocCache::unbounded();
         let mut session =
-            ServeSession::new(policy.as_ref(), &model.cfg, sample);
+            ServeSession::new(policy.as_ref(), &model.cfg, sample.clone());
         assert_eq!(session.stage(), Stage::Planned);
         session.prefill_docs(&model, &mut store_b).unwrap();
         session.assemble(&model).unwrap();
@@ -150,7 +150,7 @@ fn stage_order_is_enforced() {
     let sample = &ds.samples[0];
     let policies = all_policies();
     let policy = policies[1].as_ref(); // Reuse
-    let mut session = ServeSession::new(policy, &model.cfg, sample);
+    let mut session = ServeSession::new(policy, &model.cfg, sample.clone());
     // assemble before prefill_docs must fail, not misbehave
     assert!(session.assemble(&model).is_err());
     assert!(session.attend(&model).is_err());
