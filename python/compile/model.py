@@ -15,11 +15,14 @@ can feed weights positionally without a pytree codec:
     params[1 + 8*l + 7]       w2         [F, D]
     params[1 + 8*L]           lnf_g      [D]
 
-Six AOT entry points (static shapes fixed by a ``taskspec.Profile``):
+AOT entry points (static shapes fixed by a ``taskspec.Profile``):
 ``prefill_doc``, ``prefill_full``, ``query_embed``, ``recompute`` (sparse
 buffer), ``recompute_full`` (CacheBlend/EPIC path), ``decode_step``
-(Pallas hot path), plus ``score_blocks`` wrapping the L1 block-score
-kernel. KV caches travel as ``[L, 2, H, S, Dh]`` tensors (axis 1 = K/V).
+(Pallas hot path, lowered per buffer as ``decode_sparse``/``decode_full``
+plus the lane-padded ``decode_{sparse,full}_batched`` multi-sequence
+variants — one XLA execution per fused serving round), plus
+``score_blocks`` wrapping the L1 block-score kernel. KV caches travel as
+``[L, 2, H, S, Dh]`` tensors (axis 1 = K/V).
 
 All attention masking is *position-based*: a query at global position p
 attends keys with position <= p and valid == 1. Keys are stored
@@ -294,6 +297,32 @@ def decode_step(cfg: T.Profile, params, token, pos, slot, kv, kv_valid):
     return (logits, jnp.stack(k_news), jnp.stack(v_news))
 
 
+def decode_step_batched(cfg: T.Profile, params, tokens, pos, slot, kv,
+                        kv_valid, live):
+    """Lane-padded multi-sequence decode: one XLA execution per fused round.
+
+    tokens/pos/slot [B] i32, kv [B,L,2,H,S,Dh], kv_valid [B,S] f32,
+    live [B] f32 (1 = lane occupied, 0 = padding) ->
+      logits [B,V], k_new [B,L,H,Dh], v_new [B,L,H,Dh]
+
+    Lanes are *unrolled* (not vmapped), so each lane lowers to exactly
+    the per-lane ops of ``decode_step`` — batched and scalar decode keep
+    bitwise-identical per-lane arithmetic, which the rust token-identity
+    parity tests rely on. Dead lanes still run on their zero padding
+    (harmless: ``decode_step`` forces the written slot valid, so softmax
+    never sees an empty row) and their outputs are zeroed via ``live``.
+    """
+    b = tokens.shape[0]
+    logits, k_news, v_news = [], [], []
+    for i in range(b):
+        lg, kn, vn = decode_step(cfg, params, tokens[i], pos[i], slot[i],
+                                 kv[i], kv_valid[i])
+        logits.append(lg * live[i])
+        k_news.append(kn * live[i])
+        v_news.append(vn * live[i])
+    return (jnp.stack(logits), jnp.stack(k_news), jnp.stack(v_news))
+
+
 def score_blocks(cfg: T.Profile, q_hat, k_cache, valid):  # weight-free
     """Offloaded selection scoring (L1 block_score kernel).
 
@@ -328,6 +357,7 @@ def entrypoints(cfg: T.Profile):
     L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
     ld, lt, lq, lc = cfg.doc_len, cfg.full_len, T.QUERY_LEN, cfg.comp_len
     ssp = cfg.sparse_len
+    nb = cfg.decode_lanes
     return {
         "prefill_doc": (
             functools.partial(prefill_doc, cfg),
@@ -360,6 +390,16 @@ def entrypoints(cfg: T.Profile):
             functools.partial(decode_step, cfg),
             [_i32(), _i32(), _i32(), _f32(L, 2, H, lt, Dh), _f32(lt)],
             True,
+        ),
+        "decode_sparse_batched": (
+            functools.partial(decode_step_batched, cfg),
+            [_i32(nb), _i32(nb), _i32(nb), _f32(nb, L, 2, H, ssp, Dh),
+             _f32(nb, ssp), _f32(nb)], True,
+        ),
+        "decode_full_batched": (
+            functools.partial(decode_step_batched, cfg),
+            [_i32(nb), _i32(nb), _i32(nb), _f32(nb, L, 2, H, lt, Dh),
+             _f32(nb, lt), _f32(nb)], True,
         ),
         "score_blocks": (
             functools.partial(score_blocks, cfg),

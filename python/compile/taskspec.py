@@ -95,7 +95,8 @@ def is_value(tok: int) -> bool:
 class Profile:
     def __init__(self, name, n_layers, d_model, n_heads, head_dim, d_ff,
                  n_docs, doc_len, block_size, init_blocks, local_blocks,
-                 sel_cap_blocks, stable_layers, rope_theta=10000.0):
+                 sel_cap_blocks, stable_layers, rope_theta=10000.0,
+                 decode_lanes=4):
         self.name = name
         self.n_layers = n_layers
         self.d_model = d_model
@@ -111,6 +112,11 @@ class Profile:
         self.sel_cap_blocks = sel_cap_blocks  # max selected middle blocks, total
         self.stable_layers = stable_layers    # N*: trailing layers used in Eq. 3
         self.rope_theta = rope_theta
+        # lane count of the batched decode entry points
+        # (decode_{sparse,full}_batched): one fused serving round packs up
+        # to this many sequences into a single XLA execution. Lanes are
+        # unrolled at lowering time, so keep this small.
+        self.decode_lanes = decode_lanes
 
     # ---- derived shapes -----------------------------------------------
     @property
@@ -176,6 +182,7 @@ class Profile:
             "sparse_len": self.sparse_len,
             "comp_len": self.comp_len,
             "blocks_per_doc": self.blocks_per_doc,
+            "decode_lanes": self.decode_lanes,
         }
 
 

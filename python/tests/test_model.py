@@ -130,6 +130,55 @@ def test_decode_step_matches_forward_logits(params, sample):
                                atol=2e-4)
 
 
+def test_decode_step_batched_matches_scalar(params, sample):
+    """The lane-padded batched decode is the scalar entry replicated per
+    lane (unrolled, not vmapped): live lanes must reproduce per-lane
+    ``decode_step`` outputs and dead lanes must come back zeroed."""
+    tokens, valid, ans_start = _full_tokens(sample)
+    (kv_full,) = M.prefill_full(P, params, jnp.asarray(tokens),
+                                jnp.asarray(valid))
+    last = ans_start - 1
+    kv_valid = (np.arange(P.full_len) < last).astype(np.float32)
+    prev_valid = (np.arange(P.full_len) < last - 1).astype(np.float32)
+    toks = jnp.asarray([tokens[last], tokens[last - 1], 0], jnp.int32)
+    pos = jnp.asarray([last, last - 1, 0], jnp.int32)
+    slot = jnp.asarray([last, last - 1, 0], jnp.int32)
+    kv_b = jnp.stack([kv_full, kv_full, jnp.zeros_like(kv_full)])
+    valid_b = jnp.stack([jnp.asarray(kv_valid), jnp.asarray(prev_valid),
+                         jnp.zeros(P.full_len, jnp.float32)])
+    live = jnp.asarray([1.0, 1.0, 0.0], jnp.float32)
+    lg_b, kn_b, vn_b = M.decode_step_batched(P, params, toks, pos, slot,
+                                             kv_b, valid_b, live)
+    assert lg_b.shape == (3, P.vocab)
+    assert kn_b.shape == (3, P.n_layers, P.n_heads, P.head_dim)
+    assert vn_b.shape == kn_b.shape
+    for b in range(2):
+        lg, kn, vn = M.decode_step(P, params, toks[b], pos[b], slot[b],
+                                   kv_b[b], valid_b[b])
+        np.testing.assert_allclose(np.asarray(lg_b[b]), np.asarray(lg),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(kn_b[b]), np.asarray(kn),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vn_b[b]), np.asarray(vn),
+                                   rtol=1e-6, atol=1e-6)
+        assert int(jnp.argmax(lg_b[b])) == int(jnp.argmax(lg))
+    # dead lane: outputs masked to zero regardless of padding contents
+    assert np.abs(np.asarray(lg_b[2])).max() == 0.0
+    assert np.abs(np.asarray(kn_b[2])).max() == 0.0
+    assert np.abs(np.asarray(vn_b[2])).max() == 0.0
+
+
+def test_batched_entrypoints_registered():
+    eps = M.entrypoints(P)
+    for name in ("decode_sparse_batched", "decode_full_batched"):
+        assert name in eps
+        _, arg_specs, needs_w = eps[name]
+        assert needs_w
+        assert arg_specs[0].shape == (P.decode_lanes,)
+        assert arg_specs[3].shape[0] == P.decode_lanes
+        assert arg_specs[5].shape == (P.decode_lanes,)  # live mask
+
+
 def test_query_embed_shapes_and_pooling(params, sample):
     L, H, Dh, Lc = P.n_layers, P.n_heads, P.head_dim, P.comp_len
     rng = np.random.default_rng(5)

@@ -17,9 +17,9 @@ fn main() {
         .filter(|a| a != "--bench"));
     let profile = args.get_str("profile", "s4");
     let batch_sizes =
-        exp::parse_usize_list(&args.get_str("batch-sizes", "1,4"))
+        exp::parse_list::<usize>(&args.get_str("batch-sizes", "1,4"))
             .expect("--batch-sizes");
-    let rates = exp::parse_f64_list(&args.get_str("rates", "0,32"))
+    let rates = exp::parse_list::<f64>(&args.get_str("rates", "0,32"))
         .expect("--rates");
     for policy in args.get_str("policies",
                                "SamKV-fusion,CacheBlend,Reuse").split(',') {

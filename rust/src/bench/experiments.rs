@@ -375,26 +375,18 @@ pub fn fig8(model: &Model, n_docs: usize) -> Result<Value> {
 // Serving throughput/latency under load (system experiment)
 // ---------------------------------------------------------------------------
 
-/// Parse a `--batch-sizes`-style CSV flag value (shared by the bench
-/// binary and the CLI subcommand so their defaults cannot drift).
-/// Errors on any unparsable entry rather than silently shrinking the
-/// sweep grid.
-pub fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+/// Parse a `--batch-sizes`/`--rates`-style CSV flag value (shared by
+/// the bench binary and the CLI subcommand so their defaults cannot
+/// drift). Errors on any unparsable entry rather than silently
+/// shrinking the sweep grid.
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
     s.split(',')
         .map(|x| {
             x.trim()
-                .parse::<usize>()
-                .with_context(|| format!("bad list entry `{x}`"))
-        })
-        .collect()
-}
-
-/// Parse a `--rates`-style CSV flag value (errors on bad entries).
-pub fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
-    s.split(',')
-        .map(|x| {
-            x.trim()
-                .parse::<f64>()
+                .parse::<T>()
                 .with_context(|| format!("bad list entry `{x}`"))
         })
         .collect()
@@ -406,15 +398,17 @@ pub fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
 /// synthetic load where document sets recur (`n_unique` distinct sets
 /// across `n_requests`) and requests arrive at `arrival_rps` requests
 /// per second (0 = submit as fast as possible). Returns the per-run
-/// JSON row: tokens/sec, TTFT and queue-wait percentiles, fused decode
-/// round counters, and the per-tier cache behaviour. With `n_engines
-/// >= 2` the host-tier publish counter proves the cross-engine dedup:
-/// each unique document is prefilled exactly once process-wide.
+/// JSON row: tokens/sec, TTFT and queue-wait percentiles, fused and
+/// batched decode-round counters (executions per round, lane
+/// occupancy, admission/decode overlap), and the per-tier cache
+/// behaviour. With `n_engines >= 2` the host-tier publish counter
+/// proves the cross-engine dedup: each unique document is prefilled
+/// exactly once process-wide.
 pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
                       n_unique: usize, n_engines: usize, max_batch: usize,
                       arrival_rps: f64) -> Result<Value> {
     use crate::config::ServingConfig;
-    use crate::coordinator::{recv_done, Engine, Router, ServeRequest};
+    use crate::coordinator::{Engine, Router, ServeEvent, ServeRequest};
     use crate::kvcache::HostDocCache;
     use crate::metrics::Metrics;
     use crate::rng::Rng;
@@ -460,7 +454,64 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         std::time::Duration::ZERO
     };
     let t0 = std::time::Instant::now();
-    let mut inflight = Vec::with_capacity(n_requests);
+    // a collector thread drains completions (and calls `router.done`)
+    // *while* submission continues — and in completion order, not
+    // submission order, so one slow request can't head-of-line block
+    // the load decrements — keeping the router's least-loaded placement
+    // on live in-flight counts instead of totals that only drain after
+    // the last submission
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let collector = {
+        use std::sync::mpsc::TryRecvError;
+        let router = Arc::clone(&router);
+        std::thread::spawn(move || {
+            let mut errors = 0usize;
+            let mut inflight: Vec<(usize, _)> = Vec::new();
+            let mut open = true;
+            loop {
+                while open {
+                    match done_rx.try_recv() {
+                        Ok(x) => inflight.push(x),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => open = false,
+                    }
+                }
+                let mut progressed = false;
+                let mut i = 0;
+                while i < inflight.len() {
+                    // non-streaming requests: the only event is Done
+                    let finished = match inflight[i].1.try_recv() {
+                        Ok(ServeEvent::Done(r)) => {
+                            if r.error.is_some() {
+                                errors += 1;
+                            }
+                            true
+                        }
+                        Ok(ServeEvent::Token { .. }) => false,
+                        Err(TryRecvError::Empty) => false,
+                        Err(TryRecvError::Disconnected) => {
+                            errors += 1;
+                            true
+                        }
+                    };
+                    if finished {
+                        let (engine, _) = inflight.swap_remove(i);
+                        router.done(engine);
+                        progressed = true;
+                    } else {
+                        i += 1;
+                    }
+                }
+                if !open && inflight.is_empty() {
+                    break errors;
+                }
+                if !progressed {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(1));
+                }
+            }
+        })
+    };
     for i in 0..n_requests {
         if i > 0 && !gap.is_zero() {
             std::thread::sleep(gap);
@@ -473,15 +524,10 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
             policy: policy.to_string(),
             stream: false,
         })?;
-        inflight.push((engine, rx));
+        let _ = done_tx.send((engine, rx));
     }
-    let mut errors = 0usize;
-    for (engine, rx) in inflight {
-        if !matches!(recv_done(&rx), Ok(r) if r.error.is_none()) {
-            errors += 1;
-        }
-        router.done(engine);
-    }
+    drop(done_tx);
+    let errors = collector.join().expect("collector thread");
     let wall_s = t0.elapsed().as_secs_f64();
     let rps = n_requests as f64 / wall_s;
     let load = |a: &std::sync::atomic::AtomicU64| {
@@ -519,6 +565,13 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         .set("queue_wait_p95_ms", metrics.queue_wait.percentile_ms(0.95))
         .set("fused_rounds", load(&metrics.fused_rounds))
         .set("fused_round_sessions", load(&metrics.fused_round_sessions))
+        // batched-decode dispatch accounting (one XLA execution per
+        // same-buffer lane chunk) + admission/decode overlap
+        .set("batched_rounds", load(&metrics.batched_rounds))
+        .set("round_executions", load(&metrics.round_executions))
+        .set("executions_per_round", metrics.executions_per_round())
+        .set("lane_occupancy", metrics.lane_occupancy())
+        .set("assemble_overlap_ms", metrics.assemble_overlap_ms())
         .set("doc_prefills", load(&metrics.doc_prefills))
         // per-tier document-cache counters (see Metrics)
         .set("host_hits", load(&metrics.host_hits))

@@ -34,6 +34,12 @@ pub struct ProfileConfig {
     pub sparse_len: usize,
     pub comp_len: usize,
     pub blocks_per_doc: usize,
+    /// Lane count of the batched decode entry points
+    /// (`decode_{sparse,full}_batched`): one fused serving round packs
+    /// up to this many sequences into a single XLA execution. Baked
+    /// into the artifact shapes; defaults to 4 for manifests predating
+    /// the batched entries.
+    pub decode_lanes: usize,
 }
 
 impl ProfileConfig {
@@ -71,6 +77,10 @@ impl ProfileConfig {
             sparse_len: u("sparse_len")?,
             comp_len: u("comp_len")?,
             blocks_per_doc: u("blocks_per_doc")?,
+            decode_lanes: v
+                .get("decode_lanes")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(4),
         })
     }
 
@@ -158,21 +168,21 @@ pub struct ServingConfig {
     pub artifacts_dir: String,
     pub profile: String,
     pub workers: usize,
-    /// Largest admission wave: how many queued requests one gather (the
-    /// initial blocking gather or a mid-round admission poll) may pull
-    /// into the engine at once.
+    /// Largest admission wave: how many queued requests one gather on
+    /// the engine's admission helper thread may pull in at once (also
+    /// bounded by the decode pool's free slots).
     pub max_batch: usize,
     pub queue_capacity: usize,
     pub port: u16,
     /// Gather window (`--batch-window-ms`): once at least one request
-    /// is in hand, how long the engine keeps gathering more before the
-    /// wave is admitted. Used by both the initial blocking gather and
-    /// mid-round admission (where the queue is first polled without
-    /// blocking, so an empty queue never stalls decode).
+    /// is in hand, how long the admission helper keeps gathering more
+    /// before the wave runs its staged admission. Admission lives on
+    /// its own thread, so this window never stalls a decode round.
     pub batch_window_ms: u64,
     /// Cap on concurrently decoding sessions (`--max-active`): the
-    /// persistent scheduler admits new requests between decode rounds
-    /// only while the active pool is below this.
+    /// admission helper reserves decode-pool slots on a counting gate
+    /// before gathering a wave, so the pool never exceeds this; slots
+    /// return as sessions retire.
     pub max_active: usize,
 }
 
@@ -219,6 +229,23 @@ mod tests {
         assert_eq!(p.stable_layer_start(), 1);
         assert_eq!(p.doc_offset(1), 32);
         assert_eq!(p.kv_bytes_per_token(), 2 * 2 * 2 * 24 * 4);
+        // absent from older manifests: defaults to 4 lanes
+        assert_eq!(p.decode_lanes, 4);
+    }
+
+    #[test]
+    fn decode_lanes_parsed_when_present() {
+        let mut s = r#"{"name":"tiny","n_layers":2,"d_model":48,"n_heads":2,
+                "head_dim":24,"d_ff":96,"vocab":256,"n_docs":2,"doc_len":32,
+                "block_size":8,"init_blocks":1,"local_blocks":1,
+                "sel_cap_blocks":2,"stable_layers":1,"rope_theta":10000.0,
+                "query_len":5,"answer_max":4,"ctx_len":64,"full_len":73,
+                "sparse_kv_len":48,"sparse_len":57,"comp_len":32,
+                "blocks_per_doc":4"#
+            .to_string();
+        s.push_str(r#","decode_lanes":8}"#);
+        let p = ProfileConfig::from_json(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(p.decode_lanes, 8);
     }
 
     #[test]

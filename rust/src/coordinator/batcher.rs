@@ -2,14 +2,13 @@
 //! short gather window so the engine amortizes per-wakeup overhead
 //! while bounding added latency.
 //!
-//! Two gather shapes feed the continuous-batching scheduler
-//! ([`crate::coordinator::engine`]): [`next_batch`] blocks for the
-//! first request (the engine is idle, nothing better to do), while
-//! [`poll_batch`] never blocks on an empty queue — it is called
-//! between decode rounds, where stalling would hold up every active
-//! session's next token.
+//! [`next_batch`] blocks for the first request — since admission moved
+//! to its own helper thread ([`crate::coordinator::engine`]), blocking
+//! here never stalls a decode round, so it is the scheduler's only
+//! gather. (The pre-overlap engine also had a non-blocking `poll_batch`
+//! for mid-round admission; it died with that scheduler shape.)
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 /// Pull one batch from `rx`. Blocks for the first item (or returns None
@@ -32,36 +31,6 @@ pub fn next_batch<T>(rx: &Receiver<T>, max_batch: usize,
         }
     }
     Some(batch)
-}
-
-/// Non-blocking gather for mid-round admission. If the queue is empty
-/// the call returns immediately with no items; once a first item is in
-/// hand, more are gathered until `max_batch` or the `window` deadline —
-/// the same coalescing rule as [`next_batch`], without ever paying the
-/// window on an idle queue. The second element of the return value is
-/// `false` once the channel has disconnected (all senders dropped),
-/// which the engine uses to begin draining toward shutdown.
-pub fn poll_batch<T>(rx: &Receiver<T>, max_batch: usize,
-                     window: Duration) -> (Vec<T>, bool) {
-    let first = match rx.try_recv() {
-        Ok(item) => item,
-        Err(TryRecvError::Empty) => return (Vec::new(), true),
-        Err(TryRecvError::Disconnected) => return (Vec::new(), false),
-    };
-    let mut batch = vec![first];
-    let deadline = Instant::now() + window;
-    while batch.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => return (batch, false),
-        }
-    }
-    (batch, true)
 }
 
 #[cfg(test)]
@@ -124,45 +93,6 @@ mod tests {
         assert_eq!(b, vec![7]);
         assert!(t0.elapsed() >= Duration::from_millis(5));
         drop(tx);
-    }
-
-    #[test]
-    fn poll_returns_immediately_on_empty_queue() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        let t0 = Instant::now();
-        let (b, open) = poll_batch(&rx, 8, Duration::from_millis(250));
-        assert!(b.is_empty());
-        assert!(open);
-        // never waited for the window: the queue was empty
-        assert!(t0.elapsed() < Duration::from_millis(200));
-        drop(tx);
-        let (b, open) = poll_batch(&rx, 8, Duration::from_millis(1));
-        assert!(b.is_empty());
-        assert!(!open, "disconnected channel must be reported closed");
-    }
-
-    #[test]
-    fn poll_gathers_queued_items_up_to_max() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..5 {
-            tx.send(i).unwrap();
-        }
-        let (b, open) = poll_batch(&rx, 3, Duration::from_millis(5));
-        assert_eq!(b, vec![0, 1, 2]);
-        assert!(open);
-        let (b, open) = poll_batch(&rx, 8, Duration::from_millis(5));
-        assert_eq!(b, vec![3, 4]);
-        assert!(open);
-    }
-
-    #[test]
-    fn poll_reports_disconnect_with_partial_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(7).unwrap();
-        drop(tx);
-        let (b, open) = poll_batch(&rx, 4, Duration::from_millis(20));
-        assert_eq!(b, vec![7]);
-        assert!(!open);
     }
 
     #[test]

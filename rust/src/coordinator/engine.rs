@@ -1,60 +1,70 @@
-//! Engine: one thread owning a PJRT runtime + model + the engine-local
-//! residency tier of the document cache, serving requests from a
-//! channel. The PJRT client is not `Send`, so everything
-//! device-adjacent lives here; the [`HostDocCache`] beneath the
-//! residency tier is shared across all engines, so a document
-//! prefilled by any engine is a host-tier hit for every other (see
-//! [`crate::kvcache`]).
+//! Engine: one serving instance made of **two** threads — a decode
+//! thread owning the decode-side PJRT runtime, and an admission helper
+//! owning a second runtime plus the engine-local residency tier of the
+//! document cache. The PJRT client is not `Send`, so each thread loads
+//! its own `Runtime`/`Model` over the same artifacts; the
+//! [`HostDocCache`] beneath the admission thread's residency tier is
+//! shared across all engines, so a document prefilled by any engine is
+//! a host-tier hit for every other (see [`crate::kvcache`]).
 //!
-//! # Continuous-batching scheduler
+//! # Overlapped continuous-batching scheduler
 //!
-//! The engine runs a persistent decode scheduler instead of the old
-//! drain-to-empty batch loop. It owns a long-lived pool of [`Active`]
-//! sessions and alternates two phases forever:
+//! The old scheduler ran admission work (plan → doc-prefill dedup →
+//! assemble → attend) *between* decode rounds on the engine thread, so
+//! every newcomer's prefill stalled every active session's next token.
+//! Now the two stages run concurrently:
 //!
-//! 1. **Admission.** When the pool is empty the engine blocks on the
-//!    queue ([`next_batch`]); while sessions are decoding it instead
-//!    polls without blocking ([`poll_batch`]) between rounds, so an
-//!    idle queue never stalls a token. Each admitted *wave* (at most
-//!    `max_batch` requests, bounded by the `max_active` pool cap and
-//!    coalesced within `batch_window_ms`) runs the front of the staged
-//!    protocol ([`crate::policies::pipeline`]): every request is
-//!    planned (pure, model-free), shared document prefills are
-//!    deduplicated across the wave (the multi-context RAG hot path —
-//!    the same retrieved document appearing in many concurrent
-//!    requests is prefilled once and its cost split across sharers),
-//!    then each newcomer assembles and attends and joins the pool.
-//!    Per-request queue wait (submit → plan start) is recorded here,
-//!    and the per-tier cache counters are flushed after every wave so
-//!    they cannot go stale under continuous admission.
+//! 1. **Admission helper thread.** Blocks on the request queue
+//!    ([`next_batch`]) after reserving decode-pool room on a counting
+//!    [`Gate`] (slots freed as sessions retire; the pool cap is
+//!    `max_active`). Each gathered *wave* (at most `max_batch`
+//!    requests, coalesced within `batch_window_ms`) runs the front of
+//!    the staged protocol ([`crate::policies::pipeline`]): every
+//!    request is planned (pure, model-free), shared document prefills
+//!    are deduplicated across the wave (the multi-context RAG hot
+//!    path), then each newcomer assembles and attends **on the helper's
+//!    own model** — request B's assemble overlaps request A's decode
+//!    rounds (measured by `Metrics::assemble_overlap_ms`). Completed
+//!    sessions are handed to the decode thread over a channel; requests
+//!    that fail any stage are answered immediately and their pool slot
+//!    released. Per-request queue wait (submit → plan start) is
+//!    recorded here, and the per-tier cache counters are flushed after
+//!    every wave so they cannot go stale under continuous admission.
 //!
-//! 2. **One fused decode round.** Every active session emits at most
-//!    one token ([`ServeSession::decode_step_begin`], round-robin in
-//!    pool order — arrival order, newcomers at the back), then all
-//!    requested forward passes run as a single amortized dispatch
-//!    ([`Model::decode_batch`], counted in `Metrics::fused_rounds` /
-//!    `fused_round_sessions`), and the outputs are folded back
+//! 2. **Decode thread.** Integrates admitted sessions between rounds
+//!    (blocking only when its pool is empty), then runs one fused
+//!    decode round: every active session emits at most one token
+//!    ([`ServeSession::decode_step_begin`], round-robin in pool order —
+//!    arrival order, newcomers at the back), all requested forward
+//!    passes go through **one [`Model::decode_batch`] call** — which
+//!    packs same-buffer sessions into the lane-padded
+//!    `decode_{sparse,full}_batched` artifacts, a single XLA execution
+//!    per lane chunk (counted by `Metrics::record_decode_round`:
+//!    `fused_rounds`, `round_executions`, `batched_rounds`, lane
+//!    occupancy) — and the outputs are folded back
 //!    ([`ServeSession::decode_step_complete`]). Finished sessions are
 //!    retired at the end of the round — token events of a round are
-//!    always sent before any of its `Done` events.
+//!    always sent before any of its `Done` events — and their pool
+//!    slots released back to the admission gate.
 //!
-//! Because admission happens *between rounds*, a newly arrived request
-//! reaches its first token after at most one round plus its own
-//! prefill/assemble/attend — it no longer waits for the oldest
-//! request's full decode, which is the TTFT win continuous batching
-//! exists for.
+//! Because admission runs beside decode, a newly arrived request
+//! reaches its first token after its own prefill/assemble/attend plus
+//! at most one round's integration wait — it no longer waits for the
+//! oldest request's full decode, and the pool no longer stops decoding
+//! while newcomers prefill.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::ServingConfig;
+use crate::exec::Gate;
 use crate::kvcache::{
     EngineDocCache, HostDocCache, ResidencyHandle, TierHit,
 };
@@ -66,7 +76,7 @@ use crate::policies::pipeline::{
 use crate::policies::{all_policies, ContextPolicy};
 use crate::runtime::Runtime;
 
-use super::batcher::{next_batch, poll_batch};
+use super::batcher::next_batch;
 use super::request::{recv_done, ServeEvent, ServeRequest, ServeResponse};
 
 enum Msg {
@@ -75,7 +85,7 @@ enum Msg {
     Serve(ServeRequest, mpsc::Sender<ServeEvent>, Instant),
 }
 
-/// Cloneable handle for submitting work to one engine thread.
+/// Cloneable handle for submitting work to one engine.
 #[derive(Clone)]
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
@@ -109,12 +119,22 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn the engine thread: loads the runtime + model, compiles the
-    /// serving entry points, then runs the persistent scheduler on the
-    /// queue. The engine's residency tier is constructed over the
-    /// shared `host` tier; `residency` (when routed) advertises
-    /// resident hashes for cache-aware placement. `ready` resolves
-    /// after warmup (Err when initialization failed).
+    /// Spawn the engine: the decode thread loads its runtime + model
+    /// and compiles the decode entry points (including the lane-padded
+    /// batched variants when the artifact set provides them), then
+    /// spawns the admission helper thread, which loads a second
+    /// runtime/model for the admission-side entry points and owns the
+    /// engine's residency tier over the shared `host` tier; `residency`
+    /// (when routed) advertises resident hashes for cache-aware
+    /// placement. `ready` resolves after both threads warmed up (Err
+    /// when either initialization failed).
+    ///
+    /// The two-thread split costs a second runtime + weight copy per
+    /// engine and pays off when admission can overlap decode — i.e.
+    /// `max_active >= 2`. With `--max-active 1` the helper strictly
+    /// serializes behind session retirement; that degraded config keeps
+    /// the double footprint rather than a second scheduler
+    /// implementation.
     pub fn spawn(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                  default_policy: String, metrics: Arc<Metrics>,
                  host: Arc<HostDocCache>,
@@ -143,8 +163,9 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        // close our end of the queue; the thread drains and exits once
-        // every outstanding `EngineHandle` clone is gone too
+        // close our end of the queue; the admission thread drains and
+        // exits once every outstanding `EngineHandle` clone is gone,
+        // then the decode thread drains its pool and joins it
         drop(self.tx.take());
         if let Some(j) = self.join.take() {
             let _ = j.join();
@@ -154,11 +175,22 @@ impl Drop for Engine {
 
 /// One pooled session: the staged state machine plus what is needed to
 /// stream its events after the originating request has been consumed.
-struct Active<'p> {
+/// Crosses from the admission thread to the decode thread, hence the
+/// `'static` policy borrow (the policy table is leaked per engine).
+struct Active {
     id: u64,
     stream: bool,
     reply: mpsc::Sender<ServeEvent>,
-    session: ServeSession<'p, dyn ContextPolicy>,
+    session: ServeSession<'static, dyn ContextPolicy>,
+}
+
+/// One admission wave's survivors, handed from the admission helper to
+/// the decode thread between rounds.
+struct AdmittedWave {
+    ready: Vec<Active>,
+    /// Residency-tier footprint after the wave (the decode thread
+    /// reports it with completions; it no longer owns the store).
+    resident_bytes: usize,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -168,10 +200,141 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                residency: Option<ResidencyHandle>,
                rx: mpsc::Receiver<Msg>,
                ready_tx: mpsc::Sender<Result<()>>) {
+    // --- decode-side init: runtime + model, decode entries only -------
+    let init = (|| -> Result<Model> {
+        let rt = std::rc::Rc::new(Runtime::new(artifacts.clone())?);
+        let model = Model::load(rt, &cfg.profile)?;
+        model.warmup_entries(&[
+            "decode_sparse",
+            "decode_full",
+            "decode_sparse_batched",
+            "decode_full_batched",
+        ])?;
+        Ok(model)
+    })();
+    let model = match init {
+        Ok(m) => m,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    // --- admission helper: own runtime/model + the residency tier -----
+    let gate = Arc::new(Gate::new(cfg.max_active.max(1)));
+    let decoding = Arc::new(AtomicUsize::new(0));
+    let decode_alive = Arc::new(AtomicBool::new(true));
+    let (adm_tx, adm_rx) = mpsc::channel::<AdmittedWave>();
+    let (adm_ready_tx, adm_ready_rx) = mpsc::channel::<Result<()>>();
+    let admission = {
+        let metrics = Arc::clone(&metrics);
+        let (gate, decoding) = (Arc::clone(&gate), Arc::clone(&decoding));
+        let decode_alive = Arc::clone(&decode_alive);
+        thread::Builder::new()
+            .name(format!("admit-{index}"))
+            .spawn(move || {
+                admission_main(artifacts, cfg, default_policy, metrics,
+                               host, residency, rx, adm_tx, gate,
+                               decoding, decode_alive, adm_ready_tx);
+            })
+    };
+    let admission = match admission {
+        Ok(j) => j,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e.into()));
+            return;
+        }
+    };
+    // flips `decode_alive` when this thread exits — including a panic
+    // unwind — so admission's slot wait can never outlive the decode
+    // thread that would have freed the slots
+    struct AliveGuard(Arc<AtomicBool>);
+    impl Drop for AliveGuard {
+        fn drop(&mut self) {
+            self.0.store(false, Ordering::Relaxed);
+        }
+    }
+    let _alive = AliveGuard(Arc::clone(&decode_alive));
+    match adm_ready_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            let _ = ready_tx.send(Err(e));
+            let _ = admission.join();
+            return;
+        }
+        Err(_) => {
+            let _ = ready_tx
+                .send(Err(anyhow::anyhow!("admission init crashed")));
+            let _ = admission.join();
+            return;
+        }
+    }
+    let _ = ready_tx.send(Ok(()));
+    crate::info!("engine-{index} ready (profile {}, {} params)",
+                 model.name, model.n_params);
+
+    // --- the decode scheduler -----------------------------------------
+    let mut active: Vec<Active> = Vec::new();
+    let mut cache_bytes = 0usize;
+    loop {
+        if active.is_empty() {
+            // idle: block for admitted work (or exit once the
+            // admission thread has shut down and the channel drained)
+            match adm_rx.recv() {
+                Ok(w) => {
+                    cache_bytes = w.resident_bytes;
+                    active.extend(w.ready);
+                }
+                Err(_) => break,
+            }
+        }
+        // integrate any further waves without blocking a token
+        while let Ok(w) = adm_rx.try_recv() {
+            cache_bytes = w.resident_bytes;
+            active.extend(w.ready);
+        }
+        decoding.store(active.len(), Ordering::Relaxed);
+        if !active.is_empty() {
+            let retired =
+                decode_round(&model, cache_bytes, &metrics, &mut active);
+            if retired > 0 {
+                gate.release(retired);
+            }
+            decoding.store(active.len(), Ordering::Relaxed);
+        }
+    }
+    let _ = admission.join();
+    crate::info!("engine-{index} shutting down");
+}
+
+/// The admission helper's main loop: reserve decode-pool room, gather a
+/// wave from the request queue, run plan → doc-prefill dedup → assemble
+/// → attend on its own model (overlapping the decode thread's rounds),
+/// and hand the survivors over. Exits when the request queue closes.
+#[allow(clippy::too_many_arguments)]
+fn admission_main(artifacts: PathBuf, cfg: ServingConfig,
+                  default_policy: String, metrics: Arc<Metrics>,
+                  host: Arc<HostDocCache>,
+                  residency: Option<ResidencyHandle>,
+                  rx: mpsc::Receiver<Msg>,
+                  adm_tx: mpsc::Sender<AdmittedWave>, gate: Arc<Gate>,
+                  decoding: Arc<AtomicUsize>,
+                  decode_alive: Arc<AtomicBool>,
+                  ready_tx: mpsc::Sender<Result<()>>) {
     let init = (|| -> Result<(Model, EngineDocCache)> {
         let rt = std::rc::Rc::new(Runtime::new(artifacts)?);
         let model = Model::load(rt, &cfg.profile)?;
-        model.warmup()?;
+        // the attend stage drives scalar decode steps over the query
+        // tokens (common::prefill_query), so the scalar decode entries
+        // belong to the admission warmup set too
+        model.warmup_entries(&[
+            "prefill_doc",
+            "query_embed",
+            "recompute",
+            "decode_sparse",
+            "decode_full",
+            "score_blocks",
+        ])?;
         // residency budget: documents for ~64 concurrent doc-sets
         let budget = 64
             * model.cfg.n_docs
@@ -194,51 +357,81 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
             return;
         }
     };
-    let policies: HashMap<String, Box<dyn ContextPolicy>> = all_policies()
-        .into_iter()
-        .map(|p| (p.name(), p))
-        .collect();
-    crate::info!("engine-{index} ready (profile {}, {} params)",
-                 model.name, model.n_params);
-
-    // --- the persistent scheduler -------------------------------------
+    let policies = policy_table();
     let window = Duration::from_millis(cfg.batch_window_ms);
-    let max_active = cfg.max_active.max(1);
     let wave_cap = cfg.max_batch.max(1);
-    let mut active: Vec<Active> = Vec::new();
-    let mut open = true;
     loop {
-        if active.is_empty() {
-            if !open {
-                break;
+        // wait for decode-pool room before pulling requests off the
+        // queue (slots free as the decode thread retires sessions);
+        // observe-then-take is race-free: only this thread debits. A
+        // dead decode thread frees no slots — bail instead of spinning
+        // forever (and wedging Engine::drop) on a pool that can never
+        // drain.
+        let free = loop {
+            let f = gate.wait_available(Duration::from_millis(50));
+            if f > 0 {
+                break f;
             }
-            // idle: block for work (or exit once the queue closes)
-            match next_batch(&rx, wave_cap.min(max_active), window) {
-                Some(wave) => admit_wave(&model, &mut store, &policies,
-                                         &default_policy, &metrics, wave,
-                                         &mut active),
-                None => open = false,
+            if !decode_alive.load(Ordering::Relaxed) {
+                return;
             }
-        } else if open {
-            // mid-round admission: a non-blocking poll between decode
-            // rounds, capped by the pool's free slots
-            let free = max_active.saturating_sub(active.len());
-            if free > 0 {
-                let (wave, still_open) =
-                    poll_batch(&rx, free.min(wave_cap), window);
-                open = still_open;
-                if !wave.is_empty() {
-                    admit_wave(&model, &mut store, &policies,
-                               &default_policy, &metrics, wave,
-                               &mut active);
-                }
-            }
+        };
+        let Some(wave) = next_batch(&rx, free.min(wave_cap), window)
+        else {
+            break; // request queue closed: shut down
+        };
+        gate.take(wave.len());
+        let t = Instant::now();
+        let busy_before = decoding.load(Ordering::Relaxed) > 0;
+        let (ready, rejected) = admit_wave(&model, &mut store, policies,
+                                           &default_policy, &metrics,
+                                           wave);
+        if rejected > 0 {
+            gate.release(rejected);
         }
-        if !active.is_empty() {
-            decode_round(&model, &store, &metrics, &mut active);
+        // admission time that ran beside in-flight decode rounds — the
+        // overlap the helper thread exists for (endpoint sampling: a
+        // wave counts fully when the decode pool was busy at its start
+        // or end)
+        if busy_before || decoding.load(Ordering::Relaxed) > 0 {
+            metrics
+                .record_assemble_overlap(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let resident_bytes = store.stats().current_bytes;
+        if ready.is_empty() {
+            continue;
+        }
+        if let Err(mpsc::SendError(wave)) =
+            adm_tx.send(AdmittedWave { ready, resident_bytes })
+        {
+            // decode thread gone (abnormal): answer the wave's clients
+            // and return their pool slots instead of stranding both
+            let n = wave.ready.len();
+            for a in wave.ready {
+                metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = a.reply.send(ServeEvent::Done(error_response(
+                    a.id,
+                    "engine decode thread unavailable".to_string(),
+                )));
+            }
+            gate.release(n);
+            break;
         }
     }
-    crate::info!("engine-{index} shutting down");
+}
+
+/// The process-wide policy table. Sessions handed from the admission
+/// thread to the decode thread borrow their policy, so the table must
+/// outlive every engine's threads: policies are stateless, so one
+/// lazily-built `'static` table serves every engine spawn (no per-spawn
+/// leak, no `Arc` threaded through every session).
+fn policy_table() -> &'static HashMap<String, Box<dyn ContextPolicy>> {
+    static TABLE: OnceLock<HashMap<String, Box<dyn ContextPolicy>>> =
+        OnceLock::new();
+    TABLE.get_or_init(|| {
+        all_policies().into_iter().map(|p| (p.name(), p)).collect()
+    })
 }
 
 fn error_response(id: u64, msg: String) -> ServeResponse {
@@ -250,20 +443,22 @@ fn error_response(id: u64, msg: String) -> ServeResponse {
     }
 }
 
-/// Admit one wave of queued requests into the active pool: plan every
-/// request, dedup shared document prefills across the wave, then run
-/// each survivor's prefill/assemble/attend. Requests that fail any
-/// stage are answered with an error immediately; survivors join the
-/// pool (at the back — round-robin order is arrival order).
-fn admit_wave<'p>(model: &Model, store: &mut EngineDocCache,
-                  policies: &'p HashMap<String, Box<dyn ContextPolicy>>,
-                  default_policy: &str, metrics: &Metrics,
-                  wave: Vec<Msg>, active: &mut Vec<Active<'p>>) {
+/// Admit one wave of queued requests: plan every request, dedup shared
+/// document prefills across the wave, then run each survivor's
+/// prefill/assemble/attend. Requests that fail any stage are answered
+/// with an error immediately; survivors are returned for the decode
+/// pool (appended at the back — round-robin order is arrival order).
+/// Returns `(survivors, rejected_count)`.
+fn admit_wave(model: &Model, store: &mut EngineDocCache,
+              policies: &'static HashMap<String, Box<dyn ContextPolicy>>,
+              default_policy: &str, metrics: &Metrics, wave: Vec<Msg>)
+              -> (Vec<Active>, usize) {
     // --- stage 1: plan every request (pure, model-free) ---------------
+    let n = wave.len();
     let mut items: Vec<(u64, bool, mpsc::Sender<ServeEvent>)> =
-        Vec::with_capacity(wave.len());
-    let mut sessions: Vec<Option<ServeSession<'p, dyn ContextPolicy>>> =
-        Vec::with_capacity(wave.len());
+        Vec::with_capacity(n);
+    let mut sessions: Vec<Option<ServeSession<'static, dyn ContextPolicy>>> =
+        Vec::with_capacity(n);
     for msg in wave {
         let Msg::Serve(req, reply, submitted) = msg;
         let ServeRequest { id, sample, policy, stream } = req;
@@ -405,22 +600,28 @@ fn admit_wave<'p>(model: &Model, store: &mut EngineDocCache,
     metrics.record_cache_tiers(&store.host_stats(),
                                &store.take_stats_delta());
 
-    // --- survivors join the decode pool --------------------------------
+    // --- survivors go to the decode pool -------------------------------
+    let mut ready = Vec::with_capacity(sessions.len());
     for ((id, stream, reply), s) in items.into_iter().zip(sessions) {
         if let Some(session) = s {
             metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
-            active.push(Active { id, stream, reply, session });
+            ready.push(Active { id, stream, reply, session });
         }
     }
+    let rejected = n - ready.len();
+    (ready, rejected)
 }
 
 /// One fused decode round over the pool: every session emits at most
 /// one token (round-robin in pool order), all requested forward passes
-/// run as one [`Model::decode_batch`] dispatch, and finished or failed
-/// sessions are retired — after the round's token emissions, so a
-/// round's `Done` events never precede its tokens.
-fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
-                active: &mut Vec<Active<'_>>) {
+/// run as one [`Model::decode_batch`] call — which issues a single
+/// lane-padded XLA execution per same-buffer chunk — and finished or
+/// failed sessions are retired (after the round's token emissions, so a
+/// round's `Done` events never precede its tokens). Returns how many
+/// sessions were retired (their pool slots go back to the admission
+/// gate).
+fn decode_round(model: &Model, cache_bytes: usize, metrics: &Metrics,
+                active: &mut Vec<Active>) -> usize {
     // --- emit: at most one token per session ---------------------------
     let mut pending: Vec<(usize, FusedStep)> = Vec::new();
     let mut finished: Vec<usize> = Vec::new();
@@ -462,18 +663,17 @@ fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
         }
     }
     if !dispatch.is_empty() {
-        metrics.fused_rounds.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .fused_round_sessions
-            .fetch_add(dispatch.len() as u64, Ordering::Relaxed);
         let t = Instant::now();
-        let outs = model.decode_batch(&reqs);
+        let round = model.decode_batch(&reqs);
         drop(reqs);
+        metrics.record_decode_round(dispatch.len() as u64,
+                                    round.executions, round.lanes_live,
+                                    round.lanes_total);
         let share =
             t.elapsed().as_secs_f64() * 1e3 / dispatch.len() as f64;
         // per-request outcomes: a failing session is retired alone and
         // never poisons the rest of the round
-        for (&(i, step), out) in dispatch.iter().zip(outs) {
+        for (&(i, step), out) in dispatch.iter().zip(round.results) {
             let folded = out.and_then(|o| {
                 active[i].session.decode_step_complete(step, o, share)
             });
@@ -491,6 +691,7 @@ fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
         .chain(dead.into_iter().map(|(i, e)| (i, Some(e))))
         .collect();
     retire.sort_by_key(|r| std::cmp::Reverse(r.0));
+    let retired = retire.len();
     for (i, err) in retire {
         let a = active.remove(i);
         metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
@@ -501,7 +702,7 @@ fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
                     out.stats.ttft_ms,
                     out.stats.decode_ms,
                     out.answer.len(),
-                    store.stats().current_bytes,
+                    cache_bytes,
                 );
                 metrics.record_stage_times(out.stats.plan_ms,
                                            out.stats.doc_prefill_ms);
@@ -519,4 +720,5 @@ fn decode_round(model: &Model, store: &EngineDocCache, metrics: &Metrics,
             }
         }
     }
+    retired
 }

@@ -1,16 +1,18 @@
 //! L3 coordinator: the serving control plane.
 //!
-//! PJRT clients are not `Send`, so each [`engine::Engine`] owns its
-//! runtime + model + document-cache residency tier on a dedicated
-//! thread (the vLLM executor-thread pattern), all engines sharing one
+//! PJRT clients are not `Send`, so each [`engine::Engine`] runs a pair
+//! of dedicated threads — a decode thread and an admission helper, each
+//! owning its own runtime/model (the vLLM executor-thread pattern,
+//! split by stage) — all engines sharing one
 //! [`crate::kvcache::HostDocCache`] beneath; [`router::Router`] spreads
 //! requests across engines with cache-aware placement (residency →
 //! affinity → least-loaded), and [`batcher`] shapes the per-engine
 //! queue into bounded admission waves. Each engine runs a persistent
-//! continuous-batching scheduler: new requests are admitted between
-//! decode rounds (never behind a draining batch) and each round's
-//! forward passes are fused into one amortized dispatch — see
-//! [`engine`] for the lifecycle.
+//! continuous-batching scheduler: newcomers plan/prefill/assemble on
+//! the admission thread *while* the decode thread keeps emitting
+//! tokens, and each round's forward passes are packed into the
+//! lane-padded batched decode artifacts — one XLA execution per
+//! same-buffer chunk — see [`engine`] for the lifecycle.
 
 pub mod batcher;
 pub mod engine;

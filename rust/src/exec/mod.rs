@@ -1,10 +1,14 @@
-//! Execution substrate: a fixed-size thread pool + parallel map (no tokio
-//! offline). The serving stack is thread-per-worker with channels; PJRT
-//! executions are blocking calls dispatched onto this pool.
+//! Execution substrate: a fixed-size thread pool, a parallel map, and a
+//! counting slot [`Gate`] (no tokio offline). The serving stack is
+//! thread-per-worker with channels; PJRT executions are blocking calls.
+//! The engine pairs two such threads per instance — a decode thread and
+//! an admission helper (see `coordinator::engine`) — coordinated by a
+//! [`Gate`] over the decode pool's session slots.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -88,6 +92,56 @@ impl<T> Receiver<T> {
     }
 }
 
+/// Counting slot gate between a producer thread that fills a bounded
+/// pool and the consumer that drains it. The engine's admission helper
+/// observes free decode-pool slots ([`Gate::wait_available`]) before
+/// gathering a wave, debits what it admits ([`Gate::take`]), and the
+/// decode thread credits slots back as sessions retire
+/// ([`Gate::release`]). Observe-then-take is race-free with a single
+/// taker: only the taker debits, so the free count can only grow
+/// between its observation and its debit.
+pub struct Gate {
+    slots: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Gate {
+    pub fn new(slots: usize) -> Gate {
+        Gate { slots: Mutex::new(slots), freed: Condvar::new() }
+    }
+
+    /// Currently free slots.
+    pub fn available(&self) -> usize {
+        *self.slots.lock().unwrap()
+    }
+
+    /// Block until at least one slot is free or `timeout` elapses;
+    /// returns the free count observed (0 on timeout).
+    pub fn wait_available(&self, timeout: Duration) -> usize {
+        let g = self.slots.lock().unwrap();
+        let (g, _) = self
+            .freed
+            .wait_timeout_while(g, timeout, |s| *s == 0)
+            .unwrap();
+        *g
+    }
+
+    /// Debit `n` slots the caller observed free (saturating).
+    pub fn take(&self, n: usize) {
+        let mut g = self.slots.lock().unwrap();
+        *g = g.saturating_sub(n);
+    }
+
+    /// Credit `n` slots back and wake waiters.
+    pub fn release(&self, n: usize) {
+        {
+            let mut g = self.slots.lock().unwrap();
+            *g += n;
+        }
+        self.freed.notify_all();
+    }
+}
+
 /// Parallel map with bounded concurrency using scoped threads — used by
 /// the eval harness to fan samples across workers without 'static bounds.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
@@ -152,6 +206,36 @@ mod tests {
         let items: Vec<usize> = (0..50).collect();
         let out = parallel_map(&items, 8, |&x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gate_take_and_release_account() {
+        let g = Gate::new(3);
+        assert_eq!(g.available(), 3);
+        g.take(2);
+        assert_eq!(g.available(), 1);
+        g.take(5); // saturates, never underflows
+        assert_eq!(g.available(), 0);
+        g.release(4);
+        assert_eq!(g.available(), 4);
+    }
+
+    #[test]
+    fn gate_wait_times_out_empty_and_wakes_on_release() {
+        let g = Arc::new(Gate::new(0));
+        assert_eq!(
+            g.wait_available(std::time::Duration::from_millis(10)),
+            0
+        );
+        let waiter = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || {
+                g.wait_available(std::time::Duration::from_secs(5))
+            })
+        };
+        thread::sleep(std::time::Duration::from_millis(20));
+        g.release(2);
+        assert_eq!(waiter.join().unwrap(), 2);
     }
 
     #[test]

@@ -93,9 +93,9 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
                 args.get::<usize>("requests", 64),
                 args.get::<usize>("unique", 8),
                 args.get::<usize>("engines", 2),
-                &exp::parse_usize_list(
+                &exp::parse_list::<usize>(
                     &args.get_str("batch-sizes", "1,4"))?,
-                &exp::parse_f64_list(&args.get_str("rates", "0,32"))?,
+                &exp::parse_list::<f64>(&args.get_str("rates", "0,32"))?,
             )?;
             Ok(())
         }

@@ -103,6 +103,22 @@ pub struct Metrics {
     /// Sessions covered by those fused rounds; `fused_round_sessions /
     /// fused_rounds` is the mean decode batch size actually achieved.
     pub fused_round_sessions: AtomicU64,
+    /// Rounds whose dispatch went through the lane-padded batched
+    /// decode entries (a single XLA execution per same-buffer chunk).
+    pub batched_rounds: AtomicU64,
+    /// Runtime executions issued by fused rounds; `round_executions /
+    /// fused_rounds` is the executions-per-round the batched entries
+    /// exist to drive to 1.
+    pub round_executions: AtomicU64,
+    /// Live lanes dispatched through the batched entries, and the
+    /// total (live + padding) lane capacity of those executions —
+    /// their ratio is the lane occupancy.
+    pub lanes_live: AtomicU64,
+    pub lanes_total: AtomicU64,
+    /// Admission (plan/prefill/assemble/attend) wall time that ran on
+    /// the helper thread while the decode pool was busy — the overlap
+    /// the staged-admission split buys (microseconds).
+    pub assemble_overlap_us: AtomicU64,
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
@@ -154,6 +170,58 @@ impl Metrics {
         self.doc_prefill.observe_ms(doc_prefill_ms);
     }
 
+    /// Record one fused decode round's dispatch accounting (see
+    /// `model::DecodeRound`): how many sessions it covered, how many
+    /// runtime executions it cost, and — when the lane-padded batched
+    /// entries ran — the live/total lane split.
+    pub fn record_decode_round(&self, sessions: u64, executions: u64,
+                               lanes_live: u64, lanes_total: u64) {
+        self.fused_rounds.fetch_add(1, Ordering::Relaxed);
+        self.fused_round_sessions
+            .fetch_add(sessions, Ordering::Relaxed);
+        self.round_executions
+            .fetch_add(executions, Ordering::Relaxed);
+        if lanes_total > 0 {
+            self.batched_rounds.fetch_add(1, Ordering::Relaxed);
+            self.lanes_live.fetch_add(lanes_live, Ordering::Relaxed);
+            self.lanes_total.fetch_add(lanes_total, Ordering::Relaxed);
+        }
+    }
+
+    /// Record admission work that overlapped in-flight decode rounds.
+    pub fn record_assemble_overlap(&self, ms: f64) {
+        self.assemble_overlap_us
+            .fetch_add((ms * 1e3).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Mean runtime executions per fused decode round (1.0 = every
+    /// round was a single XLA execution).
+    pub fn executions_per_round(&self) -> f64 {
+        let rounds = self.fused_rounds.load(Ordering::Relaxed);
+        if rounds == 0 {
+            0.0
+        } else {
+            self.round_executions.load(Ordering::Relaxed) as f64
+                / rounds as f64
+        }
+    }
+
+    /// Live fraction of the batched entries' lane capacity (0 when no
+    /// batched execution ran).
+    pub fn lane_occupancy(&self) -> f64 {
+        let total = self.lanes_total.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.lanes_live.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+
+    /// Total admission time overlapped with decode, in ms.
+    pub fn assemble_overlap_ms(&self) -> f64 {
+        self.assemble_overlap_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
     /// Flush document-cache tier counters after a served batch: the
     /// shared host tier's counters are monotone totals, folded in with
     /// `fetch_max` so concurrent engine flushes can never regress them
@@ -194,6 +262,11 @@ impl Metrics {
             .set("e2e_p95_ms", self.e2e.percentile_ms(0.95))
             .set("fused_rounds", g(&self.fused_rounds))
             .set("fused_round_sessions", g(&self.fused_round_sessions))
+            .set("batched_rounds", g(&self.batched_rounds))
+            .set("round_executions", g(&self.round_executions))
+            .set("executions_per_round", self.executions_per_round())
+            .set("lane_occupancy", self.lane_occupancy())
+            .set("assemble_overlap_ms", self.assemble_overlap_ms())
     }
 
     /// Per-tier cache counters as a JSON object (server wire stats,
@@ -241,6 +314,8 @@ impl Metrics {
              plan(mean={:.2}ms) doc_prefill(mean={:.1}ms) \
              queue_wait(mean={:.1}ms p95={:.1}ms) active={} \
              fused(rounds={} sessions={}) \
+             batched(rounds={} execs/round={:.2} occupancy={:.2}) \
+             assemble_overlap={:.1}ms \
              e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s \
              host(hits={} misses={} publishes={} evictions={} bytes={}) \
              resident(hits={} misses={} evictions={})",
@@ -260,6 +335,10 @@ impl Metrics {
             self.active_sessions.load(Ordering::Relaxed),
             self.fused_rounds.load(Ordering::Relaxed),
             self.fused_round_sessions.load(Ordering::Relaxed),
+            self.batched_rounds.load(Ordering::Relaxed),
+            self.executions_per_round(),
+            self.lane_occupancy(),
+            self.assemble_overlap_ms(),
             self.e2e.mean_ms(),
             self.e2e.percentile_ms(0.95),
             self.throughput_rps(),
@@ -353,7 +432,9 @@ mod tests {
             "active_sessions", "queue_wait_mean_ms", "queue_wait_p50_ms",
             "queue_wait_p95_ms", "ttft_p50_ms", "ttft_p95_ms",
             "e2e_p50_ms", "e2e_p95_ms", "fused_rounds",
-            "fused_round_sessions",
+            "fused_round_sessions", "batched_rounds", "round_executions",
+            "executions_per_round", "lane_occupancy",
+            "assemble_overlap_ms",
         ] {
             assert!(j.contains(&format!("\"{field}\"")), "{field}: {j}");
         }
@@ -362,6 +443,42 @@ mod tests {
         let r = m.report();
         assert!(r.contains("active=3"), "{r}");
         assert!(r.contains("fused(rounds=2 sessions=5)"), "{r}");
+    }
+
+    #[test]
+    fn decode_round_accounting() {
+        let m = Metrics::new();
+        // a 3-session round packed into one 4-lane batched execution
+        m.record_decode_round(3, 1, 3, 4);
+        // a solo round on the scalar path (no batched lanes)
+        m.record_decode_round(1, 1, 0, 0);
+        assert_eq!(m.fused_rounds.load(Ordering::Relaxed), 2);
+        assert_eq!(m.fused_round_sessions.load(Ordering::Relaxed), 4);
+        assert_eq!(m.batched_rounds.load(Ordering::Relaxed), 1);
+        assert_eq!(m.round_executions.load(Ordering::Relaxed), 2);
+        assert!((m.executions_per_round() - 1.0).abs() < 1e-9);
+        assert!((m.lane_occupancy() - 0.75).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("batched(rounds=1"), "{r}");
+    }
+
+    #[test]
+    fn assemble_overlap_accumulates() {
+        let m = Metrics::new();
+        assert_eq!(m.assemble_overlap_ms(), 0.0);
+        m.record_assemble_overlap(1.5);
+        m.record_assemble_overlap(2.25);
+        assert!((m.assemble_overlap_ms() - 3.75).abs() < 1e-3);
+        // negative durations (clock skew) never underflow the counter
+        m.record_assemble_overlap(-1.0);
+        assert!((m.assemble_overlap_ms() - 3.75).abs() < 1e-3);
+    }
+
+    #[test]
+    fn derived_ratios_zero_without_rounds() {
+        let m = Metrics::new();
+        assert_eq!(m.executions_per_round(), 0.0);
+        assert_eq!(m.lane_occupancy(), 0.0);
     }
 
     #[test]

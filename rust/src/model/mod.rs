@@ -1,9 +1,26 @@
 //! Typed wrappers over the AOT entry points of one model variant.
 //!
-//! A [`Model`] owns the device-ready weight literals and exposes the six
+//! A [`Model`] owns the device-ready weight literals and exposes the
 //! serving calls with host-tensor signatures. All heavy compute happens
 //! inside the artifacts; this layer only validates shapes and converts
 //! buffers.
+//!
+//! # Lane-padded batched decode
+//!
+//! The decode hot path has two artifact shapes per buffer geometry: the
+//! scalar entries (`decode_sparse` / `decode_full`, one sequence per
+//! execution) and the lane-padded batched entries
+//! (`decode_sparse_batched` / `decode_full_batched`), which take
+//! `decode_lanes`-stacked token/pos/slot/KV/valid inputs plus a
+//! per-lane `live` mask. [`Model::decode_batch`] packs a fused serving
+//! round into lanes and issues **one** runtime execution per
+//! (buffer-kind, lane-chunk) group — N same-buffer sessions with
+//! `N <= decode_lanes` cost exactly one XLA execution — then scatters
+//! the per-lane outputs back into per-request `Result`s. Per-lane fault
+//! isolation is preserved: a request whose inputs fail validation (or
+//! whose batched chunk fails at execute time, falling back to scalar
+//! dispatch) never poisons its siblings. When the artifact set predates
+//! the batched entries, every request takes the scalar path.
 
 pub mod weights;
 
@@ -58,6 +75,25 @@ pub struct DecodeReq<'a> {
     pub kv_valid: &'a [f32],
 }
 
+/// Outcome of one fused decode round ([`Model::decode_batch`]):
+/// per-request results in request order plus the dispatch accounting
+/// the scheduler metrics consume.
+#[derive(Debug)]
+pub struct DecodeRound {
+    /// One `Result` per request, in request order — a failing request
+    /// never poisons the rest of the round.
+    pub results: Vec<Result<DecodeOut>>,
+    /// Runtime executions issued for the round (scalar dispatches plus
+    /// batched chunk launches, including failed launches whose lanes
+    /// were retried on the scalar path).
+    pub executions: u64,
+    /// Live lanes dispatched through the batched entries.
+    pub lanes_live: u64,
+    /// Total lanes (live + padding) of those batched executions; zero
+    /// when the round ran entirely on the scalar path.
+    pub lanes_total: u64,
+}
+
 /// Which decode/recompute buffer geometry a call targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Buffer {
@@ -107,18 +143,44 @@ impl Model {
         &self.runtime
     }
 
-    /// Pre-compile the entry points used on the serving path.
-    pub fn warmup(&self) -> Result<()> {
-        self.runtime.warmup(
-            &self.name,
-            &[
-                "prefill_doc",
-                "query_embed",
-                "recompute",
-                "decode_sparse",
-                "score_blocks",
-            ],
-        )
+    /// Pre-compile a chosen subset of entry points (the engine splits
+    /// warmup between its decode thread and its admission helper —
+    /// each thread lists exactly the entries it executes).
+    /// Entries the artifact set does not provide are skipped, so
+    /// optional computations (the batched decode variants) can be
+    /// listed unconditionally.
+    pub fn warmup_entries(&self, entries: &[&str]) -> Result<()> {
+        let available: Vec<&str> = entries
+            .iter()
+            .copied()
+            .filter(|e| self.has_entry(e))
+            .collect();
+        self.runtime.warmup(&self.name, &available)
+    }
+
+    /// Whether this model's artifact set provides an entry point.
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.runtime.has_entry(&self.name, entry)
+    }
+
+    /// Slot capacity of a buffer geometry.
+    fn buffer_len(&self, buffer: Buffer) -> usize {
+        match buffer {
+            Buffer::Sparse => self.cfg.sparse_len,
+            Buffer::Full => self.cfg.full_len,
+        }
+    }
+
+    /// Lane count of the batched decode entry for `buffer`, or `None`
+    /// when the artifact set predates the batched entries (or the
+    /// profile was built with fewer than 2 lanes).
+    pub fn batched_decode_lanes(&self, buffer: Buffer) -> Option<usize> {
+        let entry = match buffer {
+            Buffer::Sparse => "decode_sparse_batched",
+            Buffer::Full => "decode_full_batched",
+        };
+        (self.cfg.decode_lanes >= 2 && self.has_entry(entry))
+            .then_some(self.cfg.decode_lanes)
     }
 
     fn exec(&self, entry: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
@@ -220,59 +282,230 @@ impl Model {
 
     /// One decode step over the assembled cache; the token's KV is placed
     /// in `slot` (the caller mirrors it into its host buffer).
+    /// Delegates to [`Self::decode_batch`]; a single request always
+    /// takes the scalar entry (exactly one runtime execution).
     pub fn decode(&self, buffer: Buffer, token: i32, pos: i32, slot: i32,
                   kv: &Tensor, kv_valid: &[f32]) -> Result<DecodeOut> {
         let req = DecodeReq { buffer, token, pos, slot, kv, kv_valid };
         self.decode_batch(std::slice::from_ref(&req))
+            .results
             .pop()
             .expect("one decode result")
     }
 
-    /// Fused decode round: one decode step for every request, dispatched
-    /// in a single amortized loop — the weight argument prefix is
-    /// assembled once per round instead of once per token (what
-    /// per-call [`Model::decode`] used to pay), while each request's
-    /// own literals (including its large KV-buffer copy) are built
-    /// just-in-time so only one session's KV literal is alive at a
-    /// time. Outcomes are returned in request order, one `Result` per
-    /// request: a failing session never poisons the rest of the round.
-    pub fn decode_batch(&self, reqs: &[DecodeReq])
-                        -> Vec<Result<DecodeOut>> {
-        let weight_refs: Vec<&xla::Literal> =
-            self.weight_lits.iter().collect();
-        reqs.iter()
-            .map(|r| {
-                let entry = match r.buffer {
-                    Buffer::Sparse => "decode_sparse",
-                    Buffer::Full => "decode_full",
-                };
-                // hot path: borrow the KV buffer; build literals directly
-                let lits = [
-                    xla::Literal::scalar(r.token),
-                    xla::Literal::scalar(r.pos),
-                    xla::Literal::scalar(r.slot),
-                    crate::runtime::tensor_to_literal(r.kv)?,
-                    crate::runtime::tensor_to_literal(&Tensor::new(
-                        vec![r.kv_valid.len()],
-                        r.kv_valid.to_vec(),
-                    )?)?,
-                ];
-                let mut refs: Vec<&xla::Literal> =
-                    Vec::with_capacity(weight_refs.len() + lits.len());
-                refs.extend_from_slice(&weight_refs);
-                refs.extend(lits.iter());
-                let mut outs = self
-                    .runtime
-                    .execute_literals(&self.name, entry, &refs)?
-                    .iter()
-                    .map(literal_to_tensor)
-                    .collect::<Result<Vec<_>>>()?;
-                let v_new = outs.pop().unwrap();
-                let k_new = outs.pop().unwrap();
-                let logits = outs.pop().unwrap().into_data();
-                Ok(DecodeOut { logits, k_new, v_new })
+    /// One scalar decode dispatch (also the per-lane fallback when a
+    /// batched chunk fails at execute time).
+    fn decode_one(&self, r: &DecodeReq) -> Result<DecodeOut> {
+        let entry = match r.buffer {
+            Buffer::Sparse => "decode_sparse",
+            Buffer::Full => "decode_full",
+        };
+        // hot path: borrow the KV buffer; build literals directly
+        let lits = [
+            xla::Literal::scalar(r.token),
+            xla::Literal::scalar(r.pos),
+            xla::Literal::scalar(r.slot),
+            crate::runtime::tensor_to_literal(r.kv)?,
+            crate::runtime::tensor_to_literal(&Tensor::new(
+                vec![r.kv_valid.len()],
+                r.kv_valid.to_vec(),
+            )?)?,
+        ];
+        let mut refs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weight_lits.len() + lits.len());
+        refs.extend(self.weight_lits.iter());
+        refs.extend(lits.iter());
+        let mut outs = self
+            .runtime
+            .execute_literals(&self.name, entry, &refs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().into_data();
+        Ok(DecodeOut { logits, k_new, v_new })
+    }
+
+    /// One batched chunk: stack up to `lanes` requests (`chunk` indexes
+    /// into `reqs`) into the lane-padded entry and run it as a single
+    /// execution. Outputs are returned in chunk order.
+    fn decode_lanes(&self, buffer: Buffer, lanes: usize, chunk: &[usize],
+                    reqs: &[DecodeReq]) -> Result<Vec<DecodeOut>> {
+        let entry = match buffer {
+            Buffer::Sparse => "decode_sparse_batched",
+            Buffer::Full => "decode_full_batched",
+        };
+        let slots = self.buffer_len(buffer);
+        let (nl, nh, dh) =
+            (self.cfg.n_layers, self.cfg.n_heads, self.cfg.head_dim);
+        let kv_stride = nl * 2 * nh * slots * dh;
+        let mut tokens = vec![0i32; lanes];
+        let mut positions = vec![0i32; lanes];
+        let mut slot_ids = vec![0i32; lanes];
+        // hot path: append live lanes then zero-resize the padding tail,
+        // so live-lane KV bytes are written once (no zero prepass).
+        // The stack-then-literal shape still costs one extra host copy
+        // per live lane versus the scalar path's borrow-to-literal —
+        // the literal API offers no per-lane writes — which the single
+        // XLA launch amortizes across the lanes it replaces.
+        let mut kv = Vec::with_capacity(lanes * kv_stride);
+        let mut valid = Vec::with_capacity(lanes * slots);
+        let mut live = vec![0f32; lanes];
+        for (lane, &i) in chunk.iter().enumerate() {
+            let r = &reqs[i];
+            tokens[lane] = r.token;
+            positions[lane] = r.pos;
+            slot_ids[lane] = r.slot;
+            kv.extend_from_slice(r.kv.data());
+            valid.extend_from_slice(r.kv_valid);
+            live[lane] = 1.0;
+        }
+        kv.resize(lanes * kv_stride, 0.0);
+        valid.resize(lanes * slots, 0.0);
+        let lits = [
+            crate::runtime::itensor_to_literal(
+                &ITensor::from_vec(tokens))?,
+            crate::runtime::itensor_to_literal(
+                &ITensor::from_vec(positions))?,
+            crate::runtime::itensor_to_literal(
+                &ITensor::from_vec(slot_ids))?,
+            crate::runtime::tensor_to_literal(&Tensor::new(
+                vec![lanes, nl, 2, nh, slots, dh], kv)?)?,
+            crate::runtime::tensor_to_literal(&Tensor::new(
+                vec![lanes, slots], valid)?)?,
+            crate::runtime::tensor_to_literal(&Tensor::new(
+                vec![lanes], live)?)?,
+        ];
+        let mut refs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weight_lits.len() + lits.len());
+        refs.extend(self.weight_lits.iter());
+        refs.extend(lits.iter());
+        let outs = self
+            .runtime
+            .execute_literals(&self.name, entry, &refs)?
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        // outputs: logits [B, V], k_new [B, L, H, Dh], v_new [B, L, H, Dh]
+        if outs.len() != 3 {
+            // a malformed artifact must take the chunk's Err path (per
+            // lane scalar fallback), not panic the decode thread
+            bail!("{entry}: expected 3 outputs, got {}", outs.len());
+        }
+        let (logits_b, k_b, v_b) = (&outs[0], &outs[1], &outs[2]);
+        (0..chunk.len())
+            .map(|lane| {
+                Ok(DecodeOut {
+                    logits: logits_b.slice_at(&[lane]).to_vec(),
+                    k_new: Tensor::new(vec![nl, nh, dh],
+                                       k_b.slice_at(&[lane]).to_vec())?,
+                    v_new: Tensor::new(vec![nl, nh, dh],
+                                       v_b.slice_at(&[lane]).to_vec())?,
+                })
             })
             .collect()
+    }
+
+    /// Fused decode round: one decode step for every request. Requests
+    /// are grouped by buffer kind; each same-buffer group is packed
+    /// into `decode_lanes`-wide chunks of the lane-padded batched entry
+    /// — **one runtime execution per chunk**, so N same-buffer sessions
+    /// with `N <= decode_lanes` cost a single XLA execution — and the
+    /// per-lane outputs are scattered back into request order. A group
+    /// (or trailing chunk) of one — or an artifact set without the
+    /// batched entries — takes the scalar entry instead of paying for a
+    /// mostly-padded lane launch. Per-lane fault isolation: a request with
+    /// malformed inputs fails alone before stacking, and a batched
+    /// chunk that fails at execute time is retried lane-by-lane on the
+    /// scalar path so one poisoned lane cannot take down its siblings.
+    pub fn decode_batch(&self, reqs: &[DecodeReq]) -> DecodeRound {
+        let mut results: Vec<Option<Result<DecodeOut>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        let mut executions = 0u64;
+        let mut lanes_live = 0u64;
+        let mut lanes_total = 0u64;
+        for buffer in [Buffer::Sparse, Buffer::Full] {
+            let idx: Vec<usize> = reqs
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.buffer == buffer)
+                .map(|(i, _)| i)
+                .collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let slots = self.buffer_len(buffer);
+            let kv_shape = [self.cfg.n_layers, 2, self.cfg.n_heads, slots,
+                            self.cfg.head_dim];
+            // per-lane input validation: a malformed request fails alone
+            let mut live_idx: Vec<usize> = Vec::with_capacity(idx.len());
+            for &i in &idx {
+                let r = &reqs[i];
+                if r.kv.shape() != &kv_shape[..] || r.kv_valid.len() != slots
+                {
+                    results[i] = Some(Err(anyhow::anyhow!(
+                        "decode lane {i}: kv shape {:?} / valid len {} do \
+                         not match the {buffer:?} buffer ({slots} slots)",
+                        r.kv.shape(), r.kv_valid.len())));
+                } else {
+                    live_idx.push(i);
+                }
+            }
+            match self.batched_decode_lanes(buffer) {
+                Some(lanes) if live_idx.len() >= 2 => {
+                    for chunk in live_idx.chunks(lanes) {
+                        executions += 1;
+                        if chunk.len() == 1 {
+                            // a trailing singleton chunk: the scalar
+                            // entry beats a mostly-padded lane launch
+                            results[chunk[0]] =
+                                Some(self.decode_one(&reqs[chunk[0]]));
+                            continue;
+                        }
+                        match self.decode_lanes(buffer, lanes, chunk, reqs)
+                        {
+                            Ok(outs) => {
+                                // lane accounting only for launches
+                                // that actually served their lanes, so
+                                // occupancy/batched_rounds can't report
+                                // healthy batching while every chunk
+                                // falls back to scalar dispatch
+                                lanes_live += chunk.len() as u64;
+                                lanes_total += lanes as u64;
+                                for (&i, out) in chunk.iter().zip(outs) {
+                                    results[i] = Some(Ok(out));
+                                }
+                            }
+                            Err(_) => {
+                                // isolate the poisoned lane: retry each
+                                // sibling alone on the scalar path
+                                for &i in chunk {
+                                    executions += 1;
+                                    results[i] =
+                                        Some(self.decode_one(&reqs[i]));
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    for &i in &live_idx {
+                        executions += 1;
+                        results[i] = Some(self.decode_one(&reqs[i]));
+                    }
+                }
+            }
+        }
+        DecodeRound {
+            results: results
+                .into_iter()
+                .map(|r| r.expect("every request decided"))
+                .collect(),
+            executions,
+            lanes_live,
+            lanes_total,
+        }
     }
 
     /// Offloaded block scoring (L1 Pallas kernel; weight-free artifact).
@@ -293,12 +526,18 @@ impl Model {
         Ok(outs.pop().unwrap())
     }
 
-    /// Greedy argmax over logits.
+    /// Greedy argmax over logits. NaN-robust: NaN entries never win
+    /// (and never poison later comparisons — the old
+    /// `v > logits[best]` form silently returned token 0 whenever
+    /// index 0 held a NaN), ties break to the lowest index, and an
+    /// all-NaN/empty slice falls back to token 0.
     pub fn argmax(logits: &[f32]) -> i32 {
         let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
         for (i, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
+            if v > best_v {
                 best = i;
+                best_v = v;
             }
         }
         best as i32
@@ -313,5 +552,24 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(Model::argmax(&[0.1, 3.0, -2.0, 3.0]), 1);
         assert_eq!(Model::argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_ties_break_to_lowest_index() {
+        assert_eq!(Model::argmax(&[1.0, 3.0, 3.0, 3.0]), 1);
+        assert_eq!(Model::argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn argmax_is_nan_robust() {
+        // the seed bug: a NaN at index 0 made every `v > logits[best]`
+        // comparison false and silently returned token 0
+        assert_eq!(Model::argmax(&[f32::NAN, 1.0, 7.0, 2.0]), 2);
+        // NaN elsewhere never wins either
+        assert_eq!(Model::argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(Model::argmax(&[-1.0, f32::NEG_INFINITY, f32::NAN]), 0);
+        // degenerate inputs fall back to token 0
+        assert_eq!(Model::argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(Model::argmax(&[]), 0);
     }
 }

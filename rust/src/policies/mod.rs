@@ -89,8 +89,11 @@ pub struct PolicyOutput {
 }
 
 /// A multi-context KV cache serving policy, expressed as the two
-/// policy-specific stages of the [`pipeline`] protocol.
-pub trait ContextPolicy {
+/// policy-specific stages of the [`pipeline`] protocol. Policies are
+/// stateless tables of knobs and must be `Send + Sync`: the engine's
+/// admission helper thread builds [`ServeSession`]s against them and
+/// hands the sessions to the decode thread.
+pub trait ContextPolicy: Send + Sync {
     /// Display name (matches the paper's tables).
     fn name(&self) -> String;
 

@@ -45,8 +45,10 @@
 //! # Fused decode rounds
 //!
 //! `decode_step` is also available split in two halves so an engine
-//! can run one fused model dispatch per round over many sessions
-//! (see [`crate::model::Model::decode_batch`]):
+//! can run one fused model dispatch per round over many sessions —
+//! [`crate::model::Model::decode_batch`] packs the round's same-buffer
+//! sessions into the lane-padded `decode_{sparse,full}_batched`
+//! artifacts, a single XLA execution per lane chunk:
 //! [`ServeSession::decode_step_begin`] consumes the pending logits,
 //! emits at most one token through the sink, and — when the session
 //! wants another token — reserves its KV slot and returns a
@@ -566,15 +568,16 @@ pub fn serve_blocking<P: ContextPolicy + ?Sized>(
     Ok(session.finish())
 }
 
-/// One unique document shared by a batch of planned requests.
+/// One unique document shared by a batch of planned requests. The
+/// document's tokens are located through a *live* sharer's plan (its
+/// `doc_hashes` mirror the sample's doc order) — never through a fixed
+/// request index, which could go stale when that request is rejected
+/// earlier in the wave.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SharedDoc {
     pub hash: u64,
-    /// First batch request needing it, and the document's index within
-    /// that request (locates its tokens).
-    pub req: usize,
-    pub doc: usize,
-    /// Every batch request sharing this document (includes `req`).
+    /// Every batch request sharing this document, in first-appearance
+    /// order.
     pub sharers: Vec<usize>,
 }
 
@@ -592,7 +595,7 @@ pub fn dedup_doc_plans(plans: &[Option<&ServePlan>]) -> Vec<SharedDoc> {
         if !plan.needs_doc_cache {
             continue;
         }
-        for (j, &h) in plan.doc_hashes.iter().enumerate() {
+        for &h in &plan.doc_hashes {
             match seen.get(&h) {
                 Some(&k) => {
                     if !order[k].sharers.contains(&i) {
@@ -601,12 +604,7 @@ pub fn dedup_doc_plans(plans: &[Option<&ServePlan>]) -> Vec<SharedDoc> {
                 }
                 None => {
                     seen.insert(h, order.len());
-                    order.push(SharedDoc {
-                        hash: h,
-                        req: i,
-                        doc: j,
-                        sharers: vec![i],
-                    });
+                    order.push(SharedDoc { hash: h, sharers: vec![i] });
                 }
             }
         }
@@ -658,13 +656,13 @@ mod tests {
         let shared = dedup_doc_plans(&plans);
         assert_eq!(shared.len(), 3); // A, B, C unique
         let a = &shared[0];
-        assert_eq!((a.hash, a.req, a.doc), (10, 0, 0));
+        assert_eq!(a.hash, 10);
         assert_eq!(a.sharers, vec![0, 3]);
         let b = &shared[1];
-        assert_eq!((b.hash, b.req, b.doc), (20, 0, 1));
+        assert_eq!(b.hash, 20);
         assert_eq!(b.sharers, vec![0, 1]);
         let c = &shared[2];
-        assert_eq!((c.hash, c.req, c.doc), (30, 1, 1));
+        assert_eq!(c.hash, 30);
         assert_eq!(c.sharers, vec![1]);
     }
 

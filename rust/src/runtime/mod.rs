@@ -107,6 +107,17 @@ impl Runtime {
         Ok(exe)
     }
 
+    /// Whether the artifact set provides an entry point. Lets callers
+    /// feature-gate on optional computations (e.g. the lane-padded
+    /// `decode_{sparse,full}_batched` variants, absent from manifests
+    /// built before they existed) instead of failing at execute time.
+    pub fn has_entry(&self, profile: &str, entry: &str) -> bool {
+        self.manifest
+            .profile(profile)
+            .map(|p| p.entrypoints.contains_key(entry))
+            .unwrap_or(false)
+    }
+
     /// Pre-compile a set of entry points (avoids first-request latency).
     pub fn warmup(&self, profile: &str, entries: &[&str]) -> Result<()> {
         for e in entries {

@@ -12,7 +12,9 @@
 //! `{"cmd":"metrics"}` returns the metrics report, per-engine loads,
 //! the continuous-batching serving snapshot (`{"serving":{...}}` —
 //! queue-wait/TTFT/e2e p50+p95, active-session count, fused decode
-//! round counters), and the per-tier document-cache counters
+//! round counters, and the batched-dispatch gauges: `batched_rounds`,
+//! `round_executions` / `executions_per_round`, `lane_occupancy`,
+//! `assemble_overlap_ms`), and the per-tier document-cache counters
 //! (`{"cache":{"host":{...},"resident":{...}}}`);
 //! `{"cmd":"shutdown"}` stops the listener.
 

@@ -1,0 +1,326 @@
+//! Lane-padded batched decode parity over the tiny artifacts: a fused
+//! round over N same-buffer sessions must be ONE runtime execution
+//! (checked both through `DecodeRound`'s accounting and the runtime's
+//! own per-entry stats) and must produce token streams identical to the
+//! per-request scalar path — across mixed `Sparse`/`Full` buffers,
+//! ragged completion (sessions finishing mid-round), and a mid-round
+//! per-lane failure that must not poison its sibling lanes.
+//!
+//! Tests no-op when artifacts aren't built; the execution-count asserts
+//! additionally no-op when the artifact set predates the batched
+//! entries (`decode_{sparse,full}_batched`).
+
+use samkv::kvcache::EngineDocCache;
+use samkv::model::{Buffer, DecodeReq, DecodeRound, Model};
+use samkv::policies::{
+    policy_by_name, ContextPolicy, NullSink, ServeSession,
+};
+use samkv::runtime::{artifacts_dir, Runtime};
+use samkv::tensor::Tensor;
+use samkv::workload::{assemble_full, Dataset, Sample};
+
+fn setup() -> Option<(Model, Dataset)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists()
+        || !dir.join("tiny_weights.bin").exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let rt = std::rc::Rc::new(Runtime::new(dir.clone()).unwrap());
+    let model = Model::load(rt, "tiny").unwrap();
+    let ds = Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json"))
+        .unwrap();
+    Some((model, ds))
+}
+
+/// Plan → prefill → assemble → attend one session.
+fn attended<'a>(policy: &'a dyn ContextPolicy, model: &Model,
+                store: &mut EngineDocCache, sample: &Sample)
+                -> ServeSession<'a, dyn ContextPolicy> {
+    let mut s = ServeSession::new(policy, &model.cfg, sample.clone());
+    s.prefill_docs(model, store).unwrap();
+    s.assemble(model).unwrap();
+    s.attend(model).unwrap();
+    s
+}
+
+struct RoundInfo {
+    executions: u64,
+    lanes_live: u64,
+    lanes_total: u64,
+    dispatched: usize,
+    sparse: usize,
+    full: usize,
+}
+
+/// Drive one fused round the way the engine does (emit half, one
+/// `decode_batch` call, completion half). `None` when no session
+/// wanted logits.
+fn drive_round(model: &Model,
+               sessions: &mut [ServeSession<'_, dyn ContextPolicy>])
+               -> Option<RoundInfo> {
+    let mut pending = Vec::new();
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let mut sink = NullSink;
+        let (_, step) = s.decode_step_begin(&mut sink).unwrap();
+        if let Some(st) = step {
+            pending.push((i, st));
+        }
+    }
+    if pending.is_empty() {
+        return None;
+    }
+    let reqs: Vec<DecodeReq> = pending
+        .iter()
+        .map(|&(i, st)| {
+            let (buffer, kv, kv_valid) =
+                sessions[i].decode_inputs().unwrap();
+            DecodeReq { buffer, token: st.token, pos: st.pos,
+                        slot: st.slot as i32, kv, kv_valid }
+        })
+        .collect();
+    let sparse =
+        reqs.iter().filter(|r| r.buffer == Buffer::Sparse).count();
+    let full = reqs.len() - sparse;
+    let DecodeRound { results, executions, lanes_live, lanes_total } =
+        model.decode_batch(&reqs);
+    drop(reqs);
+    let dispatched = pending.len();
+    for (&(i, st), out) in pending.iter().zip(results) {
+        sessions[i]
+            .decode_step_complete(st, out.unwrap(), 0.0)
+            .unwrap();
+    }
+    Some(RoundInfo { executions, lanes_live, lanes_total, dispatched,
+                     sparse, full })
+}
+
+/// Executions a round must cost: one per lane chunk for batched
+/// same-buffer groups of 2+, one per request otherwise.
+fn expected_execs(model: &Model, sparse: usize, full: usize) -> u64 {
+    let group = |buffer: Buffer, k: usize| -> u64 {
+        if k == 0 {
+            return 0;
+        }
+        match model.batched_decode_lanes(buffer) {
+            Some(lanes) if k >= 2 => ((k + lanes - 1) / lanes) as u64,
+            _ => k as u64,
+        }
+    };
+    group(Buffer::Sparse, sparse) + group(Buffer::Full, full)
+}
+
+/// Three same-buffer sessions with staggered starts: every fused round
+/// over 2+ of them is exactly one execution, sessions finish raggedly
+/// mid-round without disturbing the others, and every final answer is
+/// token-identical to the blocking `run()` path.
+#[test]
+fn batched_rounds_single_execution_and_token_identical() {
+    let Some((model, ds)) = setup() else { return };
+    let policy = policy_by_name("Reuse").unwrap();
+    let n = 3usize;
+    let samples: Vec<Sample> = (0..n)
+        .map(|i| ds.samples[i % ds.samples.len()].clone())
+        .collect();
+    let expects: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            policy
+                .run(&model, &mut EngineDocCache::unbounded(), s)
+                .unwrap()
+                .answer
+        })
+        .collect();
+
+    let batched = model.batched_decode_lanes(Buffer::Full).is_some();
+    let lanes = model.cfg.decode_lanes;
+    let mut store = EngineDocCache::unbounded();
+    let mut sessions: Vec<ServeSession<'_, dyn ContextPolicy>> = vec![
+        attended(policy.as_ref(), &model, &mut store, &samples[0]),
+        attended(policy.as_ref(), &model, &mut store, &samples[1]),
+    ];
+    // ragged start: two sessions decode one round before the third joins
+    drive_round(&model, &mut sessions);
+    sessions.push(attended(policy.as_ref(), &model, &mut store,
+                           &samples[2]));
+
+    for _ in 0..2 * model.cfg.answer_max + 4 {
+        let Some(info) = drive_round(&model, &mut sessions) else {
+            break;
+        };
+        assert_eq!(info.sparse, 0);
+        assert_eq!(info.executions,
+                   expected_execs(&model, 0, info.full));
+        if batched && info.dispatched >= 2 && info.dispatched <= lanes {
+            // the tentpole claim: N same-buffer sessions, ONE execution
+            assert_eq!(info.executions, 1,
+                       "{} sessions took {} executions",
+                       info.dispatched, info.executions);
+            assert_eq!(info.lanes_live, info.dispatched as u64);
+            assert_eq!(info.lanes_total, lanes as u64);
+        }
+    }
+    assert!(sessions.iter().all(|s| s.is_done()),
+            "sessions did not finish within the round bound");
+    for (i, (s, want)) in sessions.iter().zip(&expects).enumerate() {
+        assert_eq!(s.answer(), want.as_slice(),
+                   "batched decode diverged from run() on session {i}");
+    }
+}
+
+/// The one-execution claim cross-checked against the runtime's own
+/// per-entry stats: a 3-session round bumps `decode_full_batched` by
+/// exactly one call and never touches the scalar entry.
+#[test]
+fn runtime_stats_show_one_batched_call_per_round() {
+    let Some((model, ds)) = setup() else { return };
+    if model.batched_decode_lanes(Buffer::Full).is_none() {
+        eprintln!("skipping: artifact set predates batched entries");
+        return;
+    }
+    let policy = policy_by_name("Reuse").unwrap();
+    let n = 3.min(model.cfg.decode_lanes); // one lane chunk exactly
+    let mut store = EngineDocCache::unbounded();
+    let mut sessions: Vec<ServeSession<'_, dyn ContextPolicy>> = (0..n)
+        .map(|i| {
+            attended(policy.as_ref(), &model, &mut store,
+                     &ds.samples[i % ds.samples.len()])
+        })
+        .collect();
+    let rt = model.runtime().clone();
+    rt.reset_stats();
+    let info = drive_round(&model, &mut sessions).expect("a round ran");
+    assert_eq!(info.dispatched, n);
+    let stats = rt.stats();
+    let calls = |entry: &str| {
+        stats
+            .iter()
+            .find(|(n, _)| *n == format!("tiny:{entry}"))
+            .map(|(_, s)| s.calls)
+            .unwrap_or(0)
+    };
+    assert_eq!(calls("decode_full_batched"), 1,
+               "the round must be exactly one batched execution");
+    assert_eq!(calls("decode_full"), 0,
+               "no scalar decode may run inside a batched round");
+}
+
+/// Mixed `Sparse`/`Full` rounds: one execution per buffer-kind group,
+/// and every session still token-identical to its blocking path.
+#[test]
+fn mixed_buffers_one_execution_per_group() {
+    let Some((model, ds)) = setup() else { return };
+    let reuse = policy_by_name("Reuse").unwrap(); // Full buffer
+    let samkv = policy_by_name("SamKV-fusion").unwrap(); // Sparse buffer
+    let s0 = ds.samples[0].clone();
+    let s1 = ds.samples[1 % ds.samples.len()].clone();
+    let mut expects: Vec<Vec<i32>> = Vec::new();
+    for (p, s) in [(&reuse, &s0), (&reuse, &s1), (&samkv, &s0),
+                   (&samkv, &s1)] {
+        expects.push(
+            p.run(&model, &mut EngineDocCache::unbounded(), s)
+                .unwrap()
+                .answer,
+        );
+    }
+    let mut store = EngineDocCache::unbounded();
+    let mut sessions: Vec<ServeSession<'_, dyn ContextPolicy>> = vec![
+        attended(reuse.as_ref(), &model, &mut store, &s0),
+        attended(reuse.as_ref(), &model, &mut store, &s1),
+        attended(samkv.as_ref(), &model, &mut store, &s0),
+        attended(samkv.as_ref(), &model, &mut store, &s1),
+    ];
+    let both_batched = model
+        .batched_decode_lanes(Buffer::Full)
+        .and(model.batched_decode_lanes(Buffer::Sparse))
+        .is_some();
+    for _ in 0..2 * model.cfg.answer_max + 4 {
+        let Some(info) = drive_round(&model, &mut sessions) else {
+            break;
+        };
+        assert_eq!(info.executions,
+                   expected_execs(&model, info.sparse, info.full));
+        if both_batched && info.sparse >= 2 && info.full >= 2 {
+            assert_eq!(info.executions, 2,
+                       "a mixed round must be one execution per \
+                        buffer-kind group");
+        }
+    }
+    assert!(sessions.iter().all(|s| s.is_done()));
+    for (i, (s, want)) in sessions.iter().zip(&expects).enumerate() {
+        assert_eq!(s.answer(), want.as_slice(),
+                   "mixed-buffer batched decode diverged on session {i}");
+    }
+}
+
+/// A poisoned lane (malformed KV / valid-mask inputs) fails alone: its
+/// `Result` is an error while sibling lanes decode normally and match
+/// the scalar entry token-for-token.
+#[test]
+fn poisoned_lane_fails_alone() {
+    let Some((model, ds)) = setup() else { return };
+    let cfg = model.cfg.clone();
+    let sample = ds.samples[0].clone();
+    let (tokens, valid, ans_start) = assemble_full(&sample, &cfg);
+    let kv_full = model.prefill_full(&tokens, &valid).unwrap();
+    let last = ans_start - 1;
+    let kv_valid: Vec<f32> = (0..cfg.full_len)
+        .map(|i| if i < last { 1.0 } else { 0.0 })
+        .collect();
+    let prev_valid: Vec<f32> = (0..cfg.full_len)
+        .map(|i| if i + 1 < last { 1.0 } else { 0.0 })
+        .collect();
+    let bad_kv = Tensor::zeros(&[3]); // wrong shape: fails validation
+    let reqs = [
+        DecodeReq { buffer: Buffer::Full, token: tokens[last],
+                    pos: last as i32, slot: last as i32, kv: &kv_full,
+                    kv_valid: &kv_valid },
+        DecodeReq { buffer: Buffer::Full, token: tokens[last],
+                    pos: last as i32, slot: last as i32, kv: &bad_kv,
+                    kv_valid: &kv_valid },
+        DecodeReq { buffer: Buffer::Full, token: tokens[last - 1],
+                    pos: last as i32 - 1, slot: last as i32 - 1,
+                    kv: &kv_full, kv_valid: &prev_valid },
+    ];
+    let round = model.decode_batch(&reqs);
+    assert_eq!(round.results.len(), 3);
+    if model.batched_decode_lanes(Buffer::Full).is_some() {
+        // the two healthy lanes still shared one batched execution
+        assert_eq!(round.executions, 1);
+        assert_eq!(round.lanes_live, 2);
+    }
+    let mut it = round.results.into_iter();
+    let r0 = it.next().unwrap().expect("healthy lane 0 must decode");
+    let r1 = it.next().unwrap();
+    let r2 = it.next().unwrap().expect("healthy lane 2 must decode");
+    let err = r1.expect_err("poisoned lane must fail");
+    assert!(format!("{err:#}").contains("kv shape"), "{err:#}");
+    // siblings match the scalar entry
+    for (r, (tok, sl, vd)) in [
+        (&r0, (tokens[last], last, &kv_valid)),
+        (&r2, (tokens[last - 1], last - 1, &prev_valid)),
+    ] {
+        let want = model
+            .decode(Buffer::Full, tok, sl as i32, sl as i32, &kv_full, vd)
+            .unwrap();
+        assert_eq!(Model::argmax(&r.logits), Model::argmax(&want.logits));
+        let max_err = r
+            .logits
+            .iter()
+            .zip(&want.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-4, "batched vs scalar logits drifted \
+                                 ({max_err})");
+    }
+    // a wrong-length valid mask is also caught per-lane
+    let short = vec![1.0f32; 3];
+    let reqs = [DecodeReq { buffer: Buffer::Full, token: tokens[last],
+                            pos: last as i32, slot: last as i32,
+                            kv: &kv_full, kv_valid: &short }];
+    let round = model.decode_batch(&reqs);
+    assert!(round.results[0].is_err());
+    assert_eq!(round.executions, 0, "invalid inputs must fail before \
+                                     any dispatch");
+}

@@ -139,6 +139,36 @@ fn mid_decode_admission_streams_before_prior_done() {
             "overlapping sessions never shared a fused dispatch");
     assert_eq!(metrics.active_sessions.load(Ordering::Relaxed), 0,
                "active-session gauge must return to zero when drained");
+    // executions-per-round: with the lane-padded batched entries in the
+    // artifact set, a fused round over N same-buffer sessions (N <=
+    // decode_lanes; here at most 2) must issue exactly ONE runtime
+    // execution — so total executions equal total rounds, and the
+    // 2-session rounds observed above must have gone through the
+    // batched dispatch. Capability-gate via the manifest alone (no
+    // second model load).
+    let manifest =
+        samkv::runtime::Manifest::load(artifacts_dir()).unwrap();
+    let batched = manifest
+        .profile("tiny")
+        .map(|p| p.entrypoints.contains_key("decode_full_batched"))
+        .unwrap_or(false);
+    if batched {
+        let rounds = metrics.fused_rounds.load(Ordering::Relaxed);
+        let execs = metrics.round_executions.load(Ordering::Relaxed);
+        assert_eq!(execs, rounds,
+                   "a fused round issued more than one execution \
+                    ({execs} executions over {rounds} rounds)");
+        assert!(metrics.batched_rounds.load(Ordering::Relaxed) > 0,
+                "2-session rounds never used the batched entry");
+        assert!(metrics.lane_occupancy() > 0.0
+                    && metrics.lane_occupancy() <= 1.0,
+                "lane occupancy out of range: {}",
+                metrics.lane_occupancy());
+    }
+    // overlapped admission: request 2's plan/prefill/assemble/attend ran
+    // on the helper thread while request 1 was decoding
+    assert!(metrics.assemble_overlap_ms() > 0.0,
+            "mid-decode admission never overlapped a decode round");
 }
 
 /// Drive one fused decode round over a set of attended sessions the
@@ -166,10 +196,10 @@ fn fused_round<P: ContextPolicy + ?Sized>(
                         slot: st.slot as i32, kv, kv_valid }
         })
         .collect();
-    let outs = model.decode_batch(&reqs);
+    let round = model.decode_batch(&reqs);
     drop(reqs);
     let n = pending.len();
-    for (&(i, st), out) in pending.iter().zip(outs) {
+    for (&(i, st), out) in pending.iter().zip(round.results) {
         sessions[i]
             .decode_step_complete(st, out.unwrap(), 0.0)
             .unwrap();
@@ -302,7 +332,8 @@ fn server_metrics_expose_serving_snapshot() {
     for field in [
         "active_sessions", "queue_wait_p50_ms", "queue_wait_p95_ms",
         "ttft_p50_ms", "ttft_p95_ms", "fused_rounds",
-        "fused_round_sessions",
+        "fused_round_sessions", "batched_rounds", "round_executions",
+        "executions_per_round", "lane_occupancy", "assemble_overlap_ms",
     ] {
         assert!(serving.get(field).is_some(), "missing {field}: {m}");
     }
