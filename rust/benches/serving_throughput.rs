@@ -6,9 +6,12 @@
 //! possible), with recurring document sets exercising both cache
 //! tiers. Each sweep row in the emitted JSON carries tokens/sec, TTFT
 //! p50/p95, queue-wait p50/p95, the fused decode-round counters, and
-//! the per-tier hit/miss/eviction/publish counters; with `--engines
-//! 2+`, `host_publishes == unique documents` demonstrates the
-//! cross-engine prefill dedup.
+//! the per-tier hit/miss/eviction/publish counters (host, resident,
+//! and the persistent disk tier); with `--engines 2+`,
+//! `host_publishes == unique documents` demonstrates the cross-engine
+//! prefill dedup, and the emitted `restart` object carries a
+//! cold-vs-warm-start pair over a disk cache directory
+//! (`warm_doc_prefills == 0` demonstrates the zero-prefill restart).
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 

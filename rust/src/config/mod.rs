@@ -162,6 +162,44 @@ impl Default for SamKvConfig {
     }
 }
 
+/// When host-tier document-cache entries reach the persistent disk
+/// tier (`--disk-writeback`, see [`crate::kvcache::DiskDocCache`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiskWriteback {
+    /// Spill on host-tier eviction only (writeback): an entry reaches
+    /// disk the moment RAM would otherwise drop it.
+    Evict,
+    /// Write-through: every host-tier insert is persisted immediately
+    /// (evictions then find their file already on disk).
+    Through,
+    /// Never write. The disk tier is still *read* when attached, so a
+    /// pre-seeded cache directory can warm-start a server.
+    Off,
+}
+
+impl DiskWriteback {
+    pub fn name(self) -> &'static str {
+        match self {
+            DiskWriteback::Evict => "evict",
+            DiskWriteback::Through => "through",
+            DiskWriteback::Off => "off",
+        }
+    }
+}
+
+impl std::str::FromStr for DiskWriteback {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "evict" => Ok(DiskWriteback::Evict),
+            "through" => Ok(DiskWriteback::Through),
+            "off" => Ok(DiskWriteback::Off),
+            _ => anyhow::bail!("unknown disk writeback mode `{s}` \
+                                (expected evict|through|off)"),
+        }
+    }
+}
+
 /// Serving-stack knobs.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -184,6 +222,15 @@ pub struct ServingConfig {
     /// before gathering a wave, so the pool never exceeds this; slots
     /// return as sessions retire.
     pub max_active: usize,
+    /// Directory of the persistent disk document-cache tier
+    /// (`--disk-cache-dir`); empty disables the tier, and every
+    /// restart then re-prefills the corpus from scratch.
+    pub disk_cache_dir: String,
+    /// Disk-tier byte budget in MiB (`--disk-cache-mb`; 0 = unbounded,
+    /// the tier then grows with the corpus).
+    pub disk_cache_mb: usize,
+    /// Host-tier → disk-tier writeback mode (`--disk-writeback`).
+    pub disk_writeback: DiskWriteback,
 }
 
 impl Default for ServingConfig {
@@ -197,6 +244,9 @@ impl Default for ServingConfig {
             port: 7070,
             batch_window_ms: 2,
             max_active: 8,
+            disk_cache_dir: String::new(),
+            disk_cache_mb: 0,
+            disk_writeback: DiskWriteback::Evict,
         }
     }
 }
@@ -261,6 +311,21 @@ mod tests {
         assert_eq!(c.batch_window_ms, 2);
         assert!(c.max_active >= c.max_batch,
                 "default pool must fit a full admission wave");
+    }
+
+    #[test]
+    fn disk_writeback_parse_and_default() {
+        assert_eq!("evict".parse::<DiskWriteback>().unwrap(),
+                   DiskWriteback::Evict);
+        assert_eq!("through".parse::<DiskWriteback>().unwrap(),
+                   DiskWriteback::Through);
+        assert_eq!("off".parse::<DiskWriteback>().unwrap(),
+                   DiskWriteback::Off);
+        assert!("sync".parse::<DiskWriteback>().is_err());
+        assert_eq!(DiskWriteback::Through.name(), "through");
+        let c = ServingConfig::default();
+        assert!(c.disk_cache_dir.is_empty(), "disk tier defaults off");
+        assert_eq!(c.disk_writeback, DiskWriteback::Evict);
     }
 
     #[test]

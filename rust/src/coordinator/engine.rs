@@ -22,7 +22,11 @@
 //!    the staged protocol ([`crate::policies::pipeline`]): every
 //!    request is planned (pure, model-free), shared document prefills
 //!    are deduplicated across the wave (the multi-context RAG hot
-//!    path), then each newcomer assembles and attends **on the helper's
+//!    path), the wave's planned doc hashes are prefetched from the
+//!    persistent disk cache tier when one is attached
+//!    ([`EngineDocCache::prefetch_from_disk`] — disk latency overlaps
+//!    in-flight decode the same way assemble does), then each newcomer
+//!    assembles and attends **on the helper's
 //!    own model** — request B's assemble overlaps request A's decode
 //!    rounds (measured by `Metrics::assemble_overlap_ms`). Completed
 //!    sessions are handed to the decode thread over a channel; requests
@@ -71,7 +75,7 @@ use crate::kvcache::{
 use crate::metrics::Metrics;
 use crate::model::{DecodeReq, Model};
 use crate::policies::pipeline::{
-    dedup_doc_plans, FnSink, FusedStep, ServeSession,
+    dedup_doc_plans, FnSink, FusedStep, ServeSession, SharedDoc,
 };
 use crate::policies::{all_policies, ContextPolicy};
 use crate::runtime::Runtime;
@@ -434,6 +438,22 @@ fn policy_table() -> &'static HashMap<String, Box<dyn ContextPolicy>> {
     })
 }
 
+/// Locate one shared document's token ids through its first *live*
+/// sharer's plan (a plan's `doc_hashes` mirror its sample's doc order
+/// — never through a fixed request index, which goes stale when that
+/// request is rejected earlier in the wave). One definition serves
+/// both the disk prefetch and the prefill loop so the invariant
+/// cannot drift. `None` when every sharer already died.
+fn shared_doc_tokens<'s>(
+    sessions: &'s [Option<ServeSession<'static, dyn ContextPolicy>>],
+    sd: &SharedDoc,
+) -> Option<&'s [i32]> {
+    let si = *sd.sharers.iter().find(|&&si| sessions[si].is_some())?;
+    let s = sessions[si].as_ref().unwrap();
+    let dj = s.plan().doc_hashes.iter().position(|&h| h == sd.hash)?;
+    Some(s.sample().docs[dj].as_slice())
+}
+
 fn error_response(id: u64, msg: String) -> ServeResponse {
     ServeResponse {
         id,
@@ -503,6 +523,21 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
         let hashes: Vec<u64> = shared.iter().map(|sd| sd.hash).collect();
         store.pin_planned(&hashes)
     };
+    // disk prefetch: pull the wave's planned documents off the
+    // persistent tier (if attached) into the host tier before the
+    // prefill pass. This runs on the admission thread while the decode
+    // thread keeps emitting tokens, so disk load latency overlaps
+    // decode compute exactly like assemble does; the prefill loop
+    // below then sees resident/host hits instead of paying the model.
+    {
+        let docs: Vec<(u64, &[i32])> = shared
+            .iter()
+            .filter_map(|sd| {
+                shared_doc_tokens(&sessions, sd).map(|t| (sd.hash, t))
+            })
+            .collect();
+        store.prefetch_from_disk(&docs);
+    }
     for sd in &shared {
         // sharers may have died earlier in this stage (a previous doc's
         // prefill failed); don't prefill for nobody, and split the cost
@@ -516,31 +551,21 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
         if live.is_empty() {
             continue;
         }
-        // locate the document's tokens through the first live sharer
-        // (plan hash order mirrors its sample's doc order)
-        let (owner, dj) = {
-            let s = sessions[live[0]].as_ref().unwrap();
-            let dj = s
-                .plan()
-                .doc_hashes
-                .iter()
-                .position(|&h| h == sd.hash)
-                .expect("live sharer plans the doc");
-            (live[0], dj)
-        };
         let t = Instant::now();
         let hit = {
-            let tokens = &sessions[owner].as_ref().unwrap().sample().docs[dj];
+            let tokens = shared_doc_tokens(&sessions, sd)
+                .expect("live sharer plans the doc");
             store.get_or_prefill(model, tokens)
         };
         match hit {
             // already resident: free
             Ok((_, TierHit::Resident)) => continue,
-            // host-tier hit — but the lookup may have blocked on
-            // another engine's in-flight prefill lease; attribute that
-            // wait to the sharers' doc_prefill time (cache still warm:
-            // no local prefill ran)
-            Ok((_, TierHit::Host)) => {
+            // host- or disk-tier hit — but the lookup may have blocked
+            // on another engine's in-flight prefill lease, or paid a
+            // disk load the prefetch missed; attribute that wait to
+            // the sharers' doc_prefill time (cache still warm: no
+            // local model prefill ran)
+            Ok((_, TierHit::Host)) | Ok((_, TierHit::Disk)) => {
                 let share =
                     t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
                 for &si in &live {
@@ -599,6 +624,10 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
     // the counters stay in lockstep with responses
     metrics.record_cache_tiers(&store.host_stats(),
                                &store.take_stats_delta());
+    if let Some(disk) = store.host().disk() {
+        metrics.record_disk_tier(&disk.stats(),
+                                 &disk.take_load_samples());
+    }
 
     // --- survivors go to the decode pool -------------------------------
     let mut ready = Vec::with_capacity(sessions.len());

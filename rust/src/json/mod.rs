@@ -182,7 +182,11 @@ fn write_value(v: &Value, out: &mut String) {
         Value::Bool(true) => out.push_str("true"),
         Value::Bool(false) => out.push_str("false"),
         Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
+            if !n.is_finite() {
+                // NaN/±inf are not JSON; emit null (as JSON.stringify
+                // does) so emitted artifacts stay parseable
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 9e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -237,6 +241,21 @@ mod tests {
     fn unicode_escapes() {
         let v = parse(r#""Aé 😀""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé 😀"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: `{n}` formatting printed literal NaN/inf tokens,
+        // producing unparseable artifacts (e.g. an empty-histogram
+        // percentile leaking into BENCH_serving.json)
+        let v = Value::obj()
+            .set("nan", f64::NAN)
+            .set("pinf", f64::INFINITY)
+            .set("ninf", f64::NEG_INFINITY)
+            .set("ok", 1.5);
+        let s = v.to_string();
+        assert_eq!(s, r#"{"nan":null,"pinf":null,"ninf":null,"ok":1.5}"#);
+        assert!(parse(&s).is_ok(), "{s}");
     }
 
     #[test]

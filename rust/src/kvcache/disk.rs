@@ -1,0 +1,807 @@
+//! Persistent disk tier of the document cache: content-addressed,
+//! per-hash cache files beneath the RAM tiers (see [`super`] for the
+//! three-tier diagram).
+//!
+//! Each serialized [`DocEntry`] lives in its own file
+//! (`doc_<hash:016x>.kv`) under the cache directory, so a restarted
+//! server — or a host tier whose budget is smaller than the corpus —
+//! re-serves previously-seen documents with **zero** model prefills.
+//! The tier is thread-safe (one process-wide instance shared by every
+//! engine through [`super::HostDocCache`]), keeps its own byte budget
+//! with pluggable eviction, and never trusts what it reads back:
+//!
+//! # On-disk format (version 1, little-endian)
+//!
+//! ```text
+//! magic    b"SKVD"                     4 bytes
+//! version  u32                         4 bytes
+//! hash     u64 (must match filename)   8 bytes
+//! n_tokens u64                         8 bytes
+//! tokens   n_tokens × i32
+//! tensors  kv, attn, q_local — each: rank u32, dims u64×rank, f32 data
+//! checksum u64 (FNV-1a over everything preceding it)
+//! ```
+//!
+//! Files are written to a temp path and atomically renamed, so a crash
+//! mid-write can never leave a half-entry under its content address.
+//!
+//! # Corruption / staleness contract
+//!
+//! A file that fails *any* validation — magic, version, filename/header
+//! hash mismatch, checksum, truncation, implausible geometry — is
+//! **quarantined** (moved into `quarantine/` inside the cache dir, or
+//! deleted if even the rename fails), counted in
+//! [`DiskStats::corrupt`], and reported as a miss: the caller falls
+//! back to a model prefill and the request succeeds. Quarantined files
+//! are never trusted again. A structurally valid file whose stored
+//! token ids differ from the requested document (an FNV-1a hash
+//! collision) is also a miss — counted in [`DiskStats::collisions`] —
+//! but the file is left in place: it is correct for *its* document.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy};
+use super::store::{fnv64, DocEntry};
+
+const MAGIC: [u8; 4] = *b"SKVD";
+const VERSION: u32 = 1;
+/// magic + version + hash + n_tokens.
+const HEADER_LEN: usize = 24;
+/// Upper bound on any decoded count (tokens, tensor dims/elements):
+/// corrupt headers must not drive multi-gigabyte allocations.
+const MAX_COUNT: u64 = 1 << 28;
+/// Load-latency samples buffered until the next
+/// [`DiskDocCache::take_load_samples`] drain.
+const MAX_LOAD_SAMPLES: usize = 4096;
+
+/// Disk-tier counters. All monotone lifetime totals except
+/// `current_bytes` (what the directory holds right now).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct DiskStats {
+    /// Loads that returned a usable entry.
+    pub hits: u64,
+    /// Lookups that produced no entry (absent, corrupt, or collision).
+    pub misses: u64,
+    /// Entries written ([`DiskDocCache::store`] calls that hit disk;
+    /// content-addressed re-stores of a present hash are skipped).
+    pub spills: u64,
+    /// Cache files read back (every hit is a load; corrupt and
+    /// collision reads count here too).
+    pub loads: u64,
+    /// Files quarantined for failing validation (at scan or load).
+    pub corrupt: u64,
+    /// Structurally valid files whose token ids did not match the
+    /// requested document (content-hash collision, served as a miss).
+    pub collisions: u64,
+    /// Files deleted by the byte-budget eviction loop.
+    pub evictions: u64,
+    /// Bytes currently on disk under the budget.
+    pub current_bytes: usize,
+}
+
+struct DiskSlot {
+    /// Serialized file size (budget accounting).
+    bytes: usize,
+    /// Document length in tokens (eviction recompute-cost proxy).
+    tokens: usize,
+    last_use: u64,
+}
+
+struct DiskInner {
+    index: HashMap<u64, DiskSlot>,
+    clock: u64,
+    budget_bytes: usize,
+    stats: DiskStats,
+    load_ms: Vec<f64>,
+}
+
+/// The persistent tier: a directory of per-hash cache files with an
+/// in-memory index, byte budget, and eviction. Shared process-wide
+/// behind an `Arc` (attach with [`super::HostDocCache::with_disk`]).
+pub struct DiskDocCache {
+    dir: PathBuf,
+    inner: Mutex<DiskInner>,
+    policy: Box<dyn EvictionPolicy>,
+}
+
+impl DiskDocCache {
+    /// Open (creating if needed) a cache directory with an LRU budget.
+    pub fn open(dir: impl Into<PathBuf>, budget_bytes: usize)
+                -> Result<DiskDocCache> {
+        Self::open_with_policy(dir, budget_bytes, Box::new(LruPolicy))
+    }
+
+    /// [`Self::open`] with an explicit eviction policy. Scans the
+    /// directory: valid entries are indexed (recency seeded from file
+    /// mtime order), stale or corrupt files are quarantined, and
+    /// leftover temp files from an interrupted writer are removed.
+    pub fn open_with_policy(dir: impl Into<PathBuf>, budget_bytes: usize,
+                            policy: Box<dyn EvictionPolicy>)
+                            -> Result<DiskDocCache> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir).with_context(
+            || format!("create disk cache dir {}", dir.display()))?;
+        let cache = DiskDocCache {
+            dir,
+            inner: Mutex::new(DiskInner {
+                index: HashMap::new(),
+                clock: 0,
+                budget_bytes,
+                stats: DiskStats::default(),
+                load_ms: Vec::new(),
+            }),
+            policy,
+        };
+        cache.scan()?;
+        Ok(cache)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.lock().unwrap().budget_bytes
+    }
+
+    pub fn stats(&self) -> DiskStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.inner.lock().unwrap().index.contains_key(&hash)
+    }
+
+    /// Drain the load-latency samples (milliseconds) buffered since the
+    /// previous drain — the engine feeds them into the metrics
+    /// histogram after every admission wave.
+    pub fn take_load_samples(&self) -> Vec<f64> {
+        std::mem::take(&mut self.inner.lock().unwrap().load_ms)
+    }
+
+    fn entry_path(&self, hash: u64) -> PathBuf {
+        self.dir.join(format!("doc_{hash:016x}.kv"))
+    }
+
+    /// Read one document back. `expect_tokens` are the requested
+    /// document's token ids: a stored entry that fails the comparison
+    /// is a hash collision and reads as a miss — the disk tier never
+    /// serves another document's KV. Corrupt files are quarantined and
+    /// read as misses (the caller prefills).
+    pub fn load(&self, hash: u64, expect_tokens: &[i32])
+                -> Option<Arc<DocEntry>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if !g.index.contains_key(&hash) {
+                g.stats.misses += 1;
+                return None;
+            }
+        }
+        let path = self.entry_path(hash);
+        let t = Instant::now();
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                // evicted (or externally removed) between the index
+                // check and the read: drop the stale index entry
+                let mut g = self.inner.lock().unwrap();
+                if let Some(slot) = g.index.remove(&hash) {
+                    g.stats.current_bytes =
+                        g.stats.current_bytes.saturating_sub(slot.bytes);
+                }
+                g.stats.misses += 1;
+                return None;
+            }
+        };
+        let decoded = decode_entry(hash, &bytes);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.loads += 1;
+        match decoded {
+            Err(why) => {
+                g.stats.corrupt += 1;
+                g.stats.misses += 1;
+                if let Some(slot) = g.index.remove(&hash) {
+                    g.stats.current_bytes =
+                        g.stats.current_bytes.saturating_sub(slot.bytes);
+                }
+                drop(g);
+                self.quarantine(&path, &why);
+                None
+            }
+            Ok(entry) => {
+                if entry.tokens != expect_tokens {
+                    g.stats.collisions += 1;
+                    g.stats.misses += 1;
+                    return None;
+                }
+                g.clock += 1;
+                let clock = g.clock;
+                if let Some(slot) = g.index.get_mut(&hash) {
+                    slot.last_use = clock;
+                }
+                g.stats.hits += 1;
+                if g.load_ms.len() < MAX_LOAD_SAMPLES {
+                    g.load_ms.push(ms);
+                }
+                Some(Arc::new(entry))
+            }
+        }
+    }
+
+    /// Persist one document. Content-addressed: a hash already on disk
+    /// is skipped (returns `Ok(false)`), so write-through inserts and
+    /// later eviction spills of the same entry cost one write total.
+    /// The file lands under its final name only after a complete
+    /// temp-file write + atomic rename (per-writer unique temp name,
+    /// so concurrent same-hash writers cannot race on it).
+    pub fn store(&self, entry: &DocEntry) -> Result<bool> {
+        {
+            let g = self.inner.lock().unwrap();
+            if g.index.contains_key(&entry.hash) {
+                return Ok(false);
+            }
+        }
+        static TMP_SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let seq =
+            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let buf = encode_entry(entry);
+        let path = self.entry_path(entry.hash);
+        let tmp = path.with_extension(format!("tmp{seq}"));
+        fs::write(&tmp, &buf)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        let doomed = {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let clock = g.clock;
+            let replaced = g.index.insert(entry.hash, DiskSlot {
+                bytes: buf.len(),
+                tokens: entry.tokens.len(),
+                last_use: clock,
+            });
+            if let Some(old) = replaced {
+                g.stats.current_bytes =
+                    g.stats.current_bytes.saturating_sub(old.bytes);
+            }
+            g.stats.current_bytes += buf.len();
+            g.stats.spills += 1;
+            self.evict_to_budget_locked(&mut g)
+        };
+        self.remove_files(&doomed);
+        Ok(true)
+    }
+
+    /// Delete every cache file (quarantine is kept). Lifetime counters
+    /// survive; `current_bytes` resets.
+    pub fn clear(&self) {
+        let doomed: Vec<u64> = {
+            let mut g = self.inner.lock().unwrap();
+            g.stats.current_bytes = 0;
+            g.index.drain().map(|(h, _)| h).collect()
+        };
+        self.remove_files(&doomed);
+    }
+
+    /// Unlink evicted entries' files — always *after* the index lock
+    /// drops, so deletion I/O never stalls lookups (a load racing the
+    /// unlink sees a clean index miss either way).
+    fn remove_files(&self, hashes: &[u64]) {
+        for &h in hashes {
+            let _ = fs::remove_file(self.entry_path(h));
+        }
+    }
+
+    /// Evict down to the byte budget; returns the victims' hashes so
+    /// the caller can unlink their files once the lock drops.
+    fn evict_to_budget_locked(&self, g: &mut DiskInner) -> Vec<u64> {
+        let mut doomed = Vec::new();
+        if g.stats.current_bytes <= g.budget_bytes {
+            return doomed;
+        }
+        let mut candidates: Vec<EvictionCandidate> = g
+            .index
+            .iter()
+            .map(|(&h, s)| EvictionCandidate {
+                hash: h,
+                bytes: s.bytes,
+                last_use: s.last_use,
+                recompute_cost: s.tokens,
+            })
+            .collect();
+        while g.stats.current_bytes > g.budget_bytes && g.index.len() > 1 {
+            let Some(victim) = self.policy.pick_victim(&candidates) else {
+                break;
+            };
+            candidates.retain(|c| c.hash != victim);
+            let Some(slot) = g.index.remove(&victim) else { break };
+            g.stats.current_bytes =
+                g.stats.current_bytes.saturating_sub(slot.bytes);
+            g.stats.evictions += 1;
+            doomed.push(victim);
+        }
+        doomed
+    }
+
+    /// Index the directory's existing entries; quarantine what cannot
+    /// be trusted. Only the fixed-size header is validated here — the
+    /// checksum over the full payload runs at [`Self::load`] time.
+    fn scan(&self) -> Result<()> {
+        // (hash, file bytes, n_tokens, mtime)
+        let mut found: Vec<(u64, usize, usize, std::time::SystemTime)> =
+            Vec::new();
+        let mut bad: Vec<(PathBuf, String)> = Vec::new();
+        for ent in fs::read_dir(&self.dir)? {
+            let ent = ent?;
+            let path = ent.path();
+            if !ent.file_type()?.is_file() {
+                continue; // quarantine/ subdir and friends
+            }
+            let name = ent.file_name();
+            let name = name.to_string_lossy();
+            if name.contains(".tmp") {
+                // interrupted writer: never renamed, never trusted
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            let Some(hash) = parse_entry_name(&name) else { continue };
+            match read_header(&path) {
+                Ok(hdr) if hdr.hash == hash => {
+                    let meta = ent.metadata()?;
+                    let mtime = meta
+                        .modified()
+                        .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                    found.push((hash, meta.len() as usize, hdr.n_tokens,
+                                mtime));
+                }
+                Ok(hdr) => bad.push((path, format!(
+                    "filename/header hash mismatch (header {:016x})",
+                    hdr.hash))),
+                Err(why) => bad.push((path, why)),
+            }
+        }
+        // seed recency from mtime order: oldest file = first to evict
+        found.sort_by_key(|f| f.3);
+        let doomed = {
+            let mut g = self.inner.lock().unwrap();
+            for (hash, bytes, tokens, _) in found {
+                g.clock += 1;
+                let clock = g.clock;
+                g.index.insert(hash,
+                               DiskSlot { bytes, tokens, last_use: clock });
+                g.stats.current_bytes += bytes;
+            }
+            g.stats.corrupt += bad.len() as u64;
+            // a budget tightened between runs applies immediately
+            self.evict_to_budget_locked(&mut g)
+        };
+        self.remove_files(&doomed);
+        for (path, why) in bad {
+            self.quarantine(&path, &why);
+        }
+        Ok(())
+    }
+
+    /// Move an untrusted file out of the content-addressed namespace
+    /// (deleting it if even that fails) so it can never be served.
+    fn quarantine(&self, path: &Path, why: &str) {
+        let qdir = self.dir.join("quarantine");
+        let _ = fs::create_dir_all(&qdir);
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "entry".to_string());
+        let mut dst = qdir.join(&name);
+        let mut n = 1u32;
+        while dst.exists() {
+            dst = qdir.join(format!("{name}.{n}"));
+            n += 1;
+        }
+        if fs::rename(path, &dst).is_err() {
+            let _ = fs::remove_file(path);
+        }
+        crate::warn!("quarantined disk cache file {}: {}",
+                     path.display(), why);
+    }
+}
+
+impl std::fmt::Debug for DiskDocCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        f.debug_struct("DiskDocCache")
+            .field("dir", &self.dir)
+            .field("entries", &g.index.len())
+            .field("budget_bytes", &g.budget_bytes)
+            .field("stats", &g.stats)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serialization (checksummed with the shared kvcache FNV-1a — see
+// `store::fnv64`)
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_u32(buf, t.shape().len() as u32);
+    for &d in t.shape() {
+        put_u64(buf, d as u64);
+    }
+    for &x in t.data() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_entry(e: &DocEntry) -> Vec<u8> {
+    let payload = (e.kv.numel() + e.attn.numel() + e.q_local.numel()) * 4;
+    let mut buf =
+        Vec::with_capacity(HEADER_LEN + e.tokens.len() * 4 + payload + 128);
+    buf.extend_from_slice(&MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, e.hash);
+    put_u64(&mut buf, e.tokens.len() as u64);
+    for &t in &e.tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    put_tensor(&mut buf, &e.kv);
+    put_tensor(&mut buf, &e.attn);
+    put_tensor(&mut buf, &e.q_local);
+    let sum = fnv64(&buf);
+    put_u64(&mut buf, sum);
+    buf
+}
+
+/// Bounds-checked little-endian reader over a byte slice; every error
+/// is a corruption verdict, never a panic.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if n > self.b.len() - self.i {
+            return Err(format!("truncated at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6],
+                               s[7]]))
+    }
+
+    fn count(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.u64()?;
+        if n > MAX_COUNT {
+            return Err(format!("implausible {what} count {n}"));
+        }
+        Ok(n as usize)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor, String> {
+        let rank = self.u32()? as usize;
+        if rank > 8 {
+            return Err(format!("implausible tensor rank {rank}"));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut numel: u64 = 1;
+        for _ in 0..rank {
+            let d = self.count("dim")? as u64;
+            numel = numel.saturating_mul(d.max(1));
+            shape.push(d as usize);
+        }
+        if numel > MAX_COUNT {
+            return Err(format!("implausible tensor size {numel}"));
+        }
+        let n: usize = shape.iter().product();
+        let raw = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Tensor::new(shape, data).map_err(|e| format!("bad tensor: {e}"))
+    }
+}
+
+struct Header {
+    hash: u64,
+    n_tokens: usize,
+}
+
+fn read_header(path: &Path) -> Result<Header, String> {
+    let mut f = fs::File::open(path).map_err(|e| format!("open: {e}"))?;
+    let mut hdr = [0u8; HEADER_LEN];
+    f.read_exact(&mut hdr)
+        .map_err(|_| "truncated header".to_string())?;
+    parse_header(&hdr)
+}
+
+fn parse_header(hdr: &[u8]) -> Result<Header, String> {
+    let mut rd = Rd { b: hdr, i: 0 };
+    if rd.take(4)? != &MAGIC[..] {
+        return Err("bad magic".to_string());
+    }
+    let version = rd.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported format version {version}"));
+    }
+    let hash = rd.u64()?;
+    let n_tokens = rd.count("token")?;
+    Ok(Header { hash, n_tokens })
+}
+
+/// Decode and fully validate one serialized entry (checksum, hash,
+/// geometry). `Err` is the human-readable corruption reason.
+fn decode_entry(expect_hash: u64, bytes: &[u8]) -> Result<DocEntry, String> {
+    if bytes.len() < HEADER_LEN + 8 {
+        return Err(format!("file too short ({} bytes)", bytes.len()));
+    }
+    let body_len = bytes.len() - 8;
+    let mut tail = Rd { b: bytes, i: body_len };
+    let stored_sum = tail.u64()?;
+    if fnv64(&bytes[..body_len]) != stored_sum {
+        return Err("checksum mismatch".to_string());
+    }
+    let hdr = parse_header(&bytes[..HEADER_LEN])?;
+    if hdr.hash != expect_hash {
+        return Err(format!("header hash {:016x} != expected {:016x}",
+                           hdr.hash, expect_hash));
+    }
+    let mut rd = Rd { b: &bytes[..body_len], i: HEADER_LEN };
+    let raw = rd.take(hdr.n_tokens * 4)?;
+    let mut tokens = Vec::with_capacity(hdr.n_tokens);
+    for c in raw.chunks_exact(4) {
+        tokens.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    let kv = rd.tensor()?;
+    let attn = rd.tensor()?;
+    let q_local = rd.tensor()?;
+    if rd.i != body_len {
+        return Err(format!("{} trailing bytes", body_len - rd.i));
+    }
+    let doc_bytes =
+        kv.size_bytes() + attn.size_bytes() + q_local.size_bytes();
+    Ok(DocEntry {
+        hash: hdr.hash,
+        tokens,
+        kv,
+        attn,
+        q_local,
+        bytes: doc_bytes,
+    })
+}
+
+fn parse_entry_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("doc_")?.strip_suffix(".kv")?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::store::doc_hash;
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "samkv-disk-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn entry(tokens: Vec<i32>) -> DocEntry {
+        let n = tokens.len().max(1);
+        let mut kv = Tensor::zeros(&[1, 2, 1, n, 2]);
+        for (i, x) in kv.data_mut().iter_mut().enumerate() {
+            *x = i as f32 * 0.5 - 1.0;
+        }
+        let attn = Tensor::full(&[1, 1, n, n], 0.25);
+        let q_local = Tensor::full(&[1, 1, 2], -3.5);
+        let bytes =
+            kv.size_bytes() + attn.size_bytes() + q_local.size_bytes();
+        DocEntry { hash: doc_hash(&tokens), tokens, kv, attn, q_local,
+                   bytes }
+    }
+
+    #[test]
+    fn roundtrip_preserves_entry() {
+        let dir = test_dir("roundtrip");
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        let e = entry(vec![1, 2, 3]);
+        assert!(cache.store(&e).unwrap());
+        assert!(cache.contains(e.hash));
+        let back = cache.load(e.hash, &[1, 2, 3]).expect("disk hit");
+        assert_eq!(back.hash, e.hash);
+        assert_eq!(back.tokens, e.tokens);
+        assert_eq!(back.kv, e.kv);
+        assert_eq!(back.attn, e.attn);
+        assert_eq!(back.q_local, e.q_local);
+        assert_eq!(back.bytes, e.bytes);
+        let s = cache.stats();
+        assert_eq!((s.spills, s.hits, s.loads, s.misses), (1, 1, 1, 0));
+        assert!(s.current_bytes > 0);
+        assert_eq!(cache.take_load_samples().len(), 1);
+        assert!(cache.take_load_samples().is_empty(), "drained");
+        // content-addressed: a second store of the same hash is skipped
+        assert!(!cache.store(&e).unwrap());
+        assert_eq!(cache.stats().spills, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restart_scan_reindexes_entries() {
+        let dir = test_dir("restart");
+        let (h1, h2);
+        {
+            let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+            let e1 = entry(vec![1, 2]);
+            let e2 = entry(vec![3, 4, 5]);
+            (h1, h2) = (e1.hash, e2.hash);
+            cache.store(&e1).unwrap();
+            cache.store(&e2).unwrap();
+        }
+        // "process restart": a fresh instance over the same directory
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(h1) && cache.contains(h2));
+        assert!(cache.stats().current_bytes > 0);
+        let back = cache.load(h2, &[3, 4, 5]).expect("warm restart hit");
+        assert_eq!(back.tokens, vec![3, 4, 5]);
+        assert_eq!(cache.stats().hits, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_file_is_quarantined_not_served() {
+        let dir = test_dir("corrupt");
+        let e = entry(vec![7, 8, 9]);
+        {
+            let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+            cache.store(&e).unwrap();
+        }
+        // flip one payload byte: checksum must catch it at load time
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        assert!(cache.load(e.hash, &[7, 8, 9]).is_none(),
+                "corrupt entry must read as a miss");
+        let s = cache.stats();
+        assert_eq!(s.corrupt, 1);
+        assert_eq!(s.hits, 0);
+        assert!(!path.exists(), "corrupt file must leave its address");
+        assert!(fs::read_dir(dir.join("quarantine")).unwrap().count() >= 1,
+                "corrupt file must be quarantined");
+        assert!(!cache.contains(e.hash));
+        // the address is reusable after quarantine
+        assert!(cache.store(&e).unwrap());
+        assert!(cache.load(e.hash, &[7, 8, 9]).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_header_quarantined_at_scan() {
+        let dir = test_dir("trunchdr");
+        let e = entry(vec![4, 4]);
+        {
+            let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+            cache.store(&e).unwrap();
+        }
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..10]).unwrap();
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        assert_eq!(cache.len(), 0, "truncated file must not be indexed");
+        assert_eq!(cache.stats().corrupt, 1);
+        assert!(!path.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_version_quarantined_at_scan() {
+        let dir = test_dir("stale");
+        let e = entry(vec![6]);
+        {
+            let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+            cache.store(&e).unwrap();
+        }
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[4] = 99; // version field
+        fs::write(&path, &bytes).unwrap();
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats().corrupt, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn collision_reads_as_miss_but_keeps_file() {
+        let dir = test_dir("collide");
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        // forge a colliding address: entry stored under the hash of a
+        // *different* document
+        let victim_hash = doc_hash(&[1, 2, 3]);
+        let mut other = entry(vec![9, 9]);
+        other.hash = victim_hash;
+        cache.store(&other).unwrap();
+        assert!(cache.load(victim_hash, &[1, 2, 3]).is_none(),
+                "collision must never serve another document's KV");
+        let s = cache.stats();
+        assert_eq!((s.collisions, s.misses, s.corrupt), (1, 1, 0));
+        // the stored document itself still loads
+        assert!(cache.load(victim_hash, &[9, 9]).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_eviction_deletes_files() {
+        let dir = test_dir("budget");
+        // each entry file is well over 100 bytes; budget of ~2 files
+        let e1 = entry(vec![1; 8]);
+        let one_file = encode_entry(&e1).len();
+        let cache =
+            DiskDocCache::open(&dir, one_file * 2 + one_file / 2).unwrap();
+        cache.store(&e1).unwrap();
+        cache.store(&entry(vec![2; 8])).unwrap();
+        cache.store(&entry(vec![3; 8])).unwrap();
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "over-budget store must evict");
+        assert!(s.current_bytes <= cache.budget_bytes());
+        assert_eq!(cache.len(), 2);
+        // LRU: the first entry was the victim, and its file is gone
+        assert!(!cache.contains(e1.hash));
+        assert!(!dir.join(format!("doc_{:016x}.kv", e1.hash)).exists());
+        assert!(cache.load(e1.hash, &[1; 8]).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn entry_name_parse() {
+        let h = 0x0123456789abcdefu64;
+        assert_eq!(parse_entry_name(&format!("doc_{h:016x}.kv")), Some(h));
+        assert_eq!(parse_entry_name("doc_123.kv"), None);
+        assert_eq!(parse_entry_name("doc_0123456789abcdef.tmp"), None);
+        assert_eq!(parse_entry_name("readme.md"), None);
+    }
+}

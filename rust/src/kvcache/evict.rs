@@ -1,11 +1,13 @@
 //! Pluggable eviction for the document-cache tiers.
 //!
-//! Both tiers ([`super::HostDocCache`] and [`super::EngineDocCache`])
-//! delegate victim selection to an [`EvictionPolicy`]. The tier owns
-//! the mechanism — byte accounting, pin filtering, the eviction loop —
-//! and hands the policy only unpinned candidates; the policy owns the
-//! decision. Policies must be `Send + Sync` because the host tier is
-//! shared across engine threads.
+//! All three tiers ([`super::HostDocCache`], [`super::EngineDocCache`],
+//! and the persistent [`super::DiskDocCache`]) delegate victim
+//! selection to an [`EvictionPolicy`]. The tier owns the mechanism —
+//! byte accounting, pin filtering, the eviction loop, spilling a host
+//! victim to disk before it leaves RAM — and hands the policy only
+//! unpinned candidates; the policy owns the decision. Policies must be
+//! `Send + Sync` because the host and disk tiers are shared across
+//! engine threads.
 
 /// One unpinned cache entry offered for eviction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

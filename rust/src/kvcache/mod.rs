@@ -1,12 +1,13 @@
 //! Multi-context KV cache management: the tiered document cache and
 //! the buffer assembly that consumes it.
 //!
-//! # The two tiers
+//! # The three tiers
 //!
 //! Document KV caches (the "multiple-context KV Cache" of the paper:
 //! each document prefilled independently at local positions) live in a
-//! two-tier subsystem so that one engine's prefill is every engine's
-//! hit:
+//! three-tier storage hierarchy — residency → host → disk — so that
+//! one engine's prefill is every engine's hit, and one *process's*
+//! prefill survives restarts:
 //!
 //! ```text
 //!   engine 0 thread            engine 1 thread         router
@@ -23,6 +24,13 @@
 //! │ HostDocCache (shared host tier, Arc<DocEntry>)  │
 //! │  content-addressed · thread-safe · byte budget  │
 //! │  pin guards · prefill leases (exactly-once)     │
+//! └───────────────────────┬─────────────────────────┘
+//!        miss (in-lease)  │  spill on evict / write-through
+//!                         ▼
+//! ┌─────────────────────────────────────────────────┐
+//! │ DiskDocCache (persistent tier, --disk-cache-dir)│
+//! │  per-hash files · versioned+checksummed format  │
+//! │  own byte budget/eviction · quarantine on error │
 //! └─────────────────────────────────────────────────┘
 //! ```
 //!
@@ -30,10 +38,37 @@
 //! [`HostDocCache`] before running `model.prefill_doc`; a true miss
 //! takes a [`store::PrefillLease`] (concurrent requests for the same
 //! document block until it publishes — each unique document is
-//! prefilled **exactly once process-wide**) and publishes the fresh
-//! entry back to the host tier. Engines advertise their resident
-//! hashes on a [`ResidencyBoard`] so the router can prefer the engine
-//! that already holds a request's documents.
+//! prefilled **exactly once process-wide**), consults the persistent
+//! [`DiskDocCache`] under that lease when one is attached, and only
+//! prefills when the disk misses too — a restarted server or a cold
+//! engine serves a previously-seen document with **zero** model
+//! prefills. Fresh entries are published back to the host tier either
+//! way. Engines advertise their resident hashes on a
+//! [`ResidencyBoard`] so the router can prefer the engine that already
+//! holds a request's documents, and the engine admission thread
+//! prefetches a wave's planned hashes from disk
+//! ([`EngineDocCache::prefetch_from_disk`]) while decode keeps
+//! running, so disk latency overlaps compute.
+//!
+//! # Writeback modes
+//!
+//! Host-tier eviction **spills** instead of dropping
+//! ([`crate::config::DiskWriteback`], `--disk-writeback`): `evict`
+//! writes victims as they leave RAM; `through` persists every host
+//! insert immediately (evictions then find their file already
+//! written — content addressing makes the overlap one write total);
+//! `off` never writes but still reads, so a pre-seeded directory can
+//! warm-start a read-only replica. Disk writes run outside the host
+//! lock and a failed write is only ever a lost future shortcut, never
+//! a correctness problem.
+//!
+//! # Corruption / quarantine contract
+//!
+//! The disk tier never trusts what it reads back: version, filename
+//! hash, checksum, geometry, and the stored token ids are all
+//! validated, and a file failing any check is quarantined (moved out
+//! of the content-addressed namespace) and served as a miss — the
+//! request falls back to a model prefill and succeeds. See [`disk`].
 //!
 //! # Pin-guard contract
 //!
@@ -49,25 +84,31 @@
 //! engine's pins, because evicting another engine's resident copy
 //! cannot invalidate `Arc`-held documents and must not be blockable
 //! cross-engine. An eviction between pins can therefore only ever
-//! cost a recompute, never dangle a reference. Pins are counted
-//! (re-pinning is fine) and may name hashes that are not published
-//! yet.
+//! cost a disk load or a recompute, never dangle a reference. Pins
+//! are counted (re-pinning is fine) and may name hashes that are not
+//! published yet. The disk tier needs no pins: its files are copies,
+//! and live entries are `Arc`-held in RAM.
 //!
 //! # Stats
 //!
-//! Each tier keeps its own [`CacheStats`]; `hits`/`misses`/
-//! `evictions`/`publishes`/`reinserts`/`peak_bytes` are lifetime
-//! counters, `current_bytes` is current state (see [`store`]).
+//! Each RAM tier keeps its own [`CacheStats`]; `hits`/`misses`/
+//! `evictions`/`publishes`/`reinserts`/`hash_collisions`/`peak_bytes`
+//! are lifetime counters, `current_bytes` is current state (see
+//! [`store`]). The disk tier keeps [`DiskStats`] (hits/misses/spills/
+//! loads/corrupt/collisions/evictions/bytes) plus a buffer of
+//! per-load latencies drained into the metrics histogram.
 //!
 //! [`assembly`] — building the fixed-shape sparse/full buffers the AOT
 //! artifacts consume from a set of selected (doc, block) slots.
 
 pub mod assembly;
+pub mod disk;
 pub mod evict;
 pub mod residency;
 pub mod store;
 
 pub use assembly::{AssembledContext, BlockRef, SlotKind};
+pub use disk::{DiskDocCache, DiskStats};
 pub use evict::{
     eviction_policy_by_name, CostAwarePolicy, EvictionCandidate,
     EvictionPolicy, LruPolicy,

@@ -6,7 +6,10 @@
 //! (cache-aware placement). The board is advisory: a stale read only
 //! costs placement quality — the host tier still dedups the actual
 //! prefill work — so entries are plain per-engine hash sets behind
-//! mutexes, updated on admit/evict.
+//! mutexes, updated on admit/evict. Only *device* residency is
+//! advertised: host-tier and persistent disk-tier contents are
+//! engine-agnostic (any engine hits them at equal cost), so they
+//! never influence placement.
 
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex};

@@ -1,6 +1,7 @@
-//! The two document-cache tiers: shared host tier + per-engine
+//! The RAM document-cache tiers: shared host tier + per-engine
 //! residency tier (see the [`super`] module docs for the full diagram
-//! and the pin-guard contract).
+//! and the pin-guard contract; the persistent tier beneath them is
+//! [`super::disk`]).
 //!
 //! [`HostDocCache`] is the process-wide, thread-safe, content-addressed
 //! tier: one entry per unique document (FNV-1a over token ids), shared
@@ -8,6 +9,10 @@
 //! [`PrefillLease`] so each unique document is prefilled **exactly once
 //! process-wide** — concurrent engines asking for the same in-flight
 //! document block until the lease publishes (or is abandoned on error).
+//! With a [`DiskDocCache`] attached ([`HostDocCache::with_disk`]), the
+//! lease holder consults the disk tier before paying a model prefill,
+//! and host-tier entries are spilled to disk instead of dropped
+//! (writeback mode per [`DiskWriteback`]).
 //!
 //! [`EngineDocCache`] is one engine's residency tier: the subset of
 //! host entries "device-resident" for that engine (its own byte budget
@@ -15,11 +20,21 @@
 //! tier, and fresh prefills are published back so one engine's work is
 //! every engine's hit.
 //!
+//! # Hash-collision safety
+//!
+//! Every tier keys on the FNV-1a content hash, so every by-hash hit
+//! **verifies the stored token ids against the requested document**
+//! before serving: a mismatch (two documents colliding on one hash) is
+//! counted in [`CacheStats::hash_collisions`] and treated as a miss —
+//! the colliding prefill then *replaces* the stored entry (reinsert
+//! accounting) rather than silently serving another document's KV.
+//!
 //! # Stats counters: lifetime vs. current
 //!
 //! [`CacheStats`] mixes two kinds of counters. **Lifetime** counters
 //! only grow and survive [`clear`](EngineDocCache::clear): `hits`,
-//! `misses`, `evictions`, `publishes`, `reinserts`, and `peak_bytes`
+//! `misses`, `evictions`, `publishes`, `reinserts`,
+//! `hash_collisions`, and `peak_bytes`
 //! (the high-water mark). **Current** state — `current_bytes` — tracks
 //! what the tier holds right now and resets to zero on `clear`.
 //! [`EngineDocCache::reset_stats`] / [`HostDocCache::reset_stats`]
@@ -31,19 +46,38 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
+use crate::config::DiskWriteback;
 use crate::model::{Model, PrefillDocOut};
 use crate::tensor::Tensor;
 
+use super::disk::DiskDocCache;
 use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy};
 use super::residency::ResidencyHandle;
 
-/// FNV-1a over token ids — the document cache key.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over raw bytes — one definition shared by the content hash
+/// below and the disk tier's file checksum, so the two can never
+/// drift apart.
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over token ids (little-endian bytes) — the document cache
+/// key. Streams per token instead of materializing a byte buffer, but
+/// is bit-identical to [`fnv64`] over the concatenated `to_le_bytes`.
 pub fn doc_hash(tokens: &[i32]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+    let mut h = FNV_OFFSET;
     for &t in tokens {
         for b in t.to_le_bytes() {
             h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
+            h = h.wrapping_mul(FNV_PRIME);
         }
     }
     h
@@ -81,9 +115,9 @@ impl DocEntry {
 }
 
 /// Per-tier counters. Lifetime counters (`hits`, `misses`,
-/// `evictions`, `publishes`, `reinserts`, `peak_bytes`) survive
-/// `clear`; `current_bytes` is current state and resets with the
-/// entries (see the module docs).
+/// `evictions`, `publishes`, `reinserts`, `hash_collisions`,
+/// `peak_bytes`) survive `clear`; `current_bytes` is current state and
+/// resets with the entries (see the module docs).
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -95,6 +129,10 @@ pub struct CacheStats {
     /// Inserts that replaced an entry already present under the same
     /// hash (the old entry's bytes are subtracted, never leaked).
     pub reinserts: u64,
+    /// By-hash hits whose stored token ids did not match the requested
+    /// document (content-hash collision) — served as misses, never as
+    /// another document's KV (see the module docs).
+    pub hash_collisions: u64,
     pub current_bytes: usize,
     pub peak_bytes: usize,
 }
@@ -161,12 +199,20 @@ pub enum HostLookup {
 }
 
 /// The shared host tier: thread-safe, content-addressed document cache
-/// with a byte budget, pluggable eviction, pin guards, and
-/// exactly-once prefill leasing.
+/// with a byte budget, pluggable eviction, pin guards, exactly-once
+/// prefill leasing, and an optional persistent [`DiskDocCache`] tier
+/// beneath it (spill on eviction / write-through per
+/// [`DiskWriteback`]).
 pub struct HostDocCache {
     inner: Mutex<HostInner>,
     published: Condvar,
     policy: Box<dyn EvictionPolicy>,
+    disk: Option<DiskTier>,
+}
+
+struct DiskTier {
+    cache: Arc<DiskDocCache>,
+    writeback: DiskWriteback,
 }
 
 impl HostDocCache {
@@ -201,7 +247,29 @@ impl HostDocCache {
             }),
             published: Condvar::new(),
             policy,
+            disk: None,
         }
+    }
+
+    /// Attach the persistent disk tier. Reads always consult it on a
+    /// host miss (under the miss's prefill lease, so each absent
+    /// document is loaded from disk at most once process-wide);
+    /// `writeback` controls when entries are written (spill on
+    /// eviction, write-through on insert, or never).
+    pub fn with_disk(mut self, disk: Arc<DiskDocCache>,
+                     writeback: DiskWriteback) -> HostDocCache {
+        self.disk = Some(DiskTier { cache: disk, writeback });
+        self
+    }
+
+    /// The attached persistent tier, if any.
+    pub fn disk(&self) -> Option<&Arc<DiskDocCache>> {
+        self.disk.as_ref().map(|d| &d.cache)
+    }
+
+    /// The attached tier's writeback mode, if any.
+    pub fn disk_writeback(&self) -> Option<DiskWriteback> {
+        self.disk.as_ref().map(|d| d.writeback)
     }
 
     /// Unbounded tier (eval harness / tests).
@@ -245,20 +313,30 @@ impl HostDocCache {
 
     /// Fetch-or-lease: a hit bumps recency and returns the entry; a
     /// miss registers the hash as in-flight and returns the lease.
-    /// Blocks while another thread holds the hash's lease (their
-    /// publish becomes our hit — the exactly-once contract).
+    /// `tokens` are the requested document's ids — an entry stored
+    /// under the hash with *different* tokens is a collision and reads
+    /// as a miss (see the module docs). Blocks while another thread
+    /// holds the hash's lease (their publish becomes our hit — the
+    /// exactly-once contract).
     /// Associated fn (not a method): the lease must hold the `Arc`.
-    pub fn lookup_or_begin(host: &Arc<HostDocCache>, hash: u64)
-                           -> HostLookup {
+    pub fn lookup_or_begin(host: &Arc<HostDocCache>, hash: u64,
+                           tokens: &[i32]) -> HostLookup {
         let mut g = host.inner.lock().unwrap();
         loop {
             {
                 let inner = &mut *g;
-                if let Some(slot) = inner.entries.get_mut(&hash) {
-                    inner.clock += 1;
-                    slot.last_use = inner.clock;
-                    inner.stats.hits += 1;
-                    return HostLookup::Hit(Arc::clone(&slot.entry));
+                match inner.entries.get_mut(&hash) {
+                    Some(slot) if slot.entry.tokens == tokens => {
+                        inner.clock += 1;
+                        slot.last_use = inner.clock;
+                        inner.stats.hits += 1;
+                        return HostLookup::Hit(Arc::clone(&slot.entry));
+                    }
+                    // same hash, different document: fall through to
+                    // the miss path — the caller's publish replaces
+                    // the colliding entry
+                    Some(_) => inner.stats.hash_collisions += 1,
+                    None => {}
                 }
                 if !inner.in_flight.contains(&hash) {
                     inner.stats.misses += 1;
@@ -277,15 +355,22 @@ impl HostDocCache {
     }
 
     /// Non-leasing lookup (counts a hit or a miss, never blocks).
-    pub fn try_lookup(&self, hash: u64) -> Option<Arc<DocEntry>> {
+    /// Collision-checked like [`Self::lookup_or_begin`].
+    pub fn try_lookup(&self, hash: u64, tokens: &[i32])
+                      -> Option<Arc<DocEntry>> {
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
         match inner.entries.get_mut(&hash) {
-            Some(slot) => {
+            Some(slot) if slot.entry.tokens == tokens => {
                 inner.clock += 1;
                 slot.last_use = inner.clock;
                 inner.stats.hits += 1;
                 Some(Arc::clone(&slot.entry))
+            }
+            Some(_) => {
+                inner.stats.hash_collisions += 1;
+                inner.stats.misses += 1;
+                None
             }
             None => {
                 inner.stats.misses += 1;
@@ -298,25 +383,59 @@ impl HostDocCache {
     /// Replacing an existing hash subtracts the old entry's bytes —
     /// duplicate inserts never inflate the accounting.
     pub fn publish(&self, entry: Arc<DocEntry>) {
-        {
+        let evicted = {
             let mut g = self.inner.lock().unwrap();
-            Self::insert_locked(&mut g, entry);
-            self.evict_to_budget_locked(&mut g);
-        }
+            Self::insert_locked(&mut g, Arc::clone(&entry));
+            self.evict_to_budget_locked(&mut g)
+        };
         self.published.notify_all();
+        self.writeback(Some(&entry), &evicted);
     }
 
     /// Complete (or abandon) a lease; called by [`PrefillLease`].
     fn finish_lease(&self, hash: u64, entry: Option<Arc<DocEntry>>) {
-        {
+        let evicted = {
             let mut g = self.inner.lock().unwrap();
             g.in_flight.remove(&hash);
-            if let Some(e) = entry {
-                Self::insert_locked(&mut g, e);
-                self.evict_to_budget_locked(&mut g);
+            match &entry {
+                Some(e) => {
+                    Self::insert_locked(&mut g, Arc::clone(e));
+                    self.evict_to_budget_locked(&mut g)
+                }
+                None => Vec::new(),
+            }
+        };
+        self.published.notify_all();
+        self.writeback(entry.as_ref(), &evicted);
+    }
+
+    /// Apply the disk writeback policy after an insert/eviction pass
+    /// (outside the host lock — file writes must not stall lookups):
+    /// write-through persists the fresh insert immediately; both
+    /// write modes persist eviction victims (spill), and the disk
+    /// tier's content addressing makes the overlap free. Write errors
+    /// are logged and dropped — losing a spill only costs a future
+    /// recompute, never correctness.
+    fn writeback(&self, inserted: Option<&Arc<DocEntry>>,
+                 evicted: &[Arc<DocEntry>]) {
+        let Some(d) = &self.disk else { return };
+        if d.writeback == DiskWriteback::Off {
+            return;
+        }
+        if d.writeback == DiskWriteback::Through {
+            if let Some(e) = inserted {
+                if let Err(err) = d.cache.store(e) {
+                    crate::warn!("disk write-through failed for \
+                                  {:016x}: {err:#}", e.hash);
+                }
             }
         }
-        self.published.notify_all();
+        for e in evicted {
+            if let Err(err) = d.cache.store(e) {
+                crate::warn!("disk spill failed for {:016x}: {err:#}",
+                             e.hash);
+            }
+        }
     }
 
     fn insert_locked(g: &mut HostInner, entry: Arc<DocEntry>) {
@@ -330,9 +449,13 @@ impl HostDocCache {
         g.stats.note_insert(bytes, replaced);
     }
 
-    fn evict_to_budget_locked(&self, g: &mut HostInner) {
+    /// Evict down to the byte budget; returns the victims so the
+    /// caller can spill them to the disk tier after the lock drops.
+    fn evict_to_budget_locked(&self, g: &mut HostInner)
+                              -> Vec<Arc<DocEntry>> {
+        let mut victims = Vec::new();
         if g.stats.current_bytes <= g.budget_bytes {
-            return;
+            return victims;
         }
         // build the unpinned candidate list once; the lock is held for
         // the whole pass, so only our own removals invalidate it
@@ -358,7 +481,9 @@ impl HostDocCache {
             let Some(slot) = g.entries.remove(&victim) else { break };
             g.stats.current_bytes -= slot.entry.bytes;
             g.stats.evictions += 1;
+            victims.push(slot.entry);
         }
+        victims
     }
 
     pub fn is_pinned(&self, hash: u64) -> bool {
@@ -384,9 +509,11 @@ impl HostDocCache {
         }
     }
 
-    /// Drop every entry. Lifetime counters and `peak_bytes` survive;
-    /// `current_bytes` resets (see the module docs). Outstanding pins
-    /// and leases are untouched.
+    /// Drop every entry **without** spilling (a deliberate drop, not an
+    /// eviction — the disk tier keeps whatever was already written).
+    /// Lifetime counters and `peak_bytes` survive; `current_bytes`
+    /// resets (see the module docs). Outstanding pins and leases are
+    /// untouched.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.entries.clear();
@@ -515,6 +642,10 @@ pub enum TierHit {
     /// Host-tier hit (published by another engine or an earlier
     /// request); promoted to resident without any prefill.
     Host,
+    /// Loaded from the persistent disk tier (spilled by an earlier
+    /// eviction or a previous process) and re-published to the host
+    /// tier — no model prefill ran.
+    Disk,
     /// Cold everywhere: this call ran the prefill and published it.
     Prefilled,
 }
@@ -618,6 +749,10 @@ impl EngineDocCache {
                 .stats
                 .reinserts
                 .saturating_sub(self.flushed.reinserts),
+            hash_collisions: self
+                .stats
+                .hash_collisions
+                .saturating_sub(self.flushed.hash_collisions),
             current_bytes: self.stats.current_bytes,
             peak_bytes: self.stats.peak_bytes,
         };
@@ -646,26 +781,50 @@ impl EngineDocCache {
                              Arc::clone(&self.own_pins), hashes)
     }
 
+    /// Resident-tier probe with the collision check: `Some` only when
+    /// the stored token ids match the requested document.
+    fn resident_hit(&mut self, hash: u64, tokens: &[i32])
+                    -> Option<Arc<DocEntry>> {
+        let slot = self.resident.get_mut(&hash)?;
+        if slot.entry.tokens != tokens {
+            self.stats.hash_collisions += 1;
+            return None;
+        }
+        slot.last_use = self.clock;
+        self.stats.hits += 1;
+        Some(Arc::clone(&slot.entry))
+    }
+
     /// Fetch the document's KV cache: resident tier, then the shared
-    /// host tier, then prefill (at local positions, offset 0 — the
-    /// multiple-context regime) under an exactly-once lease, publishing
-    /// the result back to the host tier.
+    /// host tier, then — under an exactly-once lease — the persistent
+    /// disk tier, then prefill (at local positions, offset 0 — the
+    /// multiple-context regime), publishing the result back to the
+    /// host tier either way.
     pub fn get_or_prefill(&mut self, model: &Model, tokens: &[i32])
                           -> Result<(Arc<DocEntry>, TierHit)> {
         let h = doc_hash(tokens);
         self.clock += 1;
-        if let Some(slot) = self.resident.get_mut(&h) {
-            slot.last_use = self.clock;
-            self.stats.hits += 1;
-            return Ok((Arc::clone(&slot.entry), TierHit::Resident));
+        if let Some(entry) = self.resident_hit(h, tokens) {
+            return Ok((entry, TierHit::Resident));
         }
         self.stats.misses += 1;
-        match HostDocCache::lookup_or_begin(&self.host, h) {
+        match HostDocCache::lookup_or_begin(&self.host, h, tokens) {
             HostLookup::Hit(entry) => {
                 self.admit(Arc::clone(&entry));
                 Ok((entry, TierHit::Host))
             }
             HostLookup::Miss(lease) => {
+                // the lease serializes both the disk read and the
+                // prefill: each absent document is materialized at
+                // most once process-wide, whichever source supplies it
+                let disk = self.host.disk().cloned();
+                if let Some(disk) = disk {
+                    if let Some(entry) = disk.load(h, tokens) {
+                        lease.publish(Arc::clone(&entry));
+                        self.admit(Arc::clone(&entry));
+                        return Ok((entry, TierHit::Disk));
+                    }
+                }
                 // prefill outside any lock; on error the lease drop
                 // wakes waiters to retry for themselves
                 let out = model.prefill_doc(tokens, 0)?;
@@ -677,26 +836,63 @@ impl EngineDocCache {
         }
     }
 
-    /// Model-free lookup: resident tier, then host tier (promoting a
-    /// hit to resident); `None` on a true miss.
+    /// Model-free lookup: resident tier, then host tier, then the
+    /// persistent disk tier (promoting a hit to resident and — for a
+    /// disk hit — re-publishing it to the host tier); `None` on a true
+    /// miss.
     pub fn lookup(&mut self, tokens: &[i32]) -> Option<Arc<DocEntry>> {
         let h = doc_hash(tokens);
         self.clock += 1;
-        if let Some(slot) = self.resident.get_mut(&h) {
-            slot.last_use = self.clock;
-            self.stats.hits += 1;
-            return Some(Arc::clone(&slot.entry));
+        if let Some(entry) = self.resident_hit(h, tokens) {
+            return Some(entry);
         }
         self.stats.misses += 1;
-        let entry = self.host.try_lookup(h)?;
+        if let Some(entry) = self.host.try_lookup(h, tokens) {
+            self.admit(Arc::clone(&entry));
+            return Some(entry);
+        }
+        let disk = self.host.disk().cloned()?;
+        let entry = disk.load(h, tokens)?;
+        self.host.publish(Arc::clone(&entry));
         self.admit(Arc::clone(&entry));
         Some(entry)
+    }
+
+    /// Warm the host tier from the persistent disk tier for a set of
+    /// planned documents. The engine's admission thread calls this on
+    /// a wave's deduplicated doc hashes *while the decode thread keeps
+    /// emitting tokens*, so disk load latency overlaps decode compute
+    /// the same way assemble does. Documents already resident or
+    /// host-cached are skipped; returns how many entries disk
+    /// supplied. (Prefetch is leaseless — two engines racing on one
+    /// hash can at worst duplicate a file read, never a prefill.)
+    pub fn prefetch_from_disk(&mut self, docs: &[(u64, &[i32])]) -> usize {
+        let Some(disk) = self.host.disk().cloned() else { return 0 };
+        let mut loaded = 0;
+        for &(hash, tokens) in docs {
+            if self.resident.contains_key(&hash)
+                || self.host.contains(hash)
+            {
+                continue;
+            }
+            if let Some(entry) = disk.load(hash, tokens) {
+                self.host.publish(Arc::clone(&entry));
+                self.admit(entry);
+                loaded += 1;
+            }
+        }
+        loaded
     }
 
     /// Insert a pre-computed entry (tests / replay): published to the
     /// host tier and admitted as resident here.
     pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
-        let entry = Arc::new(DocEntry::new(tokens, out));
+        self.insert_entry(Arc::new(DocEntry::new(tokens, out)));
+    }
+
+    /// [`Self::insert`] over an already-built entry (disk replay,
+    /// forged-collision tests).
+    pub fn insert_entry(&mut self, entry: Arc<DocEntry>) {
         self.host.publish(Arc::clone(&entry));
         self.admit(entry);
     }
@@ -805,6 +1001,17 @@ mod tests {
         assert_eq!(doc_hash(&[1, 2, 3]), doc_hash(&[1, 2, 3]));
         assert_ne!(doc_hash(&[1, 2, 3]), doc_hash(&[1, 2, 4]));
         assert_ne!(doc_hash(&[1, 2]), doc_hash(&[2, 1]));
+    }
+
+    #[test]
+    fn doc_hash_is_fnv64_over_le_bytes() {
+        // the streamed doc hash and the byte-level fnv64 (disk-tier
+        // checksum) must stay bit-identical
+        let tokens = [7i32, -3, 65_536];
+        let bytes: Vec<u8> =
+            tokens.iter().flat_map(|t| t.to_le_bytes()).collect();
+        assert_eq!(doc_hash(&tokens), fnv64(&bytes));
+        assert_eq!(doc_hash(&[]), fnv64(&[]));
     }
 
     #[test]
@@ -930,13 +1137,13 @@ mod tests {
         let host = Arc::new(HostDocCache::unbounded());
         let h = doc_hash(&[5]);
         let HostLookup::Miss(lease) =
-            HostDocCache::lookup_or_begin(&host, h)
+            HostDocCache::lookup_or_begin(&host, h, &[5])
         else {
             panic!("expected miss");
         };
         assert_eq!(lease.hash(), h);
         lease.publish(arc_entry(vec![5], 64));
-        match HostDocCache::lookup_or_begin(&host, h) {
+        match HostDocCache::lookup_or_begin(&host, h, &[5]) {
             HostLookup::Hit(e) => assert_eq!(e.hash, h),
             HostLookup::Miss(_) => panic!("published entry must hit"),
         }
@@ -944,13 +1151,15 @@ mod tests {
         // abandoned lease (failed prefill) re-opens the hash
         let h2 = doc_hash(&[6]);
         let HostLookup::Miss(lease2) =
-            HostDocCache::lookup_or_begin(&host, h2)
+            HostDocCache::lookup_or_begin(&host, h2, &[6])
         else {
             panic!("expected miss");
         };
         drop(lease2);
-        assert!(matches!(HostDocCache::lookup_or_begin(&host, h2),
-                         HostLookup::Miss(_)));
+        assert!(matches!(
+            HostDocCache::lookup_or_begin(&host, h2, &[6]),
+            HostLookup::Miss(_)
+        ));
     }
 
     #[test]
@@ -958,14 +1167,14 @@ mod tests {
         let host = Arc::new(HostDocCache::unbounded());
         let h = doc_hash(&[42]);
         let HostLookup::Miss(lease) =
-            HostDocCache::lookup_or_begin(&host, h)
+            HostDocCache::lookup_or_begin(&host, h, &[42])
         else {
             panic!("expected miss");
         };
         let waiter = {
             let host = Arc::clone(&host);
             std::thread::spawn(move || {
-                match HostDocCache::lookup_or_begin(&host, h) {
+                match HostDocCache::lookup_or_begin(&host, h, &[42]) {
                     HostLookup::Hit(e) => e.hash,
                     HostLookup::Miss(_) => panic!("waiter must see the \
                                                    publish, not prefill"),
@@ -1046,6 +1255,141 @@ mod tests {
     fn tier_hit_warmth() {
         assert!(TierHit::Resident.is_warm());
         assert!(TierHit::Host.is_warm());
+        assert!(TierHit::Disk.is_warm());
         assert!(!TierHit::Prefilled.is_warm());
+    }
+
+    /// An entry whose `hash` field deliberately disagrees with its
+    /// token content — two documents colliding on one content hash.
+    fn forged(hash: u64, tokens: Vec<i32>) -> Arc<DocEntry> {
+        let e = DocEntry::new(tokens, fake_entry(64));
+        Arc::new(DocEntry { hash, ..e })
+    }
+
+    #[test]
+    fn host_collision_is_a_miss_not_a_wrong_hit() {
+        // the hash of the document we will ask for, occupied by a
+        // *different* document's entry
+        let h = doc_hash(&[1, 2, 3]);
+        let host = Arc::new(HostDocCache::unbounded());
+        host.publish(forged(h, vec![9, 9]));
+        assert!(host.try_lookup(h, &[1, 2, 3]).is_none(),
+                "collision served another document's KV");
+        let s = host.stats();
+        assert_eq!(s.hash_collisions, 1);
+        assert_eq!(s.misses, 1);
+        // the stored document itself still hits
+        assert!(host.try_lookup(h, &[9, 9]).is_some());
+        // the leasing path also treats the collision as a miss, and
+        // its publish replaces the colliding entry (reinsert, no leak)
+        let HostLookup::Miss(lease) =
+            HostDocCache::lookup_or_begin(&host, h, &[1, 2, 3])
+        else {
+            panic!("collision must fall through to a lease");
+        };
+        lease.publish(forged(h, vec![1, 2, 3]));
+        assert!(host.try_lookup(h, &[1, 2, 3]).is_some());
+        assert_eq!(host.stats().reinserts, 1);
+        assert_eq!(host.len(), 1);
+    }
+
+    #[test]
+    fn resident_collision_is_a_miss_not_a_wrong_hit() {
+        let h = doc_hash(&[1, 2, 3]);
+        let mut s = EngineDocCache::unbounded();
+        s.insert_entry(forged(h, vec![9, 9]));
+        // both the resident slot and the host entry hold [9,9] under
+        // the hash of [1,2,3]: the lookup must come back empty
+        assert!(s.lookup(&[1, 2, 3]).is_none(),
+                "collision served another document's KV");
+        assert_eq!(s.stats().hash_collisions, 1);
+        assert_eq!(s.host_stats().hash_collisions, 1);
+    }
+
+    fn disk_fixture(tag: &str) -> (std::path::PathBuf, Arc<DiskDocCache>) {
+        let dir = std::env::temp_dir().join(format!(
+            "samkv-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk = Arc::new(DiskDocCache::open(&dir, usize::MAX).unwrap());
+        (dir, disk)
+    }
+
+    #[test]
+    fn host_eviction_spills_to_disk_and_reloads() {
+        let (dir, disk) = disk_fixture("spill");
+        // each entry is 136B; a 300B host budget evicts the LRU on the
+        // third publish — the victim must land on disk, not vanish
+        let host = Arc::new(HostDocCache::new(300)
+            .with_disk(Arc::clone(&disk), DiskWriteback::Evict));
+        let mut a = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        a.insert(vec![1], fake_entry(128));
+        a.insert(vec![2], fake_entry(128));
+        a.insert(vec![3], fake_entry(128));
+        assert!(host.stats().evictions >= 1);
+        assert!(!host.contains(doc_hash(&[1])));
+        assert!(disk.contains(doc_hash(&[1])),
+                "evicted entry must spill to the disk tier");
+        assert_eq!(disk.stats().spills, 1,
+                   "evict mode only writes victims");
+        // a cold engine re-loads the spilled entry through the tiers
+        let mut b = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        let e = b.lookup(&[1]).expect("disk tier must backfill");
+        assert_eq!(e.tokens, vec![1]);
+        assert_eq!(disk.stats().hits, 1);
+        assert!(host.contains(doc_hash(&[1])),
+                "disk hit must re-publish to the host tier");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_through_persists_on_publish() {
+        let (dir, disk) = disk_fixture("through");
+        let host = Arc::new(HostDocCache::unbounded()
+            .with_disk(Arc::clone(&disk), DiskWriteback::Through));
+        assert_eq!(host.disk_writeback(), Some(DiskWriteback::Through));
+        host.publish(arc_entry(vec![4], 128));
+        assert!(disk.contains(doc_hash(&[4])),
+                "write-through must persist the insert immediately");
+        assert_eq!(disk.stats().spills, 1);
+        // re-publishing the same content is one write total
+        host.publish(arc_entry(vec![4], 128));
+        assert_eq!(disk.stats().spills, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writeback_off_never_writes_but_still_reads() {
+        let (dir, disk) = disk_fixture("off");
+        // pre-seed the directory as if by an earlier process
+        disk.store(&DocEntry::new(vec![8, 8], fake_entry(64))).unwrap();
+        let host = Arc::new(HostDocCache::new(300)
+            .with_disk(Arc::clone(&disk), DiskWriteback::Off));
+        let mut s = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        s.insert(vec![1], fake_entry(128));
+        s.insert(vec![2], fake_entry(128));
+        s.insert(vec![3], fake_entry(128)); // host evicts, no spill
+        assert_eq!(disk.stats().spills, 1, "off mode must never write");
+        // ...but the pre-seeded entry is still readable
+        assert!(s.lookup(&[8, 8]).is_some());
+        assert_eq!(disk.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reset_stats_resets_flush_baseline() {
+        let mut s = EngineDocCache::unbounded();
+        s.insert(vec![1], fake_entry(64));
+        let _ = s.lookup(&[1]);
+        assert_eq!(s.take_stats_delta().hits, 1);
+        // regression: a reset between two flushes must reset the flush
+        // baseline too — a baseline above the live counters would make
+        // every later delta saturate to zero
+        s.reset_stats();
+        let _ = s.lookup(&[1]);
+        let _ = s.lookup(&[1]);
+        let d = s.take_stats_delta();
+        assert_eq!(d.hits, 2,
+                   "post-reset hits swallowed by a stale flush baseline");
+        assert_eq!(s.take_stats_delta().hits, 0);
     }
 }

@@ -14,10 +14,12 @@ use std::sync::Arc;
 
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
-use samkv::config::ServingConfig;
+use samkv::config::{DiskWriteback, ServingConfig};
 use samkv::coordinator::{Engine, Router};
 use samkv::eval::evaluate;
-use samkv::kvcache::{eviction_policy_by_name, HostDocCache};
+use samkv::kvcache::{
+    eviction_policy_by_name, DiskDocCache, HostDocCache,
+};
 use samkv::metrics::Metrics;
 use samkv::policies::{all_policies, policy_by_name};
 use samkv::runtime::artifacts_dir;
@@ -117,6 +119,10 @@ fn print_help() {
                --max-batch N --batch-window-ms N --max-active N\n  \
                (continuous batching: admission wave size, gather window,\n  \
                 in-flight session cap)\n  \
+               --disk-cache-dir PATH (persistent doc-KV tier; restarts\n  \
+                serve seen docs with zero prefills)\n  \
+               --disk-cache-mb N (0 = unbounded)\n  \
+               --disk-writeback evict|through|off\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
          throughput --policy NAME --requests N --unique N --engines N\n  \
                     --batch-sizes 1,4 --rates 0,32  (sweep)\n  \
@@ -192,6 +198,12 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         // admission wave so `--max-batch 16` is not silently clamped
         max_active: args.get::<usize>("max-active",
                                       defaults.max_active.max(max_batch)),
+        disk_cache_dir: args.get_str("disk-cache-dir", ""),
+        disk_cache_mb: args.get::<usize>("disk-cache-mb",
+                                         defaults.disk_cache_mb),
+        disk_writeback: args
+            .get_str("disk-writeback", defaults.disk_writeback.name())
+            .parse::<DiskWriteback>()?,
         ..defaults
     };
     // the shared host doc-cache tier beneath every engine's residency
@@ -202,11 +214,31 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let eviction = args.get_str("eviction", "lru");
     let evict_policy = eviction_policy_by_name(&eviction)
         .ok_or_else(|| anyhow::anyhow!("unknown eviction `{eviction}`"))?;
-    let host = Arc::new(if host_mb == 0 {
+    let mut host = if host_mb == 0 {
         HostDocCache::auto_sized(evict_policy)
     } else {
         HostDocCache::with_policy(host_mb * 1024 * 1024, evict_policy)
-    });
+    };
+    // the persistent disk tier beneath the host tier: host evictions
+    // spill instead of dropping, and a restarted server re-serves
+    // previously-seen documents with zero model prefills
+    if !cfg.disk_cache_dir.is_empty() {
+        let budget = if cfg.disk_cache_mb == 0 {
+            usize::MAX
+        } else {
+            cfg.disk_cache_mb * 1024 * 1024
+        };
+        let disk =
+            Arc::new(DiskDocCache::open(&cfg.disk_cache_dir, budget)?);
+        info!("disk cache tier at {} ({} entries, {}, writeback {})",
+              cfg.disk_cache_dir,
+              disk.len(),
+              if cfg.disk_cache_mb == 0 { "unbounded".to_string() }
+              else { format!("{}MiB", cfg.disk_cache_mb) },
+              cfg.disk_writeback.name());
+        host = host.with_disk(disk, cfg.disk_writeback);
+    }
+    let host = Arc::new(host);
     let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
            policy {policy}, host cache {} ({eviction}), continuous \

@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::json::Value;
-use crate::kvcache::CacheStats;
+use crate::kvcache::{CacheStats, DiskStats};
 
 /// Log-bucketed latency histogram (microsecond granularity, buckets
 /// doubling from 100us to ~400s).
@@ -137,11 +137,29 @@ pub struct Metrics {
     pub host_publishes: AtomicU64,
     pub host_evictions: AtomicU64,
     pub host_bytes: AtomicU64,
+    /// Host-tier content-hash collisions (by-hash hits whose stored
+    /// token ids did not match — served as misses, never as another
+    /// document's KV).
+    pub host_collisions: AtomicU64,
     /// Per-engine residency tiers, accumulated as per-batch deltas
     /// summed across all engines.
     pub resident_hits: AtomicU64,
     pub resident_misses: AtomicU64,
     pub resident_evictions: AtomicU64,
+    /// Persistent disk tier beneath the host tier: process-wide
+    /// monotone totals folded in with `fetch_max` like the host tier
+    /// (`disk_bytes` is a gauge of the directory's current footprint).
+    pub disk_hits: AtomicU64,
+    pub disk_misses: AtomicU64,
+    pub disk_spills: AtomicU64,
+    pub disk_loads: AtomicU64,
+    pub disk_corrupt: AtomicU64,
+    pub disk_collisions: AtomicU64,
+    pub disk_evictions: AtomicU64,
+    pub disk_bytes: AtomicU64,
+    /// Disk-tier load latency (file read + decode + checksum) per
+    /// successful load.
+    pub disk_load: Histogram,
     started: Mutex<Option<Instant>>,
 }
 
@@ -236,6 +254,8 @@ impl Metrics {
             .fetch_max(host.publishes, Ordering::Relaxed);
         self.host_evictions
             .fetch_max(host.evictions, Ordering::Relaxed);
+        self.host_collisions
+            .fetch_max(host.hash_collisions, Ordering::Relaxed);
         self.host_bytes
             .store(host.current_bytes as u64, Ordering::Relaxed);
         self.resident_hits
@@ -244,6 +264,29 @@ impl Metrics {
             .fetch_add(resident_delta.misses, Ordering::Relaxed);
         self.resident_evictions
             .fetch_add(resident_delta.evictions, Ordering::Relaxed);
+    }
+
+    /// Flush the persistent disk tier's counters (monotone process-wide
+    /// totals, `fetch_max` like the host tier; bytes is a gauge) and
+    /// fold the load-latency samples drained from
+    /// [`crate::kvcache::DiskDocCache::take_load_samples`] into the
+    /// load histogram. The engine calls this after every admission
+    /// wave, beside [`Self::record_cache_tiers`].
+    pub fn record_disk_tier(&self, disk: &DiskStats, load_ms: &[f64]) {
+        self.disk_hits.fetch_max(disk.hits, Ordering::Relaxed);
+        self.disk_misses.fetch_max(disk.misses, Ordering::Relaxed);
+        self.disk_spills.fetch_max(disk.spills, Ordering::Relaxed);
+        self.disk_loads.fetch_max(disk.loads, Ordering::Relaxed);
+        self.disk_corrupt.fetch_max(disk.corrupt, Ordering::Relaxed);
+        self.disk_collisions
+            .fetch_max(disk.collisions, Ordering::Relaxed);
+        self.disk_evictions
+            .fetch_max(disk.evictions, Ordering::Relaxed);
+        self.disk_bytes
+            .store(disk.current_bytes as u64, Ordering::Relaxed);
+        for &ms in load_ms {
+            self.disk_load.observe_ms(ms);
+        }
     }
 
     /// Scheduler-facing serving snapshot as a JSON object (server wire
@@ -270,7 +313,8 @@ impl Metrics {
     }
 
     /// Per-tier cache counters as a JSON object (server wire stats,
-    /// bench artifacts).
+    /// bench artifacts): `host`, `resident`, and the persistent `disk`
+    /// tier (counters + load-latency mean/p50/p95).
     pub fn cache_tiers_json(&self) -> Value {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
         Value::obj()
@@ -280,12 +324,27 @@ impl Metrics {
                      .set("misses", g(&self.host_misses))
                      .set("publishes", g(&self.host_publishes))
                      .set("evictions", g(&self.host_evictions))
+                     .set("collisions", g(&self.host_collisions))
                      .set("bytes", g(&self.host_bytes)))
             .set("resident",
                  Value::obj()
                      .set("hits", g(&self.resident_hits))
                      .set("misses", g(&self.resident_misses))
                      .set("evictions", g(&self.resident_evictions)))
+            .set("disk",
+                 Value::obj()
+                     .set("hits", g(&self.disk_hits))
+                     .set("misses", g(&self.disk_misses))
+                     .set("spills", g(&self.disk_spills))
+                     .set("loads", g(&self.disk_loads))
+                     .set("corrupt", g(&self.disk_corrupt))
+                     .set("collisions", g(&self.disk_collisions))
+                     .set("evictions", g(&self.disk_evictions))
+                     .set("bytes", g(&self.disk_bytes))
+                     .set("load_mean_ms", self.disk_load.mean_ms())
+                     .set("load_p50_ms", self.disk_load.percentile_ms(0.50))
+                     .set("load_p95_ms",
+                          self.disk_load.percentile_ms(0.95)))
     }
 
     pub fn uptime_s(&self) -> f64 {
@@ -318,7 +377,9 @@ impl Metrics {
              assemble_overlap={:.1}ms \
              e2e(mean={:.1}ms p95={:.1}ms) throughput={:.2}req/s \
              host(hits={} misses={} publishes={} evictions={} bytes={}) \
-             resident(hits={} misses={} evictions={})",
+             resident(hits={} misses={} evictions={}) \
+             disk(hits={} misses={} spills={} loads={} corrupt={} \
+             bytes={} load_mean={:.1}ms)",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -350,6 +411,13 @@ impl Metrics {
             self.resident_hits.load(Ordering::Relaxed),
             self.resident_misses.load(Ordering::Relaxed),
             self.resident_evictions.load(Ordering::Relaxed),
+            self.disk_hits.load(Ordering::Relaxed),
+            self.disk_misses.load(Ordering::Relaxed),
+            self.disk_spills.load(Ordering::Relaxed),
+            self.disk_loads.load(Ordering::Relaxed),
+            self.disk_corrupt.load(Ordering::Relaxed),
+            self.disk_bytes.load(Ordering::Relaxed),
+            self.disk_load.mean_ms(),
         )
     }
 }
@@ -416,7 +484,59 @@ mod tests {
         assert_eq!(m.resident_misses.load(Ordering::Relaxed), 2);
         let j = m.cache_tiers_json().to_string();
         assert!(j.contains("\"host\"") && j.contains("\"resident\""), "{j}");
+        assert!(j.contains("\"disk\""), "{j}");
         assert!(m.report().contains("host(hits=5"), "{}", m.report());
+    }
+
+    #[test]
+    fn disk_tier_counters_flush() {
+        let m = Metrics::new();
+        let d = DiskStats {
+            hits: 4,
+            misses: 2,
+            spills: 3,
+            loads: 5,
+            corrupt: 1,
+            collisions: 1,
+            evictions: 2,
+            current_bytes: 4096,
+        };
+        m.record_disk_tier(&d, &[1.5, 2.5]);
+        // monotone totals: a second (stale) snapshot can never regress
+        m.record_disk_tier(&DiskStats { hits: 3, current_bytes: 1024,
+                                        ..DiskStats::default() },
+                           &[]);
+        assert_eq!(m.disk_hits.load(Ordering::Relaxed), 4);
+        assert_eq!(m.disk_spills.load(Ordering::Relaxed), 3);
+        assert_eq!(m.disk_corrupt.load(Ordering::Relaxed), 1);
+        // bytes is a gauge: last write wins
+        assert_eq!(m.disk_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(m.disk_load.count(), 2);
+        assert!((m.disk_load.mean_ms() - 2.0).abs() < 1e-6);
+        let j = m.cache_tiers_json().to_string();
+        for field in ["\"disk\"", "\"spills\"", "\"loads\"", "\"corrupt\"",
+                      "\"load_mean_ms\"", "\"load_p50_ms\"",
+                      "\"load_p95_ms\"", "\"collisions\""] {
+            assert!(j.contains(field), "{field}: {j}");
+        }
+        assert!(m.report().contains("disk(hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn empty_histograms_serialize_finite() {
+        // regression: empty histograms must report 0.0 (never NaN), so
+        // the wire snapshot and BENCH_serving.json stay valid JSON for
+        // the CI regression gate
+        let h = Histogram::default();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.percentile_ms(0.50), 0.0);
+        assert_eq!(h.percentile_ms(0.95), 0.0);
+        let m = Metrics::new();
+        for j in [m.serving_json().to_string(),
+                  m.cache_tiers_json().to_string()] {
+            assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+            assert!(crate::json::parse(&j).is_ok(), "{j}");
+        }
     }
 
     #[test]

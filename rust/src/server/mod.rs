@@ -15,7 +15,10 @@
 //! round counters, and the batched-dispatch gauges: `batched_rounds`,
 //! `round_executions` / `executions_per_round`, `lane_occupancy`,
 //! `assemble_overlap_ms`), and the per-tier document-cache counters
-//! (`{"cache":{"host":{...},"resident":{...}}}`);
+//! (`{"cache":{"host":{...},"resident":{...},"disk":{...}}}` — the
+//! `disk` object carries the persistent tier's hits/misses/spills/
+//! loads/corrupt/collisions/evictions/bytes plus the load-latency
+//! mean/p50/p95);
 //! `{"cmd":"shutdown"}` stops the listener.
 
 use std::io::{BufRead, BufReader, Write};

@@ -1,0 +1,164 @@
+//! Persistent disk-tier integration over the tiny artifacts: a served
+//! request's document KV caches must survive a full process-side cache
+//! stack teardown (engine + host tier + disk handle all dropped) and
+//! be served after the "restart" with **zero** model prefills and
+//! token-identical output; a corrupt cache file must be quarantined
+//! and fall back to a prefill without failing the request.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use samkv::config::{DiskWriteback, ServingConfig};
+use samkv::coordinator::{Engine, Router, ServeRequest, ServeResponse};
+use samkv::kvcache::{doc_hash, DiskDocCache, HostDocCache};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::workload::{Dataset, Sample};
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+fn cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("samkv-itest-disk-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One complete process-side serving stack over a disk cache dir:
+/// fresh metrics, fresh host tier (write-through to disk), one engine.
+/// Serves the sample and returns (response, metrics, disk handle).
+/// Dropping everything it allocated is the "process restart".
+fn serve_once(dir: &PathBuf, sample: &Sample)
+              -> (ServeResponse, Arc<Metrics>, Arc<DiskDocCache>) {
+    let metrics = Arc::new(Metrics::new());
+    let disk = Arc::new(DiskDocCache::open(dir, usize::MAX).unwrap());
+    let host = Arc::new(
+        HostDocCache::unbounded()
+            .with_disk(Arc::clone(&disk), DiskWriteback::Through),
+    );
+    let router = Arc::new(Router::new(1));
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "Reuse".to_string(), Arc::clone(&metrics),
+                               host, Some(router.residency_handle(0)))
+        .unwrap();
+    let resp = engine
+        .handle()
+        .serve(ServeRequest {
+            id: 1,
+            sample: sample.clone(),
+            policy: String::new(),
+            stream: false,
+        })
+        .unwrap();
+    (resp, metrics, disk)
+}
+
+#[test]
+fn warm_restart_serves_with_zero_prefills() {
+    let Some(ds) = ready() else { return };
+    let dir = cache_dir("warm");
+    let sample = ds.samples[0].clone();
+    let n_unique = sample
+        .docs
+        .iter()
+        .map(|d| doc_hash(d))
+        .collect::<std::collections::HashSet<_>>()
+        .len() as u64;
+
+    // --- cold process: prefills, write-through spills to disk --------
+    let cold_answer;
+    {
+        let (resp, metrics, disk) = serve_once(&dir, &sample);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(!resp.stats.cache_warm, "first run must be cold");
+        assert!(metrics.doc_prefills.load(Ordering::Relaxed) > 0,
+                "cold run must prefill");
+        assert_eq!(disk.stats().spills, n_unique,
+                   "write-through must persist each unique doc once");
+        cold_answer = resp.answer;
+        // everything process-side drops here: engine threads join, the
+        // host tier and the disk index are gone — only files remain
+    }
+
+    // --- "restarted" process: same dir, fresh stack ------------------
+    {
+        let (resp, metrics, disk) = serve_once(&dir, &sample);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.answer, cold_answer,
+                   "warm restart must be token-identical");
+        assert!(resp.stats.cache_warm,
+                "disk-served docs must count as a warm cache");
+        assert_eq!(metrics.doc_prefills.load(Ordering::Relaxed), 0,
+                   "a previously-seen document must never re-prefill \
+                    after a restart");
+        assert!(disk.stats().hits >= n_unique,
+                "every unique doc must load from disk");
+        assert_eq!(disk.stats().corrupt, 0);
+        assert!(metrics.disk_hits.load(Ordering::Relaxed) >= n_unique,
+                "disk hits must flush into the metrics registry");
+        assert!(metrics.report().contains("disk(hits="));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_cache_file_quarantined_and_request_succeeds() {
+    let Some(ds) = ready() else { return };
+    let dir = cache_dir("corrupt");
+    let sample = ds.samples[0].clone();
+
+    let cold_answer = {
+        let (resp, _, _) = serve_once(&dir, &sample);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        resp.answer
+    };
+
+    // truncate one cache file mid-payload: the header stays valid (the
+    // restart scan indexes it) but the checksum read must fail at load
+    // time, exercising the per-request quarantine + prefill fallback
+    let victim = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| {
+            p.extension().map(|x| x == "kv").unwrap_or(false)
+        })
+        .expect("a spilled cache file");
+    let bytes = std::fs::read(&victim).unwrap();
+    assert!(bytes.len() > 64);
+    std::fs::write(&victim, &bytes[..64]).unwrap();
+
+    {
+        let (resp, metrics, disk) = serve_once(&dir, &sample);
+        assert!(resp.error.is_none(),
+                "corrupt cache file must not fail the request: {:?}",
+                resp.error);
+        assert_eq!(resp.answer, cold_answer,
+                   "fallback prefill must be token-identical");
+        assert_eq!(disk.stats().corrupt, 1,
+                   "the truncated file must be detected");
+        assert!(metrics.doc_prefills.load(Ordering::Relaxed) > 0,
+                "the corrupt doc must fall back to a model prefill");
+        assert!(!victim.exists(),
+                "corrupt file must leave its content address");
+        assert!(dir.join("quarantine").exists(),
+                "corrupt file must be quarantined, not deleted");
+        // write-through re-persisted the re-prefilled document
+        assert!(disk.stats().spills >= 1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
