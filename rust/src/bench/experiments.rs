@@ -410,8 +410,10 @@ where
 /// restart (zero model prefills, documents served off disk). Returns
 /// the per-run JSON row: tokens/sec, TTFT and queue-wait percentiles,
 /// fused and batched decode-round counters (executions per round,
-/// lane occupancy, admission/decode overlap), and the per-tier cache
-/// behaviour. With `n_engines >= 2` the host-tier publish counter
+/// lane occupancy, admission/decode overlap), the per-tier cache
+/// behaviour, and the KV block-pool counters (`pool_*`: slot gauges
+/// plus share-hit / partial-eviction events). With `n_engines >= 2`
+/// the host-tier publish counter
 /// proves the cross-engine dedup: each unique document is prefilled
 /// exactly once process-wide.
 pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
@@ -606,9 +608,23 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         .set("disk_spills", load(&metrics.disk_spills))
         .set("disk_loads", load(&metrics.disk_loads))
         .set("disk_corrupt", load(&metrics.disk_corrupt))
+        .set("disk_corrupt_blocks", load(&metrics.disk_corrupt_blocks))
         .set("disk_evictions", load(&metrics.disk_evictions))
         .set("disk_bytes", load(&metrics.disk_bytes))
-        .set("disk_load_mean_ms", metrics.disk_load.mean_ms()))
+        .set("disk_load_mean_ms", metrics.disk_load.mean_ms())
+        // KV block-pool counters (slot gauges + monotone events; the
+        // share-hit and partial-eviction counters are what the bench
+        // smoke asserts to prove block-granular behaviour is live)
+        .set("pool_slots_total", load(&metrics.pool_slots_total))
+        .set("pool_slots_live", load(&metrics.pool_slots_live))
+        .set("pool_slots_free", load(&metrics.pool_slots_free))
+        .set("pool_slab_bytes", load(&metrics.pool_slab_bytes))
+        .set("pool_grow_events", load(&metrics.pool_grow_events))
+        .set("pool_blocks_evicted", load(&metrics.pool_blocks_evicted))
+        .set("pool_blocks_spilled", load(&metrics.pool_blocks_spilled))
+        .set("pool_share_hits", load(&metrics.pool_share_hits))
+        .set("pool_partial_evictions",
+             load(&metrics.pool_partial_evictions)))
 }
 
 /// Cold-vs-warm-start pair over one persistent disk cache directory:

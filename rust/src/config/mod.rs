@@ -231,6 +231,11 @@ pub struct ServingConfig {
     pub disk_cache_mb: usize,
     /// Host-tier → disk-tier writeback mode (`--disk-writeback`).
     pub disk_writeback: DiskWriteback,
+    /// Token span of one KV pool block (`--kv-block-tokens`): the unit
+    /// of slab allocation, eviction, spill, and prefix sharing in
+    /// [`crate::kvcache::KvBlockPool`]. Smaller blocks evict and share
+    /// at finer grain but cost more per-block bookkeeping.
+    pub kv_block_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -247,6 +252,7 @@ impl Default for ServingConfig {
             disk_cache_dir: String::new(),
             disk_cache_mb: 0,
             disk_writeback: DiskWriteback::Evict,
+            kv_block_tokens: crate::kvcache::DEFAULT_KV_BLOCK_TOKENS,
         }
     }
 }
@@ -311,6 +317,9 @@ mod tests {
         assert_eq!(c.batch_window_ms, 2);
         assert!(c.max_active >= c.max_batch,
                 "default pool must fit a full admission wave");
+        assert_eq!(c.kv_block_tokens,
+                   crate::kvcache::DEFAULT_KV_BLOCK_TOKENS);
+        assert_eq!(c.kv_block_tokens, 64);
     }
 
     #[test]

@@ -32,8 +32,9 @@
 //!    sessions are handed to the decode thread over a channel; requests
 //!    that fail any stage are answered immediately and their pool slot
 //!    released. Per-request queue wait (submit → plan start) is
-//!    recorded here, and the per-tier cache counters are flushed after
-//!    every wave so they cannot go stale under continuous admission.
+//!    recorded here, and the per-tier cache counters plus the KV
+//!    block-pool snapshot are flushed after every wave so they cannot
+//!    go stale under continuous admission.
 //!
 //! 2. **Decode thread.** Integrates admitted sessions between rounds
 //!    (blocking only when its pool is empty), then runs one fused
@@ -628,6 +629,7 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
         metrics.record_disk_tier(&disk.stats(),
                                  &disk.take_load_samples());
     }
+    metrics.record_pool(&store.host().pool().stats());
 
     // --- survivors go to the decode pool -------------------------------
     let mut ready = Vec::with_capacity(sessions.len());

@@ -5,6 +5,13 @@
 //! token ids (for recomputation), *global* joint-layout positions (RoPE
 //! for recomputed/decoded tokens + causal masking), and the originating
 //! block (for write-back and ratio accounting).
+//!
+//! Document KV is **gathered straight out of the paged block pool**
+//! ([`crate::kvcache::pool::KvBlocks::copy_span`]): an append reads
+//! only the pool slots its token span touches, so assembling a sparse
+//! buffer never materialises a document's full tensor. Appending a
+//! span whose pool block was evicted is an error — callers pin their
+//! planned documents (or planned blocks) for exactly this window.
 
 use anyhow::{bail, Result};
 
@@ -104,12 +111,10 @@ impl AssembledContext {
         for l in 0..self.n_layers {
             for c in 0..2 {
                 for h in 0..self.n_heads {
-                    let src = entry.kv.slice_at(&[l, c, h]);
-                    let dst = self.kv.slice_at_mut(&[l, c, h]);
                     let d = self.head_dim;
-                    dst[(slot) * d..(slot + bs) * d].copy_from_slice(
-                        &src[start_tok * d..(start_tok + bs) * d],
-                    );
+                    let dst = self.kv.slice_at_mut(&[l, c, h]);
+                    entry.kv.copy_span(l, c, h, start_tok, bs,
+                                       &mut dst[slot * d..(slot + bs) * d])?;
                 }
             }
         }
@@ -183,10 +188,11 @@ impl AssembledContext {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::json;
-    use crate::kvcache::store::doc_hash;
-    use crate::model::PrefillDocOut;
+    use crate::kvcache::pool::KvBlockPool;
 
     fn tiny_cfg() -> ProfileConfig {
         let v = json::parse(
@@ -221,15 +227,17 @@ mod tests {
             }
         }
         let tokens: Vec<i32> = (0..ld as i32).map(|t| seed * 100 + t).collect();
-        DocEntry {
-            hash: doc_hash(&tokens),
+        // 5-token pool blocks deliberately misalign with the 8-token
+        // assembly block_size, so appends exercise cross-slot spans
+        let pool = Arc::new(KvBlockPool::new(5));
+        DocEntry::from_parts(
+            &pool,
             tokens,
             kv,
-            attn: Tensor::zeros(&[cfg.n_layers, cfg.n_heads, ld, ld]),
-            q_local: Tensor::zeros(&[cfg.n_layers, cfg.n_heads,
-                                     cfg.head_dim]),
-            bytes: 0,
-        }
+            Tensor::zeros(&[cfg.n_layers, cfg.n_heads, ld, ld]),
+            Tensor::zeros(&[cfg.n_layers, cfg.n_heads, cfg.head_dim]),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -275,6 +283,21 @@ mod tests {
         assert!(ctx
             .append_block(&cfg, &doc, 0, 0, SlotKind::Full)
             .is_err());
+    }
+
+    #[test]
+    fn append_from_evicted_pool_block_fails() {
+        let cfg = tiny_cfg();
+        let doc = fake_doc(&cfg, 1);
+        // drop the first 5-token pool block: tokens 0..5 are holes
+        doc.kv.take_block_data(0).unwrap();
+        let mut ctx = AssembledContext::new(&cfg, Buffer::Sparse);
+        assert!(ctx
+            .append_block(&cfg, &doc, 0, 0, SlotKind::Init)
+            .is_err());
+        // a span over still-resident pool blocks assembles fine
+        ctx.append_block(&cfg, &doc, 0, 1, SlotKind::Local).unwrap();
+        assert_eq!(ctx.kv.at(&[0, 0, 0, 0, 0]), 1008.0);
     }
 
     #[test]

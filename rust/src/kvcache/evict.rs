@@ -8,31 +8,55 @@
 //! unpinned candidates; the policy owns the decision. Policies must be
 //! `Send + Sync` because the host and disk tiers are shared across
 //! engine threads.
+//!
+//! Since the paged block pool landed, candidates are **block-granular**
+//! where the tier stores blocks: the host tier offers one candidate per
+//! resident `(document, block)` pair, so a hot document's cold tail
+//! blocks can leave independently while its pinned or recently-used
+//! head stays warm. Tiers that still evict whole entries (the engine
+//! residency map, per-file disk eviction) pass [`WHOLE_ENTRY`] as the
+//! block index.
 
-/// One unpinned cache entry offered for eviction.
+/// Block index marking a whole-entry candidate (tiers that don't
+/// subdivide entries into pool blocks).
+pub const WHOLE_ENTRY: u32 = u32::MAX;
+
+/// One unpinned cache unit (a KV block, or a whole entry) offered for
+/// eviction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EvictionCandidate {
     pub hash: u64,
-    /// Bytes freed by evicting this entry.
+    /// Block index within the document's pooled KV, or [`WHOLE_ENTRY`]
+    /// for doc-granular tiers. Within one document all blocks share a
+    /// `last_use` (the tiers track recency per entry), so policies use
+    /// the block index as the intra-document tie-break: **higher blocks
+    /// first** — the tail of a document is colder than its head under
+    /// causal attention (prefix reuse keeps heads hot).
+    pub block: u32,
+    /// Bytes freed by evicting this unit.
     pub bytes: usize,
     /// Tier clock at the entry's last access (higher = more recent).
     pub last_use: u64,
-    /// Proxy for the cost of re-creating the entry on a future miss:
-    /// the document length in tokens (prefill cost scales with it).
+    /// Proxy for the cost of re-creating the unit on a future miss:
+    /// the document length in tokens (prefill cost scales with it —
+    /// a single block still costs a whole-document prefill when the
+    /// disk tier can't supply it).
     pub recompute_cost: usize,
 }
 
-/// Chooses which entry a tier evicts when over its byte budget.
+/// Chooses which unit a tier evicts when over its byte budget.
 pub trait EvictionPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Pick the victim's hash, or `None` to refuse (stops the eviction
-    /// loop even if the tier is still over budget — e.g. every entry
-    /// is pinned). Must return a hash from `candidates`.
-    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64>;
+    /// Pick the victim's **index into `candidates`**, or `None` to
+    /// refuse (stops the eviction loop even if the tier is still over
+    /// budget — e.g. every candidate is pinned).
+    fn pick_victim(&self, candidates: &[EvictionCandidate])
+                   -> Option<usize>;
 }
 
-/// Least-recently-used (the seed store's behaviour).
+/// Least-recently-used (the seed store's behaviour), tail blocks first
+/// within one document.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct LruPolicy;
 
@@ -41,14 +65,20 @@ impl EvictionPolicy for LruPolicy {
         "lru"
     }
 
-    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64> {
-        candidates.iter().min_by_key(|c| c.last_use).map(|c| c.hash)
+    fn pick_victim(&self, candidates: &[EvictionCandidate])
+                   -> Option<usize> {
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| (c.last_use, std::cmp::Reverse(c.block)))
+            .map(|(i, _)| i)
     }
 }
 
-/// Cost-aware: evict the entry whose bytes are cheapest to get back —
-/// the minimum recompute-cost per byte freed — so large, cheap entries
-/// leave before small, expensive ones. Ties fall back to LRU.
+/// Cost-aware: evict the unit whose bytes are cheapest to get back —
+/// the minimum recompute-cost per byte freed — so large, cheap blocks
+/// leave before small, expensive ones. Ties fall back to LRU, then to
+/// tail-blocks-first.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CostAwarePolicy;
 
@@ -63,16 +93,19 @@ impl EvictionPolicy for CostAwarePolicy {
         "cost-aware"
     }
 
-    fn pick_victim(&self, candidates: &[EvictionCandidate]) -> Option<u64> {
+    fn pick_victim(&self, candidates: &[EvictionCandidate])
+                   -> Option<usize> {
         candidates
             .iter()
-            .min_by(|a, b| {
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
                 Self::cost_per_byte(a)
                     .partial_cmp(&Self::cost_per_byte(b))
                     .unwrap_or(std::cmp::Ordering::Equal)
                     .then(a.last_use.cmp(&b.last_use))
+                    .then(b.block.cmp(&a.block))
             })
-            .map(|c| c.hash)
+            .map(|(i, _)| i)
     }
 }
 
@@ -92,15 +125,32 @@ mod tests {
 
     fn cand(hash: u64, bytes: usize, last_use: u64, cost: usize)
             -> EvictionCandidate {
-        EvictionCandidate { hash, bytes, last_use, recompute_cost: cost }
+        EvictionCandidate { hash, block: WHOLE_ENTRY, bytes, last_use,
+                            recompute_cost: cost }
+    }
+
+    fn block_cand(hash: u64, block: u32, last_use: u64)
+                  -> EvictionCandidate {
+        EvictionCandidate { hash, block, bytes: 100, last_use,
+                            recompute_cost: 32 }
     }
 
     #[test]
     fn lru_picks_oldest() {
         let cs = [cand(1, 10, 5, 32), cand(2, 10, 3, 32),
                   cand(3, 10, 9, 32)];
-        assert_eq!(LruPolicy.pick_victim(&cs), Some(2));
+        assert_eq!(LruPolicy.pick_victim(&cs), Some(1));
         assert_eq!(LruPolicy.pick_victim(&[]), None);
+    }
+
+    #[test]
+    fn lru_evicts_tail_blocks_of_a_document_first() {
+        // same doc, same last_use: the coldest (highest) block goes
+        // first, so a document drains tail-to-head
+        let cs = [block_cand(7, 0, 4), block_cand(7, 2, 4),
+                  block_cand(7, 1, 4), block_cand(9, 3, 9)];
+        assert_eq!(LruPolicy.pick_victim(&cs), Some(1),
+                   "block 2 is the cold tail of the LRU doc");
     }
 
     #[test]
@@ -108,14 +158,18 @@ mod tests {
         // entry 1: huge but cheap to recompute; entry 2: small and
         // expensive per byte — 1 must go first despite being recent
         let cs = [cand(1, 4096, 9, 32), cand(2, 64, 1, 32)];
-        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(1));
+        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(0));
     }
 
     #[test]
-    fn cost_aware_ties_fall_back_to_lru() {
+    fn cost_aware_ties_fall_back_to_lru_then_tail_block() {
         let cs = [cand(1, 100, 7, 50), cand(2, 100, 2, 50)];
-        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(2));
+        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(1));
         assert_eq!(CostAwarePolicy.pick_victim(&[]), None);
+        // full tie on cost and recency: tail block wins
+        let cs = [block_cand(7, 1, 4), block_cand(7, 3, 4),
+                  block_cand(7, 0, 4)];
+        assert_eq!(CostAwarePolicy.pick_victim(&cs), Some(1));
     }
 
     #[test]

@@ -1,5 +1,30 @@
-//! Multi-context KV cache management: the tiered document cache and
-//! the buffer assembly that consumes it.
+//! Multi-context KV cache management: the paged block pool, the tiered
+//! document cache built on it, and the buffer assembly that consumes
+//! both.
+//!
+//! # The paged block pool
+//!
+//! All document KV in RAM lives in one process-wide
+//! [`pool::KvBlockPool`]: a contiguous f32 slab divided into
+//! fixed-size **slots**, each holding a `--kv-block-tokens` span
+//! (default [`pool::DEFAULT_KV_BLOCK_TOKENS`]) of every layer's K and
+//! V for one document, channel-major. The slab invariants:
+//!
+//! * **slot = allocation unit.** A free list gives O(1) alloc/free;
+//!   the slab grows by doubling (old slots keep their contents and
+//!   indices), so there is zero external fragmentation and no
+//!   per-document resize copies.
+//! * **blocks are refcounted.** A [`pool::BlockRef`] is a shared
+//!   handle; clones bump the refcount, the last drop frees the slot.
+//!   Identical block payloads are deduplicated content-addressed (two
+//!   documents sharing a prefix — or the same document admitted twice
+//!   — share slots, verified byte-for-byte before sharing), and
+//!   writes to a shared block copy-on-write into a fresh slot.
+//! * **a document is a block-index list.** [`pool::KvBlocks`] maps
+//!   block index → `Option<BlockRef>`; a `None` is a **hole** (that
+//!   block was evicted). Reads ([`pool::KvBlocks::copy_span`],
+//!   `gather`) cross slot boundaries transparently and fail cleanly
+//!   on holes.
 //!
 //! # The three tiers
 //!
@@ -24,15 +49,44 @@
 //! │ HostDocCache (shared host tier, Arc<DocEntry>)  │
 //! │  content-addressed · thread-safe · byte budget  │
 //! │  pin guards · prefill leases (exactly-once)     │
+//! │  block-granular eviction over the KvBlockPool   │
 //! └───────────────────────┬─────────────────────────┘
-//!        miss (in-lease)  │  spill on evict / write-through
+//!   block spill on evict  │  block refill on partial hit
 //!                         ▼
 //! ┌─────────────────────────────────────────────────┐
 //! │ DiskDocCache (persistent tier, --disk-cache-dir)│
-//! │  per-hash files · versioned+checksummed format  │
+//! │  per-hash block-list files, per-block checksums │
 //! │  own byte budget/eviction · quarantine on error │
 //! └─────────────────────────────────────────────────┘
 //! ```
+//!
+//! # Tier crossings are block-granular
+//!
+//! The tiers exchange **blocks**, not whole documents:
+//!
+//! * **Host eviction** offers the policy one candidate per resident
+//!   `(document, block)` pair and evicts single blocks — a partially
+//!   evicted document stays in the host map and still serves its
+//!   resident blocks warm; only a document whose last block leaves is
+//!   removed. Victim payloads **spill** to the disk tier as block
+//!   records ([`crate::config::DiskWriteback`], `--disk-writeback`):
+//!   `evict` writes victims as they leave RAM, `through` persists
+//!   every host insert immediately, `off` never writes but still
+//!   reads. Disk writes run outside the host lock; a failed write is
+//!   only ever a lost future shortcut.
+//! * **Host lookup** of a partial document refills just the holes
+//!   from disk ([`DiskDocCache::load_blocks_into`]); a prefill lease
+//!   taken over a partial entry carries it, so the leaseholder
+//!   restores blocks instead of re-prefilling the whole document.
+//! * **Disk files mirror the block structure** (format v2): a
+//!   checksummed metadata section plus one independently checksummed
+//!   record per block, so a corrupt block quarantines alone and
+//!   repeated spills of one document merge toward one complete file.
+//!   See [`disk`] for the full corruption / staleness contract.
+//! * The **residency tier** stays doc-granular: it holds `Arc`
+//!   handles, advertises whole documents on the [`ResidencyBoard`]
+//!   (see [`residency`]), and a fully-resident check guards its warm
+//!   hits.
 //!
 //! A [`EngineDocCache::get_or_prefill`] miss consults the shared
 //! [`HostDocCache`] before running `model.prefill_doc`; a true miss
@@ -43,67 +97,55 @@
 //! prefills when the disk misses too — a restarted server or a cold
 //! engine serves a previously-seen document with **zero** model
 //! prefills. Fresh entries are published back to the host tier either
-//! way. Engines advertise their resident hashes on a
-//! [`ResidencyBoard`] so the router can prefer the engine that already
-//! holds a request's documents, and the engine admission thread
-//! prefetches a wave's planned hashes from disk
-//! ([`EngineDocCache::prefetch_from_disk`]) while decode keeps
-//! running, so disk latency overlaps compute.
+//! way, and the engine admission thread prefetches a wave's planned
+//! hashes from disk ([`EngineDocCache::prefetch_from_disk`]) while
+//! decode keeps running, so disk latency overlaps compute.
 //!
-//! # Writeback modes
-//!
-//! Host-tier eviction **spills** instead of dropping
-//! ([`crate::config::DiskWriteback`], `--disk-writeback`): `evict`
-//! writes victims as they leave RAM; `through` persists every host
-//! insert immediately (evictions then find their file already
-//! written — content addressing makes the overlap one write total);
-//! `off` never writes but still reads, so a pre-seeded directory can
-//! warm-start a read-only replica. Disk writes run outside the host
-//! lock and a failed write is only ever a lost future shortcut, never
-//! a correctness problem.
-//!
-//! # Corruption / quarantine contract
-//!
-//! The disk tier never trusts what it reads back: version, filename
-//! hash, checksum, geometry, and the stored token ids are all
-//! validated, and a file failing any check is quarantined (moved out
-//! of the content-addressed namespace) and served as a miss — the
-//! request falls back to a model prefill and succeeds. See [`disk`].
-//!
-//! # Pin-guard contract
+//! # Eviction + pin contract
 //!
 //! Eviction (pluggable via [`EvictionPolicy`]: [`LruPolicy`] or
-//! [`CostAwarePolicy`]) only ever removes **unpinned** entries.
-//! In-flight work pins the document hashes it planned
-//! ([`store::PinGuard`], from [`EngineDocCache::pin_planned`]) for as
-//! long as the guard lives — sessions pin across
-//! prefill→assemble→decode, and the engine batch loop pins a whole
-//! batch's planned hashes — so eviction can never race a live
-//! assemble. The **host tier** honors every engine's pins (its
-//! entries are shared); a **residency tier** honors only its own
-//! engine's pins, because evicting another engine's resident copy
-//! cannot invalidate `Arc`-held documents and must not be blockable
-//! cross-engine. An eviction between pins can therefore only ever
-//! cost a disk load or a recompute, never dangle a reference. Pins
-//! are counted (re-pinning is fine) and may name hashes that are not
-//! published yet. The disk tier needs no pins: its files are copies,
-//! and live entries are `Arc`-held in RAM.
+//! [`CostAwarePolicy`], both scoring per candidate **unit** — a block
+//! where the tier is block-granular, tail blocks first within one
+//! document) only ever removes **unpinned** units. In-flight work
+//! pins the document hashes it planned ([`store::PinGuard`], from
+//! [`EngineDocCache::pin_planned`] — or individual blocks via
+//! [`EngineDocCache::pin_planned_blocks`], where a whole-document pin
+//! is the block index [`store::PIN_ALL`]) for as long as the guard
+//! lives — sessions pin across prefill→assemble→decode, and the
+//! engine batch loop pins a whole batch's planned hashes — so
+//! eviction can never race a live assemble. The **host tier** honors
+//! every engine's pins (its entries are shared); a **residency tier**
+//! honors only its own engine's pins, because evicting another
+//! engine's resident copy cannot invalidate `Arc`-held documents and
+//! must not be blockable cross-engine. An eviction between pins can
+//! therefore only ever cost a disk load or a recompute, never dangle
+//! a reference: block payloads are extracted under the host lock
+//! before their slots are freed, and assembly reads through
+//! refcounted `BlockRef`s. Pins are counted (re-pinning is fine) and
+//! may name hashes that are not published yet. The disk tier needs no
+//! pins: its files are copies, and live entries are `Arc`-held in
+//! RAM.
 //!
 //! # Stats
 //!
 //! Each RAM tier keeps its own [`CacheStats`]; `hits`/`misses`/
-//! `evictions`/`publishes`/`reinserts`/`hash_collisions`/`peak_bytes`
-//! are lifetime counters, `current_bytes` is current state (see
-//! [`store`]). The disk tier keeps [`DiskStats`] (hits/misses/spills/
-//! loads/corrupt/collisions/evictions/bytes) plus a buffer of
+//! `evictions` (whole-entry removals)/`publishes`/`reinserts`/
+//! `hash_collisions`/`peak_bytes` are lifetime counters,
+//! `current_bytes` is current state (see [`store`]). The pool keeps
+//! [`pool::PoolStats`] — slots total/live/free, slab bytes, grow
+//! events, blocks evicted/spilled, share hits, partial evictions —
+//! surfaced on the `cmd:metrics` wire as the `pool` object. The disk
+//! tier keeps [`DiskStats`] (hits/misses/spills/loads/corrupt/
+//! corrupt_blocks/collisions/evictions/bytes) plus a buffer of
 //! per-load latencies drained into the metrics histogram.
 //!
 //! [`assembly`] — building the fixed-shape sparse/full buffers the AOT
-//! artifacts consume from a set of selected (doc, block) slots.
+//! artifacts consume, gathering KV spans straight out of the pool.
 
 pub mod assembly;
 pub mod disk;
 pub mod evict;
+pub mod pool;
 pub mod residency;
 pub mod store;
 
@@ -111,10 +153,17 @@ pub use assembly::{AssembledContext, BlockRef, SlotKind};
 pub use disk::{DiskDocCache, DiskStats};
 pub use evict::{
     eviction_policy_by_name, CostAwarePolicy, EvictionCandidate,
-    EvictionPolicy, LruPolicy,
+    EvictionPolicy, LruPolicy, WHOLE_ENTRY,
+};
+// NOTE: `pool::BlockRef` (the refcounted slot handle) is deliberately
+// not re-exported here — `assembly::BlockRef` (a buffer occupancy
+// record) already owns the short name; reach the pool handle through
+// its module.
+pub use pool::{
+    KvBlockPool, KvBlocks, KvLayout, PoolStats, DEFAULT_KV_BLOCK_TOKENS,
 };
 pub use residency::{ResidencyBoard, ResidencyHandle};
 pub use store::{
     doc_hash, CacheStats, DocEntry, EngineDocCache, HostDocCache,
-    PinGuard, TierHit,
+    PinGuard, TierHit, PIN_ALL,
 };

@@ -1,0 +1,948 @@
+//! Slot-based paged KV block pool: the storage substrate beneath every
+//! RAM cache tier (see the [`super`] module docs for the tier diagram).
+//!
+//! # Slab / slot / block invariants
+//!
+//! A [`KvBlockPool`] owns **one contiguous `f32` slab** carved into
+//! fixed-size **slots**. One slot holds one KV *block*: a
+//! `--kv-block-tokens` span of a document's per-layer K/V, laid out
+//! channel-major — for channel `ch = (l*2 + c) * n_heads + h` the
+//! block's tokens occupy
+//! `slab[slot_base + ch*block_tokens*head_dim ..][t_local*head_dim..]`,
+//! zero-padded past a partial tail block. Every slot is the same size,
+//! so freeing and reusing slots can never fragment the slab
+//! (**zero external fragmentation**); the free list (`free_slots`) is a
+//! plain LIFO vector with O(1) insert/remove, and an exhausted slab
+//! **grows by doubling** (the existing prefix is preserved in place,
+//! counted in [`PoolStats::grow_events`]).
+//!
+//! Slots are **refcounted**: a [`BlockRef`] is one reference; cloning
+//! bumps the count, dropping releases it, and the slot returns to the
+//! free list only at refcount zero. Allocation is **content-addressed**
+//! (FNV-1a over the slot payload, verified byte-for-byte before
+//! sharing — a hash collision can never alias two different blocks):
+//! two documents or a forked session sharing a token prefix share the
+//! underlying slots ([`PoolStats::share_hits`]), and an in-place write
+//! through a shared ref copies first (**copy-on-write**,
+//! [`BlockRef::write`]).
+//!
+//! The per-token element count is pinned by the first allocation
+//! (every tier of one serving stack stores one model geometry); mixing
+//! geometries in one pool is an error, never a corruption.
+//!
+//! [`KvBlocks`] is the document-side view: an indexable block list over
+//! the pool replacing the old monolithic per-document KV tensor. Blocks
+//! can be taken out (evicted/spilled) and restored individually, so a
+//! partially evicted document keeps serving its resident blocks.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// Default `--kv-block-tokens`: tokens of per-layer K/V per pool block.
+pub const DEFAULT_KV_BLOCK_TOKENS: usize = 64;
+
+/// FNV-1a over a slot payload (little-endian `f32` bytes) — the pool's
+/// content address for block sharing. Matches the byte-level
+/// [`super::store::fnv64`] definition.
+fn content_hash(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Pool counters: `slots_*` and `slab_bytes` are gauges (current
+/// state), the rest are monotone lifetime totals. `blocks_evicted`,
+/// `blocks_spilled`, and `partial_evictions` are noted by the cache
+/// tiers (the pool itself only sees alloc/free).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    pub slots_total: u64,
+    pub slots_live: u64,
+    pub slots_free: u64,
+    pub slab_bytes: u64,
+    pub grow_events: u64,
+    pub blocks_evicted: u64,
+    pub blocks_spilled: u64,
+    pub share_hits: u64,
+    pub partial_evictions: u64,
+    pub double_frees: u64,
+}
+
+struct PoolInner {
+    slab: Vec<f32>,
+    /// Pinned by the first allocation (0 = not yet pinned).
+    per_token_elems: usize,
+    slot_elems: usize,
+    /// Per-slot reference counts (0 = free).
+    refs: Vec<u32>,
+    /// Per-slot content hash (stale after a CoW-exempt unique write —
+    /// then removed from `by_content`).
+    content: Vec<u64>,
+    /// Content hash -> slot, for prefix sharing. Always verified
+    /// against the actual payload before sharing.
+    by_content: HashMap<u64, u32>,
+    /// LIFO free list.
+    free_slots: Vec<u32>,
+    grow_events: u64,
+    blocks_evicted: u64,
+    blocks_spilled: u64,
+    share_hits: u64,
+    partial_evictions: u64,
+    double_frees: u64,
+}
+
+impl PoolInner {
+    fn n_slots(&self) -> usize {
+        self.refs.len()
+    }
+
+    fn slot_base(&self, slot: u32) -> usize {
+        slot as usize * self.slot_elems
+    }
+
+    /// Double the slab (at least one slot), preserving contents.
+    fn grow(&mut self) {
+        let add = self.n_slots().max(1);
+        let old = self.n_slots();
+        self.slab.resize((old + add) * self.slot_elems, 0.0);
+        self.refs.resize(old + add, 0);
+        self.content.resize(old + add, 0);
+        // push in reverse so the lowest new slot is handed out first
+        for s in (old..old + add).rev() {
+            self.free_slots.push(s as u32);
+        }
+        self.grow_events += 1;
+    }
+
+    /// Pop a free slot, growing the slab when none remain.
+    fn take_free(&mut self) -> u32 {
+        if self.free_slots.is_empty() {
+            self.grow();
+        }
+        self.free_slots.pop().expect("grow() refills the free list")
+    }
+
+    fn forget_content(&mut self, slot: u32) {
+        let h = self.content[slot as usize];
+        if self.by_content.get(&h) == Some(&slot) {
+            self.by_content.remove(&h);
+        }
+        self.content[slot as usize] = 0;
+    }
+}
+
+/// The process-wide slab of fixed-size KV block slots (see the module
+/// docs). Thread-safe; shared behind an `Arc` by every tier and every
+/// [`BlockRef`].
+pub struct KvBlockPool {
+    block_tokens: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvBlockPool {
+    pub fn new(block_tokens: usize) -> KvBlockPool {
+        KvBlockPool {
+            block_tokens: block_tokens.max(1),
+            inner: Mutex::new(PoolInner {
+                slab: Vec::new(),
+                per_token_elems: 0,
+                slot_elems: 0,
+                refs: Vec::new(),
+                content: Vec::new(),
+                by_content: HashMap::new(),
+                free_slots: Vec::new(),
+                grow_events: 0,
+                blocks_evicted: 0,
+                blocks_spilled: 0,
+                share_hits: 0,
+                partial_evictions: 0,
+                double_frees: 0,
+            }),
+        }
+    }
+
+    /// Tokens of per-layer K/V per block (`--kv-block-tokens`).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.inner.lock().unwrap();
+        let total = g.n_slots() as u64;
+        let free = g.free_slots.len() as u64;
+        PoolStats {
+            slots_total: total,
+            slots_live: total - free,
+            slots_free: free,
+            slab_bytes: (g.slab.len() * 4) as u64,
+            grow_events: g.grow_events,
+            blocks_evicted: g.blocks_evicted,
+            blocks_spilled: g.blocks_spilled,
+            share_hits: g.share_hits,
+            partial_evictions: g.partial_evictions,
+            double_frees: g.double_frees,
+        }
+    }
+
+    /// Tier-side accounting: blocks removed from an entry by eviction.
+    pub fn note_blocks_evicted(&self, n: u64) {
+        self.inner.lock().unwrap().blocks_evicted += n;
+    }
+
+    /// Tier-side accounting: blocks written to the disk tier.
+    pub fn note_blocks_spilled(&self, n: u64) {
+        self.inner.lock().unwrap().blocks_spilled += n;
+    }
+
+    /// Tier-side accounting: an eviction pass left a document partially
+    /// resident (block granularity doing its job).
+    pub fn note_partial_eviction(&self) {
+        self.inner.lock().unwrap().partial_evictions += 1;
+    }
+
+    /// Allocate (or share) a slot holding `data`, padded with zeros to
+    /// the slot size. The pool's per-token geometry is pinned by the
+    /// first call. Returns the slot id with one reference held.
+    fn alloc_slot(&self, per_token_elems: usize, data: &[f32])
+                  -> Result<u32> {
+        ensure!(per_token_elems > 0, "per_token_elems must be > 0");
+        let mut g = self.inner.lock().unwrap();
+        if g.per_token_elems == 0 {
+            g.per_token_elems = per_token_elems;
+            g.slot_elems = per_token_elems * self.block_tokens;
+        } else if g.per_token_elems != per_token_elems {
+            bail!("KV geometry mismatch: pool holds {} elems/token, \
+                   block has {}", g.per_token_elems, per_token_elems);
+        }
+        ensure!(data.len() <= g.slot_elems,
+                "block payload {} exceeds slot size {}", data.len(),
+                g.slot_elems);
+        let mut buf = vec![0f32; g.slot_elems];
+        buf[..data.len()].copy_from_slice(data);
+        let h = content_hash(&buf);
+        if let Some(&s) = g.by_content.get(&h) {
+            let base = g.slot_base(s);
+            let slot_elems = g.slot_elems;
+            if g.refs[s as usize] > 0
+                && g.slab[base..base + slot_elems] == buf[..]
+            {
+                g.refs[s as usize] += 1;
+                g.share_hits += 1;
+                return Ok(s);
+            }
+        }
+        let s = g.take_free();
+        let base = g.slot_base(s);
+        let slot_elems = g.slot_elems;
+        g.slab[base..base + slot_elems].copy_from_slice(&buf);
+        g.refs[s as usize] = 1;
+        g.content[s as usize] = h;
+        g.by_content.insert(h, s);
+        Ok(s)
+    }
+
+    /// Bump a live slot's refcount ([`BlockRef::clone`]).
+    fn retain_slot(&self, slot: u32) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.refs[slot as usize] > 0, "retain of a free slot");
+        g.refs[slot as usize] += 1;
+    }
+
+    /// Drop one reference; the slot returns to the free list at zero.
+    /// A release of an already-free (or out-of-range) slot is rejected
+    /// and counted in [`PoolStats::double_frees`] — never a panic, and
+    /// never a corruption of another block's slot.
+    pub(crate) fn release_slot(&self, slot: u32) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let s = slot as usize;
+        if s >= g.refs.len() || g.refs[s] == 0 {
+            g.double_frees += 1;
+            return false;
+        }
+        g.refs[s] -= 1;
+        if g.refs[s] == 0 {
+            g.forget_content(slot);
+            g.free_slots.push(slot);
+        }
+        true
+    }
+
+    /// Copy `dst.len()` elements out of a live slot at `offset`.
+    fn read_slot(&self, slot: u32, offset: usize, dst: &mut [f32])
+                 -> Result<()> {
+        let g = self.inner.lock().unwrap();
+        let s = slot as usize;
+        ensure!(s < g.refs.len() && g.refs[s] > 0,
+                "read of a free pool slot {slot}");
+        ensure!(offset + dst.len() <= g.slot_elems,
+                "slot read out of range: {}+{} > {}", offset, dst.len(),
+                g.slot_elems);
+        let base = g.slot_base(slot);
+        dst.copy_from_slice(&g.slab[base + offset..base + offset
+                                    + dst.len()]);
+        Ok(())
+    }
+
+    /// Copy-on-write write through `r`: a slot shared with other refs
+    /// is copied to a fresh slot first (the sharers keep the old
+    /// payload); a uniquely-held slot is written in place and leaves
+    /// the content-sharing index (its payload no longer matches its
+    /// address).
+    fn write_slot(&self, r: &mut BlockRef, offset: usize, data: &[f32])
+                  -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let s = r.slot as usize;
+        ensure!(s < g.refs.len() && g.refs[s] > 0,
+                "write through a dead BlockRef (slot {})", r.slot);
+        ensure!(offset + data.len() <= g.slot_elems,
+                "slot write out of range: {}+{} > {}", offset, data.len(),
+                g.slot_elems);
+        if g.refs[s] > 1 {
+            // shared: copy to a private slot, move this ref over
+            let ns = g.take_free();
+            let (ob, nb) = (g.slot_base(r.slot), g.slot_base(ns));
+            let payload = g.slab[ob..ob + g.slot_elems].to_vec();
+            let slot_elems = g.slot_elems;
+            g.slab[nb..nb + slot_elems].copy_from_slice(&payload);
+            g.refs[s] -= 1;
+            g.refs[ns as usize] = 1;
+            g.content[ns as usize] = 0;
+            r.slot = ns;
+        } else {
+            g.forget_content(r.slot);
+        }
+        let base = g.slot_base(r.slot);
+        g.slab[base + offset..base + offset + data.len()]
+            .copy_from_slice(data);
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for KvBlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("KvBlockPool")
+            .field("block_tokens", &self.block_tokens)
+            .field("slots_total", &s.slots_total)
+            .field("slots_live", &s.slots_live)
+            .field("slab_bytes", &s.slab_bytes)
+            .finish()
+    }
+}
+
+/// One counted reference to a pool slot. Cloning shares the slot;
+/// dropping releases it; [`Self::write`] is copy-on-write.
+pub struct BlockRef {
+    pool: Arc<KvBlockPool>,
+    slot: u32,
+}
+
+impl BlockRef {
+    /// Allocate (or content-share) a slot for `data` and return a ref.
+    pub fn alloc(pool: &Arc<KvBlockPool>, per_token_elems: usize,
+                 data: &[f32]) -> Result<BlockRef> {
+        let slot = pool.alloc_slot(per_token_elems, data)?;
+        Ok(BlockRef { pool: Arc::clone(pool), slot })
+    }
+
+    pub fn slot(&self) -> u32 {
+        self.slot
+    }
+
+    /// Copy `dst.len()` elements out of the slot at `offset`.
+    pub fn read(&self, offset: usize, dst: &mut [f32]) -> Result<()> {
+        self.pool.read_slot(self.slot, offset, dst)
+    }
+
+    /// Copy-on-write write at `offset` (see [`KvBlockPool`]): sharers
+    /// of the slot are unaffected; this ref may move to a fresh slot.
+    pub fn write(&mut self, offset: usize, data: &[f32]) -> Result<()> {
+        let pool = Arc::clone(&self.pool);
+        pool.write_slot(self, offset, data)
+    }
+}
+
+impl Clone for BlockRef {
+    fn clone(&self) -> BlockRef {
+        self.pool.retain_slot(self.slot);
+        BlockRef { pool: Arc::clone(&self.pool), slot: self.slot }
+    }
+}
+
+impl Drop for BlockRef {
+    fn drop(&mut self) {
+        self.pool.release_slot(self.slot);
+    }
+}
+
+impl std::fmt::Debug for BlockRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BlockRef(slot {})", self.slot)
+    }
+}
+
+/// Geometry of one document's pooled KV: `[L, 2, H, T, Dh]` split into
+/// `ceil(T / block_tokens)` blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_tokens: usize,
+    pub block_tokens: usize,
+}
+
+impl KvLayout {
+    pub fn n_blocks(&self) -> usize {
+        (self.n_tokens + self.block_tokens - 1) / self.block_tokens
+    }
+
+    /// Tokens held by block `b` (the tail block may be partial).
+    pub fn block_len(&self, b: usize) -> usize {
+        let t0 = b * self.block_tokens;
+        self.block_tokens.min(self.n_tokens.saturating_sub(t0))
+    }
+
+    /// `f32` elements of K+V per token across all layers/heads.
+    pub fn per_token_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.head_dim
+    }
+
+    /// `f32` elements per pool slot.
+    pub fn slot_elems(&self) -> usize {
+        self.per_token_elems() * self.block_tokens
+    }
+
+    /// Logical bytes of block `b` (padding excluded).
+    pub fn block_bytes(&self, b: usize) -> usize {
+        self.block_len(b) * self.per_token_elems() * 4
+    }
+
+    fn channel(&self, l: usize, c: usize, h: usize) -> usize {
+        (l * 2 + c) * self.n_heads + h
+    }
+}
+
+/// Pack block `b` of a `[L,2,H,T,Dh]` tensor into slot layout
+/// (channel-major, zero-padded tail).
+fn slot_from_tensor(lay: &KvLayout, kv: &Tensor, b: usize) -> Vec<f32> {
+    let (dh, bt) = (lay.head_dim, lay.block_tokens);
+    let t0 = b * bt;
+    let len = lay.block_len(b);
+    let mut buf = vec![0f32; lay.slot_elems()];
+    for l in 0..lay.n_layers {
+        for c in 0..2 {
+            for h in 0..lay.n_heads {
+                let src = kv.slice_at(&[l, c, h]);
+                let off = lay.channel(l, c, h) * bt * dh;
+                buf[off..off + len * dh]
+                    .copy_from_slice(&src[t0 * dh..(t0 + len) * dh]);
+            }
+        }
+    }
+    buf
+}
+
+/// Trim a slot payload to block `b`'s logical (unpadded, channel-major)
+/// form — the disk tier's per-block record layout.
+fn logical_from_slot(lay: &KvLayout, b: usize, slot: &[f32]) -> Vec<f32> {
+    let (dh, bt) = (lay.head_dim, lay.block_tokens);
+    let len = lay.block_len(b);
+    let nch = lay.n_layers * 2 * lay.n_heads;
+    let mut out = vec![0f32; len * lay.per_token_elems()];
+    for ch in 0..nch {
+        out[ch * len * dh..(ch + 1) * len * dh]
+            .copy_from_slice(&slot[ch * bt * dh..ch * bt * dh + len * dh]);
+    }
+    out
+}
+
+/// Inverse of [`logical_from_slot`]: re-pad a logical block record into
+/// slot layout.
+fn slot_from_logical(lay: &KvLayout, b: usize, logical: &[f32])
+                     -> Vec<f32> {
+    let (dh, bt) = (lay.head_dim, lay.block_tokens);
+    let len = lay.block_len(b);
+    let nch = lay.n_layers * 2 * lay.n_heads;
+    let mut buf = vec![0f32; lay.slot_elems()];
+    for ch in 0..nch {
+        buf[ch * bt * dh..ch * bt * dh + len * dh]
+            .copy_from_slice(&logical[ch * len * dh..(ch + 1) * len * dh]);
+    }
+    buf
+}
+
+/// One document's KV as a block-index list over the pool — the storage
+/// behind [`super::DocEntry::kv`]. A `None` block is evicted (its slot
+/// released, possibly spilled to disk); reads of evicted blocks error
+/// instead of serving stale data. Interior-mutable (`Mutex`) because
+/// tiers evict/restore blocks of entries shared via `Arc`.
+pub struct KvBlocks {
+    pool: Arc<KvBlockPool>,
+    layout: KvLayout,
+    blocks: Mutex<Vec<Option<BlockRef>>>,
+}
+
+impl KvBlocks {
+    /// Split a `[L,2,H,T,Dh]` KV tensor into pool blocks. Identical
+    /// blocks (two docs sharing a token prefix) share slots.
+    pub fn from_tensor(pool: &Arc<KvBlockPool>, kv: &Tensor)
+                       -> Result<KvBlocks> {
+        let s = kv.shape();
+        ensure!(s.len() == 5 && s[1] == 2,
+                "doc kv must be [L,2,H,T,Dh], got {:?}", s);
+        let layout = KvLayout {
+            n_layers: s[0],
+            n_heads: s[2],
+            head_dim: s[4],
+            n_tokens: s[3],
+            block_tokens: pool.block_tokens(),
+        };
+        let pte = layout.per_token_elems();
+        let mut blocks = Vec::with_capacity(layout.n_blocks());
+        for b in 0..layout.n_blocks() {
+            let buf = slot_from_tensor(&layout, kv, b);
+            blocks.push(Some(BlockRef::alloc(pool, pte, &buf)?));
+        }
+        Ok(KvBlocks {
+            pool: Arc::clone(pool),
+            layout,
+            blocks: Mutex::new(blocks),
+        })
+    }
+
+    /// An empty (all-evicted) block list with the given geometry — the
+    /// disk tier decodes into this, then restores blocks one by one.
+    pub fn empty(pool: &Arc<KvBlockPool>, layout: KvLayout) -> KvBlocks {
+        let mut blocks = Vec::with_capacity(layout.n_blocks());
+        blocks.resize_with(layout.n_blocks(), || None);
+        KvBlocks { pool: Arc::clone(pool), layout, blocks: Mutex::new(blocks) }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn pool(&self) -> &Arc<KvBlockPool> {
+        &self.pool
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.layout.n_blocks()
+    }
+
+    /// Logical bytes of the full document KV (independent of residency
+    /// or slot sharing).
+    pub fn size_bytes(&self) -> usize {
+        self.layout.n_tokens * self.layout.per_token_elems() * 4
+    }
+
+    pub fn block_bytes(&self, b: usize) -> usize {
+        self.layout.block_bytes(b)
+    }
+
+    /// Logical bytes currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        let blocks = self.blocks.lock().unwrap();
+        blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_some())
+            .map(|(b, _)| self.layout.block_bytes(b))
+            .sum()
+    }
+
+    pub fn is_fully_resident(&self) -> bool {
+        self.blocks.lock().unwrap().iter().all(|r| r.is_some())
+    }
+
+    pub fn resident_block_indexes(&self) -> Vec<u32> {
+        let blocks = self.blocks.lock().unwrap();
+        (0..blocks.len() as u32)
+            .filter(|&b| blocks[b as usize].is_some())
+            .collect()
+    }
+
+    pub fn missing_block_indexes(&self) -> Vec<u32> {
+        let blocks = self.blocks.lock().unwrap();
+        (0..blocks.len() as u32)
+            .filter(|&b| blocks[b as usize].is_none())
+            .collect()
+    }
+
+    /// Copy `n_tok` tokens of channel `(l, c, h)` starting at document
+    /// token `tok_start` into `dst` (`n_tok * head_dim` elements),
+    /// crossing pool-block boundaries as needed. Errors if any covered
+    /// block is evicted.
+    pub fn copy_span(&self, l: usize, c: usize, h: usize, tok_start: usize,
+                     n_tok: usize, dst: &mut [f32]) -> Result<()> {
+        let lay = &self.layout;
+        let (dh, bt) = (lay.head_dim, lay.block_tokens);
+        ensure!(l < lay.n_layers && c < 2 && h < lay.n_heads,
+                "channel ({l},{c},{h}) out of range");
+        ensure!(tok_start + n_tok <= lay.n_tokens,
+                "token span {}..{} exceeds doc length {}", tok_start,
+                tok_start + n_tok, lay.n_tokens);
+        ensure!(dst.len() == n_tok * dh,
+                "dst len {} != {} tokens x {} dims", dst.len(), n_tok, dh);
+        let ch = lay.channel(l, c, h);
+        let blocks = self.blocks.lock().unwrap();
+        let mut t = tok_start;
+        let mut out = 0usize;
+        while t < tok_start + n_tok {
+            let b = t / bt;
+            let local = t - b * bt;
+            let run = (lay.block_len(b) - local).min(tok_start + n_tok - t);
+            let r = blocks[b].as_ref().ok_or_else(|| anyhow!(
+                "KV block {b} is evicted (tokens {}..{})", b * bt,
+                b * bt + lay.block_len(b)))?;
+            r.read(ch * bt * dh + local * dh,
+                   &mut dst[out..out + run * dh])?;
+            t += run;
+            out += run * dh;
+        }
+        Ok(())
+    }
+
+    /// Gather the full `[L,2,H,T,Dh]` tensor (errors if any block is
+    /// evicted). The escape hatch for dense consumers (scoring paths,
+    /// disk round-trip tests); the assemble path uses [`Self::copy_span`]
+    /// per block instead.
+    pub fn gather(&self) -> Result<Tensor> {
+        let lay = self.layout;
+        let mut out = Tensor::zeros(&[lay.n_layers, 2, lay.n_heads,
+                                      lay.n_tokens, lay.head_dim]);
+        for l in 0..lay.n_layers {
+            for c in 0..2 {
+                for h in 0..lay.n_heads {
+                    let dst = out.slice_at_mut(&[l, c, h]);
+                    self.copy_span(l, c, h, 0, lay.n_tokens, dst)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block `b`'s logical payload (channel-major, unpadded), or `None`
+    /// if evicted — the disk tier's record source.
+    pub fn block_data(&self, b: usize) -> Option<Vec<f32>> {
+        let blocks = self.blocks.lock().unwrap();
+        let r = blocks.get(b)?.as_ref()?;
+        let mut slot = vec![0f32; self.layout.slot_elems()];
+        r.read(0, &mut slot).ok()?;
+        Some(logical_from_slot(&self.layout, b, &slot))
+    }
+
+    /// Evict block `b`: remove it and return its logical payload so the
+    /// caller can spill it to disk after releasing the slot. `None` if
+    /// already evicted.
+    pub fn take_block_data(&self, b: usize) -> Option<Vec<f32>> {
+        let taken = self.blocks.lock().unwrap().get_mut(b)?.take()?;
+        let mut slot = vec![0f32; self.layout.slot_elems()];
+        let data = taken
+            .read(0, &mut slot)
+            .ok()
+            .map(|_| logical_from_slot(&self.layout, b, &slot));
+        drop(taken); // releases the slot ref
+        data
+    }
+
+    /// Re-admit an evicted block from its logical payload (disk load).
+    pub fn restore_block(&self, b: usize, logical: &[f32]) -> Result<()> {
+        let lay = self.layout;
+        ensure!(b < lay.n_blocks(), "block {b} out of range");
+        ensure!(logical.len() == lay.block_len(b) * lay.per_token_elems(),
+                "block {b} payload {} != expected {}", logical.len(),
+                lay.block_len(b) * lay.per_token_elems());
+        let buf = slot_from_logical(&lay, b, logical);
+        let r = BlockRef::alloc(&self.pool, lay.per_token_elems(), &buf)?;
+        let mut blocks = self.blocks.lock().unwrap();
+        ensure!(blocks[b].is_none(), "block {b} is already resident");
+        blocks[b] = Some(r);
+        Ok(())
+    }
+
+    /// Fill every evicted block from a freshly prefilled `[L,2,H,T,Dh]`
+    /// tensor (partial re-prefill after eviction when the disk tier
+    /// cannot supply the blocks). Returns how many blocks were
+    /// installed.
+    pub fn install_missing_from(&self, kv: &Tensor) -> Result<usize> {
+        let lay = self.layout;
+        ensure!(kv.shape() == [lay.n_layers, 2, lay.n_heads, lay.n_tokens,
+                               lay.head_dim],
+                "kv shape {:?} != layout {:?}", kv.shape(), lay);
+        let missing = self.missing_block_indexes();
+        for &b in &missing {
+            let buf = slot_from_tensor(&lay, kv, b as usize);
+            let r = BlockRef::alloc(&self.pool, lay.per_token_elems(),
+                                    &buf)?;
+            let mut blocks = self.blocks.lock().unwrap();
+            if blocks[b as usize].is_none() {
+                blocks[b as usize] = Some(r);
+            }
+        }
+        Ok(missing.len())
+    }
+}
+
+impl std::fmt::Debug for KvBlocks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let resident = self.resident_block_indexes().len();
+        write!(f, "KvBlocks({} tokens x{} bt, {}/{} resident)",
+               self.layout.n_tokens, self.layout.block_tokens, resident,
+               self.layout.n_blocks())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(bt: usize) -> Arc<KvBlockPool> {
+        Arc::new(KvBlockPool::new(bt))
+    }
+
+    /// `[1,2,1,T,2]` tensor tagged so value = channel*1000 + t*10 + d.
+    fn tagged_kv(n_tokens: usize) -> Tensor {
+        let mut kv = Tensor::zeros(&[1, 2, 1, n_tokens, 2]);
+        for c in 0..2 {
+            let s = kv.slice_at_mut(&[0, c, 0]);
+            for t in 0..n_tokens {
+                for d in 0..2 {
+                    s[t * 2 + d] = (c * 1000 + t * 10 + d) as f32;
+                }
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn slot_reuse_after_free() {
+        let p = pool(4);
+        let a = BlockRef::alloc(&p, 2, &[1.0; 8]).unwrap();
+        let first_slot = a.slot();
+        drop(a);
+        let s = p.stats();
+        assert_eq!(s.slots_live, 0);
+        assert!(s.slots_free >= 1);
+        // the freed slot is handed out again (LIFO), not leaked
+        let b = BlockRef::alloc(&p, 2, &[2.0; 8]).unwrap();
+        assert_eq!(b.slot(), first_slot, "freed slot must be reused");
+        let mut back = [0f32; 8];
+        b.read(0, &mut back).unwrap();
+        assert_eq!(back, [2.0; 8]);
+    }
+
+    #[test]
+    fn grow_by_doubling_preserves_contents() {
+        let p = pool(2);
+        // distinct payloads so content sharing never kicks in
+        let refs: Vec<BlockRef> = (0..9)
+            .map(|i| {
+                BlockRef::alloc(&p, 2, &[i as f32, i as f32 + 0.5, 0.0,
+                                         1.0])
+                    .unwrap()
+            })
+            .collect();
+        let s = p.stats();
+        assert!(s.grow_events >= 3,
+                "9 slots from an empty slab needs repeated doubling");
+        assert!(s.slots_total >= 9);
+        assert_eq!(s.slots_live, 9);
+        // every block's payload survived every grow
+        for (i, r) in refs.iter().enumerate() {
+            let mut back = [0f32; 4];
+            r.read(0, &mut back).unwrap();
+            assert_eq!(back, [i as f32, i as f32 + 0.5, 0.0, 1.0],
+                       "slot {i} corrupted by slab growth");
+        }
+    }
+
+    #[test]
+    fn refcount_and_copy_on_write() {
+        let p = pool(4);
+        let a = BlockRef::alloc(&p, 1, &[7.0, 8.0, 9.0, 10.0]).unwrap();
+        let mut b = a.clone();
+        assert_eq!(a.slot(), b.slot(), "clone shares the slot");
+        assert_eq!(p.stats().slots_live, 1);
+        // writing through one ref must not disturb the other
+        b.write(1, &[99.0]).unwrap();
+        assert_ne!(a.slot(), b.slot(), "CoW must move the writer");
+        let (mut va, mut vb) = ([0f32; 4], [0f32; 4]);
+        a.read(0, &mut va).unwrap();
+        b.read(0, &mut vb).unwrap();
+        assert_eq!(va, [7.0, 8.0, 9.0, 10.0], "sharer saw the write");
+        assert_eq!(vb, [7.0, 99.0, 9.0, 10.0]);
+        assert_eq!(p.stats().slots_live, 2);
+        // dropping both frees both slots
+        drop(a);
+        drop(b);
+        assert_eq!(p.stats().slots_live, 0);
+    }
+
+    #[test]
+    fn unique_write_stays_in_place() {
+        let p = pool(4);
+        let mut a = BlockRef::alloc(&p, 1, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let slot = a.slot();
+        a.write(0, &[5.0]).unwrap();
+        assert_eq!(a.slot(), slot, "sole owner writes in place");
+        let mut v = [0f32; 4];
+        a.read(0, &mut v).unwrap();
+        assert_eq!(v, [5.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let p = pool(4);
+        let a = BlockRef::alloc(&p, 1, &[1.0; 4]).unwrap();
+        let slot = a.slot();
+        drop(a); // legitimate release -> slot is free
+        assert!(!p.release_slot(slot), "second free must be rejected");
+        assert!(!p.release_slot(999), "out-of-range free rejected");
+        assert_eq!(p.stats().double_frees, 2);
+        // the slab stays consistent: the slot is reusable exactly once
+        let b = BlockRef::alloc(&p, 1, &[2.0; 4]).unwrap();
+        assert_eq!(b.slot(), slot);
+        assert_eq!(p.stats().slots_live, 1);
+    }
+
+    #[test]
+    fn identical_content_shares_one_slot() {
+        let p = pool(4);
+        let a = BlockRef::alloc(&p, 1, &[3.0, 1.0, 4.0, 1.0]).unwrap();
+        let b = BlockRef::alloc(&p, 1, &[3.0, 1.0, 4.0, 1.0]).unwrap();
+        let c = BlockRef::alloc(&p, 1, &[2.0, 7.0, 1.0, 8.0]).unwrap();
+        assert_eq!(a.slot(), b.slot(), "identical payloads share a slot");
+        assert_ne!(a.slot(), c.slot());
+        let s = p.stats();
+        assert_eq!(s.share_hits, 1);
+        assert_eq!(s.slots_live, 2);
+        // the shared slot survives one sharer dropping
+        drop(a);
+        let mut v = [0f32; 4];
+        b.read(0, &mut v).unwrap();
+        assert_eq!(v, [3.0, 1.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let p = pool(4);
+        let _a = BlockRef::alloc(&p, 2, &[0.0; 8]).unwrap();
+        assert!(BlockRef::alloc(&p, 3, &[0.0; 12]).is_err(),
+                "mixing per-token geometries must fail loudly");
+        assert!(BlockRef::alloc(&p, 2, &[0.0; 9]).is_err(),
+                "payload larger than a slot must fail");
+    }
+
+    #[test]
+    fn kvblocks_roundtrip_and_span_crossing() {
+        // 7 tokens over 3-token blocks -> 3 blocks, tail len 1
+        let p = pool(3);
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        assert_eq!(blocks.n_blocks(), 3);
+        assert!(blocks.is_fully_resident());
+        assert_eq!(blocks.gather().unwrap(), kv);
+        // a span crossing two block boundaries (tokens 2..6)
+        let mut span = vec![0f32; 4 * 2];
+        blocks.copy_span(0, 1, 0, 2, 4, &mut span).unwrap();
+        assert_eq!(span,
+                   vec![1020.0, 1021.0, 1030.0, 1031.0, 1040.0, 1041.0,
+                        1050.0, 1051.0]);
+        assert_eq!(blocks.size_bytes(), 7 * 4 * 4); // 7 tok x 4 elems x 4B
+        assert_eq!(blocks.block_bytes(2), 1 * 4 * 4); // tail block
+    }
+
+    #[test]
+    fn evict_restore_block_keeps_payload() {
+        let p = pool(3);
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        let live_before = p.stats().slots_live;
+        let taken = blocks.take_block_data(1).expect("resident block");
+        assert_eq!(taken.len(), 3 * 4); // 3 tokens x 4 elems/token
+        assert!(!blocks.is_fully_resident());
+        assert_eq!(blocks.missing_block_indexes(), vec![1]);
+        assert_eq!(p.stats().slots_live, live_before - 1,
+                   "taken block must release its slot");
+        // reads through the hole fail instead of serving stale data
+        let mut span = vec![0f32; 2];
+        assert!(blocks.copy_span(0, 0, 0, 4, 1, &mut span).is_err());
+        assert!(blocks.gather().is_err());
+        assert!(blocks.take_block_data(1).is_none(), "already evicted");
+        // restore from the spilled payload: bit-identical again
+        blocks.restore_block(1, &taken).unwrap();
+        assert!(blocks.is_fully_resident());
+        assert_eq!(blocks.gather().unwrap(), kv);
+        assert!(blocks.restore_block(1, &taken).is_err(),
+                "restoring a resident block must fail");
+    }
+
+    #[test]
+    fn install_missing_refills_from_tensor() {
+        let p = pool(3);
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        blocks.take_block_data(0);
+        blocks.take_block_data(2);
+        assert_eq!(blocks.install_missing_from(&kv).unwrap(), 2);
+        assert!(blocks.is_fully_resident());
+        assert_eq!(blocks.gather().unwrap(), kv);
+        assert_eq!(blocks.install_missing_from(&kv).unwrap(), 0);
+    }
+
+    #[test]
+    fn prefix_sharing_across_documents() {
+        // two docs with an identical first block share its slot
+        let p = pool(3);
+        let kv_a = tagged_kv(6);
+        let mut kv_b = tagged_kv(6);
+        // diverge doc B after token 3 (second block differs)
+        for c in 0..2 {
+            let s = kv_b.slice_at_mut(&[0, c, 0]);
+            for x in s[3 * 2..].iter_mut() {
+                *x += 0.25;
+            }
+        }
+        let a = KvBlocks::from_tensor(&p, &kv_a).unwrap();
+        let b = KvBlocks::from_tensor(&p, &kv_b).unwrap();
+        assert_eq!(p.stats().share_hits, 1, "shared prefix block");
+        assert_eq!(p.stats().slots_live, 3, "2 + 2 blocks in 3 slots");
+        // eviction of the shared block from one doc leaves the other
+        a.take_block_data(0).unwrap();
+        assert_eq!(b.gather().unwrap(), kv_b,
+                   "sharer must survive the other's eviction");
+    }
+
+    #[test]
+    fn resident_bytes_track_partial_eviction() {
+        let p = pool(3);
+        let blocks = KvBlocks::from_tensor(&p, &tagged_kv(7)).unwrap();
+        assert_eq!(blocks.resident_bytes(), blocks.size_bytes());
+        blocks.take_block_data(2); // tail block: 1 token
+        assert_eq!(blocks.resident_bytes(),
+                   blocks.size_bytes() - blocks.block_bytes(2));
+        assert_eq!(blocks.resident_block_indexes(), vec![0, 1]);
+    }
+
+    #[test]
+    fn tier_accounting_notes() {
+        let p = pool(4);
+        p.note_blocks_evicted(3);
+        p.note_blocks_spilled(2);
+        p.note_partial_eviction();
+        let s = p.stats();
+        assert_eq!((s.blocks_evicted, s.blocks_spilled,
+                    s.partial_evictions), (3, 2, 1));
+    }
+}

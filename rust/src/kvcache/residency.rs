@@ -10,6 +10,15 @@
 //! advertised: host-tier and persistent disk-tier contents are
 //! engine-agnostic (any engine hits them at equal cost), so they
 //! never influence placement.
+//!
+//! Residency advertising stays **doc-granular** even though the host
+//! tier beneath it evicts at pool-block granularity: the board answers
+//! "which engine should serve this request", and a document whose tail
+//! blocks were evicted still makes that engine the cheapest placement
+//! (the holes refill from disk or a partial prefill, far cheaper than
+//! a cold full prefill elsewhere). An engine only advertises documents
+//! it admitted fully resident, and the advisory-staleness argument
+//! above already covers the window where blocks leave afterwards.
 
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex};

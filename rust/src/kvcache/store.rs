@@ -1,24 +1,32 @@
 //! The RAM document-cache tiers: shared host tier + per-engine
 //! residency tier (see the [`super`] module docs for the full diagram
 //! and the pin-guard contract; the persistent tier beneath them is
-//! [`super::disk`]).
+//! [`super::disk`], the storage substrate beneath both RAM tiers is
+//! the paged [`super::pool`]).
 //!
 //! [`HostDocCache`] is the process-wide, thread-safe, content-addressed
 //! tier: one entry per unique document (FNV-1a over token ids), shared
-//! by every engine behind an `Arc`. A miss hands the caller a
-//! [`PrefillLease`] so each unique document is prefilled **exactly once
-//! process-wide** — concurrent engines asking for the same in-flight
-//! document block until the lease publishes (or is abandoned on error).
-//! With a [`DiskDocCache`] attached ([`HostDocCache::with_disk`]), the
-//! lease holder consults the disk tier before paying a model prefill,
-//! and host-tier entries are spilled to disk instead of dropped
-//! (writeback mode per [`DiskWriteback`]).
+//! by every engine behind an `Arc`. Entry KV lives as fixed-size blocks
+//! in the host's [`KvBlockPool`] slab, so eviction is **block-granular**:
+//! going over budget sheds a document's cold tail blocks first, and the
+//! partially evicted document keeps serving warm hits for its resident
+//! blocks. A miss hands the caller a [`PrefillLease`] so each unique
+//! document is prefilled **exactly once process-wide** — concurrent
+//! engines asking for the same in-flight document block until the lease
+//! publishes (or is abandoned on error); a lease over a *partially*
+//! evicted entry carries the entry ([`PrefillLease::partial`]) so the
+//! holder refills only the missing blocks (from disk, else a prefill)
+//! instead of rebuilding the document. With a [`DiskDocCache`] attached
+//! ([`HostDocCache::with_disk`]), evicted blocks are spilled to disk
+//! per-block instead of dropped (writeback mode per [`DiskWriteback`]).
 //!
 //! [`EngineDocCache`] is one engine's residency tier: the subset of
 //! host entries "device-resident" for that engine (its own byte budget
 //! and LRU clock), consulted first; misses fall through to the host
 //! tier, and fresh prefills are published back so one engine's work is
-//! every engine's hit.
+//! every engine's hit. Residency holds `Arc`s into the same pooled
+//! entries (no copies), so its eviction stays doc-granular: dropping a
+//! resident ref never frees pool slots the host still holds.
 //!
 //! # Hash-collision safety
 //!
@@ -33,10 +41,12 @@
 //!
 //! [`CacheStats`] mixes two kinds of counters. **Lifetime** counters
 //! only grow and survive [`clear`](EngineDocCache::clear): `hits`,
-//! `misses`, `evictions`, `publishes`, `reinserts`,
-//! `hash_collisions`, and `peak_bytes`
-//! (the high-water mark). **Current** state — `current_bytes` — tracks
-//! what the tier holds right now and resets to zero on `clear`.
+//! `misses`, `evictions` (whole-entry removals — block-level counts
+//! live in [`super::pool::PoolStats`]), `publishes`, `reinserts`
+//! (which also counts block refills of a partially evicted entry),
+//! `hash_collisions`, and `peak_bytes` (the high-water mark).
+//! **Current** state — `current_bytes` — tracks the bytes resident
+//! right now and resets to zero on `clear`.
 //! [`EngineDocCache::reset_stats`] / [`HostDocCache::reset_stats`]
 //! zero the lifetime counters too (peak collapses to the current
 //! footprint).
@@ -51,15 +61,22 @@ use crate::model::{Model, PrefillDocOut};
 use crate::tensor::Tensor;
 
 use super::disk::DiskDocCache;
-use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy};
+use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy,
+                   WHOLE_ENTRY};
+use super::pool::{KvBlockPool, KvBlocks, DEFAULT_KV_BLOCK_TOKENS};
 use super::residency::ResidencyHandle;
+
+/// Block index meaning "every block of the document" in a pin key —
+/// session pins pin whole documents (dynamic sparse selection may read
+/// any block mid-decode).
+pub const PIN_ALL: u32 = u32::MAX;
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
 
 /// FNV-1a over raw bytes — one definition shared by the content hash
-/// below and the disk tier's file checksum, so the two can never
-/// drift apart.
+/// below and the disk tier's checksums, so the two can never drift
+/// apart.
 pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
     let mut h = FNV_OFFSET;
     for &b in bytes {
@@ -85,33 +102,53 @@ pub fn doc_hash(tokens: &[i32]) -> u64 {
 
 /// A cached document: prefill outputs + bookkeeping. Shared across
 /// engine threads (and with in-flight sessions) via `Arc`, so eviction
-/// from either tier never invalidates a live assemble.
+/// from either tier never invalidates a live assemble. The KV lives as
+/// refcounted blocks in the host's pool ([`KvBlocks`]) — blocks may be
+/// individually evicted and restored while the entry stays shared.
 #[derive(Debug)]
 pub struct DocEntry {
     pub hash: u64,
     pub tokens: Vec<i32>,
-    /// `[L, 2, H, Ld, Dh]`, local (position 0-based) RoPE.
-    pub kv: Tensor,
+    /// `[L, 2, H, Ld, Dh]` worth of local (position 0-based) RoPE KV,
+    /// stored as pool blocks of `--kv-block-tokens` tokens each.
+    pub kv: KvBlocks,
     /// `[L, H, Ld, Ld]` attention probabilities.
     pub attn: Tensor,
     /// `[L, H, Dh]` local-window mean Q (Eq. 1 bias source).
     pub q_local: Tensor,
+    /// Logical size of the *complete* entry (all blocks resident).
     pub bytes: usize,
 }
 
 impl DocEntry {
-    fn new(tokens: Vec<i32>, out: PrefillDocOut) -> DocEntry {
-        let bytes = out.kv.size_bytes() + out.attn.size_bytes()
-            + out.q_local.size_bytes();
-        DocEntry {
+    /// Pool-backed entry from a prefill output.
+    pub fn new(pool: &Arc<KvBlockPool>, tokens: Vec<i32>,
+               out: PrefillDocOut) -> Result<DocEntry> {
+        Self::from_parts(pool, tokens, out.kv, out.attn, out.q_local)
+    }
+
+    /// Pool-backed entry from raw tensors (disk decode, tests).
+    pub fn from_parts(pool: &Arc<KvBlockPool>, tokens: Vec<i32>,
+                      kv: Tensor, attn: Tensor, q_local: Tensor)
+                      -> Result<DocEntry> {
+        let kv = KvBlocks::from_tensor(pool, &kv)?;
+        let bytes =
+            kv.size_bytes() + attn.size_bytes() + q_local.size_bytes();
+        Ok(DocEntry {
             hash: doc_hash(&tokens),
             tokens,
-            kv: out.kv,
-            attn: out.attn,
-            q_local: out.q_local,
+            kv,
+            attn,
+            q_local,
             bytes,
-        }
+        })
     }
+}
+
+/// Bytes of this entry currently resident in RAM: resident KV blocks
+/// plus the (never block-split) attn/q_local side tensors.
+fn entry_resident_bytes(e: &DocEntry) -> usize {
+    e.kv.resident_bytes() + e.attn.size_bytes() + e.q_local.size_bytes()
 }
 
 /// Per-tier counters. Lifetime counters (`hits`, `misses`,
@@ -122,12 +159,15 @@ impl DocEntry {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Whole-entry removals. Individual block evictions are counted in
+    /// [`super::pool::PoolStats::blocks_evicted`].
     pub evictions: u64,
     /// Entries inserted: host tier — published prefills; residency
     /// tier — admissions (fresh prefills and host-tier promotions).
     pub publishes: u64,
     /// Inserts that replaced an entry already present under the same
-    /// hash (the old entry's bytes are subtracted, never leaked).
+    /// hash (the old entry's bytes are subtracted, never leaked), and
+    /// block refills of a partially evicted entry.
     pub reinserts: u64,
     /// By-hash hits whose stored token ids did not match the requested
     /// document (content-hash collision) — served as misses, never as
@@ -172,14 +212,20 @@ impl CacheStats {
 struct HostSlot {
     entry: Arc<DocEntry>,
     last_use: u64,
+    /// Bytes of the entry resident right now (block eviction shrinks
+    /// this without removing the entry). Only mutated under the host
+    /// lock.
+    resident_bytes: usize,
 }
 
 struct HostInner {
     entries: HashMap<u64, HostSlot>,
-    /// Hashes currently being prefilled under a [`PrefillLease`].
+    /// Hashes currently being prefilled/refilled under a
+    /// [`PrefillLease`].
     in_flight: HashSet<u64>,
-    /// Pin counts per hash (a hash may be pinned before it exists).
-    pins: HashMap<u64, u32>,
+    /// Pin counts per `(hash, block)` key; block [`PIN_ALL`] pins the
+    /// whole document. A hash may be pinned before it exists.
+    pins: HashMap<(u64, u32), u32>,
     clock: u64,
     budget_bytes: usize,
     /// True when the budget was fixed by the operator/caller;
@@ -188,26 +234,44 @@ struct HostInner {
     stats: CacheStats,
 }
 
+impl HostInner {
+    fn block_pinned(&self, hash: u64, block: u32) -> bool {
+        self.pins.contains_key(&(hash, PIN_ALL))
+            || self.pins.contains_key(&(hash, block))
+    }
+}
+
+/// One evicted block on its way to the disk tier: the payload is
+/// extracted **under the host lock** (before the slot is reused) and
+/// written outside it.
+struct Spill {
+    entry: Arc<DocEntry>,
+    block: u32,
+    data: Vec<f32>,
+}
+
 /// Result of [`HostDocCache::lookup_or_begin`].
 pub enum HostLookup {
-    /// The entry is cached; use it.
+    /// The entry is cached and fully resident; use it.
     Hit(Arc<DocEntry>),
-    /// Nobody holds this document: the caller must prefill it and
-    /// [`PrefillLease::publish`] the result (dropping the lease
-    /// without publishing abandons it, waking any waiters to retry).
+    /// Nobody holds this document complete: the caller must prefill
+    /// (or refill — see [`PrefillLease::partial`]) and publish the
+    /// result (dropping the lease without publishing abandons it,
+    /// waking any waiters to retry).
     Miss(PrefillLease),
 }
 
 /// The shared host tier: thread-safe, content-addressed document cache
-/// with a byte budget, pluggable eviction, pin guards, exactly-once
-/// prefill leasing, and an optional persistent [`DiskDocCache`] tier
-/// beneath it (spill on eviction / write-through per
-/// [`DiskWriteback`]).
+/// with a byte budget, block-granular pluggable eviction over a
+/// [`KvBlockPool`], pin guards, exactly-once prefill leasing, and an
+/// optional persistent [`DiskDocCache`] tier beneath it (per-block
+/// spill on eviction / write-through per [`DiskWriteback`]).
 pub struct HostDocCache {
     inner: Mutex<HostInner>,
     published: Condvar,
     policy: Box<dyn EvictionPolicy>,
     disk: Option<DiskTier>,
+    pool: Arc<KvBlockPool>,
 }
 
 struct DiskTier {
@@ -248,13 +312,28 @@ impl HostDocCache {
             published: Condvar::new(),
             policy,
             disk: None,
+            pool: Arc::new(KvBlockPool::new(DEFAULT_KV_BLOCK_TOKENS)),
         }
+    }
+
+    /// Set the KV block size (`--kv-block-tokens`). Builder-style:
+    /// must be called before any entry is stored (it replaces the
+    /// backing pool).
+    pub fn with_block_tokens(mut self, block_tokens: usize)
+                             -> HostDocCache {
+        self.pool = Arc::new(KvBlockPool::new(block_tokens.max(1)));
+        self
+    }
+
+    /// The backing KV block pool (shared with every entry).
+    pub fn pool(&self) -> &Arc<KvBlockPool> {
+        &self.pool
     }
 
     /// Attach the persistent disk tier. Reads always consult it on a
     /// host miss (under the miss's prefill lease, so each absent
     /// document is loaded from disk at most once process-wide);
-    /// `writeback` controls when entries are written (spill on
+    /// `writeback` controls when blocks are written (spill on
     /// eviction, write-through on insert, or never).
     pub fn with_disk(mut self, disk: Arc<DiskDocCache>,
                      writeback: DiskWriteback) -> HostDocCache {
@@ -311,13 +390,15 @@ impl HostDocCache {
         self.inner.lock().unwrap().entries.contains_key(&hash)
     }
 
-    /// Fetch-or-lease: a hit bumps recency and returns the entry; a
-    /// miss registers the hash as in-flight and returns the lease.
-    /// `tokens` are the requested document's ids — an entry stored
-    /// under the hash with *different* tokens is a collision and reads
-    /// as a miss (see the module docs). Blocks while another thread
-    /// holds the hash's lease (their publish becomes our hit — the
-    /// exactly-once contract).
+    /// Fetch-or-lease: a **fully resident** hit bumps recency and
+    /// returns the entry; a miss — including a partially evicted entry
+    /// — registers the hash as in-flight and returns the lease (with
+    /// [`PrefillLease::partial`] set for the refill case). `tokens`
+    /// are the requested document's ids — an entry stored under the
+    /// hash with *different* tokens is a collision and reads as a miss
+    /// (see the module docs). Blocks while another thread holds the
+    /// hash's lease (their publish becomes our hit — the exactly-once
+    /// contract).
     /// Associated fn (not a method): the lease must hold the `Arc`.
     pub fn lookup_or_begin(host: &Arc<HostDocCache>, hash: u64,
                            tokens: &[i32]) -> HostLookup {
@@ -325,12 +406,19 @@ impl HostDocCache {
         loop {
             {
                 let inner = &mut *g;
+                let mut partial = None;
                 match inner.entries.get_mut(&hash) {
                     Some(slot) if slot.entry.tokens == tokens => {
-                        inner.clock += 1;
-                        slot.last_use = inner.clock;
-                        inner.stats.hits += 1;
-                        return HostLookup::Hit(Arc::clone(&slot.entry));
+                        if slot.entry.kv.is_fully_resident() {
+                            inner.clock += 1;
+                            slot.last_use = inner.clock;
+                            inner.stats.hits += 1;
+                            return HostLookup::Hit(
+                                Arc::clone(&slot.entry));
+                        }
+                        // partially evicted: the lease holder refills
+                        // just the missing blocks
+                        partial = Some(Arc::clone(&slot.entry));
                     }
                     // same hash, different document: fall through to
                     // the miss path — the caller's publish replaces
@@ -345,6 +433,7 @@ impl HostDocCache {
                         host: Arc::clone(host),
                         hash,
                         done: false,
+                        partial,
                     });
                 }
             }
@@ -355,17 +444,25 @@ impl HostDocCache {
     }
 
     /// Non-leasing lookup (counts a hit or a miss, never blocks).
-    /// Collision-checked like [`Self::lookup_or_begin`].
+    /// Collision-checked like [`Self::lookup_or_begin`]; a partially
+    /// evicted entry reads as a miss (use [`Self::partial_entry`] to
+    /// reach it for a refill).
     pub fn try_lookup(&self, hash: u64, tokens: &[i32])
                       -> Option<Arc<DocEntry>> {
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
         match inner.entries.get_mut(&hash) {
-            Some(slot) if slot.entry.tokens == tokens => {
+            Some(slot) if slot.entry.tokens == tokens
+                && slot.entry.kv.is_fully_resident() =>
+            {
                 inner.clock += 1;
                 slot.last_use = inner.clock;
                 inner.stats.hits += 1;
                 Some(Arc::clone(&slot.entry))
+            }
+            Some(slot) if slot.entry.tokens == tokens => {
+                inner.stats.misses += 1; // partial: not servable whole
+                None
             }
             Some(_) => {
                 inner.stats.hash_collisions += 1;
@@ -379,22 +476,38 @@ impl HostDocCache {
         }
     }
 
+    /// The stored entry iff it matches `tokens` and is **partially**
+    /// evicted (counter-free — callers refill it and then
+    /// [`Self::note_refilled`]).
+    pub fn partial_entry(&self, hash: u64, tokens: &[i32])
+                         -> Option<Arc<DocEntry>> {
+        let g = self.inner.lock().unwrap();
+        let slot = g.entries.get(&hash)?;
+        if slot.entry.tokens == tokens
+            && !slot.entry.kv.is_fully_resident()
+        {
+            Some(Arc::clone(&slot.entry))
+        } else {
+            None
+        }
+    }
+
     /// Insert an entry directly (tests / replay / lease-less callers).
-    /// Replacing an existing hash subtracts the old entry's bytes —
-    /// duplicate inserts never inflate the accounting.
+    /// Replacing an existing hash subtracts the old entry's resident
+    /// bytes — duplicate inserts never inflate the accounting.
     pub fn publish(&self, entry: Arc<DocEntry>) {
-        let evicted = {
+        let spills = {
             let mut g = self.inner.lock().unwrap();
             Self::insert_locked(&mut g, Arc::clone(&entry));
             self.evict_to_budget_locked(&mut g)
         };
         self.published.notify_all();
-        self.writeback(Some(&entry), &evicted);
+        self.writeback(Some(&entry), spills);
     }
 
     /// Complete (or abandon) a lease; called by [`PrefillLease`].
     fn finish_lease(&self, hash: u64, entry: Option<Arc<DocEntry>>) {
-        let evicted = {
+        let spills = {
             let mut g = self.inner.lock().unwrap();
             g.in_flight.remove(&hash);
             match &entry {
@@ -406,114 +519,239 @@ impl HostDocCache {
             }
         };
         self.published.notify_all();
-        self.writeback(entry.as_ref(), &evicted);
+        self.writeback(entry.as_ref(), spills);
+    }
+
+    /// Complete a partial-refill lease: the entry the lease was issued
+    /// over is fully resident again; fix the byte accounting and wake
+    /// waiters.
+    fn finish_restored(&self, hash: u64) {
+        let (entry, spills) = {
+            let mut g = self.inner.lock().unwrap();
+            g.in_flight.remove(&hash);
+            let entry = Self::note_refilled_locked(&mut g, hash);
+            (entry, self.evict_to_budget_locked(&mut g))
+        };
+        self.published.notify_all();
+        self.writeback(entry.as_ref(), spills);
+    }
+
+    /// Lease-less refill accounting (prefetch path).
+    fn note_refilled(&self, hash: u64) {
+        let (entry, spills) = {
+            let mut g = self.inner.lock().unwrap();
+            let entry = Self::note_refilled_locked(&mut g, hash);
+            (entry, self.evict_to_budget_locked(&mut g))
+        };
+        self.published.notify_all();
+        self.writeback(entry.as_ref(), spills);
+    }
+
+    fn note_refilled_locked(g: &mut HostInner, hash: u64)
+                            -> Option<Arc<DocEntry>> {
+        g.clock += 1;
+        let clock = g.clock;
+        let slot = g.entries.get_mut(&hash)?;
+        let new_rb = entry_resident_bytes(&slot.entry);
+        let grown = new_rb.saturating_sub(slot.resident_bytes);
+        slot.resident_bytes = new_rb;
+        slot.last_use = clock;
+        g.stats.current_bytes += grown;
+        g.stats.peak_bytes =
+            g.stats.peak_bytes.max(g.stats.current_bytes);
+        g.stats.reinserts += 1;
+        Some(Arc::clone(&slot.entry))
     }
 
     /// Apply the disk writeback policy after an insert/eviction pass
     /// (outside the host lock — file writes must not stall lookups):
     /// write-through persists the fresh insert immediately; both
-    /// write modes persist eviction victims (spill), and the disk
-    /// tier's content addressing makes the overlap free. Write errors
-    /// are logged and dropped — losing a spill only costs a future
-    /// recompute, never correctness.
+    /// write modes persist evicted blocks (spill), grouped per
+    /// document so one eviction pass costs at most one file write per
+    /// victim document. Write errors are logged and dropped — losing
+    /// a spill only costs a future recompute, never correctness.
     fn writeback(&self, inserted: Option<&Arc<DocEntry>>,
-                 evicted: &[Arc<DocEntry>]) {
+                 spills: Vec<Spill>) {
         let Some(d) = &self.disk else { return };
         if d.writeback == DiskWriteback::Off {
             return;
         }
         if d.writeback == DiskWriteback::Through {
             if let Some(e) = inserted {
-                if let Err(err) = d.cache.store(e) {
+                if let Err(err) = d.cache.store_blocks(e, &[]) {
                     crate::warn!("disk write-through failed for \
                                   {:016x}: {err:#}", e.hash);
                 }
             }
         }
-        for e in evicted {
-            if let Err(err) = d.cache.store(e) {
-                crate::warn!("disk spill failed for {:016x}: {err:#}",
-                             e.hash);
+        let mut by_doc: HashMap<u64, (Arc<DocEntry>,
+                                      Vec<(u32, Vec<f32>)>)> =
+            HashMap::new();
+        let mut n_blocks = 0u64;
+        for s in spills {
+            let slot = by_doc
+                .entry(s.entry.hash)
+                .or_insert_with(|| (Arc::clone(&s.entry), Vec::new()));
+            slot.1.push((s.block, s.data));
+            n_blocks += 1;
+        }
+        for (hash, (entry, blocks)) in by_doc {
+            if let Err(err) = d.cache.store_blocks(&entry, &blocks) {
+                crate::warn!("disk spill failed for {hash:016x}: \
+                              {err:#}");
             }
+        }
+        if n_blocks > 0 {
+            self.pool.note_blocks_spilled(n_blocks);
         }
     }
 
     fn insert_locked(g: &mut HostInner, entry: Arc<DocEntry>) {
         g.clock += 1;
         let clock = g.clock;
-        let (hash, bytes) = (entry.hash, entry.bytes);
+        let hash = entry.hash;
+        let resident_bytes = entry_resident_bytes(&entry);
         let replaced = g
             .entries
-            .insert(hash, HostSlot { entry, last_use: clock })
-            .map(|old| old.entry.bytes);
-        g.stats.note_insert(bytes, replaced);
+            .insert(hash, HostSlot { entry, last_use: clock,
+                                     resident_bytes })
+            .map(|old| old.resident_bytes);
+        g.stats.note_insert(resident_bytes, replaced);
     }
 
-    /// Evict down to the byte budget; returns the victims so the
-    /// caller can spill them to the disk tier after the lock drops.
-    fn evict_to_budget_locked(&self, g: &mut HostInner)
-                              -> Vec<Arc<DocEntry>> {
-        let mut victims = Vec::new();
-        if g.stats.current_bytes <= g.budget_bytes {
-            return victims;
-        }
-        // build the unpinned candidate list once; the lock is held for
-        // the whole pass, so only our own removals invalidate it
-        let pins = &g.pins;
-        let mut candidates: Vec<EvictionCandidate> = g
-            .entries
-            .iter()
-            .filter(|e| pins.get(e.0).copied().unwrap_or(0) == 0)
-            .map(|(&h, s)| EvictionCandidate {
-                hash: h,
-                bytes: s.entry.bytes,
-                last_use: s.last_use,
-                recompute_cost: s.entry.tokens.len(),
-            })
-            .collect();
+    /// Evict down to the byte budget at **block granularity**: the
+    /// policy sees one candidate per unpinned resident
+    /// `(document, block)` pair, so a cold tail block can leave while
+    /// the document's head stays warm; an entry whose last KV block
+    /// leaves is removed whole (one `evictions` count). Returns the
+    /// evicted block payloads (extracted under the lock, before their
+    /// slots can be reused) so the caller can spill them to the disk
+    /// tier after the lock drops.
+    fn evict_to_budget_locked(&self, g: &mut HostInner) -> Vec<Spill> {
+        let mut spills = Vec::new();
         while g.stats.current_bytes > g.budget_bytes
             && g.entries.len() > 1
         {
-            let Some(victim) = self.policy.pick_victim(&candidates) else {
+            // rebuild candidates each round: every eviction changes
+            // the residency the next decision must see
+            let mut candidates: Vec<EvictionCandidate> = Vec::new();
+            for (&h, s) in g.entries.iter() {
+                if g.pins.contains_key(&(h, PIN_ALL)) {
+                    continue;
+                }
+                let resident = s.entry.kv.resident_block_indexes();
+                if resident.is_empty() {
+                    // no KV blocks (a zero-length doc): offer the
+                    // whole entry so it stays evictable
+                    candidates.push(EvictionCandidate {
+                        hash: h,
+                        block: WHOLE_ENTRY,
+                        bytes: s.resident_bytes,
+                        last_use: s.last_use,
+                        recompute_cost: s.entry.tokens.len(),
+                    });
+                    continue;
+                }
+                for b in resident {
+                    if g.pins.contains_key(&(h, b)) {
+                        continue;
+                    }
+                    candidates.push(EvictionCandidate {
+                        hash: h,
+                        block: b,
+                        bytes: s.entry.kv.block_bytes(b as usize),
+                        last_use: s.last_use,
+                        recompute_cost: s.entry.tokens.len(),
+                    });
+                }
+            }
+            let Some(i) = self.policy.pick_victim(&candidates) else {
                 break; // everything pinned (or policy refused)
             };
-            candidates.retain(|c| c.hash != victim);
-            let Some(slot) = g.entries.remove(&victim) else { break };
-            g.stats.current_bytes -= slot.entry.bytes;
-            g.stats.evictions += 1;
-            victims.push(slot.entry);
+            let c = candidates[i];
+            if c.block == WHOLE_ENTRY {
+                let Some(slot) = g.entries.remove(&c.hash) else { break };
+                g.stats.current_bytes = g
+                    .stats
+                    .current_bytes
+                    .saturating_sub(slot.resident_bytes);
+                g.stats.evictions += 1;
+                continue;
+            }
+            let (entry, data, freed) = {
+                let Some(slot) = g.entries.get_mut(&c.hash) else {
+                    break;
+                };
+                let Some(data) =
+                    slot.entry.kv.take_block_data(c.block as usize)
+                else {
+                    break;
+                };
+                let freed = slot.entry.kv.block_bytes(c.block as usize);
+                slot.resident_bytes =
+                    slot.resident_bytes.saturating_sub(freed);
+                (Arc::clone(&slot.entry), data, freed)
+            };
+            g.stats.current_bytes =
+                g.stats.current_bytes.saturating_sub(freed);
+            self.pool.note_blocks_evicted(1);
+            if entry.kv.resident_block_indexes().is_empty() {
+                // the whole KV left RAM: the attn/q_local stubs go too
+                if let Some(slot) = g.entries.remove(&c.hash) {
+                    g.stats.current_bytes = g
+                        .stats
+                        .current_bytes
+                        .saturating_sub(slot.resident_bytes);
+                }
+                g.stats.evictions += 1;
+            } else {
+                self.pool.note_partial_eviction();
+            }
+            spills.push(Spill { entry, block: c.block, data });
         }
-        victims
+        spills
     }
 
+    /// Any pin (any block) on the hash?
     pub fn is_pinned(&self, hash: u64) -> bool {
-        self.inner.lock().unwrap().pins.get(&hash).copied().unwrap_or(0)
-            > 0
+        self.inner
+            .lock()
+            .unwrap()
+            .pins
+            .keys()
+            .any(|k| k.0 == hash)
     }
 
-    /// Snapshot of every currently pinned hash (one lock acquisition —
-    /// for eviction passes that filter many candidates).
+    /// Snapshot of every hash with at least one pinned block (one lock
+    /// acquisition — for eviction passes that filter many candidates).
     pub fn pinned_hashes(&self) -> HashSet<u64> {
-        self.inner.lock().unwrap().pins.keys().copied().collect()
+        self.inner
+            .lock()
+            .unwrap()
+            .pins
+            .keys()
+            .map(|k| k.0)
+            .collect()
     }
 
-    fn unpin(&self, hashes: &[u64]) {
+    fn unpin(&self, keys: &[(u64, u32)]) {
         let mut g = self.inner.lock().unwrap();
-        for &h in hashes {
-            if let Some(c) = g.pins.get_mut(&h) {
+        for &k in keys {
+            if let Some(c) = g.pins.get_mut(&k) {
                 *c -= 1;
                 if *c == 0 {
-                    g.pins.remove(&h);
+                    g.pins.remove(&k);
                 }
             }
         }
     }
 
     /// Drop every entry **without** spilling (a deliberate drop, not an
-    /// eviction — the disk tier keeps whatever was already written).
-    /// Lifetime counters and `peak_bytes` survive; `current_bytes`
-    /// resets (see the module docs). Outstanding pins and leases are
-    /// untouched.
+    /// eviction — the disk tier keeps whatever was already written;
+    /// the dropped entries' pool slots are released as their `Arc`s
+    /// die). Lifetime counters and `peak_bytes` survive;
+    /// `current_bytes` resets (see the module docs). Outstanding pins
+    /// and leases are untouched.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.entries.clear();
@@ -526,14 +764,18 @@ impl HostDocCache {
     }
 }
 
-/// Exclusive right (and obligation) to prefill one document. Publish
-/// the result with [`PrefillLease::publish`]; dropping the lease
+/// Exclusive right (and obligation) to materialize one document.
+/// Publish a fresh entry with [`PrefillLease::publish`], or — when the
+/// lease carries a [`partial`](Self::partial) entry — refill its
+/// missing blocks in place and call
+/// [`publish_restored`](Self::publish_restored). Dropping the lease
 /// without publishing (prefill error, panic) abandons it so blocked
 /// waiters retry instead of hanging.
 pub struct PrefillLease {
     host: Arc<HostDocCache>,
     hash: u64,
     done: bool,
+    partial: Option<Arc<DocEntry>>,
 }
 
 impl PrefillLease {
@@ -541,9 +783,23 @@ impl PrefillLease {
         self.hash
     }
 
+    /// The partially evicted entry this lease was issued over, if any:
+    /// the holder restores its missing blocks (disk, else prefill)
+    /// instead of rebuilding the document.
+    pub fn partial(&self) -> Option<Arc<DocEntry>> {
+        self.partial.clone()
+    }
+
     pub fn publish(mut self, entry: Arc<DocEntry>) {
         self.done = true;
         self.host.finish_lease(self.hash, Some(entry));
+    }
+
+    /// Complete a refill: the [`Self::partial`] entry is fully
+    /// resident again.
+    pub fn publish_restored(mut self) {
+        self.done = true;
+        self.host.finish_restored(self.hash);
     }
 }
 
@@ -557,7 +813,8 @@ impl Drop for PrefillLease {
 
 /// Counted pin registry shared between an [`EngineDocCache`] and the
 /// [`PinGuard`]s it hands out (the guard outlives the borrow of the
-/// cache, so the registry is refcounted).
+/// cache, so the registry is refcounted). Residency eviction is
+/// doc-granular, so its registry stays keyed by hash.
 type PinMap = Arc<Mutex<HashMap<u64, u32>>>;
 
 fn pin_map_remove(map: &PinMap, hashes: &[u64]) {
@@ -572,37 +829,50 @@ fn pin_map_remove(map: &PinMap, hashes: &[u64]) {
     }
 }
 
-/// RAII pin over a set of document hashes. Held by in-flight sessions
-/// (and the engine batch loop) over their planned `doc_hashes` so
-/// eviction can never race a live assemble. The host tier honors
-/// every engine's pins (its entries are shared); a residency tier
-/// honors only its **own** engine's pins — evicting another engine's
-/// resident copy can never invalidate `Arc`-held documents, and must
-/// not be blockable cross-engine.
+/// RAII pin over a set of `(document, block)` keys. Held by in-flight
+/// sessions (and the engine batch loop) over their planned
+/// `doc_hashes` — as whole-document [`PIN_ALL`] pins, because dynamic
+/// sparse selection may read any block mid-decode — so eviction can
+/// never race a live assemble; block-granular guards
+/// ([`PinGuard::new_blocks`]) protect individual blocks while the rest
+/// of the document stays evictable. The host tier honors every
+/// engine's pins (its entries are shared); a residency tier honors
+/// only its **own** engine's pins — evicting another engine's resident
+/// copy can never invalidate `Arc`-held documents, and must not be
+/// blockable cross-engine.
 pub struct PinGuard {
     host: Arc<HostDocCache>,
     /// The pinning engine's own residency-tier pin registry.
     local: Option<PinMap>,
-    hashes: Vec<u64>,
+    keys: Vec<(u64, u32)>,
 }
 
 impl PinGuard {
-    /// Pin `hashes` in `host` against eviction until the guard drops.
-    /// Hashes not yet present are pinned prospectively (a publish
-    /// racing the pin is still protected). Reentrant: pins are
-    /// counted.
+    /// Pin whole documents (`hashes`, block [`PIN_ALL`]) in `host`
+    /// against eviction until the guard drops. Hashes not yet present
+    /// are pinned prospectively (a publish racing the pin is still
+    /// protected). Reentrant: pins are counted.
     pub fn new(host: Arc<HostDocCache>, hashes: &[u64]) -> PinGuard {
-        {
-            let mut g = host.inner.lock().unwrap();
-            for &h in hashes {
-                *g.pins.entry(h).or_insert(0) += 1;
-            }
-        }
-        PinGuard { host, local: None, hashes: hashes.to_vec() }
+        let keys: Vec<(u64, u32)> =
+            hashes.iter().map(|&h| (h, PIN_ALL)).collect();
+        Self::new_blocks(host, &keys)
     }
 
-    /// [`Self::new`] plus a pin in the issuing engine's own registry
-    /// (see [`EngineDocCache::pin_planned`]).
+    /// Pin individual `(hash, block)` keys — the rest of each document
+    /// stays evictable.
+    pub fn new_blocks(host: Arc<HostDocCache>, keys: &[(u64, u32)])
+                      -> PinGuard {
+        {
+            let mut g = host.inner.lock().unwrap();
+            for &k in keys {
+                *g.pins.entry(k).or_insert(0) += 1;
+            }
+        }
+        PinGuard { host, local: None, keys: keys.to_vec() }
+    }
+
+    /// [`Self::new`] plus a doc-granular pin in the issuing engine's
+    /// own registry (see [`EngineDocCache::pin_planned`]).
     fn with_local(host: Arc<HostDocCache>, local: PinMap,
                   hashes: &[u64]) -> PinGuard {
         {
@@ -616,16 +886,21 @@ impl PinGuard {
         guard
     }
 
-    pub fn hashes(&self) -> &[u64] {
-        &self.hashes
+    /// The pinned document hashes (deduplicated against block keys).
+    pub fn hashes(&self) -> Vec<u64> {
+        let mut hs: Vec<u64> = self.keys.iter().map(|k| k.0).collect();
+        hs.dedup();
+        hs
     }
 }
 
 impl Drop for PinGuard {
     fn drop(&mut self) {
-        self.host.unpin(&self.hashes);
+        self.host.unpin(&self.keys);
         if let Some(local) = &self.local {
-            pin_map_remove(local, &self.hashes);
+            let hashes: Vec<u64> =
+                self.keys.iter().map(|k| k.0).collect();
+            pin_map_remove(local, &hashes);
         }
     }
 }
@@ -644,9 +919,11 @@ pub enum TierHit {
     Host,
     /// Loaded from the persistent disk tier (spilled by an earlier
     /// eviction or a previous process) and re-published to the host
-    /// tier — no model prefill ran.
+    /// tier — no model prefill ran. Includes per-block refills of a
+    /// partially evicted document served entirely from disk.
     Disk,
-    /// Cold everywhere: this call ran the prefill and published it.
+    /// Cold somewhere: this call ran a prefill (whole document, or the
+    /// missing blocks of a partial one) and published the result.
     Prefilled,
 }
 
@@ -720,6 +997,11 @@ impl EngineDocCache {
         &self.host
     }
 
+    /// The backing KV block pool (the host tier's).
+    pub fn pool(&self) -> &Arc<KvBlockPool> {
+        self.host.pool()
+    }
+
     /// This engine's residency-tier stats.
     pub fn stats(&self) -> &CacheStats {
         &self.stats
@@ -774,21 +1056,32 @@ impl EngineDocCache {
     }
 
     /// Pin the planned hashes for the lifetime of the returned guard:
-    /// globally in the host tier, and locally for this engine's own
-    /// residency eviction (see [`PinGuard`]).
+    /// globally in the host tier (whole documents — see [`PinGuard`]),
+    /// and locally for this engine's own residency eviction.
     pub fn pin_planned(&self, hashes: &[u64]) -> PinGuard {
         PinGuard::with_local(Arc::clone(&self.host),
                              Arc::clone(&self.own_pins), hashes)
     }
 
+    /// Block-granular host pins (no residency-tier pin — residency is
+    /// doc-granular and its eviction never frees pool slots).
+    pub fn pin_planned_blocks(&self, keys: &[(u64, u32)]) -> PinGuard {
+        PinGuard::new_blocks(Arc::clone(&self.host), keys)
+    }
+
     /// Resident-tier probe with the collision check: `Some` only when
-    /// the stored token ids match the requested document.
+    /// the stored token ids match the requested document **and** every
+    /// KV block is still resident (the host may have partially evicted
+    /// the shared entry from under our `Arc`).
     fn resident_hit(&mut self, hash: u64, tokens: &[i32])
                     -> Option<Arc<DocEntry>> {
         let slot = self.resident.get_mut(&hash)?;
         if slot.entry.tokens != tokens {
             self.stats.hash_collisions += 1;
             return None;
+        }
+        if !slot.entry.kv.is_fully_resident() {
+            return None; // refill through the host path
         }
         slot.last_use = self.clock;
         self.stats.hits += 1;
@@ -799,7 +1092,10 @@ impl EngineDocCache {
     /// host tier, then — under an exactly-once lease — the persistent
     /// disk tier, then prefill (at local positions, offset 0 — the
     /// multiple-context regime), publishing the result back to the
-    /// host tier either way.
+    /// host tier either way. A partially evicted entry is refilled in
+    /// place: missing blocks come from disk when possible, else from a
+    /// prefill (whose resident blocks are discarded — only the gaps
+    /// are installed).
     pub fn get_or_prefill(&mut self, model: &Model, tokens: &[i32])
                           -> Result<(Arc<DocEntry>, TierHit)> {
         let h = doc_hash(tokens);
@@ -814,21 +1110,51 @@ impl EngineDocCache {
                 Ok((entry, TierHit::Host))
             }
             HostLookup::Miss(lease) => {
-                // the lease serializes both the disk read and the
-                // prefill: each absent document is materialized at
-                // most once process-wide, whichever source supplies it
+                // the lease serializes the disk read, the refill, and
+                // the prefill: each absent document (or block set) is
+                // materialized at most once process-wide, whichever
+                // source supplies it
                 let disk = self.host.disk().cloned();
-                if let Some(disk) = disk {
-                    if let Some(entry) = disk.load(h, tokens) {
+                if let Some(partial) = lease.partial() {
+                    let mut hit = TierHit::Disk;
+                    if let Some(disk) = &disk {
+                        disk.load_blocks_into(h, tokens, &partial.kv);
+                    }
+                    if !partial.kv.is_fully_resident() {
+                        let out = model.prefill_doc(tokens, 0)?;
+                        partial.kv.install_missing_from(&out.kv)?;
+                        hit = TierHit::Prefilled;
+                    }
+                    lease.publish_restored();
+                    self.admit(Arc::clone(&partial));
+                    return Ok((partial, hit));
+                }
+                if let Some(disk) = &disk {
+                    if let Some(entry) =
+                        disk.load(h, tokens, self.host.pool())
+                    {
+                        if entry.kv.is_fully_resident() {
+                            let entry = Arc::new(entry);
+                            lease.publish(Arc::clone(&entry));
+                            self.admit(Arc::clone(&entry));
+                            return Ok((entry, TierHit::Disk));
+                        }
+                        // blocks missing on disk (a quarantined
+                        // corrupt block): prefill fills the gaps, the
+                        // good blocks are kept
+                        let out = model.prefill_doc(tokens, 0)?;
+                        entry.kv.install_missing_from(&out.kv)?;
+                        let entry = Arc::new(entry);
                         lease.publish(Arc::clone(&entry));
                         self.admit(Arc::clone(&entry));
-                        return Ok((entry, TierHit::Disk));
+                        return Ok((entry, TierHit::Prefilled));
                     }
                 }
                 // prefill outside any lock; on error the lease drop
                 // wakes waiters to retry for themselves
                 let out = model.prefill_doc(tokens, 0)?;
-                let entry = Arc::new(DocEntry::new(tokens.to_vec(), out));
+                let entry = Arc::new(DocEntry::new(
+                    self.host.pool(), tokens.to_vec(), out)?);
                 lease.publish(Arc::clone(&entry));
                 self.admit(Arc::clone(&entry));
                 Ok((entry, TierHit::Prefilled))
@@ -838,8 +1164,9 @@ impl EngineDocCache {
 
     /// Model-free lookup: resident tier, then host tier, then the
     /// persistent disk tier (promoting a hit to resident and — for a
-    /// disk hit — re-publishing it to the host tier); `None` on a true
-    /// miss.
+    /// disk hit — re-publishing it to the host tier; a partially
+    /// evicted entry is refilled from disk when the blocks are there);
+    /// `None` on a true miss (no model, so gaps disk can't fill stay).
     pub fn lookup(&mut self, tokens: &[i32]) -> Option<Arc<DocEntry>> {
         let h = doc_hash(tokens);
         self.clock += 1;
@@ -852,7 +1179,20 @@ impl EngineDocCache {
             return Some(entry);
         }
         let disk = self.host.disk().cloned()?;
-        let entry = disk.load(h, tokens)?;
+        if let Some(partial) = self.host.partial_entry(h, tokens) {
+            disk.load_blocks_into(h, tokens, &partial.kv);
+            if partial.kv.is_fully_resident() {
+                self.host.note_refilled(h);
+                self.admit(Arc::clone(&partial));
+                return Some(partial);
+            }
+            return None;
+        }
+        let entry = disk.load(h, tokens, self.host.pool())?;
+        if !entry.kv.is_fully_resident() {
+            return None; // partial disk file; needs a prefill path
+        }
+        let entry = Arc::new(entry);
         self.host.publish(Arc::clone(&entry));
         self.admit(Arc::clone(&entry));
         Some(entry)
@@ -862,23 +1202,44 @@ impl EngineDocCache {
     /// planned documents. The engine's admission thread calls this on
     /// a wave's deduplicated doc hashes *while the decode thread keeps
     /// emitting tokens*, so disk load latency overlaps decode compute
-    /// the same way assemble does. Documents already resident or
-    /// host-cached are skipped; returns how many entries disk
-    /// supplied. (Prefetch is leaseless — two engines racing on one
+    /// the same way assemble does. Documents already fully resident
+    /// (engine or host) are skipped; partially evicted host entries
+    /// are refilled block-wise; returns how many documents disk
+    /// completed. (Prefetch is leaseless — two engines racing on one
     /// hash can at worst duplicate a file read, never a prefill.)
     pub fn prefetch_from_disk(&mut self, docs: &[(u64, &[i32])]) -> usize {
         let Some(disk) = self.host.disk().cloned() else { return 0 };
         let mut loaded = 0;
         for &(hash, tokens) in docs {
-            if self.resident.contains_key(&hash)
-                || self.host.contains(hash)
+            if self
+                .resident
+                .get(&hash)
+                .map_or(false, |s| s.entry.kv.is_fully_resident())
             {
                 continue;
             }
-            if let Some(entry) = disk.load(hash, tokens) {
-                self.host.publish(Arc::clone(&entry));
-                self.admit(entry);
-                loaded += 1;
+            if let Some(partial) = self.host.partial_entry(hash, tokens)
+            {
+                disk.load_blocks_into(hash, tokens, &partial.kv);
+                if partial.kv.is_fully_resident() {
+                    self.host.note_refilled(hash);
+                    self.admit(Arc::clone(&partial));
+                    loaded += 1;
+                }
+                continue;
+            }
+            if self.host.contains(hash) {
+                continue; // fully resident (or a collision — the
+                          // prefill path sorts that out)
+            }
+            if let Some(entry) = disk.load(hash, tokens,
+                                           self.host.pool()) {
+                if entry.kv.is_fully_resident() {
+                    let entry = Arc::new(entry);
+                    self.host.publish(Arc::clone(&entry));
+                    self.admit(entry);
+                    loaded += 1;
+                }
             }
         }
         loaded
@@ -887,7 +1248,9 @@ impl EngineDocCache {
     /// Insert a pre-computed entry (tests / replay): published to the
     /// host tier and admitted as resident here.
     pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
-        self.insert_entry(Arc::new(DocEntry::new(tokens, out)));
+        let entry = DocEntry::new(self.host.pool(), tokens, out)
+            .expect("prefill output must have a [L,2,H,T,Dh] KV");
+        self.insert_entry(Arc::new(entry));
     }
 
     /// [`Self::insert`] over an already-built entry (disk replay,
@@ -916,6 +1279,10 @@ impl EngineDocCache {
         self.evict_to_budget();
     }
 
+    /// Residency eviction stays **doc-granular**: the tier holds
+    /// `Arc`s into pooled entries (no private copies), so dropping a
+    /// resident ref frees no pool slots — block granularity lives in
+    /// the host tier, which owns the bytes.
     fn evict_to_budget(&mut self) {
         if self.stats.current_bytes <= self.budget_bytes {
             return;
@@ -932,6 +1299,7 @@ impl EngineDocCache {
             .filter(|e| !pinned.contains(e.0))
             .map(|(&h, s)| EvictionCandidate {
                 hash: h,
+                block: WHOLE_ENTRY,
                 bytes: s.entry.bytes,
                 last_use: s.last_use,
                 recompute_cost: s.entry.tokens.len(),
@@ -940,10 +1308,10 @@ impl EngineDocCache {
         while self.stats.current_bytes > self.budget_bytes
             && self.resident.len() > 1
         {
-            let Some(victim) = self.policy.pick_victim(&candidates) else {
+            let Some(i) = self.policy.pick_victim(&candidates) else {
                 break;
             };
-            candidates.retain(|c| c.hash != victim);
+            let victim = candidates.swap_remove(i).hash;
             let Some(slot) = self.resident.remove(&victim) else { break };
             self.stats.current_bytes -= slot.entry.bytes;
             self.stats.evictions += 1;
@@ -992,8 +1360,10 @@ mod tests {
         }
     }
 
-    fn arc_entry(tokens: Vec<i32>, bytes_hint: usize) -> Arc<DocEntry> {
-        Arc::new(DocEntry::new(tokens, fake_entry(bytes_hint)))
+    fn arc_entry(pool: &Arc<KvBlockPool>, tokens: Vec<i32>,
+                 bytes_hint: usize) -> Arc<DocEntry> {
+        Arc::new(DocEntry::new(pool, tokens, fake_entry(bytes_hint))
+            .unwrap())
     }
 
     #[test]
@@ -1025,6 +1395,8 @@ mod tests {
         assert!(s.stats().current_bytes > 0);
         assert_eq!(s.host_stats().current_bytes,
                    s.stats().current_bytes);
+        // the entry's KV landed in the shared pool
+        assert!(s.pool().stats().slots_live > 0);
     }
 
     #[test]
@@ -1066,11 +1438,11 @@ mod tests {
     #[test]
     fn host_eviction_skips_pinned_entries() {
         let host = Arc::new(HostDocCache::new(300));
-        let e1 = arc_entry(vec![1], 128);
+        let e1 = arc_entry(host.pool(), vec![1], 128);
         let pin = PinGuard::new(Arc::clone(&host), &[e1.hash]);
         host.publish(e1);
-        host.publish(arc_entry(vec![2], 128));
-        host.publish(arc_entry(vec![3], 128)); // over budget
+        host.publish(arc_entry(host.pool(), vec![2], 128));
+        host.publish(arc_entry(host.pool(), vec![3], 128)); // over budget
         assert!(host.stats().evictions >= 1);
         assert!(host.contains(doc_hash(&[1])),
                 "pinned entry was evicted");
@@ -1078,9 +1450,49 @@ mod tests {
                 "LRU unpinned entry should have been the victim");
         drop(pin);
         assert!(!host.is_pinned(doc_hash(&[1])));
-        host.publish(arc_entry(vec![4], 128)); // over budget again
+        host.publish(arc_entry(host.pool(), vec![4], 128));
         assert!(!host.contains(doc_hash(&[1])),
                 "unpinned entry must become evictable");
+    }
+
+    #[test]
+    fn pinned_head_blocks_survive_while_tail_evicts() {
+        // 2-token pool blocks; fake_entry(48) has a 6-token KV -> 3
+        // blocks of 16B each (pte 2), entry total 56B (48 + 4 + 4)
+        let host =
+            Arc::new(HostDocCache::new(100).with_block_tokens(2));
+        let e1 = arc_entry(host.pool(), vec![1, 2, 3], 48);
+        let h1 = e1.hash;
+        // pin only the head block: the tail must stay evictable
+        let pin = PinGuard::new_blocks(Arc::clone(&host), &[(h1, 0)]);
+        host.publish(Arc::clone(&e1));
+        host.publish(arc_entry(host.pool(), vec![4, 5, 6], 48));
+        // 112B > 100B: exactly one 16B block must go — doc 1 is LRU,
+        // its block 0 is pinned, so the cold tail (block 2) leaves
+        assert!(host.contains(h1),
+                "partially evicted doc must stay in the tier");
+        assert!(!e1.kv.is_fully_resident(),
+                "the victim doc must lose a block");
+        assert_eq!(e1.kv.resident_block_indexes(), vec![0, 1],
+                   "pinned head survives; cold tail evicts first");
+        assert_eq!(host.stats().evictions, 0,
+                   "block eviction must not count a whole-entry \
+                    eviction");
+        let ps = host.pool().stats();
+        assert_eq!(ps.blocks_evicted, 1);
+        assert_eq!(ps.partial_evictions, 1);
+        // resident blocks still serve reads (the partial-warm-hit
+        // contract); the evicted one errors
+        let mut span = vec![0f32; 2];
+        assert!(e1.kv.copy_span(0, 0, 0, 0, 2, &mut span).is_ok());
+        assert!(e1.kv.copy_span(0, 0, 0, 4, 2, &mut span).is_err());
+        drop(pin);
+        // with the pin gone and more pressure, doc 1 drains fully and
+        // is removed whole
+        host.publish(arc_entry(host.pool(), vec![7, 8, 9], 48));
+        assert!(!host.contains(h1),
+                "unpinned doc must drain head blocks too");
+        assert!(host.stats().evictions >= 1);
     }
 
     #[test]
@@ -1133,6 +1545,20 @@ mod tests {
     }
 
     #[test]
+    fn identical_docs_share_pool_slots() {
+        // two distinct documents with byte-identical KV (all zeros
+        // here, as real shared prefixes would be) share pool slots
+        let host = Arc::new(HostDocCache::unbounded());
+        host.publish(arc_entry(host.pool(), vec![1], 128));
+        let live_one = host.pool().stats().slots_live;
+        host.publish(arc_entry(host.pool(), vec![2], 128));
+        let s = host.pool().stats();
+        assert_eq!(s.slots_live, live_one,
+                   "identical KV content must share slots");
+        assert!(s.share_hits >= 1);
+    }
+
+    #[test]
     fn lease_lifecycle_is_exactly_once() {
         let host = Arc::new(HostDocCache::unbounded());
         let h = doc_hash(&[5]);
@@ -1142,7 +1568,8 @@ mod tests {
             panic!("expected miss");
         };
         assert_eq!(lease.hash(), h);
-        lease.publish(arc_entry(vec![5], 64));
+        assert!(lease.partial().is_none());
+        lease.publish(arc_entry(host.pool(), vec![5], 64));
         match HostDocCache::lookup_or_begin(&host, h, &[5]) {
             HostLookup::Hit(e) => assert_eq!(e.hash, h),
             HostLookup::Miss(_) => panic!("published entry must hit"),
@@ -1183,10 +1610,45 @@ mod tests {
         };
         // give the waiter time to block on the in-flight lease
         std::thread::sleep(std::time::Duration::from_millis(20));
-        lease.publish(arc_entry(vec![42], 64));
+        lease.publish(arc_entry(host.pool(), vec![42], 64));
         assert_eq!(waiter.join().unwrap(), h);
         assert_eq!(host.stats().publishes, 1);
         assert_eq!(host.stats().hits, 1);
+    }
+
+    #[test]
+    fn partial_entry_leases_carry_the_entry() {
+        // a partially evicted entry must read as a refill lease, not a
+        // hit and not a fresh-prefill miss
+        let host =
+            Arc::new(HostDocCache::new(100).with_block_tokens(2));
+        host.publish(arc_entry(host.pool(), vec![1, 2, 3], 48));
+        host.publish(arc_entry(host.pool(), vec![4, 5, 6], 48));
+        let h1 = doc_hash(&[1, 2, 3]);
+        // doc 1 lost its tail block to the budget
+        assert!(host.partial_entry(h1, &[1, 2, 3]).is_some());
+        assert!(host.try_lookup(h1, &[1, 2, 3]).is_none(),
+                "a partial entry must not serve a whole-doc hit");
+        let HostLookup::Miss(lease) =
+            HostDocCache::lookup_or_begin(&host, h1, &[1, 2, 3])
+        else {
+            panic!("partial entry must lease a refill");
+        };
+        let partial = lease.partial().expect("lease carries the entry");
+        assert_eq!(partial.hash, h1);
+        // restore the missing block in place and publish the refill
+        for b in partial.kv.missing_block_indexes() {
+            let zeros =
+                vec![0f32;
+                     partial.kv.block_bytes(b as usize) / 4];
+            partial.kv.restore_block(b as usize, &zeros).unwrap();
+        }
+        lease.publish_restored();
+        assert!(host.try_lookup(h1, &[1, 2, 3]).is_some(),
+                "refilled entry must serve hits again");
+        assert_eq!(host.stats().reinserts, 1,
+                   "a refill counts as a reinsert, not a publish");
+        assert_eq!(host.stats().publishes, 2);
     }
 
     #[test]
@@ -1199,6 +1661,8 @@ mod tests {
         assert_eq!(s.stats().current_bytes, 0);
         assert_eq!(s.host_stats().current_bytes, 0);
         assert_eq!(s.len(), 0);
+        // dropping the entries released their pool slots
+        assert_eq!(s.pool().stats().slots_live, 0);
         // lifetime counters survive clear...
         assert_eq!(s.stats().hits, 1);
         assert_eq!(s.stats().misses, 1);
@@ -1261,8 +1725,9 @@ mod tests {
 
     /// An entry whose `hash` field deliberately disagrees with its
     /// token content — two documents colliding on one content hash.
-    fn forged(hash: u64, tokens: Vec<i32>) -> Arc<DocEntry> {
-        let e = DocEntry::new(tokens, fake_entry(64));
+    fn forged(pool: &Arc<KvBlockPool>, hash: u64, tokens: Vec<i32>)
+              -> Arc<DocEntry> {
+        let e = DocEntry::new(pool, tokens, fake_entry(64)).unwrap();
         Arc::new(DocEntry { hash, ..e })
     }
 
@@ -1272,7 +1737,7 @@ mod tests {
         // *different* document's entry
         let h = doc_hash(&[1, 2, 3]);
         let host = Arc::new(HostDocCache::unbounded());
-        host.publish(forged(h, vec![9, 9]));
+        host.publish(forged(host.pool(), h, vec![9, 9]));
         assert!(host.try_lookup(h, &[1, 2, 3]).is_none(),
                 "collision served another document's KV");
         let s = host.stats();
@@ -1287,7 +1752,9 @@ mod tests {
         else {
             panic!("collision must fall through to a lease");
         };
-        lease.publish(forged(h, vec![1, 2, 3]));
+        assert!(lease.partial().is_none(),
+                "a collision is not a partial refill");
+        lease.publish(forged(host.pool(), h, vec![1, 2, 3]));
         assert!(host.try_lookup(h, &[1, 2, 3]).is_some());
         assert_eq!(host.stats().reinserts, 1);
         assert_eq!(host.len(), 1);
@@ -1297,7 +1764,8 @@ mod tests {
     fn resident_collision_is_a_miss_not_a_wrong_hit() {
         let h = doc_hash(&[1, 2, 3]);
         let mut s = EngineDocCache::unbounded();
-        s.insert_entry(forged(h, vec![9, 9]));
+        let e = forged(s.pool(), h, vec![9, 9]);
+        s.insert_entry(e);
         // both the resident slot and the host entry hold [9,9] under
         // the hash of [1,2,3]: the lookup must come back empty
         assert!(s.lookup(&[1, 2, 3]).is_none(),
@@ -1331,13 +1799,43 @@ mod tests {
                 "evicted entry must spill to the disk tier");
         assert_eq!(disk.stats().spills, 1,
                    "evict mode only writes victims");
+        assert!(host.pool().stats().blocks_spilled >= 1);
         // a cold engine re-loads the spilled entry through the tiers
         let mut b = EngineDocCache::new(Arc::clone(&host), usize::MAX);
         let e = b.lookup(&[1]).expect("disk tier must backfill");
         assert_eq!(e.tokens, vec![1]);
+        assert!(e.kv.is_fully_resident());
         assert_eq!(disk.stats().hits, 1);
         assert!(host.contains(doc_hash(&[1])),
                 "disk hit must re-publish to the host tier");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partially_evicted_doc_refills_from_disk() {
+        let (dir, disk) = disk_fixture("partial");
+        // 2-token blocks; 56B entries over a 100B budget: publishing
+        // doc 2 spills exactly one tail block of doc 1 to disk
+        let host = Arc::new(HostDocCache::new(100)
+            .with_block_tokens(2)
+            .with_disk(Arc::clone(&disk), DiskWriteback::Evict));
+        let mut s = EngineDocCache::new(Arc::clone(&host), usize::MAX);
+        s.insert(vec![1, 2, 3], fake_entry(48));
+        s.insert(vec![4, 5, 6], fake_entry(48));
+        let h1 = doc_hash(&[1, 2, 3]);
+        assert!(host.contains(h1), "doc 1 must only lose a block");
+        assert!(host.partial_entry(h1, &[1, 2, 3]).is_some());
+        assert_eq!(disk.stats().spills, 1,
+                   "the evicted block must spill as a partial file");
+        let ps = host.pool().stats();
+        assert_eq!((ps.blocks_evicted, ps.blocks_spilled,
+                    ps.partial_evictions), (1, 1, 1));
+        // a lookup refills the missing block from the partial disk
+        // file — no prefill, bytes re-accounted, entry whole again
+        let e = s.lookup(&[1, 2, 3]).expect("block refill from disk");
+        assert!(e.kv.is_fully_resident());
+        assert!(host.try_lookup(h1, &[1, 2, 3]).is_some());
+        assert_eq!(host.stats().reinserts, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1347,12 +1845,12 @@ mod tests {
         let host = Arc::new(HostDocCache::unbounded()
             .with_disk(Arc::clone(&disk), DiskWriteback::Through));
         assert_eq!(host.disk_writeback(), Some(DiskWriteback::Through));
-        host.publish(arc_entry(vec![4], 128));
+        host.publish(arc_entry(host.pool(), vec![4], 128));
         assert!(disk.contains(doc_hash(&[4])),
                 "write-through must persist the insert immediately");
         assert_eq!(disk.stats().spills, 1);
         // re-publishing the same content is one write total
-        host.publish(arc_entry(vec![4], 128));
+        host.publish(arc_entry(host.pool(), vec![4], 128));
         assert_eq!(disk.stats().spills, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -1361,7 +1859,10 @@ mod tests {
     fn writeback_off_never_writes_but_still_reads() {
         let (dir, disk) = disk_fixture("off");
         // pre-seed the directory as if by an earlier process
-        disk.store(&DocEntry::new(vec![8, 8], fake_entry(64))).unwrap();
+        let seed_pool = Arc::new(KvBlockPool::new(64));
+        disk.store(&DocEntry::new(&seed_pool, vec![8, 8],
+                                  fake_entry(64)).unwrap())
+            .unwrap();
         let host = Arc::new(HostDocCache::new(300)
             .with_disk(Arc::clone(&disk), DiskWriteback::Off));
         let mut s = EngineDocCache::new(Arc::clone(&host), usize::MAX);

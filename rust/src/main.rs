@@ -116,6 +116,8 @@ fn print_help() {
          eval --profile P --dataset D --policy NAME|all --samples N\n  \
          serve --profile P --port N --engines N --policy NAME\n  \
                --host-cache-mb N (0 = auto-size) --eviction lru|cost-aware\n  \
+               --kv-block-tokens N (pool block span; eviction/spill/\n  \
+                sharing granularity, default 64)\n  \
                --max-batch N --batch-window-ms N --max-active N\n  \
                (continuous batching: admission wave size, gather window,\n  \
                 in-flight session cap)\n  \
@@ -204,6 +206,8 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         disk_writeback: args
             .get_str("disk-writeback", defaults.disk_writeback.name())
             .parse::<DiskWriteback>()?,
+        kv_block_tokens: args.get::<usize>("kv-block-tokens",
+                                           defaults.kv_block_tokens),
         ..defaults
     };
     // the shared host doc-cache tier beneath every engine's residency
@@ -218,7 +222,8 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         HostDocCache::auto_sized(evict_policy)
     } else {
         HostDocCache::with_policy(host_mb * 1024 * 1024, evict_policy)
-    };
+    }
+    .with_block_tokens(cfg.kv_block_tokens);
     // the persistent disk tier beneath the host tier: host evictions
     // spill instead of dropping, and a restarted server re-serves
     // previously-seen documents with zero model prefills
@@ -241,11 +246,13 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let host = Arc::new(host);
     let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
-           policy {policy}, host cache {} ({eviction}), continuous \
-           batching (wave {}, window {}ms, max active {})",
+           policy {policy}, host cache {} ({eviction}, {}-token KV \
+           blocks), continuous batching (wave {}, window {}ms, max \
+           active {})",
           if host_mb == 0 { "auto-sized".to_string() }
           else { format!("{host_mb}MiB") },
-          cfg.max_batch, cfg.batch_window_ms, cfg.max_active);
+          cfg.kv_block_tokens, cfg.max_batch, cfg.batch_window_ms,
+          cfg.max_active);
     let engines: Vec<Engine> = (0..n_engines)
         .map(|i| {
             Engine::spawn(i, artifacts_dir(), cfg.clone(), policy.clone(),

@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::json::Value;
-use crate::kvcache::{CacheStats, DiskStats};
+use crate::kvcache::{CacheStats, DiskStats, PoolStats};
 
 /// Log-bucketed latency histogram (microsecond granularity, buckets
 /// doubling from 100us to ~400s).
@@ -154,12 +154,29 @@ pub struct Metrics {
     pub disk_spills: AtomicU64,
     pub disk_loads: AtomicU64,
     pub disk_corrupt: AtomicU64,
+    /// Individual block records dropped by their per-block checksum
+    /// (block-list disk format; the rest of the file still served).
+    pub disk_corrupt_blocks: AtomicU64,
     pub disk_collisions: AtomicU64,
     pub disk_evictions: AtomicU64,
     pub disk_bytes: AtomicU64,
     /// Disk-tier load latency (file read + decode + checksum) per
     /// successful load.
     pub disk_load: Histogram,
+    /// Paged KV block pool (process-wide slab under the RAM tiers):
+    /// slot/slab occupancy are gauges (last snapshot wins), the event
+    /// counters are monotone totals folded in with `fetch_max` like
+    /// the host tier.
+    pub pool_slots_total: AtomicU64,
+    pub pool_slots_live: AtomicU64,
+    pub pool_slots_free: AtomicU64,
+    pub pool_slab_bytes: AtomicU64,
+    pub pool_grow_events: AtomicU64,
+    pub pool_blocks_evicted: AtomicU64,
+    pub pool_blocks_spilled: AtomicU64,
+    pub pool_share_hits: AtomicU64,
+    pub pool_partial_evictions: AtomicU64,
+    pub pool_double_frees: AtomicU64,
     started: Mutex<Option<Instant>>,
 }
 
@@ -278,6 +295,8 @@ impl Metrics {
         self.disk_spills.fetch_max(disk.spills, Ordering::Relaxed);
         self.disk_loads.fetch_max(disk.loads, Ordering::Relaxed);
         self.disk_corrupt.fetch_max(disk.corrupt, Ordering::Relaxed);
+        self.disk_corrupt_blocks
+            .fetch_max(disk.corrupt_blocks, Ordering::Relaxed);
         self.disk_collisions
             .fetch_max(disk.collisions, Ordering::Relaxed);
         self.disk_evictions
@@ -287,6 +306,48 @@ impl Metrics {
         for &ms in load_ms {
             self.disk_load.observe_ms(ms);
         }
+    }
+
+    /// Flush the block pool's counters (one process-wide pool; any
+    /// engine's snapshot carries the same totals): occupancy gauges
+    /// store, event totals fold in with `fetch_max` so a stale
+    /// snapshot can never regress them. The engine calls this after
+    /// every admission wave, beside [`Self::record_cache_tiers`].
+    pub fn record_pool(&self, pool: &PoolStats) {
+        self.pool_slots_total
+            .store(pool.slots_total, Ordering::Relaxed);
+        self.pool_slots_live.store(pool.slots_live, Ordering::Relaxed);
+        self.pool_slots_free.store(pool.slots_free, Ordering::Relaxed);
+        self.pool_slab_bytes.store(pool.slab_bytes, Ordering::Relaxed);
+        self.pool_grow_events
+            .fetch_max(pool.grow_events, Ordering::Relaxed);
+        self.pool_blocks_evicted
+            .fetch_max(pool.blocks_evicted, Ordering::Relaxed);
+        self.pool_blocks_spilled
+            .fetch_max(pool.blocks_spilled, Ordering::Relaxed);
+        self.pool_share_hits
+            .fetch_max(pool.share_hits, Ordering::Relaxed);
+        self.pool_partial_evictions
+            .fetch_max(pool.partial_evictions, Ordering::Relaxed);
+        self.pool_double_frees
+            .fetch_max(pool.double_frees, Ordering::Relaxed);
+    }
+
+    /// The block pool's counters as a JSON object (the `pool` object
+    /// on the `cmd:metrics` wire and in bench artifacts).
+    pub fn pool_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("slots_total", g(&self.pool_slots_total))
+            .set("slots_live", g(&self.pool_slots_live))
+            .set("slots_free", g(&self.pool_slots_free))
+            .set("slab_bytes", g(&self.pool_slab_bytes))
+            .set("grow_events", g(&self.pool_grow_events))
+            .set("blocks_evicted", g(&self.pool_blocks_evicted))
+            .set("blocks_spilled", g(&self.pool_blocks_spilled))
+            .set("share_hits", g(&self.pool_share_hits))
+            .set("partial_evictions", g(&self.pool_partial_evictions))
+            .set("double_frees", g(&self.pool_double_frees))
     }
 
     /// Scheduler-facing serving snapshot as a JSON object (server wire
@@ -338,6 +399,7 @@ impl Metrics {
                      .set("spills", g(&self.disk_spills))
                      .set("loads", g(&self.disk_loads))
                      .set("corrupt", g(&self.disk_corrupt))
+                     .set("corrupt_blocks", g(&self.disk_corrupt_blocks))
                      .set("collisions", g(&self.disk_collisions))
                      .set("evictions", g(&self.disk_evictions))
                      .set("bytes", g(&self.disk_bytes))
@@ -379,7 +441,9 @@ impl Metrics {
              host(hits={} misses={} publishes={} evictions={} bytes={}) \
              resident(hits={} misses={} evictions={}) \
              disk(hits={} misses={} spills={} loads={} corrupt={} \
-             bytes={} load_mean={:.1}ms)",
+             bytes={} load_mean={:.1}ms) \
+             pool(slots={}/{} free={} slab_bytes={} grows={} \
+             evicted={} spilled={} shares={} partial={})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -418,6 +482,15 @@ impl Metrics {
             self.disk_corrupt.load(Ordering::Relaxed),
             self.disk_bytes.load(Ordering::Relaxed),
             self.disk_load.mean_ms(),
+            self.pool_slots_live.load(Ordering::Relaxed),
+            self.pool_slots_total.load(Ordering::Relaxed),
+            self.pool_slots_free.load(Ordering::Relaxed),
+            self.pool_slab_bytes.load(Ordering::Relaxed),
+            self.pool_grow_events.load(Ordering::Relaxed),
+            self.pool_blocks_evicted.load(Ordering::Relaxed),
+            self.pool_blocks_spilled.load(Ordering::Relaxed),
+            self.pool_share_hits.load(Ordering::Relaxed),
+            self.pool_partial_evictions.load(Ordering::Relaxed),
         )
     }
 }
@@ -497,6 +570,7 @@ mod tests {
             spills: 3,
             loads: 5,
             corrupt: 1,
+            corrupt_blocks: 2,
             collisions: 1,
             evictions: 2,
             current_bytes: 4096,
@@ -509,17 +583,59 @@ mod tests {
         assert_eq!(m.disk_hits.load(Ordering::Relaxed), 4);
         assert_eq!(m.disk_spills.load(Ordering::Relaxed), 3);
         assert_eq!(m.disk_corrupt.load(Ordering::Relaxed), 1);
+        assert_eq!(m.disk_corrupt_blocks.load(Ordering::Relaxed), 2);
         // bytes is a gauge: last write wins
         assert_eq!(m.disk_bytes.load(Ordering::Relaxed), 1024);
         assert_eq!(m.disk_load.count(), 2);
         assert!((m.disk_load.mean_ms() - 2.0).abs() < 1e-6);
         let j = m.cache_tiers_json().to_string();
         for field in ["\"disk\"", "\"spills\"", "\"loads\"", "\"corrupt\"",
-                      "\"load_mean_ms\"", "\"load_p50_ms\"",
-                      "\"load_p95_ms\"", "\"collisions\""] {
+                      "\"corrupt_blocks\"", "\"load_mean_ms\"",
+                      "\"load_p50_ms\"", "\"load_p95_ms\"",
+                      "\"collisions\""] {
             assert!(j.contains(field), "{field}: {j}");
         }
         assert!(m.report().contains("disk(hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn pool_counters_flush() {
+        let m = Metrics::new();
+        let p = PoolStats {
+            slots_total: 16,
+            slots_live: 10,
+            slots_free: 6,
+            slab_bytes: 8192,
+            grow_events: 2,
+            blocks_evicted: 3,
+            blocks_spilled: 2,
+            share_hits: 5,
+            partial_evictions: 1,
+            double_frees: 0,
+        };
+        m.record_pool(&p);
+        // event totals are monotone; occupancy gauges track the latest
+        // snapshot
+        m.record_pool(&PoolStats { slots_total: 16, slots_live: 4,
+                                   slots_free: 12, slab_bytes: 8192,
+                                   ..PoolStats::default() });
+        assert_eq!(m.pool_slots_live.load(Ordering::Relaxed), 4);
+        assert_eq!(m.pool_slots_free.load(Ordering::Relaxed), 12);
+        assert_eq!(m.pool_grow_events.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pool_blocks_evicted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.pool_share_hits.load(Ordering::Relaxed), 5);
+        assert_eq!(m.pool_partial_evictions.load(Ordering::Relaxed), 1);
+        let j = m.pool_json().to_string();
+        for field in ["\"slots_total\"", "\"slots_live\"", "\"slots_free\"",
+                      "\"slab_bytes\"", "\"grow_events\"",
+                      "\"blocks_evicted\"", "\"blocks_spilled\"",
+                      "\"share_hits\"", "\"partial_evictions\"",
+                      "\"double_frees\""] {
+            assert!(j.contains(field), "{field}: {j}");
+        }
+        assert!(crate::json::parse(&j).is_ok(), "{j}");
+        let r = m.report();
+        assert!(r.contains("pool(slots=4/16 free=12"), "{r}");
     }
 
     #[test]

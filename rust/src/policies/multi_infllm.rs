@@ -55,7 +55,7 @@ impl ContextPolicy for MultiInfLlmPolicy {
         // concatenated init+local compressed cache (same machinery the
         // paper grants every sparse method)
         let (comp_kv, comp_valid) =
-            super::samkv::build_compressed_cache(&cfg, docs);
+            super::samkv::build_compressed_cache(&cfg, docs)?;
         let q_pos: Vec<i32> = (0..cfg.query_len as i32)
             .map(|i| cfg.ctx_len as i32 + i)
             .collect();
@@ -78,8 +78,10 @@ impl ContextPolicy for MultiInfLlmPolicy {
         let mut scored: Vec<(f32, usize, usize)> = Vec::new();
         for (d, e) in docs.iter().enumerate() {
             let mut acc = vec![0f32; cfg.blocks_per_doc];
+            // scoring reads every block: one pool gather per doc
+            let kv = e.kv.gather()?;
             for l in stable..cfg.n_layers {
-                let s = block_scores_host(&qe.q_que, &e.kv, &cfg, l);
+                let s = block_scores_host(&qe.q_que, &kv, &cfg, l);
                 for (a, v) in acc.iter_mut().zip(s) {
                     *a += v;
                 }

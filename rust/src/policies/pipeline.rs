@@ -353,9 +353,14 @@ impl<'a, P: ContextPolicy + ?Sized> ServeSession<'a, P> {
         }
     }
 
-    /// Stage 2: pin the planned doc hashes for the session's lifetime,
-    /// then ensure every planned document KV exists in the tiered
-    /// cache.
+    /// Stage 2: pin the planned doc hashes for the session's lifetime
+    /// (a whole-document pin — [`crate::kvcache::PIN_ALL`] — covering
+    /// every pool block, since assemble may select any span), then
+    /// ensure every planned document KV exists in the tiered cache.
+    /// Policies whose plans bound the spans they can touch may pin
+    /// individual blocks instead via
+    /// [`EngineDocCache::pin_planned_blocks`], letting the host tier
+    /// evict a planned document's unpinned tail mid-session.
     pub fn prefill_docs(&mut self, model: &Model,
                         store: &mut EngineDocCache) -> Result<()> {
         if self.stage != Stage::Planned {

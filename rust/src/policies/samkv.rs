@@ -49,10 +49,12 @@ impl SamKvPolicy {
 
 /// Concatenate every document's init+local blocks into the compressed
 /// cache fed to `query_embed` (§3.1 "composite Cache unit").
-/// Returns `(comp_kv [L,2,H,Lc,Dh], comp_valid [Lc])`.
+/// Returns `(comp_kv [L,2,H,Lc,Dh], comp_valid [Lc])`. Spans are
+/// gathered straight out of the block pool; an evicted (unpinned)
+/// span is an error.
 pub fn build_compressed_cache(cfg: &ProfileConfig,
                               entries: &[Arc<DocEntry>])
-                              -> (Tensor, Vec<f32>) {
+                              -> crate::Result<(Tensor, Vec<f32>)> {
     let bs = cfg.block_size;
     let lc = cfg.comp_len;
     let mut comp = Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, lc,
@@ -67,19 +69,19 @@ pub fn build_compressed_cache(cfg: &ProfileConfig,
             for l in 0..cfg.n_layers {
                 for c in 0..2 {
                     for h in 0..cfg.n_heads {
-                        let src = e.kv.slice_at(&[l, c, h]);
                         let dst = comp.slice_at_mut(&[l, c, h]);
                         let d = cfg.head_dim;
-                        dst[cursor * d..(cursor + bs) * d].copy_from_slice(
-                            &src[b * bs * d..(b + 1) * bs * d],
-                        );
+                        e.kv.copy_span(
+                            l, c, h, b * bs, bs,
+                            &mut dst[cursor * d..(cursor + bs) * d],
+                        )?;
                     }
                 }
             }
             cursor += bs;
         }
     }
-    (comp, vec![1.0; lc])
+    Ok((comp, vec![1.0; lc]))
 }
 
 impl ContextPolicy for SamKvPolicy {
@@ -130,7 +132,7 @@ impl ContextPolicy for SamKvPolicy {
         let k = &self.cfg;
 
         // --- §3.1: generic query vector over the compressed cache -----
-        let (comp_kv, comp_valid) = build_compressed_cache(&cfg, docs);
+        let (comp_kv, comp_valid) = build_compressed_cache(&cfg, docs)?;
         let q_pos: Vec<i32> = (0..cfg.query_len as i32)
             .map(|i| cfg.ctx_len as i32 + i)
             .collect();
@@ -151,10 +153,12 @@ impl ContextPolicy for SamKvPolicy {
         let picked_per_doc = if k.selection {
             let mut sels = Vec::with_capacity(docs.len());
             for (d, e) in docs.iter().enumerate() {
+                // scoring walks every block anyway: one gather per doc
+                let kv = e.kv.gather()?;
                 let per_layer: Vec<Vec<f32>> = if k.offload_scoring {
                     let scores = model.score_blocks(
                         q_hats[d].clone(),
-                        extract_k(&cfg, &e.kv),
+                        extract_k(&cfg, &kv),
                         &vec![1.0; cfg.doc_len],
                     )?;
                     stable
@@ -165,7 +169,7 @@ impl ContextPolicy for SamKvPolicy {
                     stable
                         .iter()
                         .map(|&l| {
-                            block_scores_host(&q_hats[d], &e.kv, &cfg, l)
+                            block_scores_host(&q_hats[d], &kv, &cfg, l)
                         })
                         .collect()
                 };

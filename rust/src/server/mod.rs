@@ -17,8 +17,12 @@
 //! `assemble_overlap_ms`), and the per-tier document-cache counters
 //! (`{"cache":{"host":{...},"resident":{...},"disk":{...}}}` — the
 //! `disk` object carries the persistent tier's hits/misses/spills/
-//! loads/corrupt/collisions/evictions/bytes plus the load-latency
-//! mean/p50/p95);
+//! loads/corrupt/corrupt_blocks/collisions/evictions/bytes plus the
+//! load-latency mean/p50/p95), and the KV block-pool snapshot
+//! (`{"pool":{...}}` — slot gauges `slots_total`/`slots_live`/
+//! `slots_free`/`slab_bytes` plus the monotone event counters
+//! `grow_events`/`blocks_evicted`/`blocks_spilled`/`share_hits`/
+//! `partial_evictions`/`double_frees`);
 //! `{"cmd":"shutdown"}` stops the listener.
 
 use std::io::{BufRead, BufReader, Write};
@@ -131,6 +135,7 @@ fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
                 .set("report", metrics.report())
                 .set("serving", metrics.serving_json())
                 .set("cache", metrics.cache_tiers_json())
+                .set("pool", metrics.pool_json())
                 .set("loads",
                      Value::Arr(router
                          .loads()

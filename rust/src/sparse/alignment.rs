@@ -92,9 +92,12 @@ pub fn build_recompute_plan(cfg: &ProfileConfig, ctx: &AssembledContext,
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::json;
-    use crate::kvcache::store::{doc_hash, DocEntry};
+    use crate::kvcache::pool::KvBlockPool;
+    use crate::kvcache::store::DocEntry;
     use crate::model::Buffer;
 
     fn cfg() -> ProfileConfig {
@@ -113,15 +116,16 @@ mod tests {
 
     fn doc(cfg: &ProfileConfig) -> DocEntry {
         let tokens: Vec<i32> = (0..cfg.doc_len as i32).collect();
-        DocEntry {
-            hash: doc_hash(&tokens),
+        let pool = Arc::new(KvBlockPool::new(7));
+        DocEntry::from_parts(
+            &pool,
             tokens,
-            kv: Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, cfg.doc_len,
-                                cfg.head_dim]),
-            attn: Tensor::zeros(&[1]),
-            q_local: Tensor::zeros(&[1]),
-            bytes: 0,
-        }
+            Tensor::zeros(&[cfg.n_layers, 2, cfg.n_heads, cfg.doc_len,
+                            cfg.head_dim]),
+            Tensor::zeros(&[1]),
+            Tensor::zeros(&[1]),
+        )
+        .unwrap()
     }
 
     fn ba_with_outliers(cfg: &ProfileConfig, l0: Vec<usize>,

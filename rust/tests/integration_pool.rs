@@ -1,0 +1,165 @@
+//! Paged KV block-pool integration over the tiny artifacts: every
+//! serving policy must produce token-identical answers regardless of
+//! the pool's block span (the block size is a storage-layout knob, not
+//! a semantic one), and a warm restart over block-format (v2) disk
+//! files must serve with zero model prefills — including a restart
+//! that changes the block span, which exercises the gather-and-reblock
+//! load path.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use samkv::config::{DiskWriteback, ServingConfig};
+use samkv::coordinator::{Engine, Router, ServeRequest, ServeResponse};
+use samkv::kvcache::{DiskDocCache, HostDocCache};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::workload::{Dataset, Sample};
+
+const ALL_POLICIES: [&str; 7] = [
+    "Recompute",
+    "Reuse",
+    "Multi-InfLLM",
+    "CacheBlend",
+    "EPIC",
+    "SamKV-overwrite",
+    "SamKV-fusion",
+];
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+/// One serving stack whose host tier stores KV in `block_tokens`-sized
+/// pool blocks; serves `sample` once per policy name and returns the
+/// responses plus the stack's metrics registry.
+fn serve_policies(block_tokens: usize, dir: Option<&PathBuf>,
+                  sample: &Sample, policies: &[&str])
+                  -> (Vec<ServeResponse>, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let mut host = HostDocCache::unbounded().with_block_tokens(block_tokens);
+    if let Some(dir) = dir {
+        let disk = Arc::new(DiskDocCache::open(dir, usize::MAX).unwrap());
+        host = host.with_disk(disk, DiskWriteback::Through);
+    }
+    let host = Arc::new(host);
+    let router = Arc::new(Router::new(1));
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "Reuse".to_string(), Arc::clone(&metrics),
+                               host, Some(router.residency_handle(0)))
+        .unwrap();
+    let responses = policies
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            engine
+                .handle()
+                .serve(ServeRequest {
+                    id: i as u64 + 1,
+                    sample: sample.clone(),
+                    policy: p.to_string(),
+                    stream: false,
+                })
+                .unwrap()
+        })
+        .collect();
+    (responses, metrics)
+}
+
+/// The block span must be invisible in the output: every policy's
+/// answer over a fine-grained (8-token) pool must match its answer
+/// over the default-span pool token for token. Also proves the pool
+/// gauges flush into the metrics registry during serving.
+#[test]
+fn all_policies_token_identical_across_block_spans() {
+    let Some(ds) = ready() else { return };
+    let sample = ds.samples[0].clone();
+
+    let (base, metrics) = serve_policies(64, None, &sample, &ALL_POLICIES);
+    for (p, r) in ALL_POLICIES.iter().zip(&base) {
+        assert!(r.error.is_none(), "{p}: {:?}", r.error);
+        assert!(!r.answer.is_empty(), "{p}: empty answer");
+    }
+    assert!(metrics.pool_slots_total.load(Ordering::Relaxed) > 0,
+            "pool gauges must flush into metrics during serving");
+    assert!(metrics.pool_slots_live.load(Ordering::Relaxed) > 0);
+    assert!(metrics.pool_slab_bytes.load(Ordering::Relaxed) > 0);
+    assert!(metrics.report().contains("pool(slots="),
+            "pool counters must appear in the metrics report");
+
+    let (fine, _) = serve_policies(8, None, &sample, &ALL_POLICIES);
+    for ((p, r64), r8) in ALL_POLICIES.iter().zip(&base).zip(&fine) {
+        assert!(r8.error.is_none(), "{p}: {:?}", r8.error);
+        assert_eq!(r8.answer, r64.answer,
+                   "{p}: answers must not depend on the pool block span");
+    }
+}
+
+/// Warm restart over block-format (v2) disk files: a fresh process
+/// stack over the same cache dir must serve with zero model prefills
+/// and token-identical output — both when the restarted pool uses the
+/// same block span (per-block restore path) and when it uses a
+/// different one (whole-file gather + re-block path).
+#[test]
+fn warm_restart_over_block_format_disk_files() {
+    let Some(ds) = ready() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("samkv-itest-pool-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sample = ds.samples[0].clone();
+    let policy = ["SamKV-fusion"];
+
+    // --- cold process over an 8-token-block pool ----------------------
+    let cold_answer = {
+        let (resp, metrics) =
+            serve_policies(8, Some(&dir), &sample, &policy);
+        let resp = &resp[0];
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(metrics.doc_prefills.load(Ordering::Relaxed) > 0,
+                "cold run must prefill");
+        assert!(metrics.disk_spills.load(Ordering::Relaxed) > 0,
+                "write-through must persist the documents");
+        resp.answer.clone()
+    };
+
+    // --- restart with the same block span: per-block restore ----------
+    {
+        let (resp, metrics) =
+            serve_policies(8, Some(&dir), &sample, &policy);
+        let resp = &resp[0];
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.answer, cold_answer,
+                   "same-span warm restart must be token-identical");
+        assert_eq!(metrics.doc_prefills.load(Ordering::Relaxed), 0,
+                   "warm restart must never re-prefill");
+        assert!(metrics.disk_hits.load(Ordering::Relaxed) > 0);
+        assert_eq!(metrics.disk_corrupt.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.disk_corrupt_blocks.load(Ordering::Relaxed), 0);
+    }
+
+    // --- restart with a different span: gather + re-block -------------
+    {
+        let (resp, metrics) =
+            serve_policies(16, Some(&dir), &sample, &policy);
+        let resp = &resp[0];
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.answer, cold_answer,
+                   "cross-span warm restart must be token-identical");
+        assert_eq!(metrics.doc_prefills.load(Ordering::Relaxed), 0,
+                   "a block-span change must not force re-prefills");
+        assert!(metrics.disk_hits.load(Ordering::Relaxed) > 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
