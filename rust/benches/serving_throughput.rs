@@ -7,13 +7,19 @@
 //! tiers. Each sweep row in the emitted JSON carries tokens/sec, TTFT
 //! p50/p95, queue-wait p50/p95, the fused decode-round counters, and
 //! the per-tier hit/miss/eviction/publish counters (host, resident,
-//! and the persistent disk tier); with `--engines 2+`,
+//! and the persistent disk tier, plus the KV codec counters under
+//! `--kv-codec`/`--kv-hot-blocks`); with `--engines 2+`,
 //! `host_publishes == unique documents` demonstrates the cross-engine
-//! prefill dedup, and the emitted `restart` object carries a
+//! prefill dedup. The emitted `restart` object carries a
 //! cold-vs-warm-start pair over a disk cache directory
-//! (`warm_doc_prefills == 0` demonstrates the zero-prefill restart).
+//! (`warm_doc_prefills == 0` demonstrates the zero-prefill restart,
+//! `warm_matches_cold` the token-identical lossless warm path), and
+//! `restart_codecs` repeats the pair once per KV encoding
+//! (f32/f16/int8) so the warm-restart I/O saving
+//! (`warm_disk_bytes_loaded`) is measured per codec.
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
+use samkv::config::{KvCodecKind, ServingConfig};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1)
@@ -24,13 +30,19 @@ fn main() {
             .expect("--batch-sizes");
     let rates = exp::parse_list::<f64>(&args.get_str("rates", "0,32"))
         .expect("--rates");
+    let defaults = ServingConfig::default();
+    let codec = args.get_str("kv-codec", defaults.kv_codec.name())
+        .parse::<KvCodecKind>()
+        .expect("--kv-codec");
+    let hot_blocks =
+        args.get::<usize>("kv-hot-blocks", defaults.kv_hot_blocks);
     for policy in args.get_str("policies",
                                "SamKV-fusion,CacheBlend,Reuse").split(',') {
         exp::throughput(&profile, policy,
                         args.get::<usize>("requests", 24),
                         args.get::<usize>("unique", 8),
                         args.get::<usize>("engines", 2),
-                        &batch_sizes, &rates)
+                        &batch_sizes, &rates, codec, hot_blocks)
             .unwrap();
     }
 }

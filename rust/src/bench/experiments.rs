@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 
 use crate::attention::{analyze_doc, layer_stability_scores};
 use crate::bench::Table;
-use crate::config::{SamKvConfig, UpdateStrategy};
+use crate::config::{KvCodecKind, SamKvConfig, UpdateStrategy};
 use crate::eval::{evaluate, EvalResult};
 use crate::json::Value;
 use crate::kvcache::EngineDocCache;
@@ -411,18 +411,24 @@ where
 /// the per-run JSON row: tokens/sec, TTFT and queue-wait percentiles,
 /// fused and batched decode-round counters (executions per round,
 /// lane occupancy, admission/decode overlap), the per-tier cache
-/// behaviour, and the KV block-pool counters (`pool_*`: slot gauges
-/// plus share-hit / partial-eviction events). With `n_engines >= 2`
-/// the host-tier publish counter
+/// behaviour, the KV block-pool counters (`pool_*`: slot gauges
+/// plus share-hit / partial-eviction events), the codec counters
+/// (`codec_*`, under the `codec`/`hot_blocks` the cache stack was
+/// built with), and `answers_fnv` — an FNV-1a digest of every
+/// response's tokens in request-id order, so two runs over the same
+/// workload can be compared for token-identical output. With
+/// `n_engines >= 2` the host-tier publish counter
 /// proves the cross-engine dedup: each unique document is prefilled
 /// exactly once process-wide.
 pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
                       n_unique: usize, n_engines: usize, max_batch: usize,
                       arrival_rps: f64,
-                      disk_dir: Option<&std::path::Path>) -> Result<Value> {
+                      disk_dir: Option<&std::path::Path>,
+                      codec: KvCodecKind, hot_blocks: usize)
+                      -> Result<Value> {
     use crate::config::{DiskWriteback, ServingConfig};
     use crate::coordinator::{Engine, Router, ServeEvent, ServeRequest};
-    use crate::kvcache::{DiskDocCache, HostDocCache};
+    use crate::kvcache::{codec_for, DiskDocCache, HostDocCache};
     use crate::metrics::Metrics;
     use crate::rng::Rng;
     use crate::workload::synthetic_sample;
@@ -430,13 +436,20 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
 
     let n_engines = n_engines.max(1);
     let metrics = Arc::new(Metrics::new());
+    // one codec instance shared by the host pool and the disk tier,
+    // mirroring the serve command's wiring, so the compression stats
+    // aggregate in one place
+    let codec_arc = codec_for(codec);
     let host = Arc::new(match disk_dir {
         Some(dir) => {
-            let disk = Arc::new(DiskDocCache::open(dir, usize::MAX)?);
+            let disk = Arc::new(DiskDocCache::open(dir, usize::MAX)?
+                .with_codec(Arc::clone(&codec_arc)));
             HostDocCache::unbounded()
+                .with_codec(Arc::clone(&codec_arc), hot_blocks)
                 .with_disk(disk, DiskWriteback::Through)
         }
-        None => HostDocCache::unbounded(),
+        None => HostDocCache::unbounded()
+            .with_codec(Arc::clone(&codec_arc), hot_blocks),
     });
     let router = Arc::new(Router::new(n_engines));
     let defaults = ServingConfig::default();
@@ -446,6 +459,8 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         // the pool must fit a full admission wave, or the engine would
         // silently clamp the sweep's batch axis to the default cap
         max_active: defaults.max_active.max(max_batch),
+        kv_codec: codec,
+        kv_hot_blocks: hot_blocks,
         ..defaults
     };
     let engines: Vec<Engine> = (0..n_engines)
@@ -486,6 +501,9 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         let router = Arc::clone(&router);
         std::thread::spawn(move || {
             let mut errors = 0usize;
+            // every (request id, answer tokens) pair, for the
+            // run-level answers_fnv digest
+            let mut answers: Vec<(u64, Vec<i32>)> = Vec::new();
             let mut inflight: Vec<(usize, _)> = Vec::new();
             let mut open = true;
             loop {
@@ -505,6 +523,7 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
                             if r.error.is_some() {
                                 errors += 1;
                             }
+                            answers.push((r.id, r.answer));
                             true
                         }
                         Ok(ServeEvent::Token { .. }) => false,
@@ -523,7 +542,7 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
                     }
                 }
                 if !open && inflight.is_empty() {
-                    break errors;
+                    break (errors, answers);
                 }
                 if !progressed {
                     std::thread::sleep(
@@ -547,7 +566,20 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         let _ = done_tx.send((engine, rx));
     }
     drop(done_tx);
-    let errors = collector.join().expect("collector thread");
+    let (errors, mut answers) = collector.join().expect("collector thread");
+    // digest responses in request-id order (completion order is racy),
+    // so two runs over the same workload compare token-for-token
+    answers.sort_by_key(|(id, _)| *id);
+    let answers_fnv = {
+        let mut bytes = Vec::new();
+        for (id, toks) in &answers {
+            bytes.extend_from_slice(&id.to_le_bytes());
+            for &t in toks {
+                bytes.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+        crate::kvcache::store::fnv64(&bytes)
+    };
     let wall_s = t0.elapsed().as_secs_f64();
     let rps = n_requests as f64 / wall_s;
     let load = |a: &std::sync::atomic::AtomicU64| {
@@ -624,38 +656,73 @@ pub fn throughput_run(profile: &str, policy: &str, n_requests: usize,
         .set("pool_blocks_spilled", load(&metrics.pool_blocks_spilled))
         .set("pool_share_hits", load(&metrics.pool_share_hits))
         .set("pool_partial_evictions",
-             load(&metrics.pool_partial_evictions)))
+             load(&metrics.pool_partial_evictions))
+        // KV codec counters (the engine flushes the shared codec's
+        // stats every admission wave; under f32 physical == logical
+        // and the ratio is 1.0)
+        .set("kv_codec", codec.name())
+        .set("kv_hot_blocks", hot_blocks)
+        .set("codec_blocks_encoded", load(&metrics.codec_blocks_encoded))
+        .set("codec_blocks_decoded", load(&metrics.codec_blocks_decoded))
+        .set("codec_logical_bytes", load(&metrics.codec_logical_bytes))
+        .set("codec_physical_bytes", load(&metrics.codec_physical_bytes))
+        .set("codec_compression_ratio", metrics.codec_compression_ratio())
+        .set("codec_decode_mean_ms", metrics.codec_decode.mean_ms())
+        .set("disk_bytes_loaded", load(&metrics.disk_bytes_loaded))
+        // hex digest of all response tokens in request-id order: equal
+        // digests mean token-identical output across runs
+        .set("answers_fnv", format!("{answers_fnv:016x}")))
 }
 
 /// Cold-vs-warm-start pair over one persistent disk cache directory:
 /// the first run prefills and spills every unique document
 /// (write-through); the second rebuilds the whole process-side cache
 /// stack over the same directory — a simulated server restart — and
-/// must serve off disk with **zero** model prefills. The returned row
-/// feeds the `restart` object of the throughput sweep JSON and the
-/// distilled `BENCH_serving.json` artifact.
+/// must serve off disk with **zero** model prefills. Both runs use
+/// `codec` for the cold host blocks and disk records, so the pair
+/// also measures how much warm-restart I/O (`*_disk_bytes_loaded`)
+/// the encoding saves, and `warm_matches_cold` reports whether the
+/// restarted server produced token-identical answers (always true
+/// under `f32`; lossy codecs may legitimately differ). The returned
+/// row feeds the `restart`/`restart_codecs` objects of the throughput
+/// sweep JSON and the distilled `BENCH_serving.json` artifact.
 pub fn cold_warm_restart(profile: &str, policy: &str, n_requests: usize,
-                         n_unique: usize) -> Result<Value> {
-    let dir = std::env::temp_dir()
-        .join(format!("samkv-bench-restart-{}", std::process::id()));
+                         n_unique: usize, codec: KvCodecKind)
+                         -> Result<Value> {
+    let dir = std::env::temp_dir().join(format!(
+        "samkv-bench-restart-{}-{}", std::process::id(), codec.name()));
     let _ = std::fs::remove_dir_all(&dir);
-    println!("== Cold vs warm start (disk tier at {}):", dir.display());
+    println!("== Cold vs warm start (disk tier at {}, codec {}):",
+             dir.display(), codec.name());
+    let defaults = crate::config::ServingConfig::default();
     let cold = throughput_run(profile, policy, n_requests, n_unique, 1, 4,
-                              0.0, Some(dir.as_path()))?;
+                              0.0, Some(dir.as_path()), codec,
+                              defaults.kv_hot_blocks)?;
     let warm = throughput_run(profile, policy, n_requests, n_unique, 1, 4,
-                              0.0, Some(dir.as_path()))?;
+                              0.0, Some(dir.as_path()), codec,
+                              defaults.kv_hot_blocks)?;
     let _ = std::fs::remove_dir_all(&dir);
     let f = |v: &Value, k: &str| {
         v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0)
     };
+    let s = |v: &Value, k: &str| {
+        v.get(k).and_then(|x| x.as_str()).unwrap_or("").to_string()
+    };
     let (cold_tps, warm_tps) =
         (f(&cold, "tokens_per_s"), f(&warm, "tokens_per_s"));
+    let (cold_fnv, warm_fnv) =
+        (s(&cold, "answers_fnv"), s(&warm, "answers_fnv"));
+    let matches = !cold_fnv.is_empty() && cold_fnv == warm_fnv;
     println!("cold {:.1} tok/s ({} doc prefills) -> warm restart {:.1} \
-              tok/s ({} doc prefills, {} disk hits)\n",
+              tok/s ({} doc prefills, {} disk hits, {:.1} KiB loaded, \
+              answers {})\n",
              cold_tps, f(&cold, "doc_prefills") as u64, warm_tps,
              f(&warm, "doc_prefills") as u64,
-             f(&warm, "disk_hits") as u64);
+             f(&warm, "disk_hits") as u64,
+             f(&warm, "disk_bytes_loaded") / 1024.0,
+             if matches { "identical" } else { "differ" });
     Ok(Value::obj()
+        .set("kv_codec", codec.name())
         .set("cold_tokens_per_s", cold_tps)
         .set("warm_tokens_per_s", warm_tps)
         .set("warm_over_cold_pct", ratio_pct(warm_tps, cold_tps))
@@ -663,17 +730,32 @@ pub fn cold_warm_restart(profile: &str, policy: &str, n_requests: usize,
         .set("warm_doc_prefills", f(&warm, "doc_prefills"))
         .set("warm_disk_hits", f(&warm, "disk_hits"))
         .set("warm_ttft_p50_ms", f(&warm, "ttft_p50_ms"))
-        .set("cold_ttft_p50_ms", f(&cold, "ttft_p50_ms")))
+        .set("cold_ttft_p50_ms", f(&cold, "ttft_p50_ms"))
+        // warm-restart I/O: file bytes read back off the disk tier —
+        // the axis a compact encoding is supposed to shrink
+        .set("cold_disk_bytes_loaded", f(&cold, "disk_bytes_loaded"))
+        .set("warm_disk_bytes_loaded", f(&warm, "disk_bytes_loaded"))
+        .set("codec_compression_ratio",
+             f(&warm, "codec_compression_ratio"))
+        .set("cold_answers_fnv", cold_fnv)
+        .set("warm_answers_fnv", warm_fnv)
+        .set("warm_matches_cold", matches))
 }
 
 /// Serving-throughput sweep over admission-wave size (`max_batch`) ×
 /// open-loop arrival rate, persisting every run's row (tokens/sec,
 /// TTFT p50/p95, queue-wait p50/p95, fused-round counters, per-tier
-/// cache stats incl. the disk tier) plus a cold-vs-warm-restart pair
-/// (`restart` object) under `throughput_{profile}_{policy}.json`.
+/// cache stats incl. the disk tier, codec counters) plus
+/// cold-vs-warm-restart pairs under
+/// `throughput_{profile}_{policy}.json`. Sweep rows run under
+/// `codec`/`hot_blocks`; the restart experiment always runs once per
+/// codec kind (`restart_codecs` array — the codec axis), with the
+/// lossless `f32` pair duplicated as the legacy `restart` object so
+/// its byte-identical warm path stays directly assertable.
 pub fn throughput(profile: &str, policy: &str, n_requests: usize,
                   n_unique: usize, n_engines: usize,
-                  batch_sizes: &[usize], rates: &[f64]) -> Result<Value> {
+                  batch_sizes: &[usize], rates: &[f64],
+                  codec: KvCodecKind, hot_blocks: usize) -> Result<Value> {
     let batch_sizes: Vec<usize> = if batch_sizes.is_empty() {
         vec![4]
     } else {
@@ -691,7 +773,8 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
     for &mb in &batch_sizes {
         for &rate in &rates {
             let row = throughput_run(profile, policy, n_requests, n_unique,
-                                     n_engines, mb, rate, None)?;
+                                     n_engines, mb, rate, None, codec,
+                                     hot_blocks)?;
             let f = |k: &str| {
                 row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
             };
@@ -709,11 +792,21 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         }
     }
     tbl.print();
-    // cold-vs-warm restart pair over a persistent disk tier (kept
-    // small: it exists to prove the zero-prefill warm path and give
-    // the CI artifact a restart row, not to stress throughput)
-    let restart = cold_warm_restart(profile, policy, n_requests.min(8),
-                                    n_unique.min(4))?;
+    // cold-vs-warm restart pairs over a persistent disk tier (kept
+    // small: they exist to prove the zero-prefill warm path and give
+    // the CI artifact restart rows, not to stress throughput). The
+    // codec axis: one pair per encoding, f32 first so the legacy
+    // `restart` object keeps its byte-identical lossless semantics.
+    let mut restart = Value::Null;
+    let mut restart_codecs = Vec::new();
+    for k in [KvCodecKind::F32, KvCodecKind::F16, KvCodecKind::Int8] {
+        let pair = cold_warm_restart(profile, policy, n_requests.min(8),
+                                     n_unique.min(4), k)?;
+        if k == KvCodecKind::F32 {
+            restart = pair.clone();
+        }
+        restart_codecs.push(pair);
+    }
     let v = Value::obj()
         .set("experiment", "throughput")
         .set("model", profile)
@@ -721,7 +814,10 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
         .set("requests", n_requests)
         .set("unique_docsets", n_unique)
         .set("engines", n_engines.max(1))
+        .set("kv_codec", codec.name())
+        .set("kv_hot_blocks", hot_blocks)
         .set("restart", restart)
+        .set("restart_codecs", Value::Arr(restart_codecs))
         .set("rows", Value::Arr(rows));
     save_result(&format!("throughput_{profile}_{policy}"), &v)?;
     Ok(v)

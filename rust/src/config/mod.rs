@@ -200,6 +200,44 @@ impl std::str::FromStr for DiskWriteback {
     }
 }
 
+/// How KV block payloads are byte-encoded when they leave the hot
+/// path — host-tier blocks past the `--kv-hot-blocks` watermark and
+/// every disk-tier block record (`--kv-codec`, see
+/// [`crate::kvcache::codec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvCodecKind {
+    /// Lossless little-endian f32 (default): byte-identical round
+    /// trip, no compression.
+    F32,
+    /// IEEE half precision, 2× smaller, hand-rolled bit conversion.
+    F16,
+    /// Per-block absmax int8 (one f32 scale per block), ~4× smaller.
+    Int8,
+}
+
+impl KvCodecKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvCodecKind::F32 => "f32",
+            KvCodecKind::F16 => "f16",
+            KvCodecKind::Int8 => "int8",
+        }
+    }
+}
+
+impl std::str::FromStr for KvCodecKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(KvCodecKind::F32),
+            "f16" => Ok(KvCodecKind::F16),
+            "int8" => Ok(KvCodecKind::Int8),
+            _ => anyhow::bail!("unknown KV codec `{s}` \
+                                (expected f32|f16|int8)"),
+        }
+    }
+}
+
 /// Serving-stack knobs.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -236,6 +274,18 @@ pub struct ServingConfig {
     /// [`crate::kvcache::KvBlockPool`]. Smaller blocks evict and share
     /// at finer grain but cost more per-block bookkeeping.
     pub kv_block_tokens: usize,
+    /// Block payload encoding for cold host blocks and all disk
+    /// records (`--kv-codec`). `F32` keeps every block in the pool at
+    /// full precision (byte-identical serving); `F16`/`Int8` trade
+    /// tolerance-bounded precision for 2–4× more documents per byte
+    /// budget and proportionally fewer bytes moved per tier crossing.
+    pub kv_codec: KvCodecKind,
+    /// Hot watermark (`--kv-hot-blocks`): a document's first N blocks
+    /// stay pooled at full f32 precision even under a lossy codec (the
+    /// head of a document carries the retrieval-critical KV); blocks
+    /// at or past the watermark are stored encoded. Ignored under
+    /// `F32`. 0 encodes every block.
+    pub kv_hot_blocks: usize,
 }
 
 impl Default for ServingConfig {
@@ -253,9 +303,15 @@ impl Default for ServingConfig {
             disk_cache_mb: 0,
             disk_writeback: DiskWriteback::Evict,
             kv_block_tokens: crate::kvcache::DEFAULT_KV_BLOCK_TOKENS,
+            kv_codec: KvCodecKind::F32,
+            kv_hot_blocks: DEFAULT_KV_HOT_BLOCKS,
         }
     }
 }
+
+/// Default `--kv-hot-blocks`: how many leading blocks of a document
+/// stay at full f32 precision under a lossy codec.
+pub const DEFAULT_KV_HOT_BLOCKS: usize = 4;
 
 #[cfg(test)]
 mod tests {
@@ -335,6 +391,30 @@ mod tests {
         let c = ServingConfig::default();
         assert!(c.disk_cache_dir.is_empty(), "disk tier defaults off");
         assert_eq!(c.disk_writeback, DiskWriteback::Evict);
+    }
+
+    #[test]
+    fn kv_codec_parse_rejects_unknown_with_listing() {
+        assert_eq!("f32".parse::<KvCodecKind>().unwrap(),
+                   KvCodecKind::F32);
+        assert_eq!("f16".parse::<KvCodecKind>().unwrap(),
+                   KvCodecKind::F16);
+        assert_eq!("int8".parse::<KvCodecKind>().unwrap(),
+                   KvCodecKind::Int8);
+        for kind in
+            [KvCodecKind::F32, KvCodecKind::F16, KvCodecKind::Int8]
+        {
+            assert_eq!(kind.name().parse::<KvCodecKind>().unwrap(), kind);
+        }
+        // an unknown name must error AND list the valid codecs
+        let err = "bf16".parse::<KvCodecKind>().unwrap_err().to_string();
+        assert!(err.contains("bf16"), "{err}");
+        assert!(err.contains("f32") && err.contains("f16")
+                && err.contains("int8"), "{err}");
+        let c = ServingConfig::default();
+        assert_eq!(c.kv_codec, KvCodecKind::F32,
+                   "lossless must stay the default");
+        assert_eq!(c.kv_hot_blocks, DEFAULT_KV_HOT_BLOCKS);
     }
 
     #[test]

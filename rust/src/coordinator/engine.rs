@@ -630,6 +630,9 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
                                  &disk.take_load_samples());
     }
     metrics.record_pool(&store.host().pool().stats());
+    let codec = store.host().pool().codec();
+    metrics.record_codec(&codec.stats().snapshot(codec.name()),
+                         &codec.stats().take_decode_samples());
 
     // --- survivors go to the decode pool -------------------------------
     let mut ready = Vec::with_capacity(sessions.len());

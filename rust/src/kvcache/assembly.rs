@@ -9,9 +9,16 @@
 //! Document KV is **gathered straight out of the paged block pool**
 //! ([`crate::kvcache::pool::KvBlocks::copy_span`]): an append reads
 //! only the pool slots its token span touches, so assembling a sparse
-//! buffer never materialises a document's full tensor. Appending a
-//! span whose pool block was evicted is an error — callers pin their
-//! planned documents (or planned blocks) for exactly this window.
+//! buffer never materialises a document's full tensor. Blocks the
+//! pool holds encoded (past the `--kv-hot-blocks` watermark under a
+//! lossy `--kv-codec`) **dequantize during that gather**
+//! ([`crate::kvcache::codec::KvCodec::decode_span`]) straight into
+//! the f32 buffer being assembled — this module and everything
+//! downstream (attention, decode) only ever see f32, and no
+//! intermediate decoded copy of the block is materialised. Appending
+//! a span whose pool block was evicted is an error — callers pin
+//! their planned documents (or planned blocks) for exactly this
+//! window.
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,719 @@
+//! Pluggable KV block codecs: how a block's f32 payload is byte-encoded
+//! when it leaves the hot path — host-tier cold blocks past the
+//! `--kv-hot-blocks` watermark and every disk-tier block record.
+//!
+//! A [`KvCodec`] maps one **logical block payload** (the channel-major
+//! `block_len × per_token_elems` f32 slice the pool and disk tier
+//! already exchange) to an opaque byte payload and back:
+//!
+//! * [`LosslessF32`] (`--kv-codec f32`, the default) — raw
+//!   little-endian f32 bytes, byte-identical round trip. Every v2 disk
+//!   record decodes through this codec.
+//! * [`F16Codec`] (`f16`) — IEEE half precision, hand-rolled bit
+//!   conversion (round-to-nearest-even), 2× smaller. Non-finite
+//!   elements sanitize to 0.0 and magnitudes clamp to ±65504.
+//! * [`Int8BlockCodec`] (`int8`) — per-block absmax quantization: one
+//!   f32 scale (absmax/127, computed over the block's finite elements)
+//!   followed by one i8 per element, ~4× smaller. Non-finite elements
+//!   quantize to 0.
+//!
+//! Dequantization happens **on read** — [`super::pool::KvBlocks`]
+//! decodes spans straight into the f32 assembly scratch
+//! ([`KvCodec::decode_span`]), so attention/decode consumers never see
+//! encoded bytes. On disk, the payload (scale included) rides *under*
+//! the existing per-record FNV-1a checksum, so a flipped scale byte is
+//! caught like any other corruption (format v3, see [`super::disk`]).
+//!
+//! Each codec instance carries its own [`CodecStats`] (blocks
+//! encoded/decoded, logical vs physical bytes, buffered decode-time
+//! samples). The serving stack builds **one instance per process**
+//! ([`codec_for`]) and shares the `Arc` between the host pool and the
+//! disk tier, so the stats aggregate across tiers; [`codec_by_id`]
+//! supplies process-wide fallback instances for decoding records
+//! written under a different codec than the session's (a warm restart
+//! over old files).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::KvCodecKind;
+
+/// Wire ids (disk v3 per-record codec tag). Stable forever: files
+/// outlive binaries.
+pub const CODEC_F32: u8 = 0;
+pub const CODEC_F16: u8 = 1;
+pub const CODEC_INT8: u8 = 2;
+
+/// Decode-latency samples buffered until the next
+/// [`CodecStats::take_decode_samples`] drain (mirrors the disk tier's
+/// load-sample buffer).
+const MAX_DECODE_SAMPLES: usize = 4096;
+
+/// Per-codec-instance counters. All monotone lifetime totals; the
+/// decode-time samples are a drain-on-read buffer for the metrics
+/// histogram.
+#[derive(Debug, Default)]
+pub struct CodecStats {
+    blocks_encoded: AtomicU64,
+    blocks_decoded: AtomicU64,
+    /// f32 bytes represented by every encode (4 × elements).
+    logical_bytes: AtomicU64,
+    /// Encoded bytes actually produced by every encode.
+    physical_bytes: AtomicU64,
+    decode_ms: Mutex<Vec<f64>>,
+}
+
+impl CodecStats {
+    fn note_encode(&self, n_elems: usize, physical: usize) {
+        self.blocks_encoded.fetch_add(1, Ordering::Relaxed);
+        self.logical_bytes
+            .fetch_add(n_elems as u64 * 4, Ordering::Relaxed);
+        self.physical_bytes
+            .fetch_add(physical as u64, Ordering::Relaxed);
+    }
+
+    fn note_decode(&self, ms: f64) {
+        self.blocks_decoded.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.decode_ms.lock().unwrap();
+        if g.len() < MAX_DECODE_SAMPLES {
+            g.push(ms);
+        }
+    }
+
+    /// Drain the decode-latency samples (milliseconds) buffered since
+    /// the previous drain — the engine feeds them into the metrics
+    /// histogram after every admission wave.
+    pub fn take_decode_samples(&self) -> Vec<f64> {
+        std::mem::take(&mut self.decode_ms.lock().unwrap())
+    }
+
+    pub fn snapshot(&self, codec: &'static str) -> CodecSnapshot {
+        CodecSnapshot {
+            codec,
+            blocks_encoded: self.blocks_encoded.load(Ordering::Relaxed),
+            blocks_decoded: self.blocks_decoded.load(Ordering::Relaxed),
+            logical_bytes: self.logical_bytes.load(Ordering::Relaxed),
+            physical_bytes: self.physical_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one codec's counters (what flows into
+/// [`crate::metrics::Metrics::record_codec`] and the bench rows).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CodecSnapshot {
+    pub codec: &'static str,
+    pub blocks_encoded: u64,
+    pub blocks_decoded: u64,
+    pub logical_bytes: u64,
+    pub physical_bytes: u64,
+}
+
+impl CodecSnapshot {
+    /// logical / physical bytes over everything encoded so far (1.0
+    /// before any encode, so the lossless default reports a neutral
+    /// ratio instead of 0/0).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+}
+
+/// One block encoding. Implementations are stateless apart from their
+/// [`CodecStats`]; `encode_block` / `decode_block` / `decode_span`
+/// record into them.
+pub trait KvCodec: Send + Sync + std::fmt::Debug {
+    /// Wire id (disk v3 record tag — one of [`CODEC_F32`] /
+    /// [`CODEC_F16`] / [`CODEC_INT8`]).
+    fn id(&self) -> u8;
+
+    /// CLI / metrics name (`f32` / `f16` / `int8`).
+    fn name(&self) -> &'static str;
+
+    /// Encoded payload size in bytes for a block of `n_elems` f32
+    /// elements (exact, not an estimate — budget accounting uses it).
+    fn encoded_len(&self, n_elems: usize) -> usize;
+
+    /// Encode one logical block payload. Never panics: non-finite
+    /// elements are sanitized per codec.
+    fn encode_block(&self, src: &[f32]) -> Vec<u8>;
+
+    /// Decode a whole payload into `dst` (`dst.len()` must match the
+    /// element count the payload was encoded from). Errors are
+    /// corruption verdicts, never panics.
+    fn decode_block(&self, payload: &[u8], dst: &mut [f32]) -> Result<()>;
+
+    /// Decode `dst.len()` elements starting at logical element
+    /// `elem_offset` — the assemble read path, so sparse gathers never
+    /// decode a whole block to read one channel span.
+    fn decode_span(&self, payload: &[u8], elem_offset: usize,
+                   dst: &mut [f32]) -> Result<()>;
+
+    fn stats(&self) -> &CodecStats;
+}
+
+/// Build a fresh codec instance (own stats) for one serving stack.
+/// Share the returned `Arc` between the host pool and the disk tier so
+/// the stats aggregate across tiers.
+pub fn codec_for(kind: KvCodecKind) -> Arc<dyn KvCodec> {
+    match kind {
+        KvCodecKind::F32 => Arc::new(LosslessF32::default()),
+        KvCodecKind::F16 => Arc::new(F16Codec::default()),
+        KvCodecKind::Int8 => Arc::new(Int8BlockCodec::default()),
+    }
+}
+
+/// Process-wide fallback instance per wire id, for decoding records
+/// written under a codec other than the session's configured one
+/// (e.g. v2 lossless files read into an int8-configured cache). Their
+/// stats are not surfaced; the active codec's are.
+pub fn codec_by_id(id: u8) -> Option<Arc<dyn KvCodec>> {
+    static F32C: OnceLock<Arc<dyn KvCodec>> = OnceLock::new();
+    static F16C: OnceLock<Arc<dyn KvCodec>> = OnceLock::new();
+    static INT8C: OnceLock<Arc<dyn KvCodec>> = OnceLock::new();
+    match id {
+        CODEC_F32 => Some(Arc::clone(
+            F32C.get_or_init(|| Arc::new(LosslessF32::default())))),
+        CODEC_F16 => Some(Arc::clone(
+            F16C.get_or_init(|| Arc::new(F16Codec::default())))),
+        CODEC_INT8 => Some(Arc::clone(
+            INT8C.get_or_init(|| Arc::new(Int8BlockCodec::default())))),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LosslessF32
+// ---------------------------------------------------------------------------
+
+/// Raw little-endian f32 bytes — byte-identical round trip, including
+/// NaN payload bits. The default codec and the decoder for every v2
+/// disk record.
+#[derive(Debug, Default)]
+pub struct LosslessF32 {
+    stats: CodecStats,
+}
+
+impl KvCodec for LosslessF32 {
+    fn id(&self) -> u8 {
+        CODEC_F32
+    }
+
+    fn name(&self) -> &'static str {
+        "f32"
+    }
+
+    fn encoded_len(&self, n_elems: usize) -> usize {
+        n_elems * 4
+    }
+
+    fn encode_block(&self, src: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(src.len() * 4);
+        for &x in src {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        self.stats.note_encode(src.len(), out.len());
+        out
+    }
+
+    fn decode_block(&self, payload: &[u8], dst: &mut [f32]) -> Result<()> {
+        if payload.len() != dst.len() * 4 {
+            bail!("f32 payload length {} != {} elements * 4",
+                  payload.len(), dst.len());
+        }
+        let t = Instant::now();
+        for (d, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn decode_span(&self, payload: &[u8], elem_offset: usize,
+                   dst: &mut [f32]) -> Result<()> {
+        let start = elem_offset * 4;
+        let end = start + dst.len() * 4;
+        if end > payload.len() {
+            bail!("f32 span {}..{} out of payload ({} bytes)", start, end,
+                  payload.len());
+        }
+        let t = Instant::now();
+        for (d, c) in
+            dst.iter_mut().zip(payload[start..end].chunks_exact(4))
+        {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn stats(&self) -> &CodecStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// F16Codec
+// ---------------------------------------------------------------------------
+
+/// Largest finite half-precision magnitude.
+const F16_MAX: f32 = 65504.0;
+
+/// f32 → IEEE half bits, round-to-nearest-even. Non-finite inputs
+/// sanitize to (signed) zero, finite magnitudes clamp to ±65504 — the
+/// encoder can therefore never produce an inf/NaN exponent.
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let x = if x.is_finite() {
+        x.clamp(-F16_MAX, F16_MAX)
+    } else {
+        0.0
+    };
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let mant = bits & 0x7f_ffff;
+    if exp < -25 {
+        // underflows past half the smallest subnormal: signed zero
+        return sign;
+    }
+    if exp < -14 {
+        // half subnormal: explicit leading 1, round half up on the
+        // shifted-out bits (value = m16 * 2^-24)
+        let mant = mant | 0x80_0000;
+        let shift = (-1 - exp) as u32; // 14..=24
+        let m16 = ((mant >> (shift - 1)) + 1) >> 1;
+        if m16 >= 0x400 {
+            // rounding carried into the smallest normal
+            return sign | (1 << 10);
+        }
+        return sign | m16 as u16;
+    }
+    // normal: 10-bit mantissa, round-to-nearest-even on bit 12
+    let mut e = (exp + 15) as u32;
+    let mut m = mant >> 13;
+    let round_bit = (mant >> 12) & 1;
+    let sticky = mant & 0xfff;
+    if round_bit == 1 && (sticky != 0 || (m & 1) == 1) {
+        m += 1;
+        if m == 0x400 {
+            m = 0;
+            e += 1; // cannot reach 31: inputs are clamped to ±65504
+        }
+    }
+    sign | ((e as u16) << 10) | (m as u16)
+}
+
+/// IEEE half bits → f32. The inf/NaN exponent is never produced by
+/// [`f32_to_f16_bits`], but a corrupt byte could carry it: decode
+/// defensively to a finite value (±65504, or 0.0 for NaN payloads).
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((h >> 10) & 0x1f) as i32;
+    let m = (h & 0x3ff) as f32;
+    if e == 0 {
+        sign * m * 2f32.powi(-24)
+    } else if e == 31 {
+        if m == 0.0 { sign * F16_MAX } else { 0.0 }
+    } else {
+        sign * (1.0 + m / 1024.0) * 2f32.powi(e - 15)
+    }
+}
+
+/// IEEE half precision, 2 bytes per element.
+#[derive(Debug, Default)]
+pub struct F16Codec {
+    stats: CodecStats,
+}
+
+impl KvCodec for F16Codec {
+    fn id(&self) -> u8 {
+        CODEC_F16
+    }
+
+    fn name(&self) -> &'static str {
+        "f16"
+    }
+
+    fn encoded_len(&self, n_elems: usize) -> usize {
+        n_elems * 2
+    }
+
+    fn encode_block(&self, src: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(src.len() * 2);
+        for &x in src {
+            out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        self.stats.note_encode(src.len(), out.len());
+        out
+    }
+
+    fn decode_block(&self, payload: &[u8], dst: &mut [f32]) -> Result<()> {
+        if payload.len() != dst.len() * 2 {
+            bail!("f16 payload length {} != {} elements * 2",
+                  payload.len(), dst.len());
+        }
+        let t = Instant::now();
+        for (d, c) in dst.iter_mut().zip(payload.chunks_exact(2)) {
+            *d = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn decode_span(&self, payload: &[u8], elem_offset: usize,
+                   dst: &mut [f32]) -> Result<()> {
+        let start = elem_offset * 2;
+        let end = start + dst.len() * 2;
+        if end > payload.len() {
+            bail!("f16 span {}..{} out of payload ({} bytes)", start, end,
+                  payload.len());
+        }
+        let t = Instant::now();
+        for (d, c) in
+            dst.iter_mut().zip(payload[start..end].chunks_exact(2))
+        {
+            *d = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn stats(&self) -> &CodecStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8BlockCodec
+// ---------------------------------------------------------------------------
+
+/// Per-block absmax int8 quantization. Payload layout:
+/// `scale f32 le (4 bytes), n × i8`. The scale is `absmax / 127` over
+/// the block's **finite** elements (0.0 for an all-zero or all-NaN
+/// block — everything then decodes to exact 0.0); non-finite elements
+/// quantize to 0. The scale rides inside the payload, so on disk it
+/// sits under the record's FNV-1a checksum like every other byte.
+#[derive(Debug, Default)]
+pub struct Int8BlockCodec {
+    stats: CodecStats,
+}
+
+impl KvCodec for Int8BlockCodec {
+    fn id(&self) -> u8 {
+        CODEC_INT8
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn encoded_len(&self, n_elems: usize) -> usize {
+        4 + n_elems
+    }
+
+    fn encode_block(&self, src: &[f32]) -> Vec<u8> {
+        let absmax = src
+            .iter()
+            .filter(|x| x.is_finite())
+            .fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = absmax / 127.0;
+        let mut out = Vec::with_capacity(4 + src.len());
+        out.extend_from_slice(&scale.to_le_bytes());
+        for &x in src {
+            let q = if scale > 0.0 && x.is_finite() {
+                (x / scale).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+            out.push(q as u8);
+        }
+        self.stats.note_encode(src.len(), out.len());
+        out
+    }
+
+    fn decode_block(&self, payload: &[u8], dst: &mut [f32]) -> Result<()> {
+        if payload.len() != dst.len() + 4 {
+            bail!("int8 payload length {} != {} elements + 4 scale bytes",
+                  payload.len(), dst.len());
+        }
+        let scale = f32::from_le_bytes([payload[0], payload[1], payload[2],
+                                        payload[3]]);
+        if !scale.is_finite() {
+            bail!("corrupt int8 block scale {scale}");
+        }
+        let t = Instant::now();
+        for (d, &b) in dst.iter_mut().zip(&payload[4..]) {
+            *d = (b as i8) as f32 * scale;
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn decode_span(&self, payload: &[u8], elem_offset: usize,
+                   dst: &mut [f32]) -> Result<()> {
+        if payload.len() < 4 {
+            bail!("int8 payload too short for its scale");
+        }
+        let start = 4 + elem_offset;
+        let end = start + dst.len();
+        if end > payload.len() {
+            bail!("int8 span {}..{} out of payload ({} bytes)",
+                  elem_offset, elem_offset + dst.len(), payload.len());
+        }
+        let scale = f32::from_le_bytes([payload[0], payload[1], payload[2],
+                                        payload[3]]);
+        if !scale.is_finite() {
+            bail!("corrupt int8 block scale {scale}");
+        }
+        let t = Instant::now();
+        for (d, &b) in dst.iter_mut().zip(&payload[start..end]) {
+            *d = (b as i8) as f32 * scale;
+        }
+        self.stats.note_decode(t.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+
+    fn stats(&self) -> &CodecStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn all_codecs() -> Vec<Arc<dyn KvCodec>> {
+        vec![
+            codec_for(KvCodecKind::F32),
+            codec_for(KvCodecKind::F16),
+            codec_for(KvCodecKind::Int8),
+        ]
+    }
+
+    #[test]
+    fn ids_and_names_are_wire_stable() {
+        let cs = all_codecs();
+        assert_eq!(
+            cs.iter().map(|c| c.id()).collect::<Vec<_>>(),
+            vec![CODEC_F32, CODEC_F16, CODEC_INT8]
+        );
+        assert_eq!(
+            cs.iter().map(|c| c.name()).collect::<Vec<_>>(),
+            vec!["f32", "f16", "int8"]
+        );
+        for c in &cs {
+            assert_eq!(codec_by_id(c.id()).unwrap().id(), c.id());
+        }
+        assert!(codec_by_id(99).is_none());
+    }
+
+    #[test]
+    fn encoded_len_matches_payload_and_ratio() {
+        let src: Vec<f32> = (0..256).map(|i| i as f32 * 0.37 - 40.0)
+            .collect();
+        for c in all_codecs() {
+            let p = c.encode_block(&src);
+            assert_eq!(p.len(), c.encoded_len(src.len()), "{}", c.name());
+        }
+        let n = 256;
+        let logical = 4.0 * n as f32;
+        let f16 = codec_for(KvCodecKind::F16);
+        let int8 = codec_for(KvCodecKind::Int8);
+        assert!(logical / f16.encoded_len(n) as f32 >= 1.9);
+        assert!(logical / int8.encoded_len(n) as f32 >= 3.5);
+    }
+
+    #[test]
+    fn f32_roundtrip_bit_identical_including_nan() {
+        let c = codec_for(KvCodecKind::F32);
+        let src = vec![0.0f32, -0.0, 1.5, -7.25e-30, 3.4e38, f32::NAN,
+                       f32::INFINITY, f32::NEG_INFINITY];
+        let p = c.encode_block(&src);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode_block(&p, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.5), 0xc100);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        // clamp instead of overflowing into the inf exponent
+        assert_eq!(f32_to_f16_bits(1e9), 0x7bff);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfbff);
+        // smallest subnormal
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xc100), -2.5);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        // a corrupt inf/NaN exponent decodes finite, never propagates
+        assert!(f16_bits_to_f32(0x7c00).is_finite());
+        assert_eq!(f16_bits_to_f32(0x7e00), 0.0);
+    }
+
+    #[test]
+    fn f16_roundtrip_within_half_precision() {
+        let mut rng = Rng::new(7);
+        let src: Vec<f32> = (0..512)
+            .map(|_| (rng.next_f32() - 0.5) * 200.0)
+            .collect();
+        let c = codec_for(KvCodecKind::F16);
+        let p = c.encode_block(&src);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode_block(&p, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            // half a ulp of a 10-bit mantissa
+            let tol = a.abs().max(2f32.powi(-14)) * 2f32.powi(-11) * 1.01;
+            assert!((a - b).abs() <= tol, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals_roundtrip_within_abs_tolerance() {
+        let src: Vec<f32> = vec![2e-8, -3e-6, 5.5e-5, 2f32.powi(-24),
+                                 -2f32.powi(-20), 1e-40, 0.0];
+        let c = codec_for(KvCodecKind::F16);
+        let p = c.encode_block(&src);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode_block(&p, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= 2f32.powi(-24), "{a} -> {b}");
+            assert!(b.is_finite());
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_within_half_scale() {
+        let mut rng = Rng::new(11);
+        let src: Vec<f32> = (0..512)
+            .map(|_| (rng.next_f32() - 0.5) * 16.0)
+            .collect();
+        let absmax = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = absmax / 127.0;
+        let c = codec_for(KvCodecKind::Int8);
+        let p = c.encode_block(&src);
+        let mut back = vec![0.0f32; src.len()];
+        c.decode_block(&p, &mut back).unwrap();
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-7, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn absmax_zero_block_roundtrips_to_exact_zeros() {
+        let src = vec![0.0f32; 64];
+        let c = codec_for(KvCodecKind::Int8);
+        let p = c.encode_block(&src);
+        let mut back = vec![1.0f32; src.len()];
+        c.decode_block(&p, &mut back).unwrap();
+        assert!(back.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn non_finite_payloads_encode_and_decode_finite() {
+        // NaN/±inf elements must never panic the encoder, and must
+        // decode to finite values (the lossy codecs sanitize to 0)
+        let src = vec![1.0f32, f32::NAN, -2.0, f32::INFINITY,
+                       f32::NEG_INFINITY, 0.5];
+        for kind in [KvCodecKind::F16, KvCodecKind::Int8] {
+            let c = codec_for(kind);
+            let p = c.encode_block(&src);
+            let mut back = vec![0.0f32; src.len()];
+            c.decode_block(&p, &mut back).unwrap();
+            assert!(back.iter().all(|x| x.is_finite()), "{:?}", back);
+            assert_eq!(back[1], 0.0, "{}", c.name());
+            assert_eq!(back[3], 0.0, "{}", c.name());
+            // the finite elements still carry signal: the scale comes
+            // from finite absmax only
+            assert!((back[0] - 1.0).abs() < 0.02, "{}", c.name());
+            assert!((back[2] + 2.0).abs() < 0.02, "{}", c.name());
+        }
+        // an all-non-finite block decodes to exact zeros
+        let junk = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        for kind in [KvCodecKind::F16, KvCodecKind::Int8] {
+            let c = codec_for(kind);
+            let p = c.encode_block(&junk);
+            let mut back = vec![1.0f32; junk.len()];
+            c.decode_block(&p, &mut back).unwrap();
+            assert!(back.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn decode_span_matches_full_decode() {
+        let mut rng = Rng::new(3);
+        let src: Vec<f32> =
+            (0..200).map(|_| (rng.next_f32() - 0.5) * 8.0).collect();
+        for c in all_codecs() {
+            let p = c.encode_block(&src);
+            let mut full = vec![0.0f32; src.len()];
+            c.decode_block(&p, &mut full).unwrap();
+            for (off, len) in [(0usize, 7usize), (13, 50), (190, 10)] {
+                let mut span = vec![0.0f32; len];
+                c.decode_span(&p, off, &mut span).unwrap();
+                assert_eq!(span, full[off..off + len], "{}", c.name());
+            }
+            // out-of-range span is an error, not a panic
+            let mut over = vec![0.0f32; 10];
+            assert!(c.decode_span(&p, 195, &mut over).is_err());
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error_not_a_panic() {
+        let src = vec![1.0f32; 32];
+        for c in all_codecs() {
+            let p = c.encode_block(&src);
+            let mut dst = vec![0.0f32; src.len()];
+            assert!(c.decode_block(&p[..p.len() - 1], &mut dst).is_err(),
+                    "{}", c.name());
+            assert!(c.decode_block(&[], &mut dst).is_err(), "{}",
+                    c.name());
+        }
+    }
+
+    #[test]
+    fn corrupt_int8_scale_is_rejected() {
+        let c = codec_for(KvCodecKind::Int8);
+        let mut p = c.encode_block(&[1.0f32; 8]);
+        p[..4].copy_from_slice(&f32::NAN.to_le_bytes());
+        let mut dst = [0.0f32; 8];
+        assert!(c.decode_block(&p, &mut dst).is_err());
+        assert!(c.decode_span(&p, 0, &mut dst[..2]).is_err());
+    }
+
+    #[test]
+    fn stats_track_bytes_and_drain_samples() {
+        let c = codec_for(KvCodecKind::Int8);
+        let src = vec![2.0f32; 60];
+        let p = c.encode_block(&src);
+        let mut dst = vec![0.0f32; src.len()];
+        c.decode_block(&p, &mut dst).unwrap();
+        c.decode_span(&p, 10, &mut dst[..5]).unwrap();
+        let s = c.stats().snapshot(c.name());
+        assert_eq!(s.codec, "int8");
+        assert_eq!(s.blocks_encoded, 1);
+        assert_eq!(s.blocks_decoded, 2);
+        assert_eq!(s.logical_bytes, 240);
+        assert_eq!(s.physical_bytes, 64);
+        assert!((s.compression_ratio() - 240.0 / 64.0).abs() < 1e-9);
+        assert_eq!(c.stats().take_decode_samples().len(), 2);
+        assert!(c.stats().take_decode_samples().is_empty(), "drained");
+        // fresh stats report a neutral ratio, not 0/0
+        let fresh = codec_for(KvCodecKind::F16);
+        assert_eq!(fresh.stats().snapshot("f16").compression_ratio(), 1.0);
+    }
+}

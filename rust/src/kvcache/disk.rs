@@ -11,12 +11,13 @@
 //! eviction (per-file — the file is the disk tier's eviction and
 //! quarantine unit), and never trusts what it reads back.
 //!
-//! # On-disk format (version 2, little-endian)
+//! # On-disk format (version 3, little-endian)
 //!
 //! Since the paged block pool landed, a file stores the document's KV
 //! as an **independently checksummed block list** — the disk mirror of
 //! the pool's block granularity — instead of one monolithic tensor
-//! blob under a single whole-file checksum:
+//! blob under a single whole-file checksum. Version 3 adds a codec
+//! tag to every record:
 //!
 //! ```text
 //! header   magic b"SKVD", version u32, hash u64, n_tokens u64  24 bytes
@@ -26,9 +27,20 @@
 //! tensors  attn, q_local — each: rank u32, dims u64×rank, f32 data
 //! meta checksum  u64 (FNV-1a over everything preceding it)
 //! block record × n_present (ascending block index):
-//!   index u32, len u32 (tokens), len×per_token f32 (channel-major),
+//!   index u32, len u32 (tokens), codec id u8, payload len u32,
+//!   payload — the block's logical channel-major span encoded by the
+//!   tagged codec (see [`super::codec`]; an int8 payload carries its
+//!   own leading scale),
 //!   record checksum u64 (FNV-1a over the record before it)
 //! ```
+//!
+//! Records are **written** with the cache's configured codec
+//! ([`DiskDocCache::with_codec`], default lossless f32) but **read**
+//! by whatever codec each record names — a directory may freely mix
+//! codecs across files and records, so `--kv-codec` can change
+//! between runs without invalidating the cache. Version-2 files (the
+//! untagged raw-f32 record format this one generalises) remain fully
+//! readable, and the first merge-rewrite upgrades them to v3.
 //!
 //! A file may be **partial** (`n_present < n_blocks`): a host-tier
 //! eviction pass spills only the victim blocks, and a later spill of
@@ -67,15 +79,20 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::config::KvCodecKind;
 use crate::tensor::Tensor;
 
+use super::codec::{codec_by_id, codec_for, KvCodec};
 use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy,
                    WHOLE_ENTRY};
 use super::pool::{KvBlockPool, KvBlocks, KvLayout};
 use super::store::{fnv64, DocEntry};
 
 const MAGIC: [u8; 4] = *b"SKVD";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// The previous format (untagged raw-f32 block records): still read,
+/// never written.
+const VERSION_V2: u32 = 2;
 /// magic + version + hash + n_tokens.
 const HEADER_LEN: usize = 24;
 /// header + the seven u32 geometry fields — everything the restart
@@ -115,6 +132,10 @@ pub struct DiskStats {
     pub collisions: u64,
     /// Files deleted by the byte-budget eviction loop.
     pub evictions: u64,
+    /// Total file bytes read back by the load paths (every counted
+    /// `load` adds its file's size). Smaller codecs shrink this
+    /// proportionally — the warm-restart I/O gauge.
+    pub bytes_loaded: u64,
     /// Bytes currently on disk under the budget.
     pub current_bytes: usize,
 }
@@ -146,6 +167,9 @@ pub struct DiskDocCache {
     dir: PathBuf,
     inner: Mutex<DiskInner>,
     policy: Box<dyn EvictionPolicy>,
+    /// Codec for newly written records (reads honor each record's own
+    /// tag regardless).
+    codec: Arc<dyn KvCodec>,
 }
 
 impl DiskDocCache {
@@ -175,9 +199,26 @@ impl DiskDocCache {
                 load_ms: Vec::new(),
             }),
             policy,
+            codec: codec_for(KvCodecKind::F32),
         };
         cache.scan()?;
         Ok(cache)
+    }
+
+    /// Replace the codec used for newly **written** records (default
+    /// lossless f32; share the serving stack's instance so its stats
+    /// aggregate). Reading needs no configuration: every v3 record
+    /// carries its own codec tag, decoded through this instance when
+    /// the ids match or a process-wide fallback otherwise, and v2
+    /// records are untagged raw f32.
+    pub fn with_codec(mut self, codec: Arc<dyn KvCodec>) -> DiskDocCache {
+        self.codec = codec;
+        self
+    }
+
+    /// The codec newly written records are encoded with.
+    pub fn codec(&self) -> &Arc<dyn KvCodec> {
+        &self.codec
     }
 
     pub fn dir(&self) -> &Path {
@@ -245,11 +286,13 @@ impl DiskDocCache {
             }
         };
         let ms = t.elapsed().as_secs_f64() * 1e3;
+        let file_bytes = bytes.len() as u64;
         let meta = match decode_meta(hash, &bytes) {
             Ok(m) => m,
             Err(why) => {
                 let mut g = self.inner.lock().unwrap();
                 g.stats.loads += 1;
+                g.stats.bytes_loaded += file_bytes;
                 g.stats.corrupt += 1;
                 g.stats.misses += 1;
                 if let Some(slot) = g.index.remove(&hash) {
@@ -264,14 +307,17 @@ impl DiskDocCache {
         if meta.tokens != expect_tokens {
             let mut g = self.inner.lock().unwrap();
             g.stats.loads += 1;
+            g.stats.bytes_loaded += file_bytes;
             g.stats.collisions += 1;
             g.stats.misses += 1;
             return None;
         }
         let (blocks, bad) = decode_blocks(&meta.layout, &bytes,
-                                          meta.meta_end);
+                                          meta.meta_end, meta.version,
+                                          &self.codec);
         let mut g = self.inner.lock().unwrap();
         g.stats.loads += 1;
+        g.stats.bytes_loaded += file_bytes;
         if bad > 0 {
             g.stats.corrupt_blocks += bad;
             // the file lost records: accept a future merge-rewrite
@@ -327,7 +373,8 @@ impl DiskDocCache {
                 self.note_load_outcome(hash, false, ms);
                 return None;
             }
-            let bytes = kv.size_bytes() + meta.attn.size_bytes()
+            // physical (post-codec) bytes, matching `from_parts`
+            let bytes = kv.resident_bytes() + meta.attn.size_bytes()
                 + meta.q_local.size_bytes();
             DocEntry {
                 hash,
@@ -422,8 +469,12 @@ impl DiskDocCache {
             if let Ok(bytes) = fs::read(&path) {
                 if let Ok(meta) = decode_meta(entry.hash, &bytes) {
                     if meta.layout == lay {
+                        // any-version read; the rewrite below lands as
+                        // v3 under our codec (v2 files upgrade here)
                         let (old, _) = decode_blocks(&lay, &bytes,
-                                                     meta.meta_end);
+                                                     meta.meta_end,
+                                                     meta.version,
+                                                     &self.codec);
                         let news = have
                             .keys()
                             .any(|b| !old.iter().any(|(ob, _)| ob == b));
@@ -446,7 +497,8 @@ impl DiskDocCache {
         let mut blocks: Vec<(u32, Vec<f32>)> = have.into_iter().collect();
         blocks.sort_by_key(|(b, _)| *b);
         let buf = encode_entry(entry.hash, &entry.tokens, &lay,
-                               &entry.attn, &entry.q_local, &blocks);
+                               &entry.attn, &entry.q_local, &blocks,
+                               &self.codec);
         let path = self.entry_path(entry.hash);
         let tmp = path.with_extension(format!("tmp{seq}"));
         fs::write(&tmp, &buf)
@@ -658,14 +710,17 @@ fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
 
 /// Serialize one document: checksummed metadata, then one
 /// independently checksummed record per block (`blocks` sorted by
-/// index, logical channel-major payloads).
+/// index, logical channel-major payloads), each encoded and tagged
+/// with `codec`.
 fn encode_entry(hash: u64, tokens: &[i32], lay: &KvLayout, attn: &Tensor,
-                q_local: &Tensor, blocks: &[(u32, Vec<f32>)]) -> Vec<u8> {
-    let payload: usize = blocks.iter().map(|(_, d)| d.len() * 4).sum();
+                q_local: &Tensor, blocks: &[(u32, Vec<f32>)],
+                codec: &Arc<dyn KvCodec>) -> Vec<u8> {
+    let payload: usize =
+        blocks.iter().map(|(_, d)| codec.encoded_len(d.len())).sum();
     let mut buf = Vec::with_capacity(
         SCAN_LEN + tokens.len() * 4
             + (attn.numel() + q_local.numel()) * 4
-            + payload + blocks.len() * 16 + 128,
+            + payload + blocks.len() * 24 + 128,
     );
     buf.extend_from_slice(&MAGIC);
     put_u32(&mut buf, VERSION);
@@ -689,9 +744,10 @@ fn encode_entry(hash: u64, tokens: &[i32], lay: &KvLayout, attn: &Tensor,
         let start = buf.len();
         put_u32(&mut buf, *b);
         put_u32(&mut buf, lay.block_len(*b as usize) as u32);
-        for &x in data {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
+        let enc = codec.encode_block(data);
+        buf.push(codec.id());
+        put_u32(&mut buf, enc.len() as u32);
+        buf.extend_from_slice(&enc);
         let rec_sum = fnv64(&buf[start..]);
         put_u64(&mut buf, rec_sum);
     }
@@ -770,6 +826,7 @@ impl<'a> Rd<'a> {
 /// The scan-time prefix: enough to index a file without reading its
 /// payload.
 struct ScanHeader {
+    version: u32,
     hash: u64,
     n_tokens: usize,
     n_blocks: usize,
@@ -790,7 +847,7 @@ fn parse_scan_header(hdr: &[u8]) -> Result<ScanHeader, String> {
         return Err("bad magic".to_string());
     }
     let version = rd.u32()?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_V2 {
         return Err(format!("unsupported format version {version}"));
     }
     let hash = rd.u64()?;
@@ -802,11 +859,13 @@ fn parse_scan_header(hdr: &[u8]) -> Result<ScanHeader, String> {
     let _block_tokens = rd.count32("block token")?;
     let n_blocks = rd.count32("block")?;
     let n_present = rd.count32("present block")?;
-    Ok(ScanHeader { hash, n_tokens, n_blocks, n_present })
+    Ok(ScanHeader { version, hash, n_tokens, n_blocks, n_present })
 }
 
 /// Fully decoded metadata section of one file.
 struct Meta {
+    /// Format version (selects the block-record layout).
+    version: u32,
     tokens: Vec<i32>,
     layout: KvLayout,
     attn: Tensor,
@@ -862,46 +921,94 @@ fn decode_meta(expect_hash: u64, bytes: &[u8]) -> Result<Meta, String> {
     if fnv64(&bytes[..body_end]) != stored_sum {
         return Err("meta checksum mismatch".to_string());
     }
-    Ok(Meta { tokens, layout, attn, q_local, meta_end: rd.i })
+    Ok(Meta { version: hdr.version, tokens, layout, attn, q_local,
+              meta_end: rd.i })
 }
 
-/// Walk the block records after `start`. A record that fails its own
-/// checksum — or is duplicated or out of range — is dropped alone; a
-/// record that cannot even be framed (truncation) ends the walk, since
-/// record boundaries can no longer be trusted. Returns the surviving
-/// `(index, logical payload)` records and how many were dropped.
-fn decode_blocks(lay: &KvLayout, bytes: &[u8], start: usize)
+/// Walk the block records after `start`, decoding each payload back
+/// to logical f32 through the codec its tag names (`codec` when the
+/// ids match, a process-wide fallback otherwise; `version` 2 records
+/// are untagged raw f32). A record that fails its own checksum — or
+/// is duplicated, out of range, or names an unknown codec — is
+/// dropped alone; a record that cannot even be framed (truncation)
+/// ends the walk, since record boundaries can no longer be trusted.
+/// Returns the surviving `(index, logical payload)` records and how
+/// many were dropped.
+fn decode_blocks(lay: &KvLayout, bytes: &[u8], start: usize,
+                 version: u32, codec: &Arc<dyn KvCodec>)
                  -> (Vec<(u32, Vec<f32>)>, u64) {
     let mut out: Vec<(u32, Vec<f32>)> = Vec::new();
     let mut bad = 0u64;
     let pte = lay.per_token_elems();
     let mut i = start;
     while i < bytes.len() {
+        let rec_start = i;
         let mut rd = Rd { b: bytes, i };
         let Ok(b) = rd.u32() else { bad += 1; break };
         let Ok(len) = rd.u32() else { bad += 1; break };
         let (b, len) = (b as usize, len as usize);
-        if b >= lay.n_blocks() || len != lay.block_len(b) {
-            // unframeable: the data length below would be a guess
+        if version == VERSION_V2 {
+            // v2 record: the payload length is implied by the block
+            // geometry, so a bad index or length is unframeable and
+            // ends the walk
+            if b >= lay.n_blocks() || len != lay.block_len(b) {
+                bad += 1;
+                break;
+            }
+            let n = len * pte;
+            let Ok(raw) = rd.take(n * 4) else { bad += 1; break };
+            let data_end = rd.i;
+            let Ok(stored_sum) = rd.u64() else { bad += 1; break };
+            i = rd.i;
+            if fnv64(&bytes[rec_start..data_end]) != stored_sum {
+                bad += 1;
+                continue;
+            }
+            if out.iter().any(|(ob, _)| *ob == b as u32) {
+                bad += 1;
+                continue;
+            }
+            let mut data = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            out.push((b as u32, data));
+            continue;
+        }
+        // v3 record: the explicit payload length keeps framing intact
+        // across any per-record verdict, so everything after the
+        // prefix skips just this record
+        let Ok(tag) = rd.take(1) else { bad += 1; break };
+        let codec_id = tag[0];
+        let Ok(payload_len) = rd.count32("payload") else {
             bad += 1;
             break;
-        }
-        let n = len * pte;
-        let Ok(raw) = rd.take(n * 4) else { bad += 1; break };
+        };
+        let Ok(payload) = rd.take(payload_len) else { bad += 1; break };
         let data_end = rd.i;
         let Ok(stored_sum) = rd.u64() else { bad += 1; break };
         i = rd.i;
-        if fnv64(&bytes[data_end - 8 - n * 4..data_end]) != stored_sum {
+        if fnv64(&bytes[rec_start..data_end]) != stored_sum {
             bad += 1;
             continue;
         }
-        if out.iter().any(|(ob, _)| *ob == b as u32) {
+        if b >= lay.n_blocks()
+            || len != lay.block_len(b)
+            || out.iter().any(|(ob, _)| *ob == b as u32)
+        {
             bad += 1;
             continue;
         }
-        let mut data = Vec::with_capacity(n);
-        for c in raw.chunks_exact(4) {
-            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        let dec = if codec.id() == codec_id {
+            Some(Arc::clone(codec))
+        } else {
+            codec_by_id(codec_id)
+        };
+        let Some(dec) = dec else { bad += 1; continue };
+        let mut data = vec![0f32; len * pte];
+        if dec.decode_block(payload, &mut data).is_err() {
+            bad += 1;
+            continue;
         }
         out.push((b as u32, data));
     }
@@ -939,6 +1046,60 @@ fn parse_entry_name(name: &str) -> Option<u64> {
         return None;
     }
     u64::from_str_radix(hex, 16).ok()
+}
+
+/// Test support: rewrite one cache file in the **legacy v2 layout**
+/// (untagged raw-f32 block records), decoding its payloads through
+/// their codec tags first. Integration tests use this to fabricate a
+/// pre-upgrade directory from a really-served document — the
+/// production write path is v3-only, so there is no other way to
+/// obtain a v2 file of live data.
+#[doc(hidden)]
+pub fn rewrite_file_as_v2(path: &Path) -> Result<()> {
+    let bytes = fs::read(path).with_context(|| format!("read {path:?}"))?;
+    let hdr = bytes
+        .get(..SCAN_LEN)
+        .ok_or_else(|| anyhow::anyhow!("file too short"))
+        .and_then(|h| parse_scan_header(h).map_err(anyhow::Error::msg))?;
+    let meta = decode_meta(hdr.hash, &bytes).map_err(anyhow::Error::msg)?;
+    let codec = codec_for(KvCodecKind::F32);
+    let (mut blocks, bad) = decode_blocks(&meta.layout, &bytes,
+                                          meta.meta_end, meta.version,
+                                          &codec);
+    anyhow::ensure!(bad == 0, "{bad} undecodable records in {path:?}");
+    blocks.sort_by_key(|(b, _)| *b);
+    let lay = &meta.layout;
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAGIC);
+    put_u32(&mut buf, VERSION_V2);
+    put_u64(&mut buf, hdr.hash);
+    put_u64(&mut buf, meta.tokens.len() as u64);
+    put_u32(&mut buf, lay.n_layers as u32);
+    put_u32(&mut buf, lay.n_heads as u32);
+    put_u32(&mut buf, lay.head_dim as u32);
+    put_u32(&mut buf, lay.n_tokens as u32);
+    put_u32(&mut buf, lay.block_tokens as u32);
+    put_u32(&mut buf, lay.n_blocks() as u32);
+    put_u32(&mut buf, blocks.len() as u32);
+    for &t in &meta.tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    put_tensor(&mut buf, &meta.attn);
+    put_tensor(&mut buf, &meta.q_local);
+    let meta_sum = fnv64(&buf);
+    put_u64(&mut buf, meta_sum);
+    for (b, data) in &blocks {
+        let start = buf.len();
+        put_u32(&mut buf, *b);
+        put_u32(&mut buf, lay.block_len(*b as usize) as u32);
+        for &x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let rec_sum = fnv64(&buf[start..]);
+        put_u64(&mut buf, rec_sum);
+    }
+    fs::write(path, &buf).with_context(|| format!("write {path:?}"))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1251,6 +1412,216 @@ mod tests {
         assert!(!cache.contains(e1.hash));
         assert!(!dir.join(format!("doc_{:016x}.kv", e1.hash)).exists());
         assert!(cache.load(e1.hash, &[1; 8], &p).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// An entry whose KV payload dwarfs its metadata (wide geometry,
+    /// scalar attn), so file-size ratios measure the codec rather
+    /// than the headers. Values are pseudo-random in [-1, 1).
+    fn wide_entry(pool: &Arc<KvBlockPool>, tokens: Vec<i32>) -> DocEntry {
+        let n = tokens.len().max(1);
+        let mut kv = Tensor::zeros(&[2, 2, 2, n, 8]);
+        let mut rng = crate::rng::Rng::new(0xd15c);
+        for x in kv.data_mut() {
+            *x = rng.next_f32() * 2.0 - 1.0;
+        }
+        let attn = Tensor::full(&[1, 1, 1, 1], 0.25);
+        let q_local = Tensor::full(&[1, 1, 8], -3.5);
+        DocEntry::from_parts(pool, tokens, kv, attn, q_local).unwrap()
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y} (tol {tol})");
+        }
+    }
+
+    /// Serialize `entry` in the retired v2 format (untagged raw-f32
+    /// block records) — the fixture for backward-compat reads.
+    fn encode_entry_v2(e: &DocEntry) -> Vec<u8> {
+        let lay = e.kv.layout();
+        let mut blocks: Vec<(u32, Vec<f32>)> = e
+            .kv
+            .resident_block_indexes()
+            .into_iter()
+            .map(|b| (b, e.kv.block_data(b as usize).unwrap()))
+            .collect();
+        blocks.sort_by_key(|(b, _)| *b);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        put_u32(&mut buf, VERSION_V2);
+        put_u64(&mut buf, e.hash);
+        put_u64(&mut buf, e.tokens.len() as u64);
+        put_u32(&mut buf, lay.n_layers as u32);
+        put_u32(&mut buf, lay.n_heads as u32);
+        put_u32(&mut buf, lay.head_dim as u32);
+        put_u32(&mut buf, lay.n_tokens as u32);
+        put_u32(&mut buf, lay.block_tokens as u32);
+        put_u32(&mut buf, lay.n_blocks() as u32);
+        put_u32(&mut buf, blocks.len() as u32);
+        for &t in &e.tokens {
+            buf.extend_from_slice(&t.to_le_bytes());
+        }
+        put_tensor(&mut buf, &e.attn);
+        put_tensor(&mut buf, &e.q_local);
+        let meta_sum = fnv64(&buf);
+        put_u64(&mut buf, meta_sum);
+        for (b, data) in &blocks {
+            let start = buf.len();
+            put_u32(&mut buf, *b);
+            put_u32(&mut buf, lay.block_len(*b as usize) as u32);
+            for &x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            let rec_sum = fnv64(&buf[start..]);
+            put_u64(&mut buf, rec_sum);
+        }
+        buf
+    }
+
+    #[test]
+    fn v3_roundtrip_under_lossy_codecs() {
+        for (kind, tol) in [(KvCodecKind::F16, 1e-3f32),
+                            (KvCodecKind::Int8, 0.5 / 127.0 + 1e-4)] {
+            let dir = test_dir(&format!("v3-{}", kind.name()));
+            let p = pool(64);
+            let tokens: Vec<i32> = (0..128).collect();
+            let e = wide_entry(&p, tokens.clone());
+            let full = e.kv.gather().unwrap();
+            let cache = DiskDocCache::open(&dir, usize::MAX)
+                .unwrap()
+                .with_codec(codec_for(kind));
+            assert!(cache.store(&e).unwrap());
+            let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+            let bytes = fs::read(&path).unwrap();
+            assert_eq!(
+                u32::from_le_bytes([bytes[4], bytes[5], bytes[6],
+                                    bytes[7]]),
+                VERSION,
+                "files are written as v3");
+            let back = cache.load(e.hash, &tokens, &p).expect("hit");
+            assert!(back.kv.is_fully_resident());
+            assert_close(&back.kv.gather().unwrap(), &full, tol);
+            assert_eq!(back.attn, e.attn, "metadata stays raw f32");
+            assert_eq!(cache.stats().corrupt_blocks, 0);
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn v2_file_loads_lossless_into_any_codec_cache() {
+        let dir = test_dir("v2compat");
+        fs::create_dir_all(&dir).unwrap();
+        let p = pool(2);
+        let e = entry(&p, vec![1, 2, 3, 4, 5]);
+        let full = e.kv.gather().unwrap();
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        fs::write(&path, encode_entry_v2(&e)).unwrap();
+        // even an int8-configured cache reads the v2 file bit-for-bit
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_codec(codec_for(KvCodecKind::Int8));
+        assert_eq!(cache.len(), 1, "v2 files index at scan");
+        let back = cache.load(e.hash, &[1, 2, 3, 4, 5], &p).unwrap();
+        assert!(back.kv.is_fully_resident());
+        assert_eq!(back.kv.gather().unwrap(), full,
+                   "v2 records are untagged raw f32: lossless");
+        let s = cache.stats();
+        assert_eq!((s.corrupt, s.corrupt_blocks, s.hits), (0, 0, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_upgrades_v2_file_to_v3() {
+        let dir = test_dir("v2upgrade");
+        fs::create_dir_all(&dir).unwrap();
+        let p = pool(2);
+        let e = entry(&p, vec![1, 2, 3, 4, 5]);
+        let full = e.kv.gather().unwrap();
+        // a *partial* v2 file (blocks {0, 2} of 3) on disk...
+        let d1 = e.kv.take_block_data(1).expect("resident block");
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        fs::write(&path, encode_entry_v2(&e)).unwrap();
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_codec(codec_for(KvCodecKind::Int8));
+        // ...merged with the missing payload rewrites as v3 under the
+        // cache's codec
+        assert!(cache.store_blocks(&e, &[(1, d1)]).unwrap());
+        let bytes = fs::read(&path).unwrap();
+        assert_eq!(
+            u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+            VERSION,
+            "merge-rewrite upgrades the file");
+        let back = cache.load(e.hash, &[1, 2, 3, 4, 5], &p).unwrap();
+        assert!(back.kv.is_fully_resident());
+        // entry() values reach absmax 8.5, so int8 granularity is
+        // 8.5/127 — compare within half a step
+        assert_close(&back.kv.gather().unwrap(), &full,
+                     0.5 * 8.5 / 127.0 + 1e-4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lossy_codecs_shrink_files() {
+        let p = pool(64);
+        let e = wide_entry(&p, (0..128).collect());
+        let mut sizes = Vec::new();
+        for kind in [KvCodecKind::F32, KvCodecKind::F16,
+                     KvCodecKind::Int8] {
+            let dir = test_dir(&format!("shrink-{}", kind.name()));
+            let cache = DiskDocCache::open(&dir, usize::MAX)
+                .unwrap()
+                .with_codec(codec_for(kind));
+            assert!(cache.store(&e).unwrap());
+            sizes.push(cache.stats().current_bytes as f64);
+            let _ = fs::remove_dir_all(&dir);
+        }
+        assert!(sizes[0] >= sizes[1] * 1.9,
+                "f16 files must be >=1.9x smaller ({sizes:?})");
+        assert!(sizes[0] >= sizes[2] * 3.5,
+                "int8 files must be >=3.5x smaller ({sizes:?})");
+    }
+
+    #[test]
+    fn bytes_loaded_counts_file_reads() {
+        let dir = test_dir("bytesloaded");
+        let p = pool(64);
+        let e = entry(&p, vec![1, 2, 3]);
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        cache.store(&e).unwrap();
+        let size = cache.stats().current_bytes as u64;
+        assert_eq!(cache.stats().bytes_loaded, 0, "writes don't count");
+        cache.load(e.hash, &[1, 2, 3], &p).unwrap();
+        assert_eq!(cache.stats().bytes_loaded, size);
+        cache.load(e.hash, &[1, 2, 3], &p).unwrap();
+        assert_eq!(cache.stats().bytes_loaded, size * 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewrite_as_v2_downgrades_losslessly() {
+        // the integration fixture helper: a stored v3 file (even one
+        // written by a lossy cache) downgrades to a valid v2 file that
+        // loads with byte-identical logical content
+        let dir = test_dir("v2rewrite");
+        let p = pool(64);
+        let e = entry(&p, vec![4, 5, 6]);
+        let full = e.kv.gather().unwrap();
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        cache.store(&e).unwrap();
+        let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+        rewrite_file_as_v2(&path).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        assert_eq!(
+            u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]),
+            VERSION_V2);
+        let reread = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        assert_eq!(reread.len(), 1, "v2 file indexes at scan");
+        let back = reread.load(e.hash, &[4, 5, 6], &p).unwrap();
+        assert_eq!(back.kv.gather().unwrap(), full);
+        assert_eq!(reread.stats().corrupt, 0);
         let _ = fs::remove_dir_all(&dir);
     }
 

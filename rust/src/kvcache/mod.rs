@@ -78,11 +78,14 @@
 //!   from disk ([`DiskDocCache::load_blocks_into`]); a prefill lease
 //!   taken over a partial entry carries it, so the leaseholder
 //!   restores blocks instead of re-prefilling the whole document.
-//! * **Disk files mirror the block structure** (format v2): a
+//! * **Disk files mirror the block structure** (format v3): a
 //!   checksummed metadata section plus one independently checksummed
-//!   record per block, so a corrupt block quarantines alone and
-//!   repeated spills of one document merge toward one complete file.
-//!   See [`disk`] for the full corruption / staleness contract.
+//!   record per block — each record tagged with the codec that
+//!   encoded it (see below) — so a corrupt block quarantines alone
+//!   and repeated spills of one document merge toward one complete
+//!   file. Format v2 files (untagged raw-f32 records) remain fully
+//!   readable. See [`disk`] for the full corruption / staleness
+//!   contract.
 //! * The **residency tier** stays doc-granular: it holds `Arc`
 //!   handles, advertises whole documents on the [`ResidencyBoard`]
 //!   (see [`residency`]), and a fully-resident check guards its warm
@@ -100,6 +103,26 @@
 //! way, and the engine admission thread prefetches a wave's planned
 //! hashes from disk ([`EngineDocCache::prefetch_from_disk`]) while
 //! decode keeps running, so disk latency overlaps compute.
+//!
+//! # The codec layer
+//!
+//! Beneath the tiers sits a pluggable block codec ([`codec`],
+//! `--kv-codec {f32,f16,int8}`): every disk-tier block record and
+//! every host-tier block past the per-document `--kv-hot-blocks`
+//! watermark is stored **encoded** — raw f32 (lossless default), IEEE
+//! half precision (~2× smaller), or per-block absmax int8 (~4×
+//! smaller, one f32 scale riding inside the payload under the
+//! record's checksum). The first `--kv-hot-blocks` blocks of each
+//! document stay as raw pooled f32 (content-shared, CoW) so the head
+//! of every document assembles at full speed; cold blocks dequantize
+//! **on read** ([`codec::KvCodec::decode_span`]) straight into the
+//! f32 assembly scratch, so attention/decode consumers never see
+//! encoded bytes. Byte budgets across all tiers charge **physical**
+//! (encoded) bytes, so `--kv-codec int8` holds ~4× more blocks under
+//! the same `--host-cache-mb`/`--disk-cache-mb`. One codec instance
+//! per serving stack ([`codec::codec_for`]) is shared by the host
+//! pool and the disk tier; its [`codec::CodecStats`] flow through
+//! metrics, the `cmd:metrics` wire, and the bench rows.
 //!
 //! # Eviction + pin contract
 //!
@@ -143,6 +166,7 @@
 //! artifacts consume, gathering KV spans straight out of the pool.
 
 pub mod assembly;
+pub mod codec;
 pub mod disk;
 pub mod evict;
 pub mod pool;
@@ -150,6 +174,9 @@ pub mod residency;
 pub mod store;
 
 pub use assembly::{AssembledContext, BlockRef, SlotKind};
+pub use codec::{
+    codec_by_id, codec_for, CodecSnapshot, CodecStats, KvCodec,
+};
 pub use disk::{DiskDocCache, DiskStats};
 pub use evict::{
     eviction_policy_by_name, CostAwarePolicy, EvictionCandidate,

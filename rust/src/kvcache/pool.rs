@@ -34,12 +34,28 @@
 //! the pool replacing the old monolithic per-document KV tensor. Blocks
 //! can be taken out (evicted/spilled) and restored individually, so a
 //! partially evicted document keeps serving its resident blocks.
+//!
+//! # Cold blocks are stored encoded
+//!
+//! When the pool is built with a lossy codec
+//! ([`KvBlockPool::with_codec`], `--kv-codec f16|int8`), a document's
+//! blocks past the `--kv-hot-blocks` watermark are **not** pooled:
+//! they live as per-document encoded byte payloads
+//! ([`BlockSlot::Encoded`], ~2–4× smaller), decoded on read straight
+//! into the caller's f32 scratch ([`super::codec::KvCodec::decode_span`]).
+//! The first `hot_blocks` blocks stay as raw pooled f32 — content
+//! shared and CoW as before — so the head of every document assembles
+//! at full speed. Resident-byte accounting charges **physical** bytes
+//! (payload length for encoded blocks), which is what the cache-tier
+//! budgets consume.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{bail, ensure, Result};
 
+use super::codec::{codec_for, KvCodec, CODEC_F32};
+use crate::config::KvCodecKind;
 use crate::tensor::Tensor;
 
 /// Default `--kv-block-tokens`: tokens of per-layer K/V per pool block.
@@ -142,9 +158,12 @@ impl PoolInner {
 
 /// The process-wide slab of fixed-size KV block slots (see the module
 /// docs). Thread-safe; shared behind an `Arc` by every tier and every
-/// [`BlockRef`].
+/// [`BlockRef`]. Carries the serving stack's block codec and hot
+/// watermark so every [`KvBlocks`] built over it encodes consistently.
 pub struct KvBlockPool {
     block_tokens: usize,
+    codec: Arc<dyn KvCodec>,
+    hot_blocks: usize,
     inner: Mutex<PoolInner>,
 }
 
@@ -152,6 +171,8 @@ impl KvBlockPool {
     pub fn new(block_tokens: usize) -> KvBlockPool {
         KvBlockPool {
             block_tokens: block_tokens.max(1),
+            codec: codec_for(KvCodecKind::F32),
+            hot_blocks: crate::config::DEFAULT_KV_HOT_BLOCKS,
             inner: Mutex::new(PoolInner {
                 slab: Vec::new(),
                 per_token_elems: 0,
@@ -173,6 +194,34 @@ impl KvBlockPool {
     /// Tokens of per-layer K/V per block (`--kv-block-tokens`).
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Set the block codec and hot watermark (`--kv-codec` /
+    /// `--kv-hot-blocks`): blocks `>= hot_blocks` of each document are
+    /// stored encoded when the codec is lossy (a [`super::codec::CODEC_F32`]
+    /// codec keeps every block pooled, preserving byte-identical
+    /// behavior and content sharing).
+    pub fn with_codec(mut self, codec: Arc<dyn KvCodec>,
+                      hot_blocks: usize) -> KvBlockPool {
+        self.codec = codec;
+        self.hot_blocks = hot_blocks;
+        self
+    }
+
+    /// The stack's block codec (shared with the disk tier).
+    pub fn codec(&self) -> &Arc<dyn KvCodec> {
+        &self.codec
+    }
+
+    /// Per-document count of head blocks kept as raw pooled f32.
+    pub fn hot_blocks(&self) -> usize {
+        self.hot_blocks
+    }
+
+    /// Whether block index `b` of a document is stored encoded (past
+    /// the hot watermark, under a lossy codec).
+    fn encode_cold(&self, b: usize) -> bool {
+        b >= self.hot_blocks && self.codec.id() != CODEC_F32
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -481,15 +530,55 @@ fn slot_from_logical(lay: &KvLayout, b: usize, logical: &[f32])
     buf
 }
 
+/// Extract block `b` of a `[L,2,H,T,Dh]` tensor in logical (unpadded,
+/// channel-major) form — what a codec encodes.
+fn logical_from_tensor(lay: &KvLayout, kv: &Tensor, b: usize) -> Vec<f32> {
+    let dh = lay.head_dim;
+    let t0 = b * lay.block_tokens;
+    let len = lay.block_len(b);
+    let mut out = vec![0f32; len * lay.per_token_elems()];
+    for l in 0..lay.n_layers {
+        for c in 0..2 {
+            for h in 0..lay.n_heads {
+                let src = kv.slice_at(&[l, c, h]);
+                let ch = lay.channel(l, c, h);
+                out[ch * len * dh..(ch + 1) * len * dh]
+                    .copy_from_slice(&src[t0 * dh..(t0 + len) * dh]);
+            }
+        }
+    }
+    out
+}
+
+/// How one block of a document is held (see the module docs): hot
+/// blocks live in the pool as raw f32, cold blocks as codec-encoded
+/// payloads, and an evicted block is a hole.
+enum BlockSlot {
+    /// Evicted (slot released / payload dropped, possibly spilled).
+    Missing,
+    /// Raw f32 in a pool slot — content-shared, CoW.
+    Pooled(BlockRef),
+    /// Codec-encoded logical payload (the pool's codec), decoded on
+    /// read. Physical footprint is the payload length.
+    Encoded(Vec<u8>),
+}
+
+impl BlockSlot {
+    fn is_resident(&self) -> bool {
+        !matches!(self, BlockSlot::Missing)
+    }
+}
+
 /// One document's KV as a block-index list over the pool — the storage
-/// behind [`super::DocEntry::kv`]. A `None` block is evicted (its slot
-/// released, possibly spilled to disk); reads of evicted blocks error
-/// instead of serving stale data. Interior-mutable (`Mutex`) because
-/// tiers evict/restore blocks of entries shared via `Arc`.
+/// behind [`super::DocEntry::kv`]. A [`BlockSlot::Missing`] block is
+/// evicted (its slot released or payload dropped, possibly spilled to
+/// disk); reads of evicted blocks error instead of serving stale data.
+/// Interior-mutable (`Mutex`) because tiers evict/restore blocks of
+/// entries shared via `Arc`.
 pub struct KvBlocks {
     pool: Arc<KvBlockPool>,
     layout: KvLayout,
-    blocks: Mutex<Vec<Option<BlockRef>>>,
+    blocks: Mutex<Vec<BlockSlot>>,
 }
 
 impl KvBlocks {
@@ -510,8 +599,15 @@ impl KvBlocks {
         let pte = layout.per_token_elems();
         let mut blocks = Vec::with_capacity(layout.n_blocks());
         for b in 0..layout.n_blocks() {
-            let buf = slot_from_tensor(&layout, kv, b);
-            blocks.push(Some(BlockRef::alloc(pool, pte, &buf)?));
+            if pool.encode_cold(b) {
+                let logical = logical_from_tensor(&layout, kv, b);
+                blocks.push(BlockSlot::Encoded(
+                    pool.codec().encode_block(&logical)));
+            } else {
+                let buf = slot_from_tensor(&layout, kv, b);
+                blocks.push(BlockSlot::Pooled(
+                    BlockRef::alloc(pool, pte, &buf)?));
+            }
         }
         Ok(KvBlocks {
             pool: Arc::clone(pool),
@@ -524,7 +620,7 @@ impl KvBlocks {
     /// disk tier decodes into this, then restores blocks one by one.
     pub fn empty(pool: &Arc<KvBlockPool>, layout: KvLayout) -> KvBlocks {
         let mut blocks = Vec::with_capacity(layout.n_blocks());
-        blocks.resize_with(layout.n_blocks(), || None);
+        blocks.resize_with(layout.n_blocks(), || BlockSlot::Missing);
         KvBlocks { pool: Arc::clone(pool), layout, blocks: Mutex::new(blocks) }
     }
 
@@ -550,32 +646,48 @@ impl KvBlocks {
         self.layout.block_bytes(b)
     }
 
-    /// Logical bytes currently resident.
+    /// **Physical** bytes currently resident: logical f32 bytes for
+    /// pooled blocks, payload length for encoded blocks — what the
+    /// cache-tier byte budgets charge.
     pub fn resident_bytes(&self) -> usize {
         let blocks = self.blocks.lock().unwrap();
         blocks
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.is_some())
-            .map(|(b, _)| self.layout.block_bytes(b))
+            .map(|(b, s)| match s {
+                BlockSlot::Missing => 0,
+                BlockSlot::Pooled(_) => self.layout.block_bytes(b),
+                BlockSlot::Encoded(p) => p.len(),
+            })
             .sum()
     }
 
+    /// Physical bytes of block `b` (`None` if evicted): what evicting
+    /// this one block frees from a byte budget.
+    pub fn block_physical_bytes(&self, b: usize) -> Option<usize> {
+        let blocks = self.blocks.lock().unwrap();
+        match blocks.get(b)? {
+            BlockSlot::Missing => None,
+            BlockSlot::Pooled(_) => Some(self.layout.block_bytes(b)),
+            BlockSlot::Encoded(p) => Some(p.len()),
+        }
+    }
+
     pub fn is_fully_resident(&self) -> bool {
-        self.blocks.lock().unwrap().iter().all(|r| r.is_some())
+        self.blocks.lock().unwrap().iter().all(|s| s.is_resident())
     }
 
     pub fn resident_block_indexes(&self) -> Vec<u32> {
         let blocks = self.blocks.lock().unwrap();
         (0..blocks.len() as u32)
-            .filter(|&b| blocks[b as usize].is_some())
+            .filter(|&b| blocks[b as usize].is_resident())
             .collect()
     }
 
     pub fn missing_block_indexes(&self) -> Vec<u32> {
         let blocks = self.blocks.lock().unwrap();
         (0..blocks.len() as u32)
-            .filter(|&b| blocks[b as usize].is_none())
+            .filter(|&b| !blocks[b as usize].is_resident())
             .collect()
     }
 
@@ -602,11 +714,23 @@ impl KvBlocks {
             let b = t / bt;
             let local = t - b * bt;
             let run = (lay.block_len(b) - local).min(tok_start + n_tok - t);
-            let r = blocks[b].as_ref().ok_or_else(|| anyhow!(
-                "KV block {b} is evicted (tokens {}..{})", b * bt,
-                b * bt + lay.block_len(b)))?;
-            r.read(ch * bt * dh + local * dh,
-                   &mut dst[out..out + run * dh])?;
+            match &blocks[b] {
+                BlockSlot::Missing => bail!(
+                    "KV block {b} is evicted (tokens {}..{})", b * bt,
+                    b * bt + lay.block_len(b)),
+                BlockSlot::Pooled(r) => {
+                    r.read(ch * bt * dh + local * dh,
+                           &mut dst[out..out + run * dh])?;
+                }
+                // encoded payloads are logical (unpadded): channel
+                // stride is the block's own token count, not bt
+                BlockSlot::Encoded(p) => {
+                    let len = lay.block_len(b);
+                    self.pool.codec().decode_span(
+                        p, ch * len * dh + local * dh,
+                        &mut dst[out..out + run * dh])?;
+                }
+            }
             t += run;
             out += run * dh;
         }
@@ -632,42 +756,71 @@ impl KvBlocks {
         Ok(out)
     }
 
-    /// Block `b`'s logical payload (channel-major, unpadded), or `None`
-    /// if evicted — the disk tier's record source.
-    pub fn block_data(&self, b: usize) -> Option<Vec<f32>> {
-        let blocks = self.blocks.lock().unwrap();
-        let r = blocks.get(b)?.as_ref()?;
-        let mut slot = vec![0f32; self.layout.slot_elems()];
-        r.read(0, &mut slot).ok()?;
-        Some(logical_from_slot(&self.layout, b, &slot))
+    /// Decode one held block (pooled or encoded) to its logical
+    /// payload. Never called on [`BlockSlot::Missing`].
+    fn decode_slot(&self, b: usize, slot: &BlockSlot) -> Option<Vec<f32>> {
+        match slot {
+            BlockSlot::Missing => None,
+            BlockSlot::Pooled(r) => {
+                let mut buf = vec![0f32; self.layout.slot_elems()];
+                r.read(0, &mut buf).ok()?;
+                Some(logical_from_slot(&self.layout, b, &buf))
+            }
+            BlockSlot::Encoded(p) => {
+                let mut out = vec![0f32; self.layout.block_len(b)
+                                  * self.layout.per_token_elems()];
+                self.pool.codec().decode_block(p, &mut out).ok()?;
+                Some(out)
+            }
+        }
     }
 
-    /// Evict block `b`: remove it and return its logical payload so the
-    /// caller can spill it to disk after releasing the slot. `None` if
-    /// already evicted.
+    /// Build the slot for block `b` from its logical payload: encoded
+    /// past the hot watermark (lossy codec), pooled otherwise.
+    fn slot_for(&self, b: usize, logical: &[f32]) -> Result<BlockSlot> {
+        if self.pool.encode_cold(b) {
+            Ok(BlockSlot::Encoded(self.pool.codec().encode_block(logical)))
+        } else {
+            let buf = slot_from_logical(&self.layout, b, logical);
+            Ok(BlockSlot::Pooled(BlockRef::alloc(
+                &self.pool, self.layout.per_token_elems(), &buf)?))
+        }
+    }
+
+    /// Block `b`'s logical payload (channel-major, unpadded, decoded to
+    /// f32), or `None` if evicted — the disk tier's record source.
+    pub fn block_data(&self, b: usize) -> Option<Vec<f32>> {
+        let blocks = self.blocks.lock().unwrap();
+        self.decode_slot(b, blocks.get(b)?)
+    }
+
+    /// Evict block `b`: remove it and return its logical (decoded f32)
+    /// payload so the caller can spill it to disk after releasing the
+    /// slot. `None` if already evicted.
     pub fn take_block_data(&self, b: usize) -> Option<Vec<f32>> {
-        let taken = self.blocks.lock().unwrap().get_mut(b)?.take()?;
-        let mut slot = vec![0f32; self.layout.slot_elems()];
-        let data = taken
-            .read(0, &mut slot)
-            .ok()
-            .map(|_| logical_from_slot(&self.layout, b, &slot));
-        drop(taken); // releases the slot ref
+        let taken = std::mem::replace(
+            self.blocks.lock().unwrap().get_mut(b)?, BlockSlot::Missing);
+        if !taken.is_resident() {
+            return None;
+        }
+        let data = self.decode_slot(b, &taken);
+        drop(taken); // releases the pool slot for pooled blocks
         data
     }
 
     /// Re-admit an evicted block from its logical payload (disk load).
+    /// Past the hot watermark the block is re-encoded with the pool's
+    /// codec, whatever codec the payload came from on disk.
     pub fn restore_block(&self, b: usize, logical: &[f32]) -> Result<()> {
         let lay = self.layout;
         ensure!(b < lay.n_blocks(), "block {b} out of range");
         ensure!(logical.len() == lay.block_len(b) * lay.per_token_elems(),
                 "block {b} payload {} != expected {}", logical.len(),
                 lay.block_len(b) * lay.per_token_elems());
-        let buf = slot_from_logical(&lay, b, logical);
-        let r = BlockRef::alloc(&self.pool, lay.per_token_elems(), &buf)?;
+        let slot = self.slot_for(b, logical)?;
         let mut blocks = self.blocks.lock().unwrap();
-        ensure!(blocks[b].is_none(), "block {b} is already resident");
-        blocks[b] = Some(r);
+        ensure!(!blocks[b].is_resident(), "block {b} is already resident");
+        blocks[b] = slot;
         Ok(())
     }
 
@@ -682,12 +835,11 @@ impl KvBlocks {
                 "kv shape {:?} != layout {:?}", kv.shape(), lay);
         let missing = self.missing_block_indexes();
         for &b in &missing {
-            let buf = slot_from_tensor(&lay, kv, b as usize);
-            let r = BlockRef::alloc(&self.pool, lay.per_token_elems(),
-                                    &buf)?;
+            let logical = logical_from_tensor(&lay, kv, b as usize);
+            let slot = self.slot_for(b as usize, &logical)?;
             let mut blocks = self.blocks.lock().unwrap();
-            if blocks[b as usize].is_none() {
-                blocks[b as usize] = Some(r);
+            if !blocks[b as usize].is_resident() {
+                blocks[b as usize] = slot;
             }
         }
         Ok(missing.len())
@@ -933,6 +1085,89 @@ mod tests {
         assert_eq!(blocks.resident_bytes(),
                    blocks.size_bytes() - blocks.block_bytes(2));
         assert_eq!(blocks.resident_block_indexes(), vec![0, 1]);
+    }
+
+    fn coded_pool(bt: usize, kind: KvCodecKind, hot: usize)
+                  -> Arc<KvBlockPool> {
+        Arc::new(KvBlockPool::new(bt).with_codec(codec_for(kind), hot))
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data().iter()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn cold_blocks_encode_past_hot_watermark() {
+        // 7 tokens over 3-token blocks: block 0 hot (pooled), 1+2 cold
+        let p = coded_pool(3, KvCodecKind::Int8, 1);
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        assert!(blocks.is_fully_resident());
+        assert_eq!(blocks.resident_block_indexes(), vec![0, 1, 2]);
+        assert_eq!(p.stats().slots_live, 1,
+                   "only the hot block takes a pool slot");
+        // physical accounting: hot block logical, cold blocks payload
+        let b1 = blocks.block_physical_bytes(1).unwrap();
+        assert!(b1 < blocks.block_bytes(1),
+                "encoded block must be smaller than f32 ({b1})");
+        assert_eq!(blocks.resident_bytes(),
+                   blocks.block_bytes(0) + b1
+                   + blocks.block_physical_bytes(2).unwrap());
+        // the hot block reads back bit-exact
+        let mut head = vec![0f32; 3 * 2];
+        blocks.copy_span(0, 1, 0, 0, 3, &mut head).unwrap();
+        assert_eq!(head, vec![1000.0, 1001.0, 1010.0, 1011.0, 1020.0,
+                              1021.0]);
+        // cold blocks dequantize within half an int8 step of absmax
+        let tol = (1051.0 / 127.0) * 0.5 + 1e-3;
+        assert_close(&blocks.gather().unwrap(), &kv, tol);
+        // a span crossing the hot/cold boundary decodes both sides
+        let mut span = vec![0f32; 4 * 2];
+        blocks.copy_span(0, 0, 0, 2, 4, &mut span).unwrap();
+        for (i, t) in (2..6).enumerate() {
+            for d in 0..2 {
+                let want = (t * 10 + d) as f32;
+                assert!((span[i * 2 + d] - want).abs() <= tol);
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_take_restore_roundtrip() {
+        let p = coded_pool(3, KvCodecKind::F16, 0); // everything cold
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        assert_eq!(p.stats().slots_live, 0, "no pooled blocks at all");
+        let taken = blocks.take_block_data(1).expect("resident block");
+        assert_eq!(taken.len(), 3 * 4);
+        assert_eq!(blocks.missing_block_indexes(), vec![1]);
+        assert!(blocks.block_physical_bytes(1).is_none());
+        let mut span = vec![0f32; 2];
+        assert!(blocks.copy_span(0, 0, 0, 4, 1, &mut span).is_err(),
+                "reads through the hole must fail");
+        assert!(blocks.take_block_data(1).is_none(), "already evicted");
+        blocks.restore_block(1, &taken).unwrap();
+        assert!(blocks.is_fully_resident());
+        // decode -> encode -> decode is stable within f16 tolerance
+        let tol = 1051.0 * 2f32.powi(-11) * 1.01;
+        assert_close(&blocks.gather().unwrap(), &kv, tol);
+        assert!(blocks.restore_block(1, &taken).is_err(),
+                "restoring a resident block must fail");
+    }
+
+    #[test]
+    fn f32_codec_keeps_every_block_pooled() {
+        // an explicit f32 codec with watermark 0 must change nothing:
+        // all blocks pooled, byte-identical, physical == logical
+        let p = coded_pool(3, KvCodecKind::F32, 0);
+        let kv = tagged_kv(7);
+        let blocks = KvBlocks::from_tensor(&p, &kv).unwrap();
+        assert_eq!(p.stats().slots_live, 3);
+        assert_eq!(blocks.resident_bytes(), blocks.size_bytes());
+        assert_eq!(blocks.gather().unwrap(), kv);
     }
 
     #[test]

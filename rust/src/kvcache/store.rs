@@ -60,6 +60,7 @@ use crate::config::DiskWriteback;
 use crate::model::{Model, PrefillDocOut};
 use crate::tensor::Tensor;
 
+use super::codec::KvCodec;
 use super::disk::DiskDocCache;
 use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy,
                    WHOLE_ENTRY};
@@ -116,7 +117,11 @@ pub struct DocEntry {
     pub attn: Tensor,
     /// `[L, H, Dh]` local-window mean Q (Eq. 1 bias source).
     pub q_local: Tensor,
-    /// Logical size of the *complete* entry (all blocks resident).
+    /// **Physical** size of the *complete* entry (all blocks resident)
+    /// at construction: cold blocks past the codec hot watermark count
+    /// at their encoded size, so budgets under a lossy codec hold
+    /// proportionally more documents. Equals the logical size under the
+    /// default f32 codec.
     pub bytes: usize,
 }
 
@@ -132,8 +137,10 @@ impl DocEntry {
                       kv: Tensor, attn: Tensor, q_local: Tensor)
                       -> Result<DocEntry> {
         let kv = KvBlocks::from_tensor(pool, &kv)?;
+        // physical bytes: fresh entries are fully resident, so this is
+        // the encoded-aware footprint of the whole document
         let bytes =
-            kv.size_bytes() + attn.size_bytes() + q_local.size_bytes();
+            kv.resident_bytes() + attn.size_bytes() + q_local.size_bytes();
         Ok(DocEntry {
             hash: doc_hash(&tokens),
             tokens,
@@ -145,8 +152,10 @@ impl DocEntry {
     }
 }
 
-/// Bytes of this entry currently resident in RAM: resident KV blocks
-/// plus the (never block-split) attn/q_local side tensors.
+/// **Physical** bytes of this entry currently resident in RAM:
+/// resident KV blocks (encoded blocks at payload size) plus the (never
+/// block-split) attn/q_local side tensors — what the byte budgets
+/// charge.
 fn entry_resident_bytes(e: &DocEntry) -> usize {
     e.kv.resident_bytes() + e.attn.size_bytes() + e.q_local.size_bytes()
 }
@@ -318,10 +327,27 @@ impl HostDocCache {
 
     /// Set the KV block size (`--kv-block-tokens`). Builder-style:
     /// must be called before any entry is stored (it replaces the
-    /// backing pool).
+    /// backing pool, keeping any codec already configured).
     pub fn with_block_tokens(mut self, block_tokens: usize)
                              -> HostDocCache {
-        self.pool = Arc::new(KvBlockPool::new(block_tokens.max(1)));
+        let codec = Arc::clone(self.pool.codec());
+        let hot = self.pool.hot_blocks();
+        self.pool = Arc::new(
+            KvBlockPool::new(block_tokens.max(1)).with_codec(codec, hot));
+        self
+    }
+
+    /// Set the KV block codec and hot watermark (`--kv-codec` /
+    /// `--kv-hot-blocks`): per-document blocks `>= hot_blocks` are
+    /// stored encoded when the codec is lossy, and budgets charge the
+    /// encoded size. Builder-style: must be called before any entry is
+    /// stored. Share the same codec `Arc` with the disk tier so its
+    /// stats aggregate across tiers.
+    pub fn with_codec(mut self, codec: Arc<dyn KvCodec>,
+                      hot_blocks: usize) -> HostDocCache {
+        self.pool = Arc::new(
+            KvBlockPool::new(self.pool.block_tokens())
+                .with_codec(codec, hot_blocks));
         self
     }
 
@@ -659,7 +685,13 @@ impl HostDocCache {
                     candidates.push(EvictionCandidate {
                         hash: h,
                         block: b,
-                        bytes: s.entry.kv.block_bytes(b as usize),
+                        // physical: an encoded block frees only its
+                        // payload bytes
+                        bytes: s
+                            .entry
+                            .kv
+                            .block_physical_bytes(b as usize)
+                            .unwrap_or(0),
                         last_use: s.last_use,
                         recompute_cost: s.entry.tokens.len(),
                     });
@@ -682,12 +714,18 @@ impl HostDocCache {
                 let Some(slot) = g.entries.get_mut(&c.hash) else {
                     break;
                 };
+                // physical bytes freed — read before the take empties
+                // the slot
+                let freed = slot
+                    .entry
+                    .kv
+                    .block_physical_bytes(c.block as usize)
+                    .unwrap_or(0);
                 let Some(data) =
                     slot.entry.kv.take_block_data(c.block as usize)
                 else {
                     break;
                 };
-                let freed = slot.entry.kv.block_bytes(c.block as usize);
                 slot.resident_bytes =
                     slot.resident_bytes.saturating_sub(freed);
                 (Arc::clone(&slot.entry), data, freed)
@@ -1874,6 +1912,54 @@ mod tests {
         assert!(s.lookup(&[8, 8]).is_some());
         assert_eq!(disk.stats().hits, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn int8_budget_charges_physical_bytes_and_admits_more() {
+        // satellite bugfix: the budget must charge encoded (physical)
+        // bytes, not logical f32 bytes. fake_entry(1024) is a
+        // 128-token KV = 2 default pool blocks of 128 elems each:
+        // 512B/block under f32, 132B/block (scale + 1B/elem) under
+        // int8 with a zero hot watermark.
+        use super::super::codec::codec_for;
+        use crate::config::KvCodecKind;
+        let budget = 2100; // fits exactly two complete f32 entries
+        let f32_host = Arc::new(HostDocCache::new(budget));
+        let int8_host = Arc::new(HostDocCache::new(budget)
+            .with_codec(codec_for(KvCodecKind::Int8), 0));
+        // the encoded entry itself is >= 3.5x smaller than f32
+        let probe32 = arc_entry(f32_host.pool(), vec![99], 1024);
+        let probe8 = arc_entry(int8_host.pool(), vec![99], 1024);
+        assert!(probe32.kv.resident_bytes() as f64
+                    >= probe8.kv.resident_bytes() as f64 * 3.5,
+                "int8 resident blocks must be >= 3.5x smaller \
+                 ({} vs {})", probe32.kv.resident_bytes(),
+                probe8.kv.resident_bytes());
+        assert!(probe8.bytes < probe32.bytes / 3);
+        let mut h32 = Vec::new();
+        let mut h8 = Vec::new();
+        for i in 0..8 {
+            let e = arc_entry(f32_host.pool(), vec![i], 1024);
+            f32_host.publish(Arc::clone(&e));
+            h32.push(e);
+            let e = arc_entry(int8_host.pool(), vec![i], 1024);
+            int8_host.publish(Arc::clone(&e));
+            h8.push(e);
+        }
+        assert!(f32_host.stats().current_bytes <= budget);
+        assert!(int8_host.stats().current_bytes <= budget);
+        // same budget, ~3.9x smaller blocks: the int8 tier keeps >=
+        // 3.5x as many KV blocks resident
+        let blocks = |hs: &[Arc<DocEntry>]| -> usize {
+            hs.iter()
+                .map(|e| e.kv.resident_block_indexes().len())
+                .sum()
+        };
+        let (b32, b8) = (blocks(&h32), blocks(&h8));
+        assert!(b8 as f64 >= b32 as f64 * 3.5,
+                "int8 must admit ~4x more blocks under the same \
+                 budget (f32 {b32}, int8 {b8})");
+        assert!(int8_host.len() > f32_host.len() * 2);
     }
 
     #[test]

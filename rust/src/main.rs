@@ -14,11 +14,11 @@ use std::sync::Arc;
 
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
-use samkv::config::{DiskWriteback, ServingConfig};
+use samkv::config::{DiskWriteback, KvCodecKind, ServingConfig};
 use samkv::coordinator::{Engine, Router};
 use samkv::eval::evaluate;
 use samkv::kvcache::{
-    eviction_policy_by_name, DiskDocCache, HostDocCache,
+    codec_for, eviction_policy_by_name, DiskDocCache, HostDocCache,
 };
 use samkv::metrics::Metrics;
 use samkv::policies::{all_policies, policy_by_name};
@@ -89,6 +89,7 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
             Ok(())
         }
         "throughput" => {
+            let defaults = ServingConfig::default();
             exp::throughput(
                 &profile,
                 &args.get_str("policy", "SamKV-fusion"),
@@ -98,6 +99,9 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
                 &exp::parse_list::<usize>(
                     &args.get_str("batch-sizes", "1,4"))?,
                 &exp::parse_list::<f64>(&args.get_str("rates", "0,32"))?,
+                args.get_str("kv-codec", defaults.kv_codec.name())
+                    .parse::<KvCodecKind>()?,
+                args.get::<usize>("kv-hot-blocks", defaults.kv_hot_blocks),
             )?;
             Ok(())
         }
@@ -118,6 +122,11 @@ fn print_help() {
                --host-cache-mb N (0 = auto-size) --eviction lru|cost-aware\n  \
                --kv-block-tokens N (pool block span; eviction/spill/\n  \
                 sharing granularity, default 64)\n  \
+               --kv-codec f32|f16|int8 (encoding for cold host blocks\n  \
+                and disk records; f32 = lossless, f16 ~2x smaller,\n  \
+                int8 ~4x smaller per-block absmax; default f32)\n  \
+               --kv-hot-blocks N (per-document head blocks kept as raw\n  \
+                pooled f32 under a lossy codec, default 4)\n  \
                --max-batch N --batch-window-ms N --max-active N\n  \
                (continuous batching: admission wave size, gather window,\n  \
                 in-flight session cap)\n  \
@@ -127,7 +136,8 @@ fn print_help() {
                --disk-writeback evict|through|off\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
          throughput --policy NAME --requests N --unique N --engines N\n  \
-                    --batch-sizes 1,4 --rates 0,32  (sweep)\n  \
+                    --batch-sizes 1,4 --rates 0,32\n  \
+                    --kv-codec f32|f16|int8 --kv-hot-blocks N  (sweep)\n  \
          analyze --profile P           Fig.7 + Fig.8 analytics"
     );
 }
@@ -208,6 +218,11 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
             .parse::<DiskWriteback>()?,
         kv_block_tokens: args.get::<usize>("kv-block-tokens",
                                            defaults.kv_block_tokens),
+        kv_codec: args
+            .get_str("kv-codec", defaults.kv_codec.name())
+            .parse::<KvCodecKind>()?,
+        kv_hot_blocks: args.get::<usize>("kv-hot-blocks",
+                                         defaults.kv_hot_blocks),
         ..defaults
     };
     // the shared host doc-cache tier beneath every engine's residency
@@ -218,12 +233,16 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let eviction = args.get_str("eviction", "lru");
     let evict_policy = eviction_policy_by_name(&eviction)
         .ok_or_else(|| anyhow::anyhow!("unknown eviction `{eviction}`"))?;
+    // one codec instance per serving stack, shared by the host pool
+    // and the disk tier so compression stats aggregate in one place
+    let codec = codec_for(cfg.kv_codec);
     let mut host = if host_mb == 0 {
         HostDocCache::auto_sized(evict_policy)
     } else {
         HostDocCache::with_policy(host_mb * 1024 * 1024, evict_policy)
     }
-    .with_block_tokens(cfg.kv_block_tokens);
+    .with_block_tokens(cfg.kv_block_tokens)
+    .with_codec(Arc::clone(&codec), cfg.kv_hot_blocks);
     // the persistent disk tier beneath the host tier: host evictions
     // spill instead of dropping, and a restarted server re-serves
     // previously-seen documents with zero model prefills
@@ -233,8 +252,10 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         } else {
             cfg.disk_cache_mb * 1024 * 1024
         };
-        let disk =
-            Arc::new(DiskDocCache::open(&cfg.disk_cache_dir, budget)?);
+        let disk = Arc::new(
+            DiskDocCache::open(&cfg.disk_cache_dir, budget)?
+                .with_codec(Arc::clone(&codec)),
+        );
         info!("disk cache tier at {} ({} entries, {}, writeback {})",
               cfg.disk_cache_dir,
               disk.len(),
@@ -247,12 +268,12 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
            policy {policy}, host cache {} ({eviction}, {}-token KV \
-           blocks), continuous batching (wave {}, window {}ms, max \
-           active {})",
+           blocks, codec {} past {} hot blocks), continuous batching \
+           (wave {}, window {}ms, max active {})",
           if host_mb == 0 { "auto-sized".to_string() }
           else { format!("{host_mb}MiB") },
-          cfg.kv_block_tokens, cfg.max_batch, cfg.batch_window_ms,
-          cfg.max_active);
+          cfg.kv_block_tokens, cfg.kv_codec.name(), cfg.kv_hot_blocks,
+          cfg.max_batch, cfg.batch_window_ms, cfg.max_active);
     let engines: Vec<Engine> = (0..n_engines)
         .map(|i| {
             Engine::spawn(i, artifacts_dir(), cfg.clone(), policy.clone(),

@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::json::Value;
-use crate::kvcache::{CacheStats, DiskStats, PoolStats};
+use crate::kvcache::{CacheStats, CodecSnapshot, DiskStats, PoolStats};
 
 /// Log-bucketed latency histogram (microsecond granularity, buckets
 /// doubling from 100us to ~400s).
@@ -160,9 +160,25 @@ pub struct Metrics {
     pub disk_collisions: AtomicU64,
     pub disk_evictions: AtomicU64,
     pub disk_bytes: AtomicU64,
+    /// Total file bytes read back by disk loads (monotone; smaller
+    /// codecs shrink it proportionally).
+    pub disk_bytes_loaded: AtomicU64,
     /// Disk-tier load latency (file read + decode + checksum) per
     /// successful load.
     pub disk_load: Histogram,
+    /// KV codec layer (`--kv-codec`, see `kvcache::codec`): monotone
+    /// process-wide totals folded in with `fetch_max` like the host
+    /// tier. `codec_logical_bytes` / `codec_physical_bytes` is the
+    /// achieved compression ratio.
+    pub codec_blocks_encoded: AtomicU64,
+    pub codec_blocks_decoded: AtomicU64,
+    pub codec_logical_bytes: AtomicU64,
+    pub codec_physical_bytes: AtomicU64,
+    /// Per-block dequantization latency on the read path.
+    pub codec_decode: Histogram,
+    /// Name of the active codec (`f32`/`f16`/`int8`), set by the first
+    /// [`Self::record_codec`] flush.
+    codec_name: Mutex<String>,
     /// Paged KV block pool (process-wide slab under the RAM tiers):
     /// slot/slab occupancy are gauges (last snapshot wins), the event
     /// counters are monotone totals folded in with `fetch_max` like
@@ -303,9 +319,68 @@ impl Metrics {
             .fetch_max(disk.evictions, Ordering::Relaxed);
         self.disk_bytes
             .store(disk.current_bytes as u64, Ordering::Relaxed);
+        self.disk_bytes_loaded
+            .fetch_max(disk.bytes_loaded, Ordering::Relaxed);
         for &ms in load_ms {
             self.disk_load.observe_ms(ms);
         }
+    }
+
+    /// Flush the KV codec layer's counters (one codec instance per
+    /// serving stack, shared by the host pool and the disk tier, so
+    /// any engine's snapshot carries the same monotone totals —
+    /// `fetch_max` like the host tier) and fold the decode-latency
+    /// samples drained from
+    /// [`crate::kvcache::CodecStats::take_decode_samples`] into the
+    /// decode histogram. The engine calls this after every admission
+    /// wave, beside [`Self::record_pool`].
+    pub fn record_codec(&self, snap: &CodecSnapshot,
+                        decode_ms: &[f64]) {
+        self.codec_blocks_encoded
+            .fetch_max(snap.blocks_encoded, Ordering::Relaxed);
+        self.codec_blocks_decoded
+            .fetch_max(snap.blocks_decoded, Ordering::Relaxed);
+        self.codec_logical_bytes
+            .fetch_max(snap.logical_bytes, Ordering::Relaxed);
+        self.codec_physical_bytes
+            .fetch_max(snap.physical_bytes, Ordering::Relaxed);
+        let mut name = self.codec_name.lock().unwrap();
+        if *name != snap.codec {
+            *name = snap.codec.to_string();
+        }
+        drop(name);
+        for &ms in decode_ms {
+            self.codec_decode.observe_ms(ms);
+        }
+    }
+
+    /// Logical / physical bytes across every block the codec encoded
+    /// (1.0 when nothing was encoded — or under the lossless f32
+    /// codec, which stores blocks raw).
+    pub fn codec_compression_ratio(&self) -> f64 {
+        let phys = self.codec_physical_bytes.load(Ordering::Relaxed);
+        if phys == 0 {
+            1.0
+        } else {
+            self.codec_logical_bytes.load(Ordering::Relaxed) as f64
+                / phys as f64
+        }
+    }
+
+    /// The codec layer's counters as a JSON object (the `codec` object
+    /// on the `cmd:metrics` wire and in bench artifacts).
+    pub fn codec_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("codec", self.codec_name.lock().unwrap().as_str())
+            .set("blocks_encoded", g(&self.codec_blocks_encoded))
+            .set("blocks_decoded", g(&self.codec_blocks_decoded))
+            .set("logical_bytes", g(&self.codec_logical_bytes))
+            .set("physical_bytes", g(&self.codec_physical_bytes))
+            .set("compression_ratio", self.codec_compression_ratio())
+            .set("decode_mean_ms", self.codec_decode.mean_ms())
+            .set("decode_p50_ms", self.codec_decode.percentile_ms(0.50))
+            .set("decode_p95_ms", self.codec_decode.percentile_ms(0.95))
     }
 
     /// Flush the block pool's counters (one process-wide pool; any
@@ -403,6 +478,7 @@ impl Metrics {
                      .set("collisions", g(&self.disk_collisions))
                      .set("evictions", g(&self.disk_evictions))
                      .set("bytes", g(&self.disk_bytes))
+                     .set("bytes_loaded", g(&self.disk_bytes_loaded))
                      .set("load_mean_ms", self.disk_load.mean_ms())
                      .set("load_p50_ms", self.disk_load.percentile_ms(0.50))
                      .set("load_p95_ms",
@@ -441,9 +517,11 @@ impl Metrics {
              host(hits={} misses={} publishes={} evictions={} bytes={}) \
              resident(hits={} misses={} evictions={}) \
              disk(hits={} misses={} spills={} loads={} corrupt={} \
-             bytes={} load_mean={:.1}ms) \
+             bytes={} loaded={} load_mean={:.1}ms) \
              pool(slots={}/{} free={} slab_bytes={} grows={} \
-             evicted={} spilled={} shares={} partial={})",
+             evicted={} spilled={} shares={} partial={}) \
+             codec({} encoded={} decoded={} ratio={:.2} \
+             decode_mean={:.3}ms)",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -481,6 +559,7 @@ impl Metrics {
             self.disk_loads.load(Ordering::Relaxed),
             self.disk_corrupt.load(Ordering::Relaxed),
             self.disk_bytes.load(Ordering::Relaxed),
+            self.disk_bytes_loaded.load(Ordering::Relaxed),
             self.disk_load.mean_ms(),
             self.pool_slots_live.load(Ordering::Relaxed),
             self.pool_slots_total.load(Ordering::Relaxed),
@@ -491,6 +570,18 @@ impl Metrics {
             self.pool_blocks_spilled.load(Ordering::Relaxed),
             self.pool_share_hits.load(Ordering::Relaxed),
             self.pool_partial_evictions.load(Ordering::Relaxed),
+            {
+                let name = self.codec_name.lock().unwrap();
+                if name.is_empty() {
+                    "f32".to_string()
+                } else {
+                    name.clone()
+                }
+            },
+            self.codec_blocks_encoded.load(Ordering::Relaxed),
+            self.codec_blocks_decoded.load(Ordering::Relaxed),
+            self.codec_compression_ratio(),
+            self.codec_decode.mean_ms(),
         )
     }
 }
@@ -573,6 +664,7 @@ mod tests {
             corrupt_blocks: 2,
             collisions: 1,
             evictions: 2,
+            bytes_loaded: 9000,
             current_bytes: 4096,
         };
         m.record_disk_tier(&d, &[1.5, 2.5]);
@@ -584,6 +676,8 @@ mod tests {
         assert_eq!(m.disk_spills.load(Ordering::Relaxed), 3);
         assert_eq!(m.disk_corrupt.load(Ordering::Relaxed), 1);
         assert_eq!(m.disk_corrupt_blocks.load(Ordering::Relaxed), 2);
+        assert_eq!(m.disk_bytes_loaded.load(Ordering::Relaxed), 9000,
+                   "bytes_loaded is monotone");
         // bytes is a gauge: last write wins
         assert_eq!(m.disk_bytes.load(Ordering::Relaxed), 1024);
         assert_eq!(m.disk_load.count(), 2);
@@ -592,10 +686,56 @@ mod tests {
         for field in ["\"disk\"", "\"spills\"", "\"loads\"", "\"corrupt\"",
                       "\"corrupt_blocks\"", "\"load_mean_ms\"",
                       "\"load_p50_ms\"", "\"load_p95_ms\"",
-                      "\"collisions\""] {
+                      "\"collisions\"", "\"bytes_loaded\""] {
             assert!(j.contains(field), "{field}: {j}");
         }
         assert!(m.report().contains("disk(hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn codec_counters_flush() {
+        let m = Metrics::new();
+        let snap = CodecSnapshot {
+            codec: "int8",
+            blocks_encoded: 8,
+            blocks_decoded: 5,
+            logical_bytes: 4096,
+            physical_bytes: 1056,
+        };
+        m.record_codec(&snap, &[0.2, 0.4]);
+        // monotone totals: a stale snapshot can never regress them
+        m.record_codec(&CodecSnapshot { codec: "int8", blocks_encoded: 3,
+                                        ..CodecSnapshot::default() },
+                       &[]);
+        assert_eq!(m.codec_blocks_encoded.load(Ordering::Relaxed), 8);
+        assert_eq!(m.codec_blocks_decoded.load(Ordering::Relaxed), 5);
+        assert_eq!(m.codec_logical_bytes.load(Ordering::Relaxed), 4096);
+        assert_eq!(m.codec_physical_bytes.load(Ordering::Relaxed), 1056);
+        assert!((m.codec_compression_ratio() - 4096.0 / 1056.0).abs()
+                    < 1e-9);
+        assert_eq!(m.codec_decode.count(), 2);
+        let j = m.codec_json().to_string();
+        for field in ["\"codec\"", "\"blocks_encoded\"",
+                      "\"blocks_decoded\"", "\"logical_bytes\"",
+                      "\"physical_bytes\"", "\"compression_ratio\"",
+                      "\"decode_mean_ms\"", "\"decode_p50_ms\"",
+                      "\"decode_p95_ms\""] {
+            assert!(j.contains(field), "{field}: {j}");
+        }
+        assert!(j.contains("\"codec\":\"int8\""), "{j}");
+        assert!(crate::json::parse(&j).is_ok(), "{j}");
+        assert!(m.report().contains("codec(int8 encoded=8"),
+                "{}", m.report());
+    }
+
+    #[test]
+    fn codec_json_defaults_before_any_flush() {
+        // an f32 stack that never encodes still serializes cleanly
+        let m = Metrics::new();
+        assert_eq!(m.codec_compression_ratio(), 1.0);
+        let j = m.codec_json().to_string();
+        assert!(crate::json::parse(&j).is_ok(), "{j}");
+        assert!(j.contains("\"compression_ratio\":1"), "{j}");
     }
 
     #[test]

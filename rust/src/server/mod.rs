@@ -22,7 +22,10 @@
 //! (`{"pool":{...}}` — slot gauges `slots_total`/`slots_live`/
 //! `slots_free`/`slab_bytes` plus the monotone event counters
 //! `grow_events`/`blocks_evicted`/`blocks_spilled`/`share_hits`/
-//! `partial_evictions`/`double_frees`);
+//! `partial_evictions`/`double_frees`), and the KV codec snapshot
+//! (`{"codec":{...}}` — active codec name, blocks encoded/decoded,
+//! logical vs physical bytes with the achieved `compression_ratio`,
+//! and the dequantization-latency mean/p50/p95);
 //! `{"cmd":"shutdown"}` stops the listener.
 
 use std::io::{BufRead, BufReader, Write};
@@ -136,6 +139,7 @@ fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
                 .set("serving", metrics.serving_json())
                 .set("cache", metrics.cache_tiers_json())
                 .set("pool", metrics.pool_json())
+                .set("codec", metrics.codec_json())
                 .set("loads",
                      Value::Arr(router
                          .loads()

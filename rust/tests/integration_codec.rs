@@ -1,0 +1,229 @@
+//! Codec-layer integration over the tiny artifacts: every paper
+//! policy served through a host+disk stack built with each KV codec.
+//! The lossless contract is token-level — `--kv-codec f32` must be
+//! byte-identical to a stack with no codec configured for all 7
+//! policies. The lossy codecs (f16, int8) have no token-equality
+//! contract (quantization may legitimately move an argmax), so their
+//! tolerance is functional: every policy serves error-free, the
+//! encoded path is deterministic (two serves over the same stack are
+//! token-identical), and the compression envelope holds (physical vs
+//! logical bytes >=1.9x for f16, >=3.5x for int8). A final test
+//! downgrades a really-served disk directory to the legacy v2 format
+//! and warm-restarts an int8-configured stack over it: v2 records are
+//! untagged raw f32, so the restart must serve with zero prefills and
+//! token-identical output.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use samkv::config::{DiskWriteback, KvCodecKind, ServingConfig};
+use samkv::coordinator::{Engine, Router, ServeRequest};
+use samkv::kvcache::{codec_for, doc_hash, DiskDocCache, HostDocCache};
+use samkv::metrics::Metrics;
+use samkv::policies::all_policies;
+use samkv::runtime::artifacts_dir;
+use samkv::workload::{Dataset, Sample};
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn policy_names() -> Vec<String> {
+    let names: Vec<String> =
+        all_policies().iter().map(|p| p.name()).collect();
+    assert_eq!(names.len(), 7, "the paper table has 7 policies");
+    names
+}
+
+/// One complete serving stack (fresh metrics, one engine, host tier
+/// built with `codec`/`hot_blocks`, optional write-through disk tier
+/// sharing the same codec instance). The engine stays up so multiple
+/// policies can be served through one stack.
+struct Stack {
+    engine: Engine,
+    metrics: Arc<Metrics>,
+    disk: Option<Arc<DiskDocCache>>,
+    next_id: u64,
+}
+
+impl Stack {
+    fn build(dir: Option<&PathBuf>, codec: KvCodecKind,
+             hot_blocks: usize) -> Stack {
+        let metrics = Arc::new(Metrics::new());
+        let c = codec_for(codec);
+        let mut host =
+            HostDocCache::unbounded().with_codec(Arc::clone(&c), hot_blocks);
+        let mut disk_handle = None;
+        if let Some(dir) = dir {
+            let disk = Arc::new(DiskDocCache::open(dir, usize::MAX)
+                .unwrap()
+                .with_codec(Arc::clone(&c)));
+            disk_handle = Some(Arc::clone(&disk));
+            host = host.with_disk(disk, DiskWriteback::Through);
+        }
+        let cfg = ServingConfig {
+            profile: "tiny".to_string(),
+            kv_codec: codec,
+            kv_hot_blocks: hot_blocks,
+            ..ServingConfig::default()
+        };
+        let router = Arc::new(Router::new(1));
+        let engine = Engine::spawn(0, artifacts_dir(), cfg,
+                                   "Reuse".to_string(),
+                                   Arc::clone(&metrics), Arc::new(host),
+                                   Some(router.residency_handle(0)))
+            .unwrap();
+        Stack { engine, metrics, disk: disk_handle, next_id: 1 }
+    }
+
+    /// Baseline stack: no codec configured at all — "today's output".
+    fn plain() -> Stack {
+        let metrics = Arc::new(Metrics::new());
+        let cfg = ServingConfig { profile: "tiny".to_string(),
+                                  ..ServingConfig::default() };
+        let router = Arc::new(Router::new(1));
+        let engine = Engine::spawn(0, artifacts_dir(), cfg,
+                                   "Reuse".to_string(),
+                                   Arc::clone(&metrics),
+                                   Arc::new(HostDocCache::unbounded()),
+                                   Some(router.residency_handle(0)))
+            .unwrap();
+        Stack { engine, metrics, disk: None, next_id: 1 }
+    }
+
+    fn serve(&mut self, sample: &Sample, policy: &str) -> Vec<i32> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let resp = self
+            .engine
+            .handle()
+            .serve(ServeRequest {
+                id,
+                sample: sample.clone(),
+                policy: policy.to_string(),
+                stream: false,
+            })
+            .unwrap();
+        assert!(resp.error.is_none(), "policy {policy}: {:?}", resp.error);
+        assert!(!resp.answer.is_empty(), "policy {policy}: empty answer");
+        resp.answer
+    }
+}
+
+#[test]
+fn f32_codec_is_token_identical_for_all_policies() {
+    let Some(ds) = ready() else { return };
+    let sample = ds.samples[0].clone();
+    let mut plain = Stack::plain();
+    // hot_blocks = 0: the most codec-exposed configuration. The f32
+    // codec keeps every block pooled by design (see
+    // `KvBlockPool::is_encoded`), so this asserts that configuring it
+    // changes nothing at all about the served tokens
+    let mut f32s = Stack::build(None, KvCodecKind::F32, 0);
+    for policy in policy_names() {
+        let base = plain.serve(&sample, &policy);
+        let coded = f32s.serve(&sample, &policy);
+        assert_eq!(coded, base,
+                   "f32 codec must be token-identical ({policy})");
+    }
+}
+
+#[test]
+fn lossy_codecs_serve_all_policies_deterministically() {
+    let Some(ds) = ready() else { return };
+    let sample = ds.samples[0].clone();
+    for (kind, min_ratio) in
+        [(KvCodecKind::F16, 1.9), (KvCodecKind::Int8, 3.5)]
+    {
+        let mut stack = Stack::build(None, kind, 0);
+        let mut first: Vec<Vec<i32>> = Vec::new();
+        for policy in policy_names() {
+            first.push(stack.serve(&sample, &policy));
+        }
+        // second pass over a warm cache: the encoded blocks were
+        // quantized exactly once at admission, so decode-on-assemble
+        // must reproduce the same tokens
+        for (i, policy) in policy_names().iter().enumerate() {
+            let again = stack.serve(&sample, policy);
+            assert_eq!(again, first[i],
+                       "encoded path must be deterministic ({policy})");
+        }
+        // the codec demonstrably engaged, and within its envelope
+        let enc = stack.metrics.codec_blocks_encoded.load(Ordering::Relaxed);
+        let dec = stack.metrics.codec_blocks_decoded.load(Ordering::Relaxed);
+        assert!(enc > 0, "{}: no blocks encoded", kind.name());
+        assert!(dec > 0, "{}: no blocks decoded", kind.name());
+        let ratio = stack.metrics.codec_compression_ratio();
+        assert!(ratio >= min_ratio,
+                "{}: compression ratio {ratio:.2} < {min_ratio}",
+                kind.name());
+        assert!(stack.metrics.report().contains(&format!(
+            "codec({}", kind.name())));
+    }
+}
+
+#[test]
+fn warm_restart_loads_v2_files_into_int8_cache() {
+    let Some(ds) = ready() else { return };
+    let sample = ds.samples[0].clone();
+    let n_unique = sample
+        .docs
+        .iter()
+        .map(|d| doc_hash(d))
+        .collect::<std::collections::HashSet<_>>()
+        .len() as u64;
+    let dir = std::env::temp_dir().join(format!(
+        "samkv-itest-codec-v2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // cold process: lossless stack spills every unique doc to disk
+    let cold_answer = {
+        let mut cold = Stack::build(Some(&dir), KvCodecKind::F32, 0);
+        let answer = cold.serve(&sample, "Reuse");
+        assert_eq!(cold.disk.as_ref().unwrap().stats().spills, n_unique);
+        answer
+        // full stack teardown: only the files remain
+    };
+
+    // downgrade the directory to the legacy v2 format in place
+    let mut rewritten = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|x| x == "kv").unwrap_or(false) {
+            samkv::kvcache::disk::rewrite_file_as_v2(&path).unwrap();
+            let bytes = std::fs::read(&path).unwrap();
+            assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6],
+                                           bytes[7]]),
+                       2, "downgraded file must be version 2");
+            rewritten += 1;
+        }
+    }
+    assert_eq!(rewritten, n_unique, "every spilled file downgraded");
+
+    // "restarted" process with an int8-configured cache: v2 records
+    // are untagged raw f32 and the tiny docs fit inside the default
+    // hot watermark, so the warm answers must be token-identical
+    {
+        let mut warm = Stack::build(
+            Some(&dir), KvCodecKind::Int8,
+            ServingConfig::default().kv_hot_blocks);
+        let answer = warm.serve(&sample, "Reuse");
+        assert_eq!(answer, cold_answer,
+                   "v2 files must load losslessly into an int8 cache");
+        assert_eq!(warm.metrics.doc_prefills.load(Ordering::Relaxed), 0,
+                   "warm restart must serve off disk, not re-prefill");
+        let s = warm.disk.as_ref().unwrap().stats();
+        assert!(s.hits >= n_unique);
+        assert_eq!((s.corrupt, s.corrupt_blocks), (0, 0));
+        assert!(s.bytes_loaded > 0, "restart reads real file bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
