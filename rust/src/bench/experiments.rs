@@ -823,6 +823,326 @@ pub fn throughput(profile: &str, policy: &str, n_requests: usize,
     Ok(v)
 }
 
+// ---------------------------------------------------------------------------
+// Chaos run — self-healing serving under a deterministic fault plan
+// ---------------------------------------------------------------------------
+
+/// One pass of the chaos workload through a real [`crate::server::Server`]
+/// (TCP loopback, JSON-lines, so the self-healing retry/deadline path is
+/// actually exercised): spawn `n_engines` engines over a shared host +
+/// disk cache stack, drive `n_requests` from a small pool of worker
+/// clients, and collect every terminal reply. Returns the metrics
+/// registry, the per-request outcomes `(id, answer, error)` sorted by
+/// id, the wall time, and how many requests never got a terminal reply
+/// (hangs — the failure mode the chaos experiment exists to rule out).
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn chaos_pass(profile: &str, policy: &str,
+              samples: &[crate::workload::Sample], n_requests: usize,
+              n_engines: usize,
+              plan: Option<std::sync::Arc<crate::faultinject::FaultPlan>>,
+              timeout_ms: u64, disk_dir: &std::path::Path)
+              -> Result<(std::sync::Arc<crate::metrics::Metrics>,
+                         Vec<(usize, Option<Vec<i32>>, Option<String>)>,
+                         f64, usize)> {
+    use crate::config::{DiskWriteback, ServingConfig};
+    use crate::coordinator::{Engine, Router};
+    use crate::kvcache::{codec_for, DiskDocCache, HostDocCache};
+    use crate::metrics::Metrics;
+    use crate::server::{Client, Server};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let metrics = Arc::new(Metrics::new());
+    let defaults = ServingConfig::default();
+    // f32 codec: a retried request that lands on a healthy engine must
+    // reproduce the baseline answer token-for-token
+    let codec_arc = codec_for(KvCodecKind::F32);
+    let mut disk = DiskDocCache::open(disk_dir, usize::MAX)?
+        .with_codec(Arc::clone(&codec_arc))
+        .with_breaker(defaults.disk_breaker_threshold,
+                      Duration::from_millis(
+                          defaults.disk_breaker_probe_ms));
+    if let Some(p) = &plan {
+        disk = disk.with_faults(Arc::clone(p));
+    }
+    let host = Arc::new(HostDocCache::unbounded()
+        .with_codec(Arc::clone(&codec_arc), defaults.kv_hot_blocks)
+        .with_disk(Arc::new(disk), DiskWriteback::Through));
+    let router = Arc::new(Router::new(n_engines));
+    let cfg = ServingConfig {
+        profile: profile.to_string(),
+        max_batch: 4,
+        max_active: defaults.max_active.max(4),
+        fault_plan: plan.clone(),
+        request_timeout_ms: timeout_ms,
+        ..defaults
+    };
+    let engines: Vec<Engine> = (0..n_engines)
+        .map(|i| {
+            Engine::spawn(i, artifacts_dir(), cfg.clone(),
+                          policy.to_string(), Arc::clone(&metrics),
+                          Arc::clone(&host),
+                          Some(router.residency_handle(i)))
+        })
+        .collect::<Result<_>>()?;
+    let handles: Vec<_> = engines.iter().map(|e| e.handle()).collect();
+    let server = Server::with_router(handles, Arc::clone(&metrics),
+                                     Arc::clone(&router))
+        .with_resilience(cfg.request_retries, cfg.retry_backoff_ms,
+                         timeout_ms)
+        .with_faults(plan.clone());
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        server.run("127.0.0.1:0", |p| {
+            let _ = port_tx.send(p);
+        })
+    });
+    let port = port_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("chaos server did not bind"))?;
+    let addr = format!("127.0.0.1:{port}");
+
+    // a small pool of synchronous client workers: each drives its slice
+    // of the request ids over its own connection, so n_workers requests
+    // are in flight at once and the router has real load to spread
+    let t0 = std::time::Instant::now();
+    let n_workers = n_engines.clamp(2, 4);
+    let (res_tx, res_rx) = std::sync::mpsc::channel();
+    let mut workers = Vec::new();
+    for w in 0..n_workers {
+        let addr = addr.clone();
+        let res_tx = res_tx.clone();
+        let policy = policy.to_string();
+        let samples = samples.to_vec();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).ok();
+            let mut i = w;
+            while i < n_requests {
+                let s = &samples[i % samples.len()];
+                let out = match client.as_mut() {
+                    Some(c) => c.request(&s.docs, &s.query, &policy),
+                    None => Err(anyhow::anyhow!("no connection")),
+                };
+                match out {
+                    Ok(v) => {
+                        let err = v
+                            .get("error")
+                            .and_then(|e| e.as_str())
+                            .map(|e| e.to_string());
+                        let ans = if err.is_none() {
+                            v.get("answer").and_then(|a| a.i32_vec())
+                        } else {
+                            None
+                        };
+                        let _ = res_tx.send((i, ans, err));
+                    }
+                    Err(e) => {
+                        // connection-level failure is a structured
+                        // outcome too; reconnect for the next id
+                        let _ = res_tx
+                            .send((i, None, Some(format!("{e:#}"))));
+                        client = Client::connect(&addr).ok();
+                    }
+                }
+                i += n_workers;
+            }
+        }));
+    }
+    drop(res_tx);
+    // collector-side watchdog: 60s per outstanding reply is orders of
+    // magnitude beyond a tiny-profile decode — expiring means a client
+    // is wedged in a blocking read with no terminal line coming
+    let mut results: Vec<(usize, Option<Vec<i32>>, Option<String>)> =
+        Vec::with_capacity(n_requests);
+    let mut hangs = 0usize;
+    for _ in 0..n_requests {
+        match res_rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(r) => results.push(r),
+            Err(_) => {
+                hangs = n_requests - results.len();
+                break;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    if hangs == 0 {
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Ok(mut stop) = Client::connect(&addr) {
+            let _ = stop.shutdown();
+        }
+        let _ = server_thread.join();
+        drop(engines);
+    } else {
+        // wedged threads: leave them detached — the caller is about to
+        // fail the run, and joining a hung decode would hang the bench
+        std::mem::forget(engines);
+    }
+    if let Some(p) = &plan {
+        metrics.record_faults(p);
+    }
+    results.sort_by_key(|r| r.0);
+    Ok((metrics, results, wall_s, hangs))
+}
+
+/// Chaos experiment: the throughput workload under a deterministic
+/// fault plan (`--fault-plan` grammar, see [`crate::faultinject`]) —
+/// typically killing one engine's decode thread mid-round and
+/// injecting disk I/O faults under load — served through the
+/// self-healing server path (engine supervision + bounded retries +
+/// request deadlines + disk circuit breaker). Runs a no-fault baseline
+/// pass first, then the chaos pass over the same request sequence, and
+/// errors unless **every** request completed with a terminal reply
+/// (answer or structured error — zero hangs). The persisted row
+/// carries the completion/retry/timeout/engine-down accounting, the
+/// per-site injection counters, the breaker counters, and
+/// `answers_match_baseline` (under the lossless f32 codec, every
+/// answered request must reproduce the baseline tokens).
+pub fn chaos_run(profile: &str, policy: &str, n_requests: usize,
+                 n_unique: usize, n_engines: usize, fault_spec: &str,
+                 timeout_ms: u64) -> Result<Value> {
+    use crate::faultinject::FaultPlan;
+    use std::sync::Arc;
+
+    let n_engines = n_engines.max(2); // self-healing needs a survivor
+    let plan = Arc::new(FaultPlan::parse(fault_spec)?);
+    println!("== Chaos run: profile {profile}, policy {policy}, \
+              {n_requests} requests over {} doc-sets, {n_engines} \
+              engines, plan `{}` (seed {})\n",
+             n_unique.max(1), plan.spec(), plan.seed());
+    let samples = {
+        let model = load_model(profile)?;
+        let mut rng = crate::rng::Rng::new(2026);
+        (0..n_unique.max(1))
+            .map(|_| crate::workload::synthetic_sample(&model.cfg,
+                                                       &mut rng))
+            .collect::<Vec<_>>()
+        // the probe model (and its runtime) drops here, before the
+        // engines spawn their own
+    };
+    let base_dir = std::env::temp_dir()
+        .join(format!("samkv-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base_dir);
+
+    let (_base_metrics, base_results, base_wall, base_hangs) =
+        chaos_pass(profile, policy, &samples, n_requests, n_engines,
+                   None, timeout_ms, &base_dir.join("baseline"))?;
+    let (metrics, results, wall_s, hangs) =
+        chaos_pass(profile, policy, &samples, n_requests, n_engines,
+                   Some(Arc::clone(&plan)), timeout_ms,
+                   &base_dir.join("chaos"))?;
+    let _ = std::fs::remove_dir_all(&base_dir);
+
+    let count_answered = |rs: &[(usize, Option<Vec<i32>>,
+                                 Option<String>)]| {
+        rs.iter().filter(|r| r.1.is_some()).count()
+    };
+    let answered = count_answered(&results);
+    let structured_errors =
+        results.iter().filter(|r| r.2.is_some()).count();
+    let completed = results.len();
+    let completed_pct = 100.0 * completed as f64 / n_requests as f64;
+    let base_answers: std::collections::HashMap<usize, &Vec<i32>> =
+        base_results
+            .iter()
+            .filter_map(|(i, a, _)| a.as_ref().map(|a| (*i, a)))
+            .collect();
+    let matched = results
+        .iter()
+        .filter(|(i, a, _)| match (a, base_answers.get(i)) {
+            (Some(ans), Some(base)) => ans == *base,
+            _ => false,
+        })
+        .count();
+
+    let mut tbl = Table::new(&["pass", "wall s", "completed", "answered",
+                               "errors", "hangs"]);
+    tbl.row(vec![
+        "baseline".to_string(),
+        format!("{base_wall:.1}"),
+        format!("{}", base_results.len()),
+        format!("{}", count_answered(&base_results)),
+        format!("{}", base_results.iter()
+            .filter(|r| r.2.is_some()).count()),
+        format!("{base_hangs}"),
+    ]);
+    tbl.row(vec![
+        "chaos".to_string(),
+        format!("{wall_s:.1}"),
+        format!("{completed}"),
+        format!("{answered}"),
+        format!("{structured_errors}"),
+        format!("{hangs}"),
+    ]);
+    tbl.print();
+    println!("{}", metrics.report());
+    println!("chaos: {completed}/{n_requests} completed \
+              ({answered} answered, {structured_errors} structured \
+              errors, {hangs} hangs), {matched}/{answered} answers \
+              match baseline\n");
+
+    let load = |a: &std::sync::atomic::AtomicU64| {
+        a.load(std::sync::atomic::Ordering::Relaxed) as i64
+    };
+    let v = Value::obj()
+        .set("experiment", "chaos")
+        .set("model", profile)
+        .set("policy", policy)
+        .set("requests", n_requests)
+        .set("unique_docsets", n_unique.max(1))
+        .set("engines", n_engines)
+        .set("fault_plan", plan.spec())
+        .set("fault_seed", plan.seed() as i64)
+        .set("request_timeout_ms", timeout_ms as i64)
+        .set("wall_s", wall_s)
+        .set("baseline_wall_s", base_wall)
+        .set("completed", completed)
+        .set("answered", answered)
+        .set("structured_errors", structured_errors)
+        .set("hangs", hangs)
+        .set("baseline_hangs", base_hangs)
+        .set("completed_pct", completed_pct)
+        .set("answers_matching_baseline", matched)
+        .set("answers_match_baseline",
+             answered > 0 && matched == answered)
+        .set("retries", load(&metrics.retries))
+        .set("retry_successes", load(&metrics.retry_successes))
+        .set("timeouts", load(&metrics.timeouts))
+        .set("engine_down_events", load(&metrics.engine_down_events))
+        .set("engines_down", load(&metrics.engines_down))
+        .set("faults_injected", load(&metrics.faults_injected))
+        .set("faults_disk_read", load(&metrics.faults_disk_read))
+        .set("faults_disk_write", load(&metrics.faults_disk_write))
+        .set("faults_disk_latency", load(&metrics.faults_disk_latency))
+        .set("faults_corrupt_block",
+             load(&metrics.faults_corrupt_block))
+        .set("faults_codec_decode",
+             load(&metrics.faults_codec_decode))
+        .set("faults_doc_prefill", load(&metrics.faults_doc_prefill))
+        .set("faults_engine_kill", load(&metrics.faults_engine_kill))
+        .set("disk_io_errors", load(&metrics.disk_io_errors))
+        .set("disk_breaker_opens", load(&metrics.disk_breaker_opens))
+        .set("disk_breaker_closes", load(&metrics.disk_breaker_closes))
+        .set("disk_breaker_short_circuits",
+             load(&metrics.disk_breaker_short_circuits))
+        .set("disk_quarantine_drops",
+             load(&metrics.disk_quarantine_drops))
+        .set("disk_quarantined_bytes",
+             load(&metrics.disk_quarantined_bytes));
+    save_result(&format!("chaos_{profile}_{policy}"), &v)?;
+    anyhow::ensure!(
+        base_hangs == 0 && hangs == 0,
+        "chaos run hung: {hangs} chaos / {base_hangs} baseline \
+         requests never got a terminal reply"
+    );
+    anyhow::ensure!(
+        completed == n_requests,
+        "chaos run incomplete: {completed}/{n_requests} terminal replies"
+    );
+    Ok(v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

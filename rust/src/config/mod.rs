@@ -286,6 +286,30 @@ pub struct ServingConfig {
     /// at or past the watermark are stored encoded. Ignored under
     /// `F32`. 0 encodes every block.
     pub kv_hot_blocks: usize,
+    /// Seeded fault schedule (`--fault-plan`, see
+    /// [`crate::faultinject::FaultPlan`]); `None` injects nothing.
+    /// Shared across engines and the disk tier so counters are
+    /// process-wide.
+    pub fault_plan: Option<std::sync::Arc<crate::faultinject::FaultPlan>>,
+    /// Per-request deadline in ms (`--request-timeout-ms`), enforced
+    /// at admission (queue wait + plan/prefill), per decode round, and
+    /// as a server-side backstop. 0 disables deadlines.
+    pub request_timeout_ms: u64,
+    /// Server-side resubmissions to a surviving engine after an
+    /// engine-down failure (`--request-retries`); 0 fails fast.
+    pub request_retries: usize,
+    /// Base backoff before a retry (`--retry-backoff-ms`); the actual
+    /// sleep is jittered in [base/2, base) per attempt.
+    pub retry_backoff_ms: u64,
+    /// Disk-tier circuit breaker: this many *consecutive* I/O errors
+    /// open it (`--disk-breaker-threshold`; 0 disables the breaker).
+    /// Open means every lookup short-circuits to a miss and
+    /// writebacks are skipped.
+    pub disk_breaker_threshold: usize,
+    /// How long the breaker stays open before a half-open probe lets
+    /// one disk operation through (`--disk-breaker-probe-ms`);
+    /// probe success re-closes it, failure re-opens.
+    pub disk_breaker_probe_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -305,9 +329,30 @@ impl Default for ServingConfig {
             kv_block_tokens: crate::kvcache::DEFAULT_KV_BLOCK_TOKENS,
             kv_codec: KvCodecKind::F32,
             kv_hot_blocks: DEFAULT_KV_HOT_BLOCKS,
+            fault_plan: None,
+            request_timeout_ms: 0,
+            request_retries: DEFAULT_REQUEST_RETRIES,
+            retry_backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
+            disk_breaker_threshold: DEFAULT_DISK_BREAKER_THRESHOLD,
+            disk_breaker_probe_ms: DEFAULT_DISK_BREAKER_PROBE_MS,
         }
     }
 }
+
+/// Default `--request-retries`: one resubmission to a surviving
+/// engine after an engine-down failure.
+pub const DEFAULT_REQUEST_RETRIES: usize = 2;
+
+/// Default `--retry-backoff-ms` base for jittered retry backoff.
+pub const DEFAULT_RETRY_BACKOFF_MS: u64 = 10;
+
+/// Default `--disk-breaker-threshold`: consecutive disk I/O errors
+/// before the breaker opens.
+pub const DEFAULT_DISK_BREAKER_THRESHOLD: usize = 5;
+
+/// Default `--disk-breaker-probe-ms`: open-state dwell before one
+/// half-open probe is admitted.
+pub const DEFAULT_DISK_BREAKER_PROBE_MS: u64 = 500;
 
 /// Default `--kv-hot-blocks`: how many leading blocks of a document
 /// stay at full f32 precision under a lossy codec.
@@ -415,6 +460,24 @@ mod tests {
         assert_eq!(c.kv_codec, KvCodecKind::F32,
                    "lossless must stay the default");
         assert_eq!(c.kv_hot_blocks, DEFAULT_KV_HOT_BLOCKS);
+    }
+
+    #[test]
+    fn resilience_defaults() {
+        let c = ServingConfig::default();
+        assert!(c.fault_plan.is_none(), "no faults unless asked");
+        assert_eq!(c.request_timeout_ms, 0, "deadlines default off");
+        assert_eq!(c.request_retries, DEFAULT_REQUEST_RETRIES);
+        assert_eq!(c.retry_backoff_ms, DEFAULT_RETRY_BACKOFF_MS);
+        assert_eq!(c.disk_breaker_threshold,
+                   DEFAULT_DISK_BREAKER_THRESHOLD);
+        assert!(c.disk_breaker_threshold > 1,
+                "one transient error must not open the breaker");
+        assert_eq!(c.disk_breaker_probe_ms,
+                   DEFAULT_DISK_BREAKER_PROBE_MS);
+        // the config (and its fault plan) must stay debuggable
+        let d = format!("{c:?}");
+        assert!(d.contains("fault_plan: None"), "{d}");
     }
 
     #[test]

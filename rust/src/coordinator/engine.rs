@@ -70,6 +70,7 @@ use anyhow::Result;
 
 use crate::config::ServingConfig;
 use crate::exec::Gate;
+use crate::faultinject::FaultSite;
 use crate::kvcache::{
     EngineDocCache, HostDocCache, ResidencyHandle, TierHit,
 };
@@ -95,9 +96,18 @@ enum Msg {
 pub struct EngineHandle {
     tx: mpsc::Sender<Msg>,
     pub index: usize,
+    alive: Arc<AtomicBool>,
 }
 
 impl EngineHandle {
+    /// False once the engine's decode thread has exited — crash,
+    /// panic unwind, or an injected `engine_kill` fault. The server
+    /// checks this before placing a request so a known-dead engine is
+    /// skipped without paying a failed submit.
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
     /// Fire a request; events (streamed tokens, then the terminal
     /// response) arrive on the returned receiver.
     pub fn submit(&self, req: ServeRequest)
@@ -120,6 +130,7 @@ pub struct Engine {
     /// `Some` while the engine runs; taken on drop to close the queue.
     tx: Option<mpsc::Sender<Msg>>,
     index: usize,
+    alive: Arc<AtomicBool>,
     join: Option<thread::JoinHandle<()>>,
 }
 
@@ -146,22 +157,27 @@ impl Engine {
                  residency: Option<ResidencyHandle>) -> Result<Engine> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        // liveness flag shared with every handle: flipped false when
+        // the decode thread exits for any reason (see `AliveGuard`)
+        let alive = Arc::new(AtomicBool::new(true));
+        let decode_alive = Arc::clone(&alive);
         let join = thread::Builder::new()
             .name(format!("engine-{index}"))
             .spawn(move || {
                 engine_main(index, artifacts, cfg, default_policy, metrics,
-                            host, residency, rx, ready_tx);
+                            host, residency, rx, ready_tx, decode_alive);
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine init crashed"))??;
-        Ok(Engine { tx: Some(tx), index, join: Some(join) })
+        Ok(Engine { tx: Some(tx), index, alive, join: Some(join) })
     }
 
     pub fn handle(&self) -> EngineHandle {
         EngineHandle {
             tx: self.tx.clone().expect("engine running"),
             index: self.index,
+            alive: Arc::clone(&self.alive),
         }
     }
 }
@@ -186,6 +202,10 @@ struct Active {
     id: u64,
     stream: bool,
     reply: mpsc::Sender<ServeEvent>,
+    /// `submit + --request-timeout-ms` when a deadline is configured;
+    /// the decode loop retires the session with a structured timeout
+    /// error once it passes.
+    deadline: Option<Instant>,
     session: ServeSession<'static, dyn ContextPolicy>,
 }
 
@@ -204,7 +224,19 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                host: Arc<HostDocCache>,
                residency: Option<ResidencyHandle>,
                rx: mpsc::Receiver<Msg>,
-               ready_tx: mpsc::Sender<Result<()>>) {
+               ready_tx: mpsc::Sender<Result<()>>,
+               decode_alive: Arc<AtomicBool>) {
+    // flips `decode_alive` when this thread exits — including a panic
+    // unwind — so the admission helper's slot wait can never outlive
+    // the decode thread that would have freed the slots, and the
+    // server's `is_alive` pre-check sees the death promptly
+    struct AliveGuard(Arc<AtomicBool>);
+    impl Drop for AliveGuard {
+        fn drop(&mut self) {
+            self.0.store(false, Ordering::Relaxed);
+        }
+    }
+    let _alive = AliveGuard(Arc::clone(&decode_alive));
     // --- decode-side init: runtime + model, decode entries only -------
     let init = (|| -> Result<Model> {
         let rt = std::rc::Rc::new(Runtime::new(artifacts.clone())?);
@@ -228,7 +260,9 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
     // --- admission helper: own runtime/model + the residency tier -----
     let gate = Arc::new(Gate::new(cfg.max_active.max(1)));
     let decoding = Arc::new(AtomicUsize::new(0));
-    let decode_alive = Arc::new(AtomicBool::new(true));
+    // the decode loop keeps its own handle on the fault plan (cfg
+    // itself moves into the admission thread)
+    let faults = cfg.fault_plan.clone();
     let (adm_tx, adm_rx) = mpsc::channel::<AdmittedWave>();
     let (adm_ready_tx, adm_ready_rx) = mpsc::channel::<Result<()>>();
     let admission = {
@@ -238,9 +272,10 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
         thread::Builder::new()
             .name(format!("admit-{index}"))
             .spawn(move || {
-                admission_main(artifacts, cfg, default_policy, metrics,
-                               host, residency, rx, adm_tx, gate,
-                               decoding, decode_alive, adm_ready_tx);
+                admission_main(index, artifacts, cfg, default_policy,
+                               metrics, host, residency, rx, adm_tx,
+                               gate, decoding, decode_alive,
+                               adm_ready_tx);
             })
     };
     let admission = match admission {
@@ -250,16 +285,6 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
             return;
         }
     };
-    // flips `decode_alive` when this thread exits — including a panic
-    // unwind — so admission's slot wait can never outlive the decode
-    // thread that would have freed the slots
-    struct AliveGuard(Arc<AtomicBool>);
-    impl Drop for AliveGuard {
-        fn drop(&mut self) {
-            self.0.store(false, Ordering::Relaxed);
-        }
-    }
-    let _alive = AliveGuard(Arc::clone(&decode_alive));
     match adm_ready_rx.recv() {
         Ok(Ok(())) => {}
         Ok(Err(e)) => {
@@ -282,6 +307,28 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
     let mut active: Vec<Active> = Vec::new();
     let mut cache_bytes = 0usize;
     loop {
+        // injected decode-thread death (chaos testing): fail the pool's
+        // in-flight sessions with a structured error — the server marks
+        // this engine down and retries them elsewhere — then exit; the
+        // `AliveGuard` flips `decode_alive` so the admission helper and
+        // the `is_alive` pre-check both see the death
+        if faults.as_ref().is_some_and(
+            |f| f.should_for(FaultSite::EngineKill, index))
+        {
+            crate::warn!("engine-{index}: injected decode-thread death \
+                          ({} in-flight sessions failed)",
+                         active.len());
+            for a in active.drain(..) {
+                metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = a.reply.send(ServeEvent::Done(error_response(
+                    a.id,
+                    "engine decode thread died mid-round".to_string(),
+                )));
+            }
+            decoding.store(0, Ordering::Relaxed);
+            return;
+        }
         if active.is_empty() {
             // idle: block for admitted work (or exit once the
             // admission thread has shut down and the channel drained)
@@ -317,7 +364,7 @@ fn engine_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
 /// → attend on its own model (overlapping the decode thread's rounds),
 /// and hand the survivors over. Exits when the request queue closes.
 #[allow(clippy::too_many_arguments)]
-fn admission_main(artifacts: PathBuf, cfg: ServingConfig,
+fn admission_main(index: usize, artifacts: PathBuf, cfg: ServingConfig,
                   default_policy: String, metrics: Arc<Metrics>,
                   host: Arc<HostDocCache>,
                   residency: Option<ResidencyHandle>,
@@ -388,7 +435,8 @@ fn admission_main(artifacts: PathBuf, cfg: ServingConfig,
         gate.take(wave.len());
         let t = Instant::now();
         let busy_before = decoding.load(Ordering::Relaxed) > 0;
-        let (ready, rejected) = admit_wave(&model, &mut store, policies,
+        let (ready, rejected) = admit_wave(index, &cfg, &model,
+                                           &mut store, policies,
                                            &default_policy, &metrics,
                                            wave);
         if rejected > 0 {
@@ -469,15 +517,19 @@ fn error_response(id: u64, msg: String) -> ServeResponse {
 /// prefill/assemble/attend. Requests that fail any stage are answered
 /// with an error immediately; survivors are returned for the decode
 /// pool (appended at the back — round-robin order is arrival order).
-/// Returns `(survivors, rejected_count)`.
-fn admit_wave(model: &Model, store: &mut EngineDocCache,
+/// Requests whose `--request-timeout-ms` deadline already passed while
+/// queued are failed with a structured timeout error before any model
+/// work is spent on them. Returns `(survivors, rejected_count)`.
+#[allow(clippy::too_many_arguments)]
+fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
+              store: &mut EngineDocCache,
               policies: &'static HashMap<String, Box<dyn ContextPolicy>>,
               default_policy: &str, metrics: &Metrics, wave: Vec<Msg>)
               -> (Vec<Active>, usize) {
     // --- stage 1: plan every request (pure, model-free) ---------------
     let n = wave.len();
-    let mut items: Vec<(u64, bool, mpsc::Sender<ServeEvent>)> =
-        Vec::with_capacity(n);
+    let mut items: Vec<(u64, bool, mpsc::Sender<ServeEvent>,
+                        Option<Instant>)> = Vec::with_capacity(n);
     let mut sessions: Vec<Option<ServeSession<'static, dyn ContextPolicy>>> =
         Vec::with_capacity(n);
     for msg in wave {
@@ -486,6 +538,21 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
         metrics.requests.fetch_add(1, Ordering::Relaxed);
         let queue_wait_ms = submitted.elapsed().as_secs_f64() * 1e3;
         metrics.queue_wait.observe_ms(queue_wait_ms);
+        let deadline = (cfg.request_timeout_ms > 0).then(|| {
+            submitted + Duration::from_millis(cfg.request_timeout_ms)
+        });
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(ServeEvent::Done(error_response(
+                id,
+                format!("request timed out after {}ms (queued)",
+                        cfg.request_timeout_ms),
+            )));
+            sessions.push(None);
+            items.push((id, stream, reply, deadline));
+            continue;
+        }
         let pname = if policy.is_empty() {
             default_policy
         } else {
@@ -505,7 +572,7 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
                 sessions.push(None);
             }
         }
-        items.push((id, stream, reply));
+        items.push((id, stream, reply, deadline));
     }
 
     // --- stage 2: cross-request doc-prefill dedup ----------------------
@@ -553,10 +620,21 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
             continue;
         }
         let t = Instant::now();
-        let hit = {
-            let tokens = shared_doc_tokens(&sessions, sd)
-                .expect("live sharer plans the doc");
-            store.get_or_prefill(model, tokens)
+        let hit = match shared_doc_tokens(&sessions, sd) {
+            // the live-sharer invariant should hold (live sharers were
+            // filtered above and plans mirror doc order), but a
+            // violation must fail this doc's requests — not panic the
+            // admission thread and strand every queued client
+            None => Err(anyhow::anyhow!(
+                "shared doc {:016x} has no live sharer plan", sd.hash)),
+            Some(_)
+                if cfg.fault_plan.as_ref().is_some_and(|f| {
+                    f.should_for(FaultSite::DocPrefill, index)
+                }) =>
+            {
+                Err(anyhow::anyhow!("injected doc-prefill fault"))
+            }
+            Some(tokens) => store.get_or_prefill(model, tokens),
         };
         match hit {
             // already resident: free
@@ -583,7 +661,7 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
                 for &si in &live {
                     sessions[si] = None;
                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let (id, _, reply) = &items[si];
+                    let (id, _, reply, _) = &items[si];
                     let _ = reply.send(ServeEvent::Done(error_response(
                         *id, format!("doc prefill failed: {e:#}"))));
                 }
@@ -612,7 +690,7 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
         })();
         if let Err(e) = staged {
             metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let (id, _, reply) = &items[i];
+            let (id, _, reply, _) = &items[i];
             let _ = reply.send(ServeEvent::Done(error_response(
                 *id, format!("{e:#}"))));
             sessions[i] = None;
@@ -633,13 +711,18 @@ fn admit_wave(model: &Model, store: &mut EngineDocCache,
     let codec = store.host().pool().codec();
     metrics.record_codec(&codec.stats().snapshot(codec.name()),
                          &codec.stats().take_decode_samples());
+    if let Some(plan) = cfg.fault_plan.as_deref() {
+        metrics.record_faults(plan);
+    }
 
     // --- survivors go to the decode pool -------------------------------
     let mut ready = Vec::with_capacity(sessions.len());
-    for ((id, stream, reply), s) in items.into_iter().zip(sessions) {
+    for ((id, stream, reply, deadline), s) in
+        items.into_iter().zip(sessions)
+    {
         if let Some(session) = s {
             metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
-            ready.push(Active { id, stream, reply, session });
+            ready.push(Active { id, stream, reply, deadline, session });
         }
     }
     let rejected = n - ready.len();
@@ -661,7 +744,16 @@ fn decode_round(model: &Model, cache_bytes: usize, metrics: &Metrics,
     let mut finished: Vec<usize> = Vec::new();
     let mut dead: Vec<(usize, String)> = Vec::new();
     for i in 0..active.len() {
-        let Active { id, stream, reply, session } = &mut active[i];
+        let Active { id, stream, reply, deadline, session } =
+            &mut active[i];
+        // deadline sweep: a session past its `--request-timeout-ms`
+        // deadline is retired with a structured timeout error instead
+        // of decoding (and billing the client) forever
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            dead.push((i, "request timed out during decode".to_string()));
+            continue;
+        }
         let (id, stream) = (*id, *stream);
         let index = session.answer().len();
         let mut sink = FnSink(|token: i32| {

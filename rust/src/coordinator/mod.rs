@@ -13,6 +13,40 @@
 //! tokens, and each round's forward passes are packed into the
 //! lane-padded batched decode artifacts — one XLA execution per
 //! same-buffer chunk — see [`engine`] for the lifecycle.
+//!
+//! # Fault-tolerance contract
+//!
+//! The control plane is supervised; an engine death is an event, not
+//! an outage:
+//!
+//! * **Liveness is observable.** Each engine exposes
+//!   [`engine::EngineHandle::is_alive`], flipped false the instant its
+//!   decode thread exits for any reason — crash, panic unwind, or an
+//!   injected [`crate::faultinject::FaultSite::EngineKill`]. The
+//!   admission helper watches the same flag so it can never wedge on a
+//!   decode pool that will not drain.
+//! * **Death produces terminal replies, never silence.** A dying
+//!   decode thread fails its in-flight sessions with structured
+//!   `"engine decode thread died mid-round"` errors; the admission
+//!   helper answers any wave it cannot hand over. Every submitted
+//!   request reaches a terminal event or a closed channel — no path
+//!   leaves a client waiting forever.
+//! * **The router learns.** [`router::Router::mark_down`] takes a dead
+//!   engine out of every placement stage and clears its residency
+//!   advertisements; [`router::Router::mark_up`] restores it. With
+//!   every engine down, placement falls back to all so requests fail
+//!   with structured errors rather than panicking.
+//! * **The server retries.** The TCP front end resubmits delivery
+//!   failures (and only those — never after a token was streamed) to
+//!   surviving engines with jittered exponential backoff, under the
+//!   per-request `--request-timeout-ms` deadline, which is enforced
+//!   across queue wait, admission, and every decode round. See
+//!   [`crate::server`].
+//!
+//! All of it is exercised deterministically by `--fault-plan`
+//! ([`crate::faultinject`]) and observable through
+//! [`crate::metrics::Metrics`] (`retries`, `retry_successes`,
+//! `timeouts`, `engine_down_events`, `engines_down`).
 
 pub mod batcher;
 pub mod engine;

@@ -13,8 +13,16 @@
 //!
 //! A bad placement is never incorrect — the shared host tier still
 //! dedups prefill work across engines — it just costs residency churn.
+//!
+//! **Engine supervision:** the router also carries a per-engine down
+//! state ([`Router::mark_down`], fed by the engine's `decode_alive`
+//! flag via the server). A down engine is excluded from every
+//! placement stage and its residency advertisements are cleared, so
+//! retried requests land on survivors; if *every* engine is down the
+//! filter falls back to all engines (the submit path then surfaces the
+//! failure as a structured error instead of a panic here).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::kvcache::store::doc_hash;
@@ -26,6 +34,8 @@ pub struct Router {
     /// Allowed load gap before a preference is overridden.
     pub imbalance_limit: u64,
     board: Arc<ResidencyBoard>,
+    /// Engines whose decode thread is known dead (placement excluded).
+    down: Vec<AtomicBool>,
 }
 
 impl Router {
@@ -35,7 +45,36 @@ impl Router {
             in_flight: (0..n_engines).map(|_| AtomicU64::new(0)).collect(),
             imbalance_limit: 8,
             board: Arc::new(ResidencyBoard::new(n_engines)),
+            down: (0..n_engines).map(|_| AtomicBool::new(false)).collect(),
         }
+    }
+
+    /// Mark `engine` down: it stops receiving placements and its
+    /// residency advertisements are cleared. Returns `true` the first
+    /// time (callers use this to count the down transition once).
+    pub fn mark_down(&self, engine: usize) -> bool {
+        let newly = !self.down[engine].swap(true, Ordering::Relaxed);
+        if newly {
+            self.board.clear_engine(engine);
+        }
+        newly
+    }
+
+    /// Re-admit `engine` to placement (a restarted/replaced engine).
+    pub fn mark_up(&self, engine: usize) {
+        self.down[engine].store(false, Ordering::Relaxed);
+    }
+
+    pub fn is_down(&self, engine: usize) -> bool {
+        self.down[engine].load(Ordering::Relaxed)
+    }
+
+    /// Number of engines currently marked down.
+    pub fn n_down(&self) -> usize {
+        self.down
+            .iter()
+            .filter(|d| d.load(Ordering::Relaxed))
+            .count()
     }
 
     pub fn n_engines(&self) -> usize {
@@ -75,9 +114,22 @@ impl Router {
             .iter()
             .map(|l| l.load(Ordering::Relaxed))
             .collect();
-        let min = *loads.iter().min().unwrap();
+        // down engines are excluded from every stage; with all engines
+        // down, fall back to all (submit then fails with a structured
+        // error rather than pick panicking on an empty candidate set)
+        let mut up: Vec<bool> = (0..n).map(|e| !self.is_down(e)).collect();
+        if !up.iter().any(|&u| u) {
+            up = vec![true; n];
+        }
+        let min = loads
+            .iter()
+            .zip(&up)
+            .filter(|&(_, &u)| u)
+            .map(|(&l, _)| l)
+            .min()
+            .unwrap();
         let not_overloaded =
-            |e: usize| loads[e] <= min + self.imbalance_limit;
+            |e: usize| up[e] && loads[e] <= min + self.imbalance_limit;
 
         // 1) cache-aware: most planned docs already resident wins
         // (ties: lighter load, then lower index — deterministic)
@@ -101,7 +153,8 @@ impl Router {
                     loads
                         .iter()
                         .enumerate()
-                        .min_by_key(|(_, &l)| l)
+                        .filter(|&(e, _)| up[e])
+                        .min_by_key(|&(_, &l)| l)
                         .map(|(i, _)| i)
                         .unwrap()
                 }
@@ -244,6 +297,61 @@ mod tests {
         assert_eq!(r.loads().iter().sum::<u64>(), 1);
         r.done(e);
         assert_eq!(r.loads().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn down_engine_never_picked() {
+        let r = Router::new(2);
+        let s = sample(42);
+        // make engine-under-test deterministic: mark down whatever the
+        // sample would otherwise prefer
+        let preferred = r.pick(&s);
+        r.done(preferred);
+        assert!(r.mark_down(preferred), "first mark_down reports newly");
+        assert!(!r.mark_down(preferred), "second is idempotent");
+        assert!(r.is_down(preferred));
+        assert_eq!(r.n_down(), 1);
+        for _ in 0..8 {
+            let e = r.pick(&s);
+            assert_ne!(e, preferred, "down engine must not be placed");
+            r.done(e);
+        }
+        r.mark_up(preferred);
+        assert_eq!(r.n_down(), 0);
+        assert_eq!(r.pick(&s), preferred, "mark_up restores affinity");
+        r.done(preferred);
+    }
+
+    #[test]
+    fn mark_down_clears_residency_and_overload_yields_to_survivor() {
+        let r = Router::new(2);
+        let s = sample(9);
+        let dead = r.pick(&s);
+        r.done(dead);
+        // dead engine advertises residency AND the survivor is far
+        // over the imbalance limit — down-ness must still win
+        let h = r.residency_handle(dead);
+        for d in &s.docs {
+            h.insert(doc_hash(d));
+        }
+        r.in_flight[1 - dead]
+            .fetch_add(r.imbalance_limit + 5, Ordering::Relaxed);
+        r.mark_down(dead);
+        assert_eq!(r.board().resident_count(dead, &[doc_hash(&s.docs[0])]),
+                   0, "mark_down must clear the dead engine's board");
+        assert_eq!(r.pick(&s), 1 - dead);
+        r.done(1 - dead);
+    }
+
+    #[test]
+    fn all_down_falls_back_to_all_engines() {
+        let r = Router::new(2);
+        r.mark_down(0);
+        r.mark_down(1);
+        let s = sample(3);
+        let e = r.pick(&s); // must not panic; any engine is acceptable
+        assert!(e < 2);
+        r.done(e);
     }
 
     #[test]

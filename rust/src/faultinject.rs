@@ -1,0 +1,425 @@
+//! Seeded, deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (`--fault-plan`)
+//! and threaded through [`crate::config::ServingConfig`] into every
+//! layer that can fail in production: the disk tier (I/O errors, added
+//! latency, payload corruption, codec decode failure), the admission
+//! pipeline (doc-prefill failure), and the decode loop (engine
+//! thread death mid-round). Each injection point calls
+//! [`FaultPlan::should`] / [`FaultPlan::should_for`] with its
+//! [`FaultSite`]; the plan decides deterministically — same spec, same
+//! seed, same call sequence ⇒ same faults — so chaos runs are
+//! reproducible and CI can assert exact self-healing behavior.
+//!
+//! Spec grammar (semicolon-separated clauses):
+//!
+//! ```text
+//! seed=7;engine_kill:engine=0:after=3;disk_read:after=1:every=2;
+//! disk_latency:ms=5:every=3;corrupt_block:count=2
+//! ```
+//!
+//! Each non-`seed` clause names a site followed by `key=value` options:
+//!
+//! | key      | meaning                                               |
+//! |----------|-------------------------------------------------------|
+//! | `after`  | skip the first N trials at this site (default 0)      |
+//! | `every`  | then inject on every Nth eligible trial (default: all)|
+//! | `prob`   | instead of `every`: inject with probability p (seeded)|
+//! | `count`  | stop after N injections (default 0 = unlimited)       |
+//! | `ms`     | latency to add, for `disk_latency` (default 1)        |
+//! | `engine` | only fire for this engine index (`engine_kill`)       |
+//!
+//! With neither `every` nor `prob`, every trial past `after` injects
+//! (up to `count`) — the fully deterministic default.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Rng;
+
+/// Named injection points. Every fault the plan can produce is pulled
+/// at one of these sites by the owning subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Disk-tier read: `fs::read` returns an injected I/O error
+    /// (counts toward the circuit breaker like a real error).
+    DiskRead,
+    /// Disk-tier write: spill/writeback fails with an injected I/O
+    /// error (also breaker-visible).
+    DiskWrite,
+    /// Disk-tier latency: sleep `ms` before the read proceeds.
+    DiskLatency,
+    /// Flip a byte inside an encoded block payload before it is
+    /// written, so the per-block checksum catches it on read-back.
+    CorruptBlock,
+    /// Codec decode failure on disk read-back: the record's blocks
+    /// decode as corrupt (dropped alone, entry kept incomplete).
+    CodecDecode,
+    /// Shared doc prefill fails for one admission wave.
+    DocPrefill,
+    /// The engine's decode thread dies mid-round (exits its loop,
+    /// dropping every in-flight session).
+    EngineKill,
+}
+
+/// Number of distinct [`FaultSite`]s (array-table size).
+pub const N_SITES: usize = 7;
+
+impl FaultSite {
+    /// All sites, in stable counter order.
+    pub const ALL: [FaultSite; N_SITES] = [
+        FaultSite::DiskRead,
+        FaultSite::DiskWrite,
+        FaultSite::DiskLatency,
+        FaultSite::CorruptBlock,
+        FaultSite::CodecDecode,
+        FaultSite::DocPrefill,
+        FaultSite::EngineKill,
+    ];
+
+    /// Stable spec/metrics name of this site.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::DiskRead => "disk_read",
+            FaultSite::DiskWrite => "disk_write",
+            FaultSite::DiskLatency => "disk_latency",
+            FaultSite::CorruptBlock => "corrupt_block",
+            FaultSite::CodecDecode => "codec_decode",
+            FaultSite::DocPrefill => "doc_prefill",
+            FaultSite::EngineKill => "engine_kill",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&s| s == self).unwrap()
+    }
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|site| site.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> =
+                    Self::ALL.iter().map(|s| s.name()).collect();
+                anyhow::anyhow!("unknown fault site `{s}` (expected one \
+                                 of {})", names.join("|"))
+            })
+    }
+}
+
+/// One site's injection rule (see the module-level spec grammar).
+#[derive(Debug, Clone, PartialEq)]
+struct Rule {
+    /// Skip the first `after` trials.
+    after: u64,
+    /// Inject on every Nth eligible trial; 0 = use `prob` instead.
+    every: u64,
+    /// Injection probability when `every` is 0 (default 1.0).
+    prob: f32,
+    /// Stop after this many injections; 0 = unlimited.
+    count: u64,
+    /// Added latency in ms (only meaningful for `DiskLatency`).
+    ms: u64,
+    /// Only fire when the caller passes this engine index.
+    engine: Option<usize>,
+}
+
+impl Default for Rule {
+    fn default() -> Self {
+        Rule { after: 0, every: 0, prob: 1.0, count: 0, ms: 1, engine: None }
+    }
+}
+
+/// Mutable per-site trial state, behind one mutex per site.
+struct SiteState {
+    trials: u64,
+    injected: u64,
+    rng: Rng,
+}
+
+/// A parsed, seeded fault schedule. Shared (`Arc`) between the server,
+/// every engine, and the disk tier; all counters are process-wide.
+pub struct FaultPlan {
+    spec: String,
+    seed: u64,
+    rules: [Option<Rule>; N_SITES],
+    state: [Mutex<SiteState>; N_SITES],
+    /// Lock-free injection counters mirroring `state[i].injected`,
+    /// readable without contending the trial path.
+    injected: [AtomicU64; N_SITES],
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut rules: [Option<Rule>; N_SITES] = Default::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                seed = v
+                    .parse()
+                    .with_context(|| format!("bad seed `{v}`"))?;
+                continue;
+            }
+            let mut parts = clause.split(':');
+            let site = FaultSite::parse(parts.next().unwrap_or(""))?;
+            let mut rule = Rule::default();
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("bad fault option `{kv}` in \
+                                     `{clause}` (expected key=value)")
+                })?;
+                let bad =
+                    || format!("bad value `{v}` for `{k}` in `{clause}`");
+                match k {
+                    "after" => rule.after = v.parse().with_context(bad)?,
+                    "every" => rule.every = v.parse().with_context(bad)?,
+                    "prob" => rule.prob = v.parse().with_context(bad)?,
+                    "count" => rule.count = v.parse().with_context(bad)?,
+                    "ms" => rule.ms = v.parse().with_context(bad)?,
+                    "engine" => {
+                        rule.engine = Some(v.parse().with_context(bad)?)
+                    }
+                    other => bail!("unknown fault option `{other}` in \
+                                    `{clause}`"),
+                }
+            }
+            if rules[site.index()].is_some() {
+                bail!("duplicate clause for fault site `{}`", site.name());
+            }
+            rules[site.index()] = Some(rule);
+        }
+        let state = std::array::from_fn(|i| {
+            Mutex::new(SiteState {
+                trials: 0,
+                injected: 0,
+                rng: Rng::new(seed ^ (0x5117_u64 << 16) ^ i as u64),
+            })
+        });
+        Ok(FaultPlan {
+            spec: spec.to_string(),
+            seed,
+            rules,
+            state,
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    /// The spec string this plan was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The plan's RNG seed (`seed=` clause; 0 if absent).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True if the plan has a rule for `site` at all (cheap pre-check
+    /// for callers that would otherwise prepare injection inputs).
+    pub fn arms(&self, site: FaultSite) -> bool {
+        self.rules[site.index()].is_some()
+    }
+
+    /// Record one trial at `site` and decide whether to inject.
+    pub fn should(&self, site: FaultSite) -> bool {
+        self.decide(site, None)
+    }
+
+    /// Like [`FaultPlan::should`], for sites scoped to one engine: a
+    /// rule carrying `engine=N` only fires when `engine == N`.
+    pub fn should_for(&self, site: FaultSite, engine: usize) -> bool {
+        self.decide(site, Some(engine))
+    }
+
+    /// Latency-site trial: `Some(ms)` when a sleep should be injected.
+    pub fn latency_ms(&self, site: FaultSite) -> Option<u64> {
+        if self.should(site) {
+            self.rules[site.index()].as_ref().map(|r| r.ms)
+        } else {
+            None
+        }
+    }
+
+    fn decide(&self, site: FaultSite, engine: Option<usize>) -> bool {
+        let i = site.index();
+        let Some(rule) = &self.rules[i] else {
+            return false;
+        };
+        if let Some(want) = rule.engine {
+            if engine != Some(want) {
+                return false;
+            }
+        }
+        let mut st = self.state[i].lock().unwrap();
+        if rule.count > 0 && st.injected >= rule.count {
+            return false;
+        }
+        st.trials += 1;
+        if st.trials <= rule.after {
+            return false;
+        }
+        let eligible = st.trials - rule.after;
+        let fire = if rule.every > 0 {
+            eligible % rule.every == 0
+        } else if rule.prob < 1.0 {
+            st.rng.next_f32() < rule.prob
+        } else {
+            true
+        };
+        if fire {
+            st.injected += 1;
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Injections fired so far at one site.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total injections fired across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.injected
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// `(site name, injections)` for every site, in stable order —
+    /// the metrics/bench folding source.
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        FaultSite::ALL
+            .iter()
+            .map(|&s| (s.name(), self.injected(s)))
+            .collect()
+    }
+}
+
+// Manual impl: `ServingConfig` (which holds `Option<Arc<FaultPlan>>`)
+// derives Debug, and the mutex/atomic state tables have no useful
+// debug form — the spec string is the whole identity.
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("spec", &self.spec)
+            .field("seed", &self.seed)
+            .field("total_injected", &self.total_injected())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_fire_after_every_count() {
+        let p =
+            FaultPlan::parse("seed=7;disk_read:after=2:every=2:count=2")
+                .unwrap();
+        assert_eq!(p.seed(), 7);
+        assert!(p.arms(FaultSite::DiskRead));
+        assert!(!p.arms(FaultSite::DiskWrite));
+        // trials 1,2 skipped (after=2); then every 2nd eligible trial
+        // fires: trial 4 (eligible 2), trial 6 (eligible 4); count=2
+        // stops it there.
+        let fired: Vec<bool> =
+            (0..8).map(|_| p.should(FaultSite::DiskRead)).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, false, true, false, true, false, false]
+        );
+        assert_eq!(p.injected(FaultSite::DiskRead), 2);
+        assert_eq!(p.total_injected(), 2);
+    }
+
+    #[test]
+    fn deterministic_default_fires_every_trial_past_after() {
+        let p = FaultPlan::parse("engine_kill:after=1").unwrap();
+        assert!(!p.should(FaultSite::EngineKill));
+        assert!(p.should(FaultSite::EngineKill));
+        assert!(p.should(FaultSite::EngineKill));
+    }
+
+    #[test]
+    fn engine_scoping() {
+        let p = FaultPlan::parse("engine_kill:engine=1").unwrap();
+        // wrong engine (and the engine-less form) never fire, and do
+        // not consume trials
+        assert!(!p.should_for(FaultSite::EngineKill, 0));
+        assert!(!p.should(FaultSite::EngineKill));
+        assert!(p.should_for(FaultSite::EngineKill, 1));
+        assert_eq!(p.injected(FaultSite::EngineKill), 1);
+    }
+
+    #[test]
+    fn prob_is_seeded_and_reproducible() {
+        let fire = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::parse(&format!(
+                "seed={seed};disk_write:prob=0.5"
+            ))
+            .unwrap();
+            (0..64).map(|_| p.should(FaultSite::DiskWrite)).collect()
+        };
+        assert_eq!(fire(3), fire(3), "same seed must reproduce");
+        assert_ne!(fire(3), fire(4), "different seeds must differ");
+        let n = fire(3).iter().filter(|&&b| b).count();
+        assert!(n > 8 && n < 56, "prob=0.5 should fire ~half: {n}");
+    }
+
+    #[test]
+    fn latency_site_returns_ms() {
+        let p =
+            FaultPlan::parse("disk_latency:ms=5:every=2").unwrap();
+        assert_eq!(p.latency_ms(FaultSite::DiskLatency), None);
+        assert_eq!(p.latency_ms(FaultSite::DiskLatency), Some(5));
+        assert_eq!(p.latency_ms(FaultSite::DiskLatency), None);
+    }
+
+    #[test]
+    fn counts_cover_all_sites_in_stable_order() {
+        let p = FaultPlan::parse("corrupt_block").unwrap();
+        assert!(p.should(FaultSite::CorruptBlock));
+        let names: Vec<&str> =
+            p.counts().iter().map(|&(n, _)| n).collect();
+        assert_eq!(
+            names,
+            vec!["disk_read", "disk_write", "disk_latency",
+                 "corrupt_block", "codec_decode", "doc_prefill",
+                 "engine_kill"]
+        );
+        assert_eq!(p.counts()[3], ("corrupt_block", 1));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("bogus_site").is_err());
+        assert!(FaultPlan::parse("disk_read:after").is_err());
+        assert!(FaultPlan::parse("disk_read:volume=11").is_err());
+        assert!(FaultPlan::parse("seed=x").is_err());
+        assert!(FaultPlan::parse("disk_read;disk_read:after=1").is_err(),
+                "duplicate site clauses must be rejected");
+        // empty clauses (trailing semicolons) are fine
+        assert!(FaultPlan::parse("").unwrap().counts().iter()
+                    .all(|&(_, n)| n == 0));
+        assert!(FaultPlan::parse("seed=1;;disk_read;").is_ok());
+    }
+
+    #[test]
+    fn debug_is_compact() {
+        let p = FaultPlan::parse("seed=2;doc_prefill:count=1").unwrap();
+        let d = format!("{p:?}");
+        assert!(d.contains("doc_prefill"), "{d}");
+        assert!(d.contains("seed: 2"), "{d}");
+    }
+}

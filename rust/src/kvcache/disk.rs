@@ -69,17 +69,45 @@
 //! FNV-1a hash collision) is also a miss — counted in
 //! [`DiskStats::collisions`] — but the file is left in place: it is
 //! correct for *its* document.
+//!
+//! The `quarantine/` directory itself is bounded
+//! ([`DiskDocCache::with_quarantine_cap`], default 64 MiB): when a
+//! quarantine would push it over the cap, its oldest files are deleted
+//! first, so a corrupt-heavy disk cannot grow it without limit.
+//! [`DiskStats::quarantined_bytes`] gauges what it currently holds and
+//! [`DiskStats::quarantine_drops`] counts the deletions.
+//!
+//! # I/O errors and the circuit breaker
+//!
+//! Corruption (above) is about bytes that *arrived* wrong; I/O errors
+//! are reads/writes that failed outright — a flaky device, a detached
+//! volume. A failed read is served as a miss (the index entry is kept:
+//! the failure may be transient) and a failed write is logged and
+//! skipped by the caller; both count in [`DiskStats::io_errors`]. With
+//! a breaker configured ([`DiskDocCache::with_breaker`]), N
+//! *consecutive* I/O errors open it: every lookup then short-circuits
+//! to a miss and every writeback is skipped without touching the
+//! device ([`DiskStats::breaker_short_circuits`]) — the tier degrades
+//! to RAM-only instead of paying a failing device's latency per
+//! request. After the probe interval one half-open operation is let
+//! through: success re-closes the breaker, failure re-opens it. All
+//! transitions count in [`DiskStats::breaker_opens`] /
+//! [`DiskStats::breaker_closes`], and [`DiskStats::breaker_open`]
+//! gauges the current state. Deterministic chaos tests drive these
+//! paths with an injected [`crate::faultinject::FaultPlan`]
+//! ([`DiskDocCache::with_faults`]).
 
 use std::collections::HashMap;
 use std::fs;
 use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::KvCodecKind;
+use crate::faultinject::{FaultPlan, FaultSite};
 use crate::tensor::Tensor;
 
 use super::codec::{codec_by_id, codec_for, KvCodec};
@@ -104,6 +132,9 @@ const MAX_COUNT: u64 = 1 << 28;
 /// Load-latency samples buffered until the next
 /// [`DiskDocCache::take_load_samples`] drain.
 const MAX_LOAD_SAMPLES: usize = 4096;
+/// Default byte cap on the `quarantine/` directory (oldest files are
+/// deleted first once a quarantine would exceed it).
+pub const DEFAULT_QUARANTINE_CAP_BYTES: usize = 64 << 20;
 
 /// Disk-tier counters. All monotone lifetime totals except
 /// `current_bytes` (what the directory holds right now).
@@ -138,6 +169,24 @@ pub struct DiskStats {
     pub bytes_loaded: u64,
     /// Bytes currently on disk under the budget.
     pub current_bytes: usize,
+    /// Reads/writes that failed outright (real or injected I/O
+    /// errors — distinct from `corrupt`, which is bytes that arrived
+    /// wrong). Consecutive ones trip the circuit breaker.
+    pub io_errors: u64,
+    /// Closed→open breaker transitions (threshold trips plus failed
+    /// half-open probes re-opening).
+    pub breaker_opens: u64,
+    /// Open→closed transitions (successful half-open probes).
+    pub breaker_closes: u64,
+    /// Lookups/writebacks answered without touching the device
+    /// because the breaker was open.
+    pub breaker_short_circuits: u64,
+    /// Gauge: 1 while the breaker is open or half-open, else 0.
+    pub breaker_open: u64,
+    /// Gauge: bytes currently held in `quarantine/` (under the cap).
+    pub quarantined_bytes: u64,
+    /// Quarantined files deleted oldest-first to hold the cap.
+    pub quarantine_drops: u64,
 }
 
 struct DiskSlot {
@@ -152,12 +201,26 @@ struct DiskSlot {
     complete: bool,
 }
 
+/// Circuit-breaker state machine (see the module docs).
+enum BreakerState {
+    /// Normal service; consecutive I/O errors are being counted.
+    Closed,
+    /// Short-circuiting all disk I/O since `since`.
+    Open { since: Instant },
+    /// Probe window: operations run against the device again; the
+    /// first outcome decides (success closes, error re-opens).
+    HalfOpen,
+}
+
 struct DiskInner {
     index: HashMap<u64, DiskSlot>,
     clock: u64,
     budget_bytes: usize,
     stats: DiskStats,
     load_ms: Vec<f64>,
+    /// Consecutive I/O errors since the last success (breaker fuel).
+    consec_io_errors: usize,
+    breaker: BreakerState,
 }
 
 /// The persistent tier: a directory of per-hash cache files with an
@@ -170,6 +233,14 @@ pub struct DiskDocCache {
     /// Codec for newly written records (reads honor each record's own
     /// tag regardless).
     codec: Arc<dyn KvCodec>,
+    /// Consecutive I/O errors that open the breaker; 0 disables it.
+    breaker_threshold: usize,
+    /// Open-state dwell before one half-open probe is admitted.
+    breaker_probe: Duration,
+    /// Byte cap on the `quarantine/` directory.
+    quarantine_cap_bytes: usize,
+    /// Injected fault schedule (chaos testing); `None` in production.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl DiskDocCache {
@@ -197,12 +268,47 @@ impl DiskDocCache {
                 budget_bytes,
                 stats: DiskStats::default(),
                 load_ms: Vec::new(),
+                consec_io_errors: 0,
+                breaker: BreakerState::Closed,
             }),
             policy,
             codec: codec_for(KvCodecKind::F32),
+            breaker_threshold: 0,
+            breaker_probe: Duration::from_millis(500),
+            quarantine_cap_bytes: DEFAULT_QUARANTINE_CAP_BYTES,
+            faults: None,
         };
         cache.scan()?;
+        cache.enforce_quarantine_cap();
         Ok(cache)
+    }
+
+    /// Enable the I/O circuit breaker: `threshold` consecutive I/O
+    /// errors open it (0 disables — the default for bare `open`;
+    /// serving wires [`crate::config::ServingConfig`]'s default in),
+    /// and after `probe` in the open state one half-open operation is
+    /// admitted to test the device.
+    pub fn with_breaker(mut self, threshold: usize, probe: Duration)
+                        -> DiskDocCache {
+        self.breaker_threshold = threshold;
+        self.breaker_probe = probe;
+        self
+    }
+
+    /// Cap the `quarantine/` directory at `bytes` (oldest-first
+    /// deletion past it; default [`DEFAULT_QUARANTINE_CAP_BYTES`]).
+    pub fn with_quarantine_cap(mut self, bytes: usize) -> DiskDocCache {
+        self.quarantine_cap_bytes = bytes;
+        self.enforce_quarantine_cap();
+        self
+    }
+
+    /// Attach a seeded fault schedule; the tier then pulls injected
+    /// read/write errors, latency, and payload corruption from it at
+    /// the sites its chaos tests assert on.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> DiskDocCache {
+        self.faults = Some(plan);
+        self
     }
 
     /// Replace the codec used for newly **written** records (default
@@ -256,6 +362,74 @@ impl DiskDocCache {
         self.dir.join(format!("doc_{hash:016x}.kv"))
     }
 
+    /// True when the breaker is open or half-open right now.
+    pub fn breaker_is_open(&self) -> bool {
+        self.inner.lock().unwrap().stats.breaker_open == 1
+    }
+
+    /// Breaker gate, called before any disk I/O with the lock held:
+    /// `true` means short-circuit (open, probe not yet due). An open
+    /// breaker past its probe interval flips to half-open and lets
+    /// this operation through as the probe.
+    fn breaker_blocks_locked(&self, g: &mut DiskInner) -> bool {
+        if self.breaker_threshold == 0 {
+            return false;
+        }
+        match g.breaker {
+            BreakerState::Closed | BreakerState::HalfOpen => false,
+            BreakerState::Open { since } => {
+                if since.elapsed() >= self.breaker_probe {
+                    g.breaker = BreakerState::HalfOpen;
+                    false
+                } else {
+                    g.stats.breaker_short_circuits += 1;
+                    true
+                }
+            }
+        }
+    }
+
+    /// Count one failed disk operation toward the breaker.
+    fn note_io_error_locked(&self, g: &mut DiskInner) {
+        g.stats.io_errors += 1;
+        if self.breaker_threshold == 0 {
+            return;
+        }
+        match g.breaker {
+            BreakerState::HalfOpen => {
+                // failed probe: straight back to open
+                g.breaker = BreakerState::Open { since: Instant::now() };
+                g.stats.breaker_opens += 1;
+                g.stats.breaker_open = 1;
+            }
+            BreakerState::Closed => {
+                g.consec_io_errors += 1;
+                if g.consec_io_errors >= self.breaker_threshold {
+                    g.breaker =
+                        BreakerState::Open { since: Instant::now() };
+                    g.stats.breaker_opens += 1;
+                    g.stats.breaker_open = 1;
+                    crate::warn!(
+                        "disk tier breaker OPEN after {} consecutive \
+                         I/O errors ({})", g.consec_io_errors,
+                        self.dir.display());
+                }
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Count one successful disk operation: resets the consecutive
+    /// error run, and a half-open probe success re-closes the breaker.
+    fn note_io_ok_locked(&self, g: &mut DiskInner) {
+        g.consec_io_errors = 0;
+        if matches!(g.breaker, BreakerState::HalfOpen) {
+            g.breaker = BreakerState::Closed;
+            g.stats.breaker_closes += 1;
+            g.stats.breaker_open = 0;
+        }
+    }
+
     /// Read the file behind `hash` (index-checked), decode its
     /// metadata, and apply the quarantine / collision verdicts. On
     /// success returns the decoded meta, the surviving block records,
@@ -264,16 +438,34 @@ impl DiskDocCache {
                        -> Option<(Meta, Vec<(u32, Vec<f32>)>, f64)> {
         {
             let mut g = self.inner.lock().unwrap();
+            if self.breaker_blocks_locked(&mut g) {
+                g.stats.misses += 1;
+                return None;
+            }
             if !g.index.contains_key(&hash) {
                 g.stats.misses += 1;
                 return None;
             }
         }
+        if let Some(f) = &self.faults {
+            if let Some(ms) = f.latency_ms(FaultSite::DiskLatency) {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
         let path = self.entry_path(hash);
         let t = Instant::now();
-        let bytes = match fs::read(&path) {
+        let read = if self
+            .faults
+            .as_ref()
+            .is_some_and(|f| f.should(FaultSite::DiskRead))
+        {
+            Err(std::io::Error::other("injected disk read fault"))
+        } else {
+            fs::read(&path)
+        };
+        let bytes = match read {
             Ok(b) => b,
-            Err(_) => {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                 // evicted (or externally removed) between the index
                 // check and the read: drop the stale index entry
                 let mut g = self.inner.lock().unwrap();
@@ -284,6 +476,16 @@ impl DiskDocCache {
                 g.stats.misses += 1;
                 return None;
             }
+            Err(e) => {
+                // real (or injected) I/O error: possibly transient, so
+                // the index entry is kept; the breaker counts it
+                let mut g = self.inner.lock().unwrap();
+                self.note_io_error_locked(&mut g);
+                g.stats.misses += 1;
+                drop(g);
+                crate::warn!("disk read failed for {hash:016x}: {e}");
+                return None;
+            }
         };
         let ms = t.elapsed().as_secs_f64() * 1e3;
         let file_bytes = bytes.len() as u64;
@@ -291,6 +493,7 @@ impl DiskDocCache {
             Ok(m) => m,
             Err(why) => {
                 let mut g = self.inner.lock().unwrap();
+                self.note_io_ok_locked(&mut g);
                 g.stats.loads += 1;
                 g.stats.bytes_loaded += file_bytes;
                 g.stats.corrupt += 1;
@@ -306,16 +509,29 @@ impl DiskDocCache {
         };
         if meta.tokens != expect_tokens {
             let mut g = self.inner.lock().unwrap();
+            self.note_io_ok_locked(&mut g);
             g.stats.loads += 1;
             g.stats.bytes_loaded += file_bytes;
             g.stats.collisions += 1;
             g.stats.misses += 1;
             return None;
         }
-        let (blocks, bad) = decode_blocks(&meta.layout, &bytes,
-                                          meta.meta_end, meta.version,
-                                          &self.codec);
+        let (mut blocks, mut bad) = decode_blocks(&meta.layout, &bytes,
+                                                  meta.meta_end,
+                                                  meta.version,
+                                                  &self.codec);
+        if !blocks.is_empty()
+            && self
+                .faults
+                .as_ref()
+                .is_some_and(|f| f.should(FaultSite::CodecDecode))
+        {
+            // injected codec failure: every record decodes as corrupt
+            bad += blocks.len() as u64;
+            blocks.clear();
+        }
         let mut g = self.inner.lock().unwrap();
+        self.note_io_ok_locked(&mut g);
         g.stats.loads += 1;
         g.stats.bytes_loaded += file_bytes;
         if bad > 0 {
@@ -442,6 +658,14 @@ impl DiskDocCache {
     /// unique temp name, so concurrent same-hash writers cannot race).
     pub fn store_blocks(&self, entry: &DocEntry,
                         extra: &[(u32, Vec<f32>)]) -> Result<bool> {
+        {
+            // open breaker: skip the writeback without touching the
+            // failing device (the document stays re-prefillable)
+            let mut g = self.inner.lock().unwrap();
+            if self.breaker_blocks_locked(&mut g) {
+                return Ok(false);
+            }
+        }
         let lay = entry.kv.layout();
         let mut have: HashMap<u32, Vec<f32>> = HashMap::new();
         for b in entry.kv.resident_block_indexes() {
@@ -496,17 +720,43 @@ impl DiskDocCache {
             TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut blocks: Vec<(u32, Vec<f32>)> = have.into_iter().collect();
         blocks.sort_by_key(|(b, _)| *b);
-        let buf = encode_entry(entry.hash, &entry.tokens, &lay,
-                               &entry.attn, &entry.q_local, &blocks,
-                               &self.codec);
+        let mut buf = encode_entry(entry.hash, &entry.tokens, &lay,
+                                   &entry.attn, &entry.q_local, &blocks,
+                                   &self.codec);
+        if self
+            .faults
+            .as_ref()
+            .is_some_and(|f| f.should(FaultSite::CorruptBlock))
+        {
+            // flip a byte inside the last block record (every record
+            // is ≥ 21 bytes, so len-16 is always within it): read-back
+            // must drop exactly that block via its record checksum
+            let i = buf.len() - 16;
+            buf[i] ^= 0xff;
+        }
         let path = self.entry_path(entry.hash);
         let tmp = path.with_extension(format!("tmp{seq}"));
-        fs::write(&tmp, &buf)
-            .with_context(|| format!("write {}", tmp.display()))?;
-        fs::rename(&tmp, &path)
-            .with_context(|| format!("rename into {}", path.display()))?;
+        let write = if self
+            .faults
+            .as_ref()
+            .is_some_and(|f| f.should(FaultSite::DiskWrite))
+        {
+            Err(std::io::Error::other("injected disk write fault"))
+        } else {
+            fs::write(&tmp, &buf)
+                .and_then(|()| fs::rename(&tmp, &path))
+        };
+        if let Err(e) = write {
+            let _ = fs::remove_file(&tmp);
+            let mut g = self.inner.lock().unwrap();
+            self.note_io_error_locked(&mut g);
+            drop(g);
+            return Err(e).with_context(
+                || format!("write {}", path.display()));
+        }
         let doomed = {
             let mut g = self.inner.lock().unwrap();
+            self.note_io_ok_locked(&mut g);
             g.clock += 1;
             let clock = g.clock;
             let replaced = g.index.insert(entry.hash, DiskSlot {
@@ -670,6 +920,44 @@ impl DiskDocCache {
         }
         crate::warn!("quarantined disk cache file {}: {}",
                      path.display(), why);
+        self.enforce_quarantine_cap();
+    }
+
+    /// Hold `quarantine/` under its byte cap: oldest files (by mtime)
+    /// are deleted first, and the `quarantined_bytes` gauge is
+    /// refreshed from what actually remains on disk.
+    fn enforce_quarantine_cap(&self) {
+        let qdir = self.dir.join("quarantine");
+        let Ok(entries) = fs::read_dir(&qdir) else {
+            return; // no quarantine directory yet: gauge stays 0
+        };
+        let mut files: Vec<(std::time::SystemTime, PathBuf, u64)> =
+            Vec::new();
+        for ent in entries.flatten() {
+            let Ok(meta) = ent.metadata() else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let mtime = meta
+                .modified()
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            files.push((mtime, ent.path(), meta.len()));
+        }
+        files.sort();
+        let mut total: u64 = files.iter().map(|f| f.2).sum();
+        let mut drops = 0u64;
+        for (_, path, bytes) in &files {
+            if total <= self.quarantine_cap_bytes as u64 {
+                break;
+            }
+            if fs::remove_file(path).is_ok() {
+                total -= bytes;
+                drops += 1;
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.stats.quarantined_bytes = total;
+        g.stats.quarantine_drops += drops;
     }
 }
 
@@ -1632,5 +1920,170 @@ mod tests {
         assert_eq!(parse_entry_name("doc_123.kv"), None);
         assert_eq!(parse_entry_name("doc_0123456789abcdef.tmp"), None);
         assert_eq!(parse_entry_name("readme.md"), None);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_probe_recloses() {
+        let dir = test_dir("breaker");
+        let p = pool(64);
+        let e = entry(&p, vec![1, 2, 3]);
+        // first 1 read succeeds, then every read errors until the
+        // plan's count runs out — deterministic breaker fuel
+        let plan = Arc::new(
+            FaultPlan::parse("disk_read:after=1:count=2").unwrap());
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_breaker(2, Duration::from_millis(30))
+            .with_faults(plan);
+        cache.store(&e).unwrap();
+        assert!(cache.load(e.hash, &[1, 2, 3], &p).is_some());
+        assert!(!cache.breaker_is_open());
+        // two consecutive injected read errors trip the threshold
+        assert!(cache.load(e.hash, &[1, 2, 3], &p).is_none());
+        assert!(!cache.breaker_is_open(), "one error is not a trip");
+        assert!(cache.load(e.hash, &[1, 2, 3], &p).is_none());
+        assert!(cache.breaker_is_open());
+        let s = cache.stats();
+        assert_eq!((s.io_errors, s.breaker_opens), (2, 1));
+        // open: lookups short-circuit to misses, writebacks skip
+        assert!(cache.load(e.hash, &[1, 2, 3], &p).is_none());
+        let e2 = entry(&p, vec![9, 9]);
+        assert!(!cache.store(&e2).unwrap(), "open breaker skips writes");
+        let s = cache.stats();
+        assert_eq!(s.breaker_short_circuits, 2);
+        assert_eq!(s.io_errors, 2, "short circuits touch no device");
+        // past the probe interval the half-open probe succeeds (the
+        // fault plan's count is exhausted) and re-closes the breaker
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(cache.load(e.hash, &[1, 2, 3], &p).is_some(),
+                "half-open probe must reach the device");
+        assert!(!cache.breaker_is_open());
+        let s = cache.stats();
+        assert_eq!((s.breaker_opens, s.breaker_closes), (1, 1));
+        assert_eq!(s.breaker_open, 0);
+        // closed again: normal service resumed
+        assert!(cache.store(&e2).unwrap());
+        assert!(cache.load(e2.hash, &[9, 9], &p).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_probe_reopens_breaker() {
+        let dir = test_dir("breakerprobe");
+        let p = pool(64);
+        let e = entry(&p, vec![4, 5]);
+        // errors forever: the probe must fail and re-open
+        let plan = Arc::new(FaultPlan::parse("disk_read").unwrap());
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_breaker(1, Duration::from_millis(20))
+            .with_faults(plan);
+        cache.store(&e).unwrap();
+        assert!(cache.load(e.hash, &[4, 5], &p).is_none());
+        assert!(cache.breaker_is_open());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(cache.load(e.hash, &[4, 5], &p).is_none(),
+                "probe admitted but the device still fails");
+        assert!(cache.breaker_is_open(), "failed probe re-opens");
+        let s = cache.stats();
+        assert_eq!(s.breaker_opens, 2);
+        assert_eq!(s.breaker_closes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_write_fault_errors_and_counts() {
+        let dir = test_dir("writefault");
+        let p = pool(64);
+        let e = entry(&p, vec![6, 7]);
+        let plan = Arc::new(
+            FaultPlan::parse("disk_write:count=1").unwrap());
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_breaker(3, Duration::from_millis(50))
+            .with_faults(plan);
+        let err = cache.store(&e).unwrap_err().to_string();
+        assert!(err.contains("write"), "{err}");
+        let s = cache.stats();
+        assert_eq!((s.io_errors, s.spills), (1, 0));
+        assert!(!cache.contains(e.hash), "failed write indexes nothing");
+        // count exhausted: the retry lands and resets the error run
+        assert!(cache.store(&e).unwrap());
+        assert!(cache.load(e.hash, &[6, 7], &p).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_corrupt_block_drops_one_block_on_readback() {
+        let dir = test_dir("injectcorrupt");
+        let p = pool(2); // 3 records for a 5-token doc
+        let e = entry(&p, vec![1, 2, 3, 4, 5]);
+        let plan = Arc::new(
+            FaultPlan::parse("corrupt_block:count=1").unwrap());
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_faults(plan);
+        cache.store(&e).unwrap();
+        let back = cache
+            .load(e.hash, &[1, 2, 3, 4, 5], &p)
+            .expect("intact blocks still serve");
+        assert_eq!(back.kv.missing_block_indexes(), vec![2],
+                   "exactly the corrupted last record is lost");
+        let s = cache.stats();
+        assert_eq!((s.corrupt, s.corrupt_blocks), (0, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_codec_decode_fault_reads_as_incomplete() {
+        let dir = test_dir("codecfault");
+        let p = pool(64);
+        let e = entry(&p, vec![3, 1, 4]);
+        let plan = Arc::new(
+            FaultPlan::parse("codec_decode:count=1").unwrap());
+        let cache = DiskDocCache::open(&dir, usize::MAX)
+            .unwrap()
+            .with_faults(plan);
+        cache.store(&e).unwrap();
+        assert!(cache.load(e.hash, &[3, 1, 4], &p).is_none(),
+                "all records corrupt -> nothing usable");
+        let s = cache.stats();
+        assert!(s.corrupt_blocks >= 1, "{s:?}");
+        // the fault is spent; the file itself was never damaged
+        assert!(cache.load(e.hash, &[3, 1, 4], &p).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_cap_deletes_oldest_and_gauges_bytes() {
+        let dir = test_dir("qcap");
+        let p = pool(64);
+        let cache = DiskDocCache::open(&dir, usize::MAX).unwrap();
+        // learn one file's size, then cap the quarantine to ~2 files
+        let probe = entry(&p, vec![0]);
+        cache.store(&probe).unwrap();
+        let file_bytes = cache.stats().current_bytes;
+        cache.clear();
+        let cache = cache.with_quarantine_cap(file_bytes * 2 + 16);
+        for i in 0..4i32 {
+            let e = entry(&p, vec![i, i + 1]);
+            cache.store(&e).unwrap();
+            let path = dir.join(format!("doc_{:016x}.kv", e.hash));
+            let mut bytes = fs::read(&path).unwrap();
+            bytes[30] ^= 0xff; // metadata corruption -> quarantine
+            fs::write(&path, &bytes).unwrap();
+            assert!(cache.load(e.hash, &[i, i + 1], &p).is_none());
+            // mtime granularity: keep oldest-first deterministic
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let s = cache.stats();
+        assert_eq!(s.corrupt, 4);
+        assert!(s.quarantine_drops >= 2,
+                "4 quarantined under a 2-file cap must drop: {s:?}");
+        assert!(s.quarantined_bytes <= (file_bytes * 2 + 16) as u64,
+                "gauge must sit under the cap: {s:?}");
+        let held = fs::read_dir(dir.join("quarantine")).unwrap().count();
+        assert!(held <= 2, "directory itself must be bounded: {held}");
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -149,6 +149,38 @@
 //! pins: its files are copies, and live entries are `Arc`-held in
 //! RAM.
 //!
+//! # Fault-tolerance contract
+//!
+//! The cache hierarchy is an accelerator, so every tier degrades to
+//! the tier below it — ultimately to a model prefill — rather than
+//! failing a request:
+//!
+//! * **Disk errors are misses.** A failed read keeps the index entry
+//!   (the error may be transient) and reads as a miss; a failed write
+//!   only ever loses a future shortcut. `NotFound` is stale-index
+//!   cleanup, not an I/O error.
+//! * **A circuit breaker guards the device.** `--disk-breaker-
+//!   threshold` consecutive I/O errors open it
+//!   ([`DiskDocCache::with_breaker`]): while open, reads answer as
+//!   misses and writebacks are skipped without touching the failing
+//!   device; after `--disk-breaker-probe-ms` one operation probes
+//!   half-open — success re-closes, failure re-opens. Threshold 0
+//!   disables it.
+//! * **Corruption is contained and bounded.** Metadata corruption
+//!   quarantines the whole file (preserving its content address for
+//!   forensics); a bad block record drops alone. The `quarantine/`
+//!   directory is capped ([`DiskDocCache::with_quarantine_cap`],
+//!   default [`disk::DEFAULT_QUARANTINE_CAP_BYTES`]) with oldest-first
+//!   deletion, so a corrupting device cannot fill the disk twice.
+//!
+//! All of it is deterministically testable: a
+//! [`crate::faultinject::FaultPlan`] attached via
+//! [`DiskDocCache::with_faults`] injects read/write errors, added
+//! latency, block-payload corruption, and codec decode failure at the
+//! exact sites this contract covers, and the `DiskStats` breaker /
+//! quarantine counters flow through [`crate::metrics::Metrics`] to the
+//! `cmd:metrics` wire and the bench rows.
+//!
 //! # Stats
 //!
 //! Each RAM tier keeps its own [`CacheStats`]; `hits`/`misses`/

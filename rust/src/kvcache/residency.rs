@@ -51,6 +51,13 @@ impl ResidencyBoard {
     pub fn is_resident(&self, engine: usize, hash: u64) -> bool {
         self.engines[engine].lock().unwrap().contains(&hash)
     }
+
+    /// Drop every advertisement for `engine` — called when the router
+    /// marks the engine down, so stale residency can no longer pull
+    /// placements toward a dead engine.
+    pub fn clear_engine(&self, engine: usize) {
+        self.engines[engine].lock().unwrap().clear();
+    }
 }
 
 /// One engine's write handle onto the board (held by its
@@ -106,5 +113,16 @@ mod tests {
         assert!(!board.is_resident(0, 10));
         h1.clear();
         assert_eq!(board.resident_count(1, &[20]), 0);
+    }
+
+    #[test]
+    fn clear_engine_drops_only_that_engine() {
+        let board = ResidencyBoard::new(2);
+        let b = Arc::new(board);
+        ResidencyHandle::new(Arc::clone(&b), 0).insert(1);
+        ResidencyHandle::new(Arc::clone(&b), 1).insert(2);
+        b.clear_engine(0);
+        assert!(!b.is_resident(0, 1));
+        assert!(b.is_resident(1, 2));
     }
 }

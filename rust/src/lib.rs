@@ -14,8 +14,8 @@
 //!
 //! Module groups:
 //! * substrates — [`json`], [`tensor`], [`rng`], [`cli`], [`logging`],
-//!   [`exec`], [`bench`] (the offline image ships no serde/clap/tokio/
-//!   criterion, so these are built from scratch);
+//!   [`exec`], [`bench`], [`faultinject`] (the offline image ships no
+//!   serde/clap/tokio/criterion, so these are built from scratch);
 //! * runtime — [`runtime`] (PJRT), [`model`] (entry-point wrappers);
 //! * paper core — [`kvcache`], [`attention`], [`sparse`], [`policies`];
 //! * serving — [`coordinator`], [`server`], [`metrics`], [`eval`],
@@ -25,6 +25,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod exec;
+pub mod faultinject;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -6,17 +6,19 @@
 //! samkv eval    --profile s4 --dataset hotpot-sim --policy all --samples 50
 //! samkv serve   --profile s4 --port 7070 --engines 1 --policy SamKV-fusion
 //! samkv table1  --profile s4 --samples 30       (also: fig1, table3,
-//!               table4, fig7, fig8, throughput)
+//!               table4, fig7, fig8, throughput, chaos)
 //! samkv analyze --profile s4                    # Fig.7 + Fig.8 dump
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use samkv::bench::experiments as exp;
 use samkv::cli::Args;
 use samkv::config::{DiskWriteback, KvCodecKind, ServingConfig};
 use samkv::coordinator::{Engine, Router};
 use samkv::eval::evaluate;
+use samkv::faultinject::FaultPlan;
 use samkv::kvcache::{
     codec_for, eviction_policy_by_name, DiskDocCache, HostDocCache,
 };
@@ -105,6 +107,22 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
             )?;
             Ok(())
         }
+        "chaos" => {
+            exp::chaos_run(
+                &profile,
+                &args.get_str("policy", "SamKV-fusion"),
+                args.get::<usize>("requests", 24),
+                args.get::<usize>("unique", 4),
+                args.get::<usize>("engines", 2),
+                &args.get_str(
+                    "fault-plan",
+                    "seed=7;engine_kill:engine=0:after=3;\
+                     disk_read:after=1:every=2;disk_latency:ms=2:every=3",
+                ),
+                args.get::<u64>("request-timeout-ms", 10_000),
+            )?;
+            Ok(())
+        }
         "help" | _ => {
             print_help();
             Ok(())
@@ -134,10 +152,24 @@ fn print_help() {
                 serve seen docs with zero prefills)\n  \
                --disk-cache-mb N (0 = unbounded)\n  \
                --disk-writeback evict|through|off\n  \
+               --request-timeout-ms N (per-request deadline across\n  \
+                queue, prefill, and decode; 0 = off)\n  \
+               --request-retries N --retry-backoff-ms N (re-dispatch\n  \
+                failed requests to surviving engines with jittered\n  \
+                exponential backoff)\n  \
+               --disk-breaker-threshold N (consecutive disk I/O errors\n  \
+                before the tier opens its circuit breaker; 0 = off)\n  \
+               --disk-breaker-probe-ms N (half-open probe interval)\n  \
+               --fault-plan SPEC (deterministic fault injection, e.g.\n  \
+                \"seed=7;disk_read:after=1:every=2;\\\n  \
+                 engine_kill:engine=0:after=3\")\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
          throughput --policy NAME --requests N --unique N --engines N\n  \
                     --batch-sizes 1,4 --rates 0,32\n  \
                     --kv-codec f32|f16|int8 --kv-hot-blocks N  (sweep)\n  \
+         chaos --policy NAME --requests N --unique N --engines N\n  \
+               --fault-plan SPEC --request-timeout-ms N\n  \
+               (baseline + faulted pass; asserts 100% completion)\n  \
          analyze --profile P           Fig.7 + Fig.8 analytics"
     );
 }
@@ -223,8 +255,26 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
             .parse::<KvCodecKind>()?,
         kv_hot_blocks: args.get::<usize>("kv-hot-blocks",
                                          defaults.kv_hot_blocks),
+        fault_plan: match args.opt("fault-plan") {
+            Some(spec) => Some(Arc::new(FaultPlan::parse(spec)?)),
+            None => None,
+        },
+        request_timeout_ms: args.get::<u64>("request-timeout-ms",
+                                            defaults.request_timeout_ms),
+        request_retries: args.get::<usize>("request-retries",
+                                           defaults.request_retries),
+        retry_backoff_ms: args.get::<u64>("retry-backoff-ms",
+                                          defaults.retry_backoff_ms),
+        disk_breaker_threshold: args.get::<usize>(
+            "disk-breaker-threshold", defaults.disk_breaker_threshold),
+        disk_breaker_probe_ms: args.get::<u64>(
+            "disk-breaker-probe-ms", defaults.disk_breaker_probe_ms),
         ..defaults
     };
+    if let Some(plan) = cfg.fault_plan.as_deref() {
+        info!("fault injection armed: {} (seed {})",
+              plan.spec(), plan.seed());
+    }
     // the shared host doc-cache tier beneath every engine's residency
     // tier: one prefill per unique document process-wide. Default is
     // auto-sized (engines raise the budget from model geometry), so
@@ -252,10 +302,14 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         } else {
             cfg.disk_cache_mb * 1024 * 1024
         };
-        let disk = Arc::new(
-            DiskDocCache::open(&cfg.disk_cache_dir, budget)?
-                .with_codec(Arc::clone(&codec)),
-        );
+        let mut disk = DiskDocCache::open(&cfg.disk_cache_dir, budget)?
+            .with_codec(Arc::clone(&codec))
+            .with_breaker(cfg.disk_breaker_threshold,
+                          Duration::from_millis(cfg.disk_breaker_probe_ms));
+        if let Some(plan) = &cfg.fault_plan {
+            disk = disk.with_faults(Arc::clone(plan));
+        }
+        let disk = Arc::new(disk);
         info!("disk cache tier at {} ({} entries, {}, writeback {})",
               cfg.disk_cache_dir,
               disk.len(),
@@ -282,7 +336,10 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
         })
         .collect::<samkv::Result<_>>()?;
     let handles = engines.iter().map(|e| e.handle()).collect();
-    let server = Server::with_router(handles, metrics, router);
+    let server = Server::with_router(handles, metrics, router)
+        .with_resilience(cfg.request_retries, cfg.retry_backoff_ms,
+                         cfg.request_timeout_ms)
+        .with_faults(cfg.fault_plan.clone());
     server.run(&format!("127.0.0.1:{port}"), |p| {
         info!("listening on 127.0.0.1:{p}");
         println!("READY {p}");

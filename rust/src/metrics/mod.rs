@@ -193,6 +193,42 @@ pub struct Metrics {
     pub pool_share_hits: AtomicU64,
     pub pool_partial_evictions: AtomicU64,
     pub pool_double_frees: AtomicU64,
+    /// Fault injection (`--fault-plan`, see [`crate::faultinject`]):
+    /// total injections plus one counter per site, folded in with
+    /// `fetch_max` from the plan's own monotone counters (the plan is
+    /// process-wide, so any engine's flush carries the same totals).
+    pub faults_injected: AtomicU64,
+    pub faults_disk_read: AtomicU64,
+    pub faults_disk_write: AtomicU64,
+    pub faults_disk_latency: AtomicU64,
+    pub faults_corrupt_block: AtomicU64,
+    pub faults_codec_decode: AtomicU64,
+    pub faults_doc_prefill: AtomicU64,
+    pub faults_engine_kill: AtomicU64,
+    /// Self-healing serving: requests resubmitted to a surviving
+    /// engine after a delivery failure, and how many of those retries
+    /// ultimately produced an answer (direct event counts).
+    pub retries: AtomicU64,
+    pub retry_successes: AtomicU64,
+    /// Requests failed with a structured timeout error because their
+    /// `--request-timeout-ms` deadline passed (queue, plan/prefill, or
+    /// decode — wherever the sweep caught them).
+    pub timeouts: AtomicU64,
+    /// Times the router newly marked an engine down (an engine can
+    /// contribute more than once if it is marked up again).
+    pub engine_down_events: AtomicU64,
+    /// Engines currently marked down (gauge: router snapshot).
+    pub engines_down: AtomicU64,
+    /// Disk-tier I/O fault handling (see `kvcache::disk`): error and
+    /// circuit-breaker transition totals are monotone (`fetch_max`);
+    /// `disk_breaker_open` and `disk_quarantined_bytes` are gauges.
+    pub disk_io_errors: AtomicU64,
+    pub disk_breaker_opens: AtomicU64,
+    pub disk_breaker_closes: AtomicU64,
+    pub disk_breaker_short_circuits: AtomicU64,
+    pub disk_breaker_open: AtomicU64,
+    pub disk_quarantined_bytes: AtomicU64,
+    pub disk_quarantine_drops: AtomicU64,
     started: Mutex<Option<Instant>>,
 }
 
@@ -321,9 +357,77 @@ impl Metrics {
             .store(disk.current_bytes as u64, Ordering::Relaxed);
         self.disk_bytes_loaded
             .fetch_max(disk.bytes_loaded, Ordering::Relaxed);
+        self.disk_io_errors
+            .fetch_max(disk.io_errors, Ordering::Relaxed);
+        self.disk_breaker_opens
+            .fetch_max(disk.breaker_opens, Ordering::Relaxed);
+        self.disk_breaker_closes
+            .fetch_max(disk.breaker_closes, Ordering::Relaxed);
+        self.disk_breaker_short_circuits
+            .fetch_max(disk.breaker_short_circuits, Ordering::Relaxed);
+        self.disk_breaker_open
+            .store(disk.breaker_open, Ordering::Relaxed);
+        self.disk_quarantined_bytes
+            .store(disk.quarantined_bytes, Ordering::Relaxed);
+        self.disk_quarantine_drops
+            .fetch_max(disk.quarantine_drops, Ordering::Relaxed);
         for &ms in load_ms {
             self.disk_load.observe_ms(ms);
         }
+    }
+
+    /// Flush the fault-injection plan's per-site injection counters
+    /// (monotone process-wide totals on the shared plan, folded in
+    /// with `fetch_max`). The engine calls this after every admission
+    /// wave when a `--fault-plan` is active.
+    pub fn record_faults(&self, plan: &crate::faultinject::FaultPlan) {
+        self.faults_injected
+            .fetch_max(plan.total_injected(), Ordering::Relaxed);
+        for (site, n) in plan.counts() {
+            let counter = match site {
+                "disk_read" => &self.faults_disk_read,
+                "disk_write" => &self.faults_disk_write,
+                "disk_latency" => &self.faults_disk_latency,
+                "corrupt_block" => &self.faults_corrupt_block,
+                "codec_decode" => &self.faults_codec_decode,
+                "doc_prefill" => &self.faults_doc_prefill,
+                "engine_kill" => &self.faults_engine_kill,
+                _ => continue,
+            };
+            counter.fetch_max(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Fault-injection and self-healing counters as a JSON object
+    /// (`cmd:metrics` wire, bench artifacts): per-site injection
+    /// totals, retry/timeout accounting, engine supervision, and the
+    /// disk circuit breaker's state machine.
+    pub fn faults_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("injected", g(&self.faults_injected))
+            .set("disk_read", g(&self.faults_disk_read))
+            .set("disk_write", g(&self.faults_disk_write))
+            .set("disk_latency", g(&self.faults_disk_latency))
+            .set("corrupt_block", g(&self.faults_corrupt_block))
+            .set("codec_decode", g(&self.faults_codec_decode))
+            .set("doc_prefill", g(&self.faults_doc_prefill))
+            .set("engine_kill", g(&self.faults_engine_kill))
+            .set("retries", g(&self.retries))
+            .set("retry_successes", g(&self.retry_successes))
+            .set("timeouts", g(&self.timeouts))
+            .set("engine_down_events", g(&self.engine_down_events))
+            .set("engines_down", g(&self.engines_down))
+            .set("disk_io_errors", g(&self.disk_io_errors))
+            .set("disk_breaker_opens", g(&self.disk_breaker_opens))
+            .set("disk_breaker_closes", g(&self.disk_breaker_closes))
+            .set("disk_breaker_short_circuits",
+                 g(&self.disk_breaker_short_circuits))
+            .set("disk_breaker_open", g(&self.disk_breaker_open))
+            .set("disk_quarantined_bytes",
+                 g(&self.disk_quarantined_bytes))
+            .set("disk_quarantine_drops",
+                 g(&self.disk_quarantine_drops))
     }
 
     /// Flush the KV codec layer's counters (one codec instance per
@@ -521,7 +625,11 @@ impl Metrics {
              pool(slots={}/{} free={} slab_bytes={} grows={} \
              evicted={} spilled={} shares={} partial={}) \
              codec({} encoded={} decoded={} ratio={:.2} \
-             decode_mean={:.3}ms)",
+             decode_mean={:.3}ms) \
+             faults(injected={} retries={} retry_ok={} timeouts={} \
+             engine_down={} down_now={}) \
+             breaker(open={} opens={} closes={} short_circuits={} \
+             io_errors={} quarantined_bytes={} quarantine_drops={})",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -582,6 +690,19 @@ impl Metrics {
             self.codec_blocks_decoded.load(Ordering::Relaxed),
             self.codec_compression_ratio(),
             self.codec_decode.mean_ms(),
+            self.faults_injected.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.retry_successes.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.engine_down_events.load(Ordering::Relaxed),
+            self.engines_down.load(Ordering::Relaxed),
+            self.disk_breaker_open.load(Ordering::Relaxed),
+            self.disk_breaker_opens.load(Ordering::Relaxed),
+            self.disk_breaker_closes.load(Ordering::Relaxed),
+            self.disk_breaker_short_circuits.load(Ordering::Relaxed),
+            self.disk_io_errors.load(Ordering::Relaxed),
+            self.disk_quarantined_bytes.load(Ordering::Relaxed),
+            self.disk_quarantine_drops.load(Ordering::Relaxed),
         )
     }
 }
@@ -666,6 +787,13 @@ mod tests {
             evictions: 2,
             bytes_loaded: 9000,
             current_bytes: 4096,
+            io_errors: 3,
+            breaker_opens: 1,
+            breaker_closes: 1,
+            breaker_short_circuits: 7,
+            breaker_open: 1,
+            quarantined_bytes: 512,
+            quarantine_drops: 2,
         };
         m.record_disk_tier(&d, &[1.5, 2.5]);
         // monotone totals: a second (stale) snapshot can never regress
@@ -680,6 +808,15 @@ mod tests {
                    "bytes_loaded is monotone");
         // bytes is a gauge: last write wins
         assert_eq!(m.disk_bytes.load(Ordering::Relaxed), 1024);
+        // error/breaker totals are monotone; the open flag and the
+        // quarantine gauge track the latest snapshot
+        assert_eq!(m.disk_io_errors.load(Ordering::Relaxed), 3);
+        assert_eq!(m.disk_breaker_opens.load(Ordering::Relaxed), 1);
+        assert_eq!(m.disk_breaker_short_circuits.load(Ordering::Relaxed),
+                   7);
+        assert_eq!(m.disk_breaker_open.load(Ordering::Relaxed), 0);
+        assert_eq!(m.disk_quarantined_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(m.disk_quarantine_drops.load(Ordering::Relaxed), 2);
         assert_eq!(m.disk_load.count(), 2);
         assert!((m.disk_load.mean_ms() - 2.0).abs() < 1e-6);
         let j = m.cache_tiers_json().to_string();
@@ -690,6 +827,38 @@ mod tests {
             assert!(j.contains(field), "{field}: {j}");
         }
         assert!(m.report().contains("disk(hits=4"), "{}", m.report());
+    }
+
+    #[test]
+    fn fault_counters_flush() {
+        use crate::faultinject::{FaultPlan, FaultSite};
+        let m = Metrics::new();
+        let plan =
+            FaultPlan::parse("seed=1;disk_read:count=2").unwrap();
+        assert!(plan.should(FaultSite::DiskRead));
+        assert!(plan.should(FaultSite::DiskRead));
+        assert!(!plan.should(FaultSite::DiskRead), "count cap");
+        m.record_faults(&plan);
+        m.record_faults(&plan); // stale re-flush can never regress
+        assert_eq!(m.faults_injected.load(Ordering::Relaxed), 2);
+        assert_eq!(m.faults_disk_read.load(Ordering::Relaxed), 2);
+        assert_eq!(m.faults_engine_kill.load(Ordering::Relaxed), 0);
+        m.retries.fetch_add(3, Ordering::Relaxed);
+        m.timeouts.fetch_add(1, Ordering::Relaxed);
+        m.engines_down.store(1, Ordering::Relaxed);
+        let j = m.faults_json().to_string();
+        for field in ["\"injected\"", "\"disk_read\"", "\"engine_kill\"",
+                      "\"retries\"", "\"retry_successes\"",
+                      "\"timeouts\"", "\"engine_down_events\"",
+                      "\"engines_down\"", "\"disk_io_errors\"",
+                      "\"disk_breaker_opens\"",
+                      "\"disk_breaker_short_circuits\"",
+                      "\"disk_quarantined_bytes\""] {
+            assert!(j.contains(field), "{field}: {j}");
+        }
+        let r = m.report();
+        assert!(r.contains("faults(injected=2"), "{r}");
+        assert!(r.contains("breaker(open=0"), "{r}");
     }
 
     #[test]

@@ -25,26 +25,67 @@
 //! `partial_evictions`/`double_frees`), and the KV codec snapshot
 //! (`{"codec":{...}}` — active codec name, blocks encoded/decoded,
 //! logical vs physical bytes with the achieved `compression_ratio`,
-//! and the dequantization-latency mean/p50/p95);
+//! and the dequantization-latency mean/p50/p95), and the
+//! fault/self-healing counters (`{"faults":{...}}` — per-site
+//! injection totals plus retry/timeout/engine-down/circuit-breaker
+//! accounting, see [`crate::faultinject`]);
 //! `{"cmd":"shutdown"}` stops the listener.
+//!
+//! # Self-healing request path
+//!
+//! Each request line runs a bounded retry loop instead of a single
+//! submit: the router picks an engine (skipping engines already marked
+//! down), a known-dead engine (`EngineHandle::is_alive` false) is
+//! marked down and re-picked before any work is spent, and a delivery
+//! failure — the engine's reply channel dropping, or a structured
+//! "decode thread died/unavailable" error — marks the engine down and
+//! resubmits the request to a surviving engine after a jittered
+//! backoff, up to `--request-retries` times. Requests that already
+//! streamed token lines are never resubmitted (the client saw partial
+//! output); they get the structured error. When `--request-timeout-ms`
+//! is set, the whole loop — queue wait, admission, decode, retries —
+//! runs under one deadline and returns a structured timeout error
+//! instead of waiting unboundedly.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{EngineHandle, Router, ServeEvent, ServeRequest};
+use crate::config::{DEFAULT_REQUEST_RETRIES, DEFAULT_RETRY_BACKOFF_MS};
+use crate::coordinator::{
+    EngineHandle, Router, ServeEvent, ServeRequest, ServeResponse,
+};
 use crate::exec::ThreadPool;
+use crate::faultinject::FaultPlan;
 use crate::json::{self, Value};
 use crate::metrics::Metrics;
+use crate::rng::Rng;
 
 pub struct Server {
+    ctx: ConnCtx,
+}
+
+/// Everything one connection thread needs, cloned per accept.
+#[derive(Clone)]
+struct ConnCtx {
     engines: Vec<EngineHandle>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    /// Resubmission budget per request after a delivery failure.
+    retries: usize,
+    /// Base backoff between resubmissions (doubled per attempt, plus
+    /// deterministic per-request jitter).
+    backoff_ms: u64,
+    /// End-to-end deadline per request; 0 = no deadline.
+    timeout_ms: u64,
+    /// Active fault plan, flushed into metrics on `cmd:metrics` so the
+    /// wire always reports fresh injection counters.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Server {
@@ -61,11 +102,37 @@ impl Server {
                        router: Arc<Router>) -> Server {
         assert_eq!(router.n_engines(), engines.len());
         Server {
-            engines,
-            router,
-            metrics,
-            stop: Arc::new(AtomicBool::new(false)),
+            ctx: ConnCtx {
+                engines,
+                router,
+                metrics,
+                stop: Arc::new(AtomicBool::new(false)),
+                retries: DEFAULT_REQUEST_RETRIES,
+                backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
+                timeout_ms: 0,
+                faults: None,
+            },
         }
+    }
+
+    /// Configure the self-healing request path: `retries`
+    /// resubmissions after delivery failures, `backoff_ms` base
+    /// backoff between them, and a per-request `timeout_ms` deadline
+    /// (0 disables the deadline).
+    pub fn with_resilience(mut self, retries: usize, backoff_ms: u64,
+                           timeout_ms: u64) -> Server {
+        self.ctx.retries = retries;
+        self.ctx.backoff_ms = backoff_ms;
+        self.ctx.timeout_ms = timeout_ms;
+        self
+    }
+
+    /// Attach the active fault plan so `cmd:metrics` replies carry
+    /// fresh injection counters even between admission flushes.
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>)
+                       -> Server {
+        self.ctx.faults = faults;
+        self
     }
 
     /// Serve until a shutdown command arrives. Binds `addr` (e.g.
@@ -80,16 +147,12 @@ impl Server {
         listener
             .set_nonblocking(true)
             .context("nonblocking listener")?;
-        while !self.stop.load(Ordering::Relaxed) {
+        while !self.ctx.stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let engines = self.engines.clone();
-                    let router = Arc::clone(&self.router);
-                    let metrics = Arc::clone(&self.metrics);
-                    let stop = Arc::clone(&self.stop);
+                    let ctx = self.ctx.clone();
                     pool.execute(move || {
-                        let _ = handle_conn(stream, &engines, &router,
-                                            &metrics, &stop);
+                        let _ = handle_conn(stream, &ctx);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -102,9 +165,7 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, engines: &[EngineHandle],
-               router: &Router, metrics: &Metrics,
-               stop: &AtomicBool) -> Result<()> {
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -112,67 +173,232 @@ fn handle_conn(stream: TcpStream, engines: &[EngineHandle],
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, engines, router, metrics,
-                                       stop, &mut writer) {
+        let reply = match process_line(&line, ctx, &mut writer) {
             Ok(v) => v,
             Err(e) => Value::obj().set("error", format!("{e:#}")),
         };
         writeln!(writer, "{reply}")?;
-        if stop.load(Ordering::Relaxed) {
+        if ctx.stop.load(Ordering::Relaxed) {
             break;
         }
     }
     Ok(())
 }
 
+/// One serve attempt's outcome, as seen by the retry loop.
+enum Attempt {
+    /// Terminal reply for the client (success or non-retryable error).
+    Done(Value),
+    /// The `--request-timeout-ms` deadline passed.
+    TimedOut,
+    /// The engine failed to deliver (reply channel dropped, or a
+    /// structured decode-thread-death error) before any token was
+    /// streamed — safe to resubmit elsewhere.
+    EngineFailure(String),
+}
+
+/// Errors that indicate the *engine* died rather than the request
+/// being bad — the only failures worth resubmitting elsewhere.
+fn is_engine_failure(msg: &str) -> bool {
+    msg.contains("decode thread") || msg.contains("engine closed")
+        || msg.contains("engine dropped reply")
+}
+
+/// Mark `idx` down in the router (clearing its residency
+/// advertisements) and refresh the supervision counters.
+fn mark_engine_down(ctx: &ConnCtx, idx: usize) {
+    if ctx.router.mark_down(idx) {
+        ctx.metrics.engine_down_events.fetch_add(1, Ordering::Relaxed);
+        crate::warn!("server: engine-{idx} marked down \
+                      ({} of {} down)",
+                     ctx.router.n_down(), ctx.engines.len());
+    }
+    ctx.metrics
+        .engines_down
+        .store(ctx.router.n_down() as u64, Ordering::Relaxed);
+}
+
+/// Pick an engine for `req`, skipping engines whose decode thread is
+/// already known dead (marking them down as discovered). The pick's
+/// in-flight debit is held for the chosen engine only. Falls back to
+/// the router's choice when every engine is down.
+fn pick_live(ctx: &ConnCtx, req: &ServeRequest) -> usize {
+    for _ in 0..ctx.engines.len() {
+        let idx = ctx.router.pick(&req.sample);
+        if ctx.engines[idx].is_alive() {
+            return idx;
+        }
+        ctx.router.done(idx);
+        mark_engine_down(ctx, idx);
+    }
+    ctx.router.pick(&req.sample)
+}
+
+/// Run one submit → event-drain attempt against engine `idx`. A
+/// delivery failure becomes a resubmittable [`Attempt::EngineFailure`]
+/// only while nothing was streamed yet; after the first streamed token
+/// the client already saw partial output, so the failure is terminal.
+fn serve_attempt(ctx: &ConnCtx, idx: usize, req: ServeRequest,
+                 deadline: Option<Instant>, writer: &mut impl Write)
+                 -> Result<Attempt> {
+    let (req_id, stream_tokens) = (req.id, req.stream);
+    let events = match ctx.engines[idx].submit(req) {
+        Ok(rx) => rx,
+        Err(e) => return Ok(Attempt::EngineFailure(format!("{e:#}"))),
+    };
+    let mut streamed = false;
+    let dropped = |streamed: bool| {
+        if streamed {
+            Attempt::Done(error_line(req_id, "engine dropped reply"))
+        } else {
+            Attempt::EngineFailure("engine dropped reply".to_string())
+        }
+    };
+    loop {
+        let ev = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return Ok(Attempt::TimedOut);
+                }
+                match events.recv_timeout(d - now) {
+                    Ok(ev) => ev,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Ok(Attempt::TimedOut);
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Ok(dropped(streamed));
+                    }
+                }
+            }
+            None => match events.recv() {
+                Ok(ev) => ev,
+                Err(_) => return Ok(dropped(streamed)),
+            },
+        };
+        match ev {
+            ev @ ServeEvent::Token { .. } => {
+                if stream_tokens {
+                    writeln!(writer, "{}", ev.to_json())?;
+                    streamed = true;
+                }
+            }
+            ServeEvent::Done(resp) => {
+                if !streamed
+                    && resp.error.as_deref().is_some_and(is_engine_failure)
+                {
+                    return Ok(Attempt::EngineFailure(
+                        resp.error.unwrap_or_default(),
+                    ));
+                }
+                return Ok(Attempt::Done(resp.to_json()));
+            }
+        }
+    }
+}
+
+/// Structured error line in the response schema.
+fn error_line(id: u64, msg: &str) -> Value {
+    ServeResponse {
+        id,
+        answer: vec![],
+        stats: Default::default(),
+        error: Some(msg.to_string()),
+    }
+    .to_json()
+}
+
 /// Handle one request line; streamed token lines are written to
 /// `writer` as they arrive, and the returned value is the terminal
 /// line (response or command result).
-fn process_line(line: &str, engines: &[EngineHandle], router: &Router,
-                metrics: &Metrics, stop: &AtomicBool,
-                writer: &mut impl Write) -> Result<Value> {
+fn process_line(line: &str, ctx: &ConnCtx, writer: &mut impl Write)
+                -> Result<Value> {
     let v = json::parse(line)?;
     if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
-            "metrics" => Ok(Value::obj()
-                .set("report", metrics.report())
-                .set("serving", metrics.serving_json())
-                .set("cache", metrics.cache_tiers_json())
-                .set("pool", metrics.pool_json())
-                .set("codec", metrics.codec_json())
-                .set("loads",
-                     Value::Arr(router
-                         .loads()
-                         .iter()
-                         .map(|&l| (l as i64).into())
-                         .collect()))),
+            "metrics" => {
+                if let Some(plan) = ctx.faults.as_deref() {
+                    ctx.metrics.record_faults(plan);
+                }
+                ctx.metrics.engines_down.store(
+                    ctx.router.n_down() as u64, Ordering::Relaxed);
+                Ok(Value::obj()
+                    .set("report", ctx.metrics.report())
+                    .set("serving", ctx.metrics.serving_json())
+                    .set("cache", ctx.metrics.cache_tiers_json())
+                    .set("pool", ctx.metrics.pool_json())
+                    .set("codec", ctx.metrics.codec_json())
+                    .set("faults", ctx.metrics.faults_json())
+                    .set("loads",
+                         Value::Arr(ctx.router
+                             .loads()
+                             .iter()
+                             .map(|&l| (l as i64).into())
+                             .collect())))
+            }
             "shutdown" => {
-                stop.store(true, Ordering::Relaxed);
+                ctx.stop.store(true, Ordering::Relaxed);
                 Ok(Value::obj().set("ok", true))
             }
             other => anyhow::bail!("unknown cmd `{other}`"),
         };
     }
     let req = ServeRequest::from_json(&v)?;
-    let stream_tokens = req.stream;
-    let idx = router.pick(&req.sample);
-    let events = engines[idx].submit(req);
-    let outcome = (|| -> Result<Value> {
-        let events = events?;
-        loop {
-            match events.recv() {
-                Ok(ev @ ServeEvent::Token { .. }) => {
-                    if stream_tokens {
-                        writeln!(writer, "{}", ev.to_json())?;
-                    }
+    let deadline = (ctx.timeout_ms > 0)
+        .then(|| Instant::now() + Duration::from_millis(ctx.timeout_ms));
+    // deterministic per-request jitter: retries from requests that
+    // failed together (one dead engine kills a whole wave) spread out
+    // instead of thundering onto the survivor in lockstep
+    let mut jitter = Rng::new(req.id ^ 0x5e1f_4ea1_0b5e_55ed);
+    let mut attempt = 0usize;
+    loop {
+        let idx = pick_live(ctx, &req);
+        let outcome = serve_attempt(ctx, idx, req.clone(), deadline,
+                                    writer);
+        ctx.router.done(idx);
+        match outcome? {
+            Attempt::Done(reply) => {
+                if attempt > 0 && reply.get("error").is_none() {
+                    ctx.metrics
+                        .retry_successes
+                        .fetch_add(1, Ordering::Relaxed);
                 }
-                Ok(ServeEvent::Done(resp)) => return Ok(resp.to_json()),
-                Err(_) => anyhow::bail!("engine dropped reply"),
+                return Ok(reply);
+            }
+            Attempt::TimedOut => {
+                ctx.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Ok(error_line(
+                    req.id,
+                    &format!("request timed out after {}ms",
+                             ctx.timeout_ms),
+                ));
+            }
+            Attempt::EngineFailure(msg) => {
+                mark_engine_down(ctx, idx);
+                if attempt >= ctx.retries {
+                    return Ok(error_line(
+                        req.id,
+                        &format!("engine failure after {attempt} \
+                                  retries: {msg}"),
+                    ));
+                }
+                attempt += 1;
+                ctx.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                let base = ctx.backoff_ms
+                    .saturating_mul(1 << (attempt - 1).min(6));
+                let mut wait = base
+                    + jitter.below((ctx.backoff_ms.max(1)) as usize)
+                        as u64;
+                if let Some(d) = deadline {
+                    let left = d.saturating_duration_since(Instant::now());
+                    wait = wait.min(left.as_millis() as u64);
+                }
+                if wait > 0 {
+                    std::thread::sleep(Duration::from_millis(wait));
+                }
             }
         }
-    })();
-    router.done(idx);
-    outcome
+    }
 }
 
 /// Minimal blocking client for examples, benches, and tests.

@@ -1,0 +1,383 @@
+//! Fault-injection integration over the tiny artifacts: a seeded
+//! [`samkv::faultinject::FaultPlan`] kills an engine's decode thread
+//! mid-round and corrupts disk-tier block records, and the self-healing
+//! machinery must keep every request terminal — token-identical answers
+//! on retry success, structured errors otherwise, zero hangs. Also
+//! exercises the disk tier's circuit breaker end to end: open at the
+//! consecutive-error threshold, short-circuit while open, re-close via
+//! a successful half-open probe.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use samkv::config::{DiskWriteback, ServingConfig};
+use samkv::coordinator::{Engine, Router, ServeRequest, ServeResponse};
+use samkv::faultinject::{FaultPlan, FaultSite};
+use samkv::kvcache::{
+    doc_hash, DiskDocCache, HostDocCache, KvBlockPool,
+    DEFAULT_KV_BLOCK_TOKENS,
+};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::server::{Client, Server};
+use samkv::workload::{Dataset, Sample};
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+fn cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("samkv-itest-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One single-engine serving stack over a disk cache dir (write-
+/// through), optionally with a fault plan attached to the disk tier.
+/// Serves the sample once; dropping the returns is a "restart".
+fn serve_once(dir: &PathBuf, plan: Option<Arc<FaultPlan>>, sample: &Sample)
+              -> (ServeResponse, Arc<Metrics>, Arc<DiskDocCache>) {
+    let metrics = Arc::new(Metrics::new());
+    let mut disk = DiskDocCache::open(dir, usize::MAX).unwrap();
+    if let Some(p) = plan {
+        disk = disk.with_faults(p);
+    }
+    let disk = Arc::new(disk);
+    let host = Arc::new(
+        HostDocCache::unbounded()
+            .with_disk(Arc::clone(&disk), DiskWriteback::Through),
+    );
+    let engine = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                               "Reuse".to_string(), Arc::clone(&metrics),
+                               host, None)
+        .unwrap();
+    let resp = engine
+        .handle()
+        .serve(ServeRequest {
+            id: 1,
+            sample: sample.clone(),
+            policy: String::new(),
+            stream: false,
+        })
+        .unwrap();
+    (resp, metrics, disk)
+}
+
+/// The headline self-healing path: engine 0's decode thread is killed
+/// by the fault plan on its first decode round with a request in
+/// flight. The server must mark it down, resubmit to the survivor, and
+/// return a token-identical success; follow-up requests must route to
+/// the survivor; the `cmd:metrics` wire must carry the fault counters.
+#[test]
+fn engine_kill_mid_round_retries_to_survivor() {
+    let Some(ds) = ready() else { return };
+
+    // find a sample that (a) routes to engine 0 on a fresh two-engine
+    // router (affinity fold, loads tied) and (b) decodes more than one
+    // token, so the round-2 kill lands with the session still active —
+    // a clean single-engine stack supplies the baseline answer
+    let base_metrics = Arc::new(Metrics::new());
+    let baseline = Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                                 "Reuse".to_string(),
+                                 Arc::clone(&base_metrics),
+                                 Arc::new(HostDocCache::unbounded()), None)
+        .unwrap();
+    let bh = baseline.handle();
+    let mut victim = None;
+    for attempt in 0i32..64 {
+        let mut s =
+            ds.samples[attempt as usize % ds.samples.len()].clone();
+        for d in &mut s.docs {
+            d[1] = samkv::tokenizer::filler_tok(
+                attempt % samkv::tokenizer::N_FILLERS);
+            d[2] = samkv::tokenizer::filler_tok(
+                (attempt * 7 + 3) % samkv::tokenizer::N_FILLERS);
+        }
+        if Router::affinity_hash(&s) % 2 != 0 {
+            continue;
+        }
+        let r = bh
+            .serve(ServeRequest { id: 1000 + attempt as u64,
+                                  sample: s.clone(),
+                                  policy: String::new(), stream: false })
+            .unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        if r.answer.len() >= 2 {
+            victim = Some((s, r.answer));
+            break;
+        }
+    }
+    drop(baseline);
+    let (sample, base_answer) = victim
+        .expect("no engine-0-affine multi-token sample in 64 tries");
+
+    // two-engine chaos stack: kill engine 0 on its second scheduler
+    // round (the first round of its first admitted wave is round 2)
+    let plan = Arc::new(
+        FaultPlan::parse("seed=11;engine_kill:engine=0:after=1").unwrap());
+    let metrics = Arc::new(Metrics::new());
+    let cfg = ServingConfig {
+        fault_plan: Some(Arc::clone(&plan)),
+        request_timeout_ms: 60_000,
+        retry_backoff_ms: 5,
+        ..tiny_cfg()
+    };
+    let host = Arc::new(HostDocCache::unbounded());
+    let router = Arc::new(Router::new(2));
+    let engines: Vec<Engine> = (0..2)
+        .map(|i| {
+            Engine::spawn(i, artifacts_dir(), cfg.clone(),
+                          "Reuse".to_string(), Arc::clone(&metrics),
+                          Arc::clone(&host),
+                          Some(router.residency_handle(i)))
+                .unwrap()
+        })
+        .collect();
+    let handles = engines.iter().map(|e| e.handle()).collect();
+    let server =
+        Server::with_router(handles, Arc::clone(&metrics),
+                            Arc::clone(&router))
+            .with_resilience(cfg.request_retries, cfg.retry_backoff_ms,
+                             cfg.request_timeout_ms)
+            .with_faults(Some(Arc::clone(&plan)));
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = thread::spawn(move || {
+        server.run("127.0.0.1:0", move |p| {
+            port_tx.send(p).unwrap();
+        })
+    });
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+
+    // all client traffic runs behind a watchdog: a request that never
+    // produces a terminal line is the one failure mode this subsystem
+    // exists to rule out
+    let extra: Vec<Sample> = (0..5)
+        .map(|i| ds.samples[i % ds.samples.len()].clone())
+        .collect();
+    let (done_tx, done_rx) = mpsc::channel();
+    {
+        let (addr, sample) = (addr.clone(), sample.clone());
+        thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let first = client
+                .request(&sample.docs, &sample.query, "Reuse")
+                .unwrap();
+            let rest: Vec<_> = extra
+                .iter()
+                .map(|s| {
+                    client.request(&s.docs, &s.query, "Reuse").unwrap()
+                })
+                .collect();
+            let m = client.metrics().unwrap();
+            done_tx.send((first, rest, m)).unwrap();
+        });
+    }
+    let (first, rest, m) = done_rx
+        .recv_timeout(Duration::from_secs(180))
+        .expect("chaos serving hung: no terminal responses within 180s");
+
+    assert!(first.get("error").is_none(),
+            "the killed-and-retried request must succeed: {first}");
+    assert_eq!(first.get("answer").unwrap().i32_vec().unwrap(),
+               base_answer,
+               "retry success must be token-identical to the clean \
+                baseline");
+    for r in &rest {
+        assert!(r.get("error").is_none(),
+                "post-kill requests must succeed on the survivor: {r}");
+    }
+    assert_eq!(plan.injected(FaultSite::EngineKill), 1);
+    assert!(router.is_down(0),
+            "the router must stop placing on the dead engine");
+    assert!(!router.is_down(1));
+    assert!(!engines[0].handle().is_alive());
+    assert!(engines[1].handle().is_alive());
+    assert!(metrics.retries.load(Ordering::Relaxed) >= 1,
+            "the failed attempt must be counted as a retry");
+    assert!(metrics.retry_successes.load(Ordering::Relaxed) >= 1,
+            "the resubmission must be counted as a retry success");
+    assert!(metrics.engine_down_events.load(Ordering::Relaxed) >= 1);
+
+    // the wire carries the fault counters
+    let f = m.get("faults").expect("cmd:metrics must carry `faults`");
+    assert_eq!(f.get("engine_kill").unwrap().as_i64(), Some(1), "{m}");
+    assert!(f.get("injected").unwrap().as_i64().unwrap() >= 1);
+    assert!(f.get("retry_successes").unwrap().as_i64().unwrap() >= 1);
+    assert!(f.get("engine_down_events").unwrap().as_i64().unwrap() >= 1);
+    assert_eq!(f.get("engines_down").unwrap().as_i64(), Some(1));
+    assert!(m.get("report").unwrap().as_str().unwrap()
+        .contains("faults(injected="),
+            "report must carry the faults segment");
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    srv.join().unwrap().unwrap();
+    drop(engines);
+}
+
+/// An engine whose decode thread died before any request arrived must
+/// fail requests promptly with structured errors — never hang the
+/// submitter — and flip its `is_alive` flag for the server's pre-check.
+#[test]
+fn dead_engine_fails_requests_promptly() {
+    let Some(ds) = ready() else { return };
+    let plan =
+        Arc::new(FaultPlan::parse("seed=3;engine_kill:engine=0").unwrap());
+    let cfg = ServingConfig { fault_plan: Some(Arc::clone(&plan)),
+                              ..tiny_cfg() };
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::spawn(0, artifacts_dir(), cfg,
+                               "Reuse".to_string(), Arc::clone(&metrics),
+                               Arc::new(HostDocCache::unbounded()), None)
+        .unwrap();
+    let h = engine.handle();
+
+    // the kill fires on the decode loop's first round, before any work
+    let t0 = Instant::now();
+    while h.is_alive() && t0.elapsed() < Duration::from_secs(30) {
+        thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!h.is_alive(), "injected kill must flip the alive flag");
+    assert_eq!(plan.injected(FaultSite::EngineKill), 1);
+
+    let (tx, rx) = mpsc::channel();
+    let s = ds.samples[0].clone();
+    thread::spawn(move || {
+        let serve = |id, sample: &Sample| {
+            h.serve(ServeRequest { id, sample: sample.clone(),
+                                   policy: String::new(), stream: false })
+                .map_err(|e| format!("{e:#}"))
+        };
+        let r1 = serve(1, &s);
+        let r2 = serve(2, &s);
+        tx.send((r1, r2)).unwrap();
+    });
+    let (r1, r2) = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("request against a dead engine hung");
+    for r in [r1, r2] {
+        match r {
+            Ok(resp) => {
+                let msg = resp.error
+                    .expect("a dead engine must not answer");
+                assert!(msg.contains("decode thread"), "{msg}");
+            }
+            Err(msg) => {
+                assert!(msg.contains("engine closed")
+                            || msg.contains("engine dropped reply"),
+                        "{msg}");
+            }
+        }
+    }
+}
+
+/// Breaker lifecycle on the disk tier, driven by injected read errors:
+/// open at the consecutive-error threshold, short-circuit while open
+/// (no device touch, no injection trial consumed), re-open on a failed
+/// half-open probe, re-close on a successful one — which then serves
+/// the entry.
+#[test]
+fn disk_breaker_opens_short_circuits_and_recloses() {
+    let Some(ds) = ready() else { return };
+    let dir = cache_dir("breaker");
+    let sample = ds.samples[0].clone();
+    {
+        let (resp, _, disk) = serve_once(&dir, None, &sample);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(disk.stats().spills >= 1, "populate pass must spill");
+    }
+
+    let plan =
+        Arc::new(FaultPlan::parse("seed=5;disk_read:count=4").unwrap());
+    let disk = DiskDocCache::open(&dir, usize::MAX)
+        .unwrap()
+        .with_breaker(2, Duration::from_millis(300))
+        .with_faults(Arc::clone(&plan));
+    let pool = Arc::new(KvBlockPool::new(DEFAULT_KV_BLOCK_TOKENS));
+    let doc = sample.docs[0].clone();
+    let h = doc_hash(&doc);
+    assert!(disk.contains(h), "populate pass must have persisted the doc");
+
+    // two injected read errors trip the threshold-2 breaker
+    assert!(disk.load(h, &doc, &pool).is_none());
+    assert!(!disk.breaker_is_open(), "one error must not trip it");
+    assert!(disk.load(h, &doc, &pool).is_none());
+    assert!(disk.breaker_is_open(), "threshold-2 breaker must open");
+    assert_eq!(disk.stats().breaker_opens, 1);
+
+    // while open: answered as a miss without touching the device, so
+    // no injection trial is consumed either
+    assert!(disk.load(h, &doc, &pool).is_none());
+    assert_eq!(disk.stats().breaker_short_circuits, 1);
+    assert_eq!(plan.injected(FaultSite::DiskRead), 2);
+
+    // failed half-open probes go straight back to open
+    thread::sleep(Duration::from_millis(400));
+    assert!(disk.load(h, &doc, &pool).is_none());
+    assert_eq!(disk.stats().breaker_opens, 2, "failed probe re-opens");
+    thread::sleep(Duration::from_millis(400));
+    assert!(disk.load(h, &doc, &pool).is_none());
+    assert_eq!(disk.stats().breaker_opens, 3);
+
+    // injection budget exhausted: the next probe reads for real,
+    // re-closes the breaker, and serves the entry
+    thread::sleep(Duration::from_millis(400));
+    assert!(disk.load(h, &doc, &pool).is_some(),
+            "healthy probe must serve the entry");
+    assert!(!disk.breaker_is_open());
+    let st = disk.stats();
+    assert_eq!(st.breaker_closes, 1);
+    assert_eq!(st.io_errors, 4);
+    assert_eq!(plan.injected(FaultSite::DiskRead), 4);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Injected block corruption on the write path must be caught by the
+/// per-record checksums on the next cold read and heal through the
+/// prefill fallback — token-identical answer, no error surfaced.
+#[test]
+fn injected_block_corruption_heals_on_restart() {
+    let Some(ds) = ready() else { return };
+    let dir = cache_dir("corrupt");
+    let sample = ds.samples[0].clone();
+    let plan = Arc::new(
+        FaultPlan::parse("seed=9;corrupt_block:every=1").unwrap());
+
+    let clean_answer = {
+        let (resp, _, disk) =
+            serve_once(&dir, Some(Arc::clone(&plan)), &sample);
+        assert!(resp.error.is_none(),
+                "corrupting spills must not fail the request: {:?}",
+                resp.error);
+        assert!(disk.stats().spills >= 1);
+        assert!(plan.injected(FaultSite::CorruptBlock) >= 1,
+                "every spill must have been corrupted");
+        resp.answer
+    };
+
+    // restart over the poisoned dir: each file lost one block record;
+    // reads must drop exactly those and the request must heal
+    {
+        let (resp, _, disk) = serve_once(&dir, None, &sample);
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.answer, clean_answer,
+                   "healed request must be token-identical");
+        assert!(disk.stats().corrupt_blocks >= 1,
+                "corrupted records must be detected, not served");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
