@@ -1143,6 +1143,340 @@ pub fn chaos_run(profile: &str, policy: &str, n_requests: usize,
     Ok(v)
 }
 
+// ---------------------------------------------------------------------------
+// Peers run — cluster-wide exactly-once prefill over two in-process nodes
+// ---------------------------------------------------------------------------
+
+/// One in-process cluster node: a single-engine serving stack behind a
+/// real TCP [`crate::server::Server`] with its host tier attached (so
+/// the node answers `peer_get`), optionally configured with a
+/// [`crate::server::peers::ClusterPeers`] fetcher.
+struct PeerNode {
+    metrics: std::sync::Arc<crate::metrics::Metrics>,
+    addr: String,
+    server: std::thread::JoinHandle<Result<()>>,
+    engines: Vec<crate::coordinator::Engine>,
+}
+
+fn spawn_peer_node(
+    profile: &str, policy: &str,
+    cluster: Option<(usize, Vec<String>,
+                     Option<std::sync::Arc<crate::faultinject::FaultPlan>>)>,
+) -> Result<PeerNode> {
+    use crate::config::ServingConfig;
+    use crate::coordinator::{Engine, Router};
+    use crate::kvcache::HostDocCache;
+    use crate::metrics::Metrics;
+    use crate::server::peers::ClusterPeers;
+    use crate::server::Server;
+    use std::sync::Arc;
+
+    let metrics = Arc::new(Metrics::new());
+    let defaults = ServingConfig::default();
+    let mut host = HostDocCache::unbounded();
+    if let Some((node_id, addrs, plan)) = cluster {
+        let peers = ClusterPeers::new(node_id, addrs,
+                                      defaults.peer_timeout_ms,
+                                      Arc::clone(&metrics))
+            .with_faults(plan);
+        host = host.with_peers(Arc::new(peers));
+    }
+    let host = Arc::new(host);
+    let router = Arc::new(Router::new(1));
+    let cfg =
+        ServingConfig { profile: profile.to_string(), ..defaults };
+    let engines = vec![Engine::spawn(
+        0, artifacts_dir(), cfg, policy.to_string(),
+        Arc::clone(&metrics), Arc::clone(&host),
+        Some(router.residency_handle(0)))?];
+    let handles: Vec<_> = engines.iter().map(|e| e.handle()).collect();
+    let server =
+        Server::with_router(handles, Arc::clone(&metrics), router)
+            .with_host(Arc::clone(&host));
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        server.run("127.0.0.1:0", |p| {
+            let _ = port_tx.send(p);
+        })
+    });
+    let port = port_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("peer node did not bind"))?;
+    Ok(PeerNode {
+        metrics,
+        addr: format!("127.0.0.1:{port}"),
+        server: server_thread,
+        engines,
+    })
+}
+
+fn shutdown_peer_node(node: PeerNode) {
+    if let Ok(mut c) = crate::server::Client::connect(&node.addr) {
+        let _ = c.shutdown();
+    }
+    let _ = node.server.join();
+    drop(node.engines);
+}
+
+/// Drive `n_requests` through one node over a single client
+/// connection at `arrival_rps` (0 = as fast as possible). Returns
+/// `(completed, error_replies, answers_fnv, wall_s)` — the digest
+/// covers every answered request's tokens in request order, so two
+/// nodes serving the same workload compare token-for-token.
+fn drive_peer_node(addr: &str, policy: &str,
+                   samples: &[crate::workload::Sample],
+                   n_requests: usize, arrival_rps: f64)
+                   -> Result<(usize, usize, u64, f64)> {
+    let mut client = crate::server::Client::connect(addr)?;
+    let gap = if arrival_rps > 0.0 {
+        std::time::Duration::from_secs_f64(1.0 / arrival_rps)
+    } else {
+        std::time::Duration::ZERO
+    };
+    let t0 = std::time::Instant::now();
+    let (mut completed, mut errors) = (0usize, 0usize);
+    let mut bytes = Vec::new();
+    for i in 0..n_requests {
+        if i > 0 && !gap.is_zero() {
+            std::thread::sleep(gap);
+        }
+        let s = &samples[i % samples.len()];
+        let v = client.request(&s.docs, &s.query, policy)?;
+        completed += 1;
+        if v.get("error").is_some() {
+            errors += 1;
+        } else if let Some(toks) =
+            v.get("answer").and_then(|a| a.i32_vec())
+        {
+            bytes.extend_from_slice(&(i as u64).to_le_bytes());
+            for t in toks {
+                bytes.extend_from_slice(&t.to_le_bytes());
+            }
+        }
+    }
+    Ok((completed, errors, crate::kvcache::store::fnv64(&bytes),
+        t0.elapsed().as_secs_f64()))
+}
+
+/// Two-node cluster smoke: proves the exactly-once prefill guarantee
+/// is **cluster-wide**. Every document is steered (by mutating its
+/// last token) to be rendezvous-owned by node 0; node 0 serves the
+/// workload once (paying the only prefills in the cluster), then the
+/// nodes × arrival-rate grid runs each cell on a **fresh** node — the
+/// single-node cells re-prefill locally (the baseline), the two-node
+/// cells must serve entirely over `peer_get` with **zero** model
+/// prefills and token-identical answers. With a `--fault-plan`
+/// carrying a `peer_fetch` site, a final pass proves injected peer
+/// failures degrade to local prefills with 100% completion. The
+/// persisted row also captures the typed `cmd:metrics` wire contract
+/// (`schema_version` + the `peers` object).
+pub fn peers_run(profile: &str, policy: &str, n_requests: usize,
+                 n_unique: usize, fault_spec: Option<&str>)
+                 -> Result<Value> {
+    use crate::faultinject::FaultPlan;
+    use crate::kvcache::doc_hash;
+    use crate::server::peers::rendezvous_owner;
+    use std::sync::Arc;
+
+    let n_requests = n_requests.max(1);
+    let plan = match fault_spec {
+        Some(spec) => Some(Arc::new(FaultPlan::parse(spec)?)),
+        None => None,
+    };
+    println!("== Peers run: profile {profile}, policy {policy}, \
+              {n_requests} requests over {} doc-sets, 2 nodes{}\n",
+             n_unique.max(1),
+             match &plan {
+                 Some(p) => format!(", plan `{}` (seed {})",
+                                    p.spec(), p.seed()),
+                 None => String::new(),
+             });
+    // steer every document's hash to node 0 of 2 so node 1's only
+    // warm path is the peer fetch — doc_prefills==0 on node 1 then
+    // IS the cluster-wide exactly-once assertion
+    let samples = {
+        let model = load_model(profile)?;
+        let vocab = model.cfg.vocab as i32;
+        let mut rng = crate::rng::Rng::new(2026);
+        let mut ss: Vec<_> = (0..n_unique.max(1))
+            .map(|_| crate::workload::synthetic_sample(&model.cfg,
+                                                       &mut rng))
+            .collect();
+        for s in &mut ss {
+            for doc in &mut s.docs {
+                let last = doc.len() - 1;
+                while rendezvous_owner(doc_hash(doc), 2) != 0 {
+                    doc[last] = (doc[last] + 1).rem_euclid(vocab);
+                }
+            }
+        }
+        ss
+        // the probe model (and its runtime) drops here, before the
+        // nodes spawn their own
+    };
+
+    // node 0 — the owner. No peer fetcher of its own (it owns every
+    // doc); its server answers `peer_get` from the attached host tier.
+    let node_a = spawn_peer_node(profile, policy, None)?;
+    let (a_completed, a_errors, a_fnv, _) =
+        drive_peer_node(&node_a.addr, policy, &samples, n_requests,
+                        0.0)?;
+    anyhow::ensure!(a_completed == n_requests && a_errors == 0,
+                    "owner node failed its warmup pass \
+                     ({a_completed}/{n_requests}, {a_errors} errors)");
+    let a_fnv = format!("{a_fnv:016x}");
+    // node 1's peer list: [owner, self]. Its own slot is never dialed
+    // (self-owned hashes skip the fetcher), so a placeholder is fine.
+    let cluster_for = |plan: Option<Arc<FaultPlan>>| {
+        (1usize, vec![node_a.addr.clone(), "127.0.0.1:1".to_string()],
+         plan)
+    };
+    let load = |a: &std::sync::atomic::AtomicU64| {
+        a.load(std::sync::atomic::Ordering::Relaxed) as i64
+    };
+
+    // the nodes × arrival-rate axis: every cell is a fresh (cold) node
+    let rates = [0.0, 32.0];
+    let mut tbl = Table::new(&["nodes", "rate r/s", "req/s",
+                               "prefills", "peer hits", "peer miss"]);
+    let mut rows = Vec::new();
+    let mut exactly_once = true;
+    let mut two_node_fnv = String::new();
+    for nodes in [1usize, 2] {
+        for rate in rates {
+            let node = if nodes == 1 {
+                spawn_peer_node(profile, policy, None)?
+            } else {
+                spawn_peer_node(profile, policy,
+                                Some(cluster_for(None)))?
+            };
+            let (completed, errors, fnv, wall) =
+                drive_peer_node(&node.addr, policy, &samples,
+                                n_requests, rate)?;
+            let m = Arc::clone(&node.metrics);
+            let prefills = load(&m.doc_prefills);
+            if nodes == 2 {
+                exactly_once &= completed == n_requests
+                    && errors == 0
+                    && prefills == 0;
+                if rate == 0.0 {
+                    two_node_fnv = format!("{fnv:016x}");
+                }
+            }
+            tbl.row(vec![
+                format!("{nodes}"),
+                if rate > 0.0 { format!("{rate:.0}") }
+                else { "max".to_string() },
+                format!("{:.2}", completed as f64 / wall.max(1e-9)),
+                format!("{prefills}"),
+                format!("{}", load(&m.peer_fetch_hits)),
+                format!("{}", load(&m.peer_fetch_misses)),
+            ]);
+            rows.push(Value::obj()
+                .set("nodes", nodes)
+                .set("arrival_rps", rate)
+                .set("requests", n_requests)
+                .set("completed", completed)
+                .set("errors", errors)
+                .set("wall_s", wall)
+                .set("req_per_s", completed as f64 / wall.max(1e-9))
+                .set("doc_prefills", prefills)
+                .set("peer_fetch_hits", load(&m.peer_fetch_hits))
+                .set("peer_fetch_misses", load(&m.peer_fetch_misses))
+                .set("peer_bytes_in", load(&m.peer_bytes_in))
+                .set("peer_fetch_p50_ms",
+                     m.peer_fetch.percentile_ms(0.50))
+                .set("peer_fetch_p95_ms",
+                     m.peer_fetch.percentile_ms(0.95))
+                .set("answers_fnv", format!("{fnv:016x}")));
+            shutdown_peer_node(node);
+        }
+    }
+    tbl.print();
+
+    // fault arm: injected peer-fetch failures must degrade to local
+    // prefills — 100% completion, zero failed requests
+    let fault_row = match &plan {
+        Some(plan) => {
+            let node = spawn_peer_node(
+                profile, policy,
+                Some(cluster_for(Some(Arc::clone(plan)))))?;
+            let (completed, errors, fnv, _) =
+                drive_peer_node(&node.addr, policy, &samples,
+                                n_requests, 0.0)?;
+            node.metrics.record_faults(plan);
+            let row = Value::obj()
+                .set("completed", completed)
+                .set("errors", errors)
+                .set("faults_peer_fetch",
+                     load(&node.metrics.faults_peer_fetch))
+                .set("peer_fetch_hits",
+                     load(&node.metrics.peer_fetch_hits))
+                .set("peer_fetch_misses",
+                     load(&node.metrics.peer_fetch_misses))
+                .set("doc_prefills", load(&node.metrics.doc_prefills))
+                .set("answers_fnv", format!("{fnv:016x}"));
+            println!("fault arm: {completed}/{n_requests} completed, \
+                      {} injected peer faults, {} local prefills\n",
+                     load(&node.metrics.faults_peer_fetch),
+                     load(&node.metrics.doc_prefills));
+            anyhow::ensure!(
+                completed == n_requests && errors == 0,
+                "peer fault plan broke completion \
+                 ({completed}/{n_requests}, {errors} errors)");
+            shutdown_peer_node(node);
+            row
+        }
+        None => Value::Null,
+    };
+
+    // typed wire contract: schema stamp + the peers object, with the
+    // owner's served bytes visible on it
+    let wire = {
+        let mut c = crate::server::Client::connect(&node_a.addr)?;
+        c.metrics()?
+    };
+    let schema =
+        wire.get("schema_version").and_then(|v| v.as_i64()).unwrap_or(0);
+    anyhow::ensure!(
+        schema as u32 == crate::server::protocol::METRICS_SCHEMA_VERSION,
+        "metrics reply schema_version {schema} != {}",
+        crate::server::protocol::METRICS_SCHEMA_VERSION);
+    let bytes_out = wire
+        .get("peers")
+        .and_then(|p| p.get("bytes_out"))
+        .and_then(|v| v.as_i64())
+        .unwrap_or(-1);
+    anyhow::ensure!(bytes_out > 0,
+                    "owner served no peer bytes on the wire: {wire}");
+    shutdown_peer_node(node_a);
+
+    anyhow::ensure!(exactly_once,
+                    "cluster-wide exactly-once violated: a two-node \
+                     cell prefilled locally or dropped requests");
+    anyhow::ensure!(two_node_fnv == a_fnv,
+                    "two-node answers differ from the owner's \
+                     ({two_node_fnv} != {a_fnv})");
+    println!("peers: cluster-wide exactly-once holds (0 prefills on \
+              node 1), answers identical across nodes\n");
+
+    let v = Value::obj()
+        .set("experiment", "peers")
+        .set("model", profile)
+        .set("policy", policy)
+        .set("requests", n_requests)
+        .set("unique_docsets", n_unique.max(1))
+        .set("schema_version", schema)
+        .set("exactly_once_cluster_wide", exactly_once)
+        .set("owner_answers_fnv", a_fnv.as_str())
+        .set("answers_match_owner", true)
+        .set("fault_plan", fault_spec.unwrap_or(""))
+        .set("fault_arm", fault_row)
+        .set("rows", Value::Arr(rows));
+    save_result(&format!("peers_{profile}_{policy}"), &v)?;
+    Ok(v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -310,6 +310,19 @@ pub struct ServingConfig {
     /// one disk operation through (`--disk-breaker-probe-ms`);
     /// probe success re-closes it, failure re-opens.
     pub disk_breaker_probe_ms: u64,
+    /// Cluster peer addresses (`--peers host:port,host:port,…`), one
+    /// per node **including this node's own address** — the list's
+    /// order defines node ids and must be identical on every node so
+    /// rendezvous ownership agrees cluster-wide. Empty disables the
+    /// peer tier (single-node mode).
+    pub peers: Vec<String>,
+    /// This process's index into `peers` (`--node-id`).
+    pub node_id: usize,
+    /// Connect/read/write timeout for one peer fetch
+    /// (`--peer-timeout-ms`). A timeout is a miss — the request falls
+    /// back to a local prefill, so this bounds the worst-case added
+    /// latency of a down peer.
+    pub peer_timeout_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -335,6 +348,9 @@ impl Default for ServingConfig {
             retry_backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
             disk_breaker_threshold: DEFAULT_DISK_BREAKER_THRESHOLD,
             disk_breaker_probe_ms: DEFAULT_DISK_BREAKER_PROBE_MS,
+            peers: Vec::new(),
+            node_id: 0,
+            peer_timeout_ms: DEFAULT_PEER_TIMEOUT_MS,
         }
     }
 }
@@ -357,6 +373,12 @@ pub const DEFAULT_DISK_BREAKER_PROBE_MS: u64 = 500;
 /// Default `--kv-hot-blocks`: how many leading blocks of a document
 /// stay at full f32 precision under a lossy codec.
 pub const DEFAULT_KV_HOT_BLOCKS: usize = 4;
+
+/// Default `--peer-timeout-ms`: per-fetch peer transport deadline.
+/// Deliberately tight — a peer fetch races against "just prefill it
+/// locally", so waiting longer than a typical prefill is never worth
+/// it.
+pub const DEFAULT_PEER_TIMEOUT_MS: u64 = 250;
 
 #[cfg(test)]
 mod tests {
@@ -478,6 +500,16 @@ mod tests {
         // the config (and its fault plan) must stay debuggable
         let d = format!("{c:?}");
         assert!(d.contains("fault_plan: None"), "{d}");
+    }
+
+    #[test]
+    fn peer_defaults_single_node() {
+        let c = ServingConfig::default();
+        assert!(c.peers.is_empty(), "peer tier defaults off");
+        assert_eq!(c.node_id, 0);
+        assert_eq!(c.peer_timeout_ms, DEFAULT_PEER_TIMEOUT_MS);
+        assert!(c.peer_timeout_ms > 0,
+                "a zero transport deadline would hang fetches");
     }
 
     #[test]

@@ -639,12 +639,14 @@ fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
         match hit {
             // already resident: free
             Ok((_, TierHit::Resident)) => continue,
-            // host- or disk-tier hit — but the lookup may have blocked
-            // on another engine's in-flight prefill lease, or paid a
-            // disk load the prefetch missed; attribute that wait to
-            // the sharers' doc_prefill time (cache still warm: no
-            // local model prefill ran)
-            Ok((_, TierHit::Host)) | Ok((_, TierHit::Disk)) => {
+            // host-, disk-, or peer-tier hit — but the lookup may have
+            // blocked on another engine's in-flight prefill lease, or
+            // paid a disk load / peer fetch the prefetch missed;
+            // attribute that wait to the sharers' doc_prefill time
+            // (cache still warm: no local model prefill ran)
+            Ok((_, TierHit::Host))
+            | Ok((_, TierHit::Disk))
+            | Ok((_, TierHit::Peer)) => {
                 let share =
                     t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
                 for &si in &live {

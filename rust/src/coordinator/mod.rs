@@ -47,6 +47,33 @@
 //! ([`crate::faultinject`]) and observable through
 //! [`crate::metrics::Metrics`] (`retries`, `retry_successes`,
 //! `timeouts`, `engine_down_events`, `engines_down`).
+//!
+//! # Peer ownership (`--peers` mode)
+//!
+//! In a multi-node cluster the same contract extends across
+//! processes. Every node derives the same document owner from the
+//! content hash alone —
+//! [`crate::server::peers::rendezvous_owner`], no coordination, no
+//! ownership table — so the coordinator's placement story has a
+//! cluster-level analogue: the in-process router steers a request to
+//! the engine already holding its documents, and the peer tier steers
+//! a host-tier miss to the *node* that owns it. On such a miss the
+//! engine's admission thread, already holding the per-document
+//! prefill lease, asks the owner for the serialized entry
+//! ([`crate::kvcache::TierHit::Peer`]) before paying a model prefill;
+//! concurrent engines and concurrent nodes alike coalesce on the
+//! lease, which is what makes the exactly-once prefill guarantee
+//! cluster-wide.
+//!
+//! The degradation contract mirrors the engine-death one: a peer
+//! fetch can fail (connection refused, timeout, checksum mismatch,
+//! injected [`crate::faultinject::FaultSite::PeerFetch`]) and every
+//! failure is *a cache miss, never a failed request* — the admission
+//! thread falls through to a local prefill under the same lease, and
+//! the dead peer sits in a down-cooldown so subsequent misses
+//! fail-fast instead of re-paying the connect timeout. The optional
+//! [`crate::server::front::FrontEnd`] applies the router's own
+//! mark-down/retry discipline one level up, across whole nodes.
 
 pub mod batcher;
 pub mod engine;

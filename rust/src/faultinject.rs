@@ -63,10 +63,15 @@ pub enum FaultSite {
     /// The engine's decode thread dies mid-round (exits its loop,
     /// dropping every in-flight session).
     EngineKill,
+    /// Peer host-tier fetch fails as an injected miss (falling back
+    /// to disk/prefill like a real peer error), after sleeping the
+    /// rule's `ms` first — so one site carries both the error arm and
+    /// the latency arm (`ms=0` for a pure fast failure).
+    PeerFetch,
 }
 
 /// Number of distinct [`FaultSite`]s (array-table size).
-pub const N_SITES: usize = 7;
+pub const N_SITES: usize = 8;
 
 impl FaultSite {
     /// All sites, in stable counter order.
@@ -78,6 +83,7 @@ impl FaultSite {
         FaultSite::CodecDecode,
         FaultSite::DocPrefill,
         FaultSite::EngineKill,
+        FaultSite::PeerFetch,
     ];
 
     /// Stable spec/metrics name of this site.
@@ -90,6 +96,7 @@ impl FaultSite {
             FaultSite::CodecDecode => "codec_decode",
             FaultSite::DocPrefill => "doc_prefill",
             FaultSite::EngineKill => "engine_kill",
+            FaultSite::PeerFetch => "peer_fetch",
         }
     }
 
@@ -396,7 +403,7 @@ mod tests {
             names,
             vec!["disk_read", "disk_write", "disk_latency",
                  "corrupt_block", "codec_decode", "doc_prefill",
-                 "engine_kill"]
+                 "engine_kill", "peer_fetch"]
         );
         assert_eq!(p.counts()[3], ("corrupt_block", 1));
     }

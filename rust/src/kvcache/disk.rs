@@ -1328,6 +1328,75 @@ fn gather_logical(lay: &KvLayout, blocks: &[(u32, Vec<f32>)]) -> Tensor {
     out
 }
 
+/// Serialize one **complete** in-RAM entry into the v3 wire image —
+/// the peer-RPC export path (see [`crate::server::peers`]). Returns
+/// `None` when any block is non-resident: peers only exchange
+/// complete entries, so the receiver can publish under its prefill
+/// lease without a partial-entry state machine on the wire.
+pub fn entry_to_bytes(entry: &DocEntry, codec: &Arc<dyn KvCodec>)
+                      -> Option<Vec<u8>> {
+    let lay = entry.kv.layout();
+    let mut blocks: Vec<(u32, Vec<f32>)> = Vec::new();
+    for b in entry.kv.resident_block_indexes() {
+        blocks.push((b, entry.kv.block_data(b as usize)?));
+    }
+    if blocks.len() != lay.n_blocks() {
+        return None;
+    }
+    blocks.sort_by_key(|(b, _)| *b);
+    Some(encode_entry(entry.hash, &entry.tokens, &lay, &entry.attn,
+                      &entry.q_local, &blocks, codec))
+}
+
+/// Decode a wire image (from a peer) straight into `pool`-backed
+/// blocks — the read mirror of [`entry_to_bytes`], running the same
+/// checksum / token-identity / geometry verdicts as a disk load
+/// (cross-codec via the per-record tag, cross-`block_tokens` via the
+/// logical re-block path). Returns `None` unless the image is
+/// complete and verifies end-to-end: a damaged, truncated, or
+/// hash-colliding peer payload is a miss, never a served entry.
+pub fn entry_from_bytes(expect_hash: u64, expect_tokens: &[i32],
+                        pool: &Arc<KvBlockPool>, bytes: &[u8])
+                        -> Option<DocEntry> {
+    let meta = decode_meta(expect_hash, bytes).ok()?;
+    if meta.tokens.as_slice() != expect_tokens {
+        return None; // collision: never serve another document's KV
+    }
+    let lay = meta.layout;
+    let (blocks, _bad) = decode_blocks(&lay, bytes, meta.meta_end,
+                                       meta.version, pool.codec());
+    if blocks.len() != lay.n_blocks() {
+        return None;
+    }
+    if lay.block_tokens == pool.block_tokens() {
+        let kv = KvBlocks::empty(pool, lay);
+        for (b, data) in &blocks {
+            kv.restore_block(*b as usize, data).ok()?;
+        }
+        if !kv.is_fully_resident() {
+            return None;
+        }
+        // physical (post-codec) bytes, matching `from_parts`
+        let total = kv.resident_bytes() + meta.attn.size_bytes()
+            + meta.q_local.size_bytes();
+        Some(DocEntry {
+            hash: expect_hash,
+            tokens: meta.tokens,
+            kv,
+            attn: meta.attn,
+            q_local: meta.q_local,
+            bytes: total,
+        })
+    } else {
+        // the sender ran a different --kv-block-tokens: re-block
+        // losslessly through the full tensor
+        let kv = gather_logical(&lay, &blocks);
+        DocEntry::from_parts(pool, meta.tokens, kv, meta.attn,
+                             meta.q_local)
+            .ok()
+    }
+}
+
 fn parse_entry_name(name: &str) -> Option<u64> {
     let hex = name.strip_prefix("doc_")?.strip_suffix(".kv")?;
     if hex.len() != 16 {

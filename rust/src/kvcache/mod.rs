@@ -104,6 +104,29 @@
 //! hashes from disk ([`EngineDocCache::prefetch_from_disk`]) while
 //! decode keeps running, so disk latency overlaps compute.
 //!
+//! # The peer tier (`--peers` mode)
+//!
+//! With `--peers addr0,addr1,… --node-id I` the host tier gains one
+//! more rung between disk and prefill: every document hash has exactly
+//! one **owning node** under rendezvous hashing
+//! (`server::peers::rendezvous_owner` — stable under node-set changes,
+//! shared with the front end's placement), and a node whose local
+//! tiers all miss a *remotely owned* document asks the owner for the
+//! serialized entry over the `peer_get` RPC **under its own prefill
+//! lease**, decoding the reply (the checksummed disk-tier v3 wire
+//! format, [`entry_from_bytes`]) straight into the block pool. A hit
+//! is [`TierHit::Peer`]: warm, zero model prefills here — and, because
+//! the owner ran its own exactly-once lease, zero anywhere else. The
+//! exactly-once prefill guarantee is thereby **cluster-wide**. Peers
+//! exchange only complete entries ([`entry_to_bytes`] /
+//! [`HostDocCache::export_wire`] refuse partials); `--disk-writeback
+//! off` replicas serve as pre-seeded read-only warm starts. The
+//! degradation contract matches disk exactly: any peer error, timeout,
+//! down-cooldown, or injected `peer_fetch` fault is a **miss** — the
+//! request falls through to a local prefill and never fails. See
+//! [`store::PeerFetcher`] (the trait the server's `ClusterPeers`
+//! implements) and `server::peers` for the transport.
+//!
 //! # The codec layer
 //!
 //! Beneath the tiers sits a pluggable block codec ([`codec`],
@@ -209,7 +232,7 @@ pub use assembly::{AssembledContext, BlockRef, SlotKind};
 pub use codec::{
     codec_by_id, codec_for, CodecSnapshot, CodecStats, KvCodec,
 };
-pub use disk::{DiskDocCache, DiskStats};
+pub use disk::{entry_from_bytes, entry_to_bytes, DiskDocCache, DiskStats};
 pub use evict::{
     eviction_policy_by_name, CostAwarePolicy, EvictionCandidate,
     EvictionPolicy, LruPolicy, WHOLE_ENTRY,
@@ -224,5 +247,5 @@ pub use pool::{
 pub use residency::{ResidencyBoard, ResidencyHandle};
 pub use store::{
     doc_hash, CacheStats, DocEntry, EngineDocCache, HostDocCache,
-    PinGuard, TierHit, PIN_ALL,
+    PeerFetcher, PinGuard, TierHit, PIN_ALL,
 };

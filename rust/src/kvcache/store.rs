@@ -61,7 +61,7 @@ use crate::model::{Model, PrefillDocOut};
 use crate::tensor::Tensor;
 
 use super::codec::KvCodec;
-use super::disk::DiskDocCache;
+use super::disk::{self as disk_mod, DiskDocCache};
 use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy,
                    WHOLE_ENTRY};
 use super::pool::{KvBlockPool, KvBlocks, DEFAULT_KV_BLOCK_TOKENS};
@@ -270,16 +270,38 @@ pub enum HostLookup {
     Miss(PrefillLease),
 }
 
+/// Cluster peer access for the host tier, implemented by
+/// `crate::server::peers::ClusterPeers`. Lives here (not in the
+/// server layer) so the cache hierarchy can consult peers under the
+/// prefill lease without a kvcache → server dependency.
+///
+/// The fetch side of the multi-node degradation contract: `fetch`
+/// must map **every** failure — dead peer, timeout, truncation,
+/// injected fault, honest miss — to `None`, which the caller treats
+/// exactly like a disk miss (fall through to the local model
+/// prefill).
+pub trait PeerFetcher: Send + Sync {
+    /// True when another node owns this document hash (consistent
+    /// hashing) — the only case a fetch is attempted.
+    fn owner_is_remote(&self, hash: u64) -> bool;
+
+    /// Ask the owning peer for the serialized entry image (the disk
+    /// v3 wire format, see [`super::disk::entry_from_bytes`]).
+    fn fetch(&self, hash: u64, tokens: &[i32]) -> Option<Vec<u8>>;
+}
+
 /// The shared host tier: thread-safe, content-addressed document cache
 /// with a byte budget, block-granular pluggable eviction over a
-/// [`KvBlockPool`], pin guards, exactly-once prefill leasing, and an
+/// [`KvBlockPool`], pin guards, exactly-once prefill leasing, an
 /// optional persistent [`DiskDocCache`] tier beneath it (per-block
-/// spill on eviction / write-through per [`DiskWriteback`]).
+/// spill on eviction / write-through per [`DiskWriteback`]), and an
+/// optional cluster [`PeerFetcher`] beside the disk tier (`--peers`).
 pub struct HostDocCache {
     inner: Mutex<HostInner>,
     published: Condvar,
     policy: Box<dyn EvictionPolicy>,
     disk: Option<DiskTier>,
+    peers: Option<Arc<dyn PeerFetcher>>,
     pool: Arc<KvBlockPool>,
 }
 
@@ -321,6 +343,7 @@ impl HostDocCache {
             published: Condvar::new(),
             policy,
             disk: None,
+            peers: None,
             pool: Arc::new(KvBlockPool::new(DEFAULT_KV_BLOCK_TOKENS)),
         }
     }
@@ -375,6 +398,43 @@ impl HostDocCache {
     /// The attached tier's writeback mode, if any.
     pub fn disk_writeback(&self) -> Option<DiskWriteback> {
         self.disk.as_ref().map(|d| d.writeback)
+    }
+
+    /// Attach the cluster peer fetcher (`--peers` mode): a whole-entry
+    /// host+disk miss asks the owning peer for the serialized entry —
+    /// under the same prefill lease — before paying a model prefill,
+    /// making the exactly-once guarantee cluster-wide.
+    pub fn with_peers(mut self, peers: Arc<dyn PeerFetcher>)
+                      -> HostDocCache {
+        self.peers = Some(peers);
+        self
+    }
+
+    /// The attached peer fetcher, if any.
+    pub fn peers(&self) -> Option<&Arc<dyn PeerFetcher>> {
+        self.peers.as_ref()
+    }
+
+    /// Serve one document to a cluster peer: the serialized **complete**
+    /// entry image from this tier (bumping its recency like any hit),
+    /// falling through to a complete disk-tier record. `None` — a
+    /// partial or absent document — is the peer-miss reply; the asker
+    /// degrades to its own prefill, so this never blocks on a lease.
+    pub fn export_wire(&self, hash: u64, tokens: &[i32])
+                       -> Option<Vec<u8>> {
+        if let Some(entry) = self.try_lookup(hash, tokens) {
+            if let Some(bytes) =
+                disk_mod::entry_to_bytes(&entry, self.pool.codec())
+            {
+                return Some(bytes);
+            }
+        }
+        let disk = self.disk()?;
+        let entry = disk.load(hash, tokens, &self.pool)?;
+        if !entry.kv.is_fully_resident() {
+            return None;
+        }
+        disk_mod::entry_to_bytes(&entry, self.pool.codec())
     }
 
     /// Unbounded tier (eval harness / tests).
@@ -960,6 +1020,11 @@ pub enum TierHit {
     /// tier — no model prefill ran. Includes per-block refills of a
     /// partially evicted document served entirely from disk.
     Disk,
+    /// Fetched from the owning cluster peer (`--peers` mode): the
+    /// serialized entry shipped over the wire, decoded into the pool,
+    /// and published to the host tier — no model prefill ran here or
+    /// (thanks to the owner's own exactly-once lease) anywhere else.
+    Peer,
     /// Cold somewhere: this call ran a prefill (whole document, or the
     /// missing blocks of a partial one) and published the result.
     Prefilled,
@@ -1186,6 +1251,27 @@ impl EngineDocCache {
                         lease.publish(Arc::clone(&entry));
                         self.admit(Arc::clone(&entry));
                         return Ok((entry, TierHit::Prefilled));
+                    }
+                }
+                // last warm chance: the owning cluster peer. Any
+                // failure (dead peer, timeout, damaged payload,
+                // injected fault) decodes to None and degrades to the
+                // prefill below — the request never fails on a peer.
+                let peers = self.host.peers().cloned();
+                if let Some(peers) = &peers {
+                    if peers.owner_is_remote(h) {
+                        if let Some(entry) = peers
+                            .fetch(h, tokens)
+                            .and_then(|bytes| {
+                                disk_mod::entry_from_bytes(
+                                    h, tokens, self.host.pool(), &bytes)
+                            })
+                        {
+                            let entry = Arc::new(entry);
+                            lease.publish(Arc::clone(&entry));
+                            self.admit(Arc::clone(&entry));
+                            return Ok((entry, TierHit::Peer));
+                        }
                     }
                 }
                 // prefill outside any lock; on error the lease drop
@@ -1758,6 +1844,7 @@ mod tests {
         assert!(TierHit::Resident.is_warm());
         assert!(TierHit::Host.is_warm());
         assert!(TierHit::Disk.is_warm());
+        assert!(TierHit::Peer.is_warm());
         assert!(!TierHit::Prefilled.is_warm());
     }
 

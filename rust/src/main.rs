@@ -107,6 +107,34 @@ fn dispatch(cmd: &str, args: &Args) -> samkv::Result<()> {
             )?;
             Ok(())
         }
+        "front" => {
+            let nodes: Vec<String> = args
+                .get_str("nodes", "")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if nodes.is_empty() {
+                anyhow::bail!("front needs --nodes host:port,host:port,…");
+            }
+            let port = args.get::<u16>("port", 7170);
+            let fe = samkv::server::front::FrontEnd::new(nodes);
+            fe.run(&format!("127.0.0.1:{port}"), |p| {
+                info!("front end listening on 127.0.0.1:{p}");
+                println!("READY {p}");
+            })?;
+            Ok(())
+        }
+        "peers" => {
+            exp::peers_run(
+                &profile,
+                &args.get_str("policy", "SamKV-fusion"),
+                args.get::<usize>("requests", 16),
+                args.get::<usize>("unique", 4),
+                args.opt("fault-plan"),
+            )?;
+            Ok(())
+        }
         "chaos" => {
             exp::chaos_run(
                 &profile,
@@ -163,6 +191,18 @@ fn print_help() {
                --fault-plan SPEC (deterministic fault injection, e.g.\n  \
                 \"seed=7;disk_read:after=1:every=2;\\\n  \
                  engine_kill:engine=0:after=3\")\n  \
+               --peers host:port,… --node-id I (multi-node host-tier\n  \
+                sharding: rendezvous owners serve peer_get fetches so\n  \
+                each unique doc prefills once cluster-wide; the list\n  \
+                must be identical on every node and include this one)\n  \
+               --peer-timeout-ms N (peer fetch deadline, default 250;\n  \
+                any peer error degrades to a local prefill)\n  \
+         front --nodes host:port,host:port,… --port N\n  \
+               (thin cluster front end: owner-aware placement via the\n  \
+                engine router, node retry/mark-down, fan-out metrics)\n  \
+         peers --policy NAME --requests N --unique N [--fault-plan SPEC]\n  \
+               (two-node smoke: proves cluster-wide exactly-once\n  \
+                prefill and prints one JSON row)\n  \
          table1|fig1|table3|table4|fig7|fig8  (paper experiments)\n  \
          throughput --policy NAME --requests N --unique N --engines N\n  \
                     --batch-sizes 1,4 --rates 0,32\n  \
@@ -269,8 +309,26 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
             "disk-breaker-threshold", defaults.disk_breaker_threshold),
         disk_breaker_probe_ms: args.get::<u64>(
             "disk-breaker-probe-ms", defaults.disk_breaker_probe_ms),
+        peers: {
+            let list = args.get_str("peers", "");
+            if list.is_empty() {
+                Vec::new()
+            } else {
+                list.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            }
+        },
+        node_id: args.get::<usize>("node-id", defaults.node_id),
+        peer_timeout_ms: args.get::<u64>("peer-timeout-ms",
+                                         defaults.peer_timeout_ms),
         ..defaults
     };
+    if !cfg.peers.is_empty() && cfg.node_id >= cfg.peers.len() {
+        anyhow::bail!("--node-id {} out of range for {} peers",
+                      cfg.node_id, cfg.peers.len());
+    }
     if let Some(plan) = cfg.fault_plan.as_deref() {
         info!("fault injection armed: {} (seed {})",
               plan.spec(), plan.seed());
@@ -318,6 +376,22 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
               cfg.disk_writeback.name());
         host = host.with_disk(disk, cfg.disk_writeback);
     }
+    // the cluster peer tier: on a local miss of a remotely-owned
+    // document, ask the rendezvous owner for the serialized entry
+    // before paying a model prefill — the exactly-once guarantee goes
+    // cluster-wide. Errors and timeouts degrade to local prefills.
+    if !cfg.peers.is_empty() {
+        let mut cluster = samkv::server::peers::ClusterPeers::new(
+            cfg.node_id, cfg.peers.clone(), cfg.peer_timeout_ms,
+            Arc::clone(&metrics))
+            .with_faults(cfg.fault_plan.clone());
+        if let Some(ms) = args.opt("peer-down-cooldown-ms") {
+            cluster = cluster.with_cooldown_ms(ms.parse()?);
+        }
+        info!("peer tier armed: node {} of {} ({}ms timeout)",
+              cfg.node_id, cfg.peers.len(), cfg.peer_timeout_ms);
+        host = host.with_peers(Arc::new(cluster));
+    }
     let host = Arc::new(host);
     let router = Arc::new(Router::new(n_engines));
     info!("spawning {n_engines} engine(s), profile {profile}, default \
@@ -339,7 +413,11 @@ fn serve_cmd(args: &Args, profile: &str) -> samkv::Result<()> {
     let server = Server::with_router(handles, metrics, router)
         .with_resilience(cfg.request_retries, cfg.retry_backoff_ms,
                          cfg.request_timeout_ms)
-        .with_faults(cfg.fault_plan.clone());
+        .with_faults(cfg.fault_plan.clone())
+        // always attach the host tier so this node can answer
+        // `peer_get` (a single-node server is a valid one-node cluster
+        // — and a warm-start donor for `--disk-writeback off` replicas)
+        .with_host(Arc::clone(&host));
     server.run(&format!("127.0.0.1:{port}"), |p| {
         info!("listening on 127.0.0.1:{p}");
         println!("READY {p}");

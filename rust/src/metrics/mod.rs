@@ -205,6 +205,7 @@ pub struct Metrics {
     pub faults_codec_decode: AtomicU64,
     pub faults_doc_prefill: AtomicU64,
     pub faults_engine_kill: AtomicU64,
+    pub faults_peer_fetch: AtomicU64,
     /// Self-healing serving: requests resubmitted to a surviving
     /// engine after a delivery failure, and how many of those retries
     /// ultimately produced an answer (direct event counts).
@@ -229,6 +230,18 @@ pub struct Metrics {
     pub disk_breaker_open: AtomicU64,
     pub disk_quarantined_bytes: AtomicU64,
     pub disk_quarantine_drops: AtomicU64,
+    /// Multi-node peer tier (`--peers`, see `server::peers`): direct
+    /// event counts — each node counts only its own outbound fetches
+    /// (`peer_fetch_hits`/`peer_fetch_misses`/`peer_bytes_in`) and the
+    /// entry bytes it served to others (`peer_bytes_out`); `peers_down`
+    /// is a gauge of peers currently in down-cooldown.
+    pub peer_fetch_hits: AtomicU64,
+    pub peer_fetch_misses: AtomicU64,
+    pub peer_bytes_in: AtomicU64,
+    pub peer_bytes_out: AtomicU64,
+    pub peers_down: AtomicU64,
+    /// Peer fetch latency (dial + transfer) per successful fetch.
+    pub peer_fetch: Histogram,
     started: Mutex<Option<Instant>>,
 }
 
@@ -392,6 +405,7 @@ impl Metrics {
                 "codec_decode" => &self.faults_codec_decode,
                 "doc_prefill" => &self.faults_doc_prefill,
                 "engine_kill" => &self.faults_engine_kill,
+                "peer_fetch" => &self.faults_peer_fetch,
                 _ => continue,
             };
             counter.fetch_max(n, Ordering::Relaxed);
@@ -413,6 +427,7 @@ impl Metrics {
             .set("codec_decode", g(&self.faults_codec_decode))
             .set("doc_prefill", g(&self.faults_doc_prefill))
             .set("engine_kill", g(&self.faults_engine_kill))
+            .set("peer_fetch", g(&self.faults_peer_fetch))
             .set("retries", g(&self.retries))
             .set("retry_successes", g(&self.retry_successes))
             .set("timeouts", g(&self.timeouts))
@@ -589,6 +604,23 @@ impl Metrics {
                           self.disk_load.percentile_ms(0.95)))
     }
 
+    /// The multi-node peer tier's counters as a JSON object (the
+    /// `peers` object on the `cmd:metrics` wire and in bench
+    /// artifacts). All zeros on a single-node stack — the object is
+    /// always present so wire consumers need no feature probing.
+    pub fn peers_json(&self) -> Value {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as i64;
+        Value::obj()
+            .set("fetch_hits", g(&self.peer_fetch_hits))
+            .set("fetch_misses", g(&self.peer_fetch_misses))
+            .set("bytes_in", g(&self.peer_bytes_in))
+            .set("bytes_out", g(&self.peer_bytes_out))
+            .set("down", g(&self.peers_down))
+            .set("fetch_mean_ms", self.peer_fetch.mean_ms())
+            .set("fetch_p50_ms", self.peer_fetch.percentile_ms(0.50))
+            .set("fetch_p95_ms", self.peer_fetch.percentile_ms(0.95))
+    }
+
     pub fn uptime_s(&self) -> f64 {
         self.started
             .lock()
@@ -626,6 +658,8 @@ impl Metrics {
              evicted={} spilled={} shares={} partial={}) \
              codec({} encoded={} decoded={} ratio={:.2} \
              decode_mean={:.3}ms) \
+             peers(hits={} misses={} in={} out={} down={} \
+             fetch_mean={:.1}ms) \
              faults(injected={} retries={} retry_ok={} timeouts={} \
              engine_down={} down_now={}) \
              breaker(open={} opens={} closes={} short_circuits={} \
@@ -690,6 +724,12 @@ impl Metrics {
             self.codec_blocks_decoded.load(Ordering::Relaxed),
             self.codec_compression_ratio(),
             self.codec_decode.mean_ms(),
+            self.peer_fetch_hits.load(Ordering::Relaxed),
+            self.peer_fetch_misses.load(Ordering::Relaxed),
+            self.peer_bytes_in.load(Ordering::Relaxed),
+            self.peer_bytes_out.load(Ordering::Relaxed),
+            self.peers_down.load(Ordering::Relaxed),
+            self.peer_fetch.mean_ms(),
             self.faults_injected.load(Ordering::Relaxed),
             self.retries.load(Ordering::Relaxed),
             self.retry_successes.load(Ordering::Relaxed),
@@ -848,6 +888,7 @@ mod tests {
         m.engines_down.store(1, Ordering::Relaxed);
         let j = m.faults_json().to_string();
         for field in ["\"injected\"", "\"disk_read\"", "\"engine_kill\"",
+                      "\"peer_fetch\"",
                       "\"retries\"", "\"retry_successes\"",
                       "\"timeouts\"", "\"engine_down_events\"",
                       "\"engines_down\"", "\"disk_io_errors\"",
@@ -859,6 +900,45 @@ mod tests {
         let r = m.report();
         assert!(r.contains("faults(injected=2"), "{r}");
         assert!(r.contains("breaker(open=0"), "{r}");
+    }
+
+    #[test]
+    fn peer_counters_flush() {
+        let m = Metrics::new();
+        // direct event counts (each node counts its own fetches)
+        m.peer_fetch_hits.fetch_add(3, Ordering::Relaxed);
+        m.peer_fetch_misses.fetch_add(2, Ordering::Relaxed);
+        m.peer_bytes_in.fetch_add(4096, Ordering::Relaxed);
+        m.peer_bytes_out.fetch_add(1024, Ordering::Relaxed);
+        m.peers_down.store(1, Ordering::Relaxed);
+        m.peer_fetch.observe_ms(1.0);
+        m.peer_fetch.observe_ms(3.0);
+        let j = m.peers_json().to_string();
+        for field in ["\"fetch_hits\"", "\"fetch_misses\"",
+                      "\"bytes_in\"", "\"bytes_out\"", "\"down\"",
+                      "\"fetch_mean_ms\"", "\"fetch_p50_ms\"",
+                      "\"fetch_p95_ms\""] {
+            assert!(j.contains(field), "{field}: {j}");
+        }
+        assert!(j.contains("\"fetch_hits\":3"), "{j}");
+        assert!(j.contains("\"bytes_out\":1024"), "{j}");
+        assert!(crate::json::parse(&j).is_ok(), "{j}");
+        let r = m.report();
+        assert!(r.contains("peers(hits=3 misses=2 in=4096 out=1024 \
+                            down=1"),
+                "{r}");
+    }
+
+    #[test]
+    fn peers_json_all_zero_on_single_node_stack() {
+        // single-node stacks still carry the object (wire consumers
+        // need no feature probing) with every counter at zero
+        let m = Metrics::new();
+        let j = m.peers_json().to_string();
+        assert!(j.contains("\"fetch_hits\":0"), "{j}");
+        assert!(j.contains("\"down\":0"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+        assert!(crate::json::parse(&j).is_ok(), "{j}");
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Thin multi-node front end: one listener that places each serve
+//! request on a cluster node and relays the reply stream verbatim.
+//!
+//! `samkv front --nodes addr0,addr1,… --port P` reuses the
+//! cache-aware [`Router`] across **nodes** instead of engines: every
+//! document hash in a request is advertised on its rendezvous owner's
+//! residency slot ([`super::peers::rendezvous_owner`] — the same
+//! ownership function the nodes' peer fetch uses), so
+//! [`Router::pick`]'s residency stage sends doc-sharing requests to
+//! the node that owns (or will own) their KV, its affinity stage keeps
+//! a document set sticky when ownership ties, and least-loaded breaks
+//! the rest. One placement logic, engine-level and cluster-level.
+//!
+//! # Degradation
+//!
+//! A node that fails a forward is marked down ([`Router::mark_down`] —
+//! its residency advertisements clear) and the request retries on a
+//! survivor, unless tokens were already relayed (the client saw
+//! partial output; it gets a structured error, mirroring the engine
+//! retry contract). With every node down the router falls back to
+//! all nodes, so a recovered node is re-probed and marked back up on
+//! its first success. `cmd:metrics` fans out to every live node and
+//! returns the per-node replies with a `front` summary; `shutdown`
+//! fans out and then stops the front end.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Router;
+use crate::exec::ThreadPool;
+use crate::json::{self, Value};
+use crate::kvcache::doc_hash;
+
+use super::peers::rendezvous_owner;
+use super::protocol::{self, Decoded, Request};
+
+pub struct FrontEnd {
+    ctx: FrontCtx,
+}
+
+#[derive(Clone)]
+struct FrontCtx {
+    nodes: Vec<String>,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    /// Document hashes already advertised on their owner's slot (the
+    /// board dedupes, this just skips the lock on the hot path).
+    seeded: Arc<Mutex<HashSet<u64>>>,
+}
+
+/// One lazily dialed upstream node connection.
+struct Upstream {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Upstream {
+    fn connect(addr: &str) -> Result<Upstream> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect node {addr}"))?;
+        Ok(Upstream {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+        })
+    }
+}
+
+impl FrontEnd {
+    pub fn new(nodes: Vec<String>) -> FrontEnd {
+        assert!(!nodes.is_empty(), "front end needs at least one node");
+        let router = Arc::new(Router::new(nodes.len()));
+        FrontEnd {
+            ctx: FrontCtx {
+                nodes,
+                router,
+                stop: Arc::new(AtomicBool::new(false)),
+                seeded: Arc::new(Mutex::new(HashSet::new())),
+            },
+        }
+    }
+
+    /// The cluster router (tests observe placement/down state).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.ctx.router
+    }
+
+    /// Serve until shutdown; same bind/callback contract as
+    /// [`super::Server::run`].
+    pub fn run(&self, addr: &str, on_bound: impl FnOnce(u16))
+               -> Result<()> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        on_bound(listener.local_addr()?.port());
+        let pool = ThreadPool::new(4, "front");
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        while !self.ctx.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let ctx = self.ctx.clone();
+                    pool.execute(move || {
+                        let _ = handle_conn(stream, &ctx);
+                    });
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: &FrontCtx) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // per-connection upstream cache: requests on one client
+    // connection are sequential, so one socket per node suffices
+    let mut upstreams: Vec<Option<Upstream>> =
+        (0..ctx.nodes.len()).map(|_| None).collect();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        let line = line.trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = match Request::decode(&line) {
+            Ok(Decoded::Reply(v)) => v,
+            Ok(Decoded::Request(Request::Serve(req))) => {
+                match forward_serve(ctx, &mut upstreams, &line, &req,
+                                    &mut writer)? {
+                    Some(v) => v,
+                    None => continue, // terminal line already relayed
+                }
+            }
+            Ok(Decoded::Request(Request::Metrics)) => {
+                fanout_cmd(ctx, &mut upstreams, &line, false)
+            }
+            Ok(Decoded::Request(Request::Shutdown)) => {
+                let v = fanout_cmd(ctx, &mut upstreams, &line, true);
+                ctx.stop.store(true, Ordering::Relaxed);
+                v
+            }
+            Ok(Decoded::Request(Request::PeerGet { .. })) => {
+                protocol::write_peer_miss(&mut writer,
+                                          "front end holds no entries")?;
+                continue;
+            }
+            Err(e) => protocol::error_reply(&format!("{e:#}")),
+        };
+        protocol::write_value(&mut writer, &reply)?;
+        if ctx.stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Advertise each document hash on its rendezvous owner's residency
+/// slot, once — this is what makes [`Router::pick`] owner-aware.
+fn seed_ownership(ctx: &FrontCtx, req: &crate::coordinator::ServeRequest) {
+    let mut seeded = ctx.seeded.lock().unwrap();
+    for doc in &req.sample.docs {
+        let h = doc_hash(doc);
+        if seeded.insert(h) {
+            let owner = rendezvous_owner(h, ctx.nodes.len());
+            ctx.router.residency_handle(owner).insert(h);
+        }
+    }
+}
+
+/// Forward one serve line, relaying every upstream line (token stream
+/// included) to the client. Returns `Ok(None)` when the terminal line
+/// was already relayed, `Ok(Some(reply))` when the caller must still
+/// write a reply (the all-retries-failed error).
+fn forward_serve(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
+                 line: &str, req: &crate::coordinator::ServeRequest,
+                 client: &mut impl Write) -> Result<Option<Value>> {
+    seed_ownership(ctx, req);
+    let mut last_err = String::new();
+    for _ in 0..ctx.nodes.len().max(1) {
+        let idx = ctx.router.pick(&req.sample);
+        let outcome = relay_once(ctx, upstreams, idx, line, client);
+        ctx.router.done(idx);
+        match outcome {
+            Ok(()) => {
+                ctx.router.mark_up(idx);
+                return Ok(None);
+            }
+            Err(RelayError::Upstream(e)) => {
+                // nothing reached the client yet — safe to retry on
+                // a survivor
+                upstreams[idx] = None;
+                if ctx.router.mark_down(idx) {
+                    crate::warn!("front: node {idx} marked down: {e:#}");
+                }
+                last_err = format!("{e:#}");
+            }
+            Err(RelayError::Client(e)) => return Err(e),
+            Err(RelayError::MidStream(e)) => {
+                // the client saw partial output: structured error,
+                // mirroring the server's no-resubmit-after-token rule
+                upstreams[idx] = None;
+                if ctx.router.mark_down(idx) {
+                    crate::warn!("front: node {idx} died mid-stream: \
+                                  {e:#}");
+                }
+                return Ok(Some(Value::obj()
+                    .set("id", req.id as i64)
+                    .set("error",
+                         format!("node failed mid-stream: {e:#}"))));
+            }
+        }
+    }
+    Ok(Some(Value::obj()
+        .set("id", req.id as i64)
+        .set("error",
+             format!("all {} nodes failed: {last_err}",
+                     ctx.nodes.len()))))
+}
+
+enum RelayError {
+    /// Upstream failed before anything was relayed — retryable.
+    Upstream(anyhow::Error),
+    /// Upstream failed after token lines were relayed — terminal.
+    MidStream(anyhow::Error),
+    /// The client connection itself broke.
+    Client(anyhow::Error),
+}
+
+/// Write `line` to node `idx` and relay upstream lines until the
+/// terminal one (the line without a `token` field).
+fn relay_once(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
+              idx: usize, line: &str, client: &mut impl Write)
+              -> std::result::Result<(), RelayError> {
+    if upstreams[idx].is_none() {
+        upstreams[idx] = Some(
+            Upstream::connect(&ctx.nodes[idx])
+                .map_err(RelayError::Upstream)?,
+        );
+    }
+    let up = upstreams[idx].as_mut().unwrap();
+    writeln!(up.writer, "{line}")
+        .map_err(|e| RelayError::Upstream(e.into()))?;
+    let mut relayed = false;
+    loop {
+        let mut reply = String::new();
+        let n = up.reader.read_line(&mut reply).map_err(|e| {
+            if relayed {
+                RelayError::MidStream(e.into())
+            } else {
+                RelayError::Upstream(e.into())
+            }
+        })?;
+        if n == 0 {
+            let e = anyhow::anyhow!("node closed mid-request");
+            return Err(if relayed {
+                RelayError::MidStream(e)
+            } else {
+                RelayError::Upstream(e)
+            });
+        }
+        let v = json::parse(&reply).map_err(|e| {
+            if relayed {
+                RelayError::MidStream(e)
+            } else {
+                RelayError::Upstream(e)
+            }
+        })?;
+        let terminal = v.get("token").is_none();
+        client
+            .write_all(reply.as_bytes())
+            .map_err(|e| RelayError::Client(e.into()))?;
+        if terminal {
+            return Ok(());
+        }
+        relayed = true;
+    }
+}
+
+/// Fan a command line out to every node, tolerating down nodes.
+/// Returns the per-node replies plus a `front` summary object.
+fn fanout_cmd(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
+              line: &str, best_effort: bool) -> Value {
+    let mut replies = Vec::new();
+    for idx in 0..ctx.nodes.len() {
+        let one = (|| -> Result<Value> {
+            if upstreams[idx].is_none() {
+                upstreams[idx] = Some(Upstream::connect(&ctx.nodes[idx])?);
+            }
+            let up = upstreams[idx].as_mut().unwrap();
+            writeln!(up.writer, "{line}")?;
+            let mut reply = String::new();
+            if up.reader.read_line(&mut reply)? == 0 {
+                anyhow::bail!("node closed");
+            }
+            json::parse(&reply)
+        })();
+        replies.push(match one {
+            Ok(v) => v,
+            Err(e) => {
+                upstreams[idx] = None;
+                if !best_effort && ctx.router.mark_down(idx) {
+                    crate::warn!("front: node {idx} marked down on \
+                                  command fan-out: {e:#}");
+                }
+                Value::obj().set("error", format!("{e:#}"))
+            }
+        });
+    }
+    Value::obj()
+        .set("front",
+             Value::obj()
+                 .set("nodes", ctx.nodes.len() as i64)
+                 .set("down", ctx.router.n_down() as i64))
+        .set("nodes", Value::Arr(replies))
+}

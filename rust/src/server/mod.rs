@@ -1,6 +1,9 @@
 //! JSON-lines-over-TCP serving front end + matching client.
 //!
-//! Wire format: one JSON object per line.
+//! All framing/parse logic lives in [`protocol`] — one typed,
+//! versioned encode/decode implementation shared by this server, the
+//! [`Client`], and the peer RPC ([`peers`]). Wire format: one JSON
+//! object per line.
 //! Request:  `{"id":1,"docs":[[...]],"query":[...],"policy":"SamKV-fusion",
 //!             "stream":true}`
 //! Response: `{"id":1,"answer":[...],"ttft_ms":...,"plan_ms":...,
@@ -9,9 +12,10 @@
 //! `{"id":1,"index":0,"token":...}` is written per generated token
 //! (SSE-style incremental output) before the final response line; the
 //! terminal line is the one carrying `answer` (or `error`).
-//! `{"cmd":"metrics"}` returns the metrics report, per-engine loads,
-//! the continuous-batching serving snapshot (`{"serving":{...}}` —
-//! queue-wait/TTFT/e2e p50+p95, active-session count, fused decode
+//! `{"cmd":"metrics"}` returns the metrics report (stamped with
+//! `schema_version` — [`protocol::METRICS_SCHEMA_VERSION`]), per-engine
+//! loads, the continuous-batching serving snapshot (`{"serving":{...}}`
+//! — queue-wait/TTFT/e2e p50+p95, active-session count, fused decode
 //! round counters, and the batched-dispatch gauges: `batched_rounds`,
 //! `round_executions` / `executions_per_round`, `lane_occupancy`,
 //! `assemble_overlap_ms`), and the per-tier document-cache counters
@@ -28,8 +32,18 @@
 //! and the dequantization-latency mean/p50/p95), and the
 //! fault/self-healing counters (`{"faults":{...}}` — per-site
 //! injection totals plus retry/timeout/engine-down/circuit-breaker
-//! accounting, see [`crate::faultinject`]);
+//! accounting, see [`crate::faultinject`]), and the multi-node peer
+//! counters (`{"peers":{...}}` — fetch hits/misses, latency p50/p95,
+//! bytes shipped in/out, down-peer count, see [`peers`]);
 //! `{"cmd":"shutdown"}` stops the listener.
+//!
+//! The same listener also answers the peer RPC
+//! (`{"cmd":"peer_get",...}`, see [`protocol::Request::PeerGet`]):
+//! when a host tier is attached ([`Server::with_host`]), a hit ships
+//! the serialized disk-format entry image; any miss, mismatch, or
+//! missing tier answers a structured peer-miss line. Unknown or
+//! newer-versioned commands answer a structured `unsupported` reply
+//! instead of dropping the connection.
 //!
 //! # Self-healing request path
 //!
@@ -47,6 +61,10 @@
 //! runs under one deadline and returns a structured timeout error
 //! instead of waiting unboundedly.
 
+pub mod front;
+pub mod peers;
+pub mod protocol;
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -62,8 +80,11 @@ use crate::coordinator::{
 use crate::exec::ThreadPool;
 use crate::faultinject::FaultPlan;
 use crate::json::{self, Value};
+use crate::kvcache::{doc_hash, HostDocCache};
 use crate::metrics::Metrics;
 use crate::rng::Rng;
+
+use protocol::{Decoded, Request};
 
 pub struct Server {
     ctx: ConnCtx,
@@ -86,6 +107,9 @@ struct ConnCtx {
     /// Active fault plan, flushed into metrics on `cmd:metrics` so the
     /// wire always reports fresh injection counters.
     faults: Option<Arc<FaultPlan>>,
+    /// Shared host tier, when attached — enables serving `peer_get`
+    /// so this node can ship entries it owns to cluster peers.
+    host: Option<Arc<HostDocCache>>,
 }
 
 impl Server {
@@ -111,6 +135,7 @@ impl Server {
                 backoff_ms: DEFAULT_RETRY_BACKOFF_MS,
                 timeout_ms: 0,
                 faults: None,
+                host: None,
             },
         }
     }
@@ -132,6 +157,14 @@ impl Server {
     pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>)
                        -> Server {
         self.ctx.faults = faults;
+        self
+    }
+
+    /// Attach the shared host tier so this listener answers the
+    /// `peer_get` RPC — required for a node to serve its owned
+    /// documents to `--peers` cluster members.
+    pub fn with_host(mut self, host: Arc<HostDocCache>) -> Server {
+        self.ctx.host = Some(host);
         self
     }
 
@@ -167,20 +200,64 @@ impl Server {
 
 fn handle_conn(stream: TcpStream, ctx: &ConnCtx) -> Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break; // EOF
+        }
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process_line(&line, ctx, &mut writer) {
-            Ok(v) => v,
-            Err(e) => Value::obj().set("error", format!("{e:#}")),
+        let reply = match Request::decode(&line) {
+            // unknown/newer command: structured reply, keep the
+            // connection — mixed-version peers negotiate down
+            Ok(Decoded::Reply(v)) => v,
+            Ok(Decoded::Request(Request::PeerGet { hash, tokens })) => {
+                // blob framing: the handler writes the header (+ raw
+                // payload on a hit) itself; no JSON reply line follows
+                serve_peer_get(ctx, &mut writer, hash, &tokens)?;
+                continue;
+            }
+            Ok(Decoded::Request(req)) => {
+                match process_request(req, ctx, &mut writer) {
+                    Ok(v) => v,
+                    Err(e) => protocol::error_reply(&format!("{e:#}")),
+                }
+            }
+            Err(e) => protocol::error_reply(&format!("{e:#}")),
         };
-        writeln!(writer, "{reply}")?;
+        protocol::write_value(&mut writer, &reply)?;
         if ctx.stop.load(Ordering::Relaxed) {
             break;
         }
+    }
+    Ok(())
+}
+
+/// Answer one `peer_get`: ship the serialized entry when this node
+/// holds the document (host tier, falling through to its disk tier),
+/// a structured miss line otherwise. Misses here are normal — the
+/// asking peer degrades to its own disk/prefill path.
+fn serve_peer_get(ctx: &ConnCtx, writer: &mut impl Write, hash: u64,
+                  tokens: &[i32]) -> Result<()> {
+    let Some(host) = ctx.host.as_ref() else {
+        protocol::write_peer_miss(writer, "no host tier attached")?;
+        return Ok(());
+    };
+    if doc_hash(tokens) != hash {
+        // collision or a confused peer: never serve mismatched KV
+        protocol::write_peer_miss(writer, "hash mismatch")?;
+        return Ok(());
+    }
+    match host.export_wire(hash, tokens) {
+        Some(bytes) => {
+            ctx.metrics
+                .peer_bytes_out
+                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            protocol::write_peer_hit(writer, hash, &bytes)?;
+        }
+        None => protocol::write_peer_miss(writer, "miss")?,
     }
     Ok(())
 }
@@ -308,42 +385,45 @@ fn error_line(id: u64, msg: &str) -> Value {
     .to_json()
 }
 
-/// Handle one request line; streamed token lines are written to
+/// Handle one decoded request; streamed token lines are written to
 /// `writer` as they arrive, and the returned value is the terminal
-/// line (response or command result).
-fn process_line(line: &str, ctx: &ConnCtx, writer: &mut impl Write)
-                -> Result<Value> {
-    let v = json::parse(line)?;
-    if let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) {
-        return match cmd {
-            "metrics" => {
-                if let Some(plan) = ctx.faults.as_deref() {
-                    ctx.metrics.record_faults(plan);
-                }
-                ctx.metrics.engines_down.store(
-                    ctx.router.n_down() as u64, Ordering::Relaxed);
-                Ok(Value::obj()
-                    .set("report", ctx.metrics.report())
-                    .set("serving", ctx.metrics.serving_json())
-                    .set("cache", ctx.metrics.cache_tiers_json())
-                    .set("pool", ctx.metrics.pool_json())
-                    .set("codec", ctx.metrics.codec_json())
-                    .set("faults", ctx.metrics.faults_json())
-                    .set("loads",
-                         Value::Arr(ctx.router
-                             .loads()
-                             .iter()
-                             .map(|&l| (l as i64).into())
-                             .collect())))
+/// line (response or command result). `PeerGet` never reaches here —
+/// its blob framing is handled in [`handle_conn`].
+fn process_request(req: Request, ctx: &ConnCtx, writer: &mut impl Write)
+                   -> Result<Value> {
+    let req = match req {
+        Request::Metrics => {
+            if let Some(plan) = ctx.faults.as_deref() {
+                ctx.metrics.record_faults(plan);
             }
-            "shutdown" => {
-                ctx.stop.store(true, Ordering::Relaxed);
-                Ok(Value::obj().set("ok", true))
-            }
-            other => anyhow::bail!("unknown cmd `{other}`"),
-        };
-    }
-    let req = ServeRequest::from_json(&v)?;
+            ctx.metrics.engines_down.store(
+                ctx.router.n_down() as u64, Ordering::Relaxed);
+            return Ok(Value::obj()
+                .set("schema_version",
+                     protocol::METRICS_SCHEMA_VERSION as i64)
+                .set("report", ctx.metrics.report())
+                .set("serving", ctx.metrics.serving_json())
+                .set("cache", ctx.metrics.cache_tiers_json())
+                .set("pool", ctx.metrics.pool_json())
+                .set("codec", ctx.metrics.codec_json())
+                .set("faults", ctx.metrics.faults_json())
+                .set("peers", ctx.metrics.peers_json())
+                .set("loads",
+                     Value::Arr(ctx.router
+                         .loads()
+                         .iter()
+                         .map(|&l| (l as i64).into())
+                         .collect())));
+        }
+        Request::Shutdown => {
+            ctx.stop.store(true, Ordering::Relaxed);
+            return Ok(Value::obj().set("ok", true));
+        }
+        Request::PeerGet { .. } => {
+            anyhow::bail!("peer_get reached process_request")
+        }
+        Request::Serve(req) => req,
+    };
     let deadline = (ctx.timeout_ms > 0)
         .then(|| Instant::now() + Duration::from_millis(ctx.timeout_ms));
     // deterministic per-request jitter: retries from requests that
@@ -401,7 +481,9 @@ fn process_line(line: &str, ctx: &ConnCtx, writer: &mut impl Write)
     }
 }
 
-/// Minimal blocking client for examples, benches, and tests.
+/// Minimal blocking client for examples, benches, and tests. Builds
+/// every outbound line through [`protocol::Request::encode`] — the
+/// same encoder the peer fetcher uses.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -420,40 +502,34 @@ impl Client {
     }
 
     fn roundtrip(&mut self, msg: &Value) -> Result<Value> {
-        writeln!(self.writer, "{msg}")?;
+        protocol::write_value(&mut self.writer, msg)?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         json::parse(&line)
     }
 
-    fn request_value(&mut self, docs: &[Vec<i32>], query: &[i32],
-                     policy: &str, stream: bool) -> Value {
+    fn serve_value(&mut self, docs: &[Vec<i32>], query: &[i32],
+                   policy: &str, stream: bool) -> Value {
         let id = self.next_id;
         self.next_id += 1;
-        let mut msg = Value::obj()
-            .set("id", id as i64)
-            .set("docs",
-                 Value::Arr(docs
-                     .iter()
-                     .map(|d| {
-                         Value::Arr(d.iter()
-                             .map(|&t| (t as i64).into())
-                             .collect())
-                     })
-                     .collect()))
-            .set("query",
-                 Value::Arr(query.iter().map(|&t| (t as i64).into()).collect()))
-            .set("policy", policy);
-        if stream {
-            msg = msg.set("stream", true);
-        }
-        msg
+        Request::Serve(ServeRequest {
+            id,
+            sample: crate::workload::Sample {
+                docs: docs.to_vec(),
+                query: query.to_vec(),
+                answer: Vec::new(),
+                qtype: "served".to_string(),
+            },
+            policy: policy.to_string(),
+            stream,
+        })
+        .encode()
     }
 
     /// Serve one request; returns the parsed response object.
     pub fn request(&mut self, docs: &[Vec<i32>], query: &[i32],
                    policy: &str) -> Result<Value> {
-        let msg = self.request_value(docs, query, policy, false);
+        let msg = self.serve_value(docs, query, policy, false);
         self.roundtrip(&msg)
     }
 
@@ -462,8 +538,8 @@ impl Client {
     pub fn request_stream(&mut self, docs: &[Vec<i32>], query: &[i32],
                           policy: &str, mut on_token: impl FnMut(i32))
                           -> Result<Value> {
-        let msg = self.request_value(docs, query, policy, true);
-        writeln!(self.writer, "{msg}")?;
+        let msg = self.serve_value(docs, query, policy, true);
+        protocol::write_value(&mut self.writer, &msg)?;
         loop {
             let mut line = String::new();
             self.reader.read_line(&mut line)?;
@@ -475,12 +551,18 @@ impl Client {
         }
     }
 
+    /// Send a raw command line (already JSON-encoded) and return the
+    /// single reply line — the escape hatch for protocol tests.
+    pub fn raw(&mut self, line: &Value) -> Result<Value> {
+        self.roundtrip(line)
+    }
+
     pub fn metrics(&mut self) -> Result<Value> {
-        self.roundtrip(&Value::obj().set("cmd", "metrics"))
+        self.roundtrip(&Request::Metrics.encode())
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
-        let _ = self.roundtrip(&Value::obj().set("cmd", "shutdown"))?;
+        let _ = self.roundtrip(&Request::Shutdown.encode())?;
         Ok(())
     }
 }

@@ -1,0 +1,341 @@
+//! Multi-node host-tier sharding: the peer client side.
+//!
+//! With `--peers addr0,addr1,… --node-id I`, every node agrees on
+//! document ownership by **rendezvous hashing** the content hash
+//! against each node index ([`rendezvous_owner`]) — no coordination,
+//! stable under node-set changes (removing one node only remaps the
+//! documents it owned). On a local host+disk miss, the prefill
+//! leaseholder asks the owning peer for the serialized entry image
+//! (the checksummed disk-tier v3 format) over the owner's main
+//! listener ([`super::protocol::Request::PeerGet`]) and decodes it
+//! straight into the block pool — extending the exactly-once prefill
+//! guarantee cluster-wide.
+//!
+//! # Degradation contract
+//!
+//! A peer fetch degrades exactly like a disk read: **any** failure —
+//! connect refusal, timeout, truncated payload, checksum mismatch,
+//! a well-formed miss, or an injected
+//! [`crate::faultinject::FaultSite::PeerFetch`] fault — is a miss
+//! that falls back to the local model prefill, never a failed
+//! request. A transport-level failure additionally marks the peer
+//! down for a cooldown window so back-to-back misses do not each pay
+//! the connect timeout; the next fetch after the window probes it
+//! again. All outcomes flow through [`crate::metrics::Metrics`]
+//! (`peer_fetch_hits`/`peer_fetch_misses`, the fetch-latency
+//! histogram, `peer_bytes_in`, and the `peers_down` gauge).
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::faultinject::{FaultPlan, FaultSite};
+use crate::kvcache::PeerFetcher;
+use crate::metrics::Metrics;
+
+use super::protocol::{self, Request};
+
+/// How long a transport-failed peer stays marked down before the next
+/// fetch probes it again.
+pub const DEFAULT_PEER_DOWN_COOLDOWN_MS: u64 = 1000;
+
+/// Rendezvous (highest-random-weight) owner of `hash` among `n_nodes`
+/// node indexes. Every node computes this independently and agrees.
+pub fn rendezvous_owner(hash: u64, n_nodes: usize) -> usize {
+    assert!(n_nodes > 0);
+    (0..n_nodes)
+        .max_by_key(|&i| mix(hash, i as u64))
+        .unwrap()
+}
+
+/// Stateless 64-bit mixer (splitmix64 finalizer) scoring one
+/// (document, node) pair for rendezvous hashing.
+fn mix(hash: u64, node: u64) -> u64 {
+    let mut x = hash ^ node.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    x
+}
+
+/// The cluster view held by one node: peer addresses (indexed by node
+/// id, including this node's own slot), fetch timeouts, per-peer down
+/// state, and the metrics/fault-plan hooks. Implements
+/// [`PeerFetcher`] so the host tier can consult it under the prefill
+/// lease without depending on the server layer.
+pub struct ClusterPeers {
+    node_id: usize,
+    addrs: Vec<String>,
+    timeout: Duration,
+    cooldown: Duration,
+    faults: Option<Arc<FaultPlan>>,
+    metrics: Arc<Metrics>,
+    /// Per-peer down-until instant (transport failures only).
+    down_until: Vec<Mutex<Option<Instant>>>,
+}
+
+impl ClusterPeers {
+    /// `addrs[node_id]` is this node's own address (never dialed).
+    pub fn new(node_id: usize, addrs: Vec<String>, timeout_ms: u64,
+               metrics: Arc<Metrics>) -> ClusterPeers {
+        assert!(node_id < addrs.len(),
+                "--node-id {node_id} outside --peers list of {}",
+                addrs.len());
+        let down_until = (0..addrs.len()).map(|_| Mutex::new(None)).collect();
+        ClusterPeers {
+            node_id,
+            addrs,
+            timeout: Duration::from_millis(timeout_ms.max(1)),
+            cooldown: Duration::from_millis(DEFAULT_PEER_DOWN_COOLDOWN_MS),
+            faults: None,
+            metrics,
+            down_until,
+        }
+    }
+
+    /// Attach the active fault plan (the `peer_fetch` site).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>)
+                       -> ClusterPeers {
+        self.faults = faults;
+        self
+    }
+
+    /// Override the down-peer retry cooldown (tests).
+    pub fn with_cooldown_ms(mut self, ms: u64) -> ClusterPeers {
+        self.cooldown = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn node_id(&self) -> usize {
+        self.node_id
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// The agreed owner node of a document hash.
+    pub fn owner_of(&self, hash: u64) -> usize {
+        rendezvous_owner(hash, self.addrs.len())
+    }
+
+    fn is_down(&self, peer: usize) -> bool {
+        let guard = self.down_until[peer].lock().unwrap();
+        matches!(*guard, Some(until) if Instant::now() < until)
+    }
+
+    fn mark_down(&self, peer: usize) {
+        *self.down_until[peer].lock().unwrap() =
+            Some(Instant::now() + self.cooldown);
+        self.refresh_down_gauge();
+    }
+
+    fn mark_up(&self, peer: usize) {
+        *self.down_until[peer].lock().unwrap() = None;
+        self.refresh_down_gauge();
+    }
+
+    fn refresh_down_gauge(&self) {
+        let now = Instant::now();
+        let down = self
+            .down_until
+            .iter()
+            .filter(|m| matches!(*m.lock().unwrap(),
+                                 Some(until) if now < until))
+            .count();
+        self.metrics.peers_down.store(down as u64, Ordering::Relaxed);
+    }
+
+    fn miss(&self) {
+        self.metrics.peer_fetch_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One dial → peer_get → blob read against `owner`. `Ok(None)` is
+    /// a well-formed miss (the peer is alive but does not hold the
+    /// document); `Err` is a transport failure.
+    fn try_fetch(&self, owner: usize, hash: u64, tokens: &[i32])
+                 -> Result<Option<Vec<u8>>> {
+        let addr_str = &self.addrs[owner];
+        let addr = addr_str
+            .to_socket_addrs()
+            .with_context(|| format!("resolve peer `{addr_str}`"))?
+            .next()
+            .with_context(|| format!("peer `{addr_str}` resolves to \
+                                      nothing"))?;
+        let stream = TcpStream::connect_timeout(&addr, self.timeout)
+            .with_context(|| format!("connect peer {owner}"))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let msg = Request::PeerGet { hash, tokens: tokens.to_vec() }
+            .encode();
+        protocol::write_value(&mut writer, &msg)?;
+        protocol::read_peer_reply(&mut reader)
+    }
+}
+
+impl PeerFetcher for ClusterPeers {
+    fn owner_is_remote(&self, hash: u64) -> bool {
+        self.addrs.len() > 1 && self.owner_of(hash) != self.node_id
+    }
+
+    fn fetch(&self, hash: u64, tokens: &[i32]) -> Option<Vec<u8>> {
+        let owner = self.owner_of(hash);
+        if owner == self.node_id || self.addrs.len() < 2 {
+            return None;
+        }
+        if self.is_down(owner) {
+            // inside the cooldown window: fail fast, no dial
+            self.miss();
+            return None;
+        }
+        if let Some(plan) = &self.faults {
+            // one site, two arms: the rule's `ms` is slept first
+            // (latency), then the fetch fails as an injected miss
+            if let Some(ms) = plan.latency_ms(FaultSite::PeerFetch) {
+                if ms > 0 {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                self.miss();
+                return None;
+            }
+        }
+        let start = Instant::now();
+        match self.try_fetch(owner, hash, tokens) {
+            Ok(Some(bytes)) => {
+                self.mark_up(owner);
+                self.metrics
+                    .peer_fetch_hits
+                    .fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .peer_bytes_in
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                self.metrics
+                    .peer_fetch
+                    .observe_ms(start.elapsed().as_secs_f64() * 1e3);
+                Some(bytes)
+            }
+            Ok(None) => {
+                // alive peer, honest miss — no down-marking
+                self.mark_up(owner);
+                self.miss();
+                None
+            }
+            Err(e) => {
+                crate::warn!("peer fetch from node {owner} failed \
+                              (degrading to local prefill): {e:#}");
+                self.mark_down(owner);
+                self.miss();
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    #[test]
+    fn rendezvous_is_stable_and_balanced() {
+        // ownership only changes for documents whose owner left
+        let mut moved = 0;
+        let mut counts = [0usize; 4];
+        for doc in 0..4000u64 {
+            let h = mix(doc, 0xfeed); // spread the toy ids
+            let o4 = rendezvous_owner(h, 4);
+            counts[o4] += 1;
+            let o3 = rendezvous_owner(h, 3);
+            if o4 != 3 && o3 != o4 {
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, 0,
+                   "shrinking 4→3 nodes must only remap node 3's docs");
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 500, "node {i} owns {c} of 4000 — unbalanced");
+        }
+    }
+
+    #[test]
+    fn self_and_single_node_never_fetch() {
+        let m = Arc::new(Metrics::new());
+        let solo = ClusterPeers::new(0, vec!["127.0.0.1:1".into()], 50,
+                                     Arc::clone(&m));
+        assert!(!solo.owner_is_remote(123));
+        assert!(solo.fetch(123, &[1, 2]).is_none());
+
+        let duo = ClusterPeers::new(
+            0,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            50,
+            Arc::clone(&m),
+        );
+        // whatever this node owns is never remote
+        let mine = (0..500u64)
+            .find(|&h| rendezvous_owner(h, 2) == 0)
+            .unwrap();
+        assert!(!duo.owner_is_remote(mine));
+        assert!(duo.fetch(mine, &[1]).is_none());
+    }
+
+    #[test]
+    fn dead_peer_marks_down_and_cools_down() {
+        let m = Arc::new(Metrics::new());
+        // port 1 refuses instantly; cooldown long enough to observe
+        let peers = ClusterPeers::new(
+            0,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            50,
+            Arc::clone(&m),
+        )
+        .with_cooldown_ms(60_000);
+        let theirs = (0..500u64)
+            .find(|&h| rendezvous_owner(h, 2) == 1)
+            .unwrap();
+        assert!(peers.owner_is_remote(theirs));
+        assert!(peers.fetch(theirs, &[1, 2]).is_none());
+        assert_eq!(m.peers_down.load(Ordering::Relaxed), 1);
+        let misses = m.peer_fetch_misses.load(Ordering::Relaxed);
+        assert!(misses >= 1);
+        // second fetch short-circuits on the cooldown (still a miss)
+        assert!(peers.fetch(theirs, &[1, 2]).is_none());
+        assert_eq!(m.peer_fetch_misses.load(Ordering::Relaxed),
+                   misses + 1);
+        assert_eq!(m.peer_fetch_hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fault_plan_arm_fails_fetch_without_dialing() {
+        let m = Arc::new(Metrics::new());
+        let plan = Arc::new(
+            crate::faultinject::FaultPlan::parse("peer_fetch:every=2")
+                .unwrap(),
+        );
+        let peers = ClusterPeers::new(
+            0,
+            vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            50,
+            Arc::clone(&m),
+        )
+        .with_faults(Some(Arc::clone(&plan)));
+        let theirs = (0..500u64)
+            .find(|&h| rendezvous_owner(h, 2) == 1)
+            .unwrap();
+        // trial 1: rule does not fire (every=2) → real dial fails →
+        // down; trial 2 would fire but the cooldown path runs first.
+        assert!(peers.fetch(theirs, &[1]).is_none());
+        peers.mark_up(1);
+        assert!(peers.fetch(theirs, &[1]).is_none());
+        assert_eq!(plan.injected(FaultSite::PeerFetch), 1,
+                   "second trial must be the injected one");
+    }
+}

@@ -1,0 +1,367 @@
+//! The typed, versioned wire protocol — one encode/decode
+//! implementation shared by the user-facing server, the blocking
+//! [`crate::server::Client`], and the peer RPC.
+//!
+//! # Framing
+//!
+//! Everything on the wire is a JSON object per line, except peer-fetch
+//! payloads: a [`Request::PeerGet`] hit answers with one JSON header
+//! line (`{"peer":{"ok":true,"hash":"…","len":N}}`) followed by
+//! exactly `len` raw bytes — the checksummed disk-tier v3 entry image,
+//! decoded straight into the receiver's block pool. Misses answer with
+//! a single `{"peer":{"ok":false,…}}` line and no payload, so the peer
+//! channel degrades to plain line framing.
+//!
+//! # Versioning
+//!
+//! Command messages may carry a `"v"` field (assumed
+//! [`PROTOCOL_VERSION`] when absent). A newer version, or an unknown
+//! `cmd`, decodes to a structured [`Decoded::Reply`] carrying an
+//! `unsupported` object — listing this side's `protocol_version` and
+//! `supported` commands — instead of an error that drops the
+//! connection, so mixed-version clusters negotiate down gracefully.
+//! Only malformed lines (unparseable JSON, bad serve bodies) are hard
+//! errors.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ServeRequest;
+use crate::json::{self, Value};
+
+/// Version spoken (and advertised in `unsupported` replies) by this
+/// build. Bump on any wire-incompatible change.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Version of the `cmd:metrics` reply schema, carried as its
+/// `schema_version` field so dashboards and CI can pin assertions.
+/// v2 added `schema_version` itself and the top-level `peers` object.
+pub const METRICS_SCHEMA_VERSION: u32 = 2;
+
+/// Commands understood at [`PROTOCOL_VERSION`], advertised verbatim in
+/// `unsupported` replies. A plain serve request (no `cmd` field) is
+/// always understood.
+pub const SUPPORTED_CMDS: [&str; 4] =
+    ["metrics", "shutdown", "peer_get", "serve"];
+
+/// Upper bound on one peer-fetch payload (1 GiB) — a sanity guard so
+/// a corrupt or hostile header cannot make the receiver allocate
+/// unboundedly.
+pub const MAX_PEER_BLOB: usize = 1 << 30;
+
+/// One decoded wire request.
+#[derive(Debug)]
+pub enum Request {
+    /// A serve request line (the no-`cmd` form).
+    Serve(ServeRequest),
+    /// `{"cmd":"metrics"}` — the observability snapshot.
+    Metrics,
+    /// `{"cmd":"shutdown"}` — stop the listener.
+    Shutdown,
+    /// `{"cmd":"peer_get","hash":"<hex>","tokens":[…]}` — peer RPC:
+    /// ship the serialized host/disk entry for this document. `hash`
+    /// is the content hash as 16 hex digits (JSON numbers are f64 and
+    /// cannot carry a u64 losslessly); `tokens` lets the owner verify
+    /// against hash collisions before serving.
+    PeerGet { hash: u64, tokens: Vec<i32> },
+}
+
+/// Outcome of decoding one line: a request to act on, or a structured
+/// reply to write back as-is (the `unsupported` path).
+#[derive(Debug)]
+pub enum Decoded {
+    Request(Request),
+    Reply(Value),
+}
+
+impl Request {
+    /// Decode one wire line. Unknown/newer commands are NOT errors:
+    /// they decode to [`Decoded::Reply`] with an `unsupported` object.
+    /// `Err` means the line itself was malformed (unparseable JSON or
+    /// a bad serve body) and deserves an `error` reply.
+    pub fn decode(line: &str) -> Result<Decoded> {
+        let v = json::parse(line)?;
+        let Some(cmd) = v.get("cmd").and_then(|c| c.as_str()) else {
+            let req = ServeRequest::from_json(&v)?;
+            return Ok(Decoded::Request(Request::Serve(req)));
+        };
+        let ver = v
+            .get("v")
+            .and_then(|x| x.as_i64())
+            .map(|x| x as u32)
+            .unwrap_or(PROTOCOL_VERSION);
+        if ver > PROTOCOL_VERSION {
+            return Ok(Decoded::Reply(unsupported_reply(cmd, Some(ver))));
+        }
+        match cmd {
+            "metrics" => Ok(Decoded::Request(Request::Metrics)),
+            "shutdown" => Ok(Decoded::Request(Request::Shutdown)),
+            "peer_get" => {
+                let hash = v
+                    .get("hash")
+                    .and_then(|h| h.as_str())
+                    .and_then(|h| u64::from_str_radix(h, 16).ok())
+                    .context("peer_get: missing/bad `hash`")?;
+                let tokens = v
+                    .req("tokens")?
+                    .i32_vec()
+                    .context("peer_get: bad `tokens`")?;
+                Ok(Decoded::Request(Request::PeerGet { hash, tokens }))
+            }
+            other => Ok(Decoded::Reply(unsupported_reply(other, None))),
+        }
+    }
+
+    /// Encode this request as its wire line — the single builder used
+    /// by the client and the peer fetcher (round-trips with
+    /// [`Request::decode`]).
+    pub fn encode(&self) -> Value {
+        match self {
+            Request::Serve(req) => {
+                let mut msg = Value::obj()
+                    .set("id", req.id as i64)
+                    .set("docs",
+                         Value::Arr(req.sample.docs
+                             .iter()
+                             .map(|d| {
+                                 Value::Arr(d.iter()
+                                     .map(|&t| (t as i64).into())
+                                     .collect())
+                             })
+                             .collect()))
+                    .set("query",
+                         Value::Arr(req.sample.query
+                             .iter()
+                             .map(|&t| (t as i64).into())
+                             .collect()));
+                if !req.policy.is_empty() {
+                    msg = msg.set("policy", req.policy.as_str());
+                }
+                if req.stream {
+                    msg = msg.set("stream", true);
+                }
+                msg
+            }
+            Request::Metrics => Value::obj().set("cmd", "metrics"),
+            Request::Shutdown => Value::obj().set("cmd", "shutdown"),
+            Request::PeerGet { hash, tokens } => Value::obj()
+                .set("cmd", "peer_get")
+                .set("v", PROTOCOL_VERSION as i64)
+                .set("hash", format!("{hash:016x}"))
+                .set("tokens",
+                     Value::Arr(tokens
+                         .iter()
+                         .map(|&t| (t as i64).into())
+                         .collect())),
+        }
+    }
+}
+
+/// The structured reply for an unknown or newer-version command.
+pub fn unsupported_reply(cmd: &str, got_version: Option<u32>) -> Value {
+    let mut u = Value::obj()
+        .set("cmd", cmd)
+        .set("protocol_version", PROTOCOL_VERSION as i64)
+        .set("supported",
+             Value::Arr(SUPPORTED_CMDS.iter().map(|&c| c.into()).collect()));
+    if let Some(v) = got_version {
+        u = u.set("got_version", v as i64);
+    }
+    Value::obj().set("unsupported", u)
+}
+
+/// The structured reply for a malformed line.
+pub fn error_reply(msg: &str) -> Value {
+    Value::obj().set("error", msg)
+}
+
+/// Write one JSON line (the universal reply/request framing).
+pub fn write_value(w: &mut impl Write, v: &Value) -> std::io::Result<()> {
+    writeln!(w, "{v}")
+}
+
+/// Peer-fetch hit: the JSON header line followed by the raw entry
+/// image. Flushes so the bytes hit the socket with the header.
+pub fn write_peer_hit(w: &mut impl Write, hash: u64, payload: &[u8])
+                      -> std::io::Result<()> {
+    let header = Value::obj().set(
+        "peer",
+        Value::obj()
+            .set("ok", true)
+            .set("hash", format!("{hash:016x}"))
+            .set("len", payload.len() as i64),
+    );
+    writeln!(w, "{header}")?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Peer-fetch miss: a single header line, no payload.
+pub fn write_peer_miss(w: &mut impl Write, reason: &str)
+                       -> std::io::Result<()> {
+    let header = Value::obj().set(
+        "peer",
+        Value::obj().set("ok", false).set("reason", reason),
+    );
+    writeln!(w, "{header}")
+}
+
+/// Read one peer-fetch reply: `Ok(Some(bytes))` on a hit,
+/// `Ok(None)` on a well-formed miss, `Err` on a broken stream or a
+/// header that fails the [`MAX_PEER_BLOB`] sanity bound.
+pub fn read_peer_reply(r: &mut impl BufRead) -> Result<Option<Vec<u8>>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        anyhow::bail!("peer closed before reply header");
+    }
+    let v = json::parse(&line)?;
+    let peer = v.req("peer")?;
+    if !peer.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+        return Ok(None);
+    }
+    let len = peer
+        .get("len")
+        .and_then(|l| l.as_usize())
+        .context("peer reply: missing/bad `len`")?;
+    if len > MAX_PEER_BLOB {
+        anyhow::bail!("peer reply len {len} exceeds sanity bound");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("peer payload truncated")?;
+    Ok(Some(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Sample;
+    use std::io::{BufReader, Cursor};
+
+    #[test]
+    fn serve_round_trip() {
+        let req = ServeRequest {
+            id: 42,
+            sample: Sample {
+                docs: vec![vec![1, 2, 3], vec![4, 5]],
+                query: vec![9, 8, 7],
+                answer: Vec::new(),
+                qtype: "served".to_string(),
+            },
+            policy: "SamKV-fusion".to_string(),
+            stream: true,
+        };
+        let line = Request::Serve(req).encode().to_string();
+        match Request::decode(&line).unwrap() {
+            Decoded::Request(Request::Serve(back)) => {
+                assert_eq!(back.id, 42);
+                assert_eq!(back.sample.docs,
+                           vec![vec![1, 2, 3], vec![4, 5]]);
+                assert_eq!(back.sample.query, vec![9, 8, 7]);
+                assert_eq!(back.policy, "SamKV-fusion");
+                assert!(back.stream);
+            }
+            other => panic!("expected serve, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn command_round_trips() {
+        for (req, want) in [
+            (Request::Metrics, "metrics"),
+            (Request::Shutdown, "shutdown"),
+        ] {
+            let line = req.encode().to_string();
+            match Request::decode(&line).unwrap() {
+                Decoded::Request(Request::Metrics) => {
+                    assert_eq!(want, "metrics")
+                }
+                Decoded::Request(Request::Shutdown) => {
+                    assert_eq!(want, "shutdown")
+                }
+                other => panic!("bad decode {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn peer_get_round_trip_preserves_full_u64_hash() {
+        // a hash above 2^53 would be mangled by f64 JSON numbers; the
+        // hex-string encoding must carry it losslessly
+        let hash = 0xdead_beef_cafe_f00du64;
+        let line = Request::PeerGet { hash, tokens: vec![3, 1, 4] }
+            .encode()
+            .to_string();
+        match Request::decode(&line).unwrap() {
+            Decoded::Request(Request::PeerGet { hash: h, tokens }) => {
+                assert_eq!(h, hash);
+                assert_eq!(tokens, vec![3, 1, 4]);
+            }
+            other => panic!("expected peer_get, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_cmd_is_structured_unsupported_not_error() {
+        let d = Request::decode(r#"{"cmd":"fancy_new_thing"}"#).unwrap();
+        let Decoded::Reply(v) = d else {
+            panic!("expected unsupported reply")
+        };
+        let u = v.req("unsupported").unwrap();
+        assert_eq!(u.get("cmd").and_then(|c| c.as_str()),
+                   Some("fancy_new_thing"));
+        assert_eq!(u.get("protocol_version").and_then(|p| p.as_i64()),
+                   Some(PROTOCOL_VERSION as i64));
+        let sup = u.get("supported").and_then(|s| s.as_arr()).unwrap();
+        assert!(sup.iter().any(|c| c.as_str() == Some("peer_get")));
+    }
+
+    #[test]
+    fn newer_version_is_unsupported_with_got_version() {
+        let line = format!(r#"{{"cmd":"metrics","v":{}}}"#,
+                           PROTOCOL_VERSION + 1);
+        let Decoded::Reply(v) = Request::decode(&line).unwrap() else {
+            panic!("newer version must be unsupported, not served")
+        };
+        let u = v.req("unsupported").unwrap();
+        assert_eq!(u.get("got_version").and_then(|g| g.as_i64()),
+                   Some((PROTOCOL_VERSION + 1) as i64));
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        assert!(Request::decode("not json").is_err());
+        assert!(Request::decode(r#"{"id":1,"query":[1]}"#).is_err(),
+                "serve body without docs must be a hard error");
+        assert!(Request::decode(r#"{"cmd":"peer_get","tokens":[1]}"#)
+                    .is_err(),
+                "peer_get without hash must be a hard error");
+    }
+
+    #[test]
+    fn peer_blob_round_trip() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let mut wire = Vec::new();
+        write_peer_hit(&mut wire, 0xabcd, &payload).unwrap();
+        let mut r = BufReader::new(Cursor::new(wire));
+        let got = read_peer_reply(&mut r).unwrap();
+        assert_eq!(got.as_deref(), Some(&payload[..]));
+
+        let mut wire = Vec::new();
+        write_peer_miss(&mut wire, "not owner").unwrap();
+        let mut r = BufReader::new(Cursor::new(wire));
+        assert_eq!(read_peer_reply(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn peer_reply_rejects_truncation_and_bad_headers() {
+        let mut wire = Vec::new();
+        write_peer_hit(&mut wire, 1, &[1, 2, 3, 4]).unwrap();
+        wire.truncate(wire.len() - 2); // lose payload bytes
+        let mut r = BufReader::new(Cursor::new(wire));
+        assert!(read_peer_reply(&mut r).is_err());
+
+        let mut r = BufReader::new(Cursor::new(Vec::<u8>::new()));
+        assert!(read_peer_reply(&mut r).is_err(), "EOF before header");
+    }
+}

@@ -1,0 +1,273 @@
+//! Multi-node peer-tier integration over the tiny artifacts: two
+//! in-process nodes (each a real TCP [`samkv::server::Server`] over a
+//! single-engine stack) prove the prefill guarantee is cluster-wide —
+//! a document node A prefilled is served by node B over `peer_get`
+//! with **zero** model prefills on B and token-identical answers —
+//! and that every peer failure mode (dead peer, injected `peer_fetch`
+//! fault) degrades to a local prefill, never a failed request.
+//!
+//! Tests no-op when artifacts aren't built.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use samkv::config::ServingConfig;
+use samkv::coordinator::{Engine, Router};
+use samkv::faultinject::{FaultPlan, FaultSite};
+use samkv::kvcache::{doc_hash, HostDocCache};
+use samkv::metrics::Metrics;
+use samkv::runtime::artifacts_dir;
+use samkv::server::peers::{rendezvous_owner, ClusterPeers};
+use samkv::server::{Client, Server};
+use samkv::workload::{Dataset, Sample};
+
+fn ready() -> Option<Dataset> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Dataset::load(dir.join("datasets/d2x32_hotpot-sim.json")).unwrap())
+}
+
+fn tiny_cfg() -> ServingConfig {
+    ServingConfig { profile: "tiny".to_string(), ..ServingConfig::default() }
+}
+
+/// Mutate a document's filler tokens until its content hash is
+/// rendezvous-owned by `owner` in a 2-node cluster (same steering
+/// idiom as the chaos tests; each try flips ownership with p≈0.5, so
+/// the filler grid never realistically exhausts).
+fn steer_to_owner(doc: &mut [i32], owner: usize) {
+    use samkv::tokenizer::{filler_tok, N_FILLERS};
+    for a in 0..N_FILLERS {
+        for b in 0..N_FILLERS {
+            doc[1] = filler_tok(a);
+            doc[2] = filler_tok(b);
+            if rendezvous_owner(doc_hash(doc), 2) == owner {
+                return;
+            }
+        }
+    }
+    panic!("could not steer doc ownership");
+}
+
+/// `n` dataset samples with every document steered to node 0 — node
+/// 1's only warm path is then the peer fetch, so `doc_prefills == 0`
+/// on node 1 is the cluster-wide exactly-once assertion.
+fn steered_samples(ds: &Dataset, n: usize) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let mut s = ds.samples[i % ds.samples.len()].clone();
+            for d in &mut s.docs {
+                steer_to_owner(d, 0);
+            }
+            s
+        })
+        .collect()
+}
+
+/// One in-process cluster node behind a real TCP server, its host
+/// tier attached so it answers `peer_get`.
+struct Node {
+    metrics: Arc<Metrics>,
+    addr: String,
+    srv: thread::JoinHandle<anyhow::Result<()>>,
+    engines: Vec<Engine>,
+}
+
+fn spawn_node(
+    mk_peers: impl FnOnce(&Arc<Metrics>) -> Option<ClusterPeers>,
+) -> Node {
+    let metrics = Arc::new(Metrics::new());
+    let mut host = HostDocCache::unbounded();
+    if let Some(p) = mk_peers(&metrics) {
+        host = host.with_peers(Arc::new(p));
+    }
+    let host = Arc::new(host);
+    let router = Arc::new(Router::new(1));
+    let engines = vec![Engine::spawn(0, artifacts_dir(), tiny_cfg(),
+                                     "Reuse".to_string(),
+                                     Arc::clone(&metrics),
+                                     Arc::clone(&host),
+                                     Some(router.residency_handle(0)))
+        .unwrap()];
+    let handles = engines.iter().map(|e| e.handle()).collect();
+    let server =
+        Server::with_router(handles, Arc::clone(&metrics), router)
+            .with_host(Arc::clone(&host));
+    let (port_tx, port_rx) = mpsc::channel();
+    let srv = thread::spawn(move || {
+        server.run("127.0.0.1:0", move |p| {
+            port_tx.send(p).unwrap();
+        })
+    });
+    let addr = format!("127.0.0.1:{}", port_rx.recv().unwrap());
+    Node { metrics, addr, srv, engines }
+}
+
+fn stop(node: Node) {
+    Client::connect(&node.addr).unwrap().shutdown().unwrap();
+    node.srv.join().unwrap().unwrap();
+    drop(node.engines);
+}
+
+/// Serve every sample once over one connection, behind a watchdog (a
+/// request with no terminal reply is the failure mode the peer tier's
+/// degradation contract exists to rule out). Panics on error replies;
+/// returns the answer tokens per sample.
+fn drive(addr: &str, samples: &[Sample]) -> Vec<Vec<i32>> {
+    let (tx, rx) = mpsc::channel();
+    let addr = addr.to_string();
+    let samples = samples.to_vec();
+    thread::spawn(move || {
+        let mut client = Client::connect(&addr).unwrap();
+        let out: Vec<Vec<i32>> = samples
+            .iter()
+            .map(|s| {
+                let r =
+                    client.request(&s.docs, &s.query, "Reuse").unwrap();
+                assert!(r.get("error").is_none(), "{r}");
+                r.get("answer").unwrap().i32_vec().unwrap()
+            })
+            .collect();
+        tx.send(out).unwrap();
+    });
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("serving hung: no terminal reply within 120s")
+}
+
+/// The headline guarantee: node A prefills the steered corpus, node B
+/// (whose rendezvous owner for every doc is A) serves the same
+/// workload entirely over `peer_get` — zero model prefills on B,
+/// token-identical answers, and both nodes' `cmd:metrics` wire carries
+/// the `schema_version` stamp and the `peers` object.
+#[test]
+fn cluster_wide_exactly_once_prefill_and_token_identity() {
+    let Some(ds) = ready() else { return };
+    let samples = steered_samples(&ds, 3);
+
+    let a = spawn_node(|_| None);
+    let answers_a = drive(&a.addr, &samples);
+    assert!(a.metrics.doc_prefills.load(Ordering::Relaxed) > 0,
+            "the owner pays the cluster's only prefills");
+
+    let a_addr = a.addr.clone();
+    let b = spawn_node(move |m| {
+        Some(ClusterPeers::new(
+            1,
+            // node 1's own slot is never dialed (self-owned hashes
+            // skip the fetcher), so a placeholder is fine
+            vec![a_addr, "127.0.0.1:1".to_string()],
+            1000,
+            Arc::clone(m),
+        ))
+    });
+    let answers_b = drive(&b.addr, &samples);
+
+    assert_eq!(answers_a, answers_b,
+               "peer-served answers must be token-identical");
+    assert_eq!(b.metrics.doc_prefills.load(Ordering::Relaxed), 0,
+               "node B must run zero model prefills — that IS the \
+                cluster-wide exactly-once guarantee");
+    assert!(b.metrics.peer_fetch_hits.load(Ordering::Relaxed) >= 1);
+    assert!(b.metrics.peer_bytes_in.load(Ordering::Relaxed) > 0);
+    assert_eq!(b.metrics.peers_down.load(Ordering::Relaxed), 0);
+
+    // the typed wire: schema stamp + peers object on both sides
+    let mb = Client::connect(&b.addr).unwrap().metrics().unwrap();
+    assert_eq!(
+        mb.get("schema_version").unwrap().as_i64(),
+        Some(samkv::server::protocol::METRICS_SCHEMA_VERSION as i64),
+        "{mb}");
+    let p = mb.get("peers").expect("cmd:metrics must carry `peers`");
+    assert!(p.get("fetch_hits").unwrap().as_i64().unwrap() >= 1, "{mb}");
+    assert!(p.get("bytes_in").unwrap().as_i64().unwrap() > 0, "{mb}");
+    let ma = Client::connect(&a.addr).unwrap().metrics().unwrap();
+    assert!(ma.get("peers").unwrap().get("bytes_out").unwrap()
+                .as_i64().unwrap() > 0,
+            "the owner must count the entry bytes it served: {ma}");
+
+    stop(b);
+    stop(a);
+}
+
+/// A dead owner must cost at most the connect timeout once, then sit
+/// in down-cooldown (fail-fast misses) — every request still answers
+/// via local prefill, token-identical to a single-node run.
+#[test]
+fn peer_down_falls_back_to_local_prefill() {
+    let Some(ds) = ready() else { return };
+    let samples = steered_samples(&ds, 2);
+
+    let base = spawn_node(|_| None);
+    let expect = drive(&base.addr, &samples);
+    stop(base);
+
+    let b = spawn_node(|m| {
+        Some(ClusterPeers::new(
+            1,
+            // the "owner" is a closed loopback port: every dial is
+            // refused immediately
+            vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            200,
+            Arc::clone(m),
+        )
+        .with_cooldown_ms(60_000))
+    });
+    let got = drive(&b.addr, &samples);
+
+    assert_eq!(got, expect,
+               "degraded answers must be token-identical");
+    assert!(b.metrics.doc_prefills.load(Ordering::Relaxed) > 0,
+            "a down peer must degrade to local prefills");
+    assert!(b.metrics.peer_fetch_misses.load(Ordering::Relaxed) >= 1);
+    assert_eq!(b.metrics.peer_fetch_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(b.metrics.peers_down.load(Ordering::Relaxed), 1,
+               "the dead owner must sit in down-cooldown");
+
+    stop(b);
+}
+
+/// A seeded `peer_fetch` fault plan fails every other fetch as an
+/// injected miss; each injected miss must heal through a local
+/// prefill — 100% completion, token-identical answers, and the
+/// non-injected fetches still hit the owner.
+#[test]
+fn peer_fetch_fault_plan_heals_transparently() {
+    let Some(ds) = ready() else { return };
+    let samples = steered_samples(&ds, 4);
+
+    let a = spawn_node(|_| None);
+    let expect = drive(&a.addr, &samples);
+
+    let plan =
+        Arc::new(FaultPlan::parse("seed=7;peer_fetch:every=2").unwrap());
+    let a_addr = a.addr.clone();
+    let plan_b = Arc::clone(&plan);
+    let b = spawn_node(move |m| {
+        Some(ClusterPeers::new(
+            1,
+            vec![a_addr, "127.0.0.1:1".to_string()],
+            1000,
+            Arc::clone(m),
+        )
+        .with_faults(Some(plan_b)))
+    });
+    let got = drive(&b.addr, &samples);
+
+    assert_eq!(got, expect,
+               "healed answers must be token-identical");
+    assert!(plan.injected(FaultSite::PeerFetch) >= 1,
+            "the plan never fired — the site is not wired");
+    assert!(b.metrics.doc_prefills.load(Ordering::Relaxed) >= 1,
+            "injected peer misses must heal via local prefill");
+    assert!(b.metrics.peer_fetch_hits.load(Ordering::Relaxed) >= 1,
+            "non-injected fetches must still hit the owner");
+    assert!(b.metrics.peer_fetch_misses.load(Ordering::Relaxed) >= 1);
+
+    stop(b);
+    stop(a);
+}
