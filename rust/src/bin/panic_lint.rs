@@ -1,0 +1,668 @@
+//! Panic-path lint over the serving stack.
+//!
+//! Scans `rust/src/server`, `rust/src/coordinator`, and
+//! `rust/src/kvcache` for constructs that can panic at runtime —
+//! `.unwrap()`, `.expect(…)`, `panic!`/`unreachable!`/`todo!`/
+//! `unimplemented!`, and variable `[i]`-indexing — outside
+//! `#[cfg(test)]` regions. A request that panics a serving thread
+//! strands every queued client, so the serving trees must degrade
+//! through structured errors instead (see the module docs in
+//! `kvcache` and `coordinator`).
+//!
+//! The checked-in allowlist (`rust/lint_allowlist.txt`, lines of
+//! `<path> <count>`) is a **ratchet**: a file may never exceed its
+//! allowed count (new panic sites are rejected), and when a file
+//! drops below its allowed count the lint also fails until the
+//! allowlist is shrunk to match — the count can only go down. Run
+//! with `--update` to regenerate the allowlist from the current tree
+//! after a burn-down.
+//!
+//! Deliberately non-findings (so the lint stays reviewable without a
+//! full parser):
+//! * numeric-literal indexing (`x[0]`) — panics are possible but the
+//!   site is statically auditable;
+//! * range slicing (`x[a..b]`, `x[..]`) — same `[` token, and the
+//!   serving trees use it pervasively for tensor views;
+//! * macro/attribute/type brackets (`vec![…]`, `#[…]`, `[u8; 4]`) —
+//!   only a `[` directly following an identifier, `)`, or `]` counts
+//!   as indexing;
+//! * `assert!`-family macros — used for construction-time contracts,
+//!   not request-path degradation.
+//!
+//! Usage: `panic_lint [--root DIR] [--update] [--verbose]`
+//! (`tools/lint` wraps `cargo run --bin panic_lint`). Exit code 0 on
+//! a clean ratchet, 1 on any violation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// The serving-critical trees, relative to the repo root.
+const SCANNED_TREES: [&str; 3] = [
+    "rust/src/server",
+    "rust/src/coordinator",
+    "rust/src/kvcache",
+];
+
+const ALLOWLIST: &str = "rust/lint_allowlist.txt";
+
+/// Panicking macros denied outside test regions. (`assert!` stays
+/// allowed; see the module docs.)
+const DENIED_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that may directly precede `[` without it being indexing
+/// (`let [a, b] = …`, `if x { … } … in [1, 2]`, `return [0; 4]`, …).
+const NON_INDEX_KEYWORDS: [&str; 12] = [
+    "let", "in", "if", "else", "match", "return", "mut", "ref", "move",
+    "box", "const", "static",
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Finding {
+    line: usize,
+    kind: &'static str,
+    snippet: String,
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut update = false;
+    let mut verbose = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("--root needs a directory");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--update" => update = true,
+            "--verbose" => verbose = true,
+            other => {
+                eprintln!("unknown flag `{other}` \
+                           (expected --root DIR | --update | --verbose)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    // `tools/lint` runs from `rust/`; accept either level.
+    if !root.join(SCANNED_TREES[0]).is_dir()
+        && root.join("src/server").is_dir()
+    {
+        root = match root.join("..").canonicalize() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("cannot resolve repo root: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+    }
+
+    let mut counts: BTreeMap<String, Vec<Finding>> = BTreeMap::new();
+    for tree in SCANNED_TREES {
+        let dir = root.join(tree);
+        let mut files = Vec::new();
+        if let Err(e) = rs_files(&dir, &mut files) {
+            eprintln!("panic_lint: cannot walk {}: {e}", dir.display());
+            return ExitCode::FAILURE;
+        }
+        files.sort();
+        for f in files {
+            let src = match std::fs::read_to_string(&f) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("panic_lint: read {}: {e}", f.display());
+                    return ExitCode::FAILURE;
+                }
+            };
+            let rel = match f.strip_prefix(&root) {
+                Ok(p) => p.to_string_lossy().replace('\\', "/"),
+                Err(_) => f.to_string_lossy().into_owned(),
+            };
+            let findings = scan(&src);
+            if verbose {
+                for fi in &findings {
+                    println!("{rel}:{}: {} `{}`",
+                             fi.line, fi.kind, fi.snippet);
+                }
+            }
+            if !findings.is_empty() {
+                counts.insert(rel, findings);
+            }
+        }
+    }
+
+    let allow_path = root.join(ALLOWLIST);
+    if update {
+        let mut out = String::from(
+            "# panic_lint ratchet: `<path> <count>` of allowed panic \
+             sites per file.\n\
+             # Counts may only shrink; regenerate with \
+             `tools/lint --update`.\n",
+        );
+        for (path, findings) in &counts {
+            let _ = writeln!(out, "{path} {}", findings.len());
+        }
+        if let Err(e) = std::fs::write(&allow_path, out) {
+            eprintln!("panic_lint: write {}: {e}", allow_path.display());
+            return ExitCode::FAILURE;
+        }
+        println!("panic_lint: wrote {} ({} files, {} sites)",
+                 allow_path.display(), counts.len(),
+                 counts.values().map(Vec::len).sum::<usize>());
+        return ExitCode::SUCCESS;
+    }
+
+    let allowed = match load_allowlist(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("panic_lint: {}: {e}", allow_path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut failed = false;
+    for (path, findings) in &counts {
+        let n = findings.len();
+        let cap = allowed.get(path.as_str()).copied().unwrap_or(0);
+        if n > cap {
+            failed = true;
+            eprintln!("panic_lint: {path}: {n} panic sites, allowlist \
+                       permits {cap} — new panic paths in the serving \
+                       stack must degrade through structured errors:");
+            for fi in findings {
+                eprintln!("  {path}:{}: {} `{}`",
+                          fi.line, fi.kind, fi.snippet);
+            }
+        }
+    }
+    for (path, &cap) in &allowed {
+        let n = counts.get(*path).map_or(0, Vec::len);
+        if n < cap {
+            failed = true;
+            eprintln!("panic_lint: {path}: {n} panic sites but the \
+                       allowlist still permits {cap} — ratchet it down \
+                       (run `tools/lint --update`)");
+        }
+    }
+    if failed {
+        return ExitCode::FAILURE;
+    }
+    let total: usize = counts.values().map(Vec::len).sum();
+    println!("panic_lint: clean ({} allowlisted sites across {} files)",
+             total, counts.len());
+    ExitCode::SUCCESS
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn load_allowlist(path: &Path)
+                  -> Result<BTreeMap<&'static str, usize>, String> {
+    // leak the file body: entries borrow from it for the process life
+    let body = match std::fs::read_to_string(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(BTreeMap::new());
+        }
+        Err(e) => return Err(e.to_string()),
+    };
+    let body: &'static str = Box::leak(body.into_boxed_str());
+    let mut map = BTreeMap::new();
+    for (ln, line) in body.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (path, count) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: expected `<path> <count>`",
+                                   ln + 1))?;
+        let count: usize = count.trim().parse().map_err(|_| {
+            format!("line {}: bad count `{count}`", ln + 1)
+        })?;
+        map.insert(path.trim(), count);
+    }
+    Ok(map)
+}
+
+/// Scan one file: blank comments/strings, then walk the text flagging
+/// denied constructs outside `#[cfg(test)]` regions.
+fn scan(src: &str) -> Vec<Finding> {
+    let text = blank_comments_and_strings(src);
+    let bytes = text.as_bytes();
+    let test_mask = test_region_mask(&text);
+    let mut findings = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if test_mask[i] {
+            i += 1;
+            continue;
+        }
+        let rest = &text[i..];
+        if rest.starts_with(".unwrap()") {
+            push(&mut findings, src, i, "unwrap", &text);
+            i += ".unwrap()".len();
+            continue;
+        }
+        if rest.starts_with(".expect(") {
+            push(&mut findings, src, i, "expect", &text);
+            i += ".expect(".len();
+            continue;
+        }
+        if let Some(m) = denied_macro_at(&text, i) {
+            push(&mut findings, src, i, m, &text);
+            i += m.len();
+            continue;
+        }
+        if bytes[i] == b'[' && is_indexing(&text, i) {
+            if let Some(end) = matching_bracket(bytes, i) {
+                let inner = &text[i + 1..end];
+                if !inner.contains("..") && !is_numeric(inner) {
+                    push(&mut findings, src, i, "index", &text);
+                }
+                // findings inside the brackets (e.g. `a[b[i]]`) are
+                // still scanned: only advance past the `[` itself
+            }
+        }
+        i += 1;
+    }
+    findings
+}
+
+/// `panic!`/`unreachable!`/`todo!`/`unimplemented!` invocation at `i`
+/// (identifier boundary on the left, `!` on the right).
+fn denied_macro_at(text: &str, i: usize) -> Option<&'static str> {
+    let bytes = text.as_bytes();
+    if i > 0 && is_ident_byte(bytes[i - 1]) {
+        return None;
+    }
+    DENIED_MACROS.iter().copied().find(|m| {
+        text[i..].starts_with(m)
+            && bytes.get(i + m.len()) == Some(&b'!')
+    })
+}
+
+/// Is the `[` at `i` an indexing bracket? Only when it directly
+/// follows an expression: an identifier (that is not a keyword or
+/// lifetime), `)`, or `]`.
+fn is_indexing(text: &str, i: usize) -> bool {
+    let bytes = text.as_bytes();
+    let mut j = i;
+    while j > 0 && (bytes[j - 1] == b' ' || bytes[j - 1] == b'\t') {
+        j -= 1;
+    }
+    if j == 0 {
+        return false;
+    }
+    match bytes[j - 1] {
+        b')' | b']' => true,
+        c if is_ident_byte(c) => {
+            let end = j;
+            while j > 0 && is_ident_byte(bytes[j - 1]) {
+                j -= 1;
+            }
+            if j > 0 && bytes[j - 1] == b'\'' {
+                return false; // lifetime: `&'a [T]`
+            }
+            let word = &text[j..end];
+            !NON_INDEX_KEYWORDS.contains(&word)
+                && !word.as_bytes().first()
+                        .is_some_and(u8::is_ascii_digit)
+        }
+        _ => false,
+    }
+}
+
+fn matching_bracket(bytes: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Pure numeric-literal index (`0`, `12`, `1_000`), possibly padded.
+fn is_numeric(inner: &str) -> bool {
+    let t = inner.trim();
+    !t.is_empty()
+        && t.bytes().all(|b| b.is_ascii_digit() || b == b'_')
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn push(findings: &mut Vec<Finding>, src: &str, i: usize,
+        kind: &'static str, text: &str) {
+    let line = text[..i].bytes().filter(|&b| b == b'\n').count() + 1;
+    let snippet = src
+        .lines()
+        .nth(line - 1)
+        .unwrap_or("")
+        .trim()
+        .chars()
+        .take(60)
+        .collect();
+    findings.push(Finding { line, kind, snippet });
+}
+
+/// Byte mask of regions under a `#[cfg(test)]`-gated item (the
+/// attribute itself included). Lite parse: after the attribute, the
+/// region runs to the matching `}` of the item's first `{` (or to the
+/// end of a `;`-terminated item). Handles `#[cfg(all(test, …))]` by
+/// looking for a `test` token anywhere inside `#[cfg(…)]`.
+fn test_region_mask(text: &str) -> Vec<bool> {
+    let bytes = text.as_bytes();
+    let mut mask = vec![false; bytes.len()];
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'#'
+            && text[i..].starts_with("#[cfg(")
+        {
+            let Some(attr_end) = matching_bracket(bytes, i + 1) else {
+                break;
+            };
+            let attr = &text[i..=attr_end];
+            if has_test_token(attr) {
+                let mut j = attr_end + 1;
+                // skip further attributes between cfg and the item
+                loop {
+                    while j < bytes.len()
+                        && (bytes[j] as char).is_whitespace()
+                    {
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j] == b'#' {
+                        match matching_bracket(bytes, j + 1) {
+                            Some(e) => j = e + 1,
+                            None => break,
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                // the gated item ends at the matching `}` of its first
+                // brace, or at a top-level `;` (use/type items)
+                let mut depth = 0usize;
+                let mut end = j;
+                while end < bytes.len() {
+                    match bytes[end] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth = depth.saturating_sub(1);
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        b';' if depth == 0 => break,
+                        _ => {}
+                    }
+                    end += 1;
+                }
+                let end = (end + 1).min(bytes.len());
+                for m in &mut mask[i..end] {
+                    *m = true;
+                }
+                i = end;
+                continue;
+            }
+            i = attr_end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// `test` as a standalone token inside an attribute body.
+fn has_test_token(attr: &str) -> bool {
+    let bytes = attr.as_bytes();
+    let mut k = 0;
+    while let Some(p) = attr[k..].find("test") {
+        let s = k + p;
+        let left_ok = s == 0 || !is_ident_byte(bytes[s - 1]);
+        let right = s + "test".len();
+        let right_ok =
+            right >= bytes.len() || !is_ident_byte(bytes[right]);
+        if left_ok && right_ok {
+            return true;
+        }
+        k = s + 1;
+    }
+    false
+}
+
+/// Replace comment and string *contents* with spaces (newlines kept so
+/// line numbers survive). Handles nested block comments, raw strings,
+/// and the char-literal/lifetime ambiguity.
+fn blank_comments_and_strings(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let blank = |out: &mut Vec<u8>, b: &[u8], from: usize, to: usize| {
+        for &c in &b[from..to] {
+            out.push(if c == b'\n' { b'\n' } else { b' ' });
+        }
+    };
+    while i < b.len() {
+        // line comment
+        if b[i] == b'/' && b.get(i + 1) == Some(&b'/') {
+            let end = src[i..]
+                .find('\n')
+                .map_or(b.len(), |p| i + p);
+            blank(&mut out, b, i, end);
+            i = end;
+            continue;
+        }
+        // block comment (nested)
+        if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+            continue;
+        }
+        // raw string r"…" / r#"…"# (b-prefixed too)
+        if (b[i] == b'r' || (b[i] == b'b' && b.get(i + 1) == Some(&b'r')))
+            && !(i > 0 && is_ident_byte(b[i - 1]))
+        {
+            let hash_start = if b[i] == b'r' { i + 1 } else { i + 2 };
+            let mut h = hash_start;
+            while b.get(h) == Some(&b'#') {
+                h += 1;
+            }
+            if b.get(h) == Some(&b'"') {
+                let n_hash = h - hash_start;
+                let closer_s = format!("\"{}", "#".repeat(n_hash));
+                let closer = closer_s.as_bytes();
+                let body = h + 1;
+                let end = find_bytes(&b[body..], closer)
+                    .map_or(b.len(), |p| body + p + closer.len());
+                out.extend_from_slice(&b[i..=h]);
+                blank(&mut out, b, h + 1, end);
+                i = end;
+                continue;
+            }
+        }
+        // plain / byte string
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            out.push(b'"');
+            blank(&mut out, b, i + 1, j.min(b.len()));
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if b[i] == b'\'' {
+            let is_char = match b.get(i + 1) {
+                Some(b'\\') => true,
+                Some(_) => b.get(i + 2) == Some(&b'\''),
+                None => false,
+            };
+            if is_char {
+                let mut j = i + 1;
+                if b.get(j) == Some(&b'\\') {
+                    j += 2; // escape body
+                    // \x41 and \u{…} escapes: run to the closing quote
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                let end = (j + 1).min(b.len());
+                out.push(b'\'');
+                blank(&mut out, b, i + 1, end);
+                i = end;
+                continue;
+            }
+        }
+        out.push(b[i]);
+        i += 1;
+    }
+    // blanking is byte-for-byte, so the text stays valid UTF-8 only if
+    // multibyte chars were kept verbatim — they are (only ASCII
+    // delimiters trigger blanking, and blanked bytes become spaces)
+    String::from_utf8(out).unwrap_or_default()
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(&'static str, usize)> {
+        scan(src).into_iter().map(|f| (f.kind, f.line)).collect()
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_macros() {
+        let src = "fn f() {\n    x.unwrap();\n    y.expect(\"m\");\n    \
+                   panic!(\"boom\");\n    unreachable!();\n}\n";
+        assert_eq!(kinds(src),
+                   vec![("unwrap", 2), ("expect", 3), ("panic", 4),
+                        ("unreachable", 5)]);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_count() {
+        let src = "fn f() {\n    // x.unwrap()\n    /* panic!() */\n    \
+                   let s = \".unwrap()\";\n    let r = r#\"panic!\"#;\n}\n";
+        assert_eq!(kinds(src), vec![]);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { \
+                   y.unwrap(); panic!(); }\n}\n\
+                   fn live2() { z.unwrap(); }\n";
+        assert_eq!(kinds(src), vec![("unwrap", 1), ("unwrap", 6)]);
+    }
+
+    #[test]
+    fn cfg_all_test_and_stacked_attrs_are_skipped() {
+        let src = "#[cfg(all(test, not(loom)))]\n#[allow(dead_code)]\n\
+                   mod tests { fn t() { x.unwrap(); } }\n\
+                   fn live() { y.unwrap(); }\n";
+        assert_eq!(kinds(src), vec![("unwrap", 4)]);
+    }
+
+    #[test]
+    fn variable_indexing_flags_but_literals_and_ranges_pass() {
+        let src = "fn f(v: &[u32], i: usize) {\n    let a = v[i];\n    \
+                   let b = v[0];\n    let c = &v[1..3];\n    \
+                   let d = &v[..];\n    let e = v[i + 1];\n}\n";
+        assert_eq!(kinds(src), vec![("index", 2), ("index", 6)]);
+    }
+
+    #[test]
+    fn non_index_brackets_pass() {
+        let src = "#[derive(Debug)]\nstruct S;\n\
+                   fn f() -> [u8; 4] {\n    let v = vec![1, 2];\n    \
+                   let l: &'static [u8] = &[1];\n    [0; 4]\n}\n";
+        assert_eq!(kinds(src), vec![]);
+    }
+
+    #[test]
+    fn nested_indexing_reports_both() {
+        let src = "fn f(a: &[Vec<u32>], i: usize, j: usize) {\n    \
+                   let x = a[i][j];\n}\n";
+        assert_eq!(kinds(src).len(), 2);
+    }
+
+    #[test]
+    fn call_and_slice_results_index() {
+        let src = "fn f(m: M, i: usize) {\n    g(m)[i];\n    \
+                   m.rows()[i];\n}\n";
+        assert_eq!(kinds(src), vec![("index", 2), ("index", 3)]);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a [u8], i: usize) -> u8 {\n    \
+                   let c = 'x';\n    let n = '\\n';\n    x[i]\n}\n";
+        assert_eq!(kinds(src), vec![("index", 4)]);
+    }
+
+    #[test]
+    fn attribute_test_token_requires_word_boundary() {
+        assert!(has_test_token("#[cfg(test)]"));
+        assert!(has_test_token("#[cfg(all(test, not(loom)))]"));
+        assert!(!has_test_token("#[cfg(feature = \"testing\")]"));
+        assert!(!has_test_token("#[cfg(attest)]"));
+    }
+
+    #[test]
+    fn assert_macros_are_not_flagged() {
+        let src = "fn f(n: usize) {\n    assert!(n > 0);\n    \
+                   assert_eq!(n, 1);\n    debug_assert!(n < 9);\n}\n";
+        assert_eq!(kinds(src), vec![]);
+    }
+}

@@ -174,8 +174,16 @@ impl Engine {
     }
 
     pub fn handle(&self) -> EngineHandle {
+        // `tx` is only taken in `Drop`, so it is present for the whole
+        // borrowable life of the engine; should that ever change, a
+        // handle built on a closed channel degrades to structured
+        // `submit` errors rather than a panic here.
+        let tx = match &self.tx {
+            Some(tx) => tx.clone(),
+            None => mpsc::channel().0,
+        };
         EngineHandle {
-            tx: self.tx.clone().expect("engine running"),
+            tx,
             index: self.index,
             alive: Arc::clone(&self.alive),
         }
@@ -497,10 +505,12 @@ fn shared_doc_tokens<'s>(
     sessions: &'s [Option<ServeSession<'static, dyn ContextPolicy>>],
     sd: &SharedDoc,
 ) -> Option<&'s [i32]> {
-    let si = *sd.sharers.iter().find(|&&si| sessions[si].is_some())?;
-    let s = sessions[si].as_ref().unwrap();
+    let s = sd
+        .sharers
+        .iter()
+        .find_map(|&si| sessions.get(si)?.as_ref())?;
     let dj = s.plan().doc_hashes.iter().position(|&h| h == sd.hash)?;
-    Some(s.sample().docs[dj].as_slice())
+    Some(s.sample().docs.get(dj)?.as_slice())
 }
 
 fn error_response(id: u64, msg: String) -> ServeResponse {
@@ -614,7 +624,7 @@ fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
             .sharers
             .iter()
             .copied()
-            .filter(|&si| sessions[si].is_some())
+            .filter(|&si| sessions.get(si).is_some_and(|s| s.is_some()))
             .collect();
         if live.is_empty() {
             continue;
@@ -650,7 +660,9 @@ fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
                 let share =
                     t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
                 for &si in &live {
-                    if let Some(s) = sessions[si].as_mut() {
+                    if let Some(s) =
+                        sessions.get_mut(si).and_then(|s| s.as_mut())
+                    {
                         s.credit_shared_prefill(share, false);
                     }
                 }
@@ -661,11 +673,17 @@ fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
                 // fail every live sharer now rather than re-running the
                 // (expensive, failing) prefill once per request later
                 for &si in &live {
-                    sessions[si] = None;
+                    if let Some(slot) = sessions.get_mut(si) {
+                        *slot = None;
+                    }
                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let (id, _, reply, _) = &items[si];
-                    let _ = reply.send(ServeEvent::Done(error_response(
-                        *id, format!("doc prefill failed: {e:#}"))));
+                    if let Some((id, _, reply, _)) = items.get(si) {
+                        let _ =
+                            reply.send(ServeEvent::Done(error_response(
+                                *id,
+                                format!("doc prefill failed: {e:#}"),
+                            )));
+                    }
                 }
                 continue;
             }
@@ -673,29 +691,30 @@ fn admit_wave(index: usize, cfg: &ServingConfig, model: &Model,
         metrics.doc_prefills.fetch_add(1, Ordering::Relaxed);
         let share = t.elapsed().as_secs_f64() * 1e3 / live.len() as f64;
         for &si in &live {
-            if let Some(s) = sessions[si].as_mut() {
+            if let Some(s) = sessions.get_mut(si).and_then(|s| s.as_mut())
+            {
                 s.credit_shared_prefill(share, true);
             }
         }
     }
 
     // --- stage 3: per-request prefill (cache hits) + assemble + attend
-    for i in 0..sessions.len() {
-        if sessions[i].is_none() {
-            continue;
-        }
-        let staged = (|| -> Result<()> {
-            let s = sessions[i].as_mut().unwrap();
-            s.prefill_docs(model, store)?;
-            s.assemble(model)?;
-            s.attend(model)
-        })();
+    for (slot, (id, _, reply, _)) in sessions.iter_mut().zip(&items) {
+        let staged = {
+            let Some(s) = slot.as_mut() else {
+                continue;
+            };
+            (|| -> Result<()> {
+                s.prefill_docs(model, store)?;
+                s.assemble(model)?;
+                s.attend(model)
+            })()
+        };
         if let Err(e) = staged {
             metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let (id, _, reply, _) = &items[i];
             let _ = reply.send(ServeEvent::Done(error_response(
                 *id, format!("{e:#}"))));
-            sessions[i] = None;
+            *slot = None;
         }
     }
 
@@ -745,9 +764,8 @@ fn decode_round(model: &Model, cache_bytes: usize, metrics: &Metrics,
     let mut pending: Vec<(usize, FusedStep)> = Vec::new();
     let mut finished: Vec<usize> = Vec::new();
     let mut dead: Vec<(usize, String)> = Vec::new();
-    for i in 0..active.len() {
-        let Active { id, stream, reply, deadline, session } =
-            &mut active[i];
+    for (i, a) in active.iter_mut().enumerate() {
+        let Active { id, stream, reply, deadline, session } = a;
         // deadline sweep: a session past its `--request-timeout-ms`
         // deadline is retired with a structured timeout error instead
         // of decoding (and billing the client) forever
@@ -775,7 +793,10 @@ fn decode_round(model: &Model, cache_bytes: usize, metrics: &Metrics,
     let mut dispatch: Vec<(usize, FusedStep)> =
         Vec::with_capacity(pending.len());
     for &(i, step) in &pending {
-        match active[i].session.decode_inputs() {
+        let Some(a) = active.get_mut(i) else {
+            continue;
+        };
+        match a.session.decode_inputs() {
             Ok((buffer, kv, kv_valid)) => {
                 reqs.push(DecodeReq {
                     buffer,
@@ -802,8 +823,11 @@ fn decode_round(model: &Model, cache_bytes: usize, metrics: &Metrics,
         // per-request outcomes: a failing session is retired alone and
         // never poisons the rest of the round
         for (&(i, step), out) in dispatch.iter().zip(round.results) {
+            let Some(a) = active.get_mut(i) else {
+                continue;
+            };
             let folded = out.and_then(|o| {
-                active[i].session.decode_step_complete(step, o, share)
+                a.session.decode_step_complete(step, o, share)
             });
             if let Err(e) = folded {
                 dead.push((i, format!("{e:#}")));

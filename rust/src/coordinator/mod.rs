@@ -74,6 +74,40 @@
 //! fail-fast instead of re-paying the connect timeout. The optional
 //! [`crate::server::front::FrontEnd`] applies the router's own
 //! mark-down/retry discipline one level up, across whole nodes.
+//!
+//! # Concurrency invariants & how to verify them
+//!
+//! The control plane's threading model is ownership-first: each
+//! engine's decode thread and admission helper own their PJRT
+//! runtime, model, and session table outright and exchange work over
+//! `mpsc` channels — no lock is ever held across a forward pass.
+//! What little shared state exists goes through the [`crate::sync`]
+//! facade or atomics:
+//!
+//! * [`router::Router`] placement state: per-engine load/liveness as
+//!   atomics, residency reads via the lock-free
+//!   [`crate::kvcache::ResidencyBoard`] snapshot;
+//! * the admission gate (`gate-slots` class, [`crate::exec::Gate`]):
+//!   a counted-permit condvar between the decode thread freeing pool
+//!   slots and the admission helper debiting them — permits are
+//!   conserved (loom-modeled), so admission can stall but never
+//!   over-admit or deadlock;
+//! * the KV tiers beneath every engine: see the "Concurrency
+//!   invariants" section of [`crate::kvcache`] for the lock classes,
+//!   the canonical acquisition order, and the exactly-once lease
+//!   contract the engines rely on.
+//!
+//! The request-path invariant enforced by tooling: **no panics** —
+//! every engine-index, session-slot, or channel failure maps to a
+//! structured error event (`tools/lint` denies `unwrap`/`expect`/
+//! `panic!`/indexing in this tree, and this module clippy-denies
+//! `unwrap_used`/`expect_used`). Verify locally with
+//! `RUSTFLAGS="--cfg loom" cargo test --release --test loom_models`
+//! (gate + lease models), `SAMKV_LOCKCHECK=1 cargo test` (lock-order
+//! cycles), and `tools/lint`.
+
+// Serving-critical tree: see the doc section above.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod batcher;
 pub mod engine;

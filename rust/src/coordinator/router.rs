@@ -22,10 +22,10 @@
 //! filter falls back to all engines (the submit path then surfaces the
 //! failure as a structured error instead of a panic here).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::kvcache::store::doc_hash;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::kvcache::{ResidencyBoard, ResidencyHandle};
 use crate::workload::Sample;
 
@@ -51,9 +51,13 @@ impl Router {
 
     /// Mark `engine` down: it stops receiving placements and its
     /// residency advertisements are cleared. Returns `true` the first
-    /// time (callers use this to count the down transition once).
+    /// time (callers use this to count the down transition once); an
+    /// out-of-range index is a no-op.
     pub fn mark_down(&self, engine: usize) -> bool {
-        let newly = !self.down[engine].swap(true, Ordering::Relaxed);
+        let Some(down) = self.down.get(engine) else {
+            return false;
+        };
+        let newly = !down.swap(true, Ordering::Relaxed);
         if newly {
             self.board.clear_engine(engine);
         }
@@ -62,11 +66,15 @@ impl Router {
 
     /// Re-admit `engine` to placement (a restarted/replaced engine).
     pub fn mark_up(&self, engine: usize) {
-        self.down[engine].store(false, Ordering::Relaxed);
+        if let Some(down) = self.down.get(engine) {
+            down.store(false, Ordering::Relaxed);
+        }
     }
 
     pub fn is_down(&self, engine: usize) -> bool {
-        self.down[engine].load(Ordering::Relaxed)
+        self.down
+            .get(engine)
+            .is_some_and(|d| d.load(Ordering::Relaxed))
     }
 
     /// Number of engines currently marked down.
@@ -127,9 +135,13 @@ impl Router {
             .filter(|&(_, &u)| u)
             .map(|(&l, _)| l)
             .min()
-            .unwrap();
-        let not_overloaded =
-            |e: usize| up[e] && loads[e] <= min + self.imbalance_limit;
+            .unwrap_or(0);
+        let load_of =
+            |e: usize| loads.get(e).copied().unwrap_or(u64::MAX);
+        let not_overloaded = |e: usize| {
+            up.get(e).copied().unwrap_or(false)
+                && load_of(e) <= min + self.imbalance_limit
+        };
 
         // 1) cache-aware: most planned docs already resident wins
         // (ties: lighter load, then lower index — deterministic)
@@ -138,7 +150,9 @@ impl Router {
         let resident = (0..n)
             .map(|e| (self.board.resident_count(e, &hashes), e))
             .filter(|&(c, e)| c > 0 && not_overloaded(e))
-            .max_by_key(|&(c, e)| (c, std::cmp::Reverse((loads[e], e))));
+            .max_by_key(|&(c, e)| {
+                (c, std::cmp::Reverse((load_of(e), e)))
+            });
 
         let chosen = match resident {
             Some((_, e)) => e,
@@ -153,14 +167,18 @@ impl Router {
                     loads
                         .iter()
                         .enumerate()
-                        .filter(|&(e, _)| up[e])
+                        .filter(|&(e, _)| {
+                            up.get(e).copied().unwrap_or(false)
+                        })
                         .min_by_key(|&(_, &l)| l)
                         .map(|(i, _)| i)
-                        .unwrap()
+                        .unwrap_or(preferred)
                 }
             }
         };
-        self.in_flight[chosen].fetch_add(1, Ordering::Relaxed);
+        if let Some(slot) = self.in_flight.get(chosen) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
         chosen
     }
 
@@ -168,11 +186,13 @@ impl Router {
     /// `done` (double release, error path) must not wrap the load
     /// counter to u64::MAX and poison placement forever.
     pub fn done(&self, engine: usize) {
-        let _ = self.in_flight[engine].fetch_update(
-            Ordering::Relaxed,
-            Ordering::Relaxed,
-            |v| v.checked_sub(1),
-        );
+        if let Some(slot) = self.in_flight.get(engine) {
+            let _ = slot.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| v.checked_sub(1),
+            );
+        }
     }
 
     pub fn loads(&self) -> Vec<u64> {

@@ -4,11 +4,20 @@
 //! The engine pairs two such threads per instance — a decode thread and
 //! an admission helper (see `coordinator::engine`) — coordinated by a
 //! [`Gate`] over the decode pool's session slots.
+//!
+//! Concurrency note: the [`Gate`] lives on the [`crate::sync`] facade
+//! (loom-model-checked in `tests/loom_models.rs` — permit
+//! conservation under racing take/release). The [`ThreadPool`] stays
+//! on raw `std::sync` deliberately: loom models never construct one,
+//! and its queue mutex (`pool-queue`) is a leaf that nests with
+//! nothing.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex as StdMutex};
 use std::thread;
 use std::time::Duration;
+
+use crate::sync::{Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -23,14 +32,19 @@ impl ThreadPool {
     pub fn new(size: usize, name: &str) -> ThreadPool {
         assert!(size > 0);
         let (sender, receiver) = mpsc::channel::<Job>();
-        let receiver = Arc::new(Mutex::new(receiver));
+        let receiver = Arc::new(StdMutex::new(receiver));
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&receiver);
                 thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = {
+                            match rx.lock() {
+                                Ok(g) => g.recv(),
+                                Err(e) => e.into_inner().recv(),
+                            }
+                        };
                         match job {
                             Ok(job) => job(),
                             Err(_) => break, // sender dropped
@@ -107,35 +121,36 @@ pub struct Gate {
 
 impl Gate {
     pub fn new(slots: usize) -> Gate {
-        Gate { slots: Mutex::new(slots), freed: Condvar::new() }
+        Gate {
+            slots: Mutex::named("gate-slots", slots),
+            freed: Condvar::new(),
+        }
     }
 
     /// Currently free slots.
     pub fn available(&self) -> usize {
-        *self.slots.lock().unwrap()
+        *self.slots.lock()
     }
 
     /// Block until at least one slot is free or `timeout` elapses;
     /// returns the free count observed (0 on timeout).
     pub fn wait_available(&self, timeout: Duration) -> usize {
-        let g = self.slots.lock().unwrap();
-        let (g, _) = self
-            .freed
-            .wait_timeout_while(g, timeout, |s| *s == 0)
-            .unwrap();
+        let g = self.slots.lock();
+        let (g, _) =
+            self.freed.wait_timeout_while(g, timeout, |s| *s == 0);
         *g
     }
 
     /// Debit `n` slots the caller observed free (saturating).
     pub fn take(&self, n: usize) {
-        let mut g = self.slots.lock().unwrap();
+        let mut g = self.slots.lock();
         *g = g.saturating_sub(n);
     }
 
     /// Credit `n` slots back and wake waiters.
     pub fn release(&self, n: usize) {
         {
-            let mut g = self.slots.lock().unwrap();
+            let mut g = self.slots.lock();
             *g += n;
         }
         self.freed.notify_all();
@@ -164,7 +179,7 @@ where
                     break;
                 }
                 let r = f(&items[i]);
-                **slots[i].lock().unwrap() = Some(r);
+                **slots[i].lock() = Some(r);
             });
         }
     })

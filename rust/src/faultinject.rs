@@ -34,11 +34,11 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::rng::Rng;
+use crate::sync::Mutex;
 
 /// Named injection points. Every fault the plan can produce is pulled
 /// at one of these sites by the owning subsystem.
@@ -205,7 +205,7 @@ impl FaultPlan {
             rules[site.index()] = Some(rule);
         }
         let state = std::array::from_fn(|i| {
-            Mutex::new(SiteState {
+            Mutex::named("fault-plan", SiteState {
                 trials: 0,
                 injected: 0,
                 rng: Rng::new(seed ^ (0x5117_u64 << 16) ^ i as u64),
@@ -266,7 +266,7 @@ impl FaultPlan {
                 return false;
             }
         }
-        let mut st = self.state[i].lock().unwrap();
+        let mut st = self.state[i].lock();
         if rule.count > 0 && st.injected >= rule.count {
             return false;
         }

@@ -1,0 +1,207 @@
+//! The disk tier's circuit-breaker state machine, factored out as a
+//! pure core so it can be model-checked standalone.
+//!
+//! [`BreakerCore`] holds no lock and reads no clock: every method
+//! takes `now_ms`, a caller-supplied monotonic millisecond timestamp.
+//! [`super::DiskDocCache`] keeps one instance inside its single
+//! `disk-index` lock (so no new lock-order edge exists) and derives
+//! `now_ms` from a process epoch; `tests/loom_models.rs` wraps a core
+//! in a facade mutex and drives synthetic timestamps through racing
+//! probe threads — deterministic time is what makes the loom
+//! exploration reproducible.
+//!
+//! State machine (`threshold` consecutive errors open; one probe
+//! after `probe_ms`):
+//!
+//! ```text
+//!            error × threshold                probe_ms elapsed
+//!  Closed ───────────────────────▶ Open ─────────────────────▶ HalfOpen
+//!    ▲                              ▲                             │
+//!    │            ok (probe succeeded)│ error (probe failed)      │
+//!    └─────────────────────────────┴──────────────────────────────┘
+//! ```
+//!
+//! Invariants (asserted by the model):
+//! * the breaker never closes except by a successful half-open probe;
+//! * operations are short-circuited only while `Open` and before the
+//!   probe interval elapses;
+//! * open/close transition reports are exactly-once per transition,
+//!   however many threads race their outcomes in.
+
+/// What a [`BreakerCore::note_error`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerStep {
+    /// No state transition.
+    NoChange,
+    /// This error opened the breaker. `failed_probe` distinguishes a
+    /// half-open probe failure from a closed-state threshold trip.
+    Opened { failed_probe: bool },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Normal service; consecutive I/O errors are being counted.
+    Closed,
+    /// Short-circuiting all disk I/O since `since_ms`.
+    Open { since_ms: u64 },
+    /// Probe window: operations run against the device again; the
+    /// first outcome decides (success closes, error re-opens).
+    HalfOpen,
+}
+
+/// Pure, clock-free circuit breaker. `threshold == 0` disables it
+/// (never blocks, never transitions).
+#[derive(Debug)]
+pub struct BreakerCore {
+    threshold: usize,
+    probe_ms: u64,
+    consec_errors: usize,
+    state: State,
+}
+
+impl BreakerCore {
+    pub fn new(threshold: usize, probe_ms: u64) -> BreakerCore {
+        BreakerCore {
+            threshold,
+            probe_ms,
+            consec_errors: 0,
+            state: State::Closed,
+        }
+    }
+
+    /// True while open or half-open (the "tripped" gauge).
+    pub fn is_tripped(&self) -> bool {
+        !matches!(self.state, State::Closed)
+    }
+
+    /// Consecutive errors counted since the last success (only
+    /// meaningful while closed).
+    pub fn consecutive_errors(&self) -> usize {
+        self.consec_errors
+    }
+
+    /// Gate before an I/O operation: `true` means short-circuit it.
+    /// An open breaker past its probe interval flips to half-open and
+    /// admits this operation as the probe.
+    pub fn blocks(&mut self, now_ms: u64) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        match self.state {
+            State::Closed | State::HalfOpen => false,
+            State::Open { since_ms } => {
+                if now_ms.saturating_sub(since_ms) >= self.probe_ms {
+                    self.state = State::HalfOpen;
+                    false
+                } else {
+                    true
+                }
+            }
+        }
+    }
+
+    /// Count one failed operation; reports an open transition
+    /// exactly once per transition.
+    pub fn note_error(&mut self, now_ms: u64) -> BreakerStep {
+        if self.threshold == 0 {
+            return BreakerStep::NoChange;
+        }
+        match self.state {
+            State::HalfOpen => {
+                // failed probe: straight back to open
+                self.state = State::Open { since_ms: now_ms };
+                BreakerStep::Opened { failed_probe: true }
+            }
+            State::Closed => {
+                self.consec_errors += 1;
+                if self.consec_errors >= self.threshold {
+                    self.state = State::Open { since_ms: now_ms };
+                    BreakerStep::Opened { failed_probe: false }
+                } else {
+                    BreakerStep::NoChange
+                }
+            }
+            State::Open { .. } => BreakerStep::NoChange,
+        }
+    }
+
+    /// Count one successful operation: resets the consecutive error
+    /// run; returns `true` when a half-open probe success re-closed
+    /// the breaker (exactly once per close).
+    pub fn note_ok(&mut self) -> bool {
+        self.consec_errors = 0;
+        if matches!(self.state, State::HalfOpen) {
+            self.state = State::Closed;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_zero_disables() {
+        let mut b = BreakerCore::new(0, 10);
+        assert_eq!(b.note_error(0), BreakerStep::NoChange);
+        assert!(!b.blocks(1000));
+        assert!(!b.is_tripped());
+    }
+
+    #[test]
+    fn opens_after_threshold_probes_and_recloses() {
+        let mut b = BreakerCore::new(2, 10);
+        assert_eq!(b.note_error(0), BreakerStep::NoChange);
+        assert_eq!(
+            b.note_error(1),
+            BreakerStep::Opened { failed_probe: false }
+        );
+        assert!(b.is_tripped());
+        assert!(b.blocks(5), "open before the probe interval blocks");
+        assert!(!b.blocks(11), "past the interval admits one probe");
+        assert!(b.note_ok(), "probe success closes exactly once");
+        assert!(!b.is_tripped());
+        assert!(!b.note_ok(), "closed-state ok reports nothing");
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_interval() {
+        let mut b = BreakerCore::new(1, 10);
+        assert_eq!(
+            b.note_error(0),
+            BreakerStep::Opened { failed_probe: false }
+        );
+        assert!(!b.blocks(10));
+        assert_eq!(
+            b.note_error(10),
+            BreakerStep::Opened { failed_probe: true }
+        );
+        assert!(b.blocks(15), "re-open restarts the probe dwell");
+        assert!(!b.blocks(20));
+    }
+
+    #[test]
+    fn ok_resets_consecutive_error_run() {
+        let mut b = BreakerCore::new(3, 10);
+        b.note_error(0);
+        b.note_error(1);
+        assert!(!b.note_ok());
+        assert_eq!(b.consecutive_errors(), 0);
+        b.note_error(2);
+        b.note_error(3);
+        assert_eq!(b.note_error(4),
+                   BreakerStep::Opened { failed_probe: false });
+    }
+
+    #[test]
+    fn open_state_errors_do_not_retransition() {
+        let mut b = BreakerCore::new(1, 10);
+        assert_eq!(b.note_error(0),
+                   BreakerStep::Opened { failed_probe: false });
+        assert_eq!(b.note_error(1), BreakerStep::NoChange);
+        assert!(b.is_tripped());
+    }
+}

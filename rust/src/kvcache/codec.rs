@@ -34,12 +34,13 @@
 //! over old files).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::config::KvCodecKind;
+use crate::sync::Mutex;
 
 /// Wire ids (disk v3 per-record codec tag). Stable forever: files
 /// outlive binaries.
@@ -55,7 +56,7 @@ const MAX_DECODE_SAMPLES: usize = 4096;
 /// Per-codec-instance counters. All monotone lifetime totals; the
 /// decode-time samples are a drain-on-read buffer for the metrics
 /// histogram.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CodecStats {
     blocks_encoded: AtomicU64,
     blocks_decoded: AtomicU64,
@@ -64,6 +65,19 @@ pub struct CodecStats {
     /// Encoded bytes actually produced by every encode.
     physical_bytes: AtomicU64,
     decode_ms: Mutex<Vec<f64>>,
+}
+
+// Manual impl: the lock-class-named mutex has no `Default`.
+impl Default for CodecStats {
+    fn default() -> CodecStats {
+        CodecStats {
+            blocks_encoded: AtomicU64::new(0),
+            blocks_decoded: AtomicU64::new(0),
+            logical_bytes: AtomicU64::new(0),
+            physical_bytes: AtomicU64::new(0),
+            decode_ms: Mutex::named("codec-stats", Vec::new()),
+        }
+    }
 }
 
 impl CodecStats {
@@ -77,7 +91,7 @@ impl CodecStats {
 
     fn note_decode(&self, ms: f64) {
         self.blocks_decoded.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.decode_ms.lock().unwrap();
+        let mut g = self.decode_ms.lock();
         if g.len() < MAX_DECODE_SAMPLES {
             g.push(ms);
         }
@@ -87,7 +101,7 @@ impl CodecStats {
     /// the previous drain — the engine feeds them into the metrics
     /// histogram after every admission wave.
     pub fn take_decode_samples(&self) -> Vec<f64> {
-        std::mem::take(&mut self.decode_ms.lock().unwrap())
+        std::mem::take(&mut *self.decode_ms.lock())
     }
 
     pub fn snapshot(&self, codec: &'static str) -> CodecSnapshot {

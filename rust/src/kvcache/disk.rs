@@ -101,15 +101,17 @@ use std::collections::HashMap;
 use std::fs;
 use std::io::Read;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::KvCodecKind;
 use crate::faultinject::{FaultPlan, FaultSite};
+use crate::sync::Mutex;
 use crate::tensor::Tensor;
 
+use super::breaker::{BreakerCore, BreakerStep};
 use super::codec::{codec_by_id, codec_for, KvCodec};
 use super::evict::{EvictionCandidate, EvictionPolicy, LruPolicy,
                    WHOLE_ENTRY};
@@ -201,26 +203,16 @@ struct DiskSlot {
     complete: bool,
 }
 
-/// Circuit-breaker state machine (see the module docs).
-enum BreakerState {
-    /// Normal service; consecutive I/O errors are being counted.
-    Closed,
-    /// Short-circuiting all disk I/O since `since`.
-    Open { since: Instant },
-    /// Probe window: operations run against the device again; the
-    /// first outcome decides (success closes, error re-opens).
-    HalfOpen,
-}
-
 struct DiskInner {
     index: HashMap<u64, DiskSlot>,
     clock: u64,
     budget_bytes: usize,
     stats: DiskStats,
     load_ms: Vec<f64>,
-    /// Consecutive I/O errors since the last success (breaker fuel).
-    consec_io_errors: usize,
-    breaker: BreakerState,
+    /// Circuit-breaker state machine (pure core, model-checked in
+    /// `tests/loom_models.rs`); lives under the single `disk-index`
+    /// lock so the breaker adds no lock-order edge.
+    breaker: BreakerCore,
 }
 
 /// The persistent tier: a directory of per-hash cache files with an
@@ -233,10 +225,9 @@ pub struct DiskDocCache {
     /// Codec for newly written records (reads honor each record's own
     /// tag regardless).
     codec: Arc<dyn KvCodec>,
-    /// Consecutive I/O errors that open the breaker; 0 disables it.
-    breaker_threshold: usize,
-    /// Open-state dwell before one half-open probe is admitted.
-    breaker_probe: Duration,
+    /// Epoch for the monotonic millisecond timestamps the pure
+    /// [`BreakerCore`] consumes.
+    epoch: Instant,
     /// Byte cap on the `quarantine/` directory.
     quarantine_cap_bytes: usize,
     /// Injected fault schedule (chaos testing); `None` in production.
@@ -262,19 +253,17 @@ impl DiskDocCache {
             || format!("create disk cache dir {}", dir.display()))?;
         let cache = DiskDocCache {
             dir,
-            inner: Mutex::new(DiskInner {
+            inner: Mutex::named("disk-index", DiskInner {
                 index: HashMap::new(),
                 clock: 0,
                 budget_bytes,
                 stats: DiskStats::default(),
                 load_ms: Vec::new(),
-                consec_io_errors: 0,
-                breaker: BreakerState::Closed,
+                breaker: BreakerCore::new(0, 500),
             }),
             policy,
             codec: codec_for(KvCodecKind::F32),
-            breaker_threshold: 0,
-            breaker_probe: Duration::from_millis(500),
+            epoch: Instant::now(),
             quarantine_cap_bytes: DEFAULT_QUARANTINE_CAP_BYTES,
             faults: None,
         };
@@ -288,10 +277,10 @@ impl DiskDocCache {
     /// serving wires [`crate::config::ServingConfig`]'s default in),
     /// and after `probe` in the open state one half-open operation is
     /// admitted to test the device.
-    pub fn with_breaker(mut self, threshold: usize, probe: Duration)
+    pub fn with_breaker(self, threshold: usize, probe: Duration)
                         -> DiskDocCache {
-        self.breaker_threshold = threshold;
-        self.breaker_probe = probe;
+        self.inner.lock().breaker =
+            BreakerCore::new(threshold, probe.as_millis() as u64);
         self
     }
 
@@ -332,15 +321,15 @@ impl DiskDocCache {
     }
 
     pub fn budget_bytes(&self) -> usize {
-        self.inner.lock().unwrap().budget_bytes
+        self.inner.lock().budget_bytes
     }
 
     pub fn stats(&self) -> DiskStats {
-        self.inner.lock().unwrap().stats.clone()
+        self.inner.lock().stats.clone()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().index.len()
+        self.inner.lock().index.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -348,14 +337,14 @@ impl DiskDocCache {
     }
 
     pub fn contains(&self, hash: u64) -> bool {
-        self.inner.lock().unwrap().index.contains_key(&hash)
+        self.inner.lock().index.contains_key(&hash)
     }
 
     /// Drain the load-latency samples (milliseconds) buffered since the
     /// previous drain — the engine feeds them into the metrics
     /// histogram after every admission wave.
     pub fn take_load_samples(&self) -> Vec<f64> {
-        std::mem::take(&mut self.inner.lock().unwrap().load_ms)
+        std::mem::take(&mut self.inner.lock().load_ms)
     }
 
     fn entry_path(&self, hash: u64) -> PathBuf {
@@ -364,7 +353,13 @@ impl DiskDocCache {
 
     /// True when the breaker is open or half-open right now.
     pub fn breaker_is_open(&self) -> bool {
-        self.inner.lock().unwrap().stats.breaker_open == 1
+        self.inner.lock().stats.breaker_open == 1
+    }
+
+    /// Milliseconds since this cache's epoch — the monotonic clock
+    /// the pure [`BreakerCore`] consumes.
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
     }
 
     /// Breaker gate, called before any disk I/O with the lock held:
@@ -372,59 +367,37 @@ impl DiskDocCache {
     /// breaker past its probe interval flips to half-open and lets
     /// this operation through as the probe.
     fn breaker_blocks_locked(&self, g: &mut DiskInner) -> bool {
-        if self.breaker_threshold == 0 {
-            return false;
-        }
-        match g.breaker {
-            BreakerState::Closed | BreakerState::HalfOpen => false,
-            BreakerState::Open { since } => {
-                if since.elapsed() >= self.breaker_probe {
-                    g.breaker = BreakerState::HalfOpen;
-                    false
-                } else {
-                    g.stats.breaker_short_circuits += 1;
-                    true
-                }
-            }
+        if g.breaker.blocks(self.now_ms()) {
+            g.stats.breaker_short_circuits += 1;
+            true
+        } else {
+            false
         }
     }
 
     /// Count one failed disk operation toward the breaker.
     fn note_io_error_locked(&self, g: &mut DiskInner) {
         g.stats.io_errors += 1;
-        if self.breaker_threshold == 0 {
-            return;
-        }
-        match g.breaker {
-            BreakerState::HalfOpen => {
-                // failed probe: straight back to open
-                g.breaker = BreakerState::Open { since: Instant::now() };
+        match g.breaker.note_error(self.now_ms()) {
+            BreakerStep::NoChange => {}
+            BreakerStep::Opened { failed_probe } => {
                 g.stats.breaker_opens += 1;
                 g.stats.breaker_open = 1;
-            }
-            BreakerState::Closed => {
-                g.consec_io_errors += 1;
-                if g.consec_io_errors >= self.breaker_threshold {
-                    g.breaker =
-                        BreakerState::Open { since: Instant::now() };
-                    g.stats.breaker_opens += 1;
-                    g.stats.breaker_open = 1;
+                if !failed_probe {
                     crate::warn!(
                         "disk tier breaker OPEN after {} consecutive \
-                         I/O errors ({})", g.consec_io_errors,
+                         I/O errors ({})",
+                        g.breaker.consecutive_errors(),
                         self.dir.display());
                 }
             }
-            BreakerState::Open { .. } => {}
         }
     }
 
     /// Count one successful disk operation: resets the consecutive
     /// error run, and a half-open probe success re-closes the breaker.
     fn note_io_ok_locked(&self, g: &mut DiskInner) {
-        g.consec_io_errors = 0;
-        if matches!(g.breaker, BreakerState::HalfOpen) {
-            g.breaker = BreakerState::Closed;
+        if g.breaker.note_ok() {
             g.stats.breaker_closes += 1;
             g.stats.breaker_open = 0;
         }
@@ -437,7 +410,7 @@ impl DiskDocCache {
     fn read_and_decode(&self, hash: u64, expect_tokens: &[i32])
                        -> Option<(Meta, Vec<(u32, Vec<f32>)>, f64)> {
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             if self.breaker_blocks_locked(&mut g) {
                 g.stats.misses += 1;
                 return None;
@@ -468,7 +441,7 @@ impl DiskDocCache {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                 // evicted (or externally removed) between the index
                 // check and the read: drop the stale index entry
-                let mut g = self.inner.lock().unwrap();
+                let mut g = self.inner.lock();
                 if let Some(slot) = g.index.remove(&hash) {
                     g.stats.current_bytes =
                         g.stats.current_bytes.saturating_sub(slot.bytes);
@@ -479,7 +452,7 @@ impl DiskDocCache {
             Err(e) => {
                 // real (or injected) I/O error: possibly transient, so
                 // the index entry is kept; the breaker counts it
-                let mut g = self.inner.lock().unwrap();
+                let mut g = self.inner.lock();
                 self.note_io_error_locked(&mut g);
                 g.stats.misses += 1;
                 drop(g);
@@ -492,7 +465,7 @@ impl DiskDocCache {
         let meta = match decode_meta(hash, &bytes) {
             Ok(m) => m,
             Err(why) => {
-                let mut g = self.inner.lock().unwrap();
+                let mut g = self.inner.lock();
                 self.note_io_ok_locked(&mut g);
                 g.stats.loads += 1;
                 g.stats.bytes_loaded += file_bytes;
@@ -508,7 +481,7 @@ impl DiskDocCache {
             }
         };
         if meta.tokens != expect_tokens {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             self.note_io_ok_locked(&mut g);
             g.stats.loads += 1;
             g.stats.bytes_loaded += file_bytes;
@@ -530,7 +503,7 @@ impl DiskDocCache {
             bad += blocks.len() as u64;
             blocks.clear();
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         self.note_io_ok_locked(&mut g);
         g.stats.loads += 1;
         g.stats.bytes_loaded += file_bytes;
@@ -546,7 +519,7 @@ impl DiskDocCache {
 
     /// Post-read accounting shared by the load paths.
     fn note_load_outcome(&self, hash: u64, usable: bool, ms: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if usable {
             g.clock += 1;
             let clock = g.clock;
@@ -661,7 +634,7 @@ impl DiskDocCache {
         {
             // open breaker: skip the writeback without touching the
             // failing device (the document stays re-prefillable)
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             if self.breaker_blocks_locked(&mut g) {
                 return Ok(false);
             }
@@ -680,7 +653,7 @@ impl DiskDocCache {
             return Ok(false);
         }
         let merge = {
-            let g = self.inner.lock().unwrap();
+            let g = self.inner.lock();
             match g.index.get(&entry.hash) {
                 Some(s) if s.complete => return Ok(false),
                 Some(_) => true,
@@ -731,8 +704,10 @@ impl DiskDocCache {
             // flip a byte inside the last block record (every record
             // is ≥ 21 bytes, so len-16 is always within it): read-back
             // must drop exactly that block via its record checksum
-            let i = buf.len() - 16;
-            buf[i] ^= 0xff;
+            let i = buf.len().saturating_sub(16);
+            if let Some(byte) = buf.get_mut(i) {
+                *byte ^= 0xff;
+            }
         }
         let path = self.entry_path(entry.hash);
         let tmp = path.with_extension(format!("tmp{seq}"));
@@ -748,14 +723,14 @@ impl DiskDocCache {
         };
         if let Err(e) = write {
             let _ = fs::remove_file(&tmp);
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             self.note_io_error_locked(&mut g);
             drop(g);
             return Err(e).with_context(
                 || format!("write {}", path.display()));
         }
         let doomed = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             self.note_io_ok_locked(&mut g);
             g.clock += 1;
             let clock = g.clock;
@@ -787,7 +762,7 @@ impl DiskDocCache {
     /// survive; `current_bytes` resets.
     pub fn clear(&self) {
         let doomed: Vec<u64> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             g.stats.current_bytes = 0;
             g.index.drain().map(|(h, _)| h).collect()
         };
@@ -877,7 +852,7 @@ impl DiskDocCache {
         // seed recency from mtime order: oldest file = first to evict
         found.sort_by_key(|f| f.4);
         let doomed = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             for (hash, bytes, tokens, complete, _) in found {
                 g.clock += 1;
                 let clock = g.clock;
@@ -955,7 +930,7 @@ impl DiskDocCache {
                 drops += 1;
             }
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.stats.quarantined_bytes = total;
         g.stats.quarantine_drops += drops;
     }
@@ -963,7 +938,7 @@ impl DiskDocCache {
 
 impl std::fmt::Debug for DiskDocCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         f.debug_struct("DiskDocCache")
             .field("dir", &self.dir)
             .field("entries", &g.index.len())

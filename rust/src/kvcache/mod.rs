@@ -217,10 +217,67 @@
 //! corrupt_blocks/collisions/evictions/bytes) plus a buffer of
 //! per-load latencies drained into the metrics histogram.
 //!
+//! # Concurrency invariants & how to verify them
+//!
+//! Every lock and condvar in this tree goes through the
+//! [`crate::sync`] facade. The lock classes and what each guards:
+//!
+//! * `pin-map` — one engine's planned-hash pin counts ([`store`]);
+//! * `host-inner` — the host tier's entry map, in-flight lease set,
+//!   stats, and pins ([`store::HostDocCache`]; the `published`
+//!   condvar rides on it);
+//! * `kv-blocks` — one document's block-slot list
+//!   ([`pool::KvBlocks`], per-instance — siblings are unordered);
+//! * `pool-inner` — the slab, refcounts, free list, and content map
+//!   ([`pool::KvBlockPool`]);
+//! * `residency-board` — one engine's advertised hashes
+//!   ([`residency`]);
+//! * `disk-index` — the disk tier's index, stats, and circuit
+//!   breaker ([`DiskDocCache`]).
+//!
+//! Canonical acquisition order (hold left, take right — **never**
+//! the reverse): `pin-map → host-inner → kv-blocks → pool-inner`,
+//! with `host-inner → residency-board` and `disk-index → fault-plan`
+//! as side chains. Disk reads, spill writes, and peer fetches all run
+//! *outside* `host-inner`: payloads are extracted under the lock and
+//! written after release, so a slow device can never wedge lookups.
+//!
+//! The invariants the tooling checks:
+//!
+//! * **Exactly-once leasing** — per document hash, at most one
+//!   [`store::PrefillLease`] exists at a time; every concurrent
+//!   requester is served its publish (or woken to retry on
+//!   abandonment), so each unique document is prefilled once
+//!   process-wide (cluster-wide under `--peers`).
+//! * **Refcount safety** — a pool slot is freed exactly when its
+//!   last [`pool::BlockRef`] drops; stray releases are counted in
+//!   [`PoolStats::double_frees`] (never a panic, never another
+//!   block's corruption); CoW writes move the writer to a private
+//!   slot and never mutate a sharer's payload.
+//! * **Breaker step reporting** — [`BreakerCore`] reports each
+//!   open/close transition exactly once under racing probes, so the
+//!   metrics/log edge triggers fire once per transition.
+//!
+//! How to verify locally:
+//!
+//! * exhaustive interleavings (loom models of all three invariants):
+//!   `RUSTFLAGS="--cfg loom" cargo test --release --test loom_models`
+//! * lock-order deadlock detection across the whole suite:
+//!   `SAMKV_LOCKCHECK=1 cargo test` (or `--features lockcheck`)
+//! * panic-path lint over `server/`+`coordinator/`+`kvcache/`:
+//!   `tools/lint` (allowlist ratchet in `rust/lint_allowlist.txt`)
+//!
 //! [`assembly`] — building the fixed-shape sparse/full buffers the AOT
 //! artifacts consume, gathering KV spans straight out of the pool.
 
+// Serving-critical tree: `.unwrap()`/`.expect()` are denied outright
+// (the panic-path lint catches the other panic forms); the two
+// annotated exceptions justify themselves at the call site and are
+// tracked in rust/lint_allowlist.txt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod assembly;
+pub mod breaker;
 pub mod codec;
 pub mod disk;
 pub mod evict;
@@ -229,6 +286,7 @@ pub mod residency;
 pub mod store;
 
 pub use assembly::{AssembledContext, BlockRef, SlotKind};
+pub use breaker::{BreakerCore, BreakerStep};
 pub use codec::{
     codec_by_id, codec_for, CodecSnapshot, CodecStats, KvCodec,
 };

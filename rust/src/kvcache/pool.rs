@@ -50,12 +50,13 @@
 //! budgets consume.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use super::codec::{codec_for, KvCodec, CODEC_F32};
 use crate::config::KvCodecKind;
+use crate::sync::Mutex;
 use crate::tensor::Tensor;
 
 /// Default `--kv-block-tokens`: tokens of per-layer K/V per pool block.
@@ -140,6 +141,10 @@ impl PoolInner {
     }
 
     /// Pop a free slot, growing the slab when none remain.
+    // allow: `grow()` appends `n_slots().max(1)` slots, so the pop
+    // cannot miss; a structured error here would force every caller to
+    // thread an impossible failure. Tracked in rust/lint_allowlist.txt.
+    #[allow(clippy::expect_used)]
     fn take_free(&mut self) -> u32 {
         if self.free_slots.is_empty() {
             self.grow();
@@ -173,7 +178,7 @@ impl KvBlockPool {
             block_tokens: block_tokens.max(1),
             codec: codec_for(KvCodecKind::F32),
             hot_blocks: crate::config::DEFAULT_KV_HOT_BLOCKS,
-            inner: Mutex::new(PoolInner {
+            inner: Mutex::named("pool-inner", PoolInner {
                 slab: Vec::new(),
                 per_token_elems: 0,
                 slot_elems: 0,
@@ -225,7 +230,7 @@ impl KvBlockPool {
     }
 
     pub fn stats(&self) -> PoolStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let total = g.n_slots() as u64;
         let free = g.free_slots.len() as u64;
         PoolStats {
@@ -244,18 +249,18 @@ impl KvBlockPool {
 
     /// Tier-side accounting: blocks removed from an entry by eviction.
     pub fn note_blocks_evicted(&self, n: u64) {
-        self.inner.lock().unwrap().blocks_evicted += n;
+        self.inner.lock().blocks_evicted += n;
     }
 
     /// Tier-side accounting: blocks written to the disk tier.
     pub fn note_blocks_spilled(&self, n: u64) {
-        self.inner.lock().unwrap().blocks_spilled += n;
+        self.inner.lock().blocks_spilled += n;
     }
 
     /// Tier-side accounting: an eviction pass left a document partially
     /// resident (block granularity doing its job).
     pub fn note_partial_eviction(&self) {
-        self.inner.lock().unwrap().partial_evictions += 1;
+        self.inner.lock().partial_evictions += 1;
     }
 
     /// Allocate (or share) a slot holding `data`, padded with zeros to
@@ -264,7 +269,7 @@ impl KvBlockPool {
     fn alloc_slot(&self, per_token_elems: usize, data: &[f32])
                   -> Result<u32> {
         ensure!(per_token_elems > 0, "per_token_elems must be > 0");
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if g.per_token_elems == 0 {
             g.per_token_elems = per_token_elems;
             g.slot_elems = per_token_elems * self.block_tokens;
@@ -301,7 +306,7 @@ impl KvBlockPool {
 
     /// Bump a live slot's refcount ([`BlockRef::clone`]).
     fn retain_slot(&self, slot: u32) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         debug_assert!(g.refs[slot as usize] > 0, "retain of a free slot");
         g.refs[slot as usize] += 1;
     }
@@ -311,7 +316,7 @@ impl KvBlockPool {
     /// and counted in [`PoolStats::double_frees`] — never a panic, and
     /// never a corruption of another block's slot.
     pub(crate) fn release_slot(&self, slot: u32) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let s = slot as usize;
         if s >= g.refs.len() || g.refs[s] == 0 {
             g.double_frees += 1;
@@ -328,7 +333,7 @@ impl KvBlockPool {
     /// Copy `dst.len()` elements out of a live slot at `offset`.
     fn read_slot(&self, slot: u32, offset: usize, dst: &mut [f32])
                  -> Result<()> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let s = slot as usize;
         ensure!(s < g.refs.len() && g.refs[s] > 0,
                 "read of a free pool slot {slot}");
@@ -348,7 +353,7 @@ impl KvBlockPool {
     /// address).
     fn write_slot(&self, r: &mut BlockRef, offset: usize, data: &[f32])
                   -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let s = r.slot as usize;
         ensure!(s < g.refs.len() && g.refs[s] > 0,
                 "write through a dead BlockRef (slot {})", r.slot);
@@ -612,7 +617,7 @@ impl KvBlocks {
         Ok(KvBlocks {
             pool: Arc::clone(pool),
             layout,
-            blocks: Mutex::new(blocks),
+            blocks: Mutex::named("kv-blocks", blocks),
         })
     }
 
@@ -621,7 +626,7 @@ impl KvBlocks {
     pub fn empty(pool: &Arc<KvBlockPool>, layout: KvLayout) -> KvBlocks {
         let mut blocks = Vec::with_capacity(layout.n_blocks());
         blocks.resize_with(layout.n_blocks(), || BlockSlot::Missing);
-        KvBlocks { pool: Arc::clone(pool), layout, blocks: Mutex::new(blocks) }
+        KvBlocks { pool: Arc::clone(pool), layout, blocks: Mutex::named("kv-blocks", blocks) }
     }
 
     pub fn layout(&self) -> KvLayout {
@@ -650,7 +655,7 @@ impl KvBlocks {
     /// pooled blocks, payload length for encoded blocks — what the
     /// cache-tier byte budgets charge.
     pub fn resident_bytes(&self) -> usize {
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         blocks
             .iter()
             .enumerate()
@@ -665,7 +670,7 @@ impl KvBlocks {
     /// Physical bytes of block `b` (`None` if evicted): what evicting
     /// this one block frees from a byte budget.
     pub fn block_physical_bytes(&self, b: usize) -> Option<usize> {
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         match blocks.get(b)? {
             BlockSlot::Missing => None,
             BlockSlot::Pooled(_) => Some(self.layout.block_bytes(b)),
@@ -674,18 +679,18 @@ impl KvBlocks {
     }
 
     pub fn is_fully_resident(&self) -> bool {
-        self.blocks.lock().unwrap().iter().all(|s| s.is_resident())
+        self.blocks.lock().iter().all(|s| s.is_resident())
     }
 
     pub fn resident_block_indexes(&self) -> Vec<u32> {
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         (0..blocks.len() as u32)
             .filter(|&b| blocks[b as usize].is_resident())
             .collect()
     }
 
     pub fn missing_block_indexes(&self) -> Vec<u32> {
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         (0..blocks.len() as u32)
             .filter(|&b| !blocks[b as usize].is_resident())
             .collect()
@@ -707,7 +712,7 @@ impl KvBlocks {
         ensure!(dst.len() == n_tok * dh,
                 "dst len {} != {} tokens x {} dims", dst.len(), n_tok, dh);
         let ch = lay.channel(l, c, h);
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         let mut t = tok_start;
         let mut out = 0usize;
         while t < tok_start + n_tok {
@@ -790,7 +795,7 @@ impl KvBlocks {
     /// Block `b`'s logical payload (channel-major, unpadded, decoded to
     /// f32), or `None` if evicted — the disk tier's record source.
     pub fn block_data(&self, b: usize) -> Option<Vec<f32>> {
-        let blocks = self.blocks.lock().unwrap();
+        let blocks = self.blocks.lock();
         self.decode_slot(b, blocks.get(b)?)
     }
 
@@ -799,7 +804,7 @@ impl KvBlocks {
     /// slot. `None` if already evicted.
     pub fn take_block_data(&self, b: usize) -> Option<Vec<f32>> {
         let taken = std::mem::replace(
-            self.blocks.lock().unwrap().get_mut(b)?, BlockSlot::Missing);
+            self.blocks.lock().get_mut(b)?, BlockSlot::Missing);
         if !taken.is_resident() {
             return None;
         }
@@ -818,7 +823,7 @@ impl KvBlocks {
                 "block {b} payload {} != expected {}", logical.len(),
                 lay.block_len(b) * lay.per_token_elems());
         let slot = self.slot_for(b, logical)?;
-        let mut blocks = self.blocks.lock().unwrap();
+        let mut blocks = self.blocks.lock();
         ensure!(!blocks[b].is_resident(), "block {b} is already resident");
         blocks[b] = slot;
         Ok(())
@@ -837,7 +842,7 @@ impl KvBlocks {
         for &b in &missing {
             let logical = logical_from_tensor(&lay, kv, b as usize);
             let slot = self.slot_for(b as usize, &logical)?;
-            let mut blocks = self.blocks.lock().unwrap();
+            let mut blocks = self.blocks.lock();
             if !blocks[b as usize].is_resident() {
                 blocks[b as usize] = slot;
             }

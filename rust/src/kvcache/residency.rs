@@ -21,9 +21,15 @@
 //! above already covers the window where blocks leave afterwards.
 
 use std::collections::HashSet;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-/// Per-engine sets of device-resident document hashes.
+use crate::sync::Mutex;
+
+/// Per-engine sets of device-resident document hashes. Each engine's
+/// set is its own `residency-board` lock-class instance (see
+/// [`crate::sync`]); the board is a leaf in the canonical acquisition
+/// order and out-of-range engine indices read as empty/no-op so a
+/// confused caller can never panic the placement path.
 #[derive(Debug)]
 pub struct ResidencyBoard {
     engines: Vec<Mutex<HashSet<u64>>>,
@@ -33,7 +39,7 @@ impl ResidencyBoard {
     pub fn new(n_engines: usize) -> ResidencyBoard {
         ResidencyBoard {
             engines: (0..n_engines)
-                .map(|_| Mutex::new(HashSet::new()))
+                .map(|_| Mutex::named("residency-board", HashSet::new()))
                 .collect(),
         }
     }
@@ -44,19 +50,26 @@ impl ResidencyBoard {
 
     /// How many of `hashes` are resident on `engine`.
     pub fn resident_count(&self, engine: usize, hashes: &[u64]) -> usize {
-        let set = self.engines[engine].lock().unwrap();
+        let Some(set) = self.engines.get(engine) else {
+            return 0;
+        };
+        let set = set.lock();
         hashes.iter().filter(|h| set.contains(h)).count()
     }
 
     pub fn is_resident(&self, engine: usize, hash: u64) -> bool {
-        self.engines[engine].lock().unwrap().contains(&hash)
+        self.engines
+            .get(engine)
+            .is_some_and(|s| s.lock().contains(&hash))
     }
 
     /// Drop every advertisement for `engine` — called when the router
     /// marks the engine down, so stale residency can no longer pull
     /// placements toward a dead engine.
     pub fn clear_engine(&self, engine: usize) {
-        self.engines[engine].lock().unwrap().clear();
+        if let Some(set) = self.engines.get(engine) {
+            set.lock().clear();
+        }
     }
 }
 
@@ -81,15 +94,21 @@ impl ResidencyHandle {
     }
 
     pub fn insert(&self, hash: u64) {
-        self.board.engines[self.engine].lock().unwrap().insert(hash);
+        if let Some(set) = self.board.engines.get(self.engine) {
+            set.lock().insert(hash);
+        }
     }
 
     pub fn remove(&self, hash: u64) {
-        self.board.engines[self.engine].lock().unwrap().remove(&hash);
+        if let Some(set) = self.board.engines.get(self.engine) {
+            set.lock().remove(&hash);
+        }
     }
 
     pub fn clear(&self) {
-        self.board.engines[self.engine].lock().unwrap().clear();
+        if let Some(set) = self.board.engines.get(self.engine) {
+            set.lock().clear();
+        }
     }
 }
 

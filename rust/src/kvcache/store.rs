@@ -52,12 +52,13 @@
 //! footprint).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::DiskWriteback;
 use crate::model::{Model, PrefillDocOut};
+use crate::sync::{Condvar, Mutex};
 use crate::tensor::Tensor;
 
 use super::codec::KvCodec;
@@ -331,7 +332,7 @@ impl HostDocCache {
     fn build(budget_bytes: usize, budget_explicit: bool,
              policy: Box<dyn EvictionPolicy>) -> HostDocCache {
         HostDocCache {
-            inner: Mutex::new(HostInner {
+            inner: Mutex::named("host-inner", HostInner {
                 entries: HashMap::new(),
                 in_flight: HashSet::new(),
                 pins: HashMap::new(),
@@ -446,14 +447,14 @@ impl HostDocCache {
     /// call this at init with a budget derived from model geometry).
     /// No-op when the budget was set explicitly, or already larger.
     pub fn ensure_min_budget(&self, bytes: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if !g.budget_explicit && g.budget_bytes < bytes {
             g.budget_bytes = bytes;
         }
     }
 
     pub fn budget_bytes(&self) -> usize {
-        self.inner.lock().unwrap().budget_bytes
+        self.inner.lock().budget_bytes
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -461,11 +462,11 @@ impl HostDocCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.inner.lock().unwrap().stats.clone()
+        self.inner.lock().stats.clone()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.inner.lock().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -473,7 +474,7 @@ impl HostDocCache {
     }
 
     pub fn contains(&self, hash: u64) -> bool {
-        self.inner.lock().unwrap().entries.contains_key(&hash)
+        self.inner.lock().entries.contains_key(&hash)
     }
 
     /// Fetch-or-lease: a **fully resident** hit bumps recency and
@@ -488,7 +489,7 @@ impl HostDocCache {
     /// Associated fn (not a method): the lease must hold the `Arc`.
     pub fn lookup_or_begin(host: &Arc<HostDocCache>, hash: u64,
                            tokens: &[i32]) -> HostLookup {
-        let mut g = host.inner.lock().unwrap();
+        let mut g = host.inner.lock();
         loop {
             {
                 let inner = &mut *g;
@@ -525,7 +526,7 @@ impl HostDocCache {
             }
             // someone else holds the lease: wait for their publish (or
             // abandonment) and retry
-            g = host.published.wait(g).unwrap();
+            g = host.published.wait(g);
         }
     }
 
@@ -535,7 +536,7 @@ impl HostDocCache {
     /// reach it for a refill).
     pub fn try_lookup(&self, hash: u64, tokens: &[i32])
                       -> Option<Arc<DocEntry>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let inner = &mut *g;
         match inner.entries.get_mut(&hash) {
             Some(slot) if slot.entry.tokens == tokens
@@ -567,7 +568,7 @@ impl HostDocCache {
     /// [`Self::note_refilled`]).
     pub fn partial_entry(&self, hash: u64, tokens: &[i32])
                          -> Option<Arc<DocEntry>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock();
         let slot = g.entries.get(&hash)?;
         if slot.entry.tokens == tokens
             && !slot.entry.kv.is_fully_resident()
@@ -583,7 +584,7 @@ impl HostDocCache {
     /// bytes — duplicate inserts never inflate the accounting.
     pub fn publish(&self, entry: Arc<DocEntry>) {
         let spills = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             Self::insert_locked(&mut g, Arc::clone(&entry));
             self.evict_to_budget_locked(&mut g)
         };
@@ -594,7 +595,7 @@ impl HostDocCache {
     /// Complete (or abandon) a lease; called by [`PrefillLease`].
     fn finish_lease(&self, hash: u64, entry: Option<Arc<DocEntry>>) {
         let spills = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             g.in_flight.remove(&hash);
             match &entry {
                 Some(e) => {
@@ -613,7 +614,7 @@ impl HostDocCache {
     /// waiters.
     fn finish_restored(&self, hash: u64) {
         let (entry, spills) = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             g.in_flight.remove(&hash);
             let entry = Self::note_refilled_locked(&mut g, hash);
             (entry, self.evict_to_budget_locked(&mut g))
@@ -625,7 +626,7 @@ impl HostDocCache {
     /// Lease-less refill accounting (prefetch path).
     fn note_refilled(&self, hash: u64) {
         let (entry, spills) = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             let entry = Self::note_refilled_locked(&mut g, hash);
             (entry, self.evict_to_budget_locked(&mut g))
         };
@@ -757,10 +758,13 @@ impl HostDocCache {
                     });
                 }
             }
-            let Some(i) = self.policy.pick_victim(&candidates) else {
+            let Some(c) = self
+                .policy
+                .pick_victim(&candidates)
+                .and_then(|i| candidates.get(i).copied())
+            else {
                 break; // everything pinned (or policy refused)
             };
-            let c = candidates[i];
             if c.block == WHOLE_ENTRY {
                 let Some(slot) = g.entries.remove(&c.hash) else { break };
                 g.stats.current_bytes = g
@@ -814,7 +818,6 @@ impl HostDocCache {
     pub fn is_pinned(&self, hash: u64) -> bool {
         self.inner
             .lock()
-            .unwrap()
             .pins
             .keys()
             .any(|k| k.0 == hash)
@@ -825,7 +828,6 @@ impl HostDocCache {
     pub fn pinned_hashes(&self) -> HashSet<u64> {
         self.inner
             .lock()
-            .unwrap()
             .pins
             .keys()
             .map(|k| k.0)
@@ -833,7 +835,7 @@ impl HostDocCache {
     }
 
     fn unpin(&self, keys: &[(u64, u32)]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         for &k in keys {
             if let Some(c) = g.pins.get_mut(&k) {
                 *c -= 1;
@@ -851,14 +853,14 @@ impl HostDocCache {
     /// `current_bytes` resets (see the module docs). Outstanding pins
     /// and leases are untouched.
     pub fn clear(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.entries.clear();
         g.stats.current_bytes = 0;
     }
 
     /// Zero the lifetime counters too (peak collapses to current).
     pub fn reset_stats(&self) {
-        self.inner.lock().unwrap().stats.reset_lifetime();
+        self.inner.lock().stats.reset_lifetime();
     }
 }
 
@@ -916,7 +918,7 @@ impl Drop for PrefillLease {
 type PinMap = Arc<Mutex<HashMap<u64, u32>>>;
 
 fn pin_map_remove(map: &PinMap, hashes: &[u64]) {
-    let mut m = map.lock().unwrap();
+    let mut m = map.lock();
     for &h in hashes {
         if let Some(c) = m.get_mut(&h) {
             *c -= 1;
@@ -961,7 +963,7 @@ impl PinGuard {
     pub fn new_blocks(host: Arc<HostDocCache>, keys: &[(u64, u32)])
                       -> PinGuard {
         {
-            let mut g = host.inner.lock().unwrap();
+            let mut g = host.inner.lock();
             for &k in keys {
                 *g.pins.entry(k).or_insert(0) += 1;
             }
@@ -974,7 +976,7 @@ impl PinGuard {
     fn with_local(host: Arc<HostDocCache>, local: PinMap,
                   hashes: &[u64]) -> PinGuard {
         {
-            let mut m = local.lock().unwrap();
+            let mut m = local.lock();
             for &h in hashes {
                 *m.entry(h).or_insert(0) += 1;
             }
@@ -1077,7 +1079,7 @@ impl EngineDocCache {
             stats: CacheStats::default(),
             flushed: CacheStats::default(),
             residency: None,
-            own_pins: Arc::new(Mutex::new(HashMap::new())),
+            own_pins: Arc::new(Mutex::named("pin-map", HashMap::new())),
         }
     }
 
@@ -1371,6 +1373,10 @@ impl EngineDocCache {
 
     /// Insert a pre-computed entry (tests / replay): published to the
     /// host tier and admitted as resident here.
+    // allow: test/replay-only entry point, never on a request path; a
+    // malformed KV shape is a caller bug worth failing loudly at the
+    // call site. Tracked in rust/lint_allowlist.txt.
+    #[allow(clippy::expect_used)]
     pub fn insert(&mut self, tokens: Vec<i32>, out: PrefillDocOut) {
         let entry = DocEntry::new(self.host.pool(), tokens, out)
             .expect("prefill output must have a [L,2,H,T,Dh] KV");
@@ -1416,7 +1422,7 @@ impl EngineDocCache {
         // engine's session must not be able to wedge us over our
         // device budget. One snapshot for the whole pass.
         let pinned: HashSet<u64> =
-            self.own_pins.lock().unwrap().keys().copied().collect();
+            self.own_pins.lock().keys().copied().collect();
         let mut candidates: Vec<EvictionCandidate> = self
             .resident
             .iter()

@@ -20,6 +20,18 @@
 //! * paper core — [`kvcache`], [`attention`], [`sparse`], [`policies`];
 //! * serving — [`coordinator`], [`server`], [`metrics`], [`eval`],
 //!   [`workload`], [`tokenizer`], [`config`].
+//!
+//! Concurrency tooling: every lock/condvar in the serving stack goes
+//! through the [`sync`] facade — `std::sync` in normal builds, loom
+//! under `--cfg loom` (see `tests/loom_models.rs`), with opt-in
+//! lock-order deadlock detection (`SAMKV_LOCKCHECK=1`). The
+//! `panic_lint` binary enforces the no-panic policy on the
+//! serving-critical module trees.
+
+// `--cfg loom` and the optional `lockcheck` feature are injected by
+// CI jobs; they are not declared in every manifest, so the
+// unexpected_cfgs lint must not fire on them.
+#![allow(unexpected_cfgs)]
 
 pub mod bench;
 pub mod cli;
@@ -44,6 +56,7 @@ pub mod metrics;
 pub mod policies;
 pub mod server;
 pub mod sparse;
+pub mod sync;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -27,7 +27,7 @@ use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -35,6 +35,7 @@ use crate::coordinator::Router;
 use crate::exec::ThreadPool;
 use crate::json::{self, Value};
 use crate::kvcache::doc_hash;
+use crate::sync::Mutex;
 
 use super::peers::rendezvous_owner;
 use super::protocol::{self, Decoded, Request};
@@ -79,7 +80,8 @@ impl FrontEnd {
                 nodes,
                 router,
                 stop: Arc::new(AtomicBool::new(false)),
-                seeded: Arc::new(Mutex::new(HashSet::new())),
+                seeded: Arc::new(Mutex::named("front-seeded",
+                                              HashSet::new())),
             },
         }
     }
@@ -172,7 +174,7 @@ fn handle_conn(stream: TcpStream, ctx: &FrontCtx) -> Result<()> {
 /// Advertise each document hash on its rendezvous owner's residency
 /// slot, once — this is what makes [`Router::pick`] owner-aware.
 fn seed_ownership(ctx: &FrontCtx, req: &crate::coordinator::ServeRequest) {
-    let mut seeded = ctx.seeded.lock().unwrap();
+    let mut seeded = ctx.seeded.lock();
     for doc in &req.sample.docs {
         let h = doc_hash(doc);
         if seeded.insert(h) {
@@ -203,7 +205,9 @@ fn forward_serve(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
             Err(RelayError::Upstream(e)) => {
                 // nothing reached the client yet — safe to retry on
                 // a survivor
-                upstreams[idx] = None;
+                if let Some(slot) = upstreams.get_mut(idx) {
+                    *slot = None;
+                }
                 if ctx.router.mark_down(idx) {
                     crate::warn!("front: node {idx} marked down: {e:#}");
                 }
@@ -213,7 +217,9 @@ fn forward_serve(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
             Err(RelayError::MidStream(e)) => {
                 // the client saw partial output: structured error,
                 // mirroring the server's no-resubmit-after-token rule
-                upstreams[idx] = None;
+                if let Some(slot) = upstreams.get_mut(idx) {
+                    *slot = None;
+                }
                 if ctx.router.mark_down(idx) {
                     crate::warn!("front: node {idx} died mid-stream: \
                                   {e:#}");
@@ -241,18 +247,31 @@ enum RelayError {
     Client(anyhow::Error),
 }
 
+/// Get (dialing if needed) the cached connection to node `idx`. An
+/// out-of-range index reports as a connect failure, not a panic.
+fn upstream_for<'a>(nodes: &[String],
+                    upstreams: &'a mut [Option<Upstream>], idx: usize)
+                    -> Result<&'a mut Upstream> {
+    let addr = nodes
+        .get(idx)
+        .with_context(|| format!("node index {idx} out of range"))?;
+    let slot = upstreams
+        .get_mut(idx)
+        .with_context(|| format!("node index {idx} out of range"))?;
+    if slot.is_none() {
+        *slot = Some(Upstream::connect(addr)?);
+    }
+    slot.as_mut()
+        .with_context(|| format!("node {idx} connection missing"))
+}
+
 /// Write `line` to node `idx` and relay upstream lines until the
 /// terminal one (the line without a `token` field).
 fn relay_once(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
               idx: usize, line: &str, client: &mut impl Write)
               -> std::result::Result<(), RelayError> {
-    if upstreams[idx].is_none() {
-        upstreams[idx] = Some(
-            Upstream::connect(&ctx.nodes[idx])
-                .map_err(RelayError::Upstream)?,
-        );
-    }
-    let up = upstreams[idx].as_mut().unwrap();
+    let up = upstream_for(&ctx.nodes, upstreams, idx)
+        .map_err(RelayError::Upstream)?;
     writeln!(up.writer, "{line}")
         .map_err(|e| RelayError::Upstream(e.into()))?;
     let mut relayed = false;
@@ -298,10 +317,7 @@ fn fanout_cmd(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
     let mut replies = Vec::new();
     for idx in 0..ctx.nodes.len() {
         let one = (|| -> Result<Value> {
-            if upstreams[idx].is_none() {
-                upstreams[idx] = Some(Upstream::connect(&ctx.nodes[idx])?);
-            }
-            let up = upstreams[idx].as_mut().unwrap();
+            let up = upstream_for(&ctx.nodes, upstreams, idx)?;
             writeln!(up.writer, "{line}")?;
             let mut reply = String::new();
             if up.reader.read_line(&mut reply)? == 0 {
@@ -312,7 +328,9 @@ fn fanout_cmd(ctx: &FrontCtx, upstreams: &mut [Option<Upstream>],
         replies.push(match one {
             Ok(v) => v,
             Err(e) => {
-                upstreams[idx] = None;
+                if let Some(slot) = upstreams.get_mut(idx) {
+                    *slot = None;
+                }
                 if !best_effort && ctx.router.mark_down(idx) {
                     crate::warn!("front: node {idx} marked down on \
                                   command fan-out: {e:#}");

@@ -60,6 +60,17 @@
 //! is set, the whole loop — queue wait, admission, decode, retries —
 //! runs under one deadline and returns a structured timeout error
 //! instead of waiting unboundedly.
+//!
+//! A self-healing path must not itself panic: this tree is panic-free
+//! outside tests (`tools/lint` denies `unwrap`/`expect`/`panic!`/
+//! indexing; clippy denies `unwrap_used`/`expect_used` below), its
+//! cross-thread state (`peer-down`, `front-seeded` lock classes) sits
+//! on the [`crate::sync`] facade as order-leaves, and the lock-order
+//! rules it inherits are documented in [`crate::kvcache`]'s
+//! "Concurrency invariants" section.
+
+// Serving-critical tree: see the doc note above.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod front;
 pub mod peers;
@@ -302,7 +313,7 @@ fn mark_engine_down(ctx: &ConnCtx, idx: usize) {
 fn pick_live(ctx: &ConnCtx, req: &ServeRequest) -> usize {
     for _ in 0..ctx.engines.len() {
         let idx = ctx.router.pick(&req.sample);
-        if ctx.engines[idx].is_alive() {
+        if ctx.engines.get(idx).is_some_and(|e| e.is_alive()) {
             return idx;
         }
         ctx.router.done(idx);
@@ -319,7 +330,12 @@ fn serve_attempt(ctx: &ConnCtx, idx: usize, req: ServeRequest,
                  deadline: Option<Instant>, writer: &mut impl Write)
                  -> Result<Attempt> {
     let (req_id, stream_tokens) = (req.id, req.stream);
-    let events = match ctx.engines[idx].submit(req) {
+    let Some(engine) = ctx.engines.get(idx) else {
+        return Ok(Attempt::EngineFailure(format!(
+            "engine index {idx} out of range"
+        )));
+    };
+    let events = match engine.submit(req) {
         Ok(rx) => rx,
         Err(e) => return Ok(Attempt::EngineFailure(format!("{e:#}"))),
     };

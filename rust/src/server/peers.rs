@@ -28,7 +28,7 @@
 use std::io::BufReader;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -36,6 +36,7 @@ use anyhow::{Context, Result};
 use crate::faultinject::{FaultPlan, FaultSite};
 use crate::kvcache::PeerFetcher;
 use crate::metrics::Metrics;
+use crate::sync::Mutex;
 
 use super::protocol::{self, Request};
 
@@ -49,7 +50,7 @@ pub fn rendezvous_owner(hash: u64, n_nodes: usize) -> usize {
     assert!(n_nodes > 0);
     (0..n_nodes)
         .max_by_key(|&i| mix(hash, i as u64))
-        .unwrap()
+        .unwrap_or(0)
 }
 
 /// Stateless 64-bit mixer (splitmix64 finalizer) scoring one
@@ -87,7 +88,9 @@ impl ClusterPeers {
         assert!(node_id < addrs.len(),
                 "--node-id {node_id} outside --peers list of {}",
                 addrs.len());
-        let down_until = (0..addrs.len()).map(|_| Mutex::new(None)).collect();
+        let down_until = (0..addrs.len())
+            .map(|_| Mutex::named("peer-down", None))
+            .collect();
         ClusterPeers {
             node_id,
             addrs,
@@ -126,18 +129,24 @@ impl ClusterPeers {
     }
 
     fn is_down(&self, peer: usize) -> bool {
-        let guard = self.down_until[peer].lock().unwrap();
+        let Some(slot) = self.down_until.get(peer) else {
+            return false;
+        };
+        let guard = slot.lock();
         matches!(*guard, Some(until) if Instant::now() < until)
     }
 
     fn mark_down(&self, peer: usize) {
-        *self.down_until[peer].lock().unwrap() =
-            Some(Instant::now() + self.cooldown);
+        if let Some(slot) = self.down_until.get(peer) {
+            *slot.lock() = Some(Instant::now() + self.cooldown);
+        }
         self.refresh_down_gauge();
     }
 
     fn mark_up(&self, peer: usize) {
-        *self.down_until[peer].lock().unwrap() = None;
+        if let Some(slot) = self.down_until.get(peer) {
+            *slot.lock() = None;
+        }
         self.refresh_down_gauge();
     }
 
@@ -146,7 +155,7 @@ impl ClusterPeers {
         let down = self
             .down_until
             .iter()
-            .filter(|m| matches!(*m.lock().unwrap(),
+            .filter(|m| matches!(*m.lock(),
                                  Some(until) if now < until))
             .count();
         self.metrics.peers_down.store(down as u64, Ordering::Relaxed);
@@ -161,7 +170,10 @@ impl ClusterPeers {
     /// document); `Err` is a transport failure.
     fn try_fetch(&self, owner: usize, hash: u64, tokens: &[i32])
                  -> Result<Option<Vec<u8>>> {
-        let addr_str = &self.addrs[owner];
+        let addr_str = self
+            .addrs
+            .get(owner)
+            .with_context(|| format!("peer index {owner} out of range"))?;
         let addr = addr_str
             .to_socket_addrs()
             .with_context(|| format!("resolve peer `{addr_str}`"))?

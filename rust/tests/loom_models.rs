@@ -1,0 +1,340 @@
+//! Concurrency models for the serving stack's core protocols, run
+//! through [`samkv::sync::model`]:
+//!
+//! * under `RUSTFLAGS="--cfg loom"` each test body is a **loom model**
+//!   — every interleaving of the participating threads is explored
+//!   exhaustively (bound with `LOOM_MAX_PREEMPTIONS`), so the
+//!   assertions are checked against schedules a stress test would
+//!   need astronomically many runs to hit;
+//! * in a normal build the same bodies run as bounded stress loops
+//!   with real threads (`SAMKV_MODEL_ITERS` iterations, default 64),
+//!   so `cargo test` still exercises them.
+//!
+//! The four protocols modeled (see `crate::sync`'s module docs for the
+//! lock classes involved):
+//!
+//! 1. **Exactly-once prefill leasing** — two racing threads ask the
+//!    host tier for the same unpublished document; exactly one gets
+//!    the [`HostLookup::Miss`] lease, the other blocks on the publish
+//!    condvar and is served the published entry as a hit.
+//! 2. **Block refcount safety** — concurrent clone / CoW-write / drop
+//!    of a shared pool block never double-frees a slot, never lets a
+//!    write through a shared ref clobber the other holder's payload,
+//!    and returns the pool to fully-free at the end.
+//! 3. **Gate permit conservation** — concurrent take/release (and an
+//!    untimed waiter) neither mint nor leak admission permits.
+//! 4. **Breaker probe race** — racing probes against one
+//!    open-past-interval [`BreakerCore`] observe the
+//!    open → half-open → closed walk with the close reported exactly
+//!    once, and a failed probe re-opens exactly once.
+//!
+//! Every shared structure lives behind the [`samkv::sync`] facade, so
+//! the loom build swaps the real `std::sync` primitives for loom's
+//! model-checked ones without touching production code. All state is
+//! created inside the model closure: loom re-runs it per schedule.
+
+use std::time::Duration;
+
+use samkv::exec::Gate;
+use samkv::kvcache::pool::BlockRef;
+use samkv::kvcache::store::HostLookup;
+use samkv::kvcache::{
+    doc_hash, BreakerCore, BreakerStep, DocEntry, HostDocCache,
+    KvBlockPool,
+};
+use samkv::sync::atomic::{AtomicUsize, Ordering};
+use samkv::sync::{self, thread, Arc, Mutex};
+use samkv::tensor::Tensor;
+
+/// The smallest publishable document: `[L=1, 2, H=1, T=1, Dh=2]` KV
+/// (one pool block), `[1,1,1,1]` attention, `[1,1,2]` local-mean Q.
+fn tiny_entry(host: &HostDocCache, tokens: &[i32]) -> Arc<DocEntry> {
+    let kv = Tensor::zeros(&[1, 2, 1, 1, 2]);
+    let attn = Tensor::zeros(&[1, 1, 1, 1]);
+    let q_local = Tensor::zeros(&[1, 1, 2]);
+    let entry =
+        DocEntry::from_parts(host.pool(), tokens.to_vec(), kv, attn, q_local)
+            .expect("tiny entry must build");
+    Arc::new(entry)
+}
+
+/// Model 1: exactly-once lease publication under racing prefillers.
+///
+/// Two threads race `lookup_or_begin` on one unpublished hash. The
+/// exactly-once contract: exactly one thread observes the miss and
+/// prefills (here: builds [`tiny_entry`]); the other is served that
+/// publish as a hit — either immediately or after waiting on the
+/// publish condvar — and the host tier records exactly one miss, one
+/// hit, one publish.
+#[test]
+fn lease_publishes_exactly_once_under_race() {
+    sync::model(|| {
+        let host = Arc::new(HostDocCache::unbounded());
+        let tokens: Vec<i32> = vec![7]; // one token: matches the KV's T=1
+        let hash = doc_hash(&tokens);
+        let misses = Arc::new(AtomicUsize::new(0));
+
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let host = Arc::clone(&host);
+                let tokens = tokens.clone();
+                let misses = Arc::clone(&misses);
+                thread::spawn(move || {
+                    match HostDocCache::lookup_or_begin(
+                        &host, hash, &tokens,
+                    ) {
+                        HostLookup::Miss(lease) => {
+                            misses.fetch_add(1, Ordering::SeqCst);
+                            assert!(
+                                lease.partial().is_none(),
+                                "nothing published yet, so the lease \
+                                 cannot carry a partial entry"
+                            );
+                            lease.publish(tiny_entry(&host, &tokens));
+                        }
+                        HostLookup::Hit(entry) => {
+                            // served the *other* thread's publish
+                            assert_eq!(entry.tokens, tokens);
+                            assert!(entry.kv.is_fully_resident());
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("lease racer must not panic");
+        }
+
+        assert_eq!(
+            misses.load(Ordering::SeqCst),
+            1,
+            "exactly one racer may win the prefill lease"
+        );
+        let stats = host.stats();
+        assert_eq!(stats.misses, 1, "one miss: the lease holder's");
+        assert_eq!(stats.hits, 1, "one hit: the other racer's");
+        assert_eq!(stats.publishes, 1, "one publish: the lease's");
+        assert!(
+            host.try_lookup(hash, &tokens).is_some(),
+            "the published entry must be servable afterwards"
+        );
+    });
+}
+
+/// Model 2: no double-free / use-after-free under concurrent
+/// clone / CoW-write / drop of one shared block.
+///
+/// Three holders of one slot: the main thread's original, a cloner
+/// (pin/share path), and a writer (CoW path). Whatever the schedule,
+/// the pool must never count a double-free, the writer's private copy
+/// must never clobber the payload the other holders read, and once
+/// every ref drops the pool is fully free again.
+#[test]
+fn blockref_clone_write_drop_race_is_safe() {
+    sync::model(|| {
+        let pool = Arc::new(KvBlockPool::new(1));
+        let base =
+            BlockRef::alloc(&pool, 2, &[1.0, 2.0]).expect("alloc");
+
+        let cloner = {
+            let r = base.clone();
+            thread::spawn(move || {
+                let pinned = r.clone(); // pin: second ref, then drop
+                let mut out = [0f32; 2];
+                pinned.read(0, &mut out).expect("read via clone");
+                assert_eq!(
+                    out,
+                    [1.0, 2.0],
+                    "sharers must never observe the CoW writer's data"
+                );
+            })
+        };
+        let writer = {
+            let mut r = base.clone();
+            thread::spawn(move || {
+                // CoW: with the slot shared this must move `r` to a
+                // private slot and leave the original payload alone
+                r.write(0, &[9.0, 9.0]).expect("CoW write");
+                let mut out = [0f32; 2];
+                r.read(0, &mut out).expect("read own copy");
+                assert_eq!(out, [9.0, 9.0]);
+            })
+        };
+        cloner.join().expect("cloner must not panic");
+        writer.join().expect("writer must not panic");
+
+        let mut out = [0f32; 2];
+        base.read(0, &mut out).expect("original still live");
+        assert_eq!(out, [1.0, 2.0], "original payload intact after CoW");
+        drop(base);
+
+        let stats = pool.stats();
+        assert_eq!(stats.double_frees, 0, "no release may double-free");
+        assert_eq!(stats.slots_live, 0, "every ref dropped ⇒ none live");
+        assert_eq!(
+            stats.slots_free, stats.slots_total,
+            "all slots must return to the free list"
+        );
+    });
+}
+
+/// Model 3: Gate permit conservation.
+///
+/// Two takers debit and credit one permit each while a waiter blocks
+/// for a free slot (untimed under loom — the releases guarantee it
+/// wakes). No schedule may mint permits (observe more than the cap)
+/// or leak them (end below the cap).
+#[test]
+fn gate_conserves_permits_under_race() {
+    sync::model(|| {
+        const SLOTS: usize = 2;
+        let gate = Arc::new(Gate::new(SLOTS));
+
+        let takers: Vec<_> = (0..2)
+            .map(|_| {
+                let gate = Arc::clone(&gate);
+                thread::spawn(move || {
+                    gate.take(1);
+                    assert!(
+                        gate.available() <= SLOTS,
+                        "a debit can never leave more than the cap free"
+                    );
+                    gate.release(1);
+                    assert!(gate.available() <= SLOTS);
+                })
+            })
+            .collect();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            thread::spawn(move || {
+                // both takers release what they took, so the free
+                // count is eventually non-zero: the wait always wakes
+                let n = gate.wait_available(Duration::from_secs(5));
+                assert!(
+                    (1..=SLOTS).contains(&n),
+                    "waiter observed {n} free slots (cap {SLOTS})"
+                );
+            })
+        };
+        for t in takers {
+            t.join().expect("taker must not panic");
+        }
+        waiter.join().expect("waiter must not panic");
+
+        assert_eq!(
+            gate.available(),
+            SLOTS,
+            "all permits must be back after every take was released"
+        );
+    });
+}
+
+/// Model 4a: breaker open → half-open → close under racing probes.
+///
+/// The breaker starts open, past its probe interval. Two probe
+/// threads each run the disk tier's per-operation protocol — gate
+/// with `blocks(now)`, then report `note_ok()` — under the one
+/// breaker lock (class `disk-index` in production). In every
+/// schedule the first gate call flips open → half-open, no probe is
+/// short-circuited, and **exactly one** `note_ok` reports the
+/// half-open → closed transition (the metrics/log edge trigger).
+#[test]
+fn breaker_racing_ok_probes_close_exactly_once() {
+    sync::model(|| {
+        let mut core = BreakerCore::new(1, 5);
+        assert_eq!(
+            core.note_error(0),
+            BreakerStep::Opened { failed_probe: false },
+            "threshold 1: the seed error must open the breaker"
+        );
+        let breaker = Arc::new(Mutex::named("loom-breaker", core));
+        let closes = Arc::new(AtomicUsize::new(0));
+
+        let probes: Vec<_> = (0..2)
+            .map(|_| {
+                let breaker = Arc::clone(&breaker);
+                let closes = Arc::clone(&closes);
+                thread::spawn(move || {
+                    // gate (own lock scope, like the disk tier's)
+                    let admitted = !breaker.lock().blocks(10);
+                    assert!(
+                        admitted,
+                        "open-past-interval must admit every prober \
+                         (first flips to half-open, rest see it)"
+                    );
+                    // the probed operation succeeds; report it
+                    if breaker.lock().note_ok() {
+                        closes.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for p in probes {
+            p.join().expect("probe must not panic");
+        }
+
+        assert_eq!(
+            closes.load(Ordering::SeqCst),
+            1,
+            "exactly one probe success may report the close"
+        );
+        let mut g = breaker.lock();
+        assert!(!g.is_tripped(), "breaker must end closed");
+        assert!(!g.blocks(11), "closed breaker must not block");
+    });
+}
+
+/// Model 4b: a failed probe re-opens exactly once under racing
+/// error probes.
+///
+/// Same start (open past interval), but both admitted probes fail.
+/// Whatever the interleaving of gate and report calls, exactly one
+/// `note_error` reports `Opened { failed_probe: true }` — the other
+/// either finds the breaker already re-opened (`NoChange`) or was
+/// short-circuited by the fresh open interval and reports nothing.
+#[test]
+fn breaker_racing_failed_probes_reopen_exactly_once() {
+    sync::model(|| {
+        let mut core = BreakerCore::new(1, 5);
+        assert_eq!(
+            core.note_error(0),
+            BreakerStep::Opened { failed_probe: false }
+        );
+        let breaker = Arc::new(Mutex::named("loom-breaker", core));
+        let reopens = Arc::new(AtomicUsize::new(0));
+
+        let probes: Vec<_> = (0..2)
+            .map(|_| {
+                let breaker = Arc::clone(&breaker);
+                let reopens = Arc::clone(&reopens);
+                thread::spawn(move || {
+                    // now=10 is past the first open's interval but
+                    // inside a re-open at now=10, so a probe gated
+                    // after the other's failure is short-circuited
+                    let admitted = !breaker.lock().blocks(10);
+                    if admitted
+                        && breaker.lock().note_error(10)
+                            == (BreakerStep::Opened { failed_probe: true })
+                    {
+                        reopens.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for p in probes {
+            p.join().expect("probe must not panic");
+        }
+
+        assert_eq!(
+            reopens.load(Ordering::SeqCst),
+            1,
+            "exactly one failed probe may report the re-open"
+        );
+        let mut g = breaker.lock();
+        assert!(g.is_tripped(), "breaker must end open");
+        assert!(
+            g.blocks(12),
+            "re-opened at 10 with a 5ms interval: 12 is inside it"
+        );
+    });
+}
